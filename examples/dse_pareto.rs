@@ -1,0 +1,47 @@
+//! Design-space exploration: evaluate the full 8-bit multiplier zoo
+//! (accuracy sweep + hardware model), extract the Pareto front, and answer
+//! the paper's Table-2 constraint query.
+//!
+//! ```sh
+//! cargo run --release --example dse_pareto
+//! ```
+
+use scaletrim::dse::{constrained, evaluate_all, pareto_front};
+use scaletrim::error::SweepSpec;
+use scaletrim::multipliers::paper_configs_8bit;
+
+fn main() -> scaletrim::Result<()> {
+    let zoo = paper_configs_8bit();
+    println!("evaluating {} configurations over the full 8-bit space…", zoo.len());
+    let points = evaluate_all(&zoo, SweepSpec::Exhaustive);
+
+    // Pareto front on (MRED, PDP) — Fig. 9d's star markers.
+    let front = pareto_front(&points, |p| (p.error.mred_pct, p.hw.pdp_fj));
+    println!("\nPareto front (MRED% vs PDP fJ):");
+    for &i in &front {
+        let p = &points[i];
+        println!(
+            "  {:<18} MRED {:>6.2}%   PDP {:>7.1} fJ",
+            p.name, p.error.mred_pct, p.hw.pdp_fj
+        );
+    }
+    let st_on_front = front
+        .iter()
+        .filter(|&&i| points[i].name.starts_with("scaleTRIM"))
+        .count();
+    println!(
+        "\nscaleTRIM holds {st_on_front}/{} of the front — the paper's Sec. IV-C claim.",
+        front.len()
+    );
+
+    // Table 2's constrained selection: MRED ≤ 4%, PDP window.
+    let sel = constrained(&points, 4.0, (150.0, 260.0));
+    println!("\nbest configs with MRED ≤ 4% and PDP ∈ [150, 260] fJ:");
+    for p in sel.iter().take(5) {
+        println!(
+            "  {:<18} MRED {:>5.2}%   PDP {:>6.1} fJ   area {:>6.1} µm²",
+            p.name, p.error.mred_pct, p.hw.pdp_fj, p.hw.area_um2
+        );
+    }
+    Ok(())
+}

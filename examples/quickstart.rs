@@ -1,0 +1,65 @@
+//! Quickstart: build a scaleTRIM multiplier, multiply numbers, inspect the
+//! calibration, and measure its error over the full 8-bit space.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use scaletrim::error::{exhaustive_sweep, SweepSpec};
+use scaletrim::hardware::estimate;
+use scaletrim::multipliers::{ApproxMultiplier, ScaleTrim};
+
+fn main() -> scaletrim::Result<()> {
+    // scaleTRIM(h=3, M=4): 3-bit truncation, 4 compensation segments —
+    // the paper's Fig. 7 configuration.
+    let m = ScaleTrim::new(8, 3, 4);
+
+    // The paper's worked example: 48 × 81.
+    let (a, b) = (48u64, 81u64);
+    println!(
+        "{}: {a} × {b} ≈ {}   (exact {})",
+        m.name(),
+        m.mul(a, b),
+        a * b
+    );
+
+    // The design-time constants the hardware would hardwire (Sec. III-A/B).
+    let p = m.params();
+    println!(
+        "calibration: α = {:.4} (paper: 1.407), ΔEE = {} → scale (1 + 2^{})",
+        p.alpha, p.delta_ee, p.delta_ee
+    );
+    for (i, c) in p.c.iter().enumerate() {
+        println!("  compensation C[{i}] = {c:+.4}");
+    }
+
+    // Error metrics over every non-zero 8-bit operand pair (Eq. 8).
+    let r = exhaustive_sweep(&m);
+    println!(
+        "full-space error: MRED {:.2}% (paper 3.73), MED {:.1}, max {:.0}, std {:.1}",
+        r.mred_pct, r.med, r.max_error, r.std
+    );
+
+    // Hardware cost from the structural 45nm model (Table 4 axes).
+    let hw = estimate(&m);
+    println!(
+        "hardware: {:.1} µm², {:.2} ns, {:.1} µW, PDP {:.1} fJ (paper: 150.8, 1.36, 113.1, 153.7)",
+        hw.area_um2, hw.delay_ns, hw.power_uw, hw.pdp_fj
+    );
+
+    // The trade-off knobs: larger h / M buy accuracy with hardware.
+    println!("\naccuracy-efficiency trade-off (the paper's central design space):");
+    for (h, mm) in [(2u32, 0u32), (3, 4), (4, 8), (5, 8), (6, 8)] {
+        let cfg = ScaleTrim::new(8, h, mm);
+        let e = exhaustive_sweep(&cfg);
+        let hw = estimate(&cfg);
+        println!(
+            "  {:<16} MRED {:>5.2}%   PDP {:>6.1} fJ",
+            cfg.name(),
+            e.mred_pct,
+            hw.pdp_fj
+        );
+    }
+    let _ = SweepSpec::Exhaustive; // (see `sweep` CLI for sampled 16-bit runs)
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Serving demo: the L3 coordinator routing a mixed request stream across
+//! per-config lanes (exact + two scaleTRIM configs), dynamic batching under
+//! a latency deadline, PJRT execution, live metrics.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve
+//! ```
+
+use scaletrim::coordinator::{BatchPolicy, Coordinator, PjrtBackend};
+use scaletrim::multipliers::{ApproxMultiplier, Exact, ScaleTrim};
+use scaletrim::nn::Dataset;
+use scaletrim::runtime::{find_artifacts_dir, ArtifactSet};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> scaletrim::Result<()> {
+    let dir = find_artifacts_dir()?;
+    let set = ArtifactSet::resolve(&dir, "lenet")?;
+    let data = Dataset::load(&set.dataset)?;
+
+    let backend = Arc::new(PjrtBackend::spawn(
+        set.hlo.to_str().unwrap().to_string(),
+        32,
+        data.n_classes,
+        (data.c, data.h, data.w),
+    )?);
+
+    let exact = Exact::new(8);
+    let st48 = ScaleTrim::new(8, 4, 8);
+    let st34 = ScaleTrim::new(8, 3, 4);
+    let configs: Vec<&dyn ApproxMultiplier> = vec![&exact, &st48, &st34];
+    let coord = Coordinator::new(
+        backend,
+        &configs,
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(4),
+        },
+    );
+    println!("lanes: {:?}", coord.configs());
+
+    // Drive 3000 requests round-robin across lanes, tracking accuracy.
+    let n = 3000usize;
+    let t0 = Instant::now();
+    let lanes = ["Exact8", "scaleTRIM(4,8)", "scaleTRIM(3,4)"];
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        let idx = i % data.n;
+        pending.push((idx, coord.submit(lanes[i % 3], data.image(idx).to_vec())?.1));
+    }
+    let mut correct = 0usize;
+    for (idx, rx) in pending {
+        let p = rx.recv()?;
+        assert!(p.error.is_none(), "backend error: {:?}", p.error);
+        if p.class == data.labels[idx] as usize {
+            correct += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "served {n} requests in {dt:.2?} → {:.0} req/s, accuracy {:.2}%",
+        n as f64 / dt.as_secs_f64(),
+        100.0 * correct as f64 / n as f64
+    );
+    println!("{}", coord.metrics().summary());
+    Ok(())
+}

@@ -1,0 +1,133 @@
+"""AOT driver: datasets → training → PTQ → HLO-text artifacts.
+
+Run once at build time (``make artifacts``); the rust binary is
+self-contained afterwards. Interchange format is **HLO text**, not a
+serialized ``HloModuleProto``: jax ≥ 0.5 emits protos with 64-bit
+instruction ids that xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts written to ``--out`` (default ``../artifacts``):
+
+- ``<model>.hlo.txt``     — LUT-driven int8 forward, batch 32. Inputs:
+  ``x int32[32,C,H,W]`` (pixels), ``lut int32[256,256]``; output: 1-tuple
+  of ``int32[32,n_classes]`` logits. Weights are baked in as constants.
+- ``<model>.weights.bin`` — STWT quantized weights (rust pure path).
+- ``<model>.dataset.bin`` — STDS test split.
+- ``<model>.meta.json``   — shapes + float accuracy.
+- ``manifest.json``       — artifact index.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from . import dataset as ds
+from . import multipliers as am
+from .model import MODELS, forward_quant
+from .quantize import quantize, save_rust_weights
+from .train import train_model
+
+BATCH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser).
+
+    ``print_large_constants=True`` is load-bearing: the default elides big
+    constant arrays as ``{...}``, which the downstream parser silently
+    zero-fills — the baked int8 weights would vanish (this bit us; the rust
+    integration test `pjrt_matches_pure_rust_bitwise` guards it now).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_model(qlayers, spec) -> str:
+    """Lower the LUT-driven quantized forward to HLO text (batch fixed)."""
+    c, h, w = spec.in_shape
+
+    def fwd(x, lut):
+        return (forward_quant(qlayers, x, lut, use_pallas=True),)
+
+    x_spec = jax.ShapeDtypeStruct((BATCH, c, h, w), jnp.int32)
+    lut_spec = jax.ShapeDtypeStruct((256, 256), jnp.int32)
+    lowered = jax.jit(fwd).lower(x_spec, lut_spec)
+    return to_hlo_text(lowered)
+
+
+def quantized_accuracy(qlayers, spec, x, y, lut) -> float:
+    """Top-1 accuracy of the quantized model under a given LUT (jnp ref
+    path — fast sanity check recorded into the meta file)."""
+    correct = 0
+    n = (x.shape[0] // BATCH) * BATCH
+    for i in range(0, n, BATCH):
+        xb = jnp.asarray(x[i : i + BATCH].astype(np.int32))
+        logits = forward_quant(qlayers, xb, lut, use_pallas=False)
+        correct += int((np.asarray(jnp.argmax(logits, 1)) == y[i : i + BATCH]).sum())
+    return correct / n
+
+
+def build_model(name: str, out_dir: str, log=print) -> dict:
+    """Full pipeline for one model; returns its manifest entry."""
+    spec = MODELS[name]
+    params, (x_tr, y_tr, x_te, y_te), float_acc = train_model(spec, log=log)
+    qlayers = quantize(params, spec, x_tr[:256])
+
+    lut_exact = jnp.asarray(am.exact_lut())
+    q_acc = quantized_accuracy(qlayers, spec, x_te, y_te, lut_exact)
+    log(f"  int8 (exact LUT) accuracy: {q_acc * 100:.2f}%")
+
+    hlo = lower_model(qlayers, spec)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+    save_rust_weights(os.path.join(out_dir, f"{name}.weights.bin"), spec, qlayers)
+    ds.save_rust_dataset(
+        os.path.join(out_dir, f"{name}.dataset.bin"), x_te, y_te, spec.n_classes
+    )
+    meta = {
+        "name": name,
+        "dataset": spec.dataset,
+        "batch": BATCH,
+        "in_shape": list(spec.in_shape),
+        "n_classes": spec.n_classes,
+        "float_acc": float_acc,
+        "int8_exact_acc": q_acc,
+        "hlo_bytes": len(hlo),
+    }
+    with open(os.path.join(out_dir, f"{name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    log(f"  wrote {hlo_path} ({len(hlo)} chars)")
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(MODELS))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {}
+    for name in args.models.split(","):
+        manifest[name] = build_model(name.strip(), args.out)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {list(manifest)} -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

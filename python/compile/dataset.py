@@ -1,0 +1,174 @@
+"""Deterministic synthetic image-classification datasets.
+
+The paper evaluates on MNIST / CIFAR-10 / ImageNet with pre-trained torch
+models; neither torch nor the datasets exist in this offline image, so we
+substitute procedurally generated glyph datasets of matched *difficulty
+roles* (see DESIGN.md §Substitutions):
+
+- ``mnist16``   — 10 classes, 1x16x16, high-contrast glyphs (MNIST role).
+- ``cifar16``   — 10 classes, 3x16x16, textured/colored glyphs (CIFAR role).
+- ``imagenet20``— 20 classes, 1x16x16, fine-grained glyph variants
+  (ImageNet top-1/top-5 role for Fig. 16).
+
+Every dataset is a pure function of its seed: the rust side and the python
+side regenerate identical bits.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Glyph strokes on a 12x12 design grid; rendered with jitter + noise.
+_STROKES = {
+    # name: list of (r0, c0, r1, c1) line segments in [0, 12)
+    "zero": [(1, 3, 1, 8), (10, 3, 10, 8), (1, 3, 10, 3), (1, 8, 10, 8)],
+    "one": [(1, 6, 10, 6), (1, 6, 3, 4)],
+    "seven": [(1, 2, 1, 9), (1, 9, 10, 4)],
+    "ex": [(1, 2, 10, 9), (1, 9, 10, 2)],
+    "plus": [(5, 1, 5, 10), (1, 6, 10, 6)],
+    "tee": [(1, 1, 1, 10), (1, 6, 10, 6)],
+    "ell": [(1, 3, 10, 3), (10, 3, 10, 9)],
+    "vee": [(1, 2, 10, 6), (1, 10, 10, 6)],
+    "zed": [(1, 2, 1, 9), (1, 9, 10, 2), (10, 2, 10, 9)],
+    "square": [(2, 2, 2, 9), (9, 2, 9, 9), (2, 2, 9, 2), (2, 9, 9, 9)],
+    # extra classes for the 20-class dataset
+    "aitch": [(1, 3, 10, 3), (1, 8, 10, 8), (5, 3, 5, 8)],
+    "why": [(1, 2, 5, 6), (1, 10, 5, 6), (5, 6, 10, 6)],
+    "slash": [(10, 2, 1, 9)],
+    "bslash": [(1, 2, 10, 9)],
+    "equals": [(3, 2, 3, 9), (8, 2, 8, 9)],
+    "corner": [(1, 2, 1, 9), (1, 2, 10, 2)],
+    "hook": [(1, 8, 8, 8), (8, 8, 10, 5)],
+    "dots": [(2, 2, 3, 3), (2, 8, 3, 9), (8, 5, 9, 6)],
+    "bar": [(5, 1, 6, 10)],
+    "caret": [(8, 2, 2, 6), (2, 6, 8, 10)],
+}
+
+_CLASSES_10 = [
+    "zero", "one", "seven", "ex", "plus", "tee", "ell", "vee", "zed", "square",
+]
+_CLASSES_20 = _CLASSES_10 + [
+    "aitch", "why", "slash", "bslash", "equals", "corner", "hook", "dots",
+    "bar", "caret",
+]
+
+
+def _draw_line(img: np.ndarray, r0: float, c0: float, r1: float, c1: float) -> None:
+    """Rasterise a thick anti-aliased line onto a float image in place."""
+    steps = int(max(abs(r1 - r0), abs(c1 - c0)) * 3) + 1
+    for t in np.linspace(0.0, 1.0, steps):
+        r = r0 + (r1 - r0) * t
+        c = c0 + (c1 - c0) * t
+        ri, ci = int(round(r)), int(round(c))
+        for dr in (-1, 0, 1):
+            for dc in (-1, 0, 1):
+                rr, cc = ri + dr, ci + dc
+                if 0 <= rr < img.shape[0] and 0 <= cc < img.shape[1]:
+                    w = 1.0 if (dr == 0 and dc == 0) else 0.35
+                    img[rr, cc] = min(1.0, img[rr, cc] + w)
+
+
+def _render(
+    cls: str, rng: np.random.Generator, size: int = 16, difficulty: str = "easy"
+) -> np.ndarray:
+    """One grayscale glyph with geometric jitter and noise, uint8 HxW.
+
+    ``difficulty`` tunes the task to its dataset role (DESIGN.md): *easy*
+    (MNIST role, ~99% float accuracy — the paper's LeNet/MNIST panel barely
+    moves under approximation) or *mid* (CIFAR/ImageNet roles, ~85–90%
+    float accuracy: low contrast, heavier jitter, distractor strokes — so
+    approximate-multiplier bias visibly costs accuracy, Fig. 15/16).
+    """
+    img = np.zeros((size, size), dtype=np.float64)
+    dr = rng.uniform(0.0, size - 12)
+    dc = rng.uniform(0.0, size - 12)
+    if difficulty == "easy":
+        scale = rng.uniform(0.85, 1.15)
+        jitter, noise_mu, noise_sd = 0.35, 0.0, 0.08
+        contrast = 1.0
+        distractor_p = 0.0
+    else:
+        scale = rng.uniform(0.78, 1.22)
+        jitter, noise_mu, noise_sd = 0.70, 0.10, 0.16
+        contrast = rng.uniform(0.30, 0.70)
+        distractor_p = 0.55
+    for (r0, c0, r1, c1) in _STROKES[cls]:
+        jit = rng.normal(0.0, jitter, size=4)
+        _draw_line(
+            img,
+            r0 * scale + dr + jit[0],
+            c0 * scale + dc + jit[1],
+            r1 * scale + dr + jit[2],
+            c1 * scale + dc + jit[3],
+        )
+    if rng.random() < distractor_p:
+        p = rng.uniform(0, size, 4)
+        _draw_line(img, p[0], p[1], p[2], p[3])
+    img = img * contrast + rng.normal(noise_mu, noise_sd, img.shape)
+    img = np.clip(img, 0.0, 1.0)
+    return (img * 255.0).astype(np.uint8)
+
+
+def make_dataset(
+    name: str,
+    n_train: int = 4000,
+    n_test: int = 1000,
+    seed: int = 1234,
+):
+    """Build a dataset by role name.
+
+    Returns ``(x_train, y_train, x_test, y_test, n_classes)`` with images as
+    uint8 arrays of shape ``[N, C, H, W]``.
+    """
+    if name == "mnist16":
+        classes, channels, difficulty = _CLASSES_10, 1, "easy"
+    elif name == "cifar16":
+        classes, channels, difficulty = _CLASSES_10, 3, "mid"
+    elif name == "imagenet20":
+        classes, channels, difficulty = _CLASSES_20, 1, "mid"
+    else:
+        raise ValueError(f"unknown dataset {name!r}")
+
+    rng = np.random.default_rng(seed)
+    k = len(classes)
+
+    def batch(n: int) -> tuple[np.ndarray, np.ndarray]:
+        xs = np.zeros((n, channels, 16, 16), dtype=np.uint8)
+        ys = np.zeros((n,), dtype=np.uint8)
+        for i in range(n):
+            c = int(rng.integers(0, k))
+            ys[i] = c
+            base = _render(classes[c], rng, difficulty=difficulty)
+            if channels == 1:
+                xs[i, 0] = base
+            else:
+                # Random (class-UNcorrelated) colorization + per-channel
+                # texture: color is a nuisance variable, not a shortcut —
+                # CIFAR-role difficulty.
+                hue = int(rng.integers(0, 255))
+                for ch in range(3):
+                    gain = 0.5 + 0.5 * np.sin((hue / 255.0 + ch / 3.0) * 2 * np.pi) ** 2
+                    tex = rng.normal(0.0, 14.0, base.shape)
+                    xs[i, ch] = np.clip(base * gain + tex + 20.0 * ch, 0, 255).astype(
+                        np.uint8
+                    )
+        return xs, ys
+
+    x_train, y_train = batch(n_train)
+    x_test, y_test = batch(n_test)
+    return x_train, y_train, x_test, y_test, k
+
+
+def save_rust_dataset(path: str, x: np.ndarray, y: np.ndarray, n_classes: int) -> None:
+    """Serialise a test split in the rust-readable STDS format.
+
+    Layout (little endian): magic ``STDS``, u32 n, c, h, w, n_classes,
+    then ``n*c*h*w`` u8 pixels, then ``n`` u8 labels.
+    """
+    n, c, h, w = x.shape
+    with open(path, "wb") as f:
+        f.write(b"STDS")
+        for v in (n, c, h, w, n_classes):
+            f.write(np.uint32(v).tobytes())
+        f.write(x.astype(np.uint8).tobytes())
+        f.write(y.astype(np.uint8).tobytes())

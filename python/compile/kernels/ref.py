@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the L1 LUT-matmul kernel.
+
+``approx_matmul_ref(a, w, lut)`` computes the approximate-multiplier matmul
+
+    out[i, j] = sum_k lut[a[i, k], w[k, j] + 128]
+
+with int32 accumulation — the CORE correctness reference every kernel and
+model test compares against (scan over K keeps memory at O(M·N)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def approx_matmul_ref(a: jnp.ndarray, w: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """Reference LUT-gather matmul.
+
+    Args:
+      a: ``[M, K]`` int32, activation indices in ``[0, 256)``.
+      w: ``[K, N]`` int32, weight indices in ``[-128, 128)``.
+      lut: ``[256, 256]`` int32 signed product table.
+
+    Returns:
+      ``[M, N]`` int32 accumulator.
+    """
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    lut_flat = lut.reshape(-1)
+    w_idx = w + 128
+
+    def body(acc, inputs):
+        a_col, w_row = inputs  # [M], [N]
+        idx = a_col[:, None] * 256 + w_row[None, :]
+        return acc + jnp.take(lut_flat, idx, axis=0), None
+
+    acc0 = jnp.zeros((m, n), dtype=jnp.int32)
+    acc, _ = jax.lax.scan(body, acc0, (a.T, w_idx))
+    return acc
+
+
+def exact_matmul_ref(a: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Exact int32 matmul of the same operands (sanity baseline)."""
+    return (a.astype(jnp.int32) @ w.astype(jnp.int32)).astype(jnp.int32)

@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: LUT-gather matmul — the DNN hot spot with scaleTRIM
+(or any behavioural multiplier) folded into a VMEM-resident product table.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's ASIC
+replaces each MAC multiplier with shift-add logic; on a TPU-shaped machine
+the equivalent move is a 256x256x4B product LUT pinned in VMEM (256 KiB)
+with activations/weights streamed through BlockSpec tiles, turning the MXU
+matmul into VPU gather+add.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO so the AOT artifact runs
+on the rust CPU client (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# M-axis tile: one grid step owns a [TILE_M, K] activation slab. 128 rows
+# of int32 at K<=512 is <=256 KiB — comfortably VMEM-sized next to the
+# 256 KiB LUT block.
+TILE_M = 128
+
+
+def _kernel(a_ref, w_ref, lut_ref, o_ref):
+    """One grid step: out_tile = LUT-matmul(a_tile, w) (int32)."""
+    a = a_ref[...]  # [tm, K] int32 (activation indices, 0..255)
+    w = w_ref[...]  # [K, N] int32 (weight indices, -128..127)
+    lut = lut_ref[...]  # [256, 256] int32
+    lut_flat = lut.reshape(-1)
+    tm, k = a.shape
+    n = w.shape[1]
+    w_idx = w + 128
+
+    def body(kk, acc):
+        idx = a[:, kk][:, None] * 256 + w_idx[kk, :][None, :]
+        return acc + jnp.take(lut_flat, idx, axis=0)
+
+    o_ref[...] = jax.lax.fori_loop(
+        0, k, body, jnp.zeros((tm, n), dtype=jnp.int32)
+    )
+
+
+def approx_matmul(a: jnp.ndarray, w: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """Pallas LUT-gather matmul.
+
+    Args:
+      a: ``[M, K]`` int32 activation indices in ``[0, 256)``.
+      w: ``[K, N]`` int32 weight indices in ``[-128, 128)``.
+      lut: ``[256, 256]`` int32 signed product table.
+
+    Returns:
+      ``[M, N]`` int32 accumulator (same numbers as
+      :func:`..kernels.ref.approx_matmul_ref`).
+    """
+    m, k = a.shape
+    _, n = w.shape
+    if m % TILE_M == 0 and m > TILE_M:
+        grid = (m // TILE_M,)
+        return pl.pallas_call(
+            _kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((TILE_M, k), lambda i: (i, 0)),  # stream A tiles
+                pl.BlockSpec((k, n), lambda i: (0, 0)),  # W resident
+                pl.BlockSpec((256, 256), lambda i: (0, 0)),  # LUT resident
+            ],
+            out_specs=pl.BlockSpec((TILE_M, n), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+            interpret=True,
+        )(a, w, lut)
+    # Small or ragged M: single block.
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a, w, lut)
+
+
+def vmem_footprint_bytes(m: int, k: int, n: int) -> dict:
+    """Static VMEM budget of one grid step (the §Perf L1 estimate)."""
+    tm = TILE_M if (m % TILE_M == 0 and m > TILE_M) else m
+    return {
+        "lut": 256 * 256 * 4,
+        "a_tile": tm * k * 4,
+        "w": k * n * 4,
+        "out_tile": tm * n * 4,
+        "total": 256 * 256 * 4 + tm * k * 4 + k * n * 4 + tm * n * 4,
+    }

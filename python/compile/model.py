@@ -1,0 +1,217 @@
+"""L2: quantized CNN forward passes in JAX, calling the L1 kernel.
+
+The paper's DNN evaluation (Sec. IV-E) replaces every MAC multiply in a
+post-training-quantized int8 CNN with an approximate multiplier. Here the
+multiplier is folded into a 256x256 signed product LUT that is a *runtime
+operand* of the lowered HLO — one AOT artifact therefore serves every
+multiplier configuration (rust swaps the LUT buffer per request class).
+
+Conventions (mirrored bit-exactly by ``rust/src/nn/infer.rs``):
+
+- activations: uint8 (zero-point 0 — inputs are pixel intensities, hidden
+  activations are post-ReLU), carried as int32 in the graph;
+- weights: int8 symmetric per-tensor;
+- accumulate: int32 via ``lut[a, w+128]`` gathers;
+- bias: int32 in accumulator units;
+- requantize: ``y = clip((acc * m_q + 2^15) >> 16, 0, 255)`` with the
+  rounding product taken in int64 (``m_q`` is a 16.16 fixed-point
+  multiplier) — ReLU is folded into the lower clip;
+- the final layer emits raw int32 logits (argmax-compatible).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import ref as kref
+from .kernels import scaletrim_matmul as kpallas
+
+
+# --------------------------------------------------------------------------
+# Architecture specs
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ConvSpec:
+    """3x3 SAME conv + ReLU (+ optional 2x2 maxpool)."""
+
+    cin: int
+    cout: int
+    pool: bool
+
+
+@dataclass(frozen=True)
+class FcSpec:
+    """Fully connected layer; ``final`` layers skip ReLU/requant."""
+
+    nin: int
+    nout: int
+    final: bool = True
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """A model: dataset role, input shape, layer list."""
+
+    name: str
+    dataset: str
+    in_shape: tuple  # (C, H, W)
+    layers: tuple = field(default=())
+    n_classes: int = 10
+
+
+def _net(name, dataset, c, n_classes, convs):
+    """Helper: conv stack + final FC sized from the pooling pattern."""
+    h = 16
+    layers = []
+    cin = c
+    for cout, pool in convs:
+        layers.append(ConvSpec(cin, cout, pool))
+        cin = cout
+        if pool:
+            h //= 2
+    layers.append(FcSpec(cin * h * h, n_classes, final=True))
+    return ModelSpec(name, dataset, (c, 16, 16), tuple(layers), n_classes)
+
+
+#: The evaluated model zoo (roles per DESIGN.md §Substitutions: lenet →
+#: LeNet-5/MNIST, convnet_m → VGG19-CIFAR role, convnet_l → ResNet-CIFAR
+#: role, squeeze_s → SqueezeNet/ImageNet top-1/top-5 role).
+MODELS = {
+    "lenet": _net("lenet", "mnist16", 1, 10, [(8, True), (16, True)]),
+    "convnet_m": _net("convnet_m", "cifar16", 3, 10, [(16, True), (32, True)]),
+    "convnet_l": _net(
+        "convnet_l", "cifar16", 3, 10, [(16, False), (16, True), (32, True)]
+    ),
+    "squeeze_s": _net(
+        "squeeze_s", "imagenet20", 1, 20, [(16, True), (32, True)]
+    ),
+}
+
+
+# --------------------------------------------------------------------------
+# Quantized parameters
+# --------------------------------------------------------------------------
+
+@dataclass
+class QConv:
+    """Quantized conv layer parameters."""
+
+    w_q: np.ndarray  # [O, C, 3, 3] int8
+    bias_q: np.ndarray  # [O] int32
+    m_q: int  # 16.16 requant multiplier
+    pool: bool
+
+
+@dataclass
+class QFc:
+    """Quantized FC layer parameters."""
+
+    w_q: np.ndarray  # [IN, OUT] int8
+    bias_q: np.ndarray  # [OUT] int32
+    m_q: int
+    final: bool
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def im2col(x: jnp.ndarray) -> jnp.ndarray:
+    """3x3 SAME patches: ``[B, C, H, W] -> [B*H*W, C*9]``.
+
+    Column order is (C, ki, kj) — matching ``w_q.reshape(O, C*9)``.
+    """
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    cols = [xp[:, :, i : i + h, j : j + w] for i in range(3) for j in range(3)]
+    # [B, C, 9, H, W] -> [B, H, W, C, 9] -> [B*H*W, C*9]
+    stack = jnp.stack(cols, axis=2)
+    return stack.transpose(0, 3, 4, 1, 2).reshape(b * h * w, c * 9)
+
+
+def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2 max pool, ``[B, C, H, W]``."""
+    b, c, h, w = x.shape
+    return x.reshape(b, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))
+
+
+def _requant(acc: jnp.ndarray, m_q: int) -> jnp.ndarray:
+    """Fixed-point requantization with folded ReLU (int64 inner product)."""
+    y = (acc.astype(jnp.int64) * jnp.int64(m_q) + (1 << 15)) >> 16
+    return jnp.clip(y, 0, 255).astype(jnp.int32)
+
+
+def forward_quant(layers, x_u8: jnp.ndarray, lut: jnp.ndarray, use_pallas: bool = True):
+    """Quantized forward pass with LUT-driven MACs.
+
+    Args:
+      layers: list of [`QConv`] / [`QFc`].
+      x_u8: ``[B, C, H, W]`` int32 pixel values in ``[0, 256)``.
+      lut: ``[256, 256]`` int32 signed product table.
+      use_pallas: route matmuls through the Pallas kernel (AOT path) or the
+        pure-jnp reference (fast test path). Numerics are identical.
+
+    Returns:
+      ``[B, n_classes]`` int32 logits.
+    """
+    matmul = kpallas.approx_matmul if use_pallas else kref.approx_matmul_ref
+    x = x_u8.astype(jnp.int32)
+    for layer in layers:
+        if isinstance(layer, QConv):
+            b, c, h, w = x.shape
+            o = layer.w_q.shape[0]
+            patches = im2col(x)  # [B*H*W, C*9]
+            wmat = jnp.asarray(
+                layer.w_q.reshape(o, c * 9).T.astype(np.int32)
+            )  # [C*9, O]
+            acc = matmul(patches, wmat, lut)
+            acc = acc + jnp.asarray(layer.bias_q.astype(np.int32))[None, :]
+            y = _requant(acc, layer.m_q)
+            x = y.reshape(b, h, w, o).transpose(0, 3, 1, 2)
+            if layer.pool:
+                x = maxpool2(x)
+        else:  # QFc
+            b = x.shape[0]
+            flat = x.reshape(b, -1)
+            acc = matmul(flat, jnp.asarray(layer.w_q.astype(np.int32)), lut)
+            acc = acc + jnp.asarray(layer.bias_q.astype(np.int32))[None, :]
+            if layer.final:
+                return acc
+            x = _requant(acc, layer.m_q)
+    raise AssertionError("model has no final layer")
+
+
+# --------------------------------------------------------------------------
+# Float forward (training / PTQ calibration)
+# --------------------------------------------------------------------------
+
+def forward_float(params, spec: ModelSpec, x: jnp.ndarray, collect=None):
+    """Float32 forward with the same topology (used by train.py and to
+    calibrate activation scales; ``collect`` receives each post-activation
+    tensor when provided)."""
+    h = x
+    for i, layer in enumerate(spec.layers):
+        w, b = params[i]
+        if isinstance(layer, ConvSpec):
+            h = jax.lax.conv_general_dilated(
+                h, w, (1, 1), "SAME", dimension_numbers=("NCHW", "OIHW", "NCHW")
+            ) + b[None, :, None, None]
+            h = jax.nn.relu(h)
+            if collect is not None:
+                collect(i, h)
+            if layer.pool:
+                h = maxpool2(h)
+        else:
+            h = h.reshape(h.shape[0], -1) @ w + b[None, :]
+            if not layer.final:
+                h = jax.nn.relu(h)
+                if collect is not None:
+                    collect(i, h)
+    return h

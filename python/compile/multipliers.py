@@ -1,0 +1,116 @@
+"""Python behavioural models of the multipliers (build-time only).
+
+These mirror the rust implementations in ``rust/src/multipliers/`` and are
+used to (a) generate product LUTs for python-side kernel tests and (b)
+cross-validate the calibration flow. The request path never imports this —
+rust generates its own LUTs from its own behavioural models.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+COMP_FRAC_BITS = 16
+
+
+def leading_one(v: int) -> int:
+    assert v > 0
+    return v.bit_length() - 1
+
+
+def truncate_fraction(v: int, n: int, h: int) -> int:
+    frac = v & ((1 << n) - 1)
+    return (frac >> (n - h)) if n >= h else (frac << (h - n))
+
+
+def calibrate_scaletrim(bits: int, h: int, m: int):
+    """Full-space calibration (α, ΔEE, C_i) — vectorised port of
+    ``rust/src/lut/calib.rs`` (exact class decomposition)."""
+    a = np.arange(1, 1 << bits, dtype=np.int64)
+    n = np.floor(np.log2(a)).astype(np.int64)
+    x = a / (2.0**n) - 1.0
+    frac = a - (np.int64(1) << n)
+    xh = np.where(n >= h, frac >> np.maximum(n - h, 0), frac << np.maximum(h - n, 0))
+    cnt = np.bincount(xh, minlength=1 << h).astype(np.float64)
+    sx = np.bincount(xh, weights=x, minlength=1 << h)
+    u = np.arange(1 << h)
+    s = (u[:, None] + u[None, :]) / float(1 << h)
+    sum_t = cnt[None, :] * sx[:, None] + cnt[:, None] * sx[None, :] + np.outer(sx, sx)
+    w = np.outer(cnt, cnt)
+    alpha = float((s * sum_t).sum() / ((s * s) * w).sum())
+    delta_ee = math.floor(math.log2(alpha - 1.0))
+    gain = 1.0 + 2.0**delta_ee
+    if m == 0:
+        return alpha, delta_ee, np.zeros(0), np.zeros(0, dtype=np.int64)
+    s_int = u[:, None] + u[None, :]
+    seg = np.minimum((s_int * m) >> (h + 1), m - 1)
+    ev_sum = sum_t - gain * s * w
+    c = np.array(
+        [ev_sum[seg == i].sum() / w[seg == i].sum() for i in range(m)]
+    )
+    c_fixed = np.round(c * (1 << COMP_FRAC_BITS)).astype(np.int64)
+    return alpha, delta_ee, c, c_fixed
+
+
+class ScaleTrim:
+    """scaleTRIM(h, M) behavioural model (fixed-point datapath of Fig. 8)."""
+
+    def __init__(self, bits: int, h: int, m: int):
+        assert 2 <= h < bits
+        self.bits, self.h, self.m = bits, h, m
+        self.alpha, self.delta_ee, self.c, self.c_fixed = calibrate_scaletrim(
+            bits, h, m
+        )
+
+    def mul(self, a: int, b: int) -> int:
+        if a == 0 or b == 0:
+            return 0
+        h, f = self.h, COMP_FRAC_BITS
+        na, nb = leading_one(a), leading_one(b)
+        s = truncate_fraction(a, na, h) + truncate_fraction(b, nb, h)
+        term = (1 << f) + (s << (f - h)) + (s << (f - h + self.delta_ee))
+        if self.m > 0:
+            seg = min((s * self.m) >> (h + 1), self.m - 1)
+            term += int(self.c_fixed[seg])
+        return (term << (na + nb)) >> f
+
+    def name(self) -> str:
+        return f"scaleTRIM({self.h},{self.m})"
+
+
+class Exact:
+    """Exact reference multiplier."""
+
+    def __init__(self, bits: int):
+        self.bits = bits
+
+    def mul(self, a: int, b: int) -> int:
+        return a * b
+
+    def name(self) -> str:
+        return f"Exact{self.bits}"
+
+
+def product_lut(mult) -> np.ndarray:
+    """Signed 256x256 int32 product LUT for the quantized DNN path.
+
+    ``lut[a_u8, w_i8 + 128] = sign(w) * mult.mul(|w|, a)`` — activations are
+    unsigned (post-ReLU uint8), weights signed int8; sign-magnitude wrapping
+    per paper Sec. III-D.
+    """
+    lut = np.zeros((256, 256), dtype=np.int64)
+    for aq in range(256):
+        for wq in range(-128, 128):
+            p = mult.mul(abs(wq), aq) if aq and wq else 0
+            lut[aq, wq + 128] = -p if wq < 0 else p
+    assert np.abs(lut).max() < 2**31
+    return lut.astype(np.int32)
+
+
+def exact_lut() -> np.ndarray:
+    """Exact product LUT (the accurate-multiplier baseline of Fig. 15/16)."""
+    aq = np.arange(256, dtype=np.int64)[:, None]
+    wq = np.arange(-128, 128, dtype=np.int64)[None, :]
+    return (aq * wq).astype(np.int32)

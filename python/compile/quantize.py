@@ -1,0 +1,84 @@
+"""Post-training int8 quantization (PTQ) — paper Sec. IV-E: "converting all
+model parameters and activations from float32 to int8 ... without applying
+any additional fine-tuning".
+
+Scheme (mirrored bit-exactly by rust/src/nn/):
+
+- weights: symmetric per-tensor int8 (scale ``s_w = max|W| / 127``);
+- activations: uint8 with zero-point 0 (inputs are pixels ``/255``; hidden
+  activations are post-ReLU), scale calibrated as ``max / 255`` over a
+  calibration batch;
+- bias: int32 in accumulator units (``s_in * s_w``);
+- requant multiplier: ``m_q = round(s_in * s_w / s_out * 2^16)``.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import jax.numpy as jnp
+import numpy as np
+
+from .model import ConvSpec, ModelSpec, QConv, QFc, forward_float
+
+
+def quantize(params, spec: ModelSpec, x_calib: np.ndarray):
+    """PTQ: float params -> list of QConv/QFc plus per-layer scales."""
+    # Calibrate activation maxima on a batch.
+    maxima = {}
+
+    def collect(i, h):
+        maxima[i] = max(maxima.get(i, 0.0), float(jnp.max(h)))
+
+    forward_float(params, spec, jnp.asarray(x_calib.astype(np.float32) / 255.0), collect)
+
+    qlayers = []
+    s_in = 1.0 / 255.0  # pixel scale
+    for i, layer in enumerate(spec.layers):
+        w, b = np.asarray(params[i][0]), np.asarray(params[i][1])
+        s_w = max(np.abs(w).max(), 1e-8) / 127.0
+        w_q = np.clip(np.round(w / s_w), -127, 127).astype(np.int8)
+        bias_q = np.round(b / (s_in * s_w)).astype(np.int64)
+        assert np.abs(bias_q).max() < 2**31
+        bias_q = bias_q.astype(np.int32)
+        if isinstance(layer, ConvSpec):
+            s_out = max(maxima[i], 1e-6) / 255.0
+            m_q = int(round(s_in * s_w / s_out * 65536.0))
+            assert 0 < m_q < 2**31
+            qlayers.append(QConv(w_q, bias_q, m_q, layer.pool))
+            s_in = s_out
+        else:
+            if layer.final:
+                # Raw logits in units s_in*s_w; no requant.
+                qlayers.append(QFc(w_q, bias_q, 0, True))
+            else:
+                s_out = max(maxima[i], 1e-6) / 255.0
+                m_q = int(round(s_in * s_w / s_out * 65536.0))
+                qlayers.append(QFc(w_q, bias_q, m_q, False))
+                s_in = s_out
+    return qlayers
+
+
+def save_rust_weights(path: str, spec: ModelSpec, qlayers) -> None:
+    """Serialise quantized weights in the rust-readable STWT format.
+
+    Layout (LE): magic ``STWT``, u32 c,h,w,n_classes,n_layers; then per
+    layer: u8 kind (0 conv / 1 fc), u8 pool, u8 final, u8 pad, u32 d0..d3,
+    u32 m_q, i8 weights, i32 bias.
+    """
+    c, h, w = spec.in_shape
+    with open(path, "wb") as f:
+        f.write(b"STWT")
+        f.write(struct.pack("<5I", c, h, w, spec.n_classes, len(qlayers)))
+        for q in qlayers:
+            if isinstance(q, QConv):
+                o, ci, kh, kw = q.w_q.shape
+                f.write(struct.pack("<4B", 0, int(q.pool), 0, 0))
+                f.write(struct.pack("<4I", o, ci, kh, kw))
+            else:
+                nin, nout = q.w_q.shape
+                f.write(struct.pack("<4B", 1, 0, int(q.final), 0))
+                f.write(struct.pack("<4I", nin, nout, 0, 0))
+            f.write(struct.pack("<I", q.m_q))
+            f.write(q.w_q.astype(np.int8).tobytes())
+            f.write(q.bias_q.astype("<i4").tobytes())

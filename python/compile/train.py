@@ -1,0 +1,96 @@
+"""Build-time training: float32 CNNs on the synthetic datasets.
+
+SGD + momentum on cross-entropy; a couple of minutes of CPU per model.
+Deterministic: parameter init and batch order are pure functions of the
+seed, so artifacts are reproducible bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset as ds
+from .model import ConvSpec, FcSpec, ModelSpec, forward_float
+
+
+def init_params(spec: ModelSpec, seed: int = 7):
+    """He-initialised float32 parameters."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for layer in spec.layers:
+        if isinstance(layer, ConvSpec):
+            fan_in = layer.cin * 9
+            w = rng.normal(0, np.sqrt(2.0 / fan_in), (layer.cout, layer.cin, 3, 3))
+            b = np.zeros(layer.cout)
+        else:
+            w = rng.normal(0, np.sqrt(2.0 / layer.nin), (layer.nin, layer.nout))
+            b = np.zeros(layer.nout)
+        params.append((jnp.asarray(w, jnp.float32), jnp.asarray(b, jnp.float32)))
+    return params
+
+
+def train(
+    spec: ModelSpec,
+    x_train: np.ndarray,
+    y_train: np.ndarray,
+    epochs: int = 8,
+    batch: int = 64,
+    lr: float = 0.05,
+    momentum: float = 0.9,
+    seed: int = 7,
+    log=print,
+):
+    """Train and return float params (as a list of (w, b) jnp arrays)."""
+    params = init_params(spec, seed)
+    vel = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params]
+
+    def loss_fn(ps, xb, yb):
+        logits = forward_float(ps, spec, xb)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, yb[:, None], axis=1).mean()
+
+    @jax.jit
+    def step(ps, vs, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(ps, xb, yb)
+        new_ps, new_vs = [], []
+        for (w, b), (vw, vb), (gw, gb) in zip(ps, vs, grads):
+            vw = momentum * vw - lr * gw
+            vb = momentum * vb - lr * gb
+            new_ps.append((w + vw, b + vb))
+            new_vs.append((vw, vb))
+        return new_ps, new_vs, loss
+
+    n = x_train.shape[0]
+    order_rng = np.random.default_rng(seed + 1)
+    xf = x_train.astype(np.float32) / 255.0
+    for epoch in range(epochs):
+        order = order_rng.permutation(n)
+        losses = []
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i : i + batch]
+            xb = jnp.asarray(xf[idx])
+            yb = jnp.asarray(y_train[idx].astype(np.int32))
+            params, vel, loss = step(params, vel, xb, yb)
+            losses.append(float(loss))
+        log(f"  epoch {epoch + 1}/{epochs}: loss {np.mean(losses):.4f}")
+    return params
+
+
+def accuracy_float(params, spec: ModelSpec, x: np.ndarray, y: np.ndarray) -> float:
+    """Top-1 accuracy of the float model."""
+    logits = forward_float(params, spec, jnp.asarray(x.astype(np.float32) / 255.0))
+    pred = np.asarray(jnp.argmax(logits, axis=1))
+    return float((pred == y).mean())
+
+
+def train_model(spec: ModelSpec, seed: int = 1234, log=print):
+    """Dataset + training in one call; returns (params, splits)."""
+    x_tr, y_tr, x_te, y_te, k = ds.make_dataset(spec.dataset, seed=seed)
+    assert k == spec.n_classes
+    log(f"training {spec.name} on {spec.dataset} ({x_tr.shape[0]} samples)")
+    params = train(spec, x_tr, y_tr, log=log)
+    acc = accuracy_float(params, spec, x_te, y_te)
+    log(f"  float test accuracy: {acc * 100:.2f}%")
+    return params, (x_tr, y_tr, x_te, y_te), acc

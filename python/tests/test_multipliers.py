@@ -1,0 +1,76 @@
+"""Python behavioural-model tests: the scaleTRIM datapath and its
+calibration must agree with the paper's anchors (mirroring the rust tests,
+which cross-validates the two independent implementations)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import multipliers as am
+
+
+def test_alpha_matches_paper_h3():
+    alpha, dee, _, _ = am.calibrate_scaletrim(8, 3, 0)
+    assert abs(alpha - 1.407) < 0.02
+    assert dee == -2
+
+
+def test_fig7_neighbourhood():
+    m = am.ScaleTrim(8, 3, 4)
+    assert 3950 <= m.mul(48, 81) <= 4150  # paper's constants give 4070
+
+
+def test_zero_bypass():
+    m = am.ScaleTrim(8, 3, 4)
+    assert m.mul(0, 200) == 0
+    assert m.mul(200, 0) == 0
+
+
+def test_mred_anchor_st34():
+    m = am.ScaleTrim(8, 3, 4)
+    a = np.arange(1, 256)
+    total = 0.0
+    for x in a:
+        exact = x * a
+        approx = np.array([m.mul(int(x), int(b)) for b in a])
+        total += (np.abs(approx - exact) / exact).sum()
+    mred = 100.0 * total / (255 * 255)
+    assert abs(mred - 3.73) < 0.35, mred
+
+
+def test_powers_of_two_exact_without_compensation():
+    m = am.ScaleTrim(8, 3, 0)
+    for i in range(8):
+        for j in range(8):
+            assert m.mul(1 << i, 1 << j) == 1 << (i + j)
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=st.integers(1, 255), b=st.integers(1, 255))
+def test_commutative_hypothesis(a, b):
+    m = am.ScaleTrim(8, 4, 8)
+    assert m.mul(a, b) == m.mul(b, a)
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=st.integers(0, 255), b=st.integers(0, 255))
+def test_bounded_relative_error_hypothesis(a, b):
+    m = am.ScaleTrim(8, 3, 4)
+    approx = m.mul(a, b)
+    exact = a * b
+    if exact == 0:
+        assert approx == 0
+    else:
+        assert abs(approx - exact) / exact < 0.20  # Table 5 max ~ 11%, margin 20%
+
+
+def test_product_lut_signs():
+    lut = am.product_lut(am.Exact(8))
+    assert lut[10, 5 + 128] == 50
+    assert lut[10, -5 + 128] == -50
+    assert lut[0, 100 + 128] == 0
+    assert lut[255, -128 + 128] == -255 * 128
+
+
+def test_exact_lut_equals_product_lut_of_exact():
+    assert np.array_equal(am.exact_lut(), am.product_lut(am.Exact(8)))

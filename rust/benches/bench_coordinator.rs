@@ -1,0 +1,45 @@
+//! Coordinator benchmarks: batching overhead and sustained request
+//! throughput against an instant mock backend — isolates the L3 routing /
+//! batching cost from model execution (§Perf L3: batcher overhead <5% of
+//! end-to-end inference).
+
+use ::scaletrim::coordinator::{BatchPolicy, Coordinator, MockBackend};
+use ::scaletrim::multipliers::{ApproxMultiplier, Exact, ScaleTrim};
+use ::scaletrim::util::bench::{black_box, Bencher};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bencher::new();
+    let backend = Arc::new(MockBackend::new(32, 10));
+    let exact = Exact::new(8);
+    let st = ScaleTrim::new(8, 4, 8);
+    let configs: Vec<&dyn ApproxMultiplier> = vec![&exact, &st];
+    let coord = Coordinator::new(
+        backend,
+        &configs,
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_micros(200),
+        },
+    );
+    let img = vec![7u8; 4];
+
+    b.bench("coordinator/single blocking request", Some(1), || {
+        black_box(coord.infer_blocking("Exact8", img.clone()).unwrap().class);
+    });
+
+    b.bench("coordinator/256 pipelined requests", Some(256), || {
+        let mut rx = Vec::with_capacity(256);
+        for i in 0..256usize {
+            let lane = if i % 2 == 0 { "Exact8" } else { "scaleTRIM(4,8)" };
+            rx.push(coord.submit(lane, img.clone()).unwrap().1);
+        }
+        for r in rx {
+            black_box(r.recv().unwrap().id);
+        }
+    });
+
+    println!("{}", coord.metrics().summary());
+    let _ = b.write_jsonl("target/bench_coordinator.jsonl");
+}

@@ -1,0 +1,23 @@
+//! Hardware-model benchmarks: per-design estimation cost and the full-zoo
+//! DSE (the Fig. 9 / Table 4 regeneration path minus the error sweeps).
+
+use ::scaletrim::hardware::estimate;
+use ::scaletrim::multipliers::{paper_configs_8bit, ScaleTrim};
+use ::scaletrim::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    let st = ScaleTrim::new(8, 4, 8);
+    b.bench("hw/estimate one design", None, || {
+        black_box(estimate(&st).pdp_fj);
+    });
+    let zoo = paper_configs_8bit();
+    b.bench("hw/estimate full 8-bit zoo", Some(zoo.len() as u64), || {
+        let mut total = 0.0;
+        for m in &zoo {
+            total += estimate(m.as_ref()).area_um2;
+        }
+        black_box(total);
+    });
+    let _ = b.write_jsonl("target/bench_hardware.jsonl");
+}

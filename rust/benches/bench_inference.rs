@@ -1,0 +1,46 @@
+//! End-to-end inference benchmarks (Fig. 15/16 workload): LUT construction,
+//! pure-rust per-image forward, and the PJRT batched path when artifacts
+//! are present.
+
+use ::scaletrim::multipliers::ScaleTrim;
+use ::scaletrim::nn::{build_lut, exact_lut, Dataset, QuantizedCnn, QuantizedWeights};
+use ::scaletrim::runtime::{find_artifacts_dir, ArtifactSet, Engine};
+use ::scaletrim::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    let st = ScaleTrim::new(8, 4, 8);
+    b.bench("lut/build 256x256 (scaleTRIM)", Some(65_536), || {
+        black_box(build_lut(&st).len());
+    });
+
+    let Ok(dir) = find_artifacts_dir() else {
+        eprintln!("artifacts not built — skipping model benches");
+        return;
+    };
+    let Ok(set) = ArtifactSet::resolve(&dir, "lenet") else {
+        eprintln!("lenet artifacts missing — skipping model benches");
+        return;
+    };
+    let data = Dataset::load(&set.dataset).unwrap();
+    let cnn = QuantizedCnn::new(QuantizedWeights::load(&set.weights).unwrap());
+    let lut = exact_lut();
+    b.bench("infer/pure-rust lenet single image", Some(1), || {
+        black_box(cnn.predict(data.image(0), &lut));
+    });
+
+    let engine = Engine::cpu().unwrap();
+    let model = engine
+        .load_model(set.hlo.to_str().unwrap(), 32, data.n_classes)
+        .unwrap();
+    let img_sz = data.c * data.h * data.w;
+    let mut pixels = Vec::with_capacity(32 * img_sz);
+    for i in 0..32 {
+        pixels.extend(data.image(i).iter().map(|&p| p as i32));
+    }
+    let shape = [32, data.c, data.h, data.w];
+    b.bench("infer/pjrt lenet batch-32", Some(32), || {
+        black_box(model.run(&pixels, &shape, &lut).unwrap().len());
+    });
+    let _ = b.write_jsonl("target/bench_inference.jsonl");
+}

@@ -1,0 +1,41 @@
+//! Behavioural-model throughput: Mops/s per multiplier family. This is the
+//! DSE hot path (§Perf L3) — a full 8-bit sweep is 65k `mul` calls per
+//! config, a 16-bit sweep 4M+.
+
+use ::scaletrim::multipliers::*;
+use ::scaletrim::util::bench::{black_box, Bencher};
+use ::scaletrim::util::rng::Xoshiro256;
+
+fn bench_mult(b: &mut Bencher, m: &dyn ApproxMultiplier) {
+    // Pre-generated operand stream so PRNG cost stays out of the loop.
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let ops: Vec<(u64, u64)> = (0..4096)
+        .map(|_| (rng.gen_operand(m.bits()), rng.gen_operand(m.bits())))
+        .collect();
+    b.bench(&format!("mul/{}", m.name()), Some(ops.len() as u64), || {
+        let mut acc = 0u64;
+        for &(a, bb) in &ops {
+            acc = acc.wrapping_add(m.mul(a, bb));
+        }
+        black_box(acc);
+    });
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    bench_mult(&mut b, &Exact::new(8));
+    bench_mult(&mut b, &ScaleTrim::new(8, 3, 4));
+    bench_mult(&mut b, &ScaleTrim::new(8, 4, 8));
+    bench_mult(&mut b, &ScaleTrim::new(16, 5, 8));
+    bench_mult(&mut b, &Drum::new(8, 4));
+    bench_mult(&mut b, &Dsm::new(8, 4));
+    bench_mult(&mut b, &Tosam::new(8, 1, 5));
+    bench_mult(&mut b, &Mitchell::new(8));
+    bench_mult(&mut b, &Mbm::new(8, 2));
+    bench_mult(&mut b, &Roba::new(8));
+    bench_mult(&mut b, &Ilm::new(8, 0));
+    bench_mult(&mut b, &PiecewiseLinear::new(8, 4, 4));
+    bench_mult(&mut b, &Scdm::new(8, 4)); // bit-serial array model: slowest
+    bench_mult(&mut b, &EvoLibSurrogate::new(8, 3));
+    let _ = b.write_jsonl("target/bench_multipliers.jsonl");
+}

@@ -1,0 +1,26 @@
+//! Sweep-engine benchmarks: the Table-4 / Fig.-10 regeneration workloads
+//! (exhaustive 8-bit, sampled 16-bit) and the calibration scans.
+
+use ::scaletrim::error::{exhaustive_sweep, sampled_sweep};
+use ::scaletrim::lut::calibrate;
+use ::scaletrim::multipliers::ScaleTrim;
+use ::scaletrim::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    let st = ScaleTrim::new(8, 3, 4);
+    b.bench("sweep/exhaustive-8bit (65k pairs)", Some(255 * 255), || {
+        black_box(exhaustive_sweep(&st).mred_pct);
+    });
+    let st16 = ScaleTrim::new(16, 5, 8);
+    b.bench("sweep/sampled-16bit (256k pairs)", Some(262_144), || {
+        black_box(sampled_sweep(&st16, 262_144, 7).mred_pct);
+    });
+    b.bench("calibrate/8bit h=5 M=8", None, || {
+        black_box(calibrate(8, 5, 8).alpha);
+    });
+    b.bench("calibrate/16bit h=8 M=8 (exact, class-decomposed)", None, || {
+        black_box(calibrate(16, 8, 8).alpha);
+    });
+    let _ = b.write_jsonl("target/bench_sweep.jsonl");
+}

@@ -1,0 +1,312 @@
+//! Workload-aware adaptive configuration — the paper's Future Work §V,
+//! implemented: *"(1) a lightweight runtime monitoring unit that profiles
+//! operand statistics and identifies workload variations, and (2) a
+//! reconfiguration controller that selects or updates pre-optimized
+//! configurations stored in memory."*
+//!
+//! The monitor keeps streaming statistics of the served operands (leading
+//! -one histogram, mean magnitude, zero fraction) in O(1) per sample; the
+//! controller maps those statistics plus an accuracy budget to the cheapest
+//! pre-calibrated scaleTRIM(h, M) configuration whose *predicted* MRED on
+//! the observed operand mix stays under the budget. Reconfiguration is
+//! hysteretic (min-dwell) so the lane does not thrash — the stability
+//! concern §V calls out.
+
+use crate::multipliers::{ApproxMultiplier, ScaleTrim};
+use std::collections::VecDeque;
+
+/// Streaming operand monitor (the "lightweight runtime monitoring unit").
+#[derive(Debug, Clone)]
+pub struct OperandMonitor {
+    window: usize,
+    samples: VecDeque<u64>,
+    /// Leading-one position histogram over the window.
+    lead_hist: [u64; 64],
+    zeros: u64,
+    sum: u128,
+}
+
+impl OperandMonitor {
+    /// Monitor over a sliding window of `window` operands.
+    pub fn new(window: usize) -> Self {
+        Self {
+            window,
+            samples: VecDeque::with_capacity(window + 1),
+            lead_hist: [0; 64],
+            zeros: 0,
+            sum: 0,
+        }
+    }
+
+    /// Record one operand.
+    pub fn push(&mut self, v: u64) {
+        self.samples.push_back(v);
+        if v == 0 {
+            self.zeros += 1;
+        } else {
+            self.lead_hist[crate::multipliers::leading_one(v) as usize] += 1;
+        }
+        self.sum += v as u128;
+        if self.samples.len() > self.window {
+            let old = self.samples.pop_front().unwrap();
+            if old == 0 {
+                self.zeros -= 1;
+            } else {
+                self.lead_hist[crate::multipliers::leading_one(old) as usize] -= 1;
+            }
+            self.sum -= old as u128;
+        }
+    }
+
+    /// Observed samples.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Fraction of zero operands (zero-bypass makes these error-free).
+    pub fn zero_fraction(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.zeros as f64 / self.samples.len() as f64
+    }
+
+    /// Mean operand magnitude.
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.sum as f64 / self.samples.len() as f64
+    }
+
+    /// Fraction of non-zero operands with fewer than `h` fraction bits
+    /// below the leading one — these multiply (near-)exactly under
+    /// truncation to `h`, so a heavy small-operand mix tolerates smaller h.
+    pub fn small_operand_fraction(&self, h: u32) -> f64 {
+        let nonzero: u64 = self.lead_hist.iter().sum();
+        if nonzero == 0 {
+            return 0.0;
+        }
+        let small: u64 = self.lead_hist[..(h as usize).min(64)].iter().sum();
+        small as f64 / nonzero as f64
+    }
+}
+
+/// A pre-optimized configuration entry (the "configurations stored in
+/// memory"): a calibrated design plus its full-space MRED.
+pub struct ConfigEntry {
+    /// The design.
+    pub mult: ScaleTrim,
+    /// Full-space MRED (%, measured at registration).
+    pub base_mred_pct: f64,
+    /// Hardware PDP (fJ) — the cost being minimised.
+    pub pdp_fj: f64,
+}
+
+/// The reconfiguration controller.
+pub struct AdaptiveController {
+    configs: Vec<ConfigEntry>,
+    /// Accuracy budget: predicted MRED must stay below this (percent).
+    pub mred_budget_pct: f64,
+    /// Minimum decisions between switches (hysteresis / stability, §V).
+    pub min_dwell: u32,
+    current: usize,
+    dwell: u32,
+    switches: u64,
+}
+
+impl AdaptiveController {
+    /// Build from a set of scaleTRIM configs (sorted by PDP internally).
+    /// `base_mred` / `pdp` come from the DSE (see `dse::DesignPoint`).
+    pub fn new(mut configs: Vec<ConfigEntry>, mred_budget_pct: f64, min_dwell: u32) -> Self {
+        assert!(!configs.is_empty());
+        configs.sort_by(|a, b| a.pdp_fj.partial_cmp(&b.pdp_fj).unwrap());
+        // Start at the most accurate (most expensive) config.
+        let current = configs.len() - 1;
+        Self {
+            configs,
+            mred_budget_pct,
+            min_dwell,
+            current,
+            dwell: 0,
+            switches: 0,
+        }
+    }
+
+    /// Predicted MRED of config `i` under the observed operand mix: small
+    /// operands (< h fraction bits) and zeros multiply near-exactly, so the
+    /// effective error scales with the fraction of "full-width" operands.
+    fn predicted_mred(&self, i: usize, mon: &OperandMonitor) -> f64 {
+        let e = &self.configs[i];
+        let h = e.mult.h();
+        let exactish = mon.zero_fraction()
+            + (1.0 - mon.zero_fraction()) * mon.small_operand_fraction(h);
+        e.base_mred_pct * (1.0 - exactish)
+    }
+
+    /// One control step: given fresh monitor state, possibly reconfigure.
+    /// Returns the selected config index.
+    pub fn step(&mut self, mon: &OperandMonitor) -> usize {
+        self.dwell += 1;
+        if self.dwell < self.min_dwell || mon.count() == 0 {
+            return self.current;
+        }
+        // Cheapest config meeting the budget under the observed mix.
+        let mut best = self.configs.len() - 1; // fallback: most accurate
+        for i in 0..self.configs.len() {
+            if self.predicted_mred(i, mon) <= self.mred_budget_pct {
+                best = i;
+                break; // configs sorted by PDP ascending
+            }
+        }
+        if best != self.current {
+            self.current = best;
+            self.switches += 1;
+            self.dwell = 0;
+        }
+        self.current
+    }
+
+    /// Currently selected design.
+    pub fn current(&self) -> &ScaleTrim {
+        &self.configs[self.current].mult
+    }
+
+    /// Current config's name.
+    pub fn current_name(&self) -> String {
+        self.configs[self.current].mult.name()
+    }
+
+    /// Number of reconfigurations so far.
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// Registered configs, cheapest first.
+    pub fn config_names(&self) -> Vec<String> {
+        self.configs.iter().map(|c| c.mult.name()).collect()
+    }
+}
+
+/// Convenience: build a controller over the standard (h, M) grid with
+/// measured MREDs and modelled PDPs.
+pub fn standard_controller(
+    bits: u32,
+    mred_budget_pct: f64,
+    min_dwell: u32,
+) -> AdaptiveController {
+    let mut entries = Vec::new();
+    for h in 3..=6u32 {
+        for m in [0u32, 4, 8] {
+            let mult = ScaleTrim::new(bits, h, m);
+            let err = crate::error::sweep(
+                &mult,
+                crate::error::SweepSpec::default_for(bits.min(10)),
+            );
+            let hw = crate::hardware::estimate(&mult);
+            entries.push(ConfigEntry {
+                mult,
+                base_mred_pct: err.mred_pct,
+                pdp_fj: hw.pdp_fj,
+            });
+        }
+    }
+    AdaptiveController::new(entries, mred_budget_pct, min_dwell)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn controller() -> AdaptiveController {
+        standard_controller(8, 4.0, 4)
+    }
+
+    #[test]
+    fn monitor_windows_correctly() {
+        let mut m = OperandMonitor::new(4);
+        for v in [0u64, 0, 200, 200, 200, 200] {
+            m.push(v);
+        }
+        // Window holds the last 4 (all 200s): zero fraction 0.
+        assert_eq!(m.count(), 4);
+        assert_eq!(m.zero_fraction(), 0.0);
+        assert_eq!(m.mean(), 200.0);
+    }
+
+    #[test]
+    fn small_operand_fraction() {
+        let mut m = OperandMonitor::new(8);
+        for v in [1u64, 2, 3, 200, 220, 250, 128, 6] {
+            m.push(v);
+        }
+        // h=3: operands with leading-one position < 3: {1,2,3,6} → 4/8.
+        assert!((m.small_operand_fraction(3) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn large_operand_mix_selects_accurate_config() {
+        let mut ctl = controller();
+        let mut mon = OperandMonitor::new(256);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        for _ in 0..256 {
+            mon.push(128 + rng.gen_range(128)); // all full-width operands
+        }
+        for _ in 0..8 {
+            ctl.step(&mon);
+        }
+        // Budget 4%: needs a config with base MRED <= 4 (e.g. h>=3, M>=4).
+        let chosen = &ctl.configs[ctl.current];
+        assert!(
+            chosen.base_mred_pct <= 4.0,
+            "chose {} at {:.2}%",
+            chosen.mult.name(),
+            chosen.base_mred_pct
+        );
+    }
+
+    #[test]
+    fn small_operand_mix_relaxes_to_cheaper_config() {
+        let mut ctl = controller();
+        let mut mon_big = OperandMonitor::new(256);
+        let mut mon_small = OperandMonitor::new(256);
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        for _ in 0..256 {
+            mon_big.push(128 + rng.gen_range(128));
+            mon_small.push(1 + rng.gen_range(7)); // tiny operands: near-exact
+        }
+        for _ in 0..8 {
+            ctl.step(&mon_big);
+        }
+        let cost_big = ctl.configs[ctl.current].pdp_fj;
+        for _ in 0..8 {
+            ctl.step(&mon_small);
+        }
+        let cost_small = ctl.configs[ctl.current].pdp_fj;
+        assert!(
+            cost_small <= cost_big,
+            "small-operand workload should allow a cheaper config ({cost_small} vs {cost_big})"
+        );
+    }
+
+    #[test]
+    fn hysteresis_limits_switching() {
+        let mut ctl = standard_controller(8, 4.0, 10);
+        let mut mon_a = OperandMonitor::new(64);
+        let mut mon_b = OperandMonitor::new(64);
+        for _ in 0..64 {
+            mon_a.push(255);
+            mon_b.push(2);
+        }
+        // Alternate workloads every step: dwell must cap switch count.
+        for i in 0..100 {
+            ctl.step(if i % 2 == 0 { &mon_a } else { &mon_b });
+        }
+        assert!(
+            ctl.switches() <= 100 / 10 + 1,
+            "switched {} times despite dwell 10",
+            ctl.switches()
+        );
+    }
+}

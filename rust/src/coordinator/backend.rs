@@ -1,0 +1,237 @@
+//! Inference backends: the coordinator is generic over how a batch is
+//! actually executed — PJRT (production), the pure-rust interpreter
+//! (cross-checking), or a mock (tests / failure injection).
+//!
+//! PJRT objects are not `Send`/`Sync` (the `xla` crate wraps raw PJRT
+//! pointers in `Rc`), so [`PjrtBackend`] is an *actor*: a dedicated thread
+//! owns the client + executable and serves jobs over a channel, which
+//! keeps the handle shareable across the coordinator's lane workers.
+
+use crate::nn::QuantizedCnn;
+use crate::Result;
+use anyhow::bail;
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Executes fixed-size batches of quantized images against a product LUT.
+pub trait Backend: Send + Sync + 'static {
+    /// Fixed batch size.
+    fn batch(&self) -> usize;
+    /// Number of output classes.
+    fn n_classes(&self) -> usize;
+    /// Input shape (c, h, w).
+    fn input_shape(&self) -> (usize, usize, usize);
+    /// Run one batch: `pixels` is `[batch * c*h*w]` u8 values; returns
+    /// `[batch * n_classes]` logits.
+    fn infer(&self, pixels: &[u8], lut: &Arc<Vec<i32>>) -> Result<Vec<i32>>;
+}
+
+struct PjrtJob {
+    pixels: Vec<i32>,
+    lut: Arc<Vec<i32>>,
+    reply: mpsc::Sender<Result<Vec<i32>>>,
+}
+
+/// PJRT-backed execution of the AOT artifact, actor-style.
+pub struct PjrtBackend {
+    tx: Mutex<mpsc::Sender<PjrtJob>>,
+    batch: usize,
+    n_classes: usize,
+    shape: (usize, usize, usize),
+}
+
+impl PjrtBackend {
+    /// Spawn the PJRT actor thread: it creates the CPU client, loads and
+    /// compiles the artifact, then serves jobs until the handle drops.
+    pub fn spawn(
+        hlo_path: String,
+        batch: usize,
+        n_classes: usize,
+        shape: (usize, usize, usize),
+    ) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<PjrtJob>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let (c, h, w) = shape;
+        std::thread::Builder::new()
+            .name("pjrt-actor".into())
+            .spawn(move || {
+                let setup = (|| -> Result<_> {
+                    let engine = crate::runtime::Engine::cpu()?;
+                    let model = engine.load_model(&hlo_path, batch, n_classes)?;
+                    Ok((engine, model))
+                })();
+                match setup {
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                    }
+                    Ok((_engine, model)) => {
+                        let _ = ready_tx.send(Ok(()));
+                        while let Ok(job) = rx.recv() {
+                            let res = model.run(&job.pixels, &[batch, c, h, w], &job.lut);
+                            let _ = job.reply.send(res);
+                        }
+                    }
+                }
+            })
+            .expect("spawning pjrt actor");
+        ready_rx.recv()??;
+        Ok(Self {
+            tx: Mutex::new(tx),
+            batch,
+            n_classes,
+            shape,
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+    fn input_shape(&self) -> (usize, usize, usize) {
+        self.shape
+    }
+    fn infer(&self, pixels: &[u8], lut: &Arc<Vec<i32>>) -> Result<Vec<i32>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let job = PjrtJob {
+            pixels: pixels.iter().map(|&p| p as i32).collect(),
+            lut: lut.clone(),
+            reply: reply_tx,
+        };
+        self.tx
+            .lock()
+            .unwrap()
+            .send(job)
+            .map_err(|_| anyhow::anyhow!("pjrt actor gone"))?;
+        reply_rx.recv()?
+    }
+}
+
+/// Pure-rust interpreter backend (no PJRT dependency; any batch size).
+pub struct PureRustBackend {
+    cnn: QuantizedCnn,
+    batch: usize,
+}
+
+impl PureRustBackend {
+    /// Wrap an interpreter with a nominal batch size.
+    pub fn new(cnn: QuantizedCnn, batch: usize) -> Self {
+        Self { cnn, batch }
+    }
+}
+
+impl Backend for PureRustBackend {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn n_classes(&self) -> usize {
+        self.cnn.n_classes()
+    }
+    fn input_shape(&self) -> (usize, usize, usize) {
+        self.cnn.input_shape()
+    }
+    fn infer(&self, pixels: &[u8], lut: &Arc<Vec<i32>>) -> Result<Vec<i32>> {
+        let (c, h, w) = self.cnn.input_shape();
+        let img = c * h * w;
+        if pixels.len() != self.batch * img {
+            bail!("bad batch payload: {} != {}", pixels.len(), self.batch * img);
+        }
+        let mut out = Vec::with_capacity(self.batch * self.cnn.n_classes());
+        for i in 0..self.batch {
+            out.extend(self.cnn.forward(&pixels[i * img..(i + 1) * img], lut));
+        }
+        Ok(out)
+    }
+}
+
+/// Test backend: logit`[k]` = sum of pixels if `k == pixels[0] % classes`
+/// else 0 — deterministic, order-sensitive, and can inject failures.
+pub struct MockBackend {
+    /// Batch size.
+    pub batch_size: usize,
+    /// Classes.
+    pub classes: usize,
+    /// Input shape.
+    pub shape: (usize, usize, usize),
+    /// Fail every Nth call (0 = never) — failure-injection for tests.
+    pub fail_every: usize,
+    calls: std::sync::atomic::AtomicUsize,
+}
+
+impl MockBackend {
+    /// New mock with a 1×2×2 input shape.
+    pub fn new(batch_size: usize, classes: usize) -> Self {
+        Self {
+            batch_size,
+            classes,
+            shape: (1, 2, 2),
+            fail_every: 0,
+            calls: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+
+    /// Builder: inject a failure every `n` calls.
+    pub fn with_failures(mut self, n: usize) -> Self {
+        self.fail_every = n;
+        self
+    }
+}
+
+impl Backend for MockBackend {
+    fn batch(&self) -> usize {
+        self.batch_size
+    }
+    fn n_classes(&self) -> usize {
+        self.classes
+    }
+    fn input_shape(&self) -> (usize, usize, usize) {
+        self.shape
+    }
+    fn infer(&self, pixels: &[u8], _lut: &Arc<Vec<i32>>) -> Result<Vec<i32>> {
+        let n = self
+            .calls
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+            + 1;
+        if self.fail_every != 0 && n % self.fail_every == 0 {
+            bail!("injected backend failure (call {n})");
+        }
+        let (c, h, w) = self.shape;
+        let img = c * h * w;
+        let mut out = vec![0i32; self.batch_size * self.classes];
+        for i in 0..self.batch_size {
+            let px = &pixels[i * img..(i + 1) * img];
+            let cls = px[0] as usize % self.classes;
+            out[i * self.classes + cls] = px.iter().map(|&p| p as i32).sum();
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lut0() -> Arc<Vec<i32>> {
+        Arc::new(vec![0i32; 256 * 256])
+    }
+
+    #[test]
+    fn mock_routes_by_first_pixel() {
+        let b = MockBackend::new(2, 4);
+        let pixels = vec![1, 0, 0, 0, 6, 1, 1, 1];
+        let out = b.infer(&pixels, &lut0()).unwrap();
+        assert_eq!(out[4 * 0 + 1], 1); // class 1 for first image
+        assert_eq!(out[4 * 1 + 2], 9); // class 6%4=2, sum 9
+    }
+
+    #[test]
+    fn mock_failure_injection() {
+        let b = MockBackend::new(1, 2).with_failures(2);
+        let px = vec![0, 0, 0, 0];
+        assert!(b.infer(&px, &lut0()).is_ok());
+        assert!(b.infer(&px, &lut0()).is_err());
+        assert!(b.infer(&px, &lut0()).is_ok());
+    }
+}

@@ -1,0 +1,225 @@
+//! Dynamic batching queue: size-or-deadline policy (the vLLM-router-style
+//! piece). A batch closes when either `max_batch` requests are waiting or
+//! the *oldest* request has waited `max_wait` — bounding tail latency while
+//! keeping occupancy high under load.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Maximum requests per batch (the artifact's fixed batch size).
+    pub max_batch: usize,
+    /// Deadline: a non-empty queue never waits longer than this.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 32,
+            max_wait: Duration::from_millis(5),
+        }
+    }
+}
+
+/// One queued inference request.
+#[derive(Debug)]
+pub struct Request {
+    /// Caller-assigned id, echoed in the response.
+    pub id: u64,
+    /// Image pixels (`c*h*w` u8).
+    pub pixels: Vec<u8>,
+    /// Enqueue timestamp (latency accounting).
+    pub enqueued: Instant,
+    /// Response channel.
+    pub reply: std::sync::mpsc::Sender<super::server::Prediction>,
+}
+
+struct Inner {
+    queue: VecDeque<Request>,
+    closed: bool,
+}
+
+/// An MPMC batch queue with condition-variable wakeups.
+pub struct BatchQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    policy: BatchPolicy,
+}
+
+impl BatchQueue {
+    /// New queue under a policy.
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            policy,
+        }
+    }
+
+    /// The queue's policy.
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Enqueue a request. Returns false if the queue is closed.
+    pub fn push(&self, req: Request) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return false;
+        }
+        g.queue.push_back(req);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Current depth (diagnostics).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Close the queue: waiting poppers drain what is left, then get `None`.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Blocking pop of the next batch under the size-or-deadline policy.
+    /// Returns `None` once closed *and* drained.
+    pub fn pop_batch(&self) -> Option<Vec<Request>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.queue.len() >= self.policy.max_batch {
+                return Some(drain(&mut g.queue, self.policy.max_batch));
+            }
+            if !g.queue.is_empty() {
+                // Wait only until the oldest request's deadline.
+                let oldest = g.queue.front().unwrap().enqueued;
+                let elapsed = oldest.elapsed();
+                if elapsed >= self.policy.max_wait {
+                    return Some(drain(&mut g.queue, self.policy.max_batch));
+                }
+                let (ng, timeout) = self
+                    .cv
+                    .wait_timeout(g, self.policy.max_wait - elapsed)
+                    .unwrap();
+                g = ng;
+                if timeout.timed_out() && !g.queue.is_empty() {
+                    return Some(drain(&mut g.queue, self.policy.max_batch));
+                }
+                continue;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+fn drain(q: &mut VecDeque<Request>, max: usize) -> Vec<Request> {
+    let take = q.len().min(max);
+    q.drain(..take).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        // Keep _rx alive is unnecessary for these queue-only tests.
+        std::mem::forget(_rx);
+        Request {
+            id,
+            pixels: vec![0; 4],
+            enqueued: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn full_batch_pops_immediately() {
+        let q = BatchQueue::new(BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::from_secs(10),
+        });
+        for i in 0..3 {
+            assert!(q.push(req(i)));
+        }
+        let batch = q.pop_batch().unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[0].id, 0);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let q = BatchQueue::new(BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(20),
+        });
+        q.push(req(7));
+        let t0 = Instant::now();
+        let batch = q.pop_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(15), "flushed too early");
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BatchQueue::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+        });
+        q.push(req(1));
+        q.close();
+        assert!(!q.push(req(2)), "push after close must fail");
+        assert_eq!(q.pop_batch().unwrap().len(), 1);
+        assert!(q.pop_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_all_delivered() {
+        let q = Arc::new(BatchQueue::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }));
+        let n = 100u64;
+        let producers: Vec<_> = (0..4)
+            .map(|t| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..n / 4 {
+                        assert!(q.push(req(t * 1000 + i)));
+                    }
+                })
+            })
+            .collect();
+        let consumer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut got = 0usize;
+                while got < n as usize {
+                    if let Some(b) = q.pop_batch() {
+                        assert!(b.len() <= 8);
+                        got += b.len();
+                    }
+                }
+                got
+            })
+        };
+        for p in producers {
+            p.join().unwrap();
+        }
+        assert_eq!(consumer.join().unwrap(), 100);
+    }
+}

@@ -1,0 +1,129 @@
+//! Serving metrics: counters plus a fixed-bucket latency histogram
+//! (lock-free on the hot path — the batcher increments atomics only).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log-spaced latency buckets (µs upper bounds).
+const BUCKETS_US: [u64; 12] = [
+    50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, u64::MAX,
+];
+
+/// Coordinator-wide metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Requests accepted.
+    pub requests: AtomicU64,
+    /// Responses delivered.
+    pub responses: AtomicU64,
+    /// Batches executed.
+    pub batches: AtomicU64,
+    /// Sum of batch occupancies (requests per batch).
+    pub occupancy_sum: AtomicU64,
+    /// Backend errors observed.
+    pub backend_errors: AtomicU64,
+    latency: [AtomicU64; 12],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    /// Fresh metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one request's end-to-end latency.
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap();
+        self.latency[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mean latency (µs).
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.responses.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate latency percentile from the histogram (µs upper bound of
+    /// the bucket containing the quantile).
+    pub fn latency_percentile_us(&self, q: f64) -> u64 {
+        let total: u64 = self.latency.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in self.latency.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return BUCKETS_US[i];
+            }
+        }
+        u64::MAX
+    }
+
+    /// Mean requests per executed batch.
+    pub fn mean_occupancy(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.occupancy_sum.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} responses={} batches={} occupancy={:.2} errors={} mean_latency={:.0}µs p99<={}µs",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_occupancy(),
+            self.backend_errors.load(Ordering::Relaxed),
+            self.mean_latency_us(),
+            match self.latency_percentile_us(0.99) {
+                u64::MAX => ">100000".to_string(),
+                v => v.to_string(),
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles_monotone() {
+        let m = Metrics::new();
+        for us in [10u64, 80, 300, 900, 4000, 90_000] {
+            m.responses.fetch_add(1, Ordering::Relaxed);
+            m.record_latency(Duration::from_micros(us));
+        }
+        let p50 = m.latency_percentile_us(0.5);
+        let p99 = m.latency_percentile_us(0.99);
+        assert!(p50 <= p99);
+        assert!(p99 >= 90_000);
+    }
+
+    #[test]
+    fn occupancy_mean() {
+        let m = Metrics::new();
+        m.batches.fetch_add(2, Ordering::Relaxed);
+        m.occupancy_sum.fetch_add(3 + 5, Ordering::Relaxed);
+        assert!((m.mean_occupancy() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_latency_us(), 0.0);
+        assert_eq!(m.latency_percentile_us(0.99), 0);
+        assert!(m.summary().contains("requests=0"));
+    }
+}

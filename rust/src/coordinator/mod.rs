@@ -1,0 +1,21 @@
+//! L3 serving coordinator: the multi-configuration inference service.
+//!
+//! The paper's contribution is an arithmetic unit, so the coordinator is
+//! the deployment shell around it (system prompt: "router, dynamic
+//! batcher, state management"): requests tagged with a multiplier
+//! configuration are routed to per-config queues, a dynamic batcher packs
+//! them into fixed-size artifact batches under a latency deadline, and
+//! worker threads execute the shared AOT model with the config's product
+//! LUT. Python never appears on this path.
+
+mod adaptive;
+mod backend;
+mod batcher;
+mod metrics;
+mod server;
+
+pub use adaptive::{standard_controller, AdaptiveController, ConfigEntry, OperandMonitor};
+pub use backend::{Backend, MockBackend, PjrtBackend, PureRustBackend};
+pub use batcher::{BatchPolicy, BatchQueue, Request};
+pub use metrics::Metrics;
+pub use server::{Coordinator, Prediction};

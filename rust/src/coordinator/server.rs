@@ -1,0 +1,286 @@
+//! The coordinator: request router + per-config dynamic batchers + worker
+//! threads owning the backend. One shared AOT executable serves every
+//! multiplier configuration — only the LUT operand differs per queue.
+
+use super::backend::Backend;
+use super::batcher::{BatchPolicy, BatchQueue, Request};
+use super::metrics::Metrics;
+use crate::multipliers::ApproxMultiplier;
+use crate::nn::build_lut;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// A delivered prediction.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    /// Echo of the request id.
+    pub id: u64,
+    /// Raw logits.
+    pub logits: Vec<i32>,
+    /// Argmax class.
+    pub class: usize,
+    /// Error string when the backend failed for this request's batch.
+    pub error: Option<String>,
+}
+
+struct ConfigLane {
+    queue: Arc<BatchQueue>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Multi-config inference coordinator.
+pub struct Coordinator {
+    lanes: HashMap<String, ConfigLane>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    img_size: usize,
+}
+
+impl Coordinator {
+    /// Build a coordinator over a backend and a set of multiplier configs.
+    /// Each config gets its own lane (queue + worker thread); the backend
+    /// is shared.
+    pub fn new(
+        backend: Arc<dyn Backend>,
+        configs: &[&dyn ApproxMultiplier],
+        policy: BatchPolicy,
+    ) -> Self {
+        let metrics = Arc::new(Metrics::new());
+        let (c, h, w) = backend.input_shape();
+        let img_size = c * h * w;
+        let mut lanes = HashMap::new();
+        for m in configs {
+            let lut = Arc::new(build_lut(*m));
+            let queue = Arc::new(BatchQueue::new(policy));
+            let worker = spawn_worker(
+                m.name(),
+                backend.clone(),
+                queue.clone(),
+                lut,
+                metrics.clone(),
+                img_size,
+            );
+            lanes.insert(
+                m.name(),
+                ConfigLane {
+                    queue,
+                    worker: Some(worker),
+                },
+            );
+        }
+        Self {
+            lanes,
+            metrics,
+            next_id: AtomicU64::new(0),
+            img_size,
+        }
+    }
+
+    /// Configured lane names.
+    pub fn configs(&self) -> Vec<String> {
+        self.lanes.keys().cloned().collect()
+    }
+
+    /// Shared metrics handle.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Submit an image to a config lane; returns `(id, receiver)`.
+    /// Errors if the config is unknown or the image size is wrong.
+    pub fn submit(
+        &self,
+        config: &str,
+        pixels: Vec<u8>,
+    ) -> crate::Result<(u64, mpsc::Receiver<Prediction>)> {
+        let lane = self
+            .lanes
+            .get(config)
+            .ok_or_else(|| anyhow::anyhow!("unknown config {config:?}"))?;
+        anyhow::ensure!(
+            pixels.len() == self.img_size,
+            "image size {} != expected {}",
+            pixels.len(),
+            self.img_size
+        );
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let ok = lane.queue.push(Request {
+            id,
+            pixels,
+            enqueued: Instant::now(),
+            reply: tx,
+        });
+        anyhow::ensure!(ok, "coordinator shutting down");
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        Ok((id, rx))
+    }
+
+    /// Convenience: submit and block for the prediction.
+    pub fn infer_blocking(&self, config: &str, pixels: Vec<u8>) -> crate::Result<Prediction> {
+        let (_, rx) = self.submit(config, pixels)?;
+        Ok(rx.recv()?)
+    }
+
+    /// Graceful shutdown: close queues, join workers.
+    pub fn shutdown(&mut self) {
+        for lane in self.lanes.values() {
+            lane.queue.close();
+        }
+        for lane in self.lanes.values_mut() {
+            if let Some(h) = lane.worker.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn spawn_worker(
+    name: String,
+    backend: Arc<dyn Backend>,
+    queue: Arc<BatchQueue>,
+    lut: Arc<Vec<i32>>,
+    metrics: Arc<Metrics>,
+    img_size: usize,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("lane-{name}"))
+        .spawn(move || {
+            let bsz = backend.batch();
+            let classes = backend.n_classes();
+            while let Some(batch) = queue.pop_batch() {
+                // Pad the pixel payload to the artifact's fixed batch size.
+                let mut pixels = vec![0u8; bsz * img_size];
+                for (i, req) in batch.iter().enumerate() {
+                    pixels[i * img_size..(i + 1) * img_size].copy_from_slice(&req.pixels);
+                }
+                metrics.batches.fetch_add(1, Ordering::Relaxed);
+                metrics
+                    .occupancy_sum
+                    .fetch_add(batch.len() as u64, Ordering::Relaxed);
+                match backend.infer(&pixels, &lut) {
+                    Ok(logits) => {
+                        for (i, req) in batch.into_iter().enumerate() {
+                            let row = logits[i * classes..(i + 1) * classes].to_vec();
+                            let class = crate::nn::argmax(&row);
+                            metrics.record_latency(req.enqueued.elapsed());
+                            metrics.responses.fetch_add(1, Ordering::Relaxed);
+                            let _ = req.reply.send(Prediction {
+                                id: req.id,
+                                logits: row,
+                                class,
+                                error: None,
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        // Failure isolation: the batch errors, the lane
+                        // keeps serving subsequent batches.
+                        metrics.backend_errors.fetch_add(1, Ordering::Relaxed);
+                        let msg = e.to_string();
+                        for req in batch {
+                            metrics.record_latency(req.enqueued.elapsed());
+                            metrics.responses.fetch_add(1, Ordering::Relaxed);
+                            let _ = req.reply.send(Prediction {
+                                id: req.id,
+                                logits: Vec::new(),
+                                class: usize::MAX,
+                                error: Some(msg.clone()),
+                            });
+                        }
+                    }
+                }
+            }
+        })
+        .expect("spawning lane worker")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::MockBackend;
+    use crate::multipliers::{Exact, ScaleTrim};
+    use std::time::Duration;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+
+    #[test]
+    fn routes_and_answers() {
+        let backend = Arc::new(MockBackend::new(4, 4));
+        let exact = Exact::new(8);
+        let st = ScaleTrim::new(8, 3, 4);
+        let configs: Vec<&dyn crate::multipliers::ApproxMultiplier> = vec![&exact, &st];
+        let coord = Coordinator::new(backend, &configs, policy());
+        let p = coord.infer_blocking("Exact8", vec![2, 1, 1, 1]).unwrap();
+        assert_eq!(p.class, 2); // first pixel 2 % 4
+        assert!(p.error.is_none());
+        let p2 = coord.infer_blocking("scaleTRIM(3,4)", vec![3, 0, 0, 0]).unwrap();
+        assert_eq!(p2.class, 3);
+    }
+
+    #[test]
+    fn unknown_config_rejected() {
+        let backend = Arc::new(MockBackend::new(2, 2));
+        let exact = Exact::new(8);
+        let configs: Vec<&dyn crate::multipliers::ApproxMultiplier> = vec![&exact];
+        let coord = Coordinator::new(backend, &configs, policy());
+        assert!(coord.submit("DRUM(9)", vec![0; 4]).is_err());
+    }
+
+    #[test]
+    fn wrong_image_size_rejected() {
+        let backend = Arc::new(MockBackend::new(2, 2));
+        let exact = Exact::new(8);
+        let configs: Vec<&dyn crate::multipliers::ApproxMultiplier> = vec![&exact];
+        let coord = Coordinator::new(backend, &configs, policy());
+        assert!(coord.submit("Exact8", vec![0; 3]).is_err());
+    }
+
+    #[test]
+    fn backend_failures_are_isolated() {
+        let backend = Arc::new(MockBackend::new(1, 2).with_failures(2));
+        let exact = Exact::new(8);
+        let configs: Vec<&dyn crate::multipliers::ApproxMultiplier> = vec![&exact];
+        let coord = Coordinator::new(backend, &configs, policy());
+        let mut errors = 0;
+        let mut oks = 0;
+        for _ in 0..6 {
+            let p = coord.infer_blocking("Exact8", vec![1, 0, 0, 0]).unwrap();
+            if p.error.is_some() {
+                errors += 1;
+            } else {
+                oks += 1;
+            }
+        }
+        assert!(errors > 0 && oks > 0, "errors={errors} oks={oks}");
+        assert_eq!(
+            coord.metrics().responses.load(Ordering::Relaxed),
+            6,
+            "every request answered exactly once"
+        );
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let backend = Arc::new(MockBackend::new(2, 2));
+        let exact = Exact::new(8);
+        let configs: Vec<&dyn crate::multipliers::ApproxMultiplier> = vec![&exact];
+        let mut coord = Coordinator::new(backend, &configs, policy());
+        let _ = coord.infer_blocking("Exact8", vec![1, 0, 0, 0]).unwrap();
+        coord.shutdown();
+        assert!(coord.submit("Exact8", vec![0; 4]).is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! Design-space exploration (paper Sec. IV-C): evaluate every configuration
+//! on the accuracy axis (error sweep) and the hardware axes (cost model),
+//! extract Pareto fronts, and answer constraint queries like the paper's
+//! "MRED ≤ 4% and 200 fJ ≤ PDP ≤ 250 fJ" (Table 2 selection).
+
+mod pareto;
+
+pub use pareto::{dominance, pareto_front, Dominance};
+
+use crate::error::{sweep, ErrorReport, SweepSpec};
+use crate::hardware::{estimate, paper_reference, HwEstimate};
+use crate::multipliers::ApproxMultiplier;
+
+/// One evaluated design point: accuracy + hardware, plus the paper's
+/// published values when the config appears in Table 4.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    /// Config label.
+    pub name: String,
+    /// Operand width.
+    pub bits: u32,
+    /// Measured error metrics.
+    pub error: ErrorReport,
+    /// Modelled hardware cost.
+    pub hw: HwEstimate,
+    /// Paper Table 4 row, when published: (mred, delay, area, power, pdp).
+    pub paper: Option<(f64, f64, f64, f64, f64)>,
+}
+
+impl DesignPoint {
+    /// Evaluate one configuration end to end.
+    pub fn evaluate(m: &dyn ApproxMultiplier, spec: SweepSpec) -> Self {
+        let name = m.name();
+        Self {
+            bits: m.bits(),
+            error: sweep(m, spec),
+            hw: estimate(m),
+            paper: paper_reference(&name),
+            name,
+        }
+    }
+}
+
+/// Evaluate a whole zoo (used by the Fig. 9/10 harnesses). Multi-threaded
+/// through the sweeps themselves.
+pub fn evaluate_all(zoo: &[Box<dyn ApproxMultiplier>], spec: SweepSpec) -> Vec<DesignPoint> {
+    zoo.iter()
+        .map(|m| DesignPoint::evaluate(m.as_ref(), spec))
+        .collect()
+}
+
+/// Constraint query over evaluated points (Table 2 style): MRED ceiling and
+/// a PDP window; returns the qualifying points sorted by MRED.
+pub fn constrained(
+    points: &[DesignPoint],
+    mred_max_pct: f64,
+    pdp_range_fj: (f64, f64),
+) -> Vec<DesignPoint> {
+    let mut v: Vec<DesignPoint> = points
+        .iter()
+        .filter(|p| {
+            p.error.mred_pct <= mred_max_pct
+                && p.hw.pdp_fj >= pdp_range_fj.0
+                && p.hw.pdp_fj <= pdp_range_fj.1
+        })
+        .cloned()
+        .collect();
+    v.sort_by(|a, b| a.error.mred_pct.partial_cmp(&b.error.mred_pct).unwrap());
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::{Drum, ScaleTrim};
+
+    #[test]
+    fn evaluate_produces_consistent_point() {
+        let m = ScaleTrim::new(8, 3, 4);
+        let p = DesignPoint::evaluate(&m, SweepSpec::Exhaustive);
+        assert_eq!(p.name, "scaleTRIM(3,4)");
+        assert!(p.error.mred_pct > 3.0 && p.error.mred_pct < 4.5);
+        assert!(p.hw.pdp_fj > 0.0);
+        assert!(p.paper.is_some());
+    }
+
+    #[test]
+    fn constraint_query_filters() {
+        let pts = vec![
+            DesignPoint::evaluate(&ScaleTrim::new(8, 3, 4), SweepSpec::Exhaustive),
+            DesignPoint::evaluate(&Drum::new(8, 3), SweepSpec::Exhaustive),
+        ];
+        let sel = constrained(&pts, 4.0, (0.0, 1e9));
+        assert_eq!(sel.len(), 1);
+        assert_eq!(sel[0].name, "scaleTRIM(3,4)");
+    }
+}

@@ -1,0 +1,93 @@
+//! Pareto-front extraction over (error, cost) pairs — the paper's central
+//! claim is that scaleTRIM configurations populate this front (Figs. 9–13).
+
+/// Dominance relation between two (minimise, minimise) objective pairs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dominance {
+    /// First strictly dominates second.
+    Dominates,
+    /// Second strictly dominates first.
+    DominatedBy,
+    /// Neither dominates.
+    Incomparable,
+}
+
+/// Compare two bi-objective points (both minimised).
+pub fn dominance(a: (f64, f64), b: (f64, f64)) -> Dominance {
+    let better_or_eq = a.0 <= b.0 && a.1 <= b.1;
+    let strictly = a.0 < b.0 || a.1 < b.1;
+    let worse_or_eq = b.0 <= a.0 && b.1 <= a.1;
+    let strictly_worse = b.0 < a.0 || b.1 < a.1;
+    if better_or_eq && strictly {
+        Dominance::Dominates
+    } else if worse_or_eq && strictly_worse {
+        Dominance::DominatedBy
+    } else {
+        Dominance::Incomparable
+    }
+}
+
+/// Indices of the Pareto-optimal (non-dominated) points for two minimised
+/// objectives, in increasing order of the first objective.
+pub fn pareto_front<T>(items: &[T], objectives: impl Fn(&T) -> (f64, f64)) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..items.len()).collect();
+    // Sort by first objective, tie-break on second.
+    idx.sort_by(|&i, &j| {
+        let (a, b) = (objectives(&items[i]), objectives(&items[j]));
+        a.partial_cmp(&b).unwrap()
+    });
+    let mut front = Vec::new();
+    let mut best_second = f64::INFINITY;
+    for &i in &idx {
+        let (_, y) = objectives(&items[i]);
+        if y < best_second {
+            front.push(i);
+            best_second = y;
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_cases() {
+        assert_eq!(dominance((1.0, 1.0), (2.0, 2.0)), Dominance::Dominates);
+        assert_eq!(dominance((2.0, 2.0), (1.0, 1.0)), Dominance::DominatedBy);
+        assert_eq!(dominance((1.0, 3.0), (3.0, 1.0)), Dominance::Incomparable);
+        assert_eq!(dominance((1.0, 1.0), (1.0, 1.0)), Dominance::Incomparable);
+    }
+
+    #[test]
+    fn front_extraction() {
+        // Points: (error, cost).
+        let pts = vec![(1.0, 10.0), (2.0, 5.0), (3.0, 6.0), (4.0, 1.0), (0.5, 20.0)];
+        let front = pareto_front(&pts, |p| *p);
+        let names: Vec<(f64, f64)> = front.iter().map(|&i| pts[i]).collect();
+        assert_eq!(names, vec![(0.5, 20.0), (1.0, 10.0), (2.0, 5.0), (4.0, 1.0)]);
+    }
+
+    #[test]
+    fn front_of_empty_is_empty() {
+        let pts: Vec<(f64, f64)> = vec![];
+        assert!(pareto_front(&pts, |p| *p).is_empty());
+    }
+
+    #[test]
+    fn every_non_front_point_is_dominated() {
+        let pts = vec![(1.0, 4.0), (2.0, 3.0), (2.5, 3.5), (3.0, 2.0)];
+        let front = pareto_front(&pts, |p| *p);
+        for (i, p) in pts.iter().enumerate() {
+            if !front.contains(&i) {
+                assert!(
+                    front
+                        .iter()
+                        .any(|&f| dominance(pts[f], *p) == Dominance::Dominates),
+                    "point {i} not dominated"
+                );
+            }
+        }
+    }
+}

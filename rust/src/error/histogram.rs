@@ -1,0 +1,171 @@
+//! ARED histograms (paper Fig. 14): per-bin operand-pair counts of the
+//! absolute relative error distribution.
+
+/// One histogram bin.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramBin {
+    /// Inclusive lower edge (ARED, percent).
+    pub lo_pct: f64,
+    /// Exclusive upper edge (ARED, percent).
+    pub hi_pct: f64,
+    /// Number of operand pairs in the bin.
+    pub count: u64,
+}
+
+/// Fixed-width ARED histogram over `[0, max_pct)` with an overflow bin.
+#[derive(Debug, Clone)]
+pub struct ErrorHistogram {
+    bins: Vec<u64>,
+    overflow: u64,
+    max_pct: f64,
+    width_pct: f64,
+    total: u64,
+}
+
+impl ErrorHistogram {
+    /// `nbins` equal-width bins covering `[0, max_pct)`.
+    pub fn new(nbins: usize, max_pct: f64) -> Self {
+        assert!(nbins > 0 && max_pct > 0.0);
+        Self {
+            bins: vec![0; nbins],
+            overflow: 0,
+            max_pct,
+            width_pct: max_pct / nbins as f64,
+            total: 0,
+        }
+    }
+
+    /// Record one ARED observation (fraction, not percent).
+    #[inline]
+    pub fn push(&mut self, ared: f64) {
+        let pct = 100.0 * ared;
+        self.total += 1;
+        if pct >= self.max_pct {
+            self.overflow += 1;
+        } else {
+            let idx = ((pct / self.width_pct) as usize).min(self.bins.len() - 1);
+            self.bins[idx] += 1;
+        }
+    }
+
+    /// Merge another histogram with identical shape.
+    pub fn merge(&mut self, other: &ErrorHistogram) {
+        assert_eq!(self.bins.len(), other.bins.len());
+        assert_eq!(self.max_pct, other.max_pct);
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+        self.overflow += other.overflow;
+        self.total += other.total;
+    }
+
+    /// Materialise the bins (plus the overflow bin at the end).
+    pub fn bins(&self) -> Vec<HistogramBin> {
+        let mut out: Vec<HistogramBin> = self
+            .bins
+            .iter()
+            .enumerate()
+            .map(|(i, &count)| HistogramBin {
+                lo_pct: i as f64 * self.width_pct,
+                hi_pct: (i + 1) as f64 * self.width_pct,
+                count,
+            })
+            .collect();
+        out.push(HistogramBin {
+            lo_pct: self.max_pct,
+            hi_pct: f64::INFINITY,
+            count: self.overflow,
+        });
+        out
+    }
+
+    /// Total observations.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Fraction of observations at or beyond `pct` (tail mass) — the
+    /// "pronounced tail behaviour" comparison of Sec. IV-D.
+    pub fn tail_fraction(&self, pct: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let mut tail = self.overflow;
+        for (i, &c) in self.bins.iter().enumerate() {
+            if i as f64 * self.width_pct >= pct {
+                tail += c;
+            }
+        }
+        tail as f64 / self.total as f64
+    }
+
+    /// Render a terminal bar chart (Fig. 14 in ASCII).
+    pub fn render(&self, title: &str) -> String {
+        let mut out = format!("== {title} ==\n");
+        let max = self.bins.iter().copied().max().unwrap_or(0).max(1);
+        for (i, &c) in self.bins.iter().enumerate() {
+            let bar_len = (c as f64 / max as f64 * 50.0).round() as usize;
+            out.push_str(&format!(
+                "[{:5.1}-{:5.1}%) {:>9} {}\n",
+                i as f64 * self.width_pct,
+                (i + 1) as f64 * self.width_pct,
+                c,
+                "#".repeat(bar_len)
+            ));
+        }
+        out.push_str(&format!("[{:5.1}%+    ) {:>9}\n", self.max_pct, self.overflow));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binning_and_overflow() {
+        let mut h = ErrorHistogram::new(10, 10.0); // 1%-wide bins
+        h.push(0.005); // 0.5% -> bin 0
+        h.push(0.015); // 1.5% -> bin 1
+        h.push(0.095); // 9.5% -> bin 9
+        h.push(0.5); // 50%  -> overflow
+        let bins = h.bins();
+        assert_eq!(bins[0].count, 1);
+        assert_eq!(bins[1].count, 1);
+        assert_eq!(bins[9].count, 1);
+        assert_eq!(bins[10].count, 1);
+        assert_eq!(h.total(), 4);
+    }
+
+    #[test]
+    fn tail_fraction_counts_from_threshold() {
+        let mut h = ErrorHistogram::new(10, 10.0);
+        for _ in 0..9 {
+            h.push(0.001);
+        }
+        h.push(0.09); // 9%
+        assert!((h.tail_fraction(5.0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = ErrorHistogram::new(4, 4.0);
+        let mut b = ErrorHistogram::new(4, 4.0);
+        a.push(0.01);
+        b.push(0.01);
+        a.merge(&b);
+        assert_eq!(a.total(), 2);
+        assert_eq!(a.bins()[1].count, 2);
+    }
+
+    #[test]
+    fn render_contains_bars() {
+        let mut h = ErrorHistogram::new(4, 4.0);
+        for _ in 0..5 {
+            h.push(0.005);
+        }
+        let s = h.render("demo");
+        assert!(s.contains('#'));
+        assert!(s.contains("demo"));
+    }
+}

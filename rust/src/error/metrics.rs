@@ -1,0 +1,171 @@
+//! Error metrics. The paper reports, per multiplier configuration:
+//!
+//! - **MRED** — mean of `ARED_i = |M_App,i − M_Acc,i| / M_Acc,i` (Eq. 8),
+//!   in percent;
+//! - **MED** — mean absolute error distance `|M_App − M_Acc|`;
+//! - **Max-Error** — peak error distance (Table 5);
+//! - **Std** — standard deviation of the error distance (Table 5);
+//! - percentile statistics of the ARED distribution (Table 3).
+
+use crate::util::stats::Accumulator;
+
+/// Aggregated error statistics over an operand-pair population.
+#[derive(Debug, Clone, Default)]
+pub struct ErrorReport {
+    /// Mean relative error distance, percent (Eq. 8).
+    pub mred_pct: f64,
+    /// Mean error distance (absolute).
+    pub med: f64,
+    /// Peak absolute error distance.
+    pub max_error: f64,
+    /// Standard deviation of the (signed) error distance.
+    pub std: f64,
+    /// Mean signed error distance (bias; DRUM-style designs centre this).
+    pub mean_signed: f64,
+    /// Number of operand pairs measured.
+    pub pairs: u64,
+}
+
+/// Streaming builder for [`ErrorReport`].
+#[derive(Debug, Clone, Default)]
+pub struct ErrorReportBuilder {
+    ared: Accumulator,
+    ed_abs: Accumulator,
+    ed_signed: Accumulator,
+}
+
+impl ErrorReportBuilder {
+    /// Fresh builder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one `(approx, exact)` pair; pairs with `exact == 0` are
+    /// excluded from MRED (division by zero) exactly as the paper's
+    /// "full operand space excluding zero" population does.
+    #[inline]
+    pub fn push(&mut self, approx: u64, exact: u64) {
+        let diff = approx as f64 - exact as f64;
+        self.ed_abs.push(diff.abs());
+        self.ed_signed.push(diff);
+        if exact != 0 {
+            self.ared.push((diff / exact as f64).abs());
+        }
+    }
+
+    /// Merge a partial builder (parallel sweeps).
+    pub fn merge(&mut self, other: &ErrorReportBuilder) {
+        self.ared.merge(&other.ared);
+        self.ed_abs.merge(&other.ed_abs);
+        self.ed_signed.merge(&other.ed_signed);
+    }
+
+    /// Finalise.
+    pub fn finish(&self) -> ErrorReport {
+        ErrorReport {
+            mred_pct: 100.0 * self.ared.mean(),
+            med: self.ed_abs.mean(),
+            max_error: self.ed_abs.max(),
+            std: self.ed_signed.std(),
+            mean_signed: self.ed_signed.mean(),
+            pairs: self.ed_abs.count(),
+        }
+    }
+}
+
+/// ARED percentile statistics (Table 3 columns).
+#[derive(Debug, Clone, Default)]
+pub struct PercentileReport {
+    /// Mean ARED, percent.
+    pub mean_pct: f64,
+    /// Median ARED, percent.
+    pub median_pct: f64,
+    /// 95th percentile, percent.
+    pub p95_pct: f64,
+    /// 99th percentile, percent.
+    pub p99_pct: f64,
+    /// Maximum ARED, percent.
+    pub max_pct: f64,
+}
+
+impl PercentileReport {
+    /// Build from a (not necessarily sorted) vector of ARED fractions.
+    pub fn from_areds(mut areds: Vec<f64>) -> Self {
+        use crate::util::stats::percentile_sorted;
+        assert!(!areds.is_empty());
+        areds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = areds.iter().sum::<f64>() / areds.len() as f64;
+        Self {
+            mean_pct: 100.0 * mean,
+            median_pct: 100.0 * percentile_sorted(&areds, 50.0),
+            p95_pct: 100.0 * percentile_sorted(&areds, 95.0),
+            p99_pct: 100.0 * percentile_sorted(&areds, 99.0),
+            max_pct: 100.0 * areds[areds.len() - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_multiplier_reports_zero_error() {
+        let mut b = ErrorReportBuilder::new();
+        for a in 1..100u64 {
+            for bb in 1..100u64 {
+                b.push(a * bb, a * bb);
+            }
+        }
+        let r = b.finish();
+        assert_eq!(r.mred_pct, 0.0);
+        assert_eq!(r.med, 0.0);
+        assert_eq!(r.max_error, 0.0);
+        assert_eq!(r.std, 0.0);
+    }
+
+    #[test]
+    fn known_constant_offset() {
+        // approx = exact + 10 always: MED = 10, std = 0, max = 10.
+        let mut b = ErrorReportBuilder::new();
+        for e in [100u64, 200, 400] {
+            b.push(e + 10, e);
+        }
+        let r = b.finish();
+        assert_eq!(r.med, 10.0);
+        assert_eq!(r.max_error, 10.0);
+        assert!(r.std.abs() < 1e-12);
+        assert!((r.mred_pct - 100.0 * (0.1 + 0.05 + 0.025) / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut whole = ErrorReportBuilder::new();
+        let mut a = ErrorReportBuilder::new();
+        let mut bb = ErrorReportBuilder::new();
+        for i in 1..500u64 {
+            let exact = i * 3;
+            let approx = exact + (i % 7);
+            whole.push(approx, exact);
+            if i < 250 {
+                a.push(approx, exact)
+            } else {
+                bb.push(approx, exact)
+            }
+        }
+        a.merge(&bb);
+        let (w, m) = (whole.finish(), a.finish());
+        assert!((w.mred_pct - m.mred_pct).abs() < 1e-10);
+        assert!((w.std - m.std).abs() < 1e-8);
+        assert_eq!(w.pairs, m.pairs);
+    }
+
+    #[test]
+    fn percentile_report_orders() {
+        let r = PercentileReport::from_areds(vec![0.01, 0.02, 0.03, 0.5]);
+        assert!(r.median_pct <= r.p95_pct);
+        assert!(r.p95_pct <= r.p99_pct);
+        assert!(r.p99_pct <= r.max_pct);
+        assert_eq!(r.max_pct, 50.0);
+    }
+}

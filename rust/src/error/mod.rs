@@ -1,0 +1,11 @@
+//! Error analysis (paper Sec. IV-A): ARED/MRED (Eq. 8), MED, Max-Error,
+//! Std, error histograms, and the operand-space sweep drivers (exhaustive
+//! for 8-bit, deterministic-sampled for 16-bit).
+
+mod histogram;
+mod metrics;
+mod sweep;
+
+pub use histogram::{ErrorHistogram, HistogramBin};
+pub use metrics::{ErrorReport, PercentileReport};
+pub use sweep::{exhaustive_sweep, percentile_sweep, sampled_sweep, sweep, SweepSpec};

@@ -1,0 +1,170 @@
+//! 45nm-style standard-cell library.
+//!
+//! Values follow the NanGate 45nm Open Cell Library's X1 drive cells
+//! (area from the datasheet geometry; delay/energy representative typical
+//! corner values). Absolute accuracy is *not* required — the global
+//! calibration in `designs.rs` pins the axes to the paper's Table 4 — but
+//! the relative gate costs (an XOR costs ~2 NANDs, a full adder ~6) drive
+//! the relative design costs, which is what the reproduction needs.
+
+/// A standard-cell gate class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Gate {
+    /// Inverter.
+    Inv,
+    /// 2-input NAND.
+    Nand2,
+    /// 2-input NOR.
+    Nor2,
+    /// 2-input AND.
+    And2,
+    /// 2-input OR.
+    Or2,
+    /// 2-input XOR.
+    Xor2,
+    /// 2:1 multiplexer.
+    Mux2,
+    /// Half adder.
+    Ha,
+    /// Full adder.
+    Fa,
+}
+
+/// Per-gate physical characteristics.
+#[derive(Debug, Clone, Copy)]
+pub struct GateParams {
+    /// Cell area, µm².
+    pub area_um2: f64,
+    /// Propagation delay, ns.
+    pub delay_ns: f64,
+    /// Switching energy per output toggle, fJ.
+    pub energy_fj: f64,
+}
+
+/// The library: indexed by [`Gate`].
+#[derive(Debug, Clone, Copy)]
+pub struct Library;
+
+/// The 45nm library instance.
+pub const LIB45: Library = Library;
+
+impl Library {
+    /// Look up a gate's parameters.
+    pub fn params(&self, g: Gate) -> GateParams {
+        // NanGate45 X1-ish figures (area exact per datasheet, timing/energy
+        // representative).
+        match g {
+            Gate::Inv => GateParams {
+                area_um2: 0.532,
+                delay_ns: 0.010,
+                energy_fj: 0.4,
+            },
+            Gate::Nand2 => GateParams {
+                area_um2: 0.798,
+                delay_ns: 0.014,
+                energy_fj: 0.6,
+            },
+            Gate::Nor2 => GateParams {
+                area_um2: 0.798,
+                delay_ns: 0.016,
+                energy_fj: 0.6,
+            },
+            Gate::And2 => GateParams {
+                area_um2: 1.064,
+                delay_ns: 0.020,
+                energy_fj: 0.8,
+            },
+            Gate::Or2 => GateParams {
+                area_um2: 1.064,
+                delay_ns: 0.020,
+                energy_fj: 0.8,
+            },
+            Gate::Xor2 => GateParams {
+                area_um2: 1.596,
+                delay_ns: 0.030,
+                energy_fj: 1.4,
+            },
+            Gate::Mux2 => GateParams {
+                area_um2: 1.862,
+                delay_ns: 0.024,
+                energy_fj: 1.1,
+            },
+            Gate::Ha => GateParams {
+                area_um2: 2.660,
+                delay_ns: 0.034,
+                energy_fj: 2.0,
+            },
+            Gate::Fa => GateParams {
+                area_um2: 4.522,
+                delay_ns: 0.050, // carry-out path
+                energy_fj: 3.4,
+            },
+        }
+    }
+}
+
+/// A bag of gate counts — the structural expansion of a component.
+#[derive(Debug, Clone, Default)]
+pub struct GateCounts {
+    counts: Vec<(Gate, u64)>,
+}
+
+impl GateCounts {
+    /// Empty bag.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `n` gates of a class.
+    pub fn add(&mut self, g: Gate, n: u64) -> &mut Self {
+        if n > 0 {
+            self.counts.push((g, n));
+        }
+        self
+    }
+
+    /// Total area, µm².
+    pub fn area(&self) -> f64 {
+        self.counts
+            .iter()
+            .map(|&(g, n)| LIB45.params(g).area_um2 * n as f64)
+            .sum()
+    }
+
+    /// Total switching energy at unit activity, fJ.
+    pub fn energy(&self) -> f64 {
+        self.counts
+            .iter()
+            .map(|&(g, n)| LIB45.params(g).energy_fj * n as f64)
+            .sum()
+    }
+
+    /// Total gate instances.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().map(|&(_, n)| n).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relative_gate_costs_sane() {
+        let inv = LIB45.params(Gate::Inv);
+        let xor = LIB45.params(Gate::Xor2);
+        let fa = LIB45.params(Gate::Fa);
+        assert!(xor.area_um2 > 2.0 * inv.area_um2);
+        assert!(fa.area_um2 > 2.0 * xor.area_um2);
+        assert!(fa.energy_fj > xor.energy_fj);
+    }
+
+    #[test]
+    fn gate_counts_accumulate() {
+        let mut g = GateCounts::new();
+        g.add(Gate::Fa, 10).add(Gate::And2, 5).add(Gate::Inv, 0);
+        assert_eq!(g.total(), 15);
+        assert!((g.area() - (10.0 * 4.522 + 5.0 * 1.064)).abs() < 1e-9);
+        assert!(g.energy() > 0.0);
+    }
+}

@@ -1,0 +1,51 @@
+//! # scaleTRIM — full-system reproduction
+//!
+//! Reproduction of *"scaleTRIM: Scalable TRuncation-Based Integer Approximate
+//! Multiplier with Linearization and Compensation"* (Farahmand et al., 2023).
+//!
+//! The crate is organised in layers:
+//!
+//! - [`multipliers`] — bit-accurate behavioural models of scaleTRIM and every
+//!   baseline the paper compares against (DRUM, DSM, TOSAM, Mitchell, MBM,
+//!   RoBA, LETAM, ILM, Mitchell-LODII, AXM8, SCDM8, MSAMZ, piecewise-linear,
+//!   EvoLib surrogates, exact).
+//! - [`lut`] — the offline calibration flow of Sec. III: zero-intercept
+//!   least-squares linearization (α, ΔEE) and the piecewise-constant
+//!   compensation LUT (C_i).
+//! - [`error`] — error metrics (MRED Eq. 8, MED, Max-Error, Std) and the
+//!   exhaustive / sampled operand-space sweeps.
+//! - [`hardware`] — a gate-level structural cost model (area, delay, power,
+//!   PDP) standing in for the paper's 45nm Synopsys flow.
+//! - [`dse`] — design-space exploration: config enumeration, Pareto fronts,
+//!   constraint queries.
+//! - [`nn`] — int8 CNN inference with approximate MACs (product-LUT driven),
+//!   dataset loading and accuracy evaluation.
+//! - [`runtime`] — PJRT wrapper: loads AOT-compiled HLO-text artifacts and
+//!   executes them on the CPU client.
+//! - [`coordinator`] — the serving layer: request router, dynamic batcher,
+//!   per-config queues, worker threads, metrics.
+//! - [`report`] — regenerates every table and figure of the paper's
+//!   evaluation with paper-vs-measured columns.
+//! - [`util`] — in-repo infrastructure (PRNG, stats, CLI, JSON, bench and
+//!   property-test rigs) because the build image is offline.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use scaletrim::multipliers::{ApproxMultiplier, ScaleTrim};
+//! let m = ScaleTrim::new(8, 3, 4); // 8-bit, h=3, M=4  (paper Fig. 7)
+//! assert_eq!(m.mul(48, 81), 4070); // exact product is 3888
+//! ```
+pub mod coordinator;
+pub mod dse;
+pub mod error;
+pub mod hardware;
+pub mod lut;
+pub mod multipliers;
+pub mod nn;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,172 @@
+//! Closed-form calibration — lifting the paper's 32-bit limitation.
+//!
+//! Sec. IV-C / VI: *"extending this investigation to 32-bit operands would
+//! provide additional insight, [but] the preprocessing required to compute
+//! the piecewise compensation values demands significant time and memory
+//! resources, making such an evaluation impractical."*
+//!
+//! It is practical. The per-class operand statistics that drive the whole
+//! calibration (`n_u`, `ΣX_u` — see `calib.rs`) have closed forms. For an
+//! operand width `N`, leading-one position `n` and truncated class `u`:
+//!
+//! - `n ≥ h`: the class contains `2^(n-h)` operands `v = 2^n + u·2^(n-h) + r`,
+//!   `r ∈ [0, 2^(n-h))`, each with `X = (u·2^(n-h) + r) / 2^n`, so
+//!   `ΣX = 2^(n-h)·u/2^h + (2^(n-h)-1)·2^(n-h)/(2·2^n)`.
+//! - `n < h`: classes are the zero-padded fractions `u = frac · 2^(h-n)`,
+//!   one operand each, `X = frac / 2^n`.
+//!
+//! Summing over `n ∈ [0, N)` gives the exact full-space statistics in
+//! `O(N · 2^h)` time and `O(2^h)` memory — a 32-bit calibration takes
+//! microseconds instead of the paper's "impractical" `O(4^N)` pair scan.
+
+use super::calib::{ScaleTrimParams, COMP_FRAC_BITS};
+
+/// Exact per-class statistics computed in closed form (no operand scan).
+pub fn analytic_classes(bits: u32, h: u32) -> (Vec<f64>, Vec<f64>) {
+    let classes = 1usize << h;
+    let mut count = vec![0f64; classes];
+    let mut sum_x = vec![0f64; classes];
+    for n in 0..bits {
+        if n >= h {
+            let block = (1u64 << (n - h)) as f64; // operands per class
+            let pow_n = (1u64 << n) as f64;
+            // ΣX over the block: block·u/2^h + (block−1)·block / (2·2^n)
+            for (u, (cnt, sx)) in count.iter_mut().zip(sum_x.iter_mut()).enumerate() {
+                *cnt += block;
+                *sx += block * u as f64 / classes as f64 + (block - 1.0) * block / (2.0 * pow_n);
+            }
+        } else {
+            // n < h: 2^n operands, each its own zero-padded class.
+            let pow_n = (1u64 << n) as f64;
+            for frac in 0..(1u64 << n) {
+                let u = (frac << (h - n)) as usize;
+                count[u] += 1.0;
+                sum_x[u] += frac as f64 / pow_n;
+            }
+        }
+    }
+    (count, sum_x)
+}
+
+/// Full closed-form calibration: identical math to [`super::calibrate`]
+/// but with analytic class statistics — valid for any width (8…64).
+pub fn calibrate_analytic(bits: u32, h: u32, m: u32) -> ScaleTrimParams {
+    assert!(h >= 2 && h <= 12 && bits >= 4 && bits <= 63);
+    assert!(m == 0 || m.is_power_of_two());
+    let (count, sum_x) = analytic_classes(bits, h);
+    let classes = 1usize << h;
+    let scale = (1u64 << h) as f64;
+
+    let mut sum_ts = 0f64;
+    let mut sum_ss = 0f64;
+    for u in 0..classes {
+        let (nu, sxu) = (count[u], sum_x[u]);
+        if nu == 0.0 {
+            continue;
+        }
+        for v in 0..classes {
+            let (nv, sxv) = (count[v], sum_x[v]);
+            let s = (u + v) as f64 / scale;
+            let sum_t = nv * sxu + nu * sxv + sxu * sxv;
+            sum_ts += s * sum_t;
+            sum_ss += s * s * nu * nv;
+        }
+    }
+    let alpha = sum_ts / sum_ss;
+    let delta_ee = (alpha - 1.0).log2().floor() as i32;
+    let gain = 1.0 + (delta_ee as f64).exp2();
+
+    let (c, c_fixed) = if m == 0 {
+        (Vec::new(), Vec::new())
+    } else {
+        let mut err_sum = vec![0f64; m as usize];
+        let mut err_cnt = vec![0f64; m as usize];
+        for u in 0..classes {
+            let (nu, sxu) = (count[u], sum_x[u]);
+            if nu == 0.0 {
+                continue;
+            }
+            for v in 0..classes {
+                let (nv, sxv) = (count[v], sum_x[v]);
+                let s_int = (u + v) as u64;
+                let s = s_int as f64 / scale;
+                let seg = (((s_int as u128 * m as u128) >> (h + 1)) as usize).min(m as usize - 1);
+                err_sum[seg] += nv * sxu + nu * sxv + sxu * sxv - gain * s * nu * nv;
+                err_cnt[seg] += nu * nv;
+            }
+        }
+        let c: Vec<f64> = err_sum
+            .iter()
+            .zip(&err_cnt)
+            .map(|(&e, &n)| if n > 0.0 { e / n } else { 0.0 })
+            .collect();
+        let q = (1u64 << COMP_FRAC_BITS) as f64;
+        let c_fixed = c.iter().map(|&x| (x * q).round() as i64).collect();
+        (c, c_fixed)
+    };
+    ScaleTrimParams {
+        bits,
+        h,
+        m,
+        alpha,
+        delta_ee,
+        c,
+        c_fixed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::calibrate;
+
+    #[test]
+    fn analytic_matches_scan_8bit() {
+        for h in [3u32, 5] {
+            for m in [0u32, 4, 8] {
+                let scan = calibrate(8, h, m);
+                let ana = calibrate_analytic(8, h, m);
+                assert!(
+                    (scan.alpha - ana.alpha).abs() < 1e-10,
+                    "h={h}: alpha {} vs {}",
+                    scan.alpha,
+                    ana.alpha
+                );
+                assert_eq!(scan.delta_ee, ana.delta_ee);
+                for (a, b) in scan.c.iter().zip(&ana.c) {
+                    assert!((a - b).abs() < 1e-10, "C: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn analytic_matches_scan_16bit() {
+        let scan = calibrate(16, 6, 8);
+        let ana = calibrate_analytic(16, 6, 8);
+        assert!((scan.alpha - ana.alpha).abs() < 1e-9);
+        for (a, b) in scan.c.iter().zip(&ana.c) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn thirty_two_bit_calibration_is_instant() {
+        // The paper's "impractical" case: full 32-bit calibration.
+        let t0 = std::time::Instant::now();
+        let p = calibrate_analytic(32, 6, 8);
+        assert!(t0.elapsed().as_millis() < 200, "took {:?}", t0.elapsed());
+        assert!(p.alpha > 1.0 && p.alpha < 2.0);
+        assert_eq!(p.c.len(), 8);
+        // α converges with width: the 32-bit value sits near the 16-bit one.
+        let p16 = calibrate_analytic(16, 6, 8);
+        assert!((p.alpha - p16.alpha).abs() < 0.02);
+    }
+
+    #[test]
+    fn class_counts_total_operand_space() {
+        let (count, _) = analytic_classes(12, 4);
+        let total: f64 = count.iter().sum();
+        assert_eq!(total as u64, (1u64 << 12) - 1, "all non-zero operands");
+    }
+}

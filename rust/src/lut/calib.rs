@@ -1,0 +1,345 @@
+//! Design-time calibration of scaleTRIM (Sec. III-A/B).
+//!
+//! The paper fits `X + Y + X·Y ≈ α (X_h + Y_h)` by zero-intercept least
+//! squares over the full operand space, rounds `α − 1` *down* to the nearest
+//! power of two (`ΔEE`), and then averages the residual Error Values per
+//! segment of `S = X_h + Y_h ∈ [0, 2)` to obtain the `M` compensation
+//! constants `C_i` (Eq. 4–7, Table 7).
+//!
+//! ## Exact class decomposition
+//!
+//! Brute-forcing all pairs is O(4^n) — hopeless for 16-bit and the reason the
+//! paper calls 32-bit calibration "impractical". We instead exploit that both
+//! the fit and the segment means only need *per-truncation-class* statistics:
+//! `t = X + Y + X·Y` and, for operands drawn independently,
+//!
+//! ```text
+//!   Σ_{a∈u, b∈v} t(a,b) = n_v·SX_u + n_u·SX_v + SX_u·SX_v
+//! ```
+//!
+//! where `n_u = |{a : X_h(a) = u}|` and `SX_u = Σ_{a∈u} X(a)`. One O(2^n)
+//! scan per operand plus O(4^h) class pairs gives the *exact* full-space
+//! calibration at any bit width — this also removes the paper's stated
+//! obstacle to 32-bit calibration (see DESIGN.md).
+
+use crate::multipliers::{leading_one, truncate_fraction};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Fraction bits used for the fixed-point datapath constants. The paper
+/// stores each compensation value in 16 bits; we carry the whole datapath at
+/// 16 fraction bits (Sec. III-B: "Each compensation value is represented
+/// using 16 bits").
+pub const COMP_FRAC_BITS: u32 = 16;
+
+/// Calibrated scaleTRIM(h, M) constants for one bit-width.
+#[derive(Debug, Clone)]
+pub struct ScaleTrimParams {
+    /// Operand bit-width.
+    pub bits: u32,
+    /// Truncation width.
+    pub h: u32,
+    /// Number of compensation segments (0 = no compensation).
+    pub m: u32,
+    /// Fitted slope α (Fig. 5a; ≈1.407 for 8-bit h=3).
+    pub alpha: f64,
+    /// `ΔEE = ⌊log2(α − 1)⌋` (Fig. 5b; −2 for 8-bit h=3).
+    pub delta_ee: i32,
+    /// Per-segment compensation constants C_i (empty when `m == 0`).
+    pub c: Vec<f64>,
+    /// C_i quantised to `COMP_FRAC_BITS` fixed point (datapath constants).
+    pub c_fixed: Vec<i64>,
+}
+
+impl ScaleTrimParams {
+    /// Segment index for a truncated sum `s_int` in units of `2^-h`
+    /// (hardware: the top ⌈log2 M⌉ bits of `X_h + Y_h`). `S ∈ [0, 2)` is
+    /// split into `M` uniform segments.
+    #[inline]
+    pub fn segment(&self, s_int: u64) -> usize {
+        debug_assert!(self.m > 0);
+        // s = s_int / 2^h ∈ [0, 2); segment = floor(s · M / 2).
+        // s_int < 2^(h+1) ≤ 2^13 and M ≤ 2^7, so u64 math suffices.
+        let idx = (s_int * self.m as u64) >> (self.h + 1);
+        (idx as usize).min(self.m as usize - 1)
+    }
+}
+
+/// Per-truncation-class operand statistics for one bit-width/h: class counts
+/// and fraction sums, computed in a single O(2^bits) scan.
+#[derive(Debug, Clone)]
+pub struct OperandClasses {
+    /// `n_u`: number of operands whose truncated fraction is `u`.
+    pub count: Vec<u64>,
+    /// `SX_u`: sum of exact fractions `X` over that class.
+    pub sum_x: Vec<f64>,
+    /// Truncation width used.
+    pub h: u32,
+}
+
+impl OperandClasses {
+    /// Scan all non-zero operands of the given width.
+    pub fn scan(bits: u32, h: u32) -> Self {
+        let classes = 1usize << h;
+        let mut count = vec![0u64; classes];
+        let mut sum_x = vec![0f64; classes];
+        for a in 1u64..(1u64 << bits) {
+            let n = leading_one(a);
+            let x = (a as f64) / (1u64 << n) as f64 - 1.0;
+            let u = truncate_fraction(a, n, h) as usize;
+            count[u] += 1;
+            sum_x[u] += x;
+        }
+        Self { count, sum_x, h }
+    }
+}
+
+/// Run the full calibration for `scaleTRIM(h, M)` at the given width.
+///
+/// `m == 0` produces linearization-only constants (the paper's ST(h,0) rows).
+pub fn calibrate(bits: u32, h: u32, m: u32) -> ScaleTrimParams {
+    assert!(h >= 1 && h <= 12, "h out of range");
+    assert!(m == 0 || m.is_power_of_two(), "M must be 0 or a power of two");
+    let cls = OperandClasses::scan(bits, h);
+    let classes = 1usize << h;
+    let scale = (1u64 << h) as f64;
+
+    // --- α fit: Σ t·s / Σ s² over all class pairs (exact; see module docs).
+    let mut sum_ts = 0f64;
+    let mut sum_ss = 0f64;
+    for u in 0..classes {
+        let (nu, sxu) = (cls.count[u] as f64, cls.sum_x[u]);
+        if nu == 0.0 {
+            continue;
+        }
+        for v in 0..classes {
+            let (nv, sxv) = (cls.count[v] as f64, cls.sum_x[v]);
+            if nv == 0.0 {
+                continue;
+            }
+            let s = (u + v) as f64 / scale;
+            let sum_t = nv * sxu + nu * sxv + sxu * sxv;
+            sum_ts += s * sum_t;
+            sum_ss += s * s * nu * nv;
+        }
+    }
+    let alpha = sum_ts / sum_ss;
+    // ΔEE: round α−1 *down* to the nearest power of two (Fig. 5b).
+    let delta_ee = (alpha - 1.0).log2().floor() as i32;
+    let gain = 1.0 + (delta_ee as f64).exp2();
+
+    // --- C_i: mean residual EV per segment of S = X_h + Y_h ∈ [0, 2).
+    let (c, c_fixed) = if m == 0 {
+        (Vec::new(), Vec::new())
+    } else {
+        let mut err_sum = vec![0f64; m as usize];
+        let mut err_cnt = vec![0f64; m as usize];
+        for u in 0..classes {
+            let (nu, sxu) = (cls.count[u] as f64, cls.sum_x[u]);
+            if nu == 0.0 {
+                continue;
+            }
+            for v in 0..classes {
+                let (nv, sxv) = (cls.count[v] as f64, cls.sum_x[v]);
+                if nv == 0.0 {
+                    continue;
+                }
+                let s_int = (u + v) as u64;
+                let s = s_int as f64 / scale;
+                let seg = ((s_int as u128 * m as u128) >> (h + 1)) as usize;
+                let seg = seg.min(m as usize - 1);
+                let sum_t = nv * sxu + nu * sxv + sxu * sxv;
+                // Σ EV over the class pair = Σ t − gain·s·(n_u·n_v)
+                err_sum[seg] += sum_t - gain * s * nu * nv;
+                err_cnt[seg] += nu * nv;
+            }
+        }
+        let c: Vec<f64> = err_sum
+            .iter()
+            .zip(&err_cnt)
+            .map(|(&e, &n)| if n > 0.0 { e / n } else { 0.0 })
+            .collect();
+        let q = (1u64 << COMP_FRAC_BITS) as f64;
+        let c_fixed = c.iter().map(|&x| (x * q).round() as i64).collect();
+        (c, c_fixed)
+    };
+
+    ScaleTrimParams {
+        bits,
+        h,
+        m,
+        alpha,
+        delta_ee,
+        c,
+        c_fixed,
+    }
+}
+
+/// The compensation constants the paper *publishes* in Table 7 (8-bit,
+/// h ∈ {3..6}, M ∈ {4, 8}), with ΔEE = −2 and α as Fig. 5 reports.
+///
+/// Our own full-space calibration ([`calibrate`]) reproduces the paper's
+/// *reported MRED* more closely than these printed constants do (e.g.
+/// ST(3,4): ours 3.734% vs paper 3.73%; Table-7 constants give 4.01%) —
+/// see EXPERIMENTS.md. The printed constants are kept for exact replays of
+/// the paper's worked example (Fig. 7) and Table 7 itself.
+pub fn paper_table7_params(h: u32, m: u32) -> Option<ScaleTrimParams> {
+    let c: &[f64] = match (h, m) {
+        (3, 4) => &[0.053, 0.050, 0.234, 0.468],
+        (3, 8) => &[0.073, 0.039, 0.032, 0.066, 0.182, 0.317, 0.468, 0.410],
+        (4, 4) => &[-0.015, -0.035, 0.114, 0.354],
+        (4, 8) => &[0.008, -0.028, -0.042, -0.030, 0.063, 0.190, 0.336, 0.467],
+        (5, 4) => &[-0.046, -0.073, 0.058, 0.301],
+        (5, 8) => &[-0.020, -0.058, -0.076, -0.071, 0.008, 0.132, 0.274, 0.412],
+        (6, 4) => &[-0.059, -0.089, 0.035, 0.277],
+        (6, 8) => &[-0.032, -0.070, -0.090, -0.088, -0.016, 0.106, 0.248, 0.387],
+        _ => return None,
+    };
+    let alpha = match h {
+        3 => 1.407,
+        4 => 1.331,
+        5 => 1.298,
+        6 => 1.284,
+        _ => unreachable!(),
+    };
+    let q = (1u64 << COMP_FRAC_BITS) as f64;
+    Some(ScaleTrimParams {
+        bits: 8,
+        h,
+        m,
+        alpha,
+        delta_ee: -2,
+        c: c.to_vec(),
+        c_fixed: c.iter().map(|&x| (x * q).round() as i64).collect(),
+    })
+}
+
+/// Process-wide calibration cache: DSE sweeps instantiate the same configs
+/// repeatedly and 16-bit scans are O(2^16) each.
+pub fn cached_params(bits: u32, h: u32, m: u32) -> ScaleTrimParams {
+    static CACHE: Mutex<Option<HashMap<(u32, u32, u32), ScaleTrimParams>>> = Mutex::new(None);
+    let mut guard = CACHE.lock().unwrap();
+    let map = guard.get_or_insert_with(HashMap::new);
+    map.entry((bits, h, m))
+        .or_insert_with(|| calibrate(bits, h, m))
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig. 5a: 8-bit, h=3 → α ≈ 1.407.
+    #[test]
+    fn alpha_matches_paper_h3() {
+        let p = calibrate(8, 3, 0);
+        assert!(
+            (p.alpha - 1.407).abs() < 0.02,
+            "alpha {} != paper 1.407",
+            p.alpha
+        );
+        assert_eq!(p.delta_ee, -2, "ΔEE should be -2 (Fig. 5b)");
+    }
+
+    /// Table 7, h=3 M=4 column: C ≈ [0.053, 0.050, 0.234, 0.468]. Our
+    /// full-space calibration lands close but not identical (the paper's
+    /// printed constants are *not* the ones that reproduce its reported
+    /// MRED — see EXPERIMENTS.md); shape and sign structure must agree.
+    #[test]
+    fn compensation_close_to_table7_h3_m4() {
+        let p = calibrate(8, 3, 4);
+        let paper = [0.053, 0.050, 0.234, 0.468];
+        for (i, (&ours, &theirs)) in p.c.iter().zip(paper.iter()).enumerate() {
+            assert!(
+                (ours - theirs).abs() < 0.08,
+                "C[{i}] = {ours:.3} vs paper {theirs}"
+            );
+        }
+        // Monotone increase from segment 1 upward, as in the paper.
+        assert!(p.c[1] < p.c[2] && p.c[2] < p.c[3]);
+    }
+
+    #[test]
+    fn paper_table7_constants_available() {
+        for h in 3..=6 {
+            for m in [4, 8] {
+                let p = paper_table7_params(h, m).unwrap();
+                assert_eq!(p.c.len(), m as usize);
+                assert_eq!(p.delta_ee, -2);
+            }
+        }
+        assert!(paper_table7_params(7, 4).is_none());
+    }
+
+    /// Brute-force cross-check of the class decomposition at a small width.
+    #[test]
+    fn class_decomposition_matches_bruteforce() {
+        let bits = 6;
+        let h = 2;
+        // brute force α
+        let mut sum_ts = 0f64;
+        let mut sum_ss = 0f64;
+        for a in 1u64..(1 << bits) {
+            for b in 1u64..(1 << bits) {
+                let na = leading_one(a);
+                let nb = leading_one(b);
+                let x = a as f64 / (1u64 << na) as f64 - 1.0;
+                let y = b as f64 / (1u64 << nb) as f64 - 1.0;
+                let s = (truncate_fraction(a, na, h) + truncate_fraction(b, nb, h)) as f64
+                    / (1u64 << h) as f64;
+                let t = x + y + x * y;
+                sum_ts += t * s;
+                sum_ss += s * s;
+            }
+        }
+        let alpha_bf = sum_ts / sum_ss;
+        let p = calibrate(bits, h, 0);
+        assert!(
+            (p.alpha - alpha_bf).abs() < 1e-9,
+            "decomposed {} vs brute {}",
+            p.alpha,
+            alpha_bf
+        );
+    }
+
+    #[test]
+    fn segment_indexing_covers_range() {
+        let p = calibrate(8, 3, 4);
+        // S ∈ [0,2) in units of 2^-3: s_int ∈ [0, 14]
+        assert_eq!(p.segment(0), 0);
+        assert_eq!(p.segment(3), 0); // s = 0.375
+        assert_eq!(p.segment(4), 1); // s = 0.5
+        assert_eq!(p.segment(6), 1); // s = 0.75 -> segment 1 (Fig. 7!)
+        assert_eq!(p.segment(8), 2); // s = 1.0
+        assert_eq!(p.segment(14), 3); // s = 1.75
+    }
+
+    #[test]
+    fn m0_has_no_lut() {
+        let p = calibrate(8, 4, 0);
+        assert!(p.c.is_empty() && p.c_fixed.is_empty());
+    }
+
+    #[test]
+    fn alpha_in_documented_range_for_all_h() {
+        // Paper: "the range of α is between 1 and 2" (h ≥ 2; a 1-bit
+        // truncation is outside the paper's evaluated set and fits α > 2).
+        for h in 2..=8 {
+            let p = calibrate(8, h, 0);
+            assert!(
+                p.alpha > 1.0 && p.alpha < 2.0,
+                "h={h}: alpha {} outside (1,2)",
+                p.alpha
+            );
+            assert!(p.delta_ee < 0);
+        }
+    }
+
+    #[test]
+    fn cache_returns_consistent_values() {
+        let a = cached_params(8, 3, 4);
+        let b = cached_params(8, 3, 4);
+        assert_eq!(a.alpha, b.alpha);
+        assert_eq!(a.c_fixed, b.c_fixed);
+    }
+}

@@ -1,0 +1,15 @@
+//! Offline calibration flow of Sec. III: linearization (α, ΔEE) and the
+//! piecewise-constant compensation LUT (C_i). Everything here runs at *design
+//! time* — the deployed multiplier only carries the resulting constants,
+//! exactly like the paper's hardwired LUT (Sec. III-D).
+
+mod analytic;
+mod calib;
+mod shared;
+
+pub use analytic::{analytic_classes, calibrate_analytic};
+pub use shared::{LutRegistry, SharedLut, SharingStats};
+pub use calib::{
+    cached_params, calibrate, paper_table7_params, OperandClasses, ScaleTrimParams,
+    COMP_FRAC_BITS,
+};

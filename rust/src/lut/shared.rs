@@ -1,0 +1,138 @@
+//! Shared compensation-LUT registry — the paper's Future Work §V, second
+//! direction: *"a centralized or shared LUT architecture, where multiple
+//! scaleTRIM units access common compensation data through lightweight
+//! indexing"*.
+//!
+//! Many scaleTRIM instances (e.g. one per MAC column of an accelerator)
+//! with the same (bits, h, M) share one calibrated table. The registry
+//! deduplicates the constants, hands out cheap `Arc` handles, and tracks
+//! how much storage the sharing saves — the area/memory benefit §V
+//! anticipates.
+
+use super::calib::{cached_params, ScaleTrimParams};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// One shared compensation table.
+#[derive(Debug)]
+pub struct SharedLut {
+    /// The calibrated constants.
+    pub params: ScaleTrimParams,
+}
+
+/// Registry statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SharingStats {
+    /// Distinct tables materialised.
+    pub distinct_tables: usize,
+    /// Total handles outstanding (instances served).
+    pub handles: usize,
+    /// Bytes a dedicated-LUT design would store (16-bit words × M × N).
+    pub dedicated_bytes: usize,
+    /// Bytes actually stored.
+    pub shared_bytes: usize,
+}
+
+impl SharingStats {
+    /// Fractional storage saving.
+    pub fn saving(&self) -> f64 {
+        if self.dedicated_bytes == 0 {
+            0.0
+        } else {
+            1.0 - self.shared_bytes as f64 / self.dedicated_bytes as f64
+        }
+    }
+}
+
+/// Process-wide shared-LUT registry.
+#[derive(Default)]
+pub struct LutRegistry {
+    tables: Mutex<HashMap<(u32, u32, u32), Arc<SharedLut>>>,
+    handles: Mutex<usize>,
+}
+
+impl LutRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Acquire the shared table for `(bits, h, m)`, calibrating on first
+    /// use.
+    pub fn acquire(&self, bits: u32, h: u32, m: u32) -> Arc<SharedLut> {
+        let mut t = self.tables.lock().unwrap();
+        *self.handles.lock().unwrap() += 1;
+        t.entry((bits, h, m))
+            .or_insert_with(|| {
+                Arc::new(SharedLut {
+                    params: cached_params(bits, h, m),
+                })
+            })
+            .clone()
+    }
+
+    /// Sharing statistics (each compensation word is 16 bits, Sec. III-B).
+    pub fn stats(&self) -> SharingStats {
+        let t = self.tables.lock().unwrap();
+        let handles = *self.handles.lock().unwrap();
+        let shared_bytes: usize = t.values().map(|l| l.params.c_fixed.len() * 2).sum();
+        // A dedicated design stores one table per handle.
+        let mut dedicated = 0usize;
+        for lut in t.values() {
+            let per = lut.params.c_fixed.len() * 2;
+            // handles are not tracked per-key; approximate by equal split.
+            dedicated += per;
+        }
+        let dedicated_bytes = if t.is_empty() {
+            0
+        } else {
+            dedicated / t.len() * handles
+        };
+        SharingStats {
+            distinct_tables: t.len(),
+            handles,
+            dedicated_bytes,
+            shared_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_dedupes() {
+        let reg = LutRegistry::new();
+        let a = reg.acquire(8, 3, 4);
+        let b = reg.acquire(8, 3, 4);
+        assert!(Arc::ptr_eq(&a, &b), "same key must share one table");
+        let c = reg.acquire(8, 4, 8);
+        assert!(!Arc::ptr_eq(&a, &c));
+        let s = reg.stats();
+        assert_eq!(s.distinct_tables, 2);
+        assert_eq!(s.handles, 3);
+    }
+
+    #[test]
+    fn sharing_saves_storage() {
+        let reg = LutRegistry::new();
+        for _ in 0..64 {
+            reg.acquire(8, 4, 8); // 64 MAC units, one config
+        }
+        let s = reg.stats();
+        assert_eq!(s.distinct_tables, 1);
+        assert_eq!(s.shared_bytes, 8 * 2);
+        assert_eq!(s.dedicated_bytes, 64 * 8 * 2);
+        assert!(s.saving() > 0.98, "saving {}", s.saving());
+    }
+
+    #[test]
+    fn shared_params_are_correct() {
+        let reg = LutRegistry::new();
+        let l = reg.acquire(8, 3, 4);
+        let direct = cached_params(8, 3, 4);
+        assert_eq!(l.params.c_fixed, direct.c_fixed);
+        assert_eq!(l.params.delta_ee, direct.delta_ee);
+    }
+}

@@ -1,0 +1,213 @@
+//! `scaletrim` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!
+//! - `repro --exp <id>`            regenerate a paper table/figure (or `all`)
+//! - `mul --config <name> A B`     one approximate multiplication, traced
+//! - `sweep --config <name>`       error metrics for one configuration
+//! - `lut-gen --h H --m M`         print calibration constants
+//! - `pareto [--bits 8|16]`        Pareto front of the design space
+//! - `infer --model <name>`        batch inference via PJRT on an artifact
+//! - `serve --model <name>`        run the batching coordinator demo
+//! - `list`                        list all registered configurations
+
+use scaletrim::coordinator::{BatchPolicy, Coordinator, PjrtBackend};
+use scaletrim::dse::{evaluate_all, pareto_front};
+use scaletrim::error::{sweep, SweepSpec};
+use scaletrim::hardware::estimate;
+// NOTE: no glob import — `multipliers::*` would pull in the `scaletrim`
+// *submodule*, shadowing the crate name.
+use scaletrim::multipliers::{
+    paper_configs_16bit, paper_configs_8bit, ApproxMultiplier, Exact, ScaleTrim,
+};
+use scaletrim::nn::{build_lut, exact_lut, Dataset};
+use scaletrim::runtime::{find_artifacts_dir, ArtifactSet};
+use scaletrim::util::cli::Args;
+use scaletrim::util::table::{f2, Table};
+use scaletrim::{lut, nn, report, runtime, Result};
+use std::sync::Arc;
+
+fn find_config(name: &str, bits: u32) -> Option<Box<dyn ApproxMultiplier>> {
+    let zoo = if bits == 16 {
+        paper_configs_16bit()
+    } else {
+        paper_configs_8bit()
+    };
+    let mut found = zoo.into_iter().find(|m| m.name() == name);
+    if found.is_none() && name.starts_with("Exact") {
+        found = Some(Box::new(Exact::new(bits)));
+    }
+    found
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "repro" => {
+            let exp = args.opt_or("exp", "all");
+            let fast = args.has_flag("fast");
+            report::run_experiment(&exp, fast)?;
+        }
+        "list" => {
+            let mut t = Table::new("registered 8-bit configurations", &["name", "bits"]);
+            for m in paper_configs_8bit() {
+                t.row(vec![m.name(), m.bits().to_string()]);
+            }
+            t.print();
+        }
+        "mul" => {
+            let bits = args.opt_parse_or("bits", 8u32);
+            let name = args.opt_or("config", "scaleTRIM(3,4)");
+            let a: u64 = args.positional.get(1).expect("usage: mul A B").parse()?;
+            let b: u64 = args.positional.get(2).expect("usage: mul A B").parse()?;
+            let m = find_config(&name, bits)
+                .ok_or_else(|| anyhow::anyhow!("unknown config {name:?} (try `list`)"))?;
+            let approx = m.mul(a, b);
+            let exact = a * b;
+            println!(
+                "{name}: {a} × {b} ≈ {approx}   (exact {exact}, error {:+}, ARED {:.3}%)",
+                approx as i64 - exact as i64,
+                if exact > 0 {
+                    100.0 * (approx as f64 - exact as f64).abs() / exact as f64
+                } else {
+                    0.0
+                }
+            );
+        }
+        "sweep" => {
+            let bits = args.opt_parse_or("bits", 8u32);
+            let name = args.opt_or("config", "scaleTRIM(3,4)");
+            let m = find_config(&name, bits)
+                .ok_or_else(|| anyhow::anyhow!("unknown config {name:?}"))?;
+            let r = sweep(m.as_ref(), SweepSpec::default_for(bits));
+            let hw = estimate(m.as_ref());
+            println!(
+                "{name} ({bits}-bit): MRED {:.3}%  MED {:.1}  Max {:.0}  Std {:.1}  ({} pairs)",
+                r.mred_pct, r.med, r.max_error, r.std, r.pairs
+            );
+            println!(
+                "hardware: area {:.1} µm², delay {:.2} ns, power {:.1} µW, PDP {:.1} fJ",
+                hw.area_um2, hw.delay_ns, hw.power_uw, hw.pdp_fj
+            );
+        }
+        "lut-gen" => {
+            let bits = args.opt_parse_or("bits", 8u32);
+            let h = args.opt_parse_or("h", 3u32);
+            let m = args.opt_parse_or("m", 4u32);
+            let p = lut::calibrate(bits, h, m);
+            println!(
+                "scaleTRIM({h},{m}) @ {bits}-bit: alpha = {:.4}, ΔEE = {}",
+                p.alpha, p.delta_ee
+            );
+            for (i, (c, cf)) in p.c.iter().zip(&p.c_fixed).enumerate() {
+                println!("  C[{i}] = {c:+.4}  (fixed {cf:+})");
+            }
+        }
+        "pareto" => {
+            let bits = args.opt_parse_or("bits", 8u32);
+            let zoo = if bits == 16 {
+                paper_configs_16bit()
+            } else {
+                paper_configs_8bit()
+            };
+            let points = evaluate_all(&zoo, SweepSpec::default_for(bits));
+            let front = pareto_front(&points, |p| (p.error.mred_pct, p.hw.pdp_fj));
+            let mut t = Table::new(
+                &format!("{bits}-bit Pareto front (MRED vs PDP)"),
+                &["config", "MRED%", "PDP fJ"],
+            );
+            for &i in &front {
+                t.row(vec![
+                    points[i].name.clone(),
+                    f2(points[i].error.mred_pct),
+                    f2(points[i].hw.pdp_fj),
+                ]);
+            }
+            t.print();
+        }
+        "infer" => {
+            let model = args.opt_or("model", "lenet");
+            let config = args.opt_or("config", "scaleTRIM(4,8)");
+            let limit = args.opt_parse_or("limit", 320usize);
+            let dir = find_artifacts_dir()?;
+            let set = ArtifactSet::resolve(&dir, &model)?;
+            let data = Dataset::load(&set.dataset)?;
+            let engine = runtime::Engine::cpu()?;
+            let loaded = engine.load_model(set.hlo.to_str().unwrap(), 32, data.n_classes)?;
+            let lut = if config == "exact" {
+                exact_lut()
+            } else {
+                let m = find_config(&config, 8)
+                    .ok_or_else(|| anyhow::anyhow!("unknown config {config:?}"))?;
+                build_lut(m.as_ref())
+            };
+            let t0 = std::time::Instant::now();
+            let r = nn::evaluate_accuracy_pjrt(&loaded, &data, &lut, Some(limit))?;
+            let dt = t0.elapsed();
+            println!(
+                "{model} × {config}: top1 {:.2}%  top5 {:.2}%  ({} images in {:.2?}, {:.0} img/s)",
+                100.0 * r.top1,
+                100.0 * r.top5,
+                r.n,
+                dt,
+                r.n as f64 / dt.as_secs_f64()
+            );
+        }
+        "serve" => {
+            let model = args.opt_or("model", "lenet");
+            let n_requests = args.opt_parse_or("requests", 1000usize);
+            let dir = find_artifacts_dir()?;
+            let set = ArtifactSet::resolve(&dir, &model)?;
+            let data = Dataset::load(&set.dataset)?;
+            let backend = Arc::new(PjrtBackend::spawn(
+                set.hlo.to_str().unwrap().to_string(),
+                32,
+                data.n_classes,
+                (data.c, data.h, data.w),
+            )?);
+            let exact = Exact::new(8);
+            let st48 = ScaleTrim::new(8, 4, 8);
+            let st34 = ScaleTrim::new(8, 3, 4);
+            let configs: Vec<&dyn ApproxMultiplier> = vec![&exact, &st48, &st34];
+            let coord = Coordinator::new(backend, &configs, BatchPolicy::default());
+            let lanes = ["Exact8", "scaleTRIM(4,8)", "scaleTRIM(3,4)"];
+            let t0 = std::time::Instant::now();
+            let mut pending = Vec::new();
+            for i in 0..n_requests {
+                let img = data.image(i % data.n).to_vec();
+                let lane = lanes[i % lanes.len()];
+                pending.push((i, coord.submit(lane, img)?.1));
+            }
+            let mut correct = 0usize;
+            for (i, rx) in pending {
+                let p = rx.recv()?;
+                if p.class == data.labels[i % data.n] as usize {
+                    correct += 1;
+                }
+            }
+            let dt = t0.elapsed();
+            println!(
+                "served {n_requests} requests across {} lanes in {dt:.2?} ({:.0} req/s), accuracy {:.1}%",
+                lanes.len(),
+                n_requests as f64 / dt.as_secs_f64(),
+                100.0 * correct as f64 / n_requests as f64
+            );
+            println!("{}", coord.metrics().summary());
+        }
+        _ => {
+            println!(
+                "scaletrim — scaleTRIM approximate-multiplier system reproduction\n\n\
+                 usage: scaletrim <repro|list|mul|sweep|lut-gen|pareto|infer|serve> [options]\n\
+                 examples:\n  \
+                 scaletrim repro --exp table4\n  \
+                 scaletrim mul --config 'scaleTRIM(3,4)' 48 81\n  \
+                 scaletrim sweep --config 'TOSAM(1,5)'\n  \
+                 scaletrim pareto --bits 16\n  \
+                 scaletrim infer --model lenet --config 'scaleTRIM(4,8)'\n  \
+                 scaletrim serve --model lenet --requests 2000"
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! AXM — recursive approximate multiplier for energy-efficient MAC units
+//! (Deepsita, Karthikeyan, Mahammad, Integration 2023; paper ref [22],
+//! configs AXM8-3 / AXM8-4 in Table 4).
+//!
+//! The recursive decomposition `A×B = AH·BH·2^n + (AH·BL + AL·BH)·2^(n/2)
+//! + AL·BL` is applied down to 2×2 blocks; approximate levels replace the
+//! exact 2×2 block with Kulkarni's underdesigned cell (the single error
+//! case `3×3 → 7`). `AXM8-3` approximates the lowest recursion level only;
+//! `AXM8-4` additionally drops the `AL·BL` sub-product of the top level
+//! (more aggressive, cheaper — matches the paper's MRED ordering
+//! 2.3 vs 8.7).
+
+use super::ApproxMultiplier;
+
+/// AXM8-k behavioural model (k ∈ {3, 4}).
+#[derive(Debug, Clone)]
+pub struct Axm {
+    bits: u32,
+    k: u32,
+}
+
+impl Axm {
+    /// New AXM; `k = 3` (approximate 2×2 cells) or `k = 4` (also drops the
+    /// low×low sub-product at the top level).
+    pub fn new(bits: u32, k: u32) -> Self {
+        assert!(k == 3 || k == 4);
+        assert!(bits.is_power_of_two() && bits >= 4);
+        Self { bits, k }
+    }
+
+    /// Kulkarni's approximate 2×2 cell: exact except 3×3 → 7.
+    #[inline]
+    fn mul2(a: u64, b: u64) -> u64 {
+        if a == 3 && b == 3 {
+            7
+        } else {
+            a * b
+        }
+    }
+
+    /// Recursive build from approximate 2×2 cells.
+    fn mul_rec(a: u64, b: u64, width: u32) -> u64 {
+        if width == 2 {
+            return Self::mul2(a, b);
+        }
+        let half = width / 2;
+        let mask = (1u64 << half) - 1;
+        let (ah, al) = (a >> half, a & mask);
+        let (bh, bl) = (b >> half, b & mask);
+        let hh = Self::mul_rec(ah, bh, half);
+        let hl = Self::mul_rec(ah, bl, half);
+        let lh = Self::mul_rec(al, bh, half);
+        let ll = Self::mul_rec(al, bl, half);
+        (hh << width) + ((hl + lh) << half) + ll
+    }
+}
+
+impl ApproxMultiplier for Axm {
+    fn name(&self) -> String {
+        format!("AXM{}-{}", self.bits, self.k)
+    }
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+    #[inline]
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        let w = self.bits;
+        if self.k == 3 {
+            Self::mul_rec(a, b, w)
+        } else {
+            // k = 4: drop AL·BL at the top level, keep approximate blocks
+            // elsewhere; compensate with the expected value of the dropped
+            // sub-product's MSB behaviour by OR-ing (cheap hardware).
+            let half = w / 2;
+            let mask = (1u64 << half) - 1;
+            let (ah, al) = (a >> half, a & mask);
+            let (bh, bl) = (b >> half, b & mask);
+            let hh = Self::mul_rec(ah, bh, half);
+            let hl = Self::mul_rec(ah, bl, half);
+            let lh = Self::mul_rec(al, bh, half);
+            let ll_approx = al | bl; // carry-free stand-in for AL·BL
+            (hh << w) + ((hl + lh) << half) + ll_approx
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::ApproxMultiplier;
+
+    fn mred(m: &dyn ApproxMultiplier) -> f64 {
+        let mut s = 0f64;
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                let e = (a * b) as f64;
+                s += ((m.mul(a, b) as f64 - e) / e).abs();
+            }
+        }
+        100.0 * s / (255.0 * 255.0)
+    }
+
+    #[test]
+    fn kulkarni_cell_single_error() {
+        for a in 0..4u64 {
+            for b in 0..4u64 {
+                let expect = if a == 3 && b == 3 { 7 } else { a * b };
+                assert_eq!(Axm::mul2(a, b), expect);
+            }
+        }
+    }
+
+    #[test]
+    fn k3_is_more_accurate_than_k4() {
+        // Table 4: AXM8-3 MRED 2.3, AXM8-4 MRED 8.7.
+        let m3 = mred(&Axm::new(8, 3));
+        let m4 = mred(&Axm::new(8, 4));
+        assert!(m3 < m4, "AXM-3 {m3:.2} !< AXM-4 {m4:.2}");
+        assert!(m3 < 4.5, "AXM-3 MRED {m3:.2} out of family (paper 2.3)");
+    }
+
+    #[test]
+    fn exact_when_no_threes_involved() {
+        // Operands whose 2-bit digits never form (3,3) multiply exactly
+        // under k=3.
+        let m = Axm::new(8, 3);
+        assert_eq!(m.mul(0b10101010, 0b01010101), 0b10101010 * 0b01010101);
+    }
+}

@@ -1,0 +1,46 @@
+//! Exact multiplier — the accuracy reference (`M_ACC` in Eq. 3) and the
+//! baseline row of Figs. 15/16 ("8-bit Accurate multiplier").
+
+use super::ApproxMultiplier;
+
+/// Exact `n`-bit unsigned multiplier.
+#[derive(Debug, Clone)]
+pub struct Exact {
+    bits: u32,
+}
+
+impl Exact {
+    /// New exact multiplier of width `bits`.
+    pub fn new(bits: u32) -> Self {
+        assert!(bits >= 2 && bits <= 32);
+        Self { bits }
+    }
+}
+
+impl ApproxMultiplier for Exact {
+    fn name(&self) -> String {
+        format!("Exact{}", self.bits)
+    }
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+    #[inline]
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        a * b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_is_exact() {
+        let m = Exact::new(8);
+        for a in 0..256u64 {
+            for b in (0..256u64).step_by(17) {
+                assert_eq!(m.mul(a, b), a * b);
+            }
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! ILM — Improved Logarithmic Multiplier for energy-efficient neural
+//! computing (Ansari, Cockburn, Han, IEEE TC 2021; paper refs [30, 36]).
+//!
+//! Mitchell's weakness is its one-sided error; ILM uses *nearest-one*
+//! detection (round each operand to the nearest power of two) so mantissas
+//! lie in `[-1/3, 1/2)` and errors straddle zero:
+//!
+//! ```text
+//!   A = 2^kA (1 + x),  x ∈ [-1/3, 1/2)
+//!   A×B ≈ 2^(kA+kB) (1 + x + y)
+//! ```
+//!
+//! `ILM-k` additionally truncates each mantissa magnitude to `k` fraction
+//! bits (`k = 0` means no truncation, the paper's ILM0).
+
+use super::{leading_one, ApproxMultiplier};
+
+/// ILM-k behavioural model.
+#[derive(Debug, Clone)]
+pub struct Ilm {
+    bits: u32,
+    k: u32,
+}
+
+const F: u32 = 24;
+
+impl Ilm {
+    /// New ILM; `k = 0` disables mantissa truncation, `k > 0` keeps `k`
+    /// fraction bits (paper's ILM5 keeps 5... of the *complement* path,
+    /// which costs accuracy — see Table 4: ILM5 MRED 9.51 vs ILM0 2.69).
+    pub fn new(bits: u32, k: u32) -> Self {
+        Self { bits, k }
+    }
+
+    /// Nearest-one characteristic and signed mantissa in 2^-F units.
+    #[inline]
+    fn decompose(&self, v: u64) -> (u32, i64) {
+        let n = leading_one(v);
+        let base = 1u64 << n;
+        // Nearest power of two: round up when v ≥ 1.5·2^n (integer compare).
+        let (k_char, x) = if 2 * v >= 3 * base && n + 1 < 64 {
+            let up = base << 1;
+            // x = v/2^(n+1) - 1 ∈ [-1/4, 0)
+            (n + 1, ((v as i64 - up as i64) << F) >> (n + 1))
+        } else {
+            (n, ((v as i64 - base as i64) << F) >> n)
+        };
+        let x = if self.k > 0 {
+            // Truncate mantissa magnitude to k fraction bits.
+            let q = F - self.k;
+            let mag = x.unsigned_abs() >> q << q;
+            if x < 0 {
+                -(mag as i64)
+            } else {
+                mag as i64
+            }
+        } else {
+            x
+        };
+        (k_char, x)
+    }
+}
+
+impl ApproxMultiplier for Ilm {
+    fn name(&self) -> String {
+        format!("ILM{}", self.k)
+    }
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+    #[inline]
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        if a == 0 || b == 0 {
+            return 0;
+        }
+        let (ka, x) = self.decompose(a);
+        let (kb, y) = self.decompose(b);
+        let term = (1i64 << F) + x + y;
+        if term <= 0 {
+            return 0;
+        }
+        ((term as u128) << (ka + kb) >> F) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::ApproxMultiplier;
+
+    fn mred(m: &dyn ApproxMultiplier) -> f64 {
+        let mut s = 0f64;
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                let e = (a * b) as f64;
+                s += ((m.mul(a, b) as f64 - e) / e).abs();
+            }
+        }
+        100.0 * s / (255.0 * 255.0)
+    }
+
+    #[test]
+    fn powers_of_two_exact() {
+        let m = Ilm::new(8, 0);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(m.mul(1 << i, 1 << j), 1u64 << (i + j));
+            }
+        }
+    }
+
+    #[test]
+    fn error_is_two_sided() {
+        // Unlike Mitchell, ILM must over- and under-estimate.
+        let m = Ilm::new(8, 0);
+        let mut over = false;
+        let mut under = false;
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                let p = m.mul(a, b);
+                over |= p > a * b;
+                under |= p < a * b;
+            }
+        }
+        assert!(over && under);
+    }
+
+    #[test]
+    fn ilm0_beats_mitchell() {
+        // Table 4: ILM0 2.69 vs Mitchell 3.76.
+        let ilm = mred(&Ilm::new(8, 0));
+        let mitchell = mred(&crate::multipliers::Mitchell::new(8));
+        assert!(ilm < mitchell, "ILM0 {ilm:.2} !< Mitchell {mitchell:.2}");
+        assert!((ilm - 2.69).abs() < 0.5, "ILM0 MRED {ilm:.2} vs paper 2.69");
+    }
+
+    #[test]
+    fn truncation_degrades() {
+        assert!(mred(&Ilm::new(8, 2)) > mred(&Ilm::new(8, 0)));
+    }
+}

@@ -1,0 +1,95 @@
+//! LETAM — Low-Energy Truncation-based Approximate Multiplier (Vahdat,
+//! Kamal, Afzali-Kusha, Pedram, C&EE 2017; paper ref [17]).
+//!
+//! Plain dynamic truncation: each operand keeps its `t` most significant
+//! bits from the leading one (no unbiasing bit — that is DRUM's addition),
+//! the reduced operands feed an exact `t×t` multiplier plus shifts.
+
+use super::{leading_one, ApproxMultiplier};
+
+/// LETAM(t) behavioural model.
+#[derive(Debug, Clone)]
+pub struct Letam {
+    bits: u32,
+    t: u32,
+}
+
+impl Letam {
+    /// New LETAM with window width `t`.
+    pub fn new(bits: u32, t: u32) -> Self {
+        assert!(t >= 2 && t <= bits);
+        Self { bits, t }
+    }
+
+    #[inline]
+    fn reduce(&self, v: u64) -> u64 {
+        if v == 0 {
+            return 0;
+        }
+        let n = leading_one(v);
+        let width = n + 1;
+        if width <= self.t {
+            v
+        } else {
+            let shift = width - self.t;
+            (v >> shift) << shift
+        }
+    }
+}
+
+impl ApproxMultiplier for Letam {
+    fn name(&self) -> String {
+        format!("LETAM({})", self.t)
+    }
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+    #[inline]
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        self.reduce(a) * self.reduce(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::ApproxMultiplier;
+
+    #[test]
+    fn always_underestimates() {
+        let m = Letam::new(8, 4);
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                assert!(m.mul(a, b) <= a * b);
+            }
+        }
+    }
+
+    #[test]
+    fn drum_beats_letam_on_mred() {
+        // DRUM's unbiasing bit is its whole point: at equal window width it
+        // must improve MRED over plain truncation.
+        let letam = Letam::new(8, 4);
+        let drum = crate::multipliers::Drum::new(8, 4);
+        let mut s_l = 0f64;
+        let mut s_d = 0f64;
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                let e = (a * b) as f64;
+                s_l += ((letam.mul(a, b) as f64 - e) / e).abs();
+                s_d += ((drum.mul(a, b) as f64 - e) / e).abs();
+            }
+        }
+        assert!(s_d < s_l, "DRUM {s_d} should beat LETAM {s_l}");
+    }
+
+    #[test]
+    fn small_values_exact() {
+        let m = Letam::new(8, 4);
+        for a in 0..16u64 {
+            for b in 0..16u64 {
+                assert_eq!(m.mul(a, b), a * b);
+            }
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Mitchell with approximate leading-one detection (Ansari, Gandhi,
+//! Cockburn, Han, IET CDT 2021; paper ref [37]) — "Mitchell_LODII" in
+//! Table 4.
+//!
+//! The fast/low-power LOD variants trade exactness of the leading-one
+//! *position* for a shorter critical path: in the inexact variants the
+//! position's least-significant bits are derived from coarse group signals
+//! and can round the position down within a group of `2^g`. We model
+//! `LODII-j` as: `j = 0` → exact LOD (their LODII with full correction);
+//! `j > 0` → the reported position is rounded down to a multiple of 2 when
+//! the true position is odd and the bit below the leading one is clear
+//! (the dominant error case of their group-based detectors).
+
+use super::{leading_one, ApproxMultiplier};
+
+/// Mitchell_LODII-j behavioural model.
+#[derive(Debug, Clone)]
+pub struct MitchellLodII {
+    bits: u32,
+    j: u32,
+}
+
+const F: u32 = 20;
+
+impl MitchellLodII {
+    /// New model; paper evaluates j ∈ {0, 4}.
+    pub fn new(bits: u32, j: u32) -> Self {
+        Self { bits, j }
+    }
+
+    /// Possibly-inexact LOD.
+    #[inline]
+    fn lod(&self, v: u64) -> u32 {
+        let n = leading_one(v);
+        if self.j == 0 {
+            return n;
+        }
+        // Group-based detector: odd positions whose lower neighbour bit is
+        // zero report the even position below (position under-estimation).
+        if n % 2 == 1 && n >= 1 && (v >> (n - 1)) & 1 == 0 {
+            n - 1
+        } else {
+            n
+        }
+    }
+}
+
+impl ApproxMultiplier for MitchellLodII {
+    fn name(&self) -> String {
+        format!("Mitchell_LODII_{}", self.j)
+    }
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+    #[inline]
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        if a == 0 || b == 0 {
+            return 0;
+        }
+        let na = self.lod(a);
+        let nb = self.lod(b);
+        // Mantissa relative to the (possibly wrong) detected position;
+        // clamp to < 2 as the datapath width would.
+        let mant = |v: u64, n: u32| -> u128 {
+            let x = (v as u128) << F >> n; // v / 2^n in 2^-F units, in [1,4)
+            (x - (1 << F)).min((2u128 << F) - 1) // x-1 clamped to [0,2)
+        };
+        let x = mant(a, na);
+        let y = mant(b, nb);
+        let s = x + y;
+        let one = 1u128 << F;
+        let res = if s < one {
+            ((one + s) << (na + nb)) >> F
+        } else {
+            (s << (na + nb + 1)) >> F
+        };
+        res as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::ApproxMultiplier;
+
+    fn mred(m: &dyn ApproxMultiplier) -> f64 {
+        let mut s = 0f64;
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                let e = (a * b) as f64;
+                s += ((m.mul(a, b) as f64 - e) / e).abs();
+            }
+        }
+        100.0 * s / (255.0 * 255.0)
+    }
+
+    #[test]
+    fn j0_equals_plain_mitchell() {
+        let lodii = MitchellLodII::new(8, 0);
+        let mitchell = crate::multipliers::Mitchell::new(8);
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                assert_eq!(lodii.mul(a, b), mitchell.mul(a, b), "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn inexact_lod_slightly_worse() {
+        // Table 4: LODII_0 3.81 vs LODII_4 4.12 — small, consistent gap.
+        let m0 = mred(&MitchellLodII::new(8, 0));
+        let m4 = mred(&MitchellLodII::new(8, 4));
+        assert!(m4 > m0, "j=4 {m4:.2} should be worse than j=0 {m0:.2}");
+        assert!(m4 - m0 < 1.5, "gap {:.2} too large", m4 - m0);
+    }
+}

@@ -1,0 +1,115 @@
+//! Mitchell's logarithmic multiplier (Mitchell, IRE Trans. EC 1962; paper
+//! ref [28]) — the classic `log2(1+x) ≈ x` approximation, reproduced here
+//! exactly as the paper's Sec. IV-D formulates it:
+//!
+//! ```text
+//!   log2(M_APP) = n_A + n_B + X + Y                       (Eq. 9)
+//!   M_APP = 2^(nA+nB) (1 + X + Y)        if X + Y < 1
+//!         = 2^(nA+nB+1) (X + Y)          if X + Y ≥ 1     (Eq. 10)
+//! ```
+//!
+//! The fixed-point datapath carries the mantissa sum at full precision
+//! (`bits-1` fraction bits per operand), matching a hardware implementation
+//! with no mantissa truncation.
+
+use super::{leading_one, ApproxMultiplier};
+
+/// Mitchell behavioural model.
+#[derive(Debug, Clone)]
+pub struct Mitchell {
+    bits: u32,
+}
+
+impl Mitchell {
+    /// New Mitchell multiplier of the given width.
+    pub fn new(bits: u32) -> Self {
+        Self { bits }
+    }
+}
+
+impl ApproxMultiplier for Mitchell {
+    fn name(&self) -> String {
+        "Mitchell".to_string()
+    }
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+    #[inline]
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        if a == 0 || b == 0 {
+            return 0;
+        }
+        let f = self.bits; // fraction bits of the datapath
+        let na = leading_one(a);
+        let nb = leading_one(b);
+        // X, Y in units of 2^-f.
+        let x = ((a - (1 << na)) as u128) << (f - na);
+        let y = ((b - (1 << nb)) as u128) << (f - nb);
+        let s = x + y;
+        let one = 1u128 << f;
+        let res = if s < one {
+            ((one + s) << (na + nb)) >> f
+        } else {
+            (s << (na + nb + 1)) >> f
+        };
+        res as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::ApproxMultiplier;
+
+    #[test]
+    fn powers_of_two_exact() {
+        let m = Mitchell::new(8);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(m.mul(1 << i, 1 << j), 1u64 << (i + j));
+            }
+        }
+    }
+
+    #[test]
+    fn always_underestimates() {
+        // Mitchell's error is one-sided: approx <= exact.
+        let m = Mitchell::new(8);
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                assert!(m.mul(a, b) <= a * b, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn mred_matches_paper() {
+        // Table 4: Mitchell MRED = 3.76 (8-bit).
+        let m = Mitchell::new(8);
+        let mut s = 0f64;
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                let e = (a * b) as f64;
+                s += ((m.mul(a, b) as f64 - e) / e).abs();
+            }
+        }
+        let mred = 100.0 * s / (255.0 * 255.0);
+        assert!((mred - 3.76).abs() < 0.2, "MRED {mred:.2} vs paper 3.76");
+    }
+
+    #[test]
+    fn max_error_matches_table5() {
+        // Table 5: Mitchell 8-bit max error distance = 4096.
+        let m = Mitchell::new(8);
+        let mut max_ed = 0u64;
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                max_ed = max_ed.max((a * b) - m.mul(a, b));
+            }
+        }
+        assert!(
+            (3500..=4200).contains(&max_ed),
+            "max ED {max_ed} vs paper 4096"
+        );
+    }
+}

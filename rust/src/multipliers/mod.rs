@@ -1,0 +1,244 @@
+//! Bit-accurate behavioural models of scaleTRIM and every baseline multiplier
+//! the paper compares against (Sec. II Table 1, Sec. IV Figs. 9–13).
+//!
+//! Every design implements [`ApproxMultiplier`]: an `n`-bit unsigned integer
+//! multiplier evaluated as `mul(a, b)` over `a, b ∈ [0, 2^n)`. Signed use is
+//! sign-magnitude wrapping (paper Sec. III-D); [`signed_mul`] provides it.
+//!
+//! The zoo (one module per design):
+//!
+//! | module | paper | family |
+//! |---|---|---|
+//! | [`scaletrim`] | this paper | truncation + linearization + LUT compensation |
+//! | [`drum`] | Hashemi'15 [11] | dynamic-range unbiased truncation |
+//! | [`dsm`] | Narayanamoorthy'15 [1] | static segment method |
+//! | [`tosam`] | Vahdat'19 [16] | truncation + rounding |
+//! | [`letam`] | Vahdat'17 [17] | truncation |
+//! | [`roba`] | Zendegani'17 [12] | rounding to powers of two |
+//! | [`mitchell`] | Mitchell'62 [28] | logarithmic |
+//! | [`mbm`] | Saadat'18 [7] | minimally-biased Mitchell |
+//! | [`ilm`] | Ansari'21 [36] | improved (nearest-one) logarithmic |
+//! | [`lodii`] | Ansari'21 [37] | Mitchell with approximate LOD |
+//! | [`axm`] | Deepsita'23 [22] | recursive approximate MAC |
+//! | [`scdm`] | Shakibhamedan'24 [19] | carry-disregard array |
+//! | [`msamz`] | Huang'24 [32] | MSB-guided shift-add |
+//! | [`piecewise`] | Imani'19 [18] / Sec. IV-D | piecewise linearization |
+//! | [`evolib`] | Mrazek'17 [31] | broken-array surrogates (see DESIGN.md) |
+
+pub mod axm;
+pub mod drum;
+pub mod dsm;
+pub mod evolib;
+pub mod exact;
+pub mod ilm;
+pub mod letam;
+pub mod lodii;
+pub mod mbm;
+pub mod mitchell;
+pub mod msamz;
+pub mod piecewise;
+pub mod roba;
+pub mod scaletrim;
+pub mod scdm;
+pub mod tosam;
+
+pub use axm::Axm;
+pub use drum::Drum;
+pub use dsm::Dsm;
+pub use evolib::EvoLibSurrogate;
+pub use exact::Exact;
+pub use ilm::Ilm;
+pub use letam::Letam;
+pub use lodii::MitchellLodII;
+pub use mbm::Mbm;
+pub use mitchell::Mitchell;
+pub use msamz::Msamz;
+pub use piecewise::PiecewiseLinear;
+pub use roba::Roba;
+pub use scaletrim::ScaleTrim;
+pub use scdm::Scdm;
+pub use tosam::Tosam;
+
+/// An `n`-bit unsigned approximate multiplier behavioural model.
+///
+/// Implementations must be pure (no interior mutability on the `mul` path) so
+/// sweeps can share one instance across threads.
+pub trait ApproxMultiplier: Send + Sync {
+    /// Display name, matching the paper's config labels (e.g. `scaleTRIM(3,4)`).
+    fn name(&self) -> String;
+
+    /// Operand bit-width `n`; `mul` accepts operands in `[0, 2^n)`.
+    fn bits(&self) -> u32;
+
+    /// Approximate product of two unsigned operands.
+    fn mul(&self, a: u64, b: u64) -> u64;
+
+    /// Exact product for reference (identical for every design).
+    fn exact(&self, a: u64, b: u64) -> u64 {
+        a * b
+    }
+}
+
+/// Position of the most significant set bit ("leading one"), i.e.
+/// `⌊log2 v⌋`. Panics in debug builds when `v == 0` — callers must apply the
+/// zero-detection bypass first, exactly like the hardware (Fig. 8a).
+#[inline]
+pub fn leading_one(v: u64) -> u32 {
+    debug_assert!(v != 0, "leading_one(0): zero-detect must run first");
+    63 - v.leading_zeros()
+}
+
+/// Sign-magnitude wrapper for signed×signed use (paper Sec. III-D, refs
+/// [11, 35]): multiply magnitudes with the unsigned design, restore the sign.
+pub fn signed_mul(m: &dyn ApproxMultiplier, a: i64, b: i64) -> i64 {
+    let sign = (a < 0) ^ (b < 0);
+    let p = m.mul(a.unsigned_abs(), b.unsigned_abs()) as i64;
+    if sign {
+        -p
+    } else {
+        p
+    }
+}
+
+/// Truncate the sub-leading-one fraction of operand `v` (leading one at
+/// `n`) to `h` bits, zero-padding on the right when fewer than `h` fraction
+/// bits exist (paper Sec. III-D truncation unit). Returns `X_h` as an
+/// integer in units of `2^-h`.
+#[inline]
+pub fn truncate_fraction(v: u64, n: u32, h: u32) -> u64 {
+    let frac = v & ((1u64 << n) - 1); // bits below the leading one
+    if n >= h {
+        frac >> (n - h)
+    } else {
+        frac << (h - n)
+    }
+}
+
+/// All 8-bit configurations evaluated in the paper's Fig. 9 / Table 4, in
+/// paper order. The central registry used by the DSE and repro harnesses.
+pub fn paper_configs_8bit() -> Vec<Box<dyn ApproxMultiplier>> {
+    let bits = 8;
+    let mut v: Vec<Box<dyn ApproxMultiplier>> = Vec::new();
+    for k in 1..=5 {
+        v.push(Box::new(Mbm::new(bits, k)));
+    }
+    v.push(Box::new(Mitchell::new(bits)));
+    for m in 3..=7 {
+        v.push(Box::new(Dsm::new(bits, m)));
+    }
+    for m in 3..=7 {
+        v.push(Box::new(Drum::new(bits, m)));
+    }
+    for (t, h) in [
+        (0, 2),
+        (1, 2),
+        (0, 3),
+        (1, 3),
+        (2, 3),
+        (0, 4),
+        (1, 4),
+        (2, 4),
+        (3, 4),
+        (0, 5),
+        (1, 5),
+        (2, 5),
+        (3, 5),
+        (0, 6),
+        (2, 6),
+        (2, 7),
+        (3, 7),
+    ] {
+        v.push(Box::new(Tosam::new(bits, t, h)));
+    }
+    for h in 2..=7 {
+        for m in [0, 4, 8] {
+            v.push(Box::new(ScaleTrim::new(bits, h, m)));
+        }
+    }
+    for k in 1..=4 {
+        v.push(Box::new(EvoLibSurrogate::new(bits, k)));
+    }
+    v.push(Box::new(Ilm::new(bits, 0)));
+    v.push(Box::new(Ilm::new(bits, 5)));
+    v.push(Box::new(Axm::new(bits, 4)));
+    v.push(Box::new(Axm::new(bits, 3)));
+    v.push(Box::new(MitchellLodII::new(bits, 0)));
+    v.push(Box::new(MitchellLodII::new(bits, 4)));
+    v.push(Box::new(Scdm::new(bits, 4)));
+    v.push(Box::new(Scdm::new(bits, 6)));
+    v.push(Box::new(Msamz::new(bits, 4, 4)));
+    v
+}
+
+/// Representative 16-bit configurations (paper Fig. 10).
+pub fn paper_configs_16bit() -> Vec<Box<dyn ApproxMultiplier>> {
+    let bits = 16;
+    let mut v: Vec<Box<dyn ApproxMultiplier>> = Vec::new();
+    v.push(Box::new(Mitchell::new(bits)));
+    for k in 1..=4 {
+        v.push(Box::new(Mbm::new(bits, k)));
+    }
+    for m in 3..=8 {
+        v.push(Box::new(Drum::new(bits, m)));
+    }
+    for m in 4..=8 {
+        v.push(Box::new(Dsm::new(bits, m)));
+    }
+    for (t, h) in [(0, 3), (1, 3), (2, 4), (3, 5), (1, 6), (2, 6), (3, 7)] {
+        v.push(Box::new(Tosam::new(bits, t, h)));
+    }
+    for h in 3..=8 {
+        for m in [0, 4, 8] {
+            v.push(Box::new(ScaleTrim::new(bits, h, m)));
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leading_one_positions() {
+        assert_eq!(leading_one(1), 0);
+        assert_eq!(leading_one(2), 1);
+        assert_eq!(leading_one(3), 1);
+        assert_eq!(leading_one(128), 7);
+        assert_eq!(leading_one(255), 7);
+        assert_eq!(leading_one(48), 5);
+        assert_eq!(leading_one(81), 6);
+    }
+
+    #[test]
+    fn truncate_fraction_pads_and_cuts() {
+        // 48 = 0b110000, n=5, fraction 0.10000 -> h=3 keeps 0b100 (= 0.5)
+        assert_eq!(truncate_fraction(48, 5, 3), 0b100);
+        // 81 = 0b1010001, n=6, fraction 0.010001 -> h=3 keeps 0b010 (= 0.25)
+        assert_eq!(truncate_fraction(81, 6, 3), 0b010);
+        // 3 = 0b11, n=1: single fraction bit, h=3 pads 0b1 -> 0b100
+        assert_eq!(truncate_fraction(3, 1, 3), 0b100);
+        // exactly a power of two: fraction is zero
+        assert_eq!(truncate_fraction(64, 6, 3), 0);
+    }
+
+    #[test]
+    fn signed_mul_signs() {
+        let m = Exact::new(8);
+        assert_eq!(signed_mul(&m, -3, 5), -15);
+        assert_eq!(signed_mul(&m, -3, -5), 15);
+        assert_eq!(signed_mul(&m, 3, 5), 15);
+        assert_eq!(signed_mul(&m, 0, -5), 0);
+    }
+
+    #[test]
+    fn registry_nonempty_and_unique_names() {
+        let zoo = paper_configs_8bit();
+        assert!(zoo.len() > 40, "expected full 8-bit zoo, got {}", zoo.len());
+        let mut names: Vec<String> = zoo.iter().map(|m| m.name()).collect();
+        names.sort();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(before, names.len(), "duplicate config names in registry");
+    }
+}

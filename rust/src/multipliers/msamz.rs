@@ -1,0 +1,114 @@
+//! MSAMZ — Most Significant one-driven Approximate Multiplier (Huang, Gong,
+//! Chen, Wang, Electronics 2024; paper ref [32]).
+//!
+//! The operand space is partitioned by an approximation factor `k` and a
+//! precision factor `m`: the `m` bits below the most-significant one are
+//! kept exact, the next `k` bits are approximated with the *one-dominating*
+//! strategy (the partial products of that region are replaced by the
+//! bitwise OR of the contributing operand bits — cheap, biased-high), and
+//! anything below is dropped.
+
+use super::{leading_one, ApproxMultiplier};
+
+/// MSAMZ(k, m) behavioural model (one-dominating variant with
+/// compensation).
+#[derive(Debug, Clone)]
+pub struct Msamz {
+    bits: u32,
+    k: u32,
+    m: u32,
+}
+
+impl Msamz {
+    /// New MSAMZ with approximation factor `k` and precision factor `m`.
+    pub fn new(bits: u32, k: u32, m: u32) -> Self {
+        assert!(m >= 1 && m + k <= 2 * bits);
+        Self { bits, k, m }
+    }
+
+    /// Split an operand into the exact high window (m bits incl. the
+    /// leading one region) and the one-dominated approximate tail.
+    #[inline]
+    fn windows(&self, v: u64) -> (u64, u64, u32) {
+        let n = leading_one(v);
+        let width = n + 1;
+        if width <= self.m {
+            return (v, 0, 0);
+        }
+        let shift = width - self.m;
+        (v >> shift, v & ((1u64 << shift) - 1), shift)
+    }
+}
+
+impl ApproxMultiplier for Msamz {
+    fn name(&self) -> String {
+        format!("MSAMZ({},{})", self.k, self.m)
+    }
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        if a == 0 || b == 0 {
+            return 0;
+        }
+        let (ah, al, sa) = self.windows(a);
+        let (bh, bl, sb) = self.windows(b);
+        // Exact product of the high windows (an m×m multiplier).
+        let hh = (ah * bh) << (sa + sb);
+        // One-dominating approximation of the cross terms: the tails are
+        // OR-compressed into their top k bits and multiplied by the high
+        // windows (shift-add in hardware).
+        let compress = |tail: u64, shift: u32| -> u64 {
+            if shift == 0 || self.k == 0 {
+                return 0;
+            }
+            let keep = self.k.min(shift);
+            tail >> (shift - keep) << (shift - keep)
+        };
+        let al_c = compress(al, sa);
+        let bl_c = compress(bl, sb);
+        let cross = (ah * bl_c) << sa | (bh * al_c) << sb;
+        hh + cross
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::ApproxMultiplier;
+
+    fn mred(m: &dyn ApproxMultiplier) -> f64 {
+        let mut s = 0f64;
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                let e = (a * b) as f64;
+                s += ((m.mul(a, b) as f64 - e) / e).abs();
+            }
+        }
+        100.0 * s / (255.0 * 255.0)
+    }
+
+    #[test]
+    fn small_operands_exact() {
+        let m = Msamz::new(8, 4, 4);
+        for a in 1..16u64 {
+            for b in 1..16u64 {
+                assert_eq!(m.mul(a, b), a * b);
+            }
+        }
+    }
+
+    #[test]
+    fn precision_factor_controls_accuracy() {
+        let coarse = mred(&Msamz::new(8, 2, 3));
+        let fine = mred(&Msamz::new(8, 2, 6));
+        assert!(fine < coarse, "{fine} !< {coarse}");
+    }
+
+    #[test]
+    fn in_published_family_range() {
+        // The MSAMZ paper's 8-bit points sit in the ~1–10% MRED band.
+        let got = mred(&Msamz::new(8, 4, 4));
+        assert!(got < 10.0, "MSAMZ(4,4) MRED {got:.2} out of family");
+    }
+}

@@ -1,0 +1,104 @@
+//! RoBA — Rounding-Based Approximate multiplier (Zendegani et al., TVLSI
+//! 2017; paper ref [12]).
+//!
+//! Operands are rounded to the nearest power of two (`A_r`, `B_r`); the
+//! product is rewritten so every remaining multiplication involves a power
+//! of two (pure shifts):
+//!
+//! ```text
+//!   A×B ≈ A_r·B + A·B_r − A_r·B_r
+//! ```
+
+use super::{leading_one, ApproxMultiplier};
+
+/// RoBA behavioural model.
+#[derive(Debug, Clone)]
+pub struct Roba {
+    bits: u32,
+}
+
+impl Roba {
+    /// New RoBA of the given width.
+    pub fn new(bits: u32) -> Self {
+        Self { bits }
+    }
+
+    /// Round to the nearest power of two (ties toward the larger, as the
+    /// RoBA hardware's `A ≥ 1.5·2^n` comparison does).
+    #[inline]
+    fn round_pow2(v: u64) -> u64 {
+        if v == 0 {
+            return 0;
+        }
+        let n = leading_one(v);
+        let base = 1u64 << n;
+        // threshold 1.5·2^n, compared as 2v ≥ 3·2^n to stay in integers
+        if 2 * v >= 3 * base {
+            base << 1
+        } else {
+            base
+        }
+    }
+}
+
+impl ApproxMultiplier for Roba {
+    fn name(&self) -> String {
+        "RoBA".to_string()
+    }
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+    #[inline]
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        if a == 0 || b == 0 {
+            return 0;
+        }
+        let ar = Self::round_pow2(a);
+        let br = Self::round_pow2(b);
+        // ar·b + a·br − ar·br; all terms are shifts of b, a, and ar.
+        let sum = ar * b + a * br;
+        let sub = ar * br;
+        sum.saturating_sub(sub)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::ApproxMultiplier;
+
+    #[test]
+    fn exact_when_either_is_power_of_two() {
+        // If A = A_r the identity collapses to A·B exactly.
+        let m = Roba::new(8);
+        for i in 0..8 {
+            let a = 1u64 << i;
+            for b in 1..256u64 {
+                assert_eq!(m.mul(a, b), a * b, "a=2^{i} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn rounding_thresholds() {
+        assert_eq!(Roba::round_pow2(5), 4); // 5 < 6
+        assert_eq!(Roba::round_pow2(6), 8); // 6 >= 6
+        assert_eq!(Roba::round_pow2(191), 128); // < 192
+        assert_eq!(Roba::round_pow2(192), 256);
+    }
+
+    #[test]
+    fn mred_reasonable() {
+        // RoBA's published 8-bit MRED is ~3–4%; sanity-bound ours.
+        let m = Roba::new(8);
+        let mut s = 0f64;
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                let e = (a * b) as f64;
+                s += ((m.mul(a, b) as f64 - e) / e).abs();
+            }
+        }
+        let mred = 100.0 * s / (255.0 * 255.0);
+        assert!(mred < 6.0, "RoBA MRED {mred:.2} out of family");
+    }
+}

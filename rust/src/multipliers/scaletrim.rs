@@ -1,0 +1,242 @@
+//! scaleTRIM(h, M) — the paper's proposed multiplier (Sec. III).
+//!
+//! Datapath, mirroring the hardware of Fig. 8:
+//!
+//! 1. **Zero detection** — either operand zero forces a zero output.
+//! 2. **LOD** — leading-one positions `n_A`, `n_B`.
+//! 3. **Truncation** — `X_h`, `Y_h`: top `h` fraction bits below the leading
+//!    one, zero-padded when fewer exist.
+//! 4. **Shift-Add approximation** — `S = X_h + Y_h`;
+//!    `lin = S + 2^ΔEE·S` realised as one add plus one hardwired shift.
+//! 5. **Compensation** — LUT constant `C_i` selected by the top ⌈log2 M⌉
+//!    bits of `S`, added in (16-bit constants, Sec. III-B).
+//! 6. **Output shift** — result = `2^(n_A+n_B) · (1 + lin + C_i)`, computed
+//!    in fixed point with `COMP_FRAC_BITS` fraction bits and truncated like
+//!    the hardware.
+//!
+//! Constants (α, ΔEE, C_i) come from the design-time calibration in
+//! [`crate::lut`]; they are cached process-wide.
+
+use super::{leading_one, truncate_fraction, ApproxMultiplier};
+use crate::lut::{cached_params, ScaleTrimParams, COMP_FRAC_BITS};
+
+/// scaleTRIM(h, M) behavioural model at a given bit-width.
+#[derive(Debug, Clone)]
+pub struct ScaleTrim {
+    bits: u32,
+    params: ScaleTrimParams,
+}
+
+impl ScaleTrim {
+    /// Construct (and calibrate, on first use per `(bits, h, M)`) a
+    /// scaleTRIM instance. `m == 0` disables compensation (paper ST(h,0)).
+    pub fn new(bits: u32, h: u32, m: u32) -> Self {
+        assert!(bits >= 4 && bits <= 24, "supported widths: 4..=24");
+        assert!(h >= 2 && h < bits, "h must be >= 2 (ΔEE fit needs α < 2)");
+        Self {
+            bits,
+            params: cached_params(bits, h, m),
+        }
+    }
+
+    /// Construct from externally supplied constants (used by tests and by
+    /// the artifact-export path; skips calibration).
+    pub fn with_params(bits: u32, params: ScaleTrimParams) -> Self {
+        Self { bits, params }
+    }
+
+    /// Calibrated constants (α, ΔEE, C_i).
+    pub fn params(&self) -> &ScaleTrimParams {
+        &self.params
+    }
+
+    /// Truncation width h.
+    pub fn h(&self) -> u32 {
+        self.params.h
+    }
+
+    /// Segment count M (0 = no compensation).
+    pub fn m(&self) -> u32 {
+        self.params.m
+    }
+}
+
+impl ApproxMultiplier for ScaleTrim {
+    fn name(&self) -> String {
+        format!("scaleTRIM({},{})", self.params.h, self.params.m)
+    }
+
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    #[inline]
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < (1u64 << self.bits) && b < (1u64 << self.bits));
+        // (1) zero-detection bypass (Fig. 8a).
+        if a == 0 || b == 0 {
+            return 0;
+        }
+        let h = self.params.h;
+        const F: u32 = COMP_FRAC_BITS;
+
+        // (2) LOD.
+        let na = leading_one(a);
+        let nb = leading_one(b);
+
+        // (3) truncation to X_h, Y_h (units of 2^-h).
+        let xh = truncate_fraction(a, na, h);
+        let yh = truncate_fraction(b, nb, h);
+        let s = xh + yh; // S = X_h + Y_h, units 2^-h, in [0, 2)
+
+        // (4) shift-add approximation in F-bit fixed point:
+        //     term = 1 + S + 2^ΔEE·S   (one adder + one hardwired shift).
+        let s_f = (s as i64) << (F - h); // S in units of 2^-F
+        let shift = (F as i32 - h as i32 + self.params.delta_ee) as u32;
+        let scaled = (s as i64) << shift; // 2^ΔEE·S (ΔEE<0 folds into the shift)
+        let mut term = (1i64 << F) + s_f + scaled;
+
+        // (5) LUT compensation (selected by the MSBs of S).
+        if self.params.m > 0 {
+            term += self.params.c_fixed[self.params.segment(s)];
+        }
+
+        // (6) output shift by n_A + n_B, truncating the F fraction bits.
+        // (§Perf note: a u64 fast path for the final shift measured neutral
+        // to slightly negative — reverted; the u128 shift is not the
+        // bottleneck. See EXPERIMENTS.md §Perf iteration log.)
+        let total = (term as u128) << (na + nb);
+        (total >> F) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig. 7: 8-bit scaleTRIM(3,4) with the paper's Table-7 constants,
+    /// A=48, B=81 → exactly 4070 (exact product 3888). This pins the whole
+    /// fixed-point datapath bit-for-bit against the paper's worked example.
+    #[test]
+    fn fig7_worked_example_paper_constants() {
+        let params = crate::lut::paper_table7_params(3, 4).unwrap();
+        let m = ScaleTrim::with_params(8, params);
+        let approx = m.mul(48, 81);
+        assert_eq!(
+            approx, 4070,
+            "Fig. 7 expects 4070 (got {approx}); exact is {}",
+            48 * 81
+        );
+    }
+
+    /// Same example with our own calibration: must stay in the same
+    /// neighbourhood (the constants differ slightly; see EXPERIMENTS.md).
+    #[test]
+    fn fig7_with_own_calibration_close() {
+        let m = ScaleTrim::new(8, 3, 4);
+        let approx = m.mul(48, 81);
+        assert!(
+            (3950..=4150).contains(&approx),
+            "48*81 ~ 4070 expected, got {approx}"
+        );
+    }
+
+    #[test]
+    fn zero_bypass() {
+        let m = ScaleTrim::new(8, 3, 4);
+        for v in 0..256u64 {
+            assert_eq!(m.mul(0, v), 0);
+            assert_eq!(m.mul(v, 0), 0);
+        }
+    }
+
+    #[test]
+    fn commutative_by_construction() {
+        let m = ScaleTrim::new(8, 4, 8);
+        for a in 1..256u64 {
+            for b in a..256u64 {
+                assert_eq!(m.mul(a, b), m.mul(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn powers_of_two_near_exact_without_compensation() {
+        // X = Y = 0 -> approx = 2^(na+nb) exactly for M=0.
+        let m = ScaleTrim::new(8, 3, 0);
+        for i in 0..8 {
+            for j in 0..8 {
+                let (a, b) = (1u64 << i, 1u64 << j);
+                assert_eq!(m.mul(a, b), a * b, "2^{i} * 2^{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn result_fits_double_width() {
+        let m = ScaleTrim::new(8, 5, 8);
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                let p = m.mul(a, b);
+                // bounded by 2^(na+nb) * (1 + ~2 + C) < 4 * 2^14 = 2^16 * ...
+                assert!(p < 1 << 18, "a={a} b={b} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn mred_improves_with_h_and_m() {
+        // Coarse monotonicity on the full 8-bit space: accuracy should
+        // improve (MRED drop) with larger h, and with M at fixed h.
+        let mred = |h: u32, m: u32| -> f64 {
+            let mult = ScaleTrim::new(8, h, m);
+            let mut sum = 0.0;
+            let mut n = 0u64;
+            for a in 1..256u64 {
+                for b in 1..256u64 {
+                    let exact = (a * b) as f64;
+                    sum += ((mult.mul(a, b) as f64 - exact) / exact).abs();
+                    n += 1;
+                }
+            }
+            100.0 * sum / n as f64
+        };
+        let m34 = mred(3, 4);
+        let m30 = mred(3, 0);
+        let m54 = mred(5, 4);
+        assert!(m34 < m30, "compensation should help: {m34} !< {m30}");
+        assert!(m54 < m34, "larger h should help: {m54} !< {m34}");
+    }
+
+    /// Paper Table 4 anchors. For h=3 our calibration matches the paper's
+    /// reported MRED within 0.2 pp; for h ≥ 4 our constants are strictly
+    /// *better* than the paper's reported numbers (see EXPERIMENTS.md), so
+    /// the assertion is match-or-beat with a small matching slack.
+    #[test]
+    fn table4_mred_anchors() {
+        let anchors = [
+            (3u32, 0u32, 5.75f64),
+            (3, 4, 3.73),
+            (3, 8, 3.53),
+            (4, 8, 3.34),
+            (5, 8, 2.12),
+        ];
+        for (h, m, paper) in anchors {
+            let mult = ScaleTrim::new(8, h, m);
+            let mut sum = 0.0;
+            let mut n = 0u64;
+            for a in 1..256u64 {
+                for b in 1..256u64 {
+                    let exact = (a * b) as f64;
+                    sum += ((mult.mul(a, b) as f64 - exact) / exact).abs();
+                    n += 1;
+                }
+            }
+            let mred = 100.0 * sum / n as f64;
+            assert!(
+                mred <= paper + 0.35,
+                "scaleTRIM({h},{m}): MRED {mred:.2} should be <= paper {paper} (+slack)"
+            );
+        }
+    }
+}

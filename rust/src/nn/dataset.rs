@@ -1,0 +1,119 @@
+//! STDS dataset loader (written by `python/compile/dataset.py`).
+//!
+//! Layout (LE): magic `STDS`, u32 n, c, h, w, n_classes, then `n*c*h*w` u8
+//! pixels, then `n` u8 labels.
+
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::Path;
+
+/// A loaded test split.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Number of images.
+    pub n: usize,
+    /// Channels.
+    pub c: usize,
+    /// Height.
+    pub h: usize,
+    /// Width.
+    pub w: usize,
+    /// Number of classes.
+    pub n_classes: usize,
+    /// Pixels, `[n][c][h][w]` row-major.
+    pub pixels: Vec<u8>,
+    /// Labels, `[n]`.
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    /// Load from an STDS file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let raw = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&raw)
+    }
+
+    /// Parse STDS bytes.
+    pub fn parse(raw: &[u8]) -> Result<Self> {
+        if raw.len() < 24 || &raw[0..4] != b"STDS" {
+            bail!("not an STDS file");
+        }
+        let rd = |i: usize| -> usize {
+            u32::from_le_bytes(raw[4 + 4 * i..8 + 4 * i].try_into().unwrap()) as usize
+        };
+        let (n, c, h, w, n_classes) = (rd(0), rd(1), rd(2), rd(3), rd(4));
+        let npix = n * c * h * w;
+        if raw.len() != 24 + npix + n {
+            bail!(
+                "STDS size mismatch: expected {} bytes, got {}",
+                24 + npix + n,
+                raw.len()
+            );
+        }
+        let pixels = raw[24..24 + npix].to_vec();
+        let labels = raw[24 + npix..].to_vec();
+        if let Some(&bad) = labels.iter().find(|&&l| l as usize >= n_classes) {
+            bail!("label {bad} out of range (classes = {n_classes})");
+        }
+        Ok(Self {
+            n,
+            c,
+            h,
+            w,
+            n_classes,
+            pixels,
+            labels,
+        })
+    }
+
+    /// One image's pixels.
+    pub fn image(&self, i: usize) -> &[u8] {
+        let sz = self.c * self.h * self.w;
+        &self.pixels[i * sz..(i + 1) * sz]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        let (n, c, h, w, k) = (2u32, 1u32, 2u32, 2u32, 3u32);
+        let mut raw = b"STDS".to_vec();
+        for v in [n, c, h, w, k] {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        raw.extend_from_slice(&[10, 20, 30, 40, 50, 60, 70, 80]); // pixels
+        raw.extend_from_slice(&[0, 2]); // labels
+        raw
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let d = Dataset::parse(&sample()).unwrap();
+        assert_eq!((d.n, d.c, d.h, d.w, d.n_classes), (2, 1, 2, 2, 3));
+        assert_eq!(d.image(1), &[50, 60, 70, 80]);
+        assert_eq!(d.labels, vec![0, 2]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut raw = sample();
+        raw[0] = b'X';
+        assert!(Dataset::parse(&raw).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let raw = sample();
+        assert!(Dataset::parse(&raw[..raw.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_label() {
+        let mut raw = sample();
+        let last = raw.len() - 1;
+        raw[last] = 9;
+        assert!(Dataset::parse(&raw).is_err());
+    }
+}

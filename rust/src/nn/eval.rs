@@ -1,0 +1,161 @@
+//! Accuracy evaluation (Figs. 15/16): top-1 / top-5 over a test split, on
+//! either execution path. Parallel over images on the pure-rust path.
+
+use super::dataset::Dataset;
+use super::infer::{argmax, QuantizedCnn};
+use crate::runtime::LoadedModel;
+use crate::Result;
+
+/// Accuracy over a test split.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AccuracyReport {
+    /// Top-1 accuracy in [0, 1].
+    pub top1: f64,
+    /// Top-5 accuracy in [0, 1] (== top1 when n_classes <= 5).
+    pub top5: f64,
+    /// Images evaluated.
+    pub n: usize,
+}
+
+/// Evaluate on the pure-rust interpreter path (parallel across images).
+pub fn evaluate_accuracy(
+    model: &QuantizedCnn,
+    data: &Dataset,
+    lut: &[i32],
+    limit: Option<usize>,
+) -> AccuracyReport {
+    let n = limit.unwrap_or(data.n).min(data.n);
+    let nthreads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(n.max(1));
+    let chunk = n.div_ceil(nthreads);
+    let mut hits1 = 0usize;
+    let mut hits5 = 0usize;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..nthreads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                continue;
+            }
+            handles.push(scope.spawn(move || {
+                let (mut h1, mut h5) = (0usize, 0usize);
+                for i in lo..hi {
+                    let label = data.labels[i] as usize;
+                    let top = model.predict_topk(data.image(i), lut, 5);
+                    if top.first() == Some(&label) {
+                        h1 += 1;
+                    }
+                    if top.contains(&label) {
+                        h5 += 1;
+                    }
+                }
+                (h1, h5)
+            }));
+        }
+        for h in handles {
+            let (h1, h5) = h.join().expect("eval worker panicked");
+            hits1 += h1;
+            hits5 += h5;
+        }
+    });
+    AccuracyReport {
+        top1: hits1 as f64 / n as f64,
+        top5: hits5 as f64 / n as f64,
+        n,
+    }
+}
+
+/// Evaluate on the PJRT path: batches of the artifact's fixed batch size
+/// (the tail that does not fill a batch is dropped, matching aot.py's
+/// `quantized_accuracy`).
+pub fn evaluate_accuracy_pjrt(
+    model: &LoadedModel,
+    data: &Dataset,
+    lut: &[i32],
+    limit: Option<usize>,
+) -> Result<AccuracyReport> {
+    let b = model.batch;
+    let n = (limit.unwrap_or(data.n).min(data.n) / b) * b;
+    let img_sz = data.c * data.h * data.w;
+    let shape = [b, data.c, data.h, data.w];
+    let mut hits1 = 0usize;
+    let mut hits5 = 0usize;
+    for start in (0..n).step_by(b) {
+        let mut pixels = Vec::with_capacity(b * img_sz);
+        for i in start..start + b {
+            pixels.extend(data.image(i).iter().map(|&p| p as i32));
+        }
+        let logits = model.run(&pixels, &shape, lut)?;
+        for i in 0..b {
+            let row = &logits[i * model.n_classes..(i + 1) * model.n_classes];
+            let label = data.labels[start + i] as usize;
+            if argmax(row) == label {
+                hits1 += 1;
+            }
+            let mut idx: Vec<usize> = (0..row.len()).collect();
+            idx.sort_by_key(|&j| std::cmp::Reverse(row[j]));
+            if idx[..5.min(idx.len())].contains(&label) {
+                hits5 += 1;
+            }
+        }
+    }
+    Ok(AccuracyReport {
+        top1: hits1 as f64 / n as f64,
+        top5: hits5 as f64 / n as f64,
+        n,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::lut::exact_lut;
+    use crate::nn::weights::{Layer, QuantizedWeights};
+
+    /// A 2-class model that predicts class 0 iff pixel0 > pixel1.
+    fn comparator_model() -> QuantizedCnn {
+        QuantizedCnn::new(QuantizedWeights {
+            in_c: 1,
+            in_h: 1,
+            in_w: 2,
+            n_classes: 2,
+            layers: vec![Layer::Fc {
+                n_in: 2,
+                n_out: 2,
+                w: vec![1, -1, -1, 1],
+                bias: vec![0, 0],
+                m_q: 0,
+                final_layer: true,
+            }],
+        })
+    }
+
+    fn comparator_data() -> Dataset {
+        Dataset {
+            n: 4,
+            c: 1,
+            h: 1,
+            w: 2,
+            n_classes: 2,
+            pixels: vec![9, 1, 1, 9, 200, 100, 3, 250],
+            labels: vec![0, 1, 0, 1],
+        }
+    }
+
+    #[test]
+    fn perfect_model_scores_one() {
+        let r = evaluate_accuracy(&comparator_model(), &comparator_data(), &exact_lut(), None);
+        assert_eq!(r.top1, 1.0);
+        assert_eq!(r.top5, 1.0);
+        assert_eq!(r.n, 4);
+    }
+
+    #[test]
+    fn limit_truncates() {
+        let r = evaluate_accuracy(&comparator_model(), &comparator_data(), &exact_lut(), Some(2));
+        assert_eq!(r.n, 2);
+    }
+}

@@ -1,0 +1,259 @@
+//! Pure-rust quantized CNN interpreter — mirrors `python/compile/model.py`
+//! bit-for-bit (same im2col order, same int64 fixed-point requant, same
+//! clamps), so its logits must equal the PJRT path's exactly. Used to
+//! cross-check the HLO numerics and to evaluate multiplier configurations
+//! without a PJRT client.
+
+use super::weights::{Layer, QuantizedWeights};
+
+/// A quantized CNN bound to loaded weights.
+#[derive(Debug, Clone)]
+pub struct QuantizedCnn {
+    weights: QuantizedWeights,
+}
+
+impl QuantizedCnn {
+    /// Wrap loaded weights.
+    pub fn new(weights: QuantizedWeights) -> Self {
+        Self { weights }
+    }
+
+    /// Input geometry `(c, h, w)`.
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        (self.weights.in_c, self.weights.in_h, self.weights.in_w)
+    }
+
+    /// Number of classes.
+    pub fn n_classes(&self) -> usize {
+        self.weights.n_classes
+    }
+
+    /// Forward one image (`[c*h*w]` u8 pixels) through the model with the
+    /// given product LUT; returns `n_classes` int32 logits.
+    pub fn forward(&self, image: &[u8], lut: &[i32]) -> Vec<i32> {
+        debug_assert_eq!(lut.len(), 256 * 256);
+        let (c0, h0, w0) = self.input_shape();
+        debug_assert_eq!(image.len(), c0 * h0 * w0);
+        // Activations carried as u8 planes [c][h][w].
+        let mut act: Vec<u8> = image.to_vec();
+        let (mut c, mut h, mut w) = (c0, h0, w0);
+        for layer in &self.weights.layers {
+            match layer {
+                Layer::Conv {
+                    out_c,
+                    in_c,
+                    kh,
+                    kw,
+                    w: wq,
+                    bias,
+                    m_q,
+                    pool,
+                } => {
+                    debug_assert_eq!(*in_c, c);
+                    debug_assert_eq!((*kh, *kw), (3, 3));
+                    // Scatter-form convolution (§Perf L3 optimization, see
+                    // EXPERIMENTS.md): iterate input activations once, cache
+                    // the activation's 256-entry LUT row, and scatter its
+                    // contribution to the 9 neighbouring output pixels of
+                    // every output channel. ~2× over the gather form: one
+                    // LUT row per activation instead of one random 64 KiB
+                    // lookup per MAC.
+                    let mut acc32 = vec![0i32; out_c * h * w];
+                    for (oc, acc_plane) in acc32.chunks_mut(h * w).enumerate() {
+                        let b = bias[oc];
+                        acc_plane.fill(b);
+                    }
+                    for ic in 0..*in_c {
+                        for y in 0..h {
+                            for x in 0..w {
+                                let a = act[ic * h * w + y * w + x] as usize;
+                                if a == 0 {
+                                    // lut[0][*] is the zero row for every
+                                    // multiplier (zero-detect) — skip.
+                                    continue;
+                                }
+                                let lrow = &lut[a * 256..a * 256 + 256];
+                                for oc in 0..*out_c {
+                                    let kbase = (oc * in_c + ic) * 9;
+                                    let plane = oc * h * w;
+                                    // Output pixel (y-ki+1, x-kj+1) sees this
+                                    // activation through weight tap (ki, kj).
+                                    for ki in 0..3usize {
+                                        let yy = y + 1;
+                                        if yy < ki || yy - ki >= h {
+                                            continue;
+                                        }
+                                        let oy = yy - ki;
+                                        let krow = kbase + ki * 3;
+                                        for kj in 0..3usize {
+                                            let xx = x + 1;
+                                            if xx < kj || xx - kj >= w {
+                                                continue;
+                                            }
+                                            let ox = xx - kj;
+                                            let wv = wq[krow + kj] as i32;
+                                            let p = lrow[(wv + 128) as usize];
+                                            let cell = &mut acc32[plane + oy * w + ox];
+                                            *cell = cell.wrapping_add(p);
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    let mut out = vec![0u8; out_c * h * w];
+                    for (o, &a) in out.iter_mut().zip(&acc32) {
+                        *o = requant(a, *m_q);
+                    }
+                    act = out;
+                    c = *out_c;
+                    if *pool {
+                        let (nh, nw) = (h / 2, w / 2);
+                        let mut pooled = vec![0u8; c * nh * nw];
+                        for ch in 0..c {
+                            for y in 0..nh {
+                                for x in 0..nw {
+                                    let mut m = 0u8;
+                                    for dy in 0..2 {
+                                        for dx in 0..2 {
+                                            m = m.max(
+                                                act[ch * h * w + (2 * y + dy) * w + (2 * x + dx)],
+                                            );
+                                        }
+                                    }
+                                    pooled[ch * nh * nw + y * nw + x] = m;
+                                }
+                            }
+                        }
+                        act = pooled;
+                        h = nh;
+                        w = nw;
+                    }
+                }
+                Layer::Fc {
+                    n_in,
+                    n_out,
+                    w: wq,
+                    bias,
+                    m_q,
+                    final_layer,
+                } => {
+                    debug_assert_eq!(*n_in, c * h * w);
+                    let mut logits = vec![0i32; *n_out];
+                    for (o, logit) in logits.iter_mut().enumerate() {
+                        let mut acc: i32 = bias[o];
+                        for (i, &a) in act.iter().enumerate() {
+                            let wv = wq[i * n_out + o] as i32;
+                            acc = acc.wrapping_add(lut[a as usize * 256 + (wv + 128) as usize]);
+                        }
+                        *logit = acc;
+                    }
+                    if *final_layer {
+                        return logits;
+                    }
+                    act = logits.iter().map(|&v| requant(v, *m_q)).collect();
+                    c = *n_out;
+                    h = 1;
+                    w = 1;
+                }
+            }
+        }
+        unreachable!("model has no final layer");
+    }
+
+    /// Argmax class of one image.
+    pub fn predict(&self, image: &[u8], lut: &[i32]) -> usize {
+        let logits = self.forward(image, lut);
+        argmax(&logits)
+    }
+
+    /// Top-k classes (descending logit order).
+    pub fn predict_topk(&self, image: &[u8], lut: &[i32], k: usize) -> Vec<usize> {
+        let logits = self.forward(image, lut);
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        idx.sort_by_key(|&i| std::cmp::Reverse(logits[i]));
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// Fixed-point requantization with folded ReLU — identical to model.py's
+/// `_requant`: `clip((acc·m_q + 2^15) >> 16, 0, 255)` in int64.
+#[inline]
+pub fn requant(acc: i32, m_q: u32) -> u8 {
+    let y = (acc as i64 * m_q as i64 + (1 << 15)) >> 16;
+    y.clamp(0, 255) as u8
+}
+
+/// First-maximum argmax (ties resolve to the lowest index, matching
+/// `jnp.argmax`).
+pub fn argmax(v: &[i32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate().skip(1) {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::lut::exact_lut;
+    use crate::nn::weights::Layer;
+
+    fn identity_model() -> QuantizedCnn {
+        // One final FC 4 -> 2 with hand weights: logits = W^T a + b.
+        QuantizedCnn::new(QuantizedWeights {
+            in_c: 1,
+            in_h: 2,
+            in_w: 2,
+            n_classes: 2,
+            layers: vec![Layer::Fc {
+                n_in: 4,
+                n_out: 2,
+                w: vec![1, 0, 0, 1, 1, 0, 0, 1], // [4][2] row-major
+                bias: vec![10, -10],
+                m_q: 0,
+                final_layer: true,
+            }],
+        })
+    }
+    use crate::nn::weights::QuantizedWeights;
+
+    #[test]
+    fn fc_forward_hand_computed() {
+        let m = identity_model();
+        let lut = exact_lut();
+        let logits = m.forward(&[1, 2, 3, 4], &lut);
+        // col0 weights [1,0,1,0] -> 1*1+3*1 + 10 = 14
+        // col1 weights [0,1,0,1] -> 2*1+4*1 - 10 = -4
+        assert_eq!(logits, vec![14, -4]);
+        assert_eq!(m.predict(&[1, 2, 3, 4], &lut), 0);
+    }
+
+    #[test]
+    fn requant_semantics() {
+        assert_eq!(requant(-5, 65536), 0); // ReLU folds in
+        assert_eq!(requant(100, 65536), 100); // identity scale
+        assert_eq!(requant(1000, 65536), 255); // saturate
+        assert_eq!(requant(100, 32768), 50); // halving
+        // rounding: 3 * 0.5 = 1.5 -> 2 (round half up)
+        assert_eq!(requant(3, 32768), 2);
+    }
+
+    #[test]
+    fn argmax_tie_lowest_index() {
+        assert_eq!(argmax(&[5, 9, 9, 1]), 1);
+        assert_eq!(argmax(&[-3]), 0);
+    }
+
+    #[test]
+    fn topk_ordering() {
+        let m = identity_model();
+        let lut = exact_lut();
+        let top = m.predict_topk(&[1, 2, 3, 4], &lut, 2);
+        assert_eq!(top, vec![0, 1]);
+    }
+}

@@ -1,0 +1,81 @@
+//! Product-LUT generation: folds any behavioural multiplier into the
+//! 256×256 signed table the DNN path consumes (both the PJRT artifact and
+//! the pure-rust interpreter take it as input).
+//!
+//! `lut[a_u8 * 256 + (w_i8 + 128)] = sign(w) · mul(|w|, a)` — activations
+//! are unsigned (post-ReLU uint8), weights signed int8; sign-magnitude
+//! wrapping per paper Sec. III-D.
+
+use crate::multipliers::ApproxMultiplier;
+
+/// Build the signed product LUT for a multiplier model.
+pub fn build_lut(m: &dyn ApproxMultiplier) -> Vec<i32> {
+    let mut lut = vec![0i32; 256 * 256];
+    for a in 0..256u64 {
+        for w in -128i64..128 {
+            let p = if a == 0 || w == 0 {
+                0
+            } else {
+                let mag = m.mul(w.unsigned_abs(), a) as i64;
+                if w < 0 {
+                    -mag
+                } else {
+                    mag
+                }
+            };
+            lut[(a as usize) * 256 + (w + 128) as usize] = p as i32;
+        }
+    }
+    lut
+}
+
+/// Exact product LUT (the accurate-multiplier baseline of Figs. 15/16).
+pub fn exact_lut() -> Vec<i32> {
+    let mut lut = vec![0i32; 256 * 256];
+    for a in 0..256i32 {
+        for w in -128i32..128 {
+            lut[(a as usize) * 256 + (w + 128) as usize] = a * w;
+        }
+    }
+    lut
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::{Exact, ScaleTrim};
+
+    #[test]
+    fn exact_lut_is_products() {
+        let lut = exact_lut();
+        assert_eq!(lut[10 * 256 + (5 + 128)], 50);
+        assert_eq!(lut[10 * 256 + (-5i32 + 128) as usize], -50);
+        assert_eq!(lut[255 * 256], 255 * -128);
+    }
+
+    #[test]
+    fn build_lut_of_exact_equals_exact_lut() {
+        assert_eq!(build_lut(&Exact::new(8)), exact_lut());
+    }
+
+    #[test]
+    fn scaletrim_lut_antisymmetric_in_weight_sign() {
+        let lut = build_lut(&ScaleTrim::new(8, 3, 4));
+        for a in [1usize, 37, 200, 255] {
+            for w in 1usize..128 {
+                let pos = lut[a * 256 + (128 + w)];
+                let neg = lut[a * 256 + (128 - w)];
+                assert_eq!(pos, -neg, "a={a} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rows_and_cols() {
+        let lut = build_lut(&ScaleTrim::new(8, 4, 8));
+        for i in 0..256 {
+            assert_eq!(lut[i], 0, "a=0 row");
+            assert_eq!(lut[i * 256 + 128], 0, "w=0 col");
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! DNN evaluation stack (paper Sec. IV-E): int8-quantized CNN inference
+//! with every MAC multiply routed through an approximate-multiplier
+//! product LUT. Two execution paths produce identical numerics:
+//!
+//! - the AOT/PJRT path (`runtime::LoadedModel`) — the production path;
+//! - a pure-rust interpreter (`infer`) that mirrors `python/compile/model.py`
+//!   bit-for-bit, used to cross-check the HLO numerics and to evaluate
+//!   configurations without loading PJRT.
+
+mod dataset;
+mod eval;
+mod infer;
+mod lut;
+mod weights;
+
+pub use dataset::Dataset;
+pub use eval::{evaluate_accuracy, evaluate_accuracy_pjrt, AccuracyReport};
+pub use infer::{argmax, QuantizedCnn};
+pub use lut::{build_lut, exact_lut};
+pub use weights::{Layer, QuantizedWeights};

@@ -1,0 +1,225 @@
+//! STWT quantized-weights loader (written by `python/compile/quantize.py`).
+//!
+//! Layout (LE): magic `STWT`, u32 c, h, w, n_classes, n_layers; per layer:
+//! u8 kind (0 conv / 1 fc), u8 pool, u8 final, u8 pad, u32 d0..d3,
+//! u32 m_q, i8 weights, i32 bias.
+
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::Path;
+
+/// One quantized layer.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    /// 3×3 SAME conv (+ReLU via requant), optional 2×2 maxpool after.
+    Conv {
+        /// Output channels.
+        out_c: usize,
+        /// Input channels.
+        in_c: usize,
+        /// Kernel dims (always 3×3 in the shipped models).
+        kh: usize,
+        /// Kernel width.
+        kw: usize,
+        /// Weights `[out_c][in_c][kh][kw]` row-major, int8.
+        w: Vec<i8>,
+        /// Bias in accumulator units.
+        bias: Vec<i32>,
+        /// 16.16 fixed-point requant multiplier.
+        m_q: u32,
+        /// Max-pool after this layer?
+        pool: bool,
+    },
+    /// Fully connected.
+    Fc {
+        /// Input features.
+        n_in: usize,
+        /// Output features.
+        n_out: usize,
+        /// Weights `[n_in][n_out]` row-major, int8.
+        w: Vec<i8>,
+        /// Bias in accumulator units.
+        bias: Vec<i32>,
+        /// Requant multiplier (unused when `final_layer`).
+        m_q: u32,
+        /// Final layer emits raw logits.
+        final_layer: bool,
+    },
+}
+
+/// A quantized model: input geometry + layer stack.
+#[derive(Debug, Clone)]
+pub struct QuantizedWeights {
+    /// Input channels.
+    pub in_c: usize,
+    /// Input height.
+    pub in_h: usize,
+    /// Input width.
+    pub in_w: usize,
+    /// Output classes.
+    pub n_classes: usize,
+    /// Layers in execution order.
+    pub layers: Vec<Layer>,
+}
+
+impl QuantizedWeights {
+    /// Load an STWT file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let raw = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&raw)
+    }
+
+    /// Parse STWT bytes.
+    pub fn parse(raw: &[u8]) -> Result<Self> {
+        if raw.len() < 24 || &raw[0..4] != b"STWT" {
+            bail!("not an STWT file");
+        }
+        let mut pos = 4usize;
+        let rd_u32 = |raw: &[u8], pos: &mut usize| -> Result<u32> {
+            if *pos + 4 > raw.len() {
+                bail!("STWT truncated at {pos}");
+            }
+            let v = u32::from_le_bytes(raw[*pos..*pos + 4].try_into().unwrap());
+            *pos += 4;
+            Ok(v)
+        };
+        let in_c = rd_u32(raw, &mut pos)? as usize;
+        let in_h = rd_u32(raw, &mut pos)? as usize;
+        let in_w = rd_u32(raw, &mut pos)? as usize;
+        let n_classes = rd_u32(raw, &mut pos)? as usize;
+        let n_layers = rd_u32(raw, &mut pos)? as usize;
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            if pos + 4 > raw.len() {
+                bail!("STWT truncated in layer header");
+            }
+            let (kind, pool, final_layer) = (raw[pos], raw[pos + 1] != 0, raw[pos + 2] != 0);
+            pos += 4;
+            let d0 = rd_u32(raw, &mut pos)? as usize;
+            let d1 = rd_u32(raw, &mut pos)? as usize;
+            let _d2 = rd_u32(raw, &mut pos)? as usize;
+            let _d3 = rd_u32(raw, &mut pos)? as usize;
+            let m_q = rd_u32(raw, &mut pos)?;
+            let (n_w, n_b) = if kind == 0 {
+                (d0 * d1 * _d2 * _d3, d0)
+            } else {
+                (d0 * d1, d1)
+            };
+            if pos + n_w + 4 * n_b > raw.len() {
+                bail!("STWT truncated in layer payload");
+            }
+            let w: Vec<i8> = raw[pos..pos + n_w].iter().map(|&b| b as i8).collect();
+            pos += n_w;
+            let bias: Vec<i32> = (0..n_b)
+                .map(|i| i32::from_le_bytes(raw[pos + 4 * i..pos + 4 * i + 4].try_into().unwrap()))
+                .collect();
+            pos += 4 * n_b;
+            layers.push(if kind == 0 {
+                Layer::Conv {
+                    out_c: d0,
+                    in_c: d1,
+                    kh: _d2,
+                    kw: _d3,
+                    w,
+                    bias,
+                    m_q,
+                    pool,
+                }
+            } else {
+                Layer::Fc {
+                    n_in: d0,
+                    n_out: d1,
+                    w,
+                    bias,
+                    m_q,
+                    final_layer,
+                }
+            });
+        }
+        if pos != raw.len() {
+            bail!("STWT trailing bytes: {} unread", raw.len() - pos);
+        }
+        Ok(Self {
+            in_c,
+            in_h,
+            in_w,
+            n_classes,
+            layers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_stwt() -> Vec<u8> {
+        // 1 conv layer (2x1x1x1) + 1 final fc (2x3).
+        let mut raw = b"STWT".to_vec();
+        for v in [1u32, 2, 2, 3, 2] {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        // conv: kind=0 pool=1 final=0
+        raw.extend_from_slice(&[0, 1, 0, 0]);
+        for v in [2u32, 1, 1, 1] {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        raw.extend_from_slice(&100u32.to_le_bytes()); // m_q
+        raw.extend_from_slice(&[5u8, 251]); // w = [5, -5]
+        raw.extend_from_slice(&7i32.to_le_bytes());
+        raw.extend_from_slice(&(-7i32).to_le_bytes());
+        // fc: kind=1 final=1, 2x3
+        raw.extend_from_slice(&[1, 0, 1, 0]);
+        for v in [2u32, 3, 0, 0] {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        raw.extend_from_slice(&0u32.to_le_bytes());
+        raw.extend_from_slice(&[1u8, 2, 3, 4, 5, 6]);
+        for b in [1i32, 2, 3] {
+            raw.extend_from_slice(&b.to_le_bytes());
+        }
+        raw
+    }
+
+    #[test]
+    fn parse_layers() {
+        let w = QuantizedWeights::parse(&tiny_stwt()).unwrap();
+        assert_eq!(w.layers.len(), 2);
+        match &w.layers[0] {
+            Layer::Conv { w, bias, pool, .. } => {
+                assert_eq!(w, &vec![5i8, -5]);
+                assert_eq!(bias, &vec![7, -7]);
+                assert!(*pool);
+            }
+            _ => panic!("expected conv"),
+        }
+        match &w.layers[1] {
+            Layer::Fc {
+                final_layer, n_out, ..
+            } => {
+                assert!(*final_layer);
+                assert_eq!(*n_out, 3);
+            }
+            _ => panic!("expected fc"),
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut raw = tiny_stwt();
+        raw.push(0);
+        assert!(QuantizedWeights::parse(&raw).is_err());
+    }
+
+    #[test]
+    fn shipped_artifacts_parse_when_present() {
+        if let Ok(dir) = crate::runtime::find_artifacts_dir() {
+            let p = dir.join("lenet.weights.bin");
+            if p.exists() {
+                let w = QuantizedWeights::load(&p).unwrap();
+                assert_eq!(w.n_classes, 10);
+                assert_eq!(w.in_c, 1);
+            }
+        }
+    }
+}

@@ -1,0 +1,352 @@
+//! Design-space comparison experiments: Fig. 1, Fig. 9/Table 4, Fig. 10,
+//! Figs. 11–13/Table 5, Fig. 14/Table 3, Table 2.
+
+use crate::dse::{constrained, evaluate_all, pareto_front, DesignPoint};
+use crate::error::{exhaustive_sweep, percentile_sweep, ErrorHistogram, SweepSpec};
+use crate::hardware::estimate;
+use crate::multipliers::*;
+use crate::util::table::{f2, Table};
+use crate::Result;
+
+fn points_table(title: &str, points: &[DesignPoint], pareto: &[usize]) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "config",
+            "MRED%",
+            "paper",
+            "delay ns",
+            "paper",
+            "area µm²",
+            "paper",
+            "power µW",
+            "paper",
+            "PDP fJ",
+            "paper",
+            "pareto",
+        ],
+    );
+    for (i, p) in points.iter().enumerate() {
+        let (pm, pd, pa, pp, ppdp) = p
+            .paper
+            .map(|(m, d, a, pw, e)| (f2(m), f2(d), f2(a), f2(pw), f2(e)))
+            .unwrap_or_else(|| ("-".into(), "-".into(), "-".into(), "-".into(), "-".into()));
+        t.row(vec![
+            p.name.clone(),
+            f2(p.error.mred_pct),
+            pm,
+            f2(p.hw.delay_ns),
+            pd,
+            f2(p.hw.area_um2),
+            pa,
+            f2(p.hw.power_uw),
+            pp,
+            f2(p.hw.pdp_fj),
+            ppdp,
+            if pareto.contains(&i) { "*".into() } else { "".into() },
+        ]);
+    }
+    t
+}
+
+/// Fig. 1: the motivational design space — 8-bit TOSAM, DSM, DRUM only
+/// (MRED vs power/area/delay/PDP; the cost blow-up at high accuracy).
+pub fn fig1() -> Result<()> {
+    let mut zoo: Vec<Box<dyn ApproxMultiplier>> = Vec::new();
+    for m in 3..=7 {
+        zoo.push(Box::new(Dsm::new(8, m)));
+        zoo.push(Box::new(Drum::new(8, m)));
+    }
+    for (t, h) in [(0, 2), (0, 3), (1, 3), (1, 4), (2, 4), (1, 5), (2, 5), (2, 6), (3, 7)] {
+        zoo.push(Box::new(Tosam::new(8, t, h)));
+    }
+    let points = evaluate_all(&zoo, SweepSpec::Exhaustive);
+    let front = pareto_front(&points, |p| (p.error.mred_pct, p.hw.pdp_fj));
+    points_table("Fig. 1 — 8-bit TOSAM/DSM/DRUM design space", &points, &front).print();
+    Ok(())
+}
+
+/// Fig. 9 / Table 4: the full 8-bit comparison (exhaustive sweeps + the
+/// hardware model), Pareto flag computed on the (MRED, PDP) plane.
+pub fn table4() -> Result<()> {
+    let zoo = paper_configs_8bit();
+    let points = evaluate_all(&zoo, SweepSpec::Exhaustive);
+    let front = pareto_front(&points, |p| (p.error.mred_pct, p.hw.pdp_fj));
+    points_table(
+        "Fig. 9 / Table 4 — 8-bit comparison (measured | paper)",
+        &points,
+        &front,
+    )
+    .print();
+    // The paper's headline claims, recomputed live:
+    headline_claims(&points);
+    Ok(())
+}
+
+fn headline_claims(points: &[DesignPoint]) {
+    let get = |n: &str| points.iter().find(|p| p.name == n);
+    if let (Some(st48), Some(tosam15)) = (get("scaleTRIM(4,8)"), get("TOSAM(1,5)")) {
+        let mred_impr = 100.0 * (tosam15.error.mred_pct - st48.error.mred_pct) / tosam15.error.mred_pct;
+        println!(
+            "claim 1 (paper: ~15.2% MRED improvement): ST(4,8) {:.2}% vs TOSAM(1,5) {:.2}% → {:.1}% improvement",
+            st48.error.mred_pct, tosam15.error.mred_pct, mred_impr
+        );
+    }
+    if let (Some(st34), Some(mbm2)) = (get("scaleTRIM(3,4)"), get("MBM-2")) {
+        let pdp_impr = 100.0 * (mbm2.hw.pdp_fj - st34.hw.pdp_fj) / mbm2.hw.pdp_fj;
+        println!(
+            "claim 2 (paper: ~22.8% PDP improvement): ST(3,4) {:.2} fJ vs MBM-2 {:.2} fJ → {:.1}% improvement",
+            st34.hw.pdp_fj, mbm2.hw.pdp_fj, pdp_impr
+        );
+    }
+}
+
+/// Fig. 10: the 16-bit comparison (fixed-seed sampled sweeps).
+pub fn fig10(fast: bool) -> Result<()> {
+    let zoo = paper_configs_16bit();
+    let spec = if fast {
+        SweepSpec::Sampled {
+            pairs: 200_000,
+            seed: 0x5CA1_E781,
+        }
+    } else {
+        SweepSpec::default_for(16)
+    };
+    let points = evaluate_all(&zoo, spec);
+    let front = pareto_front(&points, |p| (p.error.mred_pct, p.hw.pdp_fj));
+    points_table("Fig. 10 — 16-bit comparison", &points, &front).print();
+    // Table 2's 16-bit anchor rows.
+    for (name, paper_mred, paper_pdp) in [
+        ("scaleTRIM(5,8)", 2.97, 701.82),
+        ("TOSAM(1,6)", 3.04, 777.99),
+        ("DRUM(5)", 2.94, 1137.52),
+    ] {
+        if let Some(p) = points.iter().find(|p| p.name == name) {
+            println!(
+                "16-bit anchor {name}: MRED {:.2}% (paper {paper_mred}), PDP {:.1} fJ (paper {paper_pdp})",
+                p.error.mred_pct, p.hw.pdp_fj
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Figs. 11–13 / Table 5: MED, Max-Error and Std design spaces for the
+/// configs the paper lists in Table 5.
+pub fn table5() -> Result<()> {
+    let zoo: Vec<Box<dyn ApproxMultiplier>> = vec![
+        Box::new(Mitchell::new(8)),
+        Box::new(Dsm::new(8, 3)),
+        Box::new(Drum::new(8, 3)),
+        Box::new(Drum::new(8, 6)),
+        Box::new(Mbm::new(8, 1)),
+        Box::new(Mbm::new(8, 2)),
+        Box::new(Ilm::new(8, 0)),
+        Box::new(Axm::new(8, 4)),
+        Box::new(Axm::new(8, 3)),
+        Box::new(Tosam::new(8, 0, 3)),
+        Box::new(Tosam::new(8, 1, 3)),
+        Box::new(Tosam::new(8, 0, 4)),
+        Box::new(Tosam::new(8, 2, 4)),
+        Box::new(Tosam::new(8, 2, 5)),
+        Box::new(ScaleTrim::new(8, 3, 0)),
+        Box::new(ScaleTrim::new(8, 3, 4)),
+        Box::new(ScaleTrim::new(8, 3, 8)),
+        Box::new(ScaleTrim::new(8, 4, 0)),
+        Box::new(ScaleTrim::new(8, 4, 4)),
+        Box::new(ScaleTrim::new(8, 4, 8)),
+        Box::new(ScaleTrim::new(8, 5, 0)),
+        Box::new(ScaleTrim::new(8, 5, 4)),
+        Box::new(ScaleTrim::new(8, 5, 8)),
+    ];
+    // Paper Table 5 reference (MED, Max, Std) per config.
+    let paper: &[(&str, f64, f64, f64)] = &[
+        ("Mitchell", 611.16, 4096.0, 779.87),
+        ("DSM(3)", 3337.88, 14849.0, 2711.92),
+        ("DRUM(3)", 1862.78, 14849.0, 2246.22),
+        ("DRUM(6)", 245.64, 2000.0, 295.28),
+        ("MBM-1", 396.47, 2816.0, 462.18),
+        ("MBM-2", 402.22, 2816.0, 459.51),
+        ("ILM0", 455.05, 3844.0, 633.94),
+        ("TOSAM(0,3)", 1361.74, 15873.0, 1981.23),
+        ("TOSAM(1,3)", 1007.15, 10753.0, 1307.62),
+        ("TOSAM(0,4)", 1283.11, 13825.0, 1704.46),
+        ("TOSAM(2,4)", 486.43, 5377.0, 623.64),
+        ("TOSAM(2,5)", 232.12, 2497.0, 286.30),
+        ("scaleTRIM(3,0)", 1138.86, 12801.0, 1580.89),
+        ("scaleTRIM(3,4)", 586.15, 6177.0, 745.78),
+        ("scaleTRIM(3,8)", 547.78, 5128.0, 687.67),
+        ("scaleTRIM(4,0)", 924.47, 11521.0, 1379.74),
+        ("scaleTRIM(4,4)", 616.67, 6237.0, 794.53),
+        ("scaleTRIM(4,8)", 582.91, 5260.0, 738.72),
+        ("scaleTRIM(5,0)", 709.63, 8961.0, 1041.10),
+        ("scaleTRIM(5,4)", 386.55, 4190.0, 512.30),
+        ("scaleTRIM(5,8)", 318.44, 3356.0, 407.95),
+    ];
+    let mut t = Table::new(
+        "Figs. 11-13 / Table 5 — MED, Max-Error, Std (measured | paper)",
+        &["config", "MED", "paper", "Max", "paper", "Std", "paper", "PDP fJ"],
+    );
+    for m in &zoo {
+        let r = exhaustive_sweep(m.as_ref());
+        let hw = estimate(m.as_ref());
+        let p = paper.iter().find(|row| row.0 == m.name());
+        let (pm, px, ps) = p
+            .map(|(_, a, b, c)| (f2(*a), f2(*b), f2(*c)))
+            .unwrap_or(("-".into(), "-".into(), "-".into()));
+        t.row(vec![
+            m.name(),
+            f2(r.med),
+            pm,
+            f2(r.max_error),
+            px,
+            f2(r.std),
+            ps,
+            f2(hw.pdp_fj),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Fig. 14 / Table 3: Mitchell vs piecewise(S=4) vs scaleTRIM(4,8) — ARED
+/// percentile statistics, hardware metrics, and ASCII histograms.
+pub fn table3() -> Result<()> {
+    let methods: Vec<Box<dyn ApproxMultiplier>> = vec![
+        Box::new(ScaleTrim::new(8, 4, 8)),
+        Box::new(Mitchell::new(8)),
+        Box::new(PiecewiseLinear::new(8, 4, 4)),
+    ];
+    // Table 3 reference rows: (mean, median, p95, p99, max, mred, area, power, delay, pdp)
+    let paper: &[(&str, [f64; 10])] = &[
+        (
+            "scaleTRIM(4,8)",
+            [2.36, 1.96, 5.97, 8.32, 10.95, 3.34, 162.26, 146.53, 1.45, 212.47],
+        ),
+        (
+            "Mitchell",
+            [8.91, 8.17, 20.34, 22.87, 24.80, 3.76, 235.45, 191.52, 1.37, 262.38],
+        ),
+        (
+            "Piecewise(h=4,S=4)",
+            [2.23, 1.82, 5.72, 7.89, 10.04, 3.25, 210.18, 172.11, 1.49, 256.44],
+        ),
+    ];
+    let mut t = Table::new(
+        "Table 3 — error statistics + hardware (measured | paper)",
+        &[
+            "method", "mean%", "median%", "p95%", "p99%", "max%", "area µm²", "PDP fJ", "paper mean%",
+            "paper max%", "paper PDP",
+        ],
+    );
+    for m in &methods {
+        let p = percentile_sweep(m.as_ref());
+        let hw = estimate(m.as_ref());
+        let r = paper.iter().find(|(n, _)| *n == m.name());
+        let (pmean, pmax, ppdp) = r
+            .map(|(_, v)| (f2(v[0]), f2(v[4]), f2(v[9])))
+            .unwrap_or(("-".into(), "-".into(), "-".into()));
+        t.row(vec![
+            m.name(),
+            f2(p.mean_pct),
+            f2(p.median_pct),
+            f2(p.p95_pct),
+            f2(p.p99_pct),
+            f2(p.max_pct),
+            f2(hw.area_um2),
+            f2(hw.pdp_fj),
+            pmean,
+            pmax,
+            ppdp,
+        ]);
+    }
+    t.print();
+
+    // Fig. 14: ARED histograms (25 bins to 25%).
+    for m in &methods {
+        let mut h = ErrorHistogram::new(25, 25.0);
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                let exact = a * b;
+                h.push(((m.mul(a, b) as f64 - exact as f64) / exact as f64).abs());
+            }
+        }
+        println!("{}", h.render(&format!("Fig. 14 — ARED histogram: {}", m.name())));
+        println!(
+            "  tail mass beyond 12%: {:.4}% of pairs\n",
+            100.0 * h.tail_fraction(12.0)
+        );
+    }
+    Ok(())
+}
+
+/// Table 2: Pareto-optimal configurations under the paper's constraint
+/// windows (8-bit: MRED ≤ 4%, 200–250 fJ; 16-bit representative points).
+pub fn table2(fast: bool) -> Result<()> {
+    let points8 = evaluate_all(&paper_configs_8bit(), SweepSpec::Exhaustive);
+    let sel = constrained(&points8, 4.0, (150.0, 260.0));
+    let mut t = Table::new(
+        "Table 2 — Pareto-optimal configs, 8-bit window (MRED ≤ 4%, PDP 150–260 fJ)",
+        &["config", "MRED%", "power µW", "area µm²", "delay ns", "PDP fJ"],
+    );
+    for p in sel.iter().take(8) {
+        t.row(vec![
+            p.name.clone(),
+            f2(p.error.mred_pct),
+            f2(p.hw.power_uw),
+            f2(p.hw.area_um2),
+            f2(p.hw.delay_ns),
+            f2(p.hw.pdp_fj),
+        ]);
+    }
+    t.print();
+    println!(
+        "paper Table 2 anchors: ST(4,8) MRED 3.34 / PDP 212.47; TOSAM(1,5) 4.06 / 249.72; MBM-2 3.74 / 199.12"
+    );
+
+    // 16-bit representative rows.
+    let zoo16: Vec<Box<dyn ApproxMultiplier>> = vec![
+        Box::new(ScaleTrim::new(16, 5, 8)),
+        Box::new(Tosam::new(16, 1, 6)),
+        Box::new(Drum::new(16, 5)),
+    ];
+    let spec = if fast {
+        SweepSpec::Sampled {
+            pairs: 200_000,
+            seed: 1,
+        }
+    } else {
+        SweepSpec::default_for(16)
+    };
+    let mut t16 = Table::new(
+        "Table 2 — 16-bit representatives (measured; paper: ST(5,8) 2.97/701.8, TOSAM(1,6) 3.04/778.0, DRUM(5) 2.94/1137.5)",
+        &["config", "MRED%", "PDP fJ", "area µm²", "delay ns"],
+    );
+    for m in &zoo16 {
+        let p = DesignPoint::evaluate(m.as_ref(), spec);
+        t16.row(vec![
+            p.name.clone(),
+            f2(p.error.mred_pct),
+            f2(p.hw.pdp_fj),
+            f2(p.hw.area_um2),
+            f2(p.hw.delay_ns),
+        ]);
+    }
+    t16.print();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_runs() {
+        fig1().unwrap();
+    }
+
+    #[test]
+    fn table3_runs() {
+        table3().unwrap();
+    }
+}

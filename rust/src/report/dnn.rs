@@ -1,0 +1,137 @@
+//! DNN experiments (paper Sec. IV-E): Fig. 15 (accuracy vs PDP across four
+//! CNNs) and Fig. 16 / Table 6 (top-1/top-5 on the 20-class dataset).
+//!
+//! The evaluation runs on the pure-rust interpreter path, which the
+//! integration suite proves bit-identical to the served PJRT artifact, so
+//! these numbers are exactly what the coordinator would serve.
+
+use crate::hardware::estimate;
+use crate::multipliers::*;
+use crate::nn::{build_lut, evaluate_accuracy, exact_lut, Dataset, QuantizedCnn, QuantizedWeights};
+use crate::runtime::{find_artifacts_dir, ArtifactSet};
+use crate::util::table::{f2, Table};
+use crate::Result;
+
+/// The multiplier configs plotted in Figs. 15/16 (paper's selection).
+pub fn dnn_config_zoo() -> Vec<Box<dyn ApproxMultiplier>> {
+    vec![
+        Box::new(ScaleTrim::new(8, 3, 0)),
+        Box::new(ScaleTrim::new(8, 3, 4)),
+        Box::new(ScaleTrim::new(8, 4, 0)),
+        Box::new(ScaleTrim::new(8, 4, 4)),
+        Box::new(ScaleTrim::new(8, 4, 8)),
+        Box::new(Drum::new(8, 3)),
+        Box::new(Drum::new(8, 4)),
+        Box::new(Drum::new(8, 5)),
+        Box::new(Tosam::new(8, 0, 3)),
+        Box::new(Tosam::new(8, 1, 3)),
+        Box::new(Tosam::new(8, 0, 4)),
+        Box::new(Tosam::new(8, 2, 4)),
+        Box::new(Tosam::new(8, 0, 5)),
+        Box::new(Tosam::new(8, 2, 5)),
+        Box::new(Mbm::new(8, 3)),
+        Box::new(Mbm::new(8, 4)),
+    ]
+}
+
+/// Paper Table 6 reference (SqueezeNet/ImageNet): name → (top5, top1, pdp).
+fn table6_paper(name: &str) -> Option<(f64, f64, f64)> {
+    let rows: &[(&str, f64, f64, f64)] = &[
+        ("Exact8", 80.17, 57.41, 568.53),
+        ("scaleTRIM(3,0)", 77.24, 54.01, 142.61),
+        ("scaleTRIM(3,4)", 77.73, 54.37, 153.75),
+        ("scaleTRIM(4,0)", 78.10, 54.58, 174.77),
+        ("scaleTRIM(4,4)", 78.63, 55.32, 189.00),
+        ("scaleTRIM(4,8)", 79.48, 56.52, 212.47),
+        ("DRUM(3)", 35.50, 16.76, 177.65),
+        ("DRUM(4)", 75.42, 51.51, 236.73),
+        ("DRUM(5)", 78.87, 55.73, 282.89),
+        ("TOSAM(0,3)", 72.05, 47.12, 125.16),
+        ("TOSAM(1,3)", 72.79, 48.54, 161.75),
+        ("TOSAM(0,4)", 72.49, 47.50, 182.39),
+        ("TOSAM(2,4)", 77.62, 53.99, 202.21),
+        ("TOSAM(0,5)", 73.96, 49.47, 236.19),
+        ("TOSAM(2,5)", 78.61, 55.46, 261.65),
+        ("MBM-3", 77.54, 54.23, 199.12),
+        ("MBM-4", 78.20, 54.81, 166.96),
+    ];
+    rows.iter()
+        .find(|r| r.0 == name)
+        .map(|r| (r.1, r.2, r.3))
+}
+
+fn load_model(name: &str) -> Result<(Dataset, QuantizedCnn)> {
+    let dir = find_artifacts_dir()?;
+    let set = ArtifactSet::resolve(&dir, name)?;
+    let data = Dataset::load(&set.dataset)?;
+    let cnn = QuantizedCnn::new(QuantizedWeights::load(&set.weights)?);
+    Ok((data, cnn))
+}
+
+fn accuracy_table(model: &str, role: &str, limit: Option<usize>, topk: bool) -> Result<()> {
+    let (data, cnn) = load_model(model)?;
+    let mut t = Table::new(
+        &format!("{model} ({role}) — accuracy vs PDP"),
+        &[
+            "multiplier",
+            "top1%",
+            "top5%",
+            "PDP fJ",
+            "paper top1%",
+            "paper top5%",
+            "paper PDP",
+        ],
+    );
+    // Exact baseline first.
+    let exact_hw = estimate(&Exact::new(8));
+    let r = evaluate_accuracy(&cnn, &data, &exact_lut(), limit);
+    let paper = table6_paper("Exact8");
+    t.row(vec![
+        "Exact (accurate)".into(),
+        f2(100.0 * r.top1),
+        f2(100.0 * r.top5),
+        f2(exact_hw.pdp_fj),
+        paper.map(|p| f2(p.1)).unwrap_or("-".into()),
+        paper.map(|p| f2(p.0)).unwrap_or("-".into()),
+        paper.map(|p| f2(p.2)).unwrap_or("-".into()),
+    ]);
+    for m in dnn_config_zoo() {
+        let lut = build_lut(m.as_ref());
+        let r = evaluate_accuracy(&cnn, &data, &lut, limit);
+        let hw = estimate(m.as_ref());
+        let paper = table6_paper(&m.name());
+        t.row(vec![
+            m.name(),
+            f2(100.0 * r.top1),
+            if topk { f2(100.0 * r.top5) } else { "-".into() },
+            f2(hw.pdp_fj),
+            paper.map(|p| f2(p.1)).unwrap_or("-".into()),
+            paper.map(|p| f2(p.0)).unwrap_or("-".into()),
+            paper.map(|p| f2(p.2)).unwrap_or("-".into()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Fig. 15: accuracy vs PDP across the CNN zoo (substituted models per
+/// DESIGN.md: lenet→LeNet-5/MNIST, convnet_m→VGG19, convnet_l→ResNet
+/// roles). `fast` limits the evaluated test images.
+pub fn fig15(fast: bool) -> Result<()> {
+    let limit = if fast { Some(256) } else { None };
+    for (model, role) in [
+        ("lenet", "LeNet-5 / MNIST role"),
+        ("convnet_m", "VGG19 / CIFAR-10 role"),
+        ("convnet_l", "ResNet / CIFAR-10 role"),
+    ] {
+        accuracy_table(model, role, limit, false)?;
+    }
+    Ok(())
+}
+
+/// Fig. 16 / Table 6: top-1 and top-5 on the 20-class dataset
+/// (SqueezeNet/ImageNet role), with the paper's published rows side by side.
+pub fn fig16(fast: bool) -> Result<()> {
+    let limit = if fast { Some(256) } else { None };
+    accuracy_table("squeeze_s", "SqueezeNet / ImageNet role", limit, true)
+}

@@ -1,0 +1,59 @@
+//! Repro harness: regenerates every table and figure of the paper's
+//! evaluation (Sec. IV) with measured-vs-paper columns. Dispatch via
+//! `scaletrim repro --exp <id>`; see DESIGN.md §Per-experiment-index.
+
+mod ablation;
+mod calibration;
+mod comparison;
+mod dnn;
+
+pub use ablation::{ablation_alpha_quant, ablation_constants, ablation_segments, ext32};
+pub use calibration::{fig5, fig6, fig7, table7};
+pub use comparison::{fig1, fig10, table2, table3, table4, table5};
+pub use dnn::{fig15, fig16, dnn_config_zoo};
+
+use crate::Result;
+
+/// All experiment ids, in paper order.
+pub const EXPERIMENTS: &[&str] = &[
+    "fig1", "fig5", "fig6", "fig7", "table4", "fig9", "fig10", "table5", "fig11-13", "table3",
+    "fig14", "table2", "table7", "fig15", "fig16", "table6", "ablation", "ext32",
+];
+
+/// Run one experiment by id. `fast` trims sample counts (CI smoke).
+pub fn run_experiment(id: &str, fast: bool) -> Result<()> {
+    match id {
+        "fig1" => fig1(),
+        "fig5" => fig5(),
+        "fig6" => fig6(),
+        "fig7" => fig7(),
+        "table4" | "fig9" => table4(),
+        "fig10" => fig10(fast),
+        "table5" | "fig11-13" => table5(),
+        "table3" | "fig14" => table3(),
+        "table2" => table2(fast),
+        "table7" => table7(),
+        "ablation" => {
+            ablation_alpha_quant()?;
+            ablation_segments()?;
+            ablation_constants()
+        }
+        "ext32" => ext32(),
+        "fig15" => fig15(fast),
+        "fig16" | "table6" => fig16(fast),
+        "all" => {
+            for e in [
+                "fig1", "fig5", "fig6", "fig7", "table4", "fig10", "table5", "table3", "table2",
+                "table7", "fig15", "fig16", "ablation", "ext32",
+            ] {
+                println!("\n################ {e} ################");
+                run_experiment(e, fast)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other:?}; known: {}",
+            EXPERIMENTS.join(", ")
+        ),
+    }
+}

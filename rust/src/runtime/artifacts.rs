@@ -1,0 +1,77 @@
+//! Artifact discovery: locates the `artifacts/` directory produced by
+//! `make artifacts` and resolves the per-model file set.
+
+use crate::Result;
+use anyhow::bail;
+use std::path::{Path, PathBuf};
+
+/// The file set of one AOT-compiled model.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    /// Model name (e.g. `lenet`).
+    pub name: String,
+    /// HLO text artifact.
+    pub hlo: PathBuf,
+    /// STWT quantized weights (pure-rust inference path).
+    pub weights: PathBuf,
+    /// STDS test split.
+    pub dataset: PathBuf,
+    /// Meta JSON (shapes, accuracies) — informational.
+    pub meta: PathBuf,
+}
+
+impl ArtifactSet {
+    /// Resolve a model's artifacts inside a directory; errors if any file
+    /// is missing (run `make artifacts` first).
+    pub fn resolve(dir: &Path, name: &str) -> Result<Self> {
+        let set = Self {
+            name: name.to_string(),
+            hlo: dir.join(format!("{name}.hlo.txt")),
+            weights: dir.join(format!("{name}.weights.bin")),
+            dataset: dir.join(format!("{name}.dataset.bin")),
+            meta: dir.join(format!("{name}.meta.json")),
+        };
+        for p in [&set.hlo, &set.weights, &set.dataset] {
+            if !p.exists() {
+                bail!(
+                    "artifact {} missing — run `make artifacts` first",
+                    p.display()
+                );
+            }
+        }
+        Ok(set)
+    }
+}
+
+/// Find the artifacts directory: `SCALETRIM_ARTIFACTS` env override, then
+/// `./artifacts`, then walking up from the executable.
+pub fn find_artifacts_dir() -> Result<PathBuf> {
+    if let Ok(dir) = std::env::var("SCALETRIM_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        if p.is_dir() {
+            return Ok(p);
+        }
+        bail!("SCALETRIM_ARTIFACTS={} is not a directory", p.display());
+    }
+    let mut cur = std::env::current_dir()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.is_dir() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            bail!("no artifacts/ directory found — run `make artifacts`");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_missing_reports_helpfully() {
+        let err = ArtifactSet::resolve(Path::new("/nonexistent"), "lenet").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,94 @@
+//! PJRT CPU client wrapper (pattern from /opt/xla-example/load_hlo).
+
+use crate::Result;
+use anyhow::{bail, Context};
+
+/// A PJRT engine owning the CPU client. One per process is plenty; models
+/// compiled from it may be shared across threads behind `Arc`.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    ///
+    /// The artifact contract (see `python/compile/aot.py`): inputs
+    /// `(s32[batch, C, H, W] pixels, s32[256,256] lut)`, output a 1-tuple of
+    /// `s32[batch, n_classes]` logits.
+    pub fn load_model(&self, hlo_path: &str, batch: usize, n_classes: usize) -> Result<LoadedModel> {
+        let proto = xla::HloModuleProto::from_text_file(hlo_path)
+            .with_context(|| format!("parsing HLO text {hlo_path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {hlo_path}"))?;
+        Ok(LoadedModel {
+            exe,
+            batch,
+            n_classes,
+            path: hlo_path.to_string(),
+        })
+    }
+}
+
+/// A compiled model executable plus its I/O contract.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Fixed batch size the artifact was lowered with.
+    pub batch: usize,
+    /// Number of output classes.
+    pub n_classes: usize,
+    /// Source artifact path (diagnostics).
+    pub path: String,
+}
+
+impl LoadedModel {
+    /// Run one batch. `pixels` is `[batch * C * H * W]` row-major (values
+    /// 0..=255 as i32), `shape` its dims; `lut` is the 256×256 row-major
+    /// signed product table. Returns `[batch * n_classes]` logits.
+    pub fn run(&self, pixels: &[i32], shape: &[usize], lut: &[i32]) -> Result<Vec<i32>> {
+        if lut.len() != 256 * 256 {
+            bail!("lut must be 256*256 entries, got {}", lut.len());
+        }
+        if shape[0] != self.batch {
+            bail!("batch mismatch: artifact {}, got {}", self.batch, shape[0]);
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let x = xla::Literal::vec1(pixels)
+            .reshape(&dims)
+            .context("reshaping pixel literal")?;
+        let l = xla::Literal::vec1(lut)
+            .reshape(&[256, 256])
+            .context("reshaping lut literal")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[x, l])
+            .context("executing model")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let logits = out.to_vec::<i32>().context("reading logits")?;
+        if logits.len() != self.batch * self.n_classes {
+            bail!(
+                "logits size {} != batch {} * classes {}",
+                logits.len(),
+                self.batch,
+                self.n_classes
+            );
+        }
+        Ok(logits)
+    }
+}

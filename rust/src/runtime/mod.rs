@@ -1,0 +1,9 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts (produced once by
+//! `python/compile/aot.py`) and executes them on the CPU client. This is
+//! the only place the `xla` crate is touched; Python is never on this path.
+
+mod artifacts;
+mod client;
+
+pub use artifacts::{find_artifacts_dir, ArtifactSet};
+pub use client::{Engine, LoadedModel};

@@ -1,0 +1,216 @@
+//! Criterion-style micro-benchmark harness (criterion is unavailable
+//! offline). Used by every `cargo bench` target (`harness = false`).
+//!
+//! Method: warm up, then run measured batches until a wall-clock budget is
+//! exhausted; report mean / median / p95 per-iteration time plus throughput.
+//! A `black_box` re-export prevents the optimiser from deleting the measured
+//! work.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-exported optimiser barrier.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One benchmark's collected results.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark id.
+    pub name: String,
+    /// Mean time per iteration.
+    pub mean: Duration,
+    /// Median time per iteration.
+    pub median: Duration,
+    /// 95th-percentile time per iteration.
+    pub p95: Duration,
+    /// Total iterations measured.
+    pub iters: u64,
+    /// Optional "elements processed per iteration" for throughput lines.
+    pub throughput_elems: Option<u64>,
+}
+
+impl BenchResult {
+    /// Render a one-line human-readable summary (criterion-ish).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{:<44} time: [{} {} {}]  ({} iters)",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.median),
+            fmt_dur(self.p95),
+            self.iters
+        );
+        if let Some(n) = self.throughput_elems {
+            let per_sec = n as f64 / self.mean.as_secs_f64();
+            s.push_str(&format!("  thrpt: {}", fmt_rate(per_sec)));
+        }
+        s
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2} Gelem/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2} Melem/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2} Kelem/s", r / 1e3)
+    } else {
+        format!("{r:.2} elem/s")
+    }
+}
+
+/// Benchmark runner: owns the time budget and prints results as they finish.
+pub struct Bencher {
+    /// Wall-clock budget per benchmark.
+    pub budget: Duration,
+    /// Warmup budget per benchmark.
+    pub warmup: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    /// Default budgets: 0.3 s warmup, 1.5 s measurement. `SCALETRIM_BENCH_FAST=1`
+    /// shrinks both (used by CI smoke runs).
+    pub fn new() -> Self {
+        let fast = std::env::var("SCALETRIM_BENCH_FAST").ok().as_deref() == Some("1");
+        Self {
+            budget: if fast {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_millis(1500)
+            },
+            warmup: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(300)
+            },
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one benchmark. `f` is the measured unit of work; `elems` is the
+    /// number of logical elements it processes (for throughput reporting).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, elems: Option<u64>, mut f: F) {
+        // Warmup + batch-size estimation.
+        let warm_start = Instant::now();
+        let mut batch = 1u64;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let dt = t0.elapsed();
+            if warm_start.elapsed() >= self.warmup {
+                // Choose a batch that takes ~1/50 of the budget.
+                let per_iter = dt.as_secs_f64() / batch as f64;
+                let target = self.budget.as_secs_f64() / 50.0;
+                batch = ((target / per_iter).ceil() as u64).clamp(1, 1 << 24);
+                break;
+            }
+            batch = (batch * 2).min(1 << 24);
+        }
+
+        // Measurement.
+        let mut samples: Vec<f64> = Vec::new();
+        let mut iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.budget {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let dt = t0.elapsed();
+            samples.push(dt.as_secs_f64() / batch as f64);
+            iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let median = samples[samples.len() / 2];
+        let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+        let result = BenchResult {
+            name: name.to_string(),
+            mean: Duration::from_secs_f64(mean),
+            median: Duration::from_secs_f64(median),
+            p95: Duration::from_secs_f64(p95),
+            iters,
+            throughput_elems: elems,
+        };
+        println!("{}", result.summary());
+        self.results.push(result);
+    }
+
+    /// All collected results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write results as a JSON-lines file (appended to by each bench target).
+    pub fn write_jsonl(&self, path: &str) -> std::io::Result<()> {
+        use crate::util::json::Json;
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        for r in &self.results {
+            let j = Json::obj()
+                .set("name", r.name.as_str())
+                .set("mean_ns", r.mean.as_nanos() as u64)
+                .set("median_ns", r.median.as_nanos() as u64)
+                .set("p95_ns", r.p95.as_nanos() as u64)
+                .set("iters", r.iters)
+                .set(
+                    "elems",
+                    r.throughput_elems.map(Json::from).unwrap_or(Json::Null),
+                );
+            writeln!(f, "{}", j.to_string())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("SCALETRIM_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        let mut acc = 0u64;
+        b.bench("noop-add", Some(1), || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].iters > 0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500.0ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
+    }
+}

@@ -1,0 +1,113 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! which covers the whole `scaletrim` command surface.
+
+use std::collections::HashMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments, in order.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options (last occurrence wins).
+    pub options: HashMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Option lookup with default.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; panics with a friendly message on a parse
+    /// failure (CLI surface, not library surface).
+    pub fn opt_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.opt(key) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key}: cannot parse {s:?}")),
+        }
+    }
+
+    /// Is a bare flag present?
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["repro", "--exp", "fig9", "--bits=8", "--verbose"]);
+        assert_eq!(a.positional, vec!["repro"]);
+        assert_eq!(a.opt("exp"), Some("fig9"));
+        assert_eq!(a.opt("bits"), Some("8"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&["--h", "4"]);
+        assert_eq!(a.opt_parse_or("h", 3u32), 4);
+        assert_eq!(a.opt_parse_or("m", 8u32), 8);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--fast", "--strict"]);
+        assert!(a.has_flag("fast") && a.has_flag("strict"));
+        assert!(a.options.is_empty());
+    }
+
+    #[test]
+    fn last_option_wins() {
+        let a = parse(&["--exp", "fig1", "--exp", "fig9"]);
+        assert_eq!(a.opt("exp"), Some("fig9"));
+    }
+}

@@ -1,0 +1,13 @@
+//! In-repo infrastructure: the build image is offline (only the `xla` crate's
+//! dependency closure is cached), so the pieces a production crate would pull
+//! from crates.io live here instead: a PRNG ([`rng`]), summary statistics
+//! ([`stats`]), a tiny CLI parser ([`cli`]), a JSON writer ([`json`]), a
+//! criterion-style micro-benchmark harness ([`bench`]) and a property-testing
+//! rig with shrinking ([`prop`]).
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,256 @@
+//! Property-based testing rig with shrinking (proptest is unavailable
+//! offline). Deterministic: every failure reports the seed and the shrunk
+//! counterexample.
+//!
+//! Usage:
+//! ```
+//! use scaletrim::util::prop::{Runner, Gen};
+//! let mut r = Runner::new("mul-commutes-under-swap", 500);
+//! r.run(|g| {
+//!     let a = g.u64_in(1, 255);
+//!     let b = g.u64_in(1, 255);
+//!     // property body returns Ok(()) or Err(message)
+//!     if a.checked_mul(b).is_some() { Ok(()) } else { Err("overflow".into()) }
+//! });
+//! ```
+
+use crate::util::rng::Xoshiro256;
+
+/// Value source handed to property bodies. Records every drawn integer so the
+/// runner can shrink the *choice sequence* (internal-shrinking, the approach
+/// hypothesis uses).
+pub struct Gen<'a> {
+    rng: &'a mut Xoshiro256,
+    /// When replaying a shrunk choice sequence, draws come from here instead.
+    replay: Option<&'a [u64]>,
+    cursor: usize,
+    /// The choices made during this run (for shrinking).
+    pub choices: Vec<u64>,
+}
+
+impl<'a> Gen<'a> {
+    fn new(rng: &'a mut Xoshiro256, replay: Option<&'a [u64]>) -> Self {
+        Self {
+            rng,
+            replay,
+            cursor: 0,
+            choices: Vec::new(),
+        }
+    }
+
+    fn draw(&mut self, bound: u64) -> u64 {
+        let v = match self.replay {
+            Some(seq) => {
+                let raw = seq.get(self.cursor).copied().unwrap_or(0);
+                if bound == 0 {
+                    raw
+                } else {
+                    raw % bound
+                }
+            }
+            None => {
+                if bound == 0 {
+                    self.rng.next_u64()
+                } else {
+                    self.rng.gen_range(bound)
+                }
+            }
+        };
+        self.cursor += 1;
+        self.choices.push(v);
+        v
+    }
+
+    /// Uniform u64 in `[lo, hi]` (inclusive).
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.draw(hi - lo + 1)
+    }
+
+    /// Uniform u32 in `[lo, hi]` (inclusive).
+    pub fn u32_in(&mut self, lo: u32, hi: u32) -> u32 {
+        self.u64_in(lo as u64, hi as u64) as u32
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64_in(lo as u64, hi as u64) as usize
+    }
+
+    /// Boolean with probability 1/2.
+    pub fn bool(&mut self) -> bool {
+        self.draw(2) == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'b, T>(&mut self, items: &'b [T]) -> &'b T {
+        &items[self.draw(items.len() as u64) as usize]
+    }
+
+    /// A vector of length in `[0, max_len]` with elements from `f`.
+    pub fn vec_of<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        let n = self.usize_in(0, max_len);
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+/// Property-test runner.
+pub struct Runner {
+    name: String,
+    cases: u64,
+    seed: u64,
+}
+
+impl Runner {
+    /// `cases` random cases; seed defaults to a fixed constant (override with
+    /// `SCALETRIM_PROP_SEED` to explore).
+    pub fn new(name: &str, cases: u64) -> Self {
+        let seed = std::env::var("SCALETRIM_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5CA1E_7B1A_u64);
+        Self {
+            name: name.to_string(),
+            cases,
+            seed,
+        }
+    }
+
+    /// Run the property; panics with seed + shrunk counterexample on failure.
+    pub fn run<F>(&mut self, mut prop: F)
+    where
+        F: FnMut(&mut Gen) -> Result<(), String>,
+    {
+        let mut rng = Xoshiro256::seed_from_u64(self.seed);
+        for case in 0..self.cases {
+            let mut g = Gen::new(&mut rng, None);
+            if let Err(msg) = prop(&mut g) {
+                let choices = g.choices.clone();
+                let (shrunk, final_msg) = self.shrink(&mut prop, choices, msg);
+                panic!(
+                    "property {:?} failed (seed={}, case={}):\n  {}\n  shrunk choices: {:?}",
+                    self.name, self.seed, case, final_msg, shrunk
+                );
+            }
+        }
+    }
+
+    /// Greedy choice-sequence shrinking: try zeroing, halving and truncating
+    /// choices while the property still fails.
+    fn shrink<F>(
+        &self,
+        prop: &mut F,
+        mut choices: Vec<u64>,
+        mut msg: String,
+    ) -> (Vec<u64>, String)
+    where
+        F: FnMut(&mut Gen) -> Result<(), String>,
+    {
+        let fails = |prop: &mut F, seq: &[u64]| -> Option<String> {
+            let mut dummy = Xoshiro256::seed_from_u64(0);
+            let mut g = Gen::new(&mut dummy, Some(seq));
+            prop(&mut g).err()
+        };
+        let mut improved = true;
+        let mut budget = 2000usize;
+        while improved && budget > 0 {
+            improved = false;
+            // Try truncating the tail.
+            if choices.len() > 1 {
+                let cand = &choices[..choices.len() - 1];
+                if let Some(m) = fails(prop, cand) {
+                    choices = cand.to_vec();
+                    msg = m;
+                    improved = true;
+                    budget -= 1;
+                    continue;
+                }
+            }
+            // Try shrinking individual choices.
+            for i in 0..choices.len() {
+                if budget == 0 {
+                    break;
+                }
+                let orig = choices[i];
+                for cand_v in [0, orig / 2, orig.saturating_sub(1)] {
+                    if cand_v == orig {
+                        continue;
+                    }
+                    choices[i] = cand_v;
+                    if let Some(m) = fails(prop, &choices) {
+                        msg = m;
+                        improved = true;
+                        budget -= 1;
+                        break;
+                    }
+                    choices[i] = orig;
+                }
+            }
+        }
+        (choices, msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let mut r = Runner::new("add-commutes", 200);
+        r.run(|g| {
+            let a = g.u64_in(0, 1000);
+            let b = g.u64_in(0, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_counterexample() {
+        let mut r = Runner::new("always-small", 200);
+        r.run(|g| {
+            let a = g.u64_in(0, 1000);
+            if a < 500 {
+                Ok(())
+            } else {
+                Err(format!("a={a} not < 500"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // Capture the panic message and check the shrunk value is minimal-ish.
+        let result = std::panic::catch_unwind(|| {
+            let mut r = Runner::new("shrink-demo", 500);
+            r.run(|g| {
+                let a = g.u64_in(0, 10_000);
+                if a < 42 {
+                    Ok(())
+                } else {
+                    Err(format!("a={a}"))
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // The shrunk choice (offset from lo=0) should be well below 10000.
+        assert!(msg.contains("shrunk"), "panic message: {msg}");
+    }
+
+    #[test]
+    fn gen_helpers_in_bounds() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut g = Gen::new(&mut rng, None);
+        for _ in 0..1000 {
+            let v = g.u64_in(5, 10);
+            assert!((5..=10).contains(&v));
+        }
+        let v = g.vec_of(8, |g| g.bool());
+        assert!(v.len() <= 8);
+    }
+}

@@ -1,0 +1,218 @@
+//! Summary statistics used by the error-analysis sweeps (Sec. IV-A/B of the
+//! paper): streaming mean/variance (Welford), percentiles, and linear
+//! regression through the origin (the α fit of Sec. III-A).
+
+/// Streaming mean / variance / extrema accumulator (Welford's algorithm).
+/// Numerically stable over the 4×10⁹-sample 16-bit sweeps.
+#[derive(Clone, Debug, Default)]
+pub struct Accumulator {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    sum: f64,
+}
+
+impl Accumulator {
+    /// Fresh accumulator.
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sum: 0.0,
+        }
+    }
+
+    /// Add one observation.
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    /// Merge another accumulator (parallel reduction; Chan et al.).
+    pub fn merge(&mut self, other: &Accumulator) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let delta = other.mean - self.mean;
+        let total = n1 + n2;
+        self.mean += delta * n2 / total;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / total;
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    /// Arithmetic mean.
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    /// Sum of observations.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+    /// Population standard deviation.
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    /// Minimum observation (+inf when empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    /// Maximum observation (-inf when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Zero-intercept least-squares fit `t ≈ α·s` (Sec. III-A linearization):
+/// α = Σ t·s / Σ s². Streaming, so the full 8-bit operand space (or the
+/// class-decomposed 16-bit space) never needs to be materialised.
+#[derive(Clone, Debug, Default)]
+pub struct OriginFit {
+    sum_ts: f64,
+    sum_ss: f64,
+    n: u64,
+}
+
+impl OriginFit {
+    /// Fresh fit.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add an `(s, t)` observation with weight `w` (class counts in the
+    /// decomposed 16-bit calibration use `w = n_u · n_v`).
+    #[inline]
+    pub fn push_weighted(&mut self, s: f64, t: f64, w: f64) {
+        self.sum_ts += w * t * s;
+        self.sum_ss += w * s * s;
+        self.n += 1;
+    }
+
+    /// Add an unweighted observation.
+    #[inline]
+    pub fn push(&mut self, s: f64, t: f64) {
+        self.push_weighted(s, t, 1.0);
+    }
+
+    /// The fitted slope α (NaN when no data with s≠0 was pushed).
+    pub fn slope(&self) -> f64 {
+        self.sum_ts / self.sum_ss
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+}
+
+/// Percentile of a *sorted* slice using linear interpolation (the convention
+/// numpy's `percentile` uses); `q` in [0, 100].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty slice");
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Median of a sorted slice.
+pub fn median_sorted(sorted: &[f64]) -> f64 {
+    percentile_sorted(sorted, 50.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_matches_closed_form() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut a = Accumulator::new();
+        for &x in &xs {
+            a.push(x);
+        }
+        assert_eq!(a.count(), 5);
+        assert!((a.mean() - 3.0).abs() < 1e-12);
+        assert!((a.variance() - 2.0).abs() < 1e-12);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 5.0);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut whole = Accumulator::new();
+        let mut left = Accumulator::new();
+        let mut right = Accumulator::new();
+        for i in 0..1000 {
+            let x = (i as f64).sin() * 10.0;
+            whole.push(x);
+            if i < 400 {
+                left.push(x);
+            } else {
+                right.push(x);
+            }
+        }
+        left.merge(&right);
+        assert!((whole.mean() - left.mean()).abs() < 1e-10);
+        assert!((whole.variance() - left.variance()).abs() < 1e-8);
+        assert_eq!(whole.count(), left.count());
+    }
+
+    #[test]
+    fn origin_fit_recovers_slope() {
+        let mut f = OriginFit::new();
+        for i in 1..100 {
+            let s = i as f64 / 10.0;
+            f.push(s, 1.37 * s);
+        }
+        assert!((f.slope() - 1.37).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_sorted(&v, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 4.0);
+        assert!((percentile_sorted(&v, 50.0) - 2.5).abs() < 1e-12);
+        assert!((median_sorted(&v) - 2.5).abs() < 1e-12);
+    }
+}

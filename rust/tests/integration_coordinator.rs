@@ -1,0 +1,117 @@
+//! Coordinator integration: routing, batching, occupancy, failure
+//! isolation, and (when artifacts exist) end-to-end PJRT serving.
+
+use ::scaletrim::coordinator::{BatchPolicy, Coordinator, MockBackend, PjrtBackend, PureRustBackend};
+use ::scaletrim::multipliers::{ApproxMultiplier, Exact, ScaleTrim};
+use ::scaletrim::nn::{Dataset, QuantizedCnn, QuantizedWeights};
+use ::scaletrim::runtime::{find_artifacts_dir, ArtifactSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn policy(batch: usize) -> BatchPolicy {
+    BatchPolicy {
+        max_batch: batch,
+        max_wait: Duration::from_millis(2),
+    }
+}
+
+#[test]
+fn high_load_fills_batches() {
+    let backend = Arc::new(MockBackend::new(16, 4));
+    let exact = Exact::new(8);
+    let configs: Vec<&dyn ApproxMultiplier> = vec![&exact];
+    let coord = Coordinator::new(backend, &configs, policy(16));
+    let mut rx = Vec::new();
+    for _ in 0..512 {
+        rx.push(coord.submit("Exact8", vec![1, 2, 3, 4]).unwrap().1);
+    }
+    for r in rx {
+        assert!(r.recv().unwrap().error.is_none());
+    }
+    let m = coord.metrics();
+    let occ = m.mean_occupancy();
+    assert!(occ > 8.0, "occupancy {occ} too low under saturation");
+    assert_eq!(m.responses.load(std::sync::atomic::Ordering::Relaxed), 512);
+}
+
+#[test]
+fn lanes_are_isolated() {
+    // A failing lane must not poison the healthy lane.
+    let backend = Arc::new(MockBackend::new(4, 4).with_failures(1)); // every call fails
+    let exact = Exact::new(8);
+    let st = ScaleTrim::new(8, 3, 4);
+    let configs: Vec<&dyn ApproxMultiplier> = vec![&exact, &st];
+    let coord = Coordinator::new(backend, &configs, policy(4));
+    let p = coord.infer_blocking("Exact8", vec![0; 4]).unwrap();
+    assert!(p.error.is_some());
+    // Lane threads are still alive; a second submit still round-trips.
+    let p2 = coord.infer_blocking("scaleTRIM(3,4)", vec![0; 4]).unwrap();
+    assert!(p2.error.is_some());
+}
+
+#[test]
+fn pure_rust_backend_serves_real_model() {
+    let Ok(dir) = find_artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let Ok(set) = ArtifactSet::resolve(&dir, "lenet") else {
+        return;
+    };
+    let data = Dataset::load(&set.dataset).unwrap();
+    let cnn = QuantizedCnn::new(QuantizedWeights::load(&set.weights).unwrap());
+    let backend = Arc::new(PureRustBackend::new(cnn, 8));
+    let exact = Exact::new(8);
+    let st = ScaleTrim::new(8, 4, 8);
+    let configs: Vec<&dyn ApproxMultiplier> = vec![&exact, &st];
+    let coord = Coordinator::new(backend, &configs, policy(8));
+    let mut correct = 0;
+    let n = 64;
+    for i in 0..n {
+        let p = coord
+            .infer_blocking("scaleTRIM(4,8)", data.image(i).to_vec())
+            .unwrap();
+        assert!(p.error.is_none());
+        if p.class == data.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    assert!(correct as f64 / n as f64 > 0.85, "accuracy {correct}/{n}");
+}
+
+#[test]
+fn pjrt_backend_end_to_end() {
+    let Ok(dir) = find_artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let Ok(set) = ArtifactSet::resolve(&dir, "lenet") else {
+        return;
+    };
+    let data = Dataset::load(&set.dataset).unwrap();
+    let backend = Arc::new(
+        PjrtBackend::spawn(
+            set.hlo.to_str().unwrap().to_string(),
+            32,
+            data.n_classes,
+            (data.c, data.h, data.w),
+        )
+        .expect("pjrt backend"),
+    );
+    let exact = Exact::new(8);
+    let configs: Vec<&dyn ApproxMultiplier> = vec![&exact];
+    let coord = Coordinator::new(backend, &configs, policy(32));
+    let mut rx = Vec::new();
+    for i in 0..96 {
+        rx.push((i, coord.submit("Exact8", data.image(i).to_vec()).unwrap().1));
+    }
+    let mut correct = 0;
+    for (i, r) in rx {
+        let p = r.recv().unwrap();
+        assert!(p.error.is_none(), "{:?}", p.error);
+        if p.class == data.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    assert!(correct >= 85, "pjrt served accuracy {correct}/96");
+}

@@ -1,0 +1,76 @@
+//! DSE integration: the paper's Pareto claims recomputed end-to-end
+//! (accuracy sweeps + hardware model + front extraction).
+
+use ::scaletrim::dse::{constrained, dominance, evaluate_all, pareto_front, Dominance};
+use ::scaletrim::error::SweepSpec;
+use ::scaletrim::multipliers::*;
+
+fn points() -> Vec<::scaletrim::dse::DesignPoint> {
+    evaluate_all(&paper_configs_8bit(), SweepSpec::Exhaustive)
+}
+
+#[test]
+fn scaletrim_populates_the_pareto_front() {
+    // Sec. IV-C: "scaleTRIM configurations consistently fall into the
+    // Pareto frontier". Require at least 3 scaleTRIM members on the
+    // (MRED, PDP) front.
+    let pts = points();
+    let front = pareto_front(&pts, |p| (p.error.mred_pct, p.hw.pdp_fj));
+    let st = front
+        .iter()
+        .filter(|&&i| pts[i].name.starts_with("scaleTRIM"))
+        .count();
+    assert!(
+        st >= 3,
+        "only {st} scaleTRIM configs on the front: {:?}",
+        front.iter().map(|&i| pts[i].name.clone()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn front_is_actually_non_dominated() {
+    let pts = points();
+    let front = pareto_front(&pts, |p| (p.error.mred_pct, p.hw.pdp_fj));
+    for &i in &front {
+        for (j, other) in pts.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            let d = dominance(
+                (other.error.mred_pct, other.hw.pdp_fj),
+                (pts[i].error.mred_pct, pts[i].hw.pdp_fj),
+            );
+            assert_ne!(
+                d,
+                Dominance::Dominates,
+                "{} dominated by {}",
+                pts[i].name,
+                other.name
+            );
+        }
+    }
+}
+
+#[test]
+fn table2_window_selects_scaletrim() {
+    // The paper's Table-2 window (MRED <= 4%, mid-range PDP) is won by a
+    // scaleTRIM config in our measurements too.
+    let pts = points();
+    let sel = constrained(&pts, 4.0, (150.0, 260.0));
+    assert!(!sel.is_empty());
+    assert!(
+        sel.iter().take(3).any(|p| p.name.starts_with("scaleTRIM")),
+        "top of the window: {:?}",
+        sel.iter().map(|p| p.name.clone()).take(5).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn paper_reference_attached_where_published() {
+    let pts = points();
+    let with_ref = pts.iter().filter(|p| p.paper.is_some()).count();
+    assert!(
+        with_ref >= 50,
+        "expected most configs to carry Table 4 reference values, got {with_ref}"
+    );
+}

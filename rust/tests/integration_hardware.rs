@@ -1,0 +1,106 @@
+//! Hardware-model integration: calibration quality against Table 4 and the
+//! cross-family cost relationships the paper's evaluation relies on.
+
+use ::scaletrim::hardware::{estimate, paper_reference};
+use ::scaletrim::multipliers::*;
+
+#[test]
+fn every_config_estimable_at_both_widths() {
+    for m in paper_configs_8bit() {
+        let e = estimate(m.as_ref());
+        assert!(e.area_um2 > 0.0 && e.pdp_fj > 0.0, "{}", e.name);
+    }
+    for m in paper_configs_16bit() {
+        let e = estimate(m.as_ref());
+        assert!(e.area_um2 > 0.0, "{}", e.name);
+    }
+}
+
+#[test]
+fn scaletrim_rows_track_table4() {
+    // Per-row band after self-calibration: no scaleTRIM row may deviate
+    // from the paper by more than ~1.6x on any metric.
+    for h in 2..=7u32 {
+        for m in [0u32, 4, 8] {
+            let st = ScaleTrim::new(8, h, m);
+            let e = estimate(&st);
+            let (_, pd, pa, _, ppdp) = paper_reference(&st.name()).unwrap();
+            for (metric, ours, paper) in [
+                ("area", e.area_um2, pa),
+                ("delay", e.delay_ns, pd),
+                ("pdp", e.pdp_fj, ppdp),
+            ] {
+                let ratio = ours / paper;
+                assert!(
+                    (0.55..1.8).contains(&ratio),
+                    "ST({h},{m}) {metric}: {ours:.1} vs paper {paper:.1} (ratio {ratio:.2})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cost_monotone_in_knobs() {
+    // Area/PDP grow with h and with M; delay grows with h.
+    let a = estimate(&ScaleTrim::new(8, 3, 0));
+    let b = estimate(&ScaleTrim::new(8, 3, 8));
+    let c = estimate(&ScaleTrim::new(8, 6, 8));
+    assert!(b.area_um2 > a.area_um2);
+    assert!(c.area_um2 > b.area_um2);
+    assert!(c.delay_ns > a.delay_ns);
+    assert!(c.pdp_fj > b.pdp_fj);
+}
+
+#[test]
+fn family_relationships() {
+    // Sec. IV-B: TOSAM's LUT LOD is faster; scaleTRIM wins area/power.
+    let st = estimate(&ScaleTrim::new(8, 5, 8));
+    let tosam = estimate(&Tosam::new(8, 1, 5));
+    assert!(tosam.delay_ns < st.delay_ns, "TOSAM should be faster");
+    // Sec. IV-D / Table 3: piecewise costs more area than scaleTRIM at the
+    // same h (two constants per segment + a real multiplier).
+    let pw = estimate(&PiecewiseLinear::new(8, 4, 4));
+    let st48 = estimate(&ScaleTrim::new(8, 4, 8));
+    assert!(
+        pw.area_um2 > st48.area_um2,
+        "piecewise {:.1} should out-cost scaleTRIM {:.1}",
+        pw.area_um2,
+        st48.area_um2
+    );
+    // Exact array multiplier costs more than any truncating design.
+    let exact = estimate(&Exact::new(8));
+    assert!(exact.area_um2 > st.area_um2);
+    assert!(exact.pdp_fj > st48.pdp_fj);
+}
+
+#[test]
+fn wider_operands_cost_more() {
+    let pairs: Vec<(Box<dyn ApproxMultiplier>, Box<dyn ApproxMultiplier>)> = vec![
+        (
+            Box::new(ScaleTrim::new(8, 5, 8)),
+            Box::new(ScaleTrim::new(16, 5, 8)),
+        ),
+        (Box::new(Drum::new(8, 5)), Box::new(Drum::new(16, 5))),
+    ];
+    for (mk8, mk16) in &pairs {
+        let e8 = estimate(mk8.as_ref());
+        let e16 = estimate(mk16.as_ref());
+        assert!(e16.area_um2 > e8.area_um2, "{}", e16.name);
+        assert!(e16.pdp_fj > e8.pdp_fj, "{}", e16.name);
+    }
+}
+
+#[test]
+fn pdp_equals_power_times_delay() {
+    for m in paper_configs_8bit().iter().take(10) {
+        let e = estimate(m.as_ref());
+        assert!(
+            (e.pdp_fj - e.power_uw * e.delay_ns).abs() < 1e-6,
+            "{}: PDP {} != P*D {}",
+            e.name,
+            e.pdp_fj,
+            e.power_uw * e.delay_ns
+        );
+    }
+}

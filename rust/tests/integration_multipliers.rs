@@ -1,0 +1,107 @@
+//! Cross-module integration over the behavioural models + error sweeps:
+//! the paper's accuracy orderings and family relationships must hold on
+//! full-space measurements.
+
+use ::scaletrim::error::{exhaustive_sweep, sweep, SweepSpec};
+use ::scaletrim::multipliers::*;
+
+fn mred(m: &dyn ApproxMultiplier) -> f64 {
+    exhaustive_sweep(m).mred_pct
+}
+
+#[test]
+fn scaletrim_family_orderings() {
+    // Within a family: M=8 < M=4 < M=0 at fixed h; MRED drops with h up to
+    // the compensation floor.
+    for h in 3..=5u32 {
+        let m0 = mred(&ScaleTrim::new(8, h, 0));
+        let m4 = mred(&ScaleTrim::new(8, h, 4));
+        let m8 = mred(&ScaleTrim::new(8, h, 8));
+        assert!(m8 <= m4 && m4 < m0, "h={h}: {m8} {m4} {m0}");
+    }
+    assert!(mred(&ScaleTrim::new(8, 5, 8)) < mred(&ScaleTrim::new(8, 3, 8)));
+}
+
+#[test]
+fn paper_cross_family_claims() {
+    // Fig. 9 region claims on the (MRED) axis.
+    let st34 = mred(&ScaleTrim::new(8, 3, 4));
+    let st48 = mred(&ScaleTrim::new(8, 4, 8));
+    let tosam15 = mred(&Tosam::new(8, 1, 5));
+    let drum4 = mred(&Drum::new(8, 4));
+    let mitchell = mred(&Mitchell::new(8));
+    assert!(st48 < tosam15, "ST(4,8) {st48} should beat TOSAM(1,5) {tosam15}");
+    assert!(st34 < drum4, "ST(3,4) {st34} should beat DRUM(4) {drum4}");
+    assert!(st34 < mitchell + 0.1, "ST(3,4) {st34} ~ beats Mitchell {mitchell}");
+}
+
+#[test]
+fn all_registry_configs_produce_bounded_outputs() {
+    // Every design: outputs fit in 2n bits and zero behaves.
+    for m in paper_configs_8bit() {
+        assert_eq!(m.mul(0, 0), 0, "{}", m.name());
+        for a in [1u64, 3, 127, 128, 255] {
+            for b in [1u64, 2, 100, 255] {
+                let p = m.mul(a, b);
+                assert!(
+                    p < 1 << 17,
+                    "{}: {a}*{b} = {p} exceeds 2n+1 bits",
+                    m.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sixteen_bit_registry_sane() {
+    let spec = SweepSpec::Sampled {
+        pairs: 60_000,
+        seed: 11,
+    };
+    for m in paper_configs_16bit() {
+        let r = sweep(m.as_ref(), spec);
+        assert!(
+            r.mred_pct < 40.0,
+            "{}: 16-bit MRED {:.2} out of family",
+            m.name(),
+            r.mred_pct
+        );
+    }
+}
+
+#[test]
+fn scaletrim_16bit_beats_8bit_relative_error() {
+    // More operand bits -> finer fractions -> lower MRED at equal (h, M).
+    let spec = SweepSpec::Sampled {
+        pairs: 300_000,
+        seed: 3,
+    };
+    let m8 = sweep(&ScaleTrim::new(8, 5, 8), SweepSpec::Exhaustive).mred_pct;
+    let m16 = sweep(&ScaleTrim::new(16, 5, 8), spec).mred_pct;
+    assert!(
+        (m16 - m8).abs() < 0.6,
+        "MRED should be h-dominated, 8-bit {m8} vs 16-bit {m16}"
+    );
+}
+
+#[test]
+fn signed_wrapping_preserves_magnitude_accuracy() {
+    let m = ScaleTrim::new(8, 4, 8);
+    for (a, b) in [(57i64, -33i64), (-120, -5), (-1, 1), (90, 11)] {
+        let signed = signed_mul(&m, a, b);
+        let unsigned = m.mul(a.unsigned_abs(), b.unsigned_abs()) as i64;
+        assert_eq!(signed.unsigned_abs(), unsigned.unsigned_abs());
+        assert_eq!(signed < 0, (a < 0) ^ (b < 0) && signed != 0);
+    }
+}
+
+#[test]
+fn error_reports_consistent_across_paths() {
+    // sweep() dispatch must agree with the direct functions.
+    let m = ScaleTrim::new(8, 3, 4);
+    let a = exhaustive_sweep(&m);
+    let b = sweep(&m, SweepSpec::Exhaustive);
+    assert_eq!(a.mred_pct, b.mred_pct);
+    assert_eq!(a.pairs, b.pairs);
+}

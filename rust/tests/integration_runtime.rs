@@ -1,0 +1,131 @@
+//! Runtime integration: the AOT HLO artifact, compiled and executed via
+//! PJRT, must produce logits *bit-identical* to the pure-rust int8
+//! interpreter for the same LUT — this is the contract that makes the
+//! pure-rust sweeps (Figs. 15/16) valid stand-ins for the served model.
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use scaletrim::multipliers::ScaleTrim;
+use scaletrim::nn::{build_lut, exact_lut, Dataset, QuantizedCnn, QuantizedWeights};
+use scaletrim::runtime::{find_artifacts_dir, ArtifactSet, Engine};
+
+fn load(name: &str) -> Option<(ArtifactSet, Dataset, QuantizedCnn)> {
+    let dir = find_artifacts_dir().ok()?;
+    let set = ArtifactSet::resolve(&dir, name).ok()?;
+    let data = Dataset::load(&set.dataset).ok()?;
+    let cnn = QuantizedCnn::new(QuantizedWeights::load(&set.weights).ok()?);
+    Some((set, data, cnn))
+}
+
+#[test]
+fn pjrt_matches_pure_rust_bitwise() {
+    let Some((set, data, cnn)) = load("lenet") else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    let model = engine
+        .load_model(set.hlo.to_str().unwrap(), 32, data.n_classes)
+        .expect("compiling lenet artifact");
+
+    for lut in [exact_lut(), build_lut(&ScaleTrim::new(8, 3, 4))] {
+        // One batch of 32 images through both paths.
+        let img_sz = data.c * data.h * data.w;
+        let mut pixels = Vec::with_capacity(32 * img_sz);
+        for i in 0..32 {
+            pixels.extend(data.image(i).iter().map(|&p| p as i32));
+        }
+        let pjrt_logits = model
+            .run(&pixels, &[32, data.c, data.h, data.w], &lut)
+            .expect("pjrt run");
+        for i in 0..32 {
+            let rust_logits = cnn.forward(data.image(i), &lut);
+            let pj = &pjrt_logits[i * data.n_classes..(i + 1) * data.n_classes];
+            assert_eq!(
+                pj, &rust_logits[..],
+                "image {i}: PJRT and pure-rust logits diverge"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_accuracy_matches_meta() {
+    let Some((set, data, _)) = load("lenet") else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let engine = Engine::cpu().unwrap();
+    let model = engine
+        .load_model(set.hlo.to_str().unwrap(), 32, data.n_classes)
+        .unwrap();
+    let lut = exact_lut();
+    let report =
+        scaletrim::nn::evaluate_accuracy_pjrt(&model, &data, &lut, Some(320)).expect("eval");
+    // aot.py recorded ~99% int8 accuracy for lenet; any healthy run is >0.9.
+    assert!(
+        report.top1 > 0.9,
+        "lenet top1 {} unexpectedly low",
+        report.top1
+    );
+}
+
+#[test]
+fn approximate_luts_change_but_do_not_destroy_accuracy() {
+    let Some((_, data, cnn)) = load("lenet") else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let exact = scaletrim::nn::evaluate_accuracy(&cnn, &data, &exact_lut(), Some(400));
+    let st = scaletrim::nn::evaluate_accuracy(
+        &cnn,
+        &data,
+        &build_lut(&ScaleTrim::new(8, 4, 8)),
+        Some(400),
+    );
+    assert!(
+        st.top1 > exact.top1 - 0.05,
+        "ST(4,8) {} vs exact {}",
+        st.top1,
+        exact.top1
+    );
+}
+
+#[test]
+fn all_four_artifacts_compile() {
+    let Ok(dir) = find_artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = Engine::cpu().unwrap();
+    for name in ["lenet", "convnet_m", "convnet_l", "squeeze_s"] {
+        let Ok(set) = ArtifactSet::resolve(&dir, name) else {
+            eprintln!("skipping {name}: not present");
+            continue;
+        };
+        let data = Dataset::load(&set.dataset).unwrap();
+        let model = engine
+            .load_model(set.hlo.to_str().unwrap(), 32, data.n_classes)
+            .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(model.n_classes, data.n_classes);
+    }
+}
+
+#[test]
+fn interpreter_and_pjrt_accuracy_sanity() {
+    let Some((set, data, cnn)) = load("lenet") else { return };
+    let lut = exact_lut();
+    let r = scaletrim::nn::evaluate_accuracy(&cnn, &data, &lut, Some(500));
+    assert!(r.top1 > 0.9, "pure-rust top1 {}", r.top1);
+    let engine = Engine::cpu().unwrap();
+    let model = engine
+        .load_model(set.hlo.to_str().unwrap(), 32, data.n_classes)
+        .unwrap();
+    let rp = scaletrim::nn::evaluate_accuracy_pjrt(&model, &data, &lut, Some(160)).unwrap();
+    assert!(
+        (r.top1 - rp.top1).abs() < 0.05,
+        "paths disagree: rust {} vs pjrt {}",
+        r.top1,
+        rp.top1
+    );
+}

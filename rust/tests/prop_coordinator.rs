@@ -1,0 +1,144 @@
+//! Property tests on coordinator invariants (routing, batching, state):
+//! every request is answered exactly once, batches respect the policy cap,
+//! responses carry the right ids, and the queue survives arbitrary
+//! interleavings of producers, failures, and shutdown.
+
+use ::scaletrim::coordinator::{BatchPolicy, BatchQueue, Coordinator, MockBackend, Request};
+use ::scaletrim::multipliers::{ApproxMultiplier, Exact, ScaleTrim};
+use ::scaletrim::util::prop::Runner;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+fn mk_request(id: u64, tx: mpsc::Sender<::scaletrim::coordinator::Prediction>) -> Request {
+    Request {
+        id,
+        pixels: vec![(id % 251) as u8; 4],
+        enqueued: Instant::now(),
+        reply: tx,
+    }
+}
+
+/// Random (n_requests, max_batch, max_wait) configurations: conservation —
+/// exactly the pushed ids come back out, in FIFO order per lane, with no
+/// batch exceeding the cap.
+#[test]
+fn prop_batch_queue_conservation() {
+    let mut r = Runner::new("batch-queue-conservation", 60);
+    r.run(|g| {
+        let n = g.u64_in(1, 120);
+        let max_batch = g.usize_in(1, 33);
+        let wait_us = g.u64_in(50, 3000);
+        let q = Arc::new(BatchQueue::new(BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_micros(wait_us),
+        }));
+        let (tx, _rx) = mpsc::channel();
+        let producer = {
+            let q = q.clone();
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                for id in 0..n {
+                    assert!(q.push(mk_request(id, tx.clone())));
+                }
+                q.close();
+            })
+        };
+        let mut seen = Vec::new();
+        while let Some(batch) = q.pop_batch() {
+            if batch.len() > max_batch {
+                return Err(format!("batch {} > cap {max_batch}", batch.len()));
+            }
+            seen.extend(batch.iter().map(|r| r.id));
+        }
+        producer.join().unwrap();
+        let expected: Vec<u64> = (0..n).collect();
+        if seen != expected {
+            return Err(format!("ids out of order or lost: got {} ids", seen.len()));
+        }
+        Ok(())
+    });
+}
+
+/// Coordinator end-to-end under random load patterns and injected backend
+/// failures: every submit gets exactly one reply with a matching id.
+#[test]
+fn prop_coordinator_exactly_once() {
+    let mut r = Runner::new("coordinator-exactly-once", 25);
+    r.run(|g| {
+        let batch = g.usize_in(1, 16);
+        let fail_every = if g.bool() { g.usize_in(2, 9) } else { 0 };
+        let n = g.usize_in(1, 200);
+        let backend = Arc::new(MockBackend::new(batch, 4).with_failures(fail_every));
+        let exact = Exact::new(8);
+        let st = ScaleTrim::new(8, 3, 4);
+        let configs: Vec<&dyn ApproxMultiplier> = vec![&exact, &st];
+        let coord = Coordinator::new(
+            backend,
+            &configs,
+            BatchPolicy {
+                max_batch: batch,
+                max_wait: Duration::from_micros(300),
+            },
+        );
+        let mut pending = Vec::new();
+        for i in 0..n {
+            let lane = if i % 2 == 0 { "Exact8" } else { "scaleTRIM(3,4)" };
+            let (id, rx) = coord
+                .submit(lane, vec![i as u8, 0, 0, 0])
+                .map_err(|e| e.to_string())?;
+            pending.push((id, rx));
+        }
+        for (id, rx) in pending {
+            let p = rx
+                .recv_timeout(Duration::from_secs(5))
+                .map_err(|_| format!("request {id} never answered"))?;
+            if p.id != id {
+                return Err(format!("id mismatch: sent {id}, got {}", p.id));
+            }
+        }
+        let m = coord.metrics();
+        let (req, resp) = (
+            m.requests.load(Ordering::Relaxed),
+            m.responses.load(Ordering::Relaxed),
+        );
+        if req != n as u64 || resp != n as u64 {
+            return Err(format!("conservation broken: {req} submitted, {resp} answered"));
+        }
+        Ok(())
+    });
+}
+
+/// Occupancy accounting: sum of batch occupancies equals total responses.
+#[test]
+fn prop_occupancy_accounting() {
+    let mut r = Runner::new("occupancy-accounting", 20);
+    r.run(|g| {
+        let batch = g.usize_in(2, 32);
+        let n = g.usize_in(1, 150);
+        let backend = Arc::new(MockBackend::new(batch, 2));
+        let exact = Exact::new(8);
+        let configs: Vec<&dyn ApproxMultiplier> = vec![&exact];
+        let coord = Coordinator::new(
+            backend,
+            &configs,
+            BatchPolicy {
+                max_batch: batch,
+                max_wait: Duration::from_micros(200),
+            },
+        );
+        let rx: Vec<_> = (0..n)
+            .map(|_| coord.submit("Exact8", vec![0; 4]).unwrap().1)
+            .collect();
+        for r in rx {
+            r.recv().unwrap();
+        }
+        let m = coord.metrics();
+        let occ_sum = m.occupancy_sum.load(Ordering::Relaxed);
+        let resp = m.responses.load(Ordering::Relaxed);
+        if occ_sum != resp {
+            return Err(format!("occupancy sum {occ_sum} != responses {resp}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,135 @@
+//! Property-based tests over the behavioural models (in-repo prop rig,
+//! `util::prop`): structural invariants that must hold for *every* operand
+//! pair and every configuration, with shrinking on failure.
+
+use ::scaletrim::multipliers::*;
+use ::scaletrim::util::prop::Runner;
+
+/// Every design in the registry: zero annihilates, outputs bounded, and
+/// relative error within the family's published envelope.
+#[test]
+fn prop_zoo_global_invariants() {
+    let zoo = paper_configs_8bit();
+    let mut r = Runner::new("zoo-global-invariants", 2000);
+    r.run(|g| {
+        let m = g.choose(&zoo);
+        let a = g.u64_in(0, 255);
+        let b = g.u64_in(0, 255);
+        let p = m.mul(a, b);
+        if a == 0 || b == 0 {
+            // Most designs zero-detect; those that don't (array-based) still
+            // produce 0 because all partial products vanish.
+            if p != 0 {
+                return Err(format!("{}: {a}*{b} = {p}, expected 0", m.name()));
+            }
+            return Ok(());
+        }
+        if p >= 1 << 17 {
+            return Err(format!("{}: {a}*{b} = {p} exceeds 17 bits", m.name()));
+        }
+        let exact = (a * b) as f64;
+        let ared = (p as f64 - exact).abs() / exact;
+        // Widest family envelope in Table 4 is MBM-5 at ~27% MRED; allow
+        // generous per-pair headroom (max error, not mean).
+        if ared > 1.0 {
+            return Err(format!(
+                "{}: {a}*{b} = {p} (exact {exact}), ARED {ared:.3} > 100%",
+                m.name()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// scaleTRIM-specific: commutativity, monotone non-degradation with M, and
+/// the Table-5 max-error envelope.
+#[test]
+fn prop_scaletrim_invariants() {
+    let st34 = ScaleTrim::new(8, 3, 4);
+    let st30 = ScaleTrim::new(8, 3, 0);
+    let mut r = Runner::new("scaletrim-invariants", 3000);
+    r.run(|g| {
+        let a = g.u64_in(1, 255);
+        let b = g.u64_in(1, 255);
+        if st34.mul(a, b) != st34.mul(b, a) {
+            return Err(format!("not commutative at {a},{b}"));
+        }
+        let exact = (a * b) as f64;
+        let ared = (st34.mul(a, b) as f64 - exact).abs() / exact;
+        // Table 5: scaleTRIM(3,4) max ED 6177 over the whole space; the
+        // relative envelope stays under ~25%.
+        if ared > 0.25 {
+            return Err(format!("ARED {ared:.3} at {a}*{b} beyond envelope"));
+        }
+        let _ = st30.mul(a, b); // must not panic anywhere in the domain
+        Ok(())
+    });
+}
+
+/// Truncation helper: reconstructing from the truncated fraction never
+/// overshoots the operand and loses at most the dropped-bit mass.
+#[test]
+fn prop_truncation_bounds() {
+    let mut r = Runner::new("truncation-bounds", 4000);
+    r.run(|g| {
+        let v = g.u64_in(1, 65_535);
+        let h = g.u32_in(1, 8);
+        let n = leading_one(v);
+        let xh = truncate_fraction(v, n, h);
+        if xh >= 1 << h {
+            return Err(format!("xh {xh} exceeds h={h} bits for v={v}"));
+        }
+        // Reconstruct: 2^n (1 + xh/2^h) <= v  and the gap is < 2^n · 2^-h'
+        // where h' = min(h, n).
+        let recon = (1u64 << n) + ((xh << n) >> h);
+        if recon > v {
+            return Err(format!("reconstruction {recon} > v {v} (h={h})"));
+        }
+        let gap = v - recon;
+        let bound = (1u64 << n) >> h.min(n);
+        if n > h && gap >= bound.max(1) {
+            return Err(format!("gap {gap} >= bound {bound} for v={v} h={h}"));
+        }
+        Ok(())
+    });
+}
+
+/// Signed wrapping: sign algebra and magnitude preservation for every
+/// design in the registry.
+#[test]
+fn prop_signed_mul() {
+    let zoo = paper_configs_8bit();
+    let mut r = Runner::new("signed-mul", 2000);
+    r.run(|g| {
+        let m = g.choose(&zoo);
+        let a = g.u64_in(0, 255) as i64 * if g.bool() { -1 } else { 1 };
+        let b = g.u64_in(0, 255) as i64 * if g.bool() { -1 } else { 1 };
+        let s = signed_mul(m.as_ref(), a, b);
+        let mag = m.mul(a.unsigned_abs(), b.unsigned_abs()) as i64;
+        if s.unsigned_abs() != mag.unsigned_abs() {
+            return Err(format!("{}: |{a}*{b}| mismatch", m.name()));
+        }
+        if s != 0 && (s < 0) != ((a < 0) ^ (b < 0)) {
+            return Err(format!("{}: sign of {a}*{b} wrong", m.name()));
+        }
+        Ok(())
+    });
+}
+
+/// DRUM's unbiasing: over random operand windows the signed error is
+/// centred (sampled mean within a small band).
+#[test]
+fn prop_drum_unbiased_sampled() {
+    use ::scaletrim::util::rng::Xoshiro256;
+    let d = Drum::new(8, 4);
+    let mut rng = Xoshiro256::seed_from_u64(99);
+    let mut sum = 0f64;
+    let n = 200_000;
+    for _ in 0..n {
+        let a = rng.gen_operand(8);
+        let b = rng.gen_operand(8);
+        sum += d.mul(a, b) as f64 - (a * b) as f64;
+    }
+    let mean = sum / n as f64;
+    assert!(mean.abs() < 160.0, "sampled mean error {mean} not centred");
+}
