@@ -3,15 +3,18 @@
 //! are present.
 
 use ::scaletrim::multipliers::ScaleTrim;
-use ::scaletrim::nn::{build_lut, exact_lut, Dataset, QuantizedCnn, QuantizedWeights};
+use ::scaletrim::nn::{build_lut, cached_lut, exact_lut, Dataset, QuantizedCnn, QuantizedWeights};
 use ::scaletrim::runtime::{find_artifacts_dir, ArtifactSet, Engine};
 use ::scaletrim::util::bench::{black_box, Bencher};
 
 fn main() {
     let mut b = Bencher::new();
     let st = ScaleTrim::new(8, 4, 8);
-    b.bench("lut/build 256x256 (scaleTRIM)", Some(65_536), || {
+    b.bench("lut/build 256x256 (scaleTRIM, batched)", Some(65_536), || {
         black_box(build_lut(&st).len());
+    });
+    b.bench("lut/cached 256x256 (process-wide hit)", Some(65_536), || {
+        black_box(cached_lut(&st).len());
     });
 
     let Ok(dir) = find_artifacts_dir() else {

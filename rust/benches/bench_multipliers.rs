@@ -1,41 +1,84 @@
 //! Behavioural-model throughput: Mops/s per multiplier family. This is the
 //! DSE hot path (§Perf L3) — a full 8-bit sweep is 65k `mul` calls per
 //! config, a 16-bit sweep 4M+.
+//!
+//! Three planes per design where it matters:
+//! - `mul/…`        scalar through `&dyn` (the seed path: one virtual call
+//!                  plus parameter reloads per pair);
+//! - `mul_batch/…`  the batched kernel plane (one virtual call per 4096
+//!                  pairs, monomorphized loop body);
+//! - `compiled/…`   `CompiledMul` (every multiply a table load).
 
 use ::scaletrim::multipliers::*;
 use ::scaletrim::util::bench::{black_box, Bencher};
 use ::scaletrim::util::rng::Xoshiro256;
 
-fn bench_mult(b: &mut Bencher, m: &dyn ApproxMultiplier) {
+const OPS: usize = 4096;
+
+fn operands(bits: u32) -> (Vec<u64>, Vec<u64>) {
     // Pre-generated operand stream so PRNG cost stays out of the loop.
     let mut rng = Xoshiro256::seed_from_u64(1);
-    let ops: Vec<(u64, u64)> = (0..4096)
-        .map(|_| (rng.gen_operand(m.bits()), rng.gen_operand(m.bits())))
-        .collect();
-    b.bench(&format!("mul/{}", m.name()), Some(ops.len() as u64), || {
+    let a = (0..OPS).map(|_| rng.gen_operand(bits)).collect();
+    let b = (0..OPS).map(|_| rng.gen_operand(bits)).collect();
+    (a, b)
+}
+
+fn bench_mult(b: &mut Bencher, m: &dyn ApproxMultiplier) {
+    let (xs, ys) = operands(m.bits());
+    b.bench(&format!("mul/{}", m.name()), Some(OPS as u64), || {
         let mut acc = 0u64;
-        for &(a, bb) in &ops {
-            acc = acc.wrapping_add(m.mul(a, bb));
+        for (&x, &y) in xs.iter().zip(ys.iter()) {
+            acc = acc.wrapping_add(m.mul(x, y));
         }
         black_box(acc);
     });
 }
 
+fn bench_mult_batch(b: &mut Bencher, m: &dyn ApproxMultiplier) {
+    let (xs, ys) = operands(m.bits());
+    let mut out = vec![0u64; OPS];
+    b.bench(&format!("mul_batch/{}", m.name()), Some(OPS as u64), || {
+        m.mul_batch(&xs, &ys, &mut out);
+        black_box(out[0]);
+    });
+}
+
 fn main() {
     let mut b = Bencher::new();
+    // Scalar-vs-batched pairs for every design with a monomorphized
+    // override (plus a few default-method designs for the dispatch-only
+    // delta).
     bench_mult(&mut b, &Exact::new(8));
+    bench_mult_batch(&mut b, &Exact::new(8));
     bench_mult(&mut b, &ScaleTrim::new(8, 3, 4));
+    bench_mult_batch(&mut b, &ScaleTrim::new(8, 3, 4));
     bench_mult(&mut b, &ScaleTrim::new(8, 4, 8));
+    bench_mult_batch(&mut b, &ScaleTrim::new(8, 4, 8));
     bench_mult(&mut b, &ScaleTrim::new(16, 5, 8));
+    bench_mult_batch(&mut b, &ScaleTrim::new(16, 5, 8));
     bench_mult(&mut b, &Drum::new(8, 4));
+    bench_mult_batch(&mut b, &Drum::new(8, 4));
     bench_mult(&mut b, &Dsm::new(8, 4));
+    bench_mult_batch(&mut b, &Dsm::new(8, 4));
     bench_mult(&mut b, &Tosam::new(8, 1, 5));
+    bench_mult_batch(&mut b, &Tosam::new(8, 1, 5));
     bench_mult(&mut b, &Mitchell::new(8));
+    bench_mult_batch(&mut b, &Mitchell::new(8));
     bench_mult(&mut b, &Mbm::new(8, 2));
+    bench_mult_batch(&mut b, &Mbm::new(8, 2));
+    // Default-method designs: batched still saves dispatch per chunk.
     bench_mult(&mut b, &Roba::new(8));
+    bench_mult_batch(&mut b, &Roba::new(8));
     bench_mult(&mut b, &Ilm::new(8, 0));
     bench_mult(&mut b, &PiecewiseLinear::new(8, 4, 4));
     bench_mult(&mut b, &Scdm::new(8, 4)); // bit-serial array model: slowest
+    bench_mult_batch(&mut b, &Scdm::new(8, 4));
     bench_mult(&mut b, &EvoLibSurrogate::new(8, 3));
+    // The compiled plane: any design folded to a full product table.
+    let compiled = CompiledMul::compile(&ScaleTrim::new(8, 3, 4));
+    bench_mult(&mut b, &compiled);
+    bench_mult_batch(&mut b, &compiled);
+    let compiled_scdm = CompiledMul::compile(&Scdm::new(8, 4));
+    bench_mult_batch(&mut b, &compiled_scdm);
     let _ = b.write_jsonl("target/bench_multipliers.jsonl");
 }

@@ -1,20 +1,62 @@
 //! Sweep-engine benchmarks: the Table-4 / Fig.-10 regeneration workloads
 //! (exhaustive 8-bit, sampled 16-bit) and the calibration scans.
+//!
+//! The headline comparison is the batched kernel plane against the seed
+//! scalar-dyn path on the same exhaustive 8-bit sweep (65,025 pairs): the
+//! scalar path pays one virtual call + parameter reloads per pair, the
+//! batched path one virtual call per 4096 pairs, and the compiled path a
+//! table load per pair. Results land in `target/bench_sweep.jsonl`;
+//! EXPERIMENTS.md's perf iteration log tracks the measured ratios.
 
-use ::scaletrim::error::{exhaustive_sweep, sampled_sweep};
+use ::scaletrim::error::{
+    exhaustive_sweep, exhaustive_sweep_scalar, percentile_sweep, sampled_sweep,
+};
 use ::scaletrim::lut::calibrate;
-use ::scaletrim::multipliers::ScaleTrim;
+use ::scaletrim::multipliers::{CompiledMul, ScaleTrim};
+use ::scaletrim::nn::{build_lut, cached_lut};
 use ::scaletrim::util::bench::{black_box, Bencher};
 
 fn main() {
     let mut b = Bencher::new();
     let st = ScaleTrim::new(8, 3, 4);
-    b.bench("sweep/exhaustive-8bit (65k pairs)", Some(255 * 255), || {
-        black_box(exhaustive_sweep(&st).mred_pct);
-    });
+    b.bench(
+        "sweep/exhaustive-8bit scalar-dyn seed path (65k pairs)",
+        Some(255 * 255),
+        || {
+            black_box(exhaustive_sweep_scalar(&st).mred_pct);
+        },
+    );
+    b.bench(
+        "sweep/exhaustive-8bit batched (65k pairs)",
+        Some(255 * 255),
+        || {
+            black_box(exhaustive_sweep(&st).mred_pct);
+        },
+    );
+    let compiled = CompiledMul::compile(&st);
+    b.bench(
+        "sweep/exhaustive-8bit compiled table (65k pairs)",
+        Some(255 * 255),
+        || {
+            black_box(exhaustive_sweep(&compiled).mred_pct);
+        },
+    );
     let st16 = ScaleTrim::new(16, 5, 8);
     b.bench("sweep/sampled-16bit (256k pairs)", Some(262_144), || {
         black_box(sampled_sweep(&st16, 262_144, 7).mred_pct);
+    });
+    b.bench(
+        "sweep/percentile-8bit batched-parallel (65k AREDs)",
+        Some(255 * 255),
+        || {
+            black_box(percentile_sweep(&st).max_pct);
+        },
+    );
+    b.bench("lut/build 256x256 batched", Some(65_536), || {
+        black_box(build_lut(&st).len());
+    });
+    b.bench("lut/cached (process-wide hit)", Some(65_536), || {
+        black_box(cached_lut(&st).len());
     });
     b.bench("calibrate/8bit h=5 M=8", None, || {
         black_box(calibrate(8, 5, 8).alpha);

@@ -1,12 +1,14 @@
 //! The coordinator: request router + per-config dynamic batchers + worker
 //! threads owning the backend. One shared AOT executable serves every
 //! multiplier configuration — only the LUT operand differs per queue.
+//! Lane LUTs come from the process-wide [`cached_lut`] cache, so N lanes
+//! (or N coordinators) over the same config share one 256 KiB build.
 
 use super::backend::Backend;
 use super::batcher::{BatchPolicy, BatchQueue, Request};
 use super::metrics::Metrics;
 use crate::multipliers::ApproxMultiplier;
-use crate::nn::build_lut;
+use crate::nn::cached_lut;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -41,7 +43,8 @@ pub struct Coordinator {
 impl Coordinator {
     /// Build a coordinator over a backend and a set of multiplier configs.
     /// Each config gets its own lane (queue + worker thread); the backend
-    /// is shared.
+    /// is shared, and each lane's product LUT is resolved through the
+    /// process-wide cache (one batched build per config, ever).
     pub fn new(
         backend: Arc<dyn Backend>,
         configs: &[&dyn ApproxMultiplier],
@@ -52,7 +55,7 @@ impl Coordinator {
         let img_size = c * h * w;
         let mut lanes = HashMap::new();
         for m in configs {
-            let lut = Arc::new(build_lut(*m));
+            let lut = cached_lut(*m);
             let queue = Arc::new(BatchQueue::new(policy));
             let worker = spawn_worker(
                 m.name(),

@@ -1,6 +1,11 @@
 //! Error analysis (paper Sec. IV-A): ARED/MRED (Eq. 8), MED, Max-Error,
 //! Std, error histograms, and the operand-space sweep drivers (exhaustive
 //! for 8-bit, deterministic-sampled for 16-bit).
+//!
+//! All drivers run on the batched kernel plane: operand chunks through
+//! [`crate::multipliers::ApproxMultiplier::mul_batch`], one virtual call
+//! per [`BATCH`] pairs. [`exhaustive_sweep_scalar`] preserves the
+//! seed per-pair dispatch path as the benchmark/equality reference.
 
 mod histogram;
 mod metrics;
@@ -8,4 +13,7 @@ mod sweep;
 
 pub use histogram::{ErrorHistogram, HistogramBin};
 pub use metrics::{ErrorReport, PercentileReport};
-pub use sweep::{exhaustive_sweep, percentile_sweep, sampled_sweep, sweep, SweepSpec};
+pub use sweep::{
+    exhaustive_sweep, exhaustive_sweep_scalar, percentile_sweep, sampled_sweep, sweep, SweepSpec,
+    BATCH, EXHAUSTIVE_MAX_BITS,
+};

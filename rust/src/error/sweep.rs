@@ -1,19 +1,39 @@
-//! Operand-space sweep drivers.
+//! Operand-space sweep drivers, running on the batched kernel plane.
 //!
 //! 8-bit configurations are evaluated over the *full* operand space
 //! (65,025 non-zero pairs — the paper's population). 16-bit spaces have
 //! 2³² pairs; the paper samples, and so do we: a fixed-seed xoshiro stream,
 //! 4M pairs by default. Sweeps fan out across `std::thread` workers
-//! (rayon is unavailable offline) and merge streaming accumulators.
+//! (rayon is unavailable offline; thread count from [`workers`]) and merge
+//! streaming accumulators.
+//!
+//! Every driver generates operand *chunks* ([`BATCH`] pairs) and pushes
+//! them through [`ApproxMultiplier::mul_batch`], so the per-pair cost is a
+//! monomorphized kernel body instead of a virtual call plus parameter
+//! reloads — dynamic dispatch is paid once per 4096 pairs. The seed
+//! scalar-dyn path survives as [`exhaustive_sweep_scalar`], the reference
+//! the batched plane is benchmarked (`benches/bench_sweep.rs`) and
+//! equality-tested against.
 
 use super::metrics::{ErrorReport, ErrorReportBuilder, PercentileReport};
 use crate::multipliers::ApproxMultiplier;
+use crate::util::parallel::workers;
 use crate::util::rng::Xoshiro256;
+
+/// Operand pairs per `mul_batch` call: large enough to amortise dispatch,
+/// small enough that the three u64 buffers (96 KiB) stay cache-resident.
+pub const BATCH: usize = 4096;
+
+/// Widest operand space traversed exhaustively — by [`SweepSpec::default_for`]
+/// and by [`percentile_sweep`], which materialises the full ARED vector:
+/// `(2^n − 1)²` f64s is 0.5 MiB at 8 bits, 8 MiB at 10, 134 MiB at this
+/// 12-bit ceiling, and an untenable ≥ 2.1 GiB beyond it.
+pub const EXHAUSTIVE_MAX_BITS: u32 = 12;
 
 /// How to traverse the operand space.
 #[derive(Debug, Clone, Copy)]
 pub enum SweepSpec {
-    /// Every non-zero pair (used for widths ≤ 12 bits).
+    /// Every non-zero pair (used for widths ≤ [`EXHAUSTIVE_MAX_BITS`]).
     Exhaustive,
     /// `pairs` uniform random non-zero pairs from the given seed.
     Sampled {
@@ -25,10 +45,10 @@ pub enum SweepSpec {
 }
 
 impl SweepSpec {
-    /// The harness default for a bit-width: exhaustive up to 12 bits,
-    /// 4M-pair fixed-seed sample beyond.
+    /// The harness default for a bit-width: exhaustive up to
+    /// [`EXHAUSTIVE_MAX_BITS`], 4M-pair fixed-seed sample beyond.
     pub fn default_for(bits: u32) -> Self {
-        if bits <= 12 {
+        if bits <= EXHAUSTIVE_MAX_BITS {
             SweepSpec::Exhaustive
         } else {
             SweepSpec::Sampled {
@@ -39,12 +59,37 @@ impl SweepSpec {
     }
 }
 
-/// Number of worker threads used by sweeps.
-fn workers() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .min(32)
+/// Drive `m.mul_batch` over a pair stream in [`BATCH`]-sized chunks,
+/// handing `(a, b, approx)` to the sink per pair, in stream order (so
+/// accumulation order — and therefore every float result — is identical
+/// to the scalar reference path).
+fn drive_batched<I, S>(m: &dyn ApproxMultiplier, pairs: I, mut sink: S)
+where
+    I: Iterator<Item = (u64, u64)>,
+    S: FnMut(u64, u64, u64),
+{
+    let mut a_buf: Vec<u64> = Vec::with_capacity(BATCH);
+    let mut b_buf: Vec<u64> = Vec::with_capacity(BATCH);
+    let mut out = vec![0u64; BATCH];
+    for (a, b) in pairs {
+        a_buf.push(a);
+        b_buf.push(b);
+        if a_buf.len() == BATCH {
+            m.mul_batch(&a_buf, &b_buf, &mut out);
+            for i in 0..BATCH {
+                sink(a_buf[i], b_buf[i], out[i]);
+            }
+            a_buf.clear();
+            b_buf.clear();
+        }
+    }
+    if !a_buf.is_empty() {
+        let len = a_buf.len();
+        m.mul_batch(&a_buf, &b_buf, &mut out[..len]);
+        for i in 0..len {
+            sink(a_buf[i], b_buf[i], out[i]);
+        }
+    }
 }
 
 /// Run an error sweep and aggregate the paper's metrics.
@@ -56,8 +101,43 @@ pub fn sweep(m: &dyn ApproxMultiplier, spec: SweepSpec) -> ErrorReport {
 }
 
 /// Exhaustive sweep over every non-zero operand pair, parallelised by
-/// chunking the `a` axis.
+/// chunking the `a` axis, each worker streaming its rows through the
+/// batched kernel plane.
 pub fn exhaustive_sweep(m: &dyn ApproxMultiplier) -> ErrorReport {
+    let n = 1u64 << m.bits();
+    let nthreads = workers();
+    let chunk = (n - 1).div_ceil(nthreads as u64);
+    let mut builders: Vec<ErrorReportBuilder> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..nthreads {
+            let lo = 1 + t as u64 * chunk;
+            let hi = (lo + chunk).min(n);
+            if lo >= hi {
+                continue;
+            }
+            handles.push(scope.spawn(move || {
+                let mut b = ErrorReportBuilder::new();
+                let rows = (lo..hi).flat_map(|a| (1..n).map(move |bb| (a, bb)));
+                drive_batched(m, rows, |a, bb, approx| b.push(approx, a * bb));
+                b
+            }));
+        }
+        for h in handles {
+            builders.push(h.join().expect("sweep worker panicked"));
+        }
+    });
+    let mut total = ErrorReportBuilder::new();
+    for b in &builders {
+        total.merge(b);
+    }
+    total.finish()
+}
+
+/// The seed scalar-dyn exhaustive sweep: one virtual `mul` per pair.
+/// Kept as the reference the batched plane is equality-tested and
+/// benchmarked against — do not route new callers through it.
+pub fn exhaustive_sweep_scalar(m: &dyn ApproxMultiplier) -> ErrorReport {
     let n = 1u64 << m.bits();
     let nthreads = workers();
     let chunk = (n - 1).div_ceil(nthreads as u64);
@@ -92,7 +172,7 @@ pub fn exhaustive_sweep(m: &dyn ApproxMultiplier) -> ErrorReport {
 }
 
 /// Fixed-seed sampled sweep (16-bit spaces), parallelised with per-thread
-/// derived seeds.
+/// derived seeds, batched per chunk.
 pub fn sampled_sweep(m: &dyn ApproxMultiplier, pairs: u64, seed: u64) -> ErrorReport {
     let bits = m.bits();
     let nthreads = workers();
@@ -108,10 +188,21 @@ pub fn sampled_sweep(m: &dyn ApproxMultiplier, pairs: u64, seed: u64) -> ErrorRe
             handles.push(scope.spawn(move || {
                 let mut rng = Xoshiro256::seed_from_u64(seed ^ (t as u64).wrapping_mul(0x9E37));
                 let mut b = ErrorReportBuilder::new();
-                for _ in 0..todo {
-                    let a = rng.gen_operand(bits);
-                    let bb = rng.gen_operand(bits);
-                    b.push(m.mul(a, bb), a * bb);
+                let mut a_buf = vec![0u64; BATCH];
+                let mut b_buf = vec![0u64; BATCH];
+                let mut out = vec![0u64; BATCH];
+                let mut left = todo;
+                while left > 0 {
+                    let len = (left as usize).min(BATCH);
+                    for i in 0..len {
+                        a_buf[i] = rng.gen_operand(bits);
+                        b_buf[i] = rng.gen_operand(bits);
+                    }
+                    m.mul_batch(&a_buf[..len], &b_buf[..len], &mut out[..len]);
+                    for i in 0..len {
+                        b.push(out[i], a_buf[i] * b_buf[i]);
+                    }
+                    left -= len as u64;
                 }
                 b
             }));
@@ -128,18 +219,48 @@ pub fn sampled_sweep(m: &dyn ApproxMultiplier, pairs: u64, seed: u64) -> ErrorRe
 }
 
 /// Exhaustive percentile sweep (Table 3): materialises the full ARED
-/// vector, so 8-bit only.
+/// vector, so widths are capped at [`EXHAUSTIVE_MAX_BITS`] — the same
+/// bound as [`SweepSpec::default_for`]'s exhaustive policy (134 MiB of
+/// f64s at 12 bits; see the constant's memory math). Parallelised over
+/// the `a` axis like its sibling drivers, on the batched plane.
 pub fn percentile_sweep(m: &dyn ApproxMultiplier) -> PercentileReport {
-    assert!(m.bits() <= 10, "percentile sweep materialises all AREDs");
+    assert!(
+        m.bits() <= EXHAUSTIVE_MAX_BITS,
+        "percentile sweep materialises all (2^{} - 1)^2 AREDs: past {} bits that is >= 2.1 GiB",
+        m.bits(),
+        EXHAUSTIVE_MAX_BITS
+    );
     let n = 1u64 << m.bits();
-    let mut areds = Vec::with_capacity(((n - 1) * (n - 1)) as usize);
-    for a in 1..n {
-        for b in 1..n {
-            let exact = a * b;
-            let ared = ((m.mul(a, b) as f64 - exact as f64) / exact as f64).abs();
-            areds.push(ared);
+    let nthreads = workers();
+    let chunk = (n - 1).div_ceil(nthreads as u64);
+    // One allocation, pre-split into disjoint per-worker windows (each
+    // worker's row range contributes exactly `rows · (n − 1)` AREDs), so
+    // peak memory stays at the single documented vector — no per-thread
+    // partials to double it, no merge copies.
+    let mut areds = vec![0f64; ((n - 1) * (n - 1)) as usize];
+    std::thread::scope(|scope| {
+        let mut rest = &mut areds[..];
+        for t in 0..nthreads {
+            let lo = 1 + t as u64 * chunk;
+            let hi = (lo + chunk).min(n);
+            if lo >= hi {
+                continue;
+            }
+            let len = ((hi - lo) * (n - 1)) as usize;
+            let (mine, tail) = std::mem::take(&mut rest).split_at_mut(len);
+            rest = tail;
+            scope.spawn(move || {
+                let mut i = 0usize;
+                let rows = (lo..hi).flat_map(|a| (1..n).map(move |bb| (a, bb)));
+                drive_batched(m, rows, |a, bb, approx| {
+                    let exact = (a * bb) as f64;
+                    mine[i] = ((approx as f64 - exact) / exact).abs();
+                    i += 1;
+                });
+            });
         }
-    }
+        debug_assert!(rest.is_empty(), "worker windows must tile the ARED vector");
+    });
     PercentileReport::from_areds(areds)
 }
 
@@ -164,6 +285,21 @@ mod tests {
         assert!((r.med - 611.16).abs() < 40.0, "MED {}", r.med);
         assert!((r.std - 779.87).abs() < 60.0, "Std {}", r.std);
         assert!((r.max_error - 4096.0).abs() < 600.0, "Max {}", r.max_error);
+    }
+
+    #[test]
+    fn batched_equals_scalar_reference() {
+        // Same partition, same stream order, same accumulators — the
+        // batched plane must reproduce the seed scalar path exactly.
+        for m in [ScaleTrim::new(8, 3, 4), ScaleTrim::new(8, 5, 8)] {
+            let batched = exhaustive_sweep(&m);
+            let scalar = exhaustive_sweep_scalar(&m);
+            assert_eq!(batched.pairs, scalar.pairs);
+            assert!((batched.mred_pct - scalar.mred_pct).abs() < 1e-12);
+            assert!((batched.med - scalar.med).abs() < 1e-9);
+            assert!((batched.std - scalar.std).abs() < 1e-9);
+            assert_eq!(batched.max_error, scalar.max_error);
+        }
     }
 
     #[test]
@@ -201,5 +337,35 @@ mod tests {
         assert!(p.mean_pct > 0.0);
         assert!(p.median_pct <= p.p95_pct && p.p95_pct <= p.p99_pct);
         assert!(p.p99_pct <= p.max_pct);
+    }
+
+    #[test]
+    fn percentile_sweep_handles_widths_past_8bit() {
+        // The old guard claimed "8-bit only" while asserting <= 10; the
+        // unified policy admits everything SweepSpec traverses
+        // exhaustively. 10-bit: ~1M AREDs, 8 MiB — comfortably in budget.
+        let p = percentile_sweep(&Exact::new(10));
+        assert_eq!(p.max_pct, 0.0);
+        assert_eq!(p.mean_pct, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "percentile sweep materialises")]
+    fn percentile_sweep_rejects_beyond_exhaustive_ceiling() {
+        let _ = percentile_sweep(&Exact::new(13));
+    }
+
+    #[test]
+    fn exhaustive_policy_boundary() {
+        // default_for and the percentile guard share EXHAUSTIVE_MAX_BITS:
+        // 12 is the last exhaustive width, 13 falls back to sampling.
+        assert!(matches!(
+            SweepSpec::default_for(EXHAUSTIVE_MAX_BITS),
+            SweepSpec::Exhaustive
+        ));
+        assert!(matches!(
+            SweepSpec::default_for(EXHAUSTIVE_MAX_BITS + 1),
+            SweepSpec::Sampled { .. }
+        ));
     }
 }

@@ -20,7 +20,9 @@ mod designs;
 mod gates;
 mod netlist;
 
-pub use components::{adder, array_multiplier, barrel_shifter, const_lut, lod, mux, zero_detect, Cost};
+pub use components::{
+    adder, array_multiplier, barrel_shifter, const_lut, lod, mux, zero_detect, Cost,
+};
 pub use designs::{estimate, paper_reference, HwEstimate};
 pub use gates::{Gate, GateCounts, LIB45};
 pub use netlist::{

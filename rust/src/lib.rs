@@ -8,18 +8,27 @@
 //! - [`multipliers`] — bit-accurate behavioural models of scaleTRIM and every
 //!   baseline the paper compares against (DRUM, DSM, TOSAM, Mitchell, MBM,
 //!   RoBA, LETAM, ILM, Mitchell-LODII, AXM8, SCDM8, MSAMZ, piecewise-linear,
-//!   EvoLib surrogates, exact).
+//!   EvoLib surrogates, exact), plus the **batched kernel plane**: every
+//!   design answers `mul_batch` over operand chunks (monomorphized
+//!   overrides for the hot designs hoist parameter loads out of the loop),
+//!   and `CompiledMul` folds any design into a full product table for
+//!   pure-load repeat evaluation.
 //! - [`lut`] — the offline calibration flow of Sec. III: zero-intercept
 //!   least-squares linearization (α, ΔEE) and the piecewise-constant
 //!   compensation LUT (C_i).
 //! - [`error`] — error metrics (MRED Eq. 8, MED, Max-Error, Std) and the
-//!   exhaustive / sampled operand-space sweeps.
+//!   exhaustive / sampled / percentile operand-space sweeps, all driven in
+//!   `mul_batch` chunks over worker threads (the scalar-dyn seed path
+//!   survives only as a benchmark reference).
 //! - [`hardware`] — a gate-level structural cost model (area, delay, power,
 //!   PDP) standing in for the paper's 45nm Synopsys flow.
 //! - [`dse`] — design-space exploration: config enumeration, Pareto fronts,
 //!   constraint queries.
 //! - [`nn`] — int8 CNN inference with approximate MACs (product-LUT driven),
-//!   dataset loading and accuracy evaluation.
+//!   dataset loading and accuracy evaluation; product LUTs are built in one
+//!   batched pass and shared process-wide through `nn::cached_lut` (the
+//!   coordinator's lanes, the report harnesses and the CLI all consume the
+//!   same per-config build).
 //! - [`runtime`] — PJRT wrapper: loads AOT-compiled HLO-text artifacts and
 //!   executes them on the CPU client.
 //! - [`coordinator`] — the serving layer: request router, dynamic batcher,

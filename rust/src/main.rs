@@ -20,7 +20,7 @@ use scaletrim::hardware::estimate;
 use scaletrim::multipliers::{
     paper_configs_16bit, paper_configs_8bit, ApproxMultiplier, Exact, ScaleTrim,
 };
-use scaletrim::nn::{build_lut, exact_lut, Dataset};
+use scaletrim::nn::{cached_lut, exact_lut, Dataset};
 use scaletrim::runtime::{find_artifacts_dir, ArtifactSet};
 use scaletrim::util::cli::Args;
 use scaletrim::util::table::{f2, Table};
@@ -135,12 +135,13 @@ fn main() -> Result<()> {
             let data = Dataset::load(&set.dataset)?;
             let engine = runtime::Engine::cpu()?;
             let loaded = engine.load_model(set.hlo.to_str().unwrap(), 32, data.n_classes)?;
-            let lut = if config == "exact" {
-                exact_lut()
+            let lut: Arc<Vec<i32>> = if config == "exact" {
+                Arc::new(exact_lut())
             } else {
                 let m = find_config(&config, 8)
                     .ok_or_else(|| anyhow::anyhow!("unknown config {config:?}"))?;
-                build_lut(m.as_ref())
+                // Process-wide cache, shared with `serve` lanes.
+                cached_lut(m.as_ref())
             };
             let t0 = std::time::Instant::now();
             let r = nn::evaluate_accuracy_pjrt(&loaded, &data, &lut, Some(limit))?;

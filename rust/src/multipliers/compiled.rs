@@ -1,0 +1,136 @@
+//! `CompiledMul` — a table-backed kernel on the batched plane: folds *any*
+//! behavioural design into its full `2^n × 2^n` product table so every
+//! subsequent multiply is a single load. Built once via `mul_batch` (the
+//! batched plane compiles itself), usable anywhere an [`ApproxMultiplier`]
+//! is: repeat-evaluation paths (DSE re-sweeps, calibration scans, serving
+//! lanes that re-characterise a config) trade one up-front pass over the
+//! operand space for pure-load steady-state throughput.
+//!
+//! Memory: `4·2^2n` bytes (products of `n ≤ 12`-bit designs fit `u32`) —
+//! 256 KiB at 8 bits, 67 MiB at the 12-bit ceiling. Wider spaces cannot be
+//! tabulated; [`CompiledMul::compile`] asserts the bound.
+
+use super::ApproxMultiplier;
+
+/// Product-table kernel compiled from a behavioural design.
+#[derive(Debug, Clone)]
+pub struct CompiledMul {
+    name: String,
+    bits: u32,
+    /// Row-major full product table: `table[(a << bits) | b] = mul(a, b)`.
+    table: Vec<u32>,
+}
+
+impl CompiledMul {
+    /// Widest operand space that can be tabulated (`2^24` entries, 67 MiB);
+    /// matches the sweep layer's exhaustive-traversal ceiling.
+    pub const MAX_BITS: u32 = 12;
+
+    /// Tabulate `m` over its full operand space through the batched plane.
+    ///
+    /// Panics when `m.bits() > MAX_BITS` (the table would exceed 67 MiB)
+    /// or if the design produces a product that does not fit 32 bits
+    /// (impossible for any sane `n ≤ 12`-bit design: exact peak is `2^24`).
+    pub fn compile(m: &dyn ApproxMultiplier) -> Self {
+        let bits = m.bits();
+        assert!(
+            bits <= Self::MAX_BITS,
+            "CompiledMul: {} is {bits}-bit; tables beyond {} bits exceed 67 MiB",
+            m.name(),
+            Self::MAX_BITS
+        );
+        let n = 1usize << bits;
+        let mut table = vec![0u32; n * n];
+        let b_ops: Vec<u64> = (0..n as u64).collect();
+        let mut a_ops = vec![0u64; n];
+        let mut out = vec![0u64; n];
+        for a in 0..n as u64 {
+            a_ops.fill(a);
+            m.mul_batch(&a_ops, &b_ops, &mut out);
+            let row = &mut table[(a as usize) * n..(a as usize + 1) * n];
+            for (slot, &p) in row.iter_mut().zip(out.iter()) {
+                assert!(p <= u32::MAX as u64, "{}: product {p} overflows u32", m.name());
+                *slot = p as u32;
+            }
+        }
+        Self {
+            name: format!("compiled[{}]", m.name()),
+            bits,
+            table,
+        }
+    }
+
+    /// Table footprint in bytes.
+    pub fn table_bytes(&self) -> usize {
+        self.table.len() * std::mem::size_of::<u32>()
+    }
+}
+
+impl ApproxMultiplier for CompiledMul {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    #[inline]
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        self.table[((a as usize) << self.bits) | b as usize] as u64
+    }
+
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "mul_batch: operand slices differ");
+        assert_eq!(a.len(), out.len(), "mul_batch: output slice differs");
+        let bits = self.bits;
+        let table = &self.table[..];
+        for ((&x, &y), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
+            *o = table[((x as usize) << bits) | y as usize] as u64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::{Exact, ScaleTrim};
+
+    #[test]
+    fn compiled_matches_source_over_full_space() {
+        let src = ScaleTrim::new(8, 3, 4);
+        let c = CompiledMul::compile(&src);
+        assert_eq!(c.bits(), 8);
+        assert_eq!(c.name(), "compiled[scaleTRIM(3,4)]");
+        for a in 0..256u64 {
+            for b in 0..256u64 {
+                assert_eq!(c.mul(a, b), src.mul(a, b), "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_batch_is_pure_loads_and_identical() {
+        let src = Exact::new(8);
+        let c = CompiledMul::compile(&src);
+        let a: Vec<u64> = (0..256).collect();
+        let b: Vec<u64> = (0..256).rev().collect();
+        let mut out = vec![0u64; 256];
+        c.mul_batch(&a, &b, &mut out);
+        for i in 0..256 {
+            assert_eq!(out[i], a[i] * b[i]);
+        }
+    }
+
+    #[test]
+    fn table_footprint_matches_width() {
+        let c = CompiledMul::compile(&Exact::new(8));
+        assert_eq!(c.table_bytes(), 256 * 256 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond")]
+    fn rejects_untabulatable_width() {
+        let _ = CompiledMul::compile(&Exact::new(13));
+    }
+}

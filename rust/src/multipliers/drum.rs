@@ -50,6 +50,17 @@ impl ApproxMultiplier for Drum {
     fn mul(&self, a: u64, b: u64) -> u64 {
         self.reduce(a) * self.reduce(b)
     }
+
+    /// Monomorphized batch kernel: `self` is concrete here, so the
+    /// `#[inline]` reduce/multiply body inlines statically and the window
+    /// width `m` stays in a register across the loop.
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "mul_batch: operand slices differ");
+        assert_eq!(a.len(), out.len(), "mul_batch: output slice differs");
+        for ((&x, &y), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
+            *o = self.reduce(x) * self.reduce(y);
+        }
+    }
 }
 
 #[cfg(test)]

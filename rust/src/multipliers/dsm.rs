@@ -75,6 +75,19 @@ impl ApproxMultiplier for Dsm {
         let (sb, shb) = self.segment(b);
         (sa * sb) << (sha + shb)
     }
+
+    /// Monomorphized batch kernel: `self` is concrete here, so the
+    /// `#[inline]` segment scan inlines statically and the fixed position
+    /// table stays resident across the loop.
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "mul_batch: operand slices differ");
+        assert_eq!(a.len(), out.len(), "mul_batch: output slice differs");
+        for ((&x, &y), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
+            let (sa, sha) = self.segment(x);
+            let (sb, shb) = self.segment(y);
+            *o = (sa * sb) << (sha + shb);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -28,6 +28,16 @@ impl ApproxMultiplier for Exact {
     fn mul(&self, a: u64, b: u64) -> u64 {
         a * b
     }
+
+    /// Batch kernel: a plain multiply loop the compiler auto-vectorises —
+    /// the throughput ceiling every approximate design is measured against.
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "mul_batch: operand slices differ");
+        assert_eq!(a.len(), out.len(), "mul_batch: output slice differs");
+        for ((&x, &y), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
+            *o = x * y;
+        }
+    }
 }
 
 #[cfg(test)]

@@ -71,6 +71,32 @@ impl ApproxMultiplier for Mbm {
             }
         }
     }
+
+    /// Monomorphized batch kernel: the truncation distance `k − 1` and the
+    /// calibrated bias constant are hoisted out of the loop.
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "mul_batch: operand slices differ");
+        assert_eq!(a.len(), out.len(), "mul_batch: output slice differs");
+        let d = self.k - 1;
+        let bias = self.bias_fixed as i128;
+        let one = 1u128 << F;
+        for ((&av, &bv), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
+            let at = (av >> d) << d;
+            let bt = (bv >> d) << d;
+            *o = if at == 0 || bt == 0 {
+                0
+            } else {
+                let na = leading_one(at);
+                let nb = leading_one(bt);
+                let x = ((at - (1 << na)) as u128) << (F - na);
+                let y = ((bt - (1 << nb)) as u128) << (F - nb);
+                let s = x + y;
+                let term = if s < one { one + s } else { s << 1 };
+                let biased = (term as i128 + bias).max(0) as u128;
+                ((biased << (na + nb)) >> F) as u64
+            };
+        }
+    }
 }
 
 /// Offline bias calibration: the constant (in normalised-term units) that

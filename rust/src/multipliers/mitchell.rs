@@ -54,6 +54,32 @@ impl ApproxMultiplier for Mitchell {
         };
         res as u64
     }
+
+    /// Monomorphized batch kernel: the datapath width `f` and the fixed
+    /// `1.0` constant are hoisted; the loop body is branch + shifts only.
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "mul_batch: operand slices differ");
+        assert_eq!(a.len(), out.len(), "mul_batch: output slice differs");
+        let f = self.bits;
+        let one = 1u128 << f;
+        for ((&av, &bv), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
+            *o = if av == 0 || bv == 0 {
+                0
+            } else {
+                let na = leading_one(av);
+                let nb = leading_one(bv);
+                let x = ((av - (1 << na)) as u128) << (f - na);
+                let y = ((bv - (1 << nb)) as u128) << (f - nb);
+                let s = x + y;
+                let res = if s < one {
+                    ((one + s) << (na + nb)) >> f
+                } else {
+                    (s << (na + nb + 1)) >> f
+                };
+                res as u64
+            };
+        }
+    }
 }
 
 #[cfg(test)]

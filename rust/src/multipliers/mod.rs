@@ -5,6 +5,19 @@
 //! multiplier evaluated as `mul(a, b)` over `a, b ∈ [0, 2^n)`. Signed use is
 //! sign-magnitude wrapping (paper Sec. III-D); [`signed_mul`] provides it.
 //!
+//! ## The batched kernel plane
+//!
+//! Every hot path in the system (error sweeps, product-LUT construction,
+//! CNN MAC evaluation) consumes multipliers in bulk, so the trait also
+//! carries [`ApproxMultiplier::mul_batch`]: one virtual call per operand
+//! *chunk* instead of one per pair. The default method loops over `mul`;
+//! the hottest designs (scaleTRIM, Mitchell, MBM, DRUM, DSM, TOSAM, exact)
+//! override it with monomorphized loops that hoist parameter loads
+//! (`h`, `ΔEE`, the compensation-LUT base pointer, segment tables) out of
+//! the loop and let LLVM inline and vectorise the datapath. For repeat
+//! evaluation of one config, [`CompiledMul`] folds any design into a full
+//! product table (widths ≤ 12 bits) so every multiply becomes a load.
+//!
 //! The zoo (one module per design):
 //!
 //! | module | paper | family |
@@ -24,8 +37,10 @@
 //! | [`msamz`] | Huang'24 [32] | MSB-guided shift-add |
 //! | [`piecewise`] | Imani'19 [18] / Sec. IV-D | piecewise linearization |
 //! | [`evolib`] | Mrazek'17 [31] | broken-array surrogates (see DESIGN.md) |
+//! | [`compiled`] | — | full-product-table kernel over any design above |
 
 pub mod axm;
+pub mod compiled;
 pub mod drum;
 pub mod dsm;
 pub mod evolib;
@@ -43,6 +58,7 @@ pub mod scdm;
 pub mod tosam;
 
 pub use axm::Axm;
+pub use compiled::CompiledMul;
 pub use drum::Drum;
 pub use dsm::Dsm;
 pub use evolib::EvoLibSurrogate;
@@ -72,6 +88,25 @@ pub trait ApproxMultiplier: Send + Sync {
 
     /// Approximate product of two unsigned operands.
     fn mul(&self, a: u64, b: u64) -> u64;
+
+    /// Element-wise approximate products over operand slices:
+    /// `out[i] = mul(a[i], b[i])`.
+    ///
+    /// This is the bulk entry point of the batched kernel plane — sweeps,
+    /// LUT builders and MAC loops call it once per chunk, paying dynamic
+    /// dispatch per *chunk* rather than per pair. Overrides must be
+    /// observably identical to the per-element default (enforced by
+    /// `tests/prop_multipliers.rs`); they exist only to hoist parameter
+    /// loads and enable inlining.
+    ///
+    /// Panics when the three slices differ in length.
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "mul_batch: operand slices differ");
+        assert_eq!(a.len(), out.len(), "mul_batch: output slice differs");
+        for ((&x, &y), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
+            *o = self.mul(x, y);
+        }
+    }
 
     /// Exact product for reference (identical for every design).
     fn exact(&self, a: u64, b: u64) -> u64 {
@@ -240,5 +275,45 @@ mod tests {
         let before = names.len();
         names.dedup();
         assert_eq!(before, names.len(), "duplicate config names in registry");
+    }
+
+    #[test]
+    fn registry_16bit_nonempty_and_unique_names() {
+        let zoo = paper_configs_16bit();
+        assert!(
+            zoo.len() > 20,
+            "expected full 16-bit zoo, got {}",
+            zoo.len()
+        );
+        for m in &zoo {
+            assert_eq!(m.bits(), 16, "{} registered at wrong width", m.name());
+        }
+        let mut names: Vec<String> = zoo.iter().map(|m| m.name()).collect();
+        names.sort();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(before, names.len(), "duplicate config names in 16-bit registry");
+    }
+
+    #[test]
+    fn default_mul_batch_matches_scalar() {
+        // The default method is the reference the monomorphized overrides
+        // are property-tested against; pin its semantics here.
+        let m = Exact::new(8);
+        let a = [0u64, 1, 7, 255, 128];
+        let b = [5u64, 0, 3, 255, 2];
+        let mut out = [0u64; 5];
+        m.mul_batch(&a, &b, &mut out);
+        for i in 0..a.len() {
+            assert_eq!(out[i], m.mul(a[i], b[i]));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "mul_batch")]
+    fn mul_batch_rejects_length_mismatch() {
+        let m = Exact::new(8);
+        let mut out = [0u64; 2];
+        m.mul_batch(&[1, 2, 3], &[1, 2, 3], &mut out);
     }
 }

@@ -108,6 +108,35 @@ impl ApproxMultiplier for ScaleTrim {
         let total = (term as u128) << (na + nb);
         (total >> F) as u64
     }
+
+    /// Monomorphized batch kernel: the calibrated constants (`h`, the
+    /// linearization shift folding `ΔEE`, the compensation-LUT base
+    /// pointer) are hoisted out of the loop, so the per-pair body is pure
+    /// datapath with no parameter reloads and no dynamic dispatch.
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "mul_batch: operand slices differ");
+        assert_eq!(a.len(), out.len(), "mul_batch: output slice differs");
+        const F: u32 = COMP_FRAC_BITS;
+        let h = self.params.h;
+        let m = self.params.m;
+        let c_fixed = &self.params.c_fixed[..];
+        let lin_shift = (F as i32 - h as i32 + self.params.delta_ee) as u32;
+        for ((&x, &y), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
+            debug_assert!(x < (1u64 << self.bits) && y < (1u64 << self.bits));
+            *o = if x == 0 || y == 0 {
+                0
+            } else {
+                let na = leading_one(x);
+                let nb = leading_one(y);
+                let s = truncate_fraction(x, na, h) + truncate_fraction(y, nb, h);
+                let mut term = (1i64 << F) + ((s as i64) << (F - h)) + ((s as i64) << lin_shift);
+                if m > 0 {
+                    term += c_fixed[self.params.segment(s)];
+                }
+                (((term as u128) << (na + nb)) >> F) as u64
+            };
+        }
+    }
 }
 
 #[cfg(test)]

@@ -64,6 +64,33 @@ impl ApproxMultiplier for Tosam {
         let term = one + sum + prod;
         ((term << (na + nb)) >> F) as u64
     }
+
+    /// Monomorphized batch kernel: `t`, `h` and the derived fixed-point
+    /// shifts are hoisted out of the loop.
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "mul_batch: operand slices differ");
+        assert_eq!(a.len(), out.len(), "mul_batch: output slice differs");
+        const F: u32 = 24;
+        let (t, h) = (self.t, self.h);
+        let one = 1u128 << F;
+        let sum_shift = F - h;
+        let prod_shift = F - 2 * (t + 1);
+        for ((&av, &bv), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
+            *o = if av == 0 || bv == 0 {
+                0
+            } else {
+                let na = leading_one(av);
+                let nb = leading_one(bv);
+                let xh = truncate_fraction(av, na, h);
+                let yh = truncate_fraction(bv, nb, h);
+                let xt1 = (truncate_fraction(av, na, t) << 1) | 1;
+                let yt1 = (truncate_fraction(bv, nb, t) << 1) | 1;
+                let term = one + (((xh + yh) as u128) << sum_shift)
+                    + (((xt1 * yt1) as u128) << prod_shift);
+                ((term << (na + nb)) >> F) as u64
+            };
+        }
+    }
 }
 
 #[cfg(test)]

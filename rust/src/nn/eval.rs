@@ -25,10 +25,7 @@ pub fn evaluate_accuracy(
     limit: Option<usize>,
 ) -> AccuracyReport {
     let n = limit.unwrap_or(data.n).min(data.n);
-    let nthreads = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(4)
-        .min(n.max(1));
+    let nthreads = crate::util::parallel::workers().min(n.max(1));
     let chunk = n.div_ceil(nthreads);
     let mut hits1 = 0usize;
     let mut hits5 = 0usize;

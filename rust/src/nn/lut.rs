@@ -5,27 +5,76 @@
 //! `lut[a_u8 * 256 + (w_i8 + 128)] = sign(w) · mul(|w|, a)` — activations
 //! are unsigned (post-ReLU uint8), weights signed int8; sign-magnitude
 //! wrapping per paper Sec. III-D.
+//!
+//! Construction runs on the batched kernel plane: one
+//! [`ApproxMultiplier::mul_batch`] call over all 65,536 operand pairs
+//! instead of 65,536 virtual `mul` calls. [`cached_lut`] adds a
+//! process-wide cache keyed by `(config name, bits)`, so the coordinator's
+//! lanes, the report harnesses and the CLI share a single 256 KiB build
+//! per configuration instead of each rebuilding it.
 
 use crate::multipliers::ApproxMultiplier;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
-/// Build the signed product LUT for a multiplier model.
+/// Build the signed product LUT for a multiplier model (one batched pass).
 pub fn build_lut(m: &dyn ApproxMultiplier) -> Vec<i32> {
-    let mut lut = vec![0i32; 256 * 256];
+    const N: usize = 256 * 256;
+    // Operand planes in LUT index order (idx = a·256 + w + 128): first
+    // operand the weight magnitude, second the activation — the same
+    // argument order as the scalar `mul(|w|, a)` this replaces.
+    let mut mags = vec![0u64; N];
+    let mut acts = vec![0u64; N];
     for a in 0..256u64 {
         for w in -128i64..128 {
-            let p = if a == 0 || w == 0 {
-                0
-            } else {
-                let mag = m.mul(w.unsigned_abs(), a) as i64;
-                if w < 0 {
-                    -mag
-                } else {
-                    mag
-                }
-            };
-            lut[(a as usize) * 256 + (w + 128) as usize] = p as i32;
+            let idx = (a as usize) * 256 + (w + 128) as usize;
+            mags[idx] = w.unsigned_abs();
+            acts[idx] = a;
         }
     }
+    let mut prods = vec![0u64; N];
+    m.mul_batch(&mags, &acts, &mut prods);
+    let mut lut = vec![0i32; N];
+    for a in 0..256usize {
+        for wi in 0..256usize {
+            let idx = a * 256 + wi;
+            let w = wi as i64 - 128;
+            lut[idx] = if a == 0 || w == 0 {
+                // Zero-detection bypass, independent of the design's own
+                // zero behaviour (identical to the scalar-era builder).
+                0
+            } else {
+                let mag = prods[idx] as i64;
+                (if w < 0 { -mag } else { mag }) as i32
+            };
+        }
+    }
+    lut
+}
+
+/// Process-wide product-LUT cache: the shared table for a configuration,
+/// built on first use. N coordinator lanes, the report harnesses and the
+/// CLI all resolve the same `(name, bits)` key to one `Arc`'d 256 KiB
+/// table instead of rebuilding it per consumer. Building happens under the
+/// cache lock, which also collapses concurrent first-use races into a
+/// single build.
+///
+/// Invariant: at a given bit-width, a config *name* must uniquely
+/// determine its numerical behaviour — true for everything the
+/// registries produce. Instances carrying externally supplied constants
+/// (e.g. `ScaleTrim::with_params` with non-default tables) share a name
+/// with the self-calibrated config of the same `(h, M)`; do not route
+/// those through the cache — call [`build_lut`] directly.
+pub fn cached_lut(m: &dyn ApproxMultiplier) -> Arc<Vec<i32>> {
+    static CACHE: Mutex<Option<HashMap<(String, u32), Arc<Vec<i32>>>>> = Mutex::new(None);
+    let key = (m.name(), m.bits());
+    let mut guard = CACHE.lock().unwrap();
+    let map = guard.get_or_insert_with(HashMap::new);
+    if let Some(lut) = map.get(&key) {
+        return lut.clone();
+    }
+    let lut = Arc::new(build_lut(m));
+    map.insert(key, lut.clone());
     lut
 }
 
@@ -59,6 +108,32 @@ mod tests {
     }
 
     #[test]
+    fn batched_builder_matches_scalar_semantics() {
+        // The batched pass must equal the scalar-era per-entry definition.
+        let m = ScaleTrim::new(8, 3, 4);
+        let lut = build_lut(&m);
+        for a in [0u64, 1, 48, 200, 255] {
+            for w in [-128i64, -81, -1, 0, 1, 37, 127] {
+                let expect = if a == 0 || w == 0 {
+                    0
+                } else {
+                    let mag = m.mul(w.unsigned_abs(), a) as i64;
+                    if w < 0 {
+                        -mag
+                    } else {
+                        mag
+                    }
+                };
+                assert_eq!(
+                    lut[(a as usize) * 256 + (w + 128) as usize] as i64,
+                    expect,
+                    "a={a} w={w}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn scaletrim_lut_antisymmetric_in_weight_sign() {
         let lut = build_lut(&ScaleTrim::new(8, 3, 4));
         for a in [1usize, 37, 200, 255] {
@@ -77,5 +152,19 @@ mod tests {
             assert_eq!(lut[i], 0, "a=0 row");
             assert_eq!(lut[i * 256 + 128], 0, "w=0 col");
         }
+    }
+
+    #[test]
+    fn cache_returns_one_shared_table_per_config() {
+        let m = ScaleTrim::new(8, 5, 4);
+        let first = cached_lut(&m);
+        let second = cached_lut(&m);
+        assert!(
+            Arc::ptr_eq(&first, &second),
+            "same config must share one build"
+        );
+        assert_eq!(*first, build_lut(&m));
+        let other = cached_lut(&ScaleTrim::new(8, 5, 8));
+        assert!(!Arc::ptr_eq(&first, &other), "distinct configs, distinct tables");
     }
 }

@@ -6,6 +6,12 @@
 //! - a pure-rust interpreter (`infer`) that mirrors `python/compile/model.py`
 //!   bit-for-bit, used to cross-check the HLO numerics and to evaluate
 //!   configurations without loading PJRT.
+//!
+//! Both paths consume the 256×256 signed product LUT of [`build_lut`],
+//! which runs on the batched kernel plane (one `mul_batch` call per
+//! table). [`cached_lut`] is the process-wide cache every repeat consumer
+//! (coordinator lanes, report harnesses, the CLI) should go through: one
+//! build per configuration, shared behind an `Arc`.
 
 mod dataset;
 mod eval;
@@ -16,5 +22,5 @@ mod weights;
 pub use dataset::Dataset;
 pub use eval::{evaluate_accuracy, evaluate_accuracy_pjrt, AccuracyReport};
 pub use infer::{argmax, QuantizedCnn};
-pub use lut::{build_lut, exact_lut};
+pub use lut::{build_lut, cached_lut, exact_lut};
 pub use weights::{Layer, QuantizedWeights};

@@ -2,7 +2,9 @@
 //! 32-bit extension the paper defers as future work.
 
 use crate::error::exhaustive_sweep;
-use crate::lut::{calibrate, calibrate_analytic, paper_table7_params, ScaleTrimParams, COMP_FRAC_BITS};
+use crate::lut::{
+    calibrate, calibrate_analytic, paper_table7_params, ScaleTrimParams, COMP_FRAC_BITS,
+};
 use crate::multipliers::{ApproxMultiplier, ScaleTrim};
 use crate::util::rng::Xoshiro256;
 use crate::util::table::{f2, f4, Table};

@@ -86,7 +86,8 @@ pub fn table4() -> Result<()> {
 fn headline_claims(points: &[DesignPoint]) {
     let get = |n: &str| points.iter().find(|p| p.name == n);
     if let (Some(st48), Some(tosam15)) = (get("scaleTRIM(4,8)"), get("TOSAM(1,5)")) {
-        let mred_impr = 100.0 * (tosam15.error.mred_pct - st48.error.mred_pct) / tosam15.error.mred_pct;
+        let mred_impr =
+            100.0 * (tosam15.error.mred_pct - st48.error.mred_pct) / tosam15.error.mred_pct;
         println!(
             "claim 1 (paper: ~15.2% MRED improvement): ST(4,8) {:.2}% vs TOSAM(1,5) {:.2}% → {:.1}% improvement",
             st48.error.mred_pct, tosam15.error.mred_pct, mred_impr
@@ -235,8 +236,17 @@ pub fn table3() -> Result<()> {
     let mut t = Table::new(
         "Table 3 — error statistics + hardware (measured | paper)",
         &[
-            "method", "mean%", "median%", "p95%", "p99%", "max%", "area µm²", "PDP fJ", "paper mean%",
-            "paper max%", "paper PDP",
+            "method",
+            "mean%",
+            "median%",
+            "p95%",
+            "p99%",
+            "max%",
+            "area µm²",
+            "PDP fJ",
+            "paper mean%",
+            "paper max%",
+            "paper PDP",
         ],
     );
     for m in &methods {

@@ -7,7 +7,7 @@
 
 use crate::hardware::estimate;
 use crate::multipliers::*;
-use crate::nn::{build_lut, evaluate_accuracy, exact_lut, Dataset, QuantizedCnn, QuantizedWeights};
+use crate::nn::{cached_lut, evaluate_accuracy, exact_lut, Dataset, QuantizedCnn, QuantizedWeights};
 use crate::runtime::{find_artifacts_dir, ArtifactSet};
 use crate::util::table::{f2, Table};
 use crate::Result;
@@ -96,7 +96,9 @@ fn accuracy_table(model: &str, role: &str, limit: Option<usize>, topk: bool) -> 
         paper.map(|p| f2(p.2)).unwrap_or("-".into()),
     ]);
     for m in dnn_config_zoo() {
-        let lut = build_lut(m.as_ref());
+        // Shared with the coordinator's lanes: one build per config,
+        // process-wide, so repeated fig15/fig16 models don't rebuild.
+        let lut = cached_lut(m.as_ref());
         let r = evaluate_accuracy(&cnn, &data, &lut, limit);
         let hw = estimate(m.as_ref());
         let paper = table6_paper(&m.name());

@@ -26,7 +26,12 @@ impl Engine {
     /// The artifact contract (see `python/compile/aot.py`): inputs
     /// `(s32[batch, C, H, W] pixels, s32[256,256] lut)`, output a 1-tuple of
     /// `s32[batch, n_classes]` logits.
-    pub fn load_model(&self, hlo_path: &str, batch: usize, n_classes: usize) -> Result<LoadedModel> {
+    pub fn load_model(
+        &self,
+        hlo_path: &str,
+        batch: usize,
+        n_classes: usize,
+    ) -> Result<LoadedModel> {
         let proto = xla::HloModuleProto::from_text_file(hlo_path)
             .with_context(|| format!("parsing HLO text {hlo_path}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);

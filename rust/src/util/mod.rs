@@ -2,11 +2,13 @@
 //! dependency closure is cached), so the pieces a production crate would pull
 //! from crates.io live here instead: a PRNG ([`rng`]), summary statistics
 //! ([`stats`]), a tiny CLI parser ([`cli`]), a JSON writer ([`json`]), a
-//! criterion-style micro-benchmark harness ([`bench`]) and a property-testing
-//! rig with shrinking ([`prop`]).
+//! criterion-style micro-benchmark harness ([`bench`]), a property-testing
+//! rig with shrinking ([`prop`]) and the shared worker-thread policy
+//! ([`parallel`]).
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,23 @@
+//! Thread-count policy shared by every fan-out driver in the crate
+//! (error sweeps, percentile sweeps, NN accuracy evaluation). One copy of
+//! the heuristic instead of one per module: all available cores, capped
+//! at 32 so wide machines don't drown in per-thread accumulator merges.
+
+/// Number of worker threads for parallel drivers (≥ 1, ≤ 32).
+pub fn workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workers_in_policy_range() {
+        let w = workers();
+        assert!((1..=32).contains(&w), "workers() = {w}");
+    }
+}

@@ -94,6 +94,58 @@ fn prop_truncation_bounds() {
     });
 }
 
+/// The batched kernel plane can never drift from the scalar reference:
+/// for every design in the registry, `mul_batch` over a random slice
+/// (random length, including empty) equals per-element `mul`. This is the
+/// contract that lets sweeps, LUT builders and `CompiledMul` route through
+/// the monomorphized overrides blindly.
+#[test]
+fn prop_mul_batch_matches_scalar() {
+    let zoo = paper_configs_8bit();
+    let mut r = Runner::new("mul-batch-matches-scalar", 600);
+    r.run(|g| {
+        let m = g.choose(&zoo);
+        let len = g.usize_in(0, 300);
+        let a: Vec<u64> = (0..len).map(|_| g.u64_in(0, 255)).collect();
+        let b: Vec<u64> = (0..len).map(|_| g.u64_in(0, 255)).collect();
+        let mut out = vec![0u64; len];
+        m.mul_batch(&a, &b, &mut out);
+        for i in 0..len {
+            let scalar = m.mul(a[i], b[i]);
+            if out[i] != scalar {
+                return Err(format!(
+                    "{}: batch[{i}] = {} but mul({}, {}) = {scalar}",
+                    m.name(),
+                    out[i],
+                    a[i],
+                    b[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Same drift guard for the compiled table kernel, which additionally
+/// narrows storage to u32: compiled scalar and batch must equal the
+/// source design everywhere it was tabulated.
+#[test]
+fn prop_compiled_matches_source() {
+    let zoo = paper_configs_8bit();
+    let compiled: Vec<CompiledMul> = zoo.iter().map(|m| CompiledMul::compile(m.as_ref())).collect();
+    let mut r = Runner::new("compiled-matches-source", 600);
+    r.run(|g| {
+        let i = g.usize_in(0, zoo.len() - 1);
+        let (src, c) = (&zoo[i], &compiled[i]);
+        let a = g.u64_in(0, 255);
+        let b = g.u64_in(0, 255);
+        if c.mul(a, b) != src.mul(a, b) {
+            return Err(format!("{}: table diverges at {a}*{b}", src.name()));
+        }
+        Ok(())
+    });
+}
+
 /// Signed wrapping: sign algebra and magnitude preservation for every
 /// design in the registry.
 #[test]

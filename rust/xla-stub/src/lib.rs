@@ -1,0 +1,135 @@
+//! Minimal offline stand-in for the `xla` PJRT bindings crate.
+//!
+//! The build image ships no XLA runtime library, so this stub provides
+//! exactly the API surface `scaletrim::runtime::client` compiles against;
+//! every fallible entry point returns [`Error::Unavailable`] at runtime.
+//! The rest of the system — sweeps, DSE, calibration, pure-rust CNN
+//! inference, the coordinator over `MockBackend` — is fully functional
+//! without PJRT; the runtime integration tests detect the absence and
+//! skip. Point the `xla` path dependency in `rust/Cargo.toml` at the real
+//! bindings to enable the AOT/PJRT serving path unchanged.
+
+use std::fmt;
+
+/// The only error this stub ever produces.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// PJRT is not available in this build.
+    Unavailable,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "PJRT unavailable: built against the in-repo `xla` stub (no XLA runtime in this image)"
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real crate's fallible API.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle (never successfully constructed by the stub).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Create the CPU PJRT client — always [`Error::Unavailable`] here.
+    pub fn cpu() -> Result<Self> {
+        Err(Error::Unavailable)
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// Parsed HLO module (never successfully constructed by the stub).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse an HLO-text artifact — always [`Error::Unavailable`] here.
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self(())
+    }
+}
+
+/// A compiled executable (never successfully constructed by the stub).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute over device inputs — always [`Error::Unavailable`] here.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// A device buffer (never successfully constructed by the stub).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Fetch the buffer to host — always [`Error::Unavailable`] here.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// A host literal. Constructible (so call sites typecheck) but inert.
+#[derive(Clone)]
+pub struct Literal(());
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal(())
+    }
+
+    /// Reshape — always [`Error::Unavailable`] here.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+
+    /// Unwrap a 1-tuple — always [`Error::Unavailable`] here.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+
+    /// Read out as a host vector — always [`Error::Unavailable`] here.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let lit = Literal::vec1(&[1i32, 2, 3]);
+        assert!(lit.reshape(&[3]).is_err());
+        assert!(lit.to_vec::<i32>().is_err());
+        let msg = Error::Unavailable.to_string();
+        assert!(msg.contains("stub"), "{msg}");
+    }
+}
