@@ -1,0 +1,35 @@
+//! Application-suite tour: run every registered workload under a handful
+//! of multiplier configurations and print the quality-vs-energy ledger —
+//! the per-application story behind the paper's error-metric tables.
+//!
+//! ```sh
+//! cargo run --release --example workload_suite
+//! ```
+
+use scaletrim::multipliers::{ApproxMultiplier, Drum, Mitchell, ScaleTrim, Tosam};
+use scaletrim::workloads::{evaluate, registry};
+
+fn main() -> scaletrim::Result<()> {
+    let configs: Vec<Box<dyn ApproxMultiplier>> = vec![
+        Box::new(ScaleTrim::new(8, 3, 4)),
+        Box::new(ScaleTrim::new(8, 4, 8)),
+        Box::new(ScaleTrim::new(8, 6, 8)),
+        Box::new(Tosam::new(8, 1, 5)),
+        Box::new(Drum::new(8, 4)),
+        Box::new(Mitchell::new(8)),
+    ];
+    for w in registry() {
+        println!("\n== {} — {}", w.name(), w.description());
+        for m in &configs {
+            let r = evaluate(w.as_ref(), m.as_ref());
+            println!(
+                "  {:<16} PSNR {:>6.2} dB   SSIM {:.4}   {:>7} MACs → {:>8.3} nJ",
+                r.config, r.quality.psnr_db, r.quality.ssim, r.macs, r.energy_nj
+            );
+        }
+    }
+    println!(
+        "\n(quality is scored against the exact-multiplier reference; energy is\n MACs × PDP of the structural hardware model — see `scaletrim repro --exp workloads`\n for the full-zoo Pareto tables)"
+    );
+    Ok(())
+}

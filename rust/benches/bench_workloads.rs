@@ -1,0 +1,55 @@
+//! Application-suite benchmarks: batched behavioural execution vs the
+//! compiled product-table kernel on the convolution workload (the
+//! ISSUE-2 headline comparison), plus the densest kernels (DCT, GEMM).
+//! Results land in `target/bench_workloads.jsonl`.
+
+use ::scaletrim::multipliers::{CompiledMul, ScaleTrim};
+use ::scaletrim::util::bench::{black_box, Bencher};
+use ::scaletrim::workloads::{Conv2d, DctRoundTrip, Gemm, Workload};
+
+fn main() {
+    let mut b = Bencher::new();
+    let st = ScaleTrim::new(8, 3, 4);
+    let compiled = CompiledMul::compile(&st);
+
+    let blur = Conv2d::blur();
+    let blur_macs = blur.run(&st).macs;
+    b.bench(
+        "workload/blur scaleTRIM(3,4) batched behavioural",
+        Some(blur_macs),
+        || {
+            black_box(blur.run(&st).macs);
+        },
+    );
+    b.bench(
+        "workload/blur scaleTRIM(3,4) compiled table",
+        Some(blur_macs),
+        || {
+            black_box(blur.run(&compiled).macs);
+        },
+    );
+
+    let dct = DctRoundTrip::new();
+    let dct_macs = dct.run(&st).macs;
+    b.bench("workload/dct batched behavioural", Some(dct_macs), || {
+        black_box(dct.run(&st).macs);
+    });
+    b.bench("workload/dct compiled table", Some(dct_macs), || {
+        black_box(dct.run(&compiled).macs);
+    });
+
+    let gemm = Gemm::new();
+    let gemm_macs = gemm.run(&st).macs;
+    b.bench("workload/gemm batched behavioural", Some(gemm_macs), || {
+        black_box(gemm.run(&st).macs);
+    });
+    b.bench("workload/gemm compiled table", Some(gemm_macs), || {
+        black_box(gemm.run(&compiled).macs);
+    });
+
+    b.bench("workload/blur reference (exact scalar path)", Some(blur_macs), || {
+        black_box(blur.reference(8).len());
+    });
+
+    let _ = b.write_jsonl("target/bench_workloads.jsonl");
+}

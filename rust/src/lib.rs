@@ -33,8 +33,15 @@
 //!   executes them on the CPU client.
 //! - [`coordinator`] — the serving layer: request router, dynamic batcher,
 //!   per-config queues, worker threads, metrics.
+//! - [`workloads`] — the error-resilient application suite: image
+//!   filtering (blur/sharpen/Sobel), alpha compositing, an 8×8 DCT
+//!   compression round-trip, FIR filtering and integer GEMM, each running
+//!   its inner loops through the batched MAC plane under any multiplier
+//!   and scored with MSE/PSNR/SSIM against the exact reference
+//!   (`workloads::quality`).
 //! - [`report`] — regenerates every table and figure of the paper's
-//!   evaluation with paper-vs-measured columns.
+//!   evaluation with paper-vs-measured columns, plus the quality-vs-energy
+//!   workload suite report.
 //! - [`util`] — in-repo infrastructure (PRNG, stats, CLI, JSON, bench and
 //!   property-test rigs) because the build image is offline.
 //!
@@ -55,6 +62,7 @@ pub mod nn;
 pub mod report;
 pub mod runtime;
 pub mod util;
+pub mod workloads;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -7,9 +7,10 @@
 //! - `sweep --config <name>`       error metrics for one configuration
 //! - `lut-gen --h H --m M`         print calibration constants
 //! - `pareto [--bits 8|16]`        Pareto front of the design space
+//! - `app --workload <name>`       run one application workload under a config
 //! - `infer --model <name>`        batch inference via PJRT on an artifact
 //! - `serve --model <name>`        run the batching coordinator demo
-//! - `list`                        list all registered configurations
+//! - `list [--bits 8|16]`          list the registered configurations
 
 use scaletrim::coordinator::{BatchPolicy, Coordinator, PjrtBackend};
 use scaletrim::dse::{evaluate_all, pareto_front};
@@ -24,7 +25,7 @@ use scaletrim::nn::{cached_lut, exact_lut, Dataset};
 use scaletrim::runtime::{find_artifacts_dir, ArtifactSet};
 use scaletrim::util::cli::Args;
 use scaletrim::util::table::{f2, Table};
-use scaletrim::{lut, nn, report, runtime, Result};
+use scaletrim::{lut, nn, report, runtime, workloads, Result};
 use std::sync::Arc;
 
 fn find_config(name: &str, bits: u32) -> Option<Box<dyn ApproxMultiplier>> {
@@ -50,8 +51,17 @@ fn main() -> Result<()> {
             report::run_experiment(&exp, fast)?;
         }
         "list" => {
-            let mut t = Table::new("registered 8-bit configurations", &["name", "bits"]);
-            for m in paper_configs_8bit() {
+            let bits = args.opt_parse_or("bits", 8u32);
+            let zoo = match bits {
+                8 => paper_configs_8bit(),
+                16 => paper_configs_16bit(),
+                other => anyhow::bail!("no registered zoo at {other} bits (use --bits 8|16)"),
+            };
+            let mut t = Table::new(
+                &format!("registered {bits}-bit configurations"),
+                &["name", "bits"],
+            );
+            for m in zoo {
                 t.row(vec![m.name(), m.bits().to_string()]);
             }
             t.print();
@@ -65,14 +75,22 @@ fn main() -> Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("unknown config {name:?} (try `list`)"))?;
             let approx = m.mul(a, b);
             let exact = a * b;
-            println!(
-                "{name}: {a} × {b} ≈ {approx}   (exact {exact}, error {:+}, ARED {:.3}%)",
-                approx as i64 - exact as i64,
-                if exact > 0 {
+            // ARED is undefined at exact == 0 unless the approximation is
+            // also 0 (Eq. 8 divides by the exact product) — print `n/a`
+            // rather than a misleading 0.000% on a nonzero miss.
+            let ared = if exact > 0 {
+                format!(
+                    "{:.3}%",
                     100.0 * (approx as f64 - exact as f64).abs() / exact as f64
-                } else {
-                    0.0
-                }
+                )
+            } else if approx == 0 {
+                "0.000%".to_string()
+            } else {
+                "n/a (exact product is 0)".to_string()
+            };
+            println!(
+                "{name}: {a} × {b} ≈ {approx}   (exact {exact}, error {:+}, ARED {ared})",
+                approx as i64 - exact as i64
             );
         }
         "sweep" => {
@@ -106,10 +124,10 @@ fn main() -> Result<()> {
         }
         "pareto" => {
             let bits = args.opt_parse_or("bits", 8u32);
-            let zoo = if bits == 16 {
-                paper_configs_16bit()
-            } else {
-                paper_configs_8bit()
+            let zoo = match bits {
+                8 => paper_configs_8bit(),
+                16 => paper_configs_16bit(),
+                other => anyhow::bail!("no registered zoo at {other} bits (use --bits 8|16)"),
             };
             let points = evaluate_all(&zoo, SweepSpec::default_for(bits));
             let front = pareto_front(&points, |p| (p.error.mred_pct, p.hw.pdp_fj));
@@ -125,6 +143,37 @@ fn main() -> Result<()> {
                 ]);
             }
             t.print();
+        }
+        "app" => {
+            let bits = args.opt_parse_or("bits", 8u32);
+            let wname = args.opt_or("workload", "blur");
+            let cname = args.opt_or("config", "scaleTRIM(3,4)");
+            let w = workloads::by_name(&wname).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown workload {wname:?}; registered: {}",
+                    workloads::registry()
+                        .iter()
+                        .map(|w| w.name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?;
+            let m: Box<dyn ApproxMultiplier> = if cname == "exact" {
+                Box::new(Exact::new(bits))
+            } else {
+                find_config(&cname, bits)
+                    .ok_or_else(|| anyhow::anyhow!("unknown config {cname:?} (try `list`)"))?
+            };
+            let r = workloads::evaluate(w.as_ref(), m.as_ref());
+            println!("{}: {}", r.workload, w.description());
+            println!(
+                "quality under {}: PSNR {:.2} dB  SSIM {:.4}  MSE {:.2}  ({} MACs via mul_batch)",
+                r.config, r.quality.psnr_db, r.quality.ssim, r.quality.mse, r.macs
+            );
+            println!(
+                "hardware: area {:.1} µm², delay {:.2} ns, power {:.1} µW, PDP {:.2} fJ → {:.3} nJ multiplier energy per run",
+                r.hw.area_um2, r.hw.delay_ns, r.hw.power_uw, r.hw.pdp_fj, r.energy_nj
+            );
         }
         "infer" => {
             let model = args.opt_or("model", "lenet");
@@ -199,12 +248,14 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "scaletrim — scaleTRIM approximate-multiplier system reproduction\n\n\
-                 usage: scaletrim <repro|list|mul|sweep|lut-gen|pareto|infer|serve> [options]\n\
+                 usage: scaletrim <repro|list|mul|sweep|lut-gen|pareto|app|infer|serve> [options]\n\
                  examples:\n  \
                  scaletrim repro --exp table4\n  \
                  scaletrim mul --config 'scaleTRIM(3,4)' 48 81\n  \
                  scaletrim sweep --config 'TOSAM(1,5)'\n  \
                  scaletrim pareto --bits 16\n  \
+                 scaletrim app --workload blur --config 'scaleTRIM(3,4)'\n  \
+                 scaletrim repro --exp workloads --fast\n  \
                  scaletrim infer --model lenet --config 'scaleTRIM(4,8)'\n  \
                  scaletrim serve --model lenet --requests 2000"
             );

@@ -6,18 +6,20 @@ mod ablation;
 mod calibration;
 mod comparison;
 mod dnn;
+mod workloads;
 
 pub use ablation::{ablation_alpha_quant, ablation_constants, ablation_segments, ext32};
 pub use calibration::{fig5, fig6, fig7, table7};
 pub use comparison::{fig1, fig10, table2, table3, table4, table5};
-pub use dnn::{fig15, fig16, dnn_config_zoo};
+pub use dnn::{dnn_config_zoo, fig15, fig16};
+pub use workloads::workload_suite;
 
 use crate::Result;
 
 /// All experiment ids, in paper order.
 pub const EXPERIMENTS: &[&str] = &[
     "fig1", "fig5", "fig6", "fig7", "table4", "fig9", "fig10", "table5", "fig11-13", "table3",
-    "fig14", "table2", "table7", "fig15", "fig16", "table6", "ablation", "ext32",
+    "fig14", "table2", "table7", "fig15", "fig16", "table6", "ablation", "ext32", "workloads",
 ];
 
 /// Run one experiment by id. `fast` trims sample counts (CI smoke).
@@ -41,10 +43,11 @@ pub fn run_experiment(id: &str, fast: bool) -> Result<()> {
         "ext32" => ext32(),
         "fig15" => fig15(fast),
         "fig16" | "table6" => fig16(fast),
+        "workloads" => workload_suite(fast),
         "all" => {
             for e in [
                 "fig1", "fig5", "fig6", "fig7", "table4", "fig10", "table5", "table3", "table2",
-                "table7", "fig15", "fig16", "ablation", "ext32",
+                "table7", "fig15", "fig16", "ablation", "ext32", "workloads",
             ] {
                 println!("\n################ {e} ################");
                 run_experiment(e, fast)?;

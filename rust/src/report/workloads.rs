@@ -1,0 +1,141 @@
+//! Application-suite experiment: every workload × the 8-bit configuration
+//! zoo, scored as quality (PSNR/SSIM vs the exact-multiplier reference)
+//! against energy (MACs × PDP), with the (−PSNR, energy) Pareto front
+//! flagged per workload — the application-level counterpart of the paper's
+//! Fig. 9 MRED-vs-PDP plane, in the spirit of the Masadeh et al.
+//! comparative study.
+
+use crate::dse::pareto_front;
+use crate::multipliers::{paper_configs_8bit, ApproxMultiplier};
+use crate::util::table::{f2, f4, Table};
+use crate::workloads::{self, quality, Workload};
+use crate::Result;
+
+/// Per-config row of one workload's sweep.
+struct Row {
+    config: String,
+    q: quality::Quality,
+    pdp_fj: f64,
+    energy_nj: f64,
+}
+
+/// The zoo under evaluation: full 8-bit registry, or a deterministic
+/// stride-6 subset spanning every family block for `--fast` smoke runs.
+fn zoo(fast: bool) -> Vec<Box<dyn ApproxMultiplier>> {
+    let all = paper_configs_8bit();
+    if fast {
+        all.into_iter().step_by(6).collect()
+    } else {
+        all
+    }
+}
+
+/// Run the suite: one quality-vs-energy table per workload plus a
+/// cross-workload mean-PSNR summary, Pareto fronts flagged.
+pub fn workload_suite(fast: bool) -> Result<()> {
+    let configs = zoo(fast);
+    let suite = workloads::registry();
+    // mean-PSNR accumulator per config (finite rows only).
+    let mut mean_psnr = vec![0f64; configs.len()];
+    let mut pdp = vec![0f64; configs.len()];
+    for w in &suite {
+        let rows = sweep_workload(w.as_ref(), &configs);
+        let front = pareto_front(&rows, |r| (-r.q.psnr_db, r.energy_nj));
+        let mut t = Table::new(
+            &format!(
+                "workload {:?} — quality vs energy, {} configs ({})",
+                w.name(),
+                rows.len(),
+                w.description()
+            ),
+            &["config", "PSNR dB", "SSIM", "MSE", "PDP fJ", "energy nJ", "pareto"],
+        );
+        for (i, r) in rows.iter().enumerate() {
+            mean_psnr[i] += r.q.psnr_db.min(99.0); // cap ∞ for the mean
+            pdp[i] = r.pdp_fj;
+            t.row(vec![
+                r.config.clone(),
+                f2(r.q.psnr_db),
+                f4(r.q.ssim),
+                f2(r.q.mse),
+                f2(r.pdp_fj),
+                f4(r.energy_nj),
+                if front.contains(&i) { "*".into() } else { "".into() },
+            ]);
+        }
+        t.print();
+    }
+    // Cross-workload summary: who is application-Pareto overall?
+    for m in mean_psnr.iter_mut() {
+        *m /= suite.len() as f64;
+    }
+    let points: Vec<(f64, f64)> = mean_psnr
+        .iter()
+        .zip(&pdp)
+        .map(|(&psnr, &p)| (-psnr, p))
+        .collect();
+    let front = pareto_front(&points, |&p| p);
+    let mut t = Table::new(
+        &format!(
+            "application suite summary — mean PSNR over {} workloads vs PDP",
+            suite.len()
+        ),
+        &["config", "mean PSNR dB", "PDP fJ", "pareto"],
+    );
+    for (i, m) in configs.iter().enumerate() {
+        t.row(vec![
+            m.name(),
+            f2(mean_psnr[i]),
+            f2(pdp[i]),
+            if front.contains(&i) { "*".into() } else { "".into() },
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Evaluate one workload across the zoo, sharing one reference computation.
+fn sweep_workload(w: &dyn Workload, configs: &[Box<dyn ApproxMultiplier>]) -> Vec<Row> {
+    // All 8-bit configs share the reference; compute it once, not per row.
+    let reference = w.reference(configs[0].bits());
+    configs
+        .iter()
+        .map(|m| {
+            let r = workloads::evaluate_with_reference(w, m.as_ref(), &reference);
+            Row {
+                config: r.config,
+                q: r.quality,
+                pdp_fj: r.hw.pdp_fj,
+                energy_nj: r.energy_nj,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_zoo_is_a_strict_subset_with_consistent_width() {
+        let full = zoo(false);
+        let fastz = zoo(true);
+        assert!(fastz.len() >= 5 && fastz.len() < full.len());
+        for m in &fastz {
+            assert_eq!(m.bits(), 8);
+        }
+    }
+
+    #[test]
+    fn sweep_rows_are_scored_and_finite_costs() {
+        let configs = zoo(true);
+        let w = workloads::Conv2d::blur();
+        let rows = sweep_workload(&w, &configs);
+        assert_eq!(rows.len(), configs.len());
+        for r in &rows {
+            assert!(r.q.ssim.is_finite());
+            assert!(r.pdp_fj > 0.0 && r.energy_nj > 0.0);
+            assert!(r.q.psnr_db > 0.0, "{}: PSNR {}", r.config, r.q.psnr_db);
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Multiplicative image compositing: alpha-blend two synthetic images under
+//! a radial mask — `out = (a·α + b·(255 − α)) / 255`, two multiplications
+//! per pixel. The divide by 255 is exact integer arithmetic (no multiplier
+//! involved), as in a real blend datapath.
+
+use super::signal::{clamp_u8, synthetic_image, Signal};
+use super::{exact_mac, MacPlane, Workload, WorkloadRun};
+use crate::multipliers::ApproxMultiplier;
+
+const IMG: usize = 96;
+const SEED_A: u64 = 0xB1E_D0A;
+const SEED_B: u64 = 0xB1E_D0B;
+
+/// Alpha-compositing workload.
+pub struct Blend;
+
+impl Blend {
+    /// New blend workload over the fixed stimulus pair.
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        Self
+    }
+
+    fn inputs(&self) -> (Signal, Signal) {
+        (
+            synthetic_image(IMG, IMG, SEED_A),
+            synthetic_image(IMG, IMG, SEED_B),
+        )
+    }
+
+    /// Radial alpha mask: opaque at the centre, transparent at the corners
+    /// (integer arithmetic only).
+    fn alpha(&self, x: usize, y: usize) -> i64 {
+        let (cx, cy) = (IMG as i64 / 2, IMG as i64 / 2);
+        let (dx, dy) = (x as i64 - cx, y as i64 - cy);
+        let r2 = 2 * cx * cx; // corner distance², the fully-transparent radius
+        (255 * (r2 - (dx * dx + dy * dy)).max(0)) / r2
+    }
+}
+
+impl Workload for Blend {
+    fn name(&self) -> &'static str {
+        "blend"
+    }
+
+    fn description(&self) -> String {
+        "radial alpha-composite of two 96×96 synthetic images (2 muls/pixel)".to_string()
+    }
+
+    fn run(&self, m: &dyn ApproxMultiplier) -> WorkloadRun {
+        let (a, b) = self.inputs();
+        let mut plane = MacPlane::new(m, a.len());
+        for y in 0..IMG {
+            for x in 0..IMG {
+                let t = y * IMG + x;
+                let al = self.alpha(x, y);
+                plane.mac(t, a.at(x, y), al);
+                plane.mac(t, b.at(x, y), 255 - al);
+            }
+        }
+        let (acc, macs) = plane.finish();
+        let data = acc.into_iter().map(|v| clamp_u8((v + 127) / 255)).collect();
+        WorkloadRun {
+            output: Signal::new(IMG, IMG, data),
+            macs,
+        }
+    }
+
+    fn reference(&self, bits: u32) -> Signal {
+        let (a, b) = self.inputs();
+        let mut data = vec![0i64; a.len()];
+        for y in 0..IMG {
+            for x in 0..IMG {
+                let al = self.alpha(x, y);
+                let acc = exact_mac(a.at(x, y), al, bits) + exact_mac(b.at(x, y), 255 - al, bits);
+                data[y * IMG + x] = clamp_u8((acc + 127) / 255);
+            }
+        }
+        Signal::new(IMG, IMG, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::Exact;
+
+    #[test]
+    fn blend_exact_matches_reference_and_counts_macs() {
+        let w = Blend::new();
+        let m = Exact::new(8);
+        let r = w.run(&m);
+        assert_eq!(r.output, w.reference(8));
+        assert_eq!(r.macs, (IMG * IMG * 2) as u64);
+        assert!(r.output.data.iter().all(|&v| (0..=255).contains(&v)));
+    }
+
+    #[test]
+    fn alpha_mask_shape() {
+        let w = Blend::new();
+        assert_eq!(w.alpha(IMG / 2, IMG / 2), 255); // opaque centre
+        assert_eq!(w.alpha(0, 0), 0); // transparent corner
+        let mid = w.alpha(IMG / 2, IMG / 4);
+        assert!((0..255).contains(&mid));
+    }
+}

@@ -1,0 +1,210 @@
+//! 2-D image convolution workloads: Gaussian blur, sharpen, and Sobel edge
+//! detection — the canonical error-resilient kernels of the approximate
+//! multiplier application literature (one multiply per pixel per tap).
+//! Clamp-to-edge boundary policy; output clamped to the 8-bit display range.
+
+use super::signal::{clamp_u8, synthetic_image, Signal};
+use super::{exact_mac, MacPlane, Workload, WorkloadRun};
+use crate::multipliers::ApproxMultiplier;
+
+/// Input image edge (pixels) shared by the convolution workloads.
+const IMG: usize = 96;
+/// Stimulus seed (the suite's images differ per workload family).
+const SEED: u64 = 0xC0_11AB;
+
+/// Separable-equivalent 3×3 kernel workload (blur, sharpen).
+pub struct Conv2d {
+    name: &'static str,
+    what: &'static str,
+    kernel: [[i64; 3]; 3],
+    /// Output renormalisation: `out = (acc + 2^(shift-1)) >> shift`.
+    shift: u32,
+}
+
+impl Conv2d {
+    /// 3×3 binomial (Gaussian) blur, kernel sum 16.
+    pub fn blur() -> Self {
+        Self {
+            name: "blur",
+            what: "3×3 Gaussian blur over a 96×96 synthetic image",
+            kernel: [[1, 2, 1], [2, 4, 2], [1, 2, 1]],
+            shift: 4,
+        }
+    }
+
+    /// 3×3 unsharp kernel (centre 5, cross −1), kernel sum 1.
+    pub fn sharpen() -> Self {
+        Self {
+            name: "sharpen",
+            what: "3×3 sharpen (unsharp) over a 96×96 synthetic image",
+            kernel: [[0, -1, 0], [-1, 5, -1], [0, -1, 0]],
+            shift: 0,
+        }
+    }
+
+    fn input(&self) -> Signal {
+        synthetic_image(IMG, IMG, SEED)
+    }
+
+    #[inline]
+    fn renorm(&self, acc: i64) -> i64 {
+        let half = (1i64 << self.shift) >> 1;
+        clamp_u8((acc + half) >> self.shift)
+    }
+}
+
+impl Workload for Conv2d {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn description(&self) -> String {
+        self.what.to_string()
+    }
+
+    fn run(&self, m: &dyn ApproxMultiplier) -> WorkloadRun {
+        let img = self.input();
+        let mut plane = MacPlane::new(m, img.len());
+        for y in 0..img.h as isize {
+            for x in 0..img.w as isize {
+                let t = y as usize * img.w + x as usize;
+                for (ky, row) in self.kernel.iter().enumerate() {
+                    for (kx, &k) in row.iter().enumerate() {
+                        plane.mac(t, img.at_clamped(x + kx as isize - 1, y + ky as isize - 1), k);
+                    }
+                }
+            }
+        }
+        let (acc, macs) = plane.finish();
+        let data = acc.into_iter().map(|v| self.renorm(v)).collect();
+        WorkloadRun {
+            output: Signal::new(img.w, img.h, data),
+            macs,
+        }
+    }
+
+    fn reference(&self, bits: u32) -> Signal {
+        let img = self.input();
+        let mut data = vec![0i64; img.len()];
+        for y in 0..img.h as isize {
+            for x in 0..img.w as isize {
+                let mut acc = 0i64;
+                for (ky, row) in self.kernel.iter().enumerate() {
+                    for (kx, &k) in row.iter().enumerate() {
+                        let px = img.at_clamped(x + kx as isize - 1, y + ky as isize - 1);
+                        acc += exact_mac(px, k, bits);
+                    }
+                }
+                data[y as usize * img.w + x as usize] = self.renorm(acc);
+            }
+        }
+        Signal::new(img.w, img.h, data)
+    }
+}
+
+/// Sobel gradient-magnitude edge detector: two 3×3 convolutions per pixel,
+/// combined as `|G_x| + |G_y|` (the standard L1 approximation).
+pub struct Sobel;
+
+const SOBEL_X: [[i64; 3]; 3] = [[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]];
+const SOBEL_Y: [[i64; 3]; 3] = [[-1, -2, -1], [0, 0, 0], [1, 2, 1]];
+
+impl Sobel {
+    /// New Sobel workload over the shared convolution stimulus.
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        Self
+    }
+
+    fn input(&self) -> Signal {
+        synthetic_image(IMG, IMG, SEED)
+    }
+}
+
+impl Workload for Sobel {
+    fn name(&self) -> &'static str {
+        "sobel"
+    }
+
+    fn description(&self) -> String {
+        "Sobel edge detection (|Gx| + |Gy|) over a 96×96 synthetic image".to_string()
+    }
+
+    fn run(&self, m: &dyn ApproxMultiplier) -> WorkloadRun {
+        let img = self.input();
+        // Two accumulator slots per pixel: 2t for G_x, 2t+1 for G_y.
+        let mut plane = MacPlane::new(m, 2 * img.len());
+        for y in 0..img.h as isize {
+            for x in 0..img.w as isize {
+                let t = y as usize * img.w + x as usize;
+                for ky in 0..3 {
+                    for kx in 0..3 {
+                        let px = img.at_clamped(x + kx as isize - 1, y + ky as isize - 1);
+                        plane.mac(2 * t, px, SOBEL_X[ky][kx]);
+                        plane.mac(2 * t + 1, px, SOBEL_Y[ky][kx]);
+                    }
+                }
+            }
+        }
+        let (acc, macs) = plane.finish();
+        let data = acc
+            .chunks_exact(2)
+            .map(|g| clamp_u8(g[0].abs() + g[1].abs()))
+            .collect();
+        WorkloadRun {
+            output: Signal::new(img.w, img.h, data),
+            macs,
+        }
+    }
+
+    fn reference(&self, bits: u32) -> Signal {
+        let img = self.input();
+        let mut data = vec![0i64; img.len()];
+        for y in 0..img.h as isize {
+            for x in 0..img.w as isize {
+                let (mut gx, mut gy) = (0i64, 0i64);
+                for ky in 0..3 {
+                    for kx in 0..3 {
+                        let px = img.at_clamped(x + kx as isize - 1, y + ky as isize - 1);
+                        gx += exact_mac(px, SOBEL_X[ky][kx], bits);
+                        gy += exact_mac(px, SOBEL_Y[ky][kx], bits);
+                    }
+                }
+                data[y as usize * img.w + x as usize] = clamp_u8(gx.abs() + gy.abs());
+            }
+        }
+        Signal::new(img.w, img.h, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::{Exact, ScaleTrim};
+    use crate::workloads::quality::compare;
+
+    #[test]
+    fn blur_exact_matches_reference() {
+        let w = Conv2d::blur();
+        let m = Exact::new(8);
+        assert_eq!(w.run(&m).output, w.reference(8));
+    }
+
+    #[test]
+    fn sobel_zero_kernel_taps_do_not_count_against_quality() {
+        let w = Sobel::new();
+        let m = Exact::new(8);
+        let r = w.run(&m);
+        assert_eq!(r.output, w.reference(8));
+        assert_eq!(r.macs, (IMG * IMG * 18) as u64);
+    }
+
+    #[test]
+    fn blur_under_scaletrim_is_usable() {
+        let w = Conv2d::blur();
+        let st = ScaleTrim::new(8, 4, 8);
+        let q = compare(&w.reference(8), &w.run(&st).output, 255.0);
+        assert!(q.psnr_db > 20.0, "blur PSNR {}", q.psnr_db);
+        assert!(q.ssim > 0.6, "blur SSIM {}", q.ssim);
+    }
+}

@@ -1,0 +1,210 @@
+//! 8×8 DCT compression round-trip (JPEG-style): centre, forward 2-D DCT,
+//! shift-quantise/dequantise, inverse 2-D DCT, reconstruct. All four
+//! transform passes are matrix multiplies against a Q6 integer cosine
+//! table, executed through the batched MAC plane — 2048 multiplications
+//! per 8×8 block.
+//!
+//! Fixed-point ledger (Q6 table = `round(64·C)` of the orthonormal DCT
+//! matrix, entries ≤ 32): each forward pass shifts by 7 (net ×½ per pass,
+//! so stored coefficients are `F/4`); the inverse passes shift by 6 and 4
+//! (net ×1 and ×4), restoring pixel scale. Intermediates stay inside the
+//! 8-bit operand range for natural inputs; pathological blocks saturate at
+//! the datapath width, identically in `run` and `reference`.
+
+use super::signal::{clamp_u8, synthetic_image, Signal};
+use super::{exact_mac, MacPlane, Workload, WorkloadRun};
+use crate::multipliers::ApproxMultiplier;
+
+const IMG: usize = 64;
+const SEED: u64 = 0xDC7_0001;
+
+/// Q6 integer 8-point DCT-II basis: `t[u][k] = round(64·a_u·cos((2k+1)uπ/16))`
+/// with `a_0 = √(1/8)`, `a_u = 1/2`.
+fn cos_table() -> [[i64; 8]; 8] {
+    let mut t = [[0i64; 8]; 8];
+    for (u, row) in t.iter_mut().enumerate() {
+        let a = if u == 0 {
+            (1.0f64 / 8.0).sqrt()
+        } else {
+            0.5
+        };
+        for (k, cell) in row.iter_mut().enumerate() {
+            let angle = ((2 * k + 1) as f64) * (u as f64) * std::f64::consts::PI / 16.0;
+            *cell = (64.0 * a * angle.cos()).round() as i64;
+        }
+    }
+    t
+}
+
+/// Quantisation shift for coefficient `(u, v)`: 0 for DC, growing with
+/// spatial frequency to 3 — the compression (and the loss) of the round
+/// trip.
+#[inline]
+fn quant_shift(u: usize, v: usize) -> u32 {
+    (((u + v + 1) / 2) as u32).min(3)
+}
+
+/// Enumerate one 1-D transform pass over every 8×8 block of a `IMG×IMG`
+/// plane, feeding `(target, sample, tap)` triples to `mac`. `along_cols`
+/// transforms down each block column, otherwise along each row;
+/// `tap(o, i)` is the basis weight from input line index `i` to output
+/// line index `o`.
+fn stage(
+    input: &[i64],
+    tap: impl Fn(usize, usize) -> i64,
+    along_cols: bool,
+    mut mac: impl FnMut(usize, i64, i64),
+) {
+    for by in (0..IMG).step_by(8) {
+        for bx in (0..IMG).step_by(8) {
+            for line in 0..8 {
+                for o in 0..8 {
+                    for i in 0..8 {
+                        let (src, dst) = if along_cols {
+                            ((by + i) * IMG + bx + line, (by + o) * IMG + bx + line)
+                        } else {
+                            ((by + line) * IMG + bx + i, (by + line) * IMG + bx + o)
+                        };
+                        mac(dst, input[src], tap(o, i));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Apply the post-stage rounding shift (`(v + 2^(s-1)) >> s`).
+fn renorm(acc: Vec<i64>, shift: u32) -> Vec<i64> {
+    let half = (1i64 << shift) >> 1;
+    acc.into_iter().map(|v| (v + half) >> shift).collect()
+}
+
+/// Shift-quantise then dequantise every coefficient in place.
+fn quantise(f: &mut [i64]) {
+    for (idx, v) in f.iter_mut().enumerate() {
+        let (u, x) = (idx / IMG % 8, idx % 8);
+        let q = quant_shift(u, x);
+        *v = (*v >> q) << q;
+    }
+}
+
+/// The four pass descriptors: `(along_cols, transpose_tap, shift)`.
+/// Forward passes use `t[o][i]`, inverse passes `t[i][o]`.
+const PASSES: [(bool, bool, u32); 4] = [
+    (true, false, 7),  // columns: T1 = (C·Xc) / 2
+    (false, false, 7), // rows:    F  = (T1·Cᵀ) / 2
+    (true, true, 6),   // columns: T2 = Cᵀ·Fq
+    (false, true, 4),  // rows:    Y  = 4·(T2·C)
+];
+
+/// DCT compression round-trip workload.
+pub struct DctRoundTrip;
+
+impl DctRoundTrip {
+    /// New DCT workload over the fixed 64×64 stimulus.
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        Self
+    }
+
+    fn input_centred(&self) -> Vec<i64> {
+        synthetic_image(IMG, IMG, SEED)
+            .data
+            .into_iter()
+            .map(|p| p - 128)
+            .collect()
+    }
+}
+
+impl Workload for DctRoundTrip {
+    fn name(&self) -> &'static str {
+        "dct"
+    }
+
+    fn description(&self) -> String {
+        "8×8 DCT compression round-trip over a 64×64 image (4 matrix passes)".to_string()
+    }
+
+    fn run(&self, m: &dyn ApproxMultiplier) -> WorkloadRun {
+        let t = cos_table();
+        let mut plane_data = self.input_centred();
+        let mut macs = 0u64;
+        for (pass, &(along_cols, transpose, shift)) in PASSES.iter().enumerate() {
+            let mut plane = MacPlane::new(m, IMG * IMG);
+            let tap = |o: usize, i: usize| if transpose { t[i][o] } else { t[o][i] };
+            stage(&plane_data, tap, along_cols, |dst, x, w| {
+                plane.mac(dst, x, w)
+            });
+            let (acc, n) = plane.finish();
+            macs += n;
+            plane_data = renorm(acc, shift);
+            if pass == 1 {
+                quantise(&mut plane_data);
+            }
+        }
+        let data = plane_data.into_iter().map(|v| clamp_u8(v + 128)).collect();
+        WorkloadRun {
+            output: Signal::new(IMG, IMG, data),
+            macs,
+        }
+    }
+
+    fn reference(&self, bits: u32) -> Signal {
+        let t = cos_table();
+        let mut plane_data = self.input_centred();
+        for (pass, &(along_cols, transpose, shift)) in PASSES.iter().enumerate() {
+            let mut acc = vec![0i64; IMG * IMG];
+            let tap = |o: usize, i: usize| if transpose { t[i][o] } else { t[o][i] };
+            stage(&plane_data, tap, along_cols, |dst, x, w| {
+                acc[dst] += exact_mac(x, w, bits)
+            });
+            plane_data = renorm(acc, shift);
+            if pass == 1 {
+                quantise(&mut plane_data);
+            }
+        }
+        let data = plane_data.into_iter().map(|v| clamp_u8(v + 128)).collect();
+        Signal::new(IMG, IMG, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::Exact;
+    use crate::workloads::quality::compare;
+
+    #[test]
+    fn cos_table_is_q6_orthonormal_ish() {
+        let t = cos_table();
+        assert_eq!(t[0], [23; 8]); // DC row: 64/√8 = 22.6 → 23
+        // Row norms ≈ 64² (orthonormal basis scaled by 64, squared).
+        for row in &t[1..] {
+            let norm: i64 = row.iter().map(|&c| c * c).sum();
+            assert!((3900..=4300).contains(&norm), "row norm {norm}");
+            assert!(row.iter().all(|&c| c.unsigned_abs() <= 32));
+        }
+    }
+
+    #[test]
+    fn quant_shifts_grow_with_frequency() {
+        assert_eq!(quant_shift(0, 0), 0);
+        assert_eq!(quant_shift(7, 7), 3);
+        assert!(quant_shift(0, 1) >= quant_shift(0, 0));
+    }
+
+    #[test]
+    fn exact_round_trip_matches_reference_and_is_faithful() {
+        let w = DctRoundTrip::new();
+        let m = Exact::new(8);
+        let r = w.run(&m);
+        assert_eq!(r.output, w.reference(8));
+        assert_eq!(r.macs, (IMG * IMG * 8 * 4) as u64);
+        // The round trip is lossy (quantisation), but must stay a
+        // recognisable reconstruction of the input.
+        let input = synthetic_image(IMG, IMG, SEED);
+        let q = compare(&input, &r.output, 255.0);
+        assert!(q.psnr_db > 20.0, "round-trip PSNR {}", q.psnr_db);
+        assert!(q.ssim > 0.5, "round-trip SSIM {}", q.ssim);
+    }
+}

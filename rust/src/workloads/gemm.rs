@@ -1,0 +1,107 @@
+//! Integer GEMM: `C = A·B` with 8-bit entries — the linear-algebra core of
+//! every NN/DSP pipeline, and the densest multiplication workload in the
+//! suite (`M·N·K` MACs). The raw accumulators are renormalised by `>> 13`
+//! (`K·255² < 2^21`, and `2^21 >> 13 = 254`) into the 8-bit range for
+//! PSNR/SSIM scoring, like a requantising inference kernel.
+
+use super::signal::{clamp_u8, synthetic_matrix, Signal};
+use super::{exact_mac, MacPlane, Workload, WorkloadRun};
+use crate::multipliers::ApproxMultiplier;
+
+const M: usize = 40;
+const K: usize = 32;
+const N: usize = 40;
+const SEED_A: u64 = 0x6E_33A;
+const SEED_B: u64 = 0x6E_33B;
+/// Requantisation shift: `K·255² = 2,080,800 < 2^21`, so `>> 13` lands in
+/// `[0, 254]`.
+const OUT_SHIFT: u32 = 13;
+
+/// Integer matrix-multiply workload.
+pub struct Gemm;
+
+impl Gemm {
+    /// New GEMM workload over the fixed matrix pair.
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        Self
+    }
+
+    fn inputs(&self) -> (Signal, Signal) {
+        (
+            synthetic_matrix(M, K, SEED_A), // A: M×K
+            synthetic_matrix(K, N, SEED_B), // B: K×N
+        )
+    }
+}
+
+impl Workload for Gemm {
+    fn name(&self) -> &'static str {
+        "gemm"
+    }
+
+    fn description(&self) -> String {
+        format!("integer GEMM {M}×{K} · {K}×{N} with requantised output")
+    }
+
+    fn run(&self, m: &dyn ApproxMultiplier) -> WorkloadRun {
+        let (a, b) = self.inputs();
+        let mut plane = MacPlane::new(m, M * N);
+        for i in 0..M {
+            for j in 0..N {
+                let t = i * N + j;
+                for k in 0..K {
+                    plane.mac(t, a.at(k, i), b.at(j, k));
+                }
+            }
+        }
+        let (acc, macs) = plane.finish();
+        let data = acc
+            .into_iter()
+            .map(|v| clamp_u8((v + (1 << (OUT_SHIFT - 1))) >> OUT_SHIFT))
+            .collect();
+        WorkloadRun {
+            output: Signal::new(N, M, data),
+            macs,
+        }
+    }
+
+    fn reference(&self, bits: u32) -> Signal {
+        let (a, b) = self.inputs();
+        let mut data = vec![0i64; M * N];
+        for i in 0..M {
+            for j in 0..N {
+                let mut acc = 0i64;
+                for k in 0..K {
+                    acc += exact_mac(a.at(k, i), b.at(j, k), bits);
+                }
+                data[i * N + j] = clamp_u8((acc + (1 << (OUT_SHIFT - 1))) >> OUT_SHIFT);
+            }
+        }
+        Signal::new(N, M, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::Exact;
+
+    #[test]
+    fn gemm_exact_matches_reference_and_shape() {
+        let w = Gemm::new();
+        let m = Exact::new(8);
+        let r = w.run(&m);
+        assert_eq!(r.output, w.reference(8));
+        assert_eq!(r.macs, (M * N * K) as u64);
+        assert_eq!((r.output.w, r.output.h), (N, M));
+        assert!(r.output.data.iter().all(|&v| (0..=255).contains(&v)));
+    }
+
+    #[test]
+    fn requantisation_cannot_overflow_the_display_range() {
+        // Worst-case accumulator: K·255² + rounding stays below 255·2^13.
+        let worst = (K as i64) * 255 * 255 + (1 << (OUT_SHIFT - 1));
+        assert!(worst >> OUT_SHIFT <= 255);
+    }
+}

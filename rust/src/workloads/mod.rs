@@ -1,0 +1,299 @@
+//! Error-resilient application suite (the "applications" axis of the
+//! comparative-study literature): multiplication-heavy kernels — image
+//! convolution (blur/sharpen/Sobel), alpha compositing, an 8×8 DCT
+//! compression round-trip, FIR filtering and integer GEMM — each runnable
+//! under any [`ApproxMultiplier`] and scored against the exact-multiplier
+//! reference with [`quality`] (MSE/PSNR/SSIM).
+//!
+//! ## The MAC plane
+//!
+//! Every workload inner loop goes through [`MacPlane`], which streams
+//! sign-magnitude operand pairs into
+//! [`ApproxMultiplier::mul_batch`][crate::multipliers::ApproxMultiplier::mul_batch]
+//! in [`BATCH`]-sized chunks — the PR-1 batched kernel plane. No workload
+//! ever calls scalar `mul` per pair (pinned by
+//! `tests/integration_workloads.rs`, which runs the whole registry under a
+//! mock whose scalar path panics). Operand magnitudes saturate at the
+//! multiplier's width, the way a real `n`-bit datapath would.
+//!
+//! ## Determinism
+//!
+//! Inputs are synthetic ([`signal`]), integer-built from fixed seeds: a
+//! workload's reference output is a pure function of its name and the
+//! operand width, so every quality number in the report is reproducible.
+
+pub mod blend;
+pub mod conv;
+pub mod dct;
+pub mod fir;
+pub mod gemm;
+pub mod quality;
+pub mod signal;
+
+pub use blend::Blend;
+pub use conv::{Conv2d, Sobel};
+pub use dct::DctRoundTrip;
+pub use fir::Fir;
+pub use gemm::Gemm;
+pub use quality::Quality;
+pub use signal::Signal;
+
+use crate::error::BATCH;
+use crate::hardware::{estimate, HwEstimate};
+use crate::multipliers::ApproxMultiplier;
+
+/// One multiplication-heavy application kernel.
+///
+/// `run` executes under an arbitrary multiplier through the batched MAC
+/// plane; `reference` is an independent scalar implementation of the same
+/// fixed-point arithmetic with exact products — under
+/// [`Exact`][crate::multipliers::Exact], `run` must reproduce it
+/// bit-for-bit (property-tested across the registry).
+pub trait Workload: Send + Sync {
+    /// Registry key (`blur`, `sharpen`, `sobel`, `blend`, `dct`, `fir`,
+    /// `gemm`).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for `scaletrim app` and the report.
+    fn description(&self) -> String;
+
+    /// Execute under `m`, returning the output signal and the number of
+    /// multiplications issued (the energy denominator).
+    fn run(&self, m: &dyn ApproxMultiplier) -> WorkloadRun;
+
+    /// Exact-arithmetic reference output for an `bits`-wide datapath.
+    fn reference(&self, bits: u32) -> Signal;
+}
+
+/// Result of one workload execution.
+#[derive(Debug, Clone)]
+pub struct WorkloadRun {
+    /// The application output (8-bit range samples).
+    pub output: Signal,
+    /// Multiplications issued through the MAC plane.
+    pub macs: u64,
+}
+
+/// Saturate a signed sample's magnitude to an `bits`-wide unsigned operand
+/// — the workloads' fixed-point contract with the multiplier zoo (a real
+/// `n`-bit datapath clips, and `ApproxMultiplier::mul` only accepts
+/// operands in `[0, 2^n)`).
+#[inline]
+pub fn sat_operand(v: i64, bits: u32) -> u64 {
+    v.unsigned_abs().min((1u64 << bits) - 1)
+}
+
+/// Exact scalar MAC term under the same width-saturation rule as
+/// [`MacPlane::mac`] — the building block of every `reference` path.
+#[inline]
+pub fn exact_mac(x: i64, w: i64, bits: u32) -> i64 {
+    let p = (sat_operand(x, bits) * sat_operand(w, bits)) as i64;
+    if (x < 0) ^ (w < 0) {
+        -p
+    } else {
+        p
+    }
+}
+
+/// Batched signed multiply-accumulate engine: collects sign-magnitude
+/// operand pairs with their accumulator targets and flushes them through
+/// `mul_batch` in [`BATCH`]-sized chunks. This is the only way workloads
+/// touch a multiplier — dynamic dispatch is paid once per chunk, and the
+/// monomorphized kernel overrides (PR 1) do the per-pair work.
+pub struct MacPlane<'m> {
+    m: &'m dyn ApproxMultiplier,
+    bits: u32,
+    a: Vec<u64>,
+    b: Vec<u64>,
+    out: Vec<u64>,
+    sgn: Vec<i64>,
+    tgt: Vec<usize>,
+    acc: Vec<i64>,
+    macs: u64,
+}
+
+impl<'m> MacPlane<'m> {
+    /// New plane accumulating into `outputs` zero-initialised slots.
+    pub fn new(m: &'m dyn ApproxMultiplier, outputs: usize) -> Self {
+        Self {
+            bits: m.bits(),
+            m,
+            a: Vec::with_capacity(BATCH),
+            b: Vec::with_capacity(BATCH),
+            out: vec![0; BATCH],
+            sgn: Vec::with_capacity(BATCH),
+            tgt: Vec::with_capacity(BATCH),
+            acc: vec![0; outputs],
+            macs: 0,
+        }
+    }
+
+    /// Queue `acc[target] += x · w` (signed, width-saturated magnitudes).
+    #[inline]
+    pub fn mac(&mut self, target: usize, x: i64, w: i64) {
+        debug_assert!(target < self.acc.len(), "mac target out of range");
+        self.a.push(sat_operand(x, self.bits));
+        self.b.push(sat_operand(w, self.bits));
+        self.sgn.push(if (x < 0) ^ (w < 0) { -1 } else { 1 });
+        self.tgt.push(target);
+        if self.a.len() == BATCH {
+            self.flush();
+        }
+    }
+
+    fn flush(&mut self) {
+        let len = self.a.len();
+        if len == 0 {
+            return;
+        }
+        self.m.mul_batch(&self.a, &self.b, &mut self.out[..len]);
+        for i in 0..len {
+            self.acc[self.tgt[i]] += self.sgn[i] * self.out[i] as i64;
+        }
+        self.macs += len as u64;
+        self.a.clear();
+        self.b.clear();
+        self.sgn.clear();
+        self.tgt.clear();
+    }
+
+    /// Flush the tail and hand back `(accumulators, multiplications)`.
+    pub fn finish(mut self) -> (Vec<i64>, u64) {
+        self.flush();
+        (self.acc, self.macs)
+    }
+}
+
+/// All registered workloads, in report order.
+pub fn registry() -> Vec<Box<dyn Workload>> {
+    vec![
+        Box::new(Conv2d::blur()),
+        Box::new(Conv2d::sharpen()),
+        Box::new(Sobel::new()),
+        Box::new(Blend::new()),
+        Box::new(DctRoundTrip::new()),
+        Box::new(Fir::new()),
+        Box::new(Gemm::new()),
+    ]
+}
+
+/// Look a workload up by registry key.
+pub fn by_name(name: &str) -> Option<Box<dyn Workload>> {
+    registry().into_iter().find(|w| w.name() == name)
+}
+
+/// One workload × config evaluation row: quality against the exact
+/// reference plus the hardware cost of the multiplier that produced it.
+#[derive(Debug, Clone)]
+pub struct WorkloadReport {
+    /// Workload registry key.
+    pub workload: String,
+    /// Multiplier config label.
+    pub config: String,
+    /// Quality against the exact-multiplier reference.
+    pub quality: Quality,
+    /// Multiplications issued.
+    pub macs: u64,
+    /// Hardware estimate of one multiplier instance.
+    pub hw: HwEstimate,
+    /// Multiplier energy for the whole run: `macs × PDP`, in nJ.
+    pub energy_nj: f64,
+}
+
+/// Evaluate one workload under one configuration end to end.
+pub fn evaluate(w: &dyn Workload, m: &dyn ApproxMultiplier) -> WorkloadReport {
+    let reference = w.reference(m.bits());
+    evaluate_with_reference(w, m, &reference)
+}
+
+/// [`evaluate`] against a precomputed reference — use when sweeping many
+/// configurations of one width over the same workload, so the exact
+/// scalar reference is computed once, not per config (the report harness
+/// does this). The reference must come from `w.reference(m.bits())`.
+pub fn evaluate_with_reference(
+    w: &dyn Workload,
+    m: &dyn ApproxMultiplier,
+    reference: &Signal,
+) -> WorkloadReport {
+    let run = w.run(m);
+    let quality = quality::compare(reference, &run.output, 255.0);
+    let hw = estimate(m);
+    let energy_nj = hw.pdp_fj * run.macs as f64 * 1e-6;
+    WorkloadReport {
+        workload: w.name().to_string(),
+        config: m.name(),
+        quality,
+        macs: run.macs,
+        hw,
+        energy_nj,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::Exact;
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        let reg = registry();
+        assert!(reg.len() >= 5, "suite must cover ≥ 5 workloads");
+        let mut names: Vec<&str> = reg.iter().map(|w| w.name()).collect();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(before, names.len(), "duplicate workload names");
+        for w in &reg {
+            assert!(by_name(w.name()).is_some(), "{} not resolvable", w.name());
+            assert!(!w.description().is_empty());
+        }
+        assert!(by_name("no-such-workload").is_none());
+    }
+
+    #[test]
+    fn mac_plane_accumulates_signed_products() {
+        let m = Exact::new(8);
+        let mut p = MacPlane::new(&m, 2);
+        p.mac(0, 3, 7);
+        p.mac(0, -2, 5);
+        p.mac(1, -4, -6);
+        let (acc, macs) = p.finish();
+        assert_eq!(acc, vec![3 * 7 - 2 * 5, 4 * 6]);
+        assert_eq!(macs, 3);
+    }
+
+    #[test]
+    fn mac_plane_saturates_at_width() {
+        let m = Exact::new(8);
+        let mut p = MacPlane::new(&m, 1);
+        p.mac(0, 300, 2); // magnitude clips to 255
+        let (acc, _) = p.finish();
+        assert_eq!(acc, vec![255 * 2]);
+        assert_eq!(exact_mac(300, 2, 8), 255 * 2);
+        assert_eq!(exact_mac(-300, 2, 8), -(255 * 2));
+    }
+
+    #[test]
+    fn mac_plane_flushes_across_chunk_boundary() {
+        let m = Exact::new(8);
+        let n = BATCH + 37; // force one full flush plus a tail
+        let mut p = MacPlane::new(&m, 1);
+        for _ in 0..n {
+            p.mac(0, 2, 3);
+        }
+        let (acc, macs) = p.finish();
+        assert_eq!(acc, vec![6 * n as i64]);
+        assert_eq!(macs, n as u64);
+    }
+
+    #[test]
+    fn evaluate_exact_is_lossless() {
+        let m = Exact::new(8);
+        let w = Conv2d::blur();
+        let r = evaluate(&w, &m);
+        assert_eq!(r.quality.mse, 0.0);
+        assert_eq!(r.quality.ssim, 1.0);
+        assert!(r.quality.psnr_db.is_infinite());
+        assert!(r.macs > 0 && r.energy_nj > 0.0);
+    }
+}

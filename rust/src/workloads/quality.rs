@@ -1,0 +1,191 @@
+//! Application-level quality metrics: MSE, PSNR and SSIM of a workload
+//! output against its exact-multiplier reference.
+//!
+//! These are the scores the approximate-multiplier application literature
+//! reports (Masadeh et al., the Wu et al. survey): MARED/StdARED say how
+//! wrong individual products are; PSNR/SSIM say whether anyone looking at
+//! the *application* output would notice.
+//!
+//! SSIM is the block form: non-overlapping `8×8` windows (clamped at the
+//! borders, degenerating to `8×1` strips for 1-D signals), per-window
+//! luminance/contrast/structure with the standard `k1 = 0.01, k2 = 0.03`
+//! constants, averaged over windows. Identical signals score exactly 1.
+
+use super::signal::Signal;
+
+/// SSIM window edge (samples).
+const SSIM_WINDOW: usize = 8;
+
+/// Quality of one workload output against the exact reference.
+#[derive(Debug, Clone, Copy)]
+pub struct Quality {
+    /// Mean squared error over all samples.
+    pub mse: f64,
+    /// Peak signal-to-noise ratio, dB (`f64::INFINITY` when identical).
+    pub psnr_db: f64,
+    /// Mean structural similarity in `[-1, 1]`; 1 when identical.
+    pub ssim: f64,
+}
+
+/// Mean squared error between two same-shape signals.
+pub fn mse(reference: &Signal, out: &Signal) -> f64 {
+    assert_eq!(
+        (reference.w, reference.h),
+        (out.w, out.h),
+        "mse: signal shapes differ"
+    );
+    assert!(!reference.is_empty(), "mse of an empty signal");
+    let sum: f64 = reference
+        .data
+        .iter()
+        .zip(&out.data)
+        .map(|(&r, &o)| {
+            let d = (r - o) as f64;
+            d * d
+        })
+        .sum();
+    sum / reference.len() as f64
+}
+
+/// PSNR in dB for a given mean squared error and peak signal value.
+/// `f64::INFINITY` when `mse == 0` (bit-identical signals).
+pub fn psnr_db(mse: f64, peak: f64) -> f64 {
+    if mse == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (peak * peak / mse).log10()
+    }
+}
+
+/// Mean SSIM over non-overlapping windows (see module docs).
+pub fn ssim(reference: &Signal, out: &Signal, peak: f64) -> f64 {
+    assert_eq!(
+        (reference.w, reference.h),
+        (out.w, out.h),
+        "ssim: signal shapes differ"
+    );
+    assert!(!reference.is_empty(), "ssim of an empty signal");
+    let c1 = (0.01 * peak) * (0.01 * peak);
+    let c2 = (0.03 * peak) * (0.03 * peak);
+    let (w, h) = (reference.w, reference.h);
+    let mut total = 0.0;
+    let mut windows = 0u64;
+    let mut y0 = 0;
+    while y0 < h {
+        let wh = SSIM_WINDOW.min(h - y0);
+        let mut x0 = 0;
+        while x0 < w {
+            let ww = SSIM_WINDOW.min(w - x0);
+            let n = (ww * wh) as f64;
+            let (mut sx, mut sy, mut sxx, mut syy, mut sxy) = (0.0, 0.0, 0.0, 0.0, 0.0);
+            for y in y0..y0 + wh {
+                for x in x0..x0 + ww {
+                    let a = reference.at(x, y) as f64;
+                    let b = out.at(x, y) as f64;
+                    sx += a;
+                    sy += b;
+                    sxx += a * a;
+                    syy += b * b;
+                    sxy += a * b;
+                }
+            }
+            let (mx, my) = (sx / n, sy / n);
+            let vx = sxx / n - mx * mx;
+            let vy = syy / n - my * my;
+            let cov = sxy / n - mx * my;
+            total += ((2.0 * mx * my + c1) * (2.0 * cov + c2))
+                / ((mx * mx + my * my + c1) * (vx + vy + c2));
+            windows += 1;
+            x0 += SSIM_WINDOW;
+        }
+        y0 += SSIM_WINDOW;
+    }
+    total / windows as f64
+}
+
+/// All three metrics at once (the workload report row).
+pub fn compare(reference: &Signal, out: &Signal, peak: f64) -> Quality {
+    let m = mse(reference, out);
+    Quality {
+        mse: m,
+        psnr_db: psnr_db(m, peak),
+        ssim: ssim(reference, out, peak),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::signal::synthetic_image;
+
+    #[test]
+    fn identical_signals_score_perfect() {
+        let a = synthetic_image(32, 32, 5);
+        let q = compare(&a, &a, 255.0);
+        assert_eq!(q.mse, 0.0);
+        assert!(q.psnr_db.is_infinite() && q.psnr_db > 0.0);
+        assert_eq!(q.ssim, 1.0);
+    }
+
+    #[test]
+    fn golden_mse_psnr_uniform_offset() {
+        // 4×4 all-100 vs all-102: every error is 2 → MSE = 4,
+        // PSNR = 10·log10(255²/4) = 42.1107 dB (hand-computed).
+        let a = Signal::new(4, 4, vec![100; 16]);
+        let b = Signal::new(4, 4, vec![102; 16]);
+        let q = compare(&a, &b, 255.0);
+        assert_eq!(q.mse, 4.0);
+        assert!((q.psnr_db - 42.1107).abs() < 1e-3, "PSNR {}", q.psnr_db);
+    }
+
+    #[test]
+    fn golden_ssim_uniform_offset() {
+        // Constant 100 vs constant 102 in one 4×4 window: variances and
+        // covariance vanish, so SSIM reduces to the luminance term
+        // (2·100·102 + C1)/(100² + 102² + C1) with C1 = 2.55² = 6.5025
+        // → 20406.5025 / 20410.5025 = 0.99980403… (hand-computed).
+        let a = Signal::new(4, 4, vec![100; 16]);
+        let b = Signal::new(4, 4, vec![102; 16]);
+        let s = ssim(&a, &b, 255.0);
+        assert!((s - 0.999_804_03).abs() < 1e-6, "SSIM {s}");
+    }
+
+    #[test]
+    fn golden_mse_single_pixel() {
+        // One of 16 pixels off by 8: MSE = 64/16 = 4 exactly.
+        let a = Signal::new(4, 4, vec![50; 16]);
+        let mut v = vec![50; 16];
+        v[5] = 58;
+        let b = Signal::new(4, 4, v);
+        assert_eq!(mse(&a, &b), 4.0);
+    }
+
+    #[test]
+    fn ssim_penalises_structure_loss_more_than_offset() {
+        let a = synthetic_image(32, 32, 9);
+        // Uniform +2 offset: structure intact, SSIM barely moves.
+        let offset = Signal::new(32, 32, a.data.iter().map(|&v| v + 2).collect());
+        // Flattened to the mean: structure destroyed.
+        let mean = a.data.iter().sum::<i64>() / a.len() as i64;
+        let flat = Signal::new(32, 32, vec![mean; a.len()]);
+        let s_off = ssim(&a, &offset, 255.0);
+        let s_flat = ssim(&a, &flat, 255.0);
+        assert!(s_off > 0.99, "offset SSIM {s_off}");
+        assert!(s_flat < 0.5, "flat SSIM {s_flat}");
+        assert!(s_off > s_flat);
+    }
+
+    #[test]
+    fn psnr_monotone_in_mse() {
+        assert!(psnr_db(1.0, 255.0) > psnr_db(4.0, 255.0));
+        assert!(psnr_db(4.0, 255.0) > psnr_db(100.0, 255.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "shapes differ")]
+    fn shape_mismatch_panics() {
+        let a = Signal::zeros(4, 4);
+        let b = Signal::zeros(4, 5);
+        let _ = mse(&a, &b);
+    }
+}

@@ -1,0 +1,183 @@
+//! Deterministic synthetic stimulus for the application suite.
+//!
+//! The build image ships no image or audio assets, so every workload
+//! generates its own input from a fixed seed through [`crate::util::rng`]:
+//! integer-only construction (gradients, concentric rings, random
+//! rectangles, triangle waves, uniform noise) keeps the streams identical
+//! across platforms — no libm trigonometry on the data path.
+
+use crate::util::rng::Xoshiro256;
+
+/// A 2-D integer signal (row-major). Images are `w × h` with 8-bit sample
+/// range; 1-D signals are `w × 1`; GEMM outputs are whatever the kernel
+/// produces before normalisation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Signal {
+    /// Width (samples per row).
+    pub w: usize,
+    /// Height (rows).
+    pub h: usize,
+    /// Row-major samples: `data[y * w + x]`.
+    pub data: Vec<i64>,
+}
+
+impl Signal {
+    /// New signal from raw samples; panics unless `data.len() == w * h`.
+    pub fn new(w: usize, h: usize, data: Vec<i64>) -> Self {
+        assert_eq!(data.len(), w * h, "signal data does not tile {w}×{h}");
+        Self { w, h, data }
+    }
+
+    /// All-zero signal.
+    pub fn zeros(w: usize, h: usize) -> Self {
+        Self {
+            w,
+            h,
+            data: vec![0; w * h],
+        }
+    }
+
+    /// Sample at `(x, y)`.
+    #[inline]
+    pub fn at(&self, x: usize, y: usize) -> i64 {
+        self.data[y * self.w + x]
+    }
+
+    /// Sample with clamp-to-edge addressing (convolution boundary policy).
+    #[inline]
+    pub fn at_clamped(&self, x: isize, y: isize) -> i64 {
+        let xc = x.clamp(0, self.w as isize - 1) as usize;
+        let yc = y.clamp(0, self.h as isize - 1) as usize;
+        self.at(xc, yc)
+    }
+
+    /// Total sample count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the signal holds no samples.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Clamp a sample into the 8-bit display range.
+#[inline]
+pub fn clamp_u8(v: i64) -> i64 {
+    v.clamp(0, 255)
+}
+
+/// Synthetic test image: diagonal gradient + concentric rings from a random
+/// centre + a handful of random rectangles + ±8 uniform noise, clamped to
+/// `[0, 255]`. Integer arithmetic only; identical for a given `(w, h, seed)`.
+pub fn synthetic_image(w: usize, h: usize, seed: u64) -> Signal {
+    assert!(w >= 2 && h >= 2, "synthetic_image needs at least 2×2");
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut data = vec![0i64; w * h];
+    for y in 0..h {
+        for x in 0..w {
+            let gx = (x as i64) * 255 / (w as i64 - 1);
+            let gy = (y as i64) * 255 / (h as i64 - 1);
+            data[y * w + x] = (gx + gy) / 2;
+        }
+    }
+    // Concentric rings: thin high-frequency texture around a random centre.
+    let cx = rng.gen_range(w as u64) as i64;
+    let cy = rng.gen_range(h as u64) as i64;
+    let ring = 64 + rng.gen_range(192) as i64; // ring pitch in d² units
+    for y in 0..h {
+        for x in 0..w {
+            let (dx, dy) = (x as i64 - cx, y as i64 - cy);
+            if ((dx * dx + dy * dy) / ring) % 2 == 0 {
+                data[y * w + x] += 24;
+            } else {
+                data[y * w + x] -= 24;
+            }
+        }
+    }
+    // Flat rectangles: piecewise-constant regions (what blur/DCT like).
+    for _ in 0..5 {
+        let x0 = rng.gen_range(w as u64) as usize;
+        let y0 = rng.gen_range(h as u64) as usize;
+        let rw = 1 + rng.gen_range((w - x0) as u64) as usize;
+        let rh = 1 + rng.gen_range((h - y0) as u64) as usize;
+        let v = rng.gen_range(256) as i64;
+        for y in y0..(y0 + rh).min(h) {
+            for x in x0..(x0 + rw).min(w) {
+                let p = &mut data[y * w + x];
+                *p = (*p + 2 * v) / 3;
+            }
+        }
+    }
+    for p in &mut data {
+        *p = clamp_u8(*p + rng.gen_range(17) as i64 - 8);
+    }
+    Signal::new(w, h, data)
+}
+
+/// Synthetic 1-D signal (`n × 1`): a sum of three triangle waves of random
+/// period and phase plus ±6 noise, clamped to `[0, 255]`.
+pub fn synthetic_signal(n: usize, seed: u64) -> Signal {
+    assert!(n >= 2, "synthetic_signal needs at least 2 samples");
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut waves = Vec::new();
+    for _ in 0..3 {
+        let period = 8 + rng.gen_range(120) as i64;
+        let phase = rng.gen_range(period as u64) as i64;
+        waves.push((period, phase));
+    }
+    let mut data = vec![0i64; n];
+    for (t, p) in data.iter_mut().enumerate() {
+        let mut acc = 0i64;
+        for &(period, phase) in &waves {
+            let u = (t as i64 + phase).rem_euclid(period);
+            // Triangle wave in [0, 255].
+            acc += (u * 510 / period - 255).abs();
+        }
+        *p = clamp_u8(acc / 3 + rng.gen_range(13) as i64 - 6);
+    }
+    Signal::new(n, 1, data)
+}
+
+/// Synthetic matrix (`cols × rows` signal) with uniform 8-bit entries.
+pub fn synthetic_matrix(rows: usize, cols: usize, seed: u64) -> Signal {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let data = (0..rows * cols).map(|_| rng.gen_range(256) as i64).collect();
+    Signal::new(cols, rows, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_is_deterministic_and_in_range() {
+        let a = synthetic_image(32, 24, 7);
+        let b = synthetic_image(32, 24, 7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 32 * 24);
+        assert!(a.data.iter().all(|&v| (0..=255).contains(&v)));
+        // Different seeds must actually differ.
+        let c = synthetic_image(32, 24, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn signal_and_matrix_shapes() {
+        let s = synthetic_signal(100, 3);
+        assert_eq!((s.w, s.h), (100, 1));
+        assert!(s.data.iter().all(|&v| (0..=255).contains(&v)));
+        let m = synthetic_matrix(4, 6, 1);
+        assert_eq!((m.w, m.h), (6, 4));
+        assert!(m.data.iter().all(|&v| (0..=255).contains(&v)));
+    }
+
+    #[test]
+    fn clamped_addressing() {
+        let s = Signal::new(2, 2, vec![1, 2, 3, 4]);
+        assert_eq!(s.at_clamped(-5, 0), 1);
+        assert_eq!(s.at_clamped(5, 5), 4);
+        assert_eq!(s.at_clamped(1, 0), 2);
+    }
+}

@@ -1,0 +1,138 @@
+//! Integration tests for the application suite: exactness of the batched
+//! MAC plumbing, the mul_batch-only execution contract, determinism, and
+//! end-to-end quality/energy reporting.
+
+use ::scaletrim::multipliers::{ApproxMultiplier, Exact, ScaleTrim};
+use ::scaletrim::workloads::{by_name, evaluate, quality, registry, sat_operand};
+
+/// A multiplier that only exists on the batched plane: the scalar path
+/// panics. Running the whole registry under it proves no workload inner
+/// loop ever issues a per-pair `mul` — the ISSUE-2 acceptance criterion
+/// for the batched kernel plane.
+struct BatchOnly {
+    bits: u32,
+}
+
+impl ApproxMultiplier for BatchOnly {
+    fn name(&self) -> String {
+        "BatchOnly8".to_string()
+    }
+
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    fn mul(&self, _a: u64, _b: u64) -> u64 {
+        panic!("scalar mul invoked: workload inner loops must go through mul_batch");
+    }
+
+    // Exact products, computed without touching the scalar path.
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "mul_batch: operand slices differ");
+        assert_eq!(a.len(), out.len(), "mul_batch: output slice differs");
+        for ((&x, &y), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
+            *o = x * y;
+        }
+    }
+}
+
+/// Every registered workload, run under a scalar-panicking exact mock:
+/// (a) never calls `mul` per pair, and (b) — because the mock's batch is
+/// exact — reproduces the independent scalar reference bit-for-bit,
+/// validating the MacPlane accumulation, sign and saturation plumbing.
+#[test]
+fn workloads_execute_batched_only_and_match_reference() {
+    let mock = BatchOnly { bits: 8 };
+    for w in registry() {
+        let run = w.run(&mock);
+        let reference = w.reference(8);
+        assert_eq!(
+            run.output,
+            reference,
+            "{}: batched-exact output diverges from the scalar reference",
+            w.name()
+        );
+        assert!(run.macs > 0, "{}: no multiplications issued", w.name());
+    }
+}
+
+/// Same exactness property under the real `Exact` design (whose override
+/// is the monomorphized multiply loop).
+#[test]
+fn workloads_under_exact_match_reference_bit_for_bit() {
+    let m = Exact::new(8);
+    for w in registry() {
+        assert_eq!(w.run(&m).output, w.reference(8), "{} diverged", w.name());
+    }
+}
+
+/// Workloads are pure functions of their fixed seeds: identical outputs
+/// and MAC counts across repeated runs.
+#[test]
+fn workloads_are_deterministic() {
+    let m = ScaleTrim::new(8, 3, 4);
+    for w in registry() {
+        let a = w.run(&m);
+        let b = w.run(&m);
+        assert_eq!(a.output, b.output, "{} output drifted", w.name());
+        assert_eq!(a.macs, b.macs, "{} MAC count drifted", w.name());
+    }
+}
+
+/// End-to-end acceptance: `blur` under scaleTRIM(3,4) produces a usable
+/// image (finite PSNR, positive SSIM) and a positive energy figure.
+#[test]
+fn blur_under_scaletrim_end_to_end() {
+    let w = by_name("blur").expect("blur registered");
+    let m = ScaleTrim::new(8, 3, 4);
+    let r = evaluate(w.as_ref(), &m);
+    assert!(
+        r.quality.psnr_db.is_finite() && r.quality.psnr_db > 18.0,
+        "PSNR {}",
+        r.quality.psnr_db
+    );
+    assert!(r.quality.ssim > 0.5 && r.quality.ssim <= 1.0, "SSIM {}", r.quality.ssim);
+    assert!(r.hw.area_um2 > 0.0 && r.hw.delay_ns > 0.0 && r.hw.pdp_fj > 0.0);
+    assert!(r.energy_nj > 0.0 && r.macs > 0);
+}
+
+/// More accuracy buys more quality: scaleTRIM(6,8) must beat scaleTRIM(2,0)
+/// on every workload (the knob the paper turns, observed at the
+/// application level).
+#[test]
+fn quality_tracks_multiplier_accuracy() {
+    let coarse = ScaleTrim::new(8, 2, 0);
+    let fine = ScaleTrim::new(8, 6, 8);
+    for w in registry() {
+        let reference = w.reference(8);
+        let q_coarse = quality::compare(&reference, &w.run(&coarse).output, 255.0);
+        let q_fine = quality::compare(&reference, &w.run(&fine).output, 255.0);
+        assert!(
+            q_fine.psnr_db >= q_coarse.psnr_db,
+            "{}: PSNR {:.2} (6,8) < {:.2} (2,0)",
+            w.name(),
+            q_fine.psnr_db,
+            q_coarse.psnr_db
+        );
+    }
+}
+
+/// The width-saturation contract used by the MAC plane.
+#[test]
+fn sat_operand_clips_at_width() {
+    assert_eq!(sat_operand(255, 8), 255);
+    assert_eq!(sat_operand(256, 8), 255);
+    assert_eq!(sat_operand(-300, 8), 255);
+    assert_eq!(sat_operand(70_000, 16), 65_535);
+    assert_eq!(sat_operand(0, 8), 0);
+}
+
+/// Workloads run unchanged under 16-bit configurations (wider datapath,
+/// same 8-bit stimulus): exactness against the width-16 reference.
+#[test]
+fn workloads_run_at_16_bits() {
+    let m = Exact::new(16);
+    for w in registry() {
+        assert_eq!(w.run(&m).output, w.reference(16), "{} diverged @16b", w.name());
+    }
+}
