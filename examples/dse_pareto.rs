@@ -16,7 +16,7 @@ fn main() -> scaletrim::Result<()> {
     let points = evaluate_all(&zoo, SweepSpec::Exhaustive);
 
     // Pareto front on (MRED, PDP) — Fig. 9d's star markers.
-    let front = pareto_front(&points, |p| (p.error.mred_pct, p.hw.pdp_fj));
+    let front = pareto_front(&points, |p| p.mared_energy());
     println!("\nPareto front (MRED% vs PDP fJ):");
     for &i in &front {
         let p = &points[i];

@@ -34,10 +34,12 @@ fn main() -> scaletrim::Result<()> {
     }
 
     // Error metrics over every non-zero 8-bit operand pair (Eq. 8).
+    // MARED is the abstract's name for MRED; StdARED (the relative-error
+    // spread) is distinct from the Table-5 signed-ED std.
     let r = exhaustive_sweep(&m);
     println!(
-        "full-space error: MRED {:.2}% (paper 3.73), MED {:.1}, max {:.0}, std {:.1}",
-        r.mred_pct, r.med, r.max_error, r.std
+        "full-space error: MARED {:.2}% (paper 3.73), StdARED {:.2}%, MED {:.1}, max {:.0}, ED-std {:.1}",
+        r.mred_pct, r.stdared_pct, r.med, r.max_error, r.ed_std
     );
 
     // Hardware cost from the structural 45nm model (Table 4 axes).

@@ -23,8 +23,14 @@ fn main() -> scaletrim::Result<()> {
         for m in &configs {
             let r = evaluate(w.as_ref(), m.as_ref());
             println!(
-                "  {:<16} PSNR {:>6.2} dB   SSIM {:.4}   {:>7} MACs → {:>8.3} nJ",
-                r.config, r.quality.psnr_db, r.quality.ssim, r.macs, r.energy_nj
+                "  {:<16} PSNR {:>6.2} dB   SSIM {:.4}   MARED {:>6.3}%   StdARED {:>6.3}%   {:>7} MACs → {:>8.3} nJ",
+                r.config,
+                r.quality.psnr_db,
+                r.quality.ssim,
+                r.quality.mared_pct,
+                r.quality.stdared_pct,
+                r.macs,
+                r.energy_nj
             );
         }
     }

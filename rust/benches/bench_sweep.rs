@@ -9,7 +9,8 @@
 //! EXPERIMENTS.md's perf iteration log tracks the measured ratios.
 
 use ::scaletrim::error::{
-    exhaustive_sweep, exhaustive_sweep_scalar, percentile_sweep, sampled_sweep,
+    exhaustive_sweep, exhaustive_sweep_scalar, percentile_sweep, percentile_sweep_materializing,
+    sampled_sweep,
 };
 use ::scaletrim::lut::calibrate;
 use ::scaletrim::multipliers::{CompiledMul, ScaleTrim};
@@ -46,10 +47,35 @@ fn main() {
         black_box(sampled_sweep(&st16, 262_144, 7).mred_pct);
     });
     b.bench(
-        "sweep/percentile-8bit batched-parallel (65k AREDs)",
+        "sweep/percentile-8bit streaming sketch (65k AREDs)",
         Some(255 * 255),
         || {
             black_box(percentile_sweep(&st).max_pct);
+        },
+    );
+    b.bench(
+        "sweep/percentile-8bit materializing reference (65k AREDs)",
+        Some(255 * 255),
+        || {
+            black_box(percentile_sweep_materializing(&st).max_pct);
+        },
+    );
+    // Impossible on the seed plane: a 16-bit percentile run (the
+    // materializing path would allocate ~32 TiB of AREDs; the sketch
+    // samples 256k pairs here in ~256 KiB per shard).
+    b.bench(
+        "sweep/percentile-16bit streaming via sampled_sweep spec (256k pairs)",
+        Some(262_144),
+        || {
+            use ::scaletrim::error::{sweep_full, SweepSpec};
+            let (_, p) = sweep_full(
+                &st16,
+                SweepSpec::Sampled {
+                    pairs: 262_144,
+                    seed: 7,
+                },
+            );
+            black_box(p.p99_pct);
         },
     );
     b.bench("lut/build 256x256 batched", Some(65_536), || {

@@ -53,6 +53,14 @@ impl Coordinator {
         let metrics = Arc::new(Metrics::new());
         let (c, h, w) = backend.input_shape();
         let img_size = c * h * w;
+        // The artifact executes a *fixed* batch size: a popped batch larger
+        // than `backend.batch()` would overrun the padded pixel buffer in
+        // the lane worker and kill the lane. Clamp the policy so a queue
+        // can never hand out more than the backend can take.
+        let policy = BatchPolicy {
+            max_batch: policy.max_batch.clamp(1, backend.batch().max(1)),
+            ..policy
+        };
         let mut lanes = HashMap::new();
         for m in configs {
             let lut = cached_lut(*m);
@@ -274,6 +282,38 @@ mod tests {
             6,
             "every request answered exactly once"
         );
+    }
+
+    /// Regression: a policy `max_batch` larger than the backend's fixed
+    /// batch used to let `pop_batch` hand the lane worker more requests
+    /// than the padded pixel buffer holds — the copy panicked and silently
+    /// killed the lane, so every later submit hung. The clamp in
+    /// `Coordinator::new` must keep all of these answered.
+    #[test]
+    fn oversized_policy_batch_is_clamped_to_backend() {
+        let backend = Arc::new(MockBackend::new(2, 4)); // artifact batch = 2
+        let exact = Exact::new(8);
+        let configs: Vec<&dyn crate::multipliers::ApproxMultiplier> = vec![&exact];
+        let coord = Coordinator::new(
+            backend,
+            &configs,
+            BatchPolicy {
+                max_batch: 8, // > backend.batch()
+                max_wait: Duration::from_millis(50),
+            },
+        );
+        // Enqueue a burst larger than the artifact batch before the
+        // deadline can fire, so an unclamped queue would pop 6 at once.
+        let pending: Vec<_> = (0..6)
+            .map(|i| coord.submit("Exact8", vec![i as u8, 0, 0, 0]).unwrap().1)
+            .collect();
+        for (i, rx) in pending.into_iter().enumerate() {
+            let p = rx
+                .recv_timeout(Duration::from_secs(5))
+                .unwrap_or_else(|_| panic!("request {i} never answered — lane worker died"));
+            assert!(p.error.is_none(), "request {i}: {:?}", p.error);
+        }
+        assert_eq!(coord.metrics().responses.load(Ordering::Relaxed), 6);
     }
 
     #[test]

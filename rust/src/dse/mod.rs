@@ -7,7 +7,7 @@ mod pareto;
 
 pub use pareto::{dominance, pareto_front, Dominance};
 
-use crate::error::{sweep, ErrorReport, SweepSpec};
+use crate::error::{sweep_full, ErrorReport, PercentileReport, SweepSpec};
 use crate::hardware::{estimate, paper_reference, HwEstimate};
 use crate::multipliers::ApproxMultiplier;
 
@@ -19,8 +19,10 @@ pub struct DesignPoint {
     pub name: String,
     /// Operand width.
     pub bits: u32,
-    /// Measured error metrics.
+    /// Measured error metrics (MARED, StdARED, MED, Max, ED-std).
     pub error: ErrorReport,
+    /// ARED percentile statistics from the same sweep pass (Table 3 axes).
+    pub percentiles: PercentileReport,
     /// Modelled hardware cost.
     pub hw: HwEstimate,
     /// Paper Table 4 row, when published: (mred, delay, area, power, pdp).
@@ -28,16 +30,32 @@ pub struct DesignPoint {
 }
 
 impl DesignPoint {
-    /// Evaluate one configuration end to end.
+    /// Evaluate one configuration end to end. One traversal of the operand
+    /// space feeds both the scalar metrics and the percentile statistics
+    /// (the streaming builder produces both).
     pub fn evaluate(m: &dyn ApproxMultiplier, spec: SweepSpec) -> Self {
         let name = m.name();
+        let (error, percentiles) = sweep_full(m, spec);
         Self {
             bits: m.bits(),
-            error: sweep(m, spec),
+            error,
+            percentiles,
             hw: estimate(m),
             paper: paper_reference(&name),
             name,
         }
+    }
+
+    /// The paper's primary Pareto plane: (MARED %, energy fJ) — both
+    /// minimised.
+    pub fn mared_energy(&self) -> (f64, f64) {
+        (self.error.mred_pct, self.hw.pdp_fj)
+    }
+
+    /// The abstract's second headline plane: (StdARED %, energy fJ) —
+    /// error *consistency* against energy, both minimised.
+    pub fn stdared_energy(&self) -> (f64, f64) {
+        (self.error.stdared_pct, self.hw.pdp_fj)
     }
 }
 
@@ -82,6 +100,14 @@ mod tests {
         assert!(p.error.mred_pct > 3.0 && p.error.mred_pct < 4.5);
         assert!(p.hw.pdp_fj > 0.0);
         assert!(p.paper.is_some());
+        // The percentile plane rides the same pass: mean ARED agrees
+        // exactly, StdARED is populated, and the objective helpers expose
+        // both Pareto planes.
+        assert_eq!(p.percentiles.mean_pct, p.error.mred_pct);
+        assert_eq!(p.percentiles.pairs, p.error.pairs);
+        assert!(p.error.stdared_pct > 0.0);
+        assert_eq!(p.mared_energy(), (p.error.mred_pct, p.hw.pdp_fj));
+        assert_eq!(p.stdared_energy(), (p.error.stdared_pct, p.hw.pdp_fj));
     }
 
     #[test]

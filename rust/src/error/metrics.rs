@@ -1,35 +1,52 @@
 //! Error metrics. The paper reports, per multiplier configuration:
 //!
-//! - **MRED** — mean of `ARED_i = |M_App,i − M_Acc,i| / M_Acc,i` (Eq. 8),
-//!   in percent;
+//! - **MARED/MRED** — mean of `ARED_i = |M_App,i − M_Acc,i| / M_Acc,i`
+//!   (Eq. 8), in percent (the abstract calls it MARED, Sec. IV calls it
+//!   MRED — same quantity);
+//! - **StdARED** — standard deviation of the ARED distribution (the
+//!   abstract's second headline metric);
 //! - **MED** — mean absolute error distance `|M_App − M_Acc|`;
 //! - **Max-Error** — peak error distance (Table 5);
-//! - **Std** — standard deviation of the error distance (Table 5);
-//! - percentile statistics of the ARED distribution (Table 3).
+//! - **Std (ED)** — standard deviation of the *signed* error distance
+//!   (Table 5) — a different quantity from StdARED, kept under the
+//!   distinct name [`ErrorReport::ed_std`];
+//! - percentile statistics of the ARED distribution (Table 3), estimated
+//!   in constant memory by a mergeable log-histogram sketch.
 
-use crate::util::stats::Accumulator;
+use crate::util::stats::{Accumulator, LogQuantileSketch};
 
 /// Aggregated error statistics over an operand-pair population.
 #[derive(Debug, Clone, Default)]
 pub struct ErrorReport {
-    /// Mean relative error distance, percent (Eq. 8).
+    /// Mean absolute relative error distance, percent (Eq. 8; the
+    /// abstract's MARED).
     pub mred_pct: f64,
+    /// Standard deviation of the ARED distribution, percent (the
+    /// abstract's StdARED). Distinct from [`ed_std`](Self::ed_std).
+    pub stdared_pct: f64,
     /// Mean error distance (absolute).
     pub med: f64,
     /// Peak absolute error distance.
     pub max_error: f64,
-    /// Standard deviation of the (signed) error distance.
-    pub std: f64,
+    /// Standard deviation of the (signed) error distance — the paper's
+    /// Table-5 "Std" column. NOT StdARED: this is in product units, over
+    /// signed ED; StdARED is the spread of the relative-error distribution.
+    pub ed_std: f64,
     /// Mean signed error distance (bias; DRUM-style designs centre this).
     pub mean_signed: f64,
     /// Number of operand pairs measured.
     pub pairs: u64,
 }
 
-/// Streaming builder for [`ErrorReport`].
+/// Streaming builder for [`ErrorReport`] *and* [`PercentileReport`]: one
+/// pass over the operand stream yields both (the sweeps' single
+/// measurement plane). Mergeable across parallel shards in O(1) memory
+/// per shard — the ARED quantiles come from a [`LogQuantileSketch`], not
+/// a materialised vector.
 #[derive(Debug, Clone, Default)]
 pub struct ErrorReportBuilder {
     ared: Accumulator,
+    ared_sketch: LogQuantileSketch,
     ed_abs: Accumulator,
     ed_signed: Accumulator,
 }
@@ -41,34 +58,58 @@ impl ErrorReportBuilder {
     }
 
     /// Record one `(approx, exact)` pair; pairs with `exact == 0` are
-    /// excluded from MRED (division by zero) exactly as the paper's
-    /// "full operand space excluding zero" population does.
+    /// excluded from the ARED statistics (division by zero) exactly as the
+    /// paper's "full operand space excluding zero" population does.
     #[inline]
     pub fn push(&mut self, approx: u64, exact: u64) {
         let diff = approx as f64 - exact as f64;
         self.ed_abs.push(diff.abs());
         self.ed_signed.push(diff);
         if exact != 0 {
-            self.ared.push((diff / exact as f64).abs());
+            let ared = (diff / exact as f64).abs();
+            self.ared.push(ared);
+            self.ared_sketch.push(ared);
         }
     }
 
-    /// Merge a partial builder (parallel sweeps).
+    /// Merge a partial builder (parallel sweeps). Accumulator merges are
+    /// Chan-style (exact to ~1e-12 relative); the quantile sketch merges
+    /// bit-for-bit.
     pub fn merge(&mut self, other: &ErrorReportBuilder) {
         self.ared.merge(&other.ared);
+        self.ared_sketch.merge(&other.ared_sketch);
         self.ed_abs.merge(&other.ed_abs);
         self.ed_signed.merge(&other.ed_signed);
     }
 
-    /// Finalise.
+    /// Finalise the scalar metrics.
     pub fn finish(&self) -> ErrorReport {
         ErrorReport {
             mred_pct: 100.0 * self.ared.mean(),
+            stdared_pct: 100.0 * self.ared.std(),
             med: self.ed_abs.mean(),
             max_error: self.ed_abs.max(),
-            std: self.ed_signed.std(),
+            ed_std: self.ed_signed.std(),
             mean_signed: self.ed_signed.mean(),
             pairs: self.ed_abs.count(),
+        }
+    }
+
+    /// Finalise the ARED percentile statistics (Table 3) from the same
+    /// pass. Mean and max are exact (streaming accumulator); median/p95/
+    /// p99 come from the sketch, within one bin width (≤ 0.2% of the
+    /// value) of the materialising reference.
+    pub fn percentiles(&self) -> PercentileReport {
+        if self.ared.count() == 0 {
+            return PercentileReport::empty();
+        }
+        PercentileReport {
+            mean_pct: 100.0 * self.ared.mean(),
+            median_pct: 100.0 * self.ared_sketch.quantile(50.0),
+            p95_pct: 100.0 * self.ared_sketch.quantile(95.0),
+            p99_pct: 100.0 * self.ared_sketch.quantile(99.0),
+            max_pct: 100.0 * self.ared.max(),
+            pairs: self.ared.count(),
         }
     }
 }
@@ -86,13 +127,28 @@ pub struct PercentileReport {
     pub p99_pct: f64,
     /// Maximum ARED, percent.
     pub max_pct: f64,
+    /// Number of ARED observations behind the statistics.
+    pub pairs: u64,
 }
 
 impl PercentileReport {
-    /// Build from a (not necessarily sorted) vector of ARED fractions.
+    /// The explicit all-zero report for an empty ARED population (e.g. a
+    /// sampled sweep over an all-zero operand stream, where every pair is
+    /// excluded from ARED). `pairs == 0` marks it distinguishable from a
+    /// genuinely perfect multiplier.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Build from a (not necessarily sorted) vector of ARED fractions by
+    /// fully materialising and sorting it — the exact reference the
+    /// streaming sketch is tested against. An empty input yields
+    /// [`PercentileReport::empty`] instead of panicking.
     pub fn from_areds(mut areds: Vec<f64>) -> Self {
         use crate::util::stats::percentile_sorted;
-        assert!(!areds.is_empty());
+        if areds.is_empty() {
+            return Self::empty();
+        }
         areds.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mean = areds.iter().sum::<f64>() / areds.len() as f64;
         Self {
@@ -101,6 +157,7 @@ impl PercentileReport {
             p95_pct: 100.0 * percentile_sorted(&areds, 95.0),
             p99_pct: 100.0 * percentile_sorted(&areds, 99.0),
             max_pct: 100.0 * areds[areds.len() - 1],
+            pairs: areds.len() as u64,
         }
     }
 }
@@ -108,6 +165,7 @@ impl PercentileReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::Runner;
 
     #[test]
     fn exact_multiplier_reports_zero_error() {
@@ -119,14 +177,19 @@ mod tests {
         }
         let r = b.finish();
         assert_eq!(r.mred_pct, 0.0);
+        assert_eq!(r.stdared_pct, 0.0);
         assert_eq!(r.med, 0.0);
         assert_eq!(r.max_error, 0.0);
-        assert_eq!(r.std, 0.0);
+        assert_eq!(r.ed_std, 0.0);
+        let p = b.percentiles();
+        assert_eq!(p.median_pct, 0.0);
+        assert_eq!(p.max_pct, 0.0);
+        assert_eq!(p.pairs, 99 * 99);
     }
 
     #[test]
     fn known_constant_offset() {
-        // approx = exact + 10 always: MED = 10, std = 0, max = 10.
+        // approx = exact + 10 always: MED = 10, ED std = 0, max = 10.
         let mut b = ErrorReportBuilder::new();
         for e in [100u64, 200, 400] {
             b.push(e + 10, e);
@@ -134,8 +197,46 @@ mod tests {
         let r = b.finish();
         assert_eq!(r.med, 10.0);
         assert_eq!(r.max_error, 10.0);
-        assert!(r.std.abs() < 1e-12);
+        assert!(r.ed_std.abs() < 1e-12);
         assert!((r.mred_pct - 100.0 * (0.1 + 0.05 + 0.025) / 3.0).abs() < 1e-9);
+    }
+
+    /// Golden StdARED on a hand-computed population: AREDs exactly
+    /// {0.10, 0.20, 0.30} → mean 0.20, population variance
+    /// ((0.1)² + 0 + (0.1)²)/3 = 0.02/3, std = 0.0816496581…, so
+    /// StdARED = 8.16496581% and MARED = 20%.
+    #[test]
+    fn golden_stdared_hand_computed() {
+        let mut b = ErrorReportBuilder::new();
+        b.push(110, 100); // ARED 0.10
+        b.push(120, 100); // ARED 0.20
+        b.push(130, 100); // ARED 0.30
+        let r = b.finish();
+        assert!((r.mred_pct - 20.0).abs() < 1e-9, "MARED {}", r.mred_pct);
+        assert!(
+            (r.stdared_pct - 8.164_965_809_277_26).abs() < 1e-9,
+            "StdARED {}",
+            r.stdared_pct
+        );
+        // The signed-ED std is a different quantity: EDs are {10, 20, 30},
+        // std = sqrt(200/3) = 8.16496581 in *product units*, numerically
+        // 100× the ARED case here only because exact == 100 throughout.
+        assert!((r.ed_std - 8.164_965_809_277_26).abs() < 1e-9);
+    }
+
+    /// StdARED and ED-std must genuinely diverge when the relative errors
+    /// are constant but the absolute ones are not (and vice versa).
+    #[test]
+    fn stdared_distinct_from_ed_std() {
+        // approx = 1.1 × exact: every ARED is exactly 0.1 → StdARED = 0,
+        // but the EDs {10, 100, 1000} spread → ED std ≫ 0.
+        let mut b = ErrorReportBuilder::new();
+        for e in [100u64, 1000, 10_000] {
+            b.push(e + e / 10, e);
+        }
+        let r = b.finish();
+        assert!(r.stdared_pct < 1e-9, "StdARED {}", r.stdared_pct);
+        assert!(r.ed_std > 100.0, "ED std {}", r.ed_std);
     }
 
     #[test]
@@ -156,8 +257,95 @@ mod tests {
         a.merge(&bb);
         let (w, m) = (whole.finish(), a.finish());
         assert!((w.mred_pct - m.mred_pct).abs() < 1e-10);
-        assert!((w.std - m.std).abs() < 1e-8);
+        assert!((w.stdared_pct - m.stdared_pct).abs() < 1e-10);
+        assert!((w.ed_std - m.ed_std).abs() < 1e-8);
         assert_eq!(w.pairs, m.pairs);
+        // Quantile sketch counts are integers: sharded percentiles are
+        // bit-for-bit identical, not merely close.
+        let (wp, mp) = (whole.percentiles(), a.percentiles());
+        assert_eq!(wp.median_pct, mp.median_pct);
+        assert_eq!(wp.p95_pct, mp.p95_pct);
+        assert_eq!(wp.p99_pct, mp.p99_pct);
+        assert_eq!(wp.max_pct, mp.max_pct);
+        assert_eq!(wp.pairs, mp.pairs);
+    }
+
+    /// Property: an arbitrary sharding of an arbitrary pair stream merges
+    /// to the sequential single-builder result — quantiles bit-for-bit
+    /// (integer bin counts), stdared/mared to accumulator-merge precision.
+    #[test]
+    fn prop_sharded_merge_matches_sequential() {
+        let mut r = Runner::new("sharded-merge-matches-sequential", 40);
+        r.run(|g| {
+            let n = g.usize_in(1, 400);
+            let shards = g.usize_in(1, 8);
+            let mut whole = ErrorReportBuilder::new();
+            let mut parts = vec![ErrorReportBuilder::new(); shards];
+            for _ in 0..n {
+                let exact = g.u64_in(0, 60_000);
+                let approx = g.u64_in(0, 60_000);
+                let shard = g.usize_in(0, shards - 1);
+                whole.push(approx, exact);
+                parts[shard].push(approx, exact);
+            }
+            let mut merged = ErrorReportBuilder::new();
+            for p in &parts {
+                merged.merge(p);
+            }
+            let (w, m) = (whole.finish(), merged.finish());
+            if w.pairs != m.pairs {
+                return Err(format!("pairs {} != {}", w.pairs, m.pairs));
+            }
+            let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * (1.0 + a.abs());
+            if !close(w.mred_pct, m.mred_pct) {
+                return Err(format!("mared {} vs {}", w.mred_pct, m.mred_pct));
+            }
+            if !close(w.stdared_pct, m.stdared_pct) {
+                return Err(format!("stdared {} vs {}", w.stdared_pct, m.stdared_pct));
+            }
+            let (wp, mp) = (whole.percentiles(), merged.percentiles());
+            for (label, a, b) in [
+                ("median", wp.median_pct, mp.median_pct),
+                ("p95", wp.p95_pct, mp.p95_pct),
+                ("p99", wp.p99_pct, mp.p99_pct),
+                ("max", wp.max_pct, mp.max_pct),
+            ] {
+                if a != b {
+                    return Err(format!("{label} not bit-for-bit: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The streaming percentiles must track the materialising reference
+    /// within a fraction of the 0.1 pp acceptance budget.
+    #[test]
+    fn streaming_percentiles_match_materialized() {
+        let mut b = ErrorReportBuilder::new();
+        let mut areds = Vec::new();
+        for a in 1..200u64 {
+            for bb in 1..200u64 {
+                let exact = a * bb;
+                let approx = exact + (a * 31 + bb * 17) % (exact / 4 + 1);
+                b.push(approx, exact);
+                areds.push((approx as f64 - exact as f64).abs() / exact as f64);
+            }
+        }
+        let streamed = b.percentiles();
+        let exact = PercentileReport::from_areds(areds);
+        assert!((streamed.mean_pct - exact.mean_pct).abs() < 1e-6);
+        assert_eq!(streamed.max_pct, exact.max_pct, "max is tracked exactly");
+        for (label, s, e) in [
+            ("median", streamed.median_pct, exact.median_pct),
+            ("p95", streamed.p95_pct, exact.p95_pct),
+            ("p99", streamed.p99_pct, exact.p99_pct),
+        ] {
+            assert!(
+                (s - e).abs() < 0.1,
+                "{label}: streaming {s} vs materialized {e} (>0.1 pp)"
+            );
+        }
     }
 
     #[test]
@@ -167,5 +355,22 @@ mod tests {
         assert!(r.p95_pct <= r.p99_pct);
         assert!(r.p99_pct <= r.max_pct);
         assert_eq!(r.max_pct, 50.0);
+        assert_eq!(r.pairs, 4);
+    }
+
+    /// The empty-input case is reachable from a sampled sweep over an
+    /// all-zero operand stream — it must produce the explicit empty
+    /// report, not panic.
+    #[test]
+    fn empty_areds_yield_explicit_empty_report() {
+        let r = PercentileReport::from_areds(Vec::new());
+        assert_eq!(r.pairs, 0);
+        assert_eq!(r.mean_pct, 0.0);
+        assert_eq!(r.max_pct, 0.0);
+        // Same through the streaming plane: zero pushes → empty report.
+        let b = ErrorReportBuilder::new();
+        let p = b.percentiles();
+        assert_eq!(p.pairs, 0);
+        assert_eq!(p.max_pct, 0.0);
     }
 }

@@ -1,19 +1,24 @@
-//! Error analysis (paper Sec. IV-A): ARED/MRED (Eq. 8), MED, Max-Error,
-//! Std, error histograms, and the operand-space sweep drivers (exhaustive
-//! for 8-bit, deterministic-sampled for 16-bit).
+//! Error analysis (paper Sec. IV-A): ARED/MARED (Eq. 8), StdARED, MED,
+//! Max-Error, signed-ED Std, error histograms, and the operand-space sweep
+//! drivers (exhaustive for ≤ 12-bit, deterministic-sampled beyond).
 //!
 //! All drivers run on the batched kernel plane: operand chunks through
 //! [`crate::multipliers::ApproxMultiplier::mul_batch`], one virtual call
-//! per [`BATCH`] pairs. [`exhaustive_sweep_scalar`] preserves the
-//! seed per-pair dispatch path as the benchmark/equality reference.
+//! per [`BATCH`] pairs — and all of them aggregate through the single
+//! streaming [`ErrorReportBuilder`], which yields the scalar metrics and
+//! the ARED percentiles from one pass in O(1) memory per shard.
+//! [`exhaustive_sweep_scalar`] preserves the seed per-pair dispatch path
+//! as the benchmark/equality reference, and
+//! [`percentile_sweep_materializing`] preserves the seed sort-the-world
+//! percentile path as the sketch's exactness reference.
 
 mod histogram;
 mod metrics;
 mod sweep;
 
 pub use histogram::{ErrorHistogram, HistogramBin};
-pub use metrics::{ErrorReport, PercentileReport};
+pub use metrics::{ErrorReport, ErrorReportBuilder, PercentileReport};
 pub use sweep::{
-    exhaustive_sweep, exhaustive_sweep_scalar, percentile_sweep, sampled_sweep, sweep, SweepSpec,
-    BATCH, EXHAUSTIVE_MAX_BITS,
+    exhaustive_sweep, exhaustive_sweep_scalar, percentile_sweep, percentile_sweep_materializing,
+    sampled_sweep, sweep, sweep_full, SweepSpec, BATCH, EXHAUSTIVE_MAX_BITS,
 };

@@ -7,13 +7,16 @@
 //! (rayon is unavailable offline; thread count from [`workers`]) and merge
 //! streaming accumulators.
 //!
-//! Every driver generates operand *chunks* ([`BATCH`] pairs) and pushes
-//! them through [`ApproxMultiplier::mul_batch`], so the per-pair cost is a
-//! monomorphized kernel body instead of a virtual call plus parameter
-//! reloads — dynamic dispatch is paid once per 4096 pairs. The seed
-//! scalar-dyn path survives as [`exhaustive_sweep_scalar`], the reference
-//! the batched plane is benchmarked (`benches/bench_sweep.rs`) and
-//! equality-tested against.
+//! Every driver runs on **one streaming builder**
+//! ([`ErrorReportBuilder`]): scalar metrics (MARED, StdARED, MED, Max,
+//! ED-std) and the ARED percentile statistics come out of the same pass,
+//! in O(1) memory per shard — the quantiles live in a mergeable
+//! log-histogram sketch, so [`percentile_sweep`] no longer materialises
+//! `(2ⁿ − 1)²` f64s and runs sampled 16/24-bit spaces too. The seed
+//! materialising implementation survives as
+//! [`percentile_sweep_materializing`], the exactness reference the sketch
+//! is tested against; the seed scalar-dyn dispatch path survives as
+//! [`exhaustive_sweep_scalar`].
 
 use super::metrics::{ErrorReport, ErrorReportBuilder, PercentileReport};
 use crate::multipliers::ApproxMultiplier;
@@ -25,9 +28,11 @@ use crate::util::rng::Xoshiro256;
 pub const BATCH: usize = 4096;
 
 /// Widest operand space traversed exhaustively — by [`SweepSpec::default_for`]
-/// and by [`percentile_sweep`], which materialises the full ARED vector:
-/// `(2^n − 1)²` f64s is 0.5 MiB at 8 bits, 8 MiB at 10, 134 MiB at this
-/// 12-bit ceiling, and an untenable ≥ 2.1 GiB beyond it.
+/// and by [`percentile_sweep_materializing`], which materialises the full
+/// ARED vector: `(2^n − 1)²` f64s is 0.5 MiB at 8 bits, 8 MiB at 10,
+/// 134 MiB at this 12-bit ceiling, and an untenable ≥ 2.1 GiB beyond it.
+/// The streaming [`percentile_sweep`] has no such cap: past this width it
+/// falls back to the same fixed-seed sampling every other driver uses.
 pub const EXHAUSTIVE_MAX_BITS: u32 = 12;
 
 /// How to traverse the operand space.
@@ -92,18 +97,18 @@ where
     }
 }
 
-/// Run an error sweep and aggregate the paper's metrics.
-pub fn sweep(m: &dyn ApproxMultiplier, spec: SweepSpec) -> ErrorReport {
+/// The unified parallel driver: traverse the spec'd operand space on the
+/// batched kernel plane, one [`ErrorReportBuilder`] per worker, merged in
+/// worker-index order (deterministic float results). Every public sweep
+/// entry point reduces to this.
+fn sweep_builder(m: &dyn ApproxMultiplier, spec: SweepSpec) -> ErrorReportBuilder {
     match spec {
-        SweepSpec::Exhaustive => exhaustive_sweep(m),
-        SweepSpec::Sampled { pairs, seed } => sampled_sweep(m, pairs, seed),
+        SweepSpec::Exhaustive => exhaustive_builder(m),
+        SweepSpec::Sampled { pairs, seed } => sampled_builder(m, pairs, seed),
     }
 }
 
-/// Exhaustive sweep over every non-zero operand pair, parallelised by
-/// chunking the `a` axis, each worker streaming its rows through the
-/// batched kernel plane.
-pub fn exhaustive_sweep(m: &dyn ApproxMultiplier) -> ErrorReport {
+fn exhaustive_builder(m: &dyn ApproxMultiplier) -> ErrorReportBuilder {
     let n = 1u64 << m.bits();
     let nthreads = workers();
     let chunk = (n - 1).div_ceil(nthreads as u64);
@@ -131,7 +136,73 @@ pub fn exhaustive_sweep(m: &dyn ApproxMultiplier) -> ErrorReport {
     for b in &builders {
         total.merge(b);
     }
-    total.finish()
+    total
+}
+
+fn sampled_builder(m: &dyn ApproxMultiplier, pairs: u64, seed: u64) -> ErrorReportBuilder {
+    let bits = m.bits();
+    let nthreads = workers();
+    let per_thread = pairs.div_ceil(nthreads as u64);
+    let mut builders: Vec<ErrorReportBuilder> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..nthreads {
+            let todo = per_thread.min(pairs.saturating_sub(t as u64 * per_thread));
+            if todo == 0 {
+                continue;
+            }
+            handles.push(scope.spawn(move || {
+                let mut rng = Xoshiro256::seed_from_u64(seed ^ (t as u64).wrapping_mul(0x9E37));
+                let mut b = ErrorReportBuilder::new();
+                let mut a_buf = vec![0u64; BATCH];
+                let mut b_buf = vec![0u64; BATCH];
+                let mut out = vec![0u64; BATCH];
+                let mut left = todo;
+                while left > 0 {
+                    let len = (left as usize).min(BATCH);
+                    for i in 0..len {
+                        a_buf[i] = rng.gen_operand(bits);
+                        b_buf[i] = rng.gen_operand(bits);
+                    }
+                    m.mul_batch(&a_buf[..len], &b_buf[..len], &mut out[..len]);
+                    for i in 0..len {
+                        b.push(out[i], a_buf[i] * b_buf[i]);
+                    }
+                    left -= len as u64;
+                }
+                b
+            }));
+        }
+        for h in handles {
+            builders.push(h.join().expect("sweep worker panicked"));
+        }
+    });
+    let mut total = ErrorReportBuilder::new();
+    for b in &builders {
+        total.merge(b);
+    }
+    total
+}
+
+/// Run an error sweep and aggregate the paper's scalar metrics.
+pub fn sweep(m: &dyn ApproxMultiplier, spec: SweepSpec) -> ErrorReport {
+    sweep_builder(m, spec).finish()
+}
+
+/// One pass, both reports: the scalar metrics (MARED/StdARED/MED/Max/
+/// ED-std) *and* the ARED percentile statistics. Use this when a consumer
+/// (DSE, the Table-3 harness) needs both — it costs the same single
+/// traversal as [`sweep`].
+pub fn sweep_full(m: &dyn ApproxMultiplier, spec: SweepSpec) -> (ErrorReport, PercentileReport) {
+    let b = sweep_builder(m, spec);
+    (b.finish(), b.percentiles())
+}
+
+/// Exhaustive sweep over every non-zero operand pair, parallelised by
+/// chunking the `a` axis, each worker streaming its rows through the
+/// batched kernel plane.
+pub fn exhaustive_sweep(m: &dyn ApproxMultiplier) -> ErrorReport {
+    exhaustive_builder(m).finish()
 }
 
 /// The seed scalar-dyn exhaustive sweep: one virtual `mul` per pair.
@@ -174,59 +245,27 @@ pub fn exhaustive_sweep_scalar(m: &dyn ApproxMultiplier) -> ErrorReport {
 /// Fixed-seed sampled sweep (16-bit spaces), parallelised with per-thread
 /// derived seeds, batched per chunk.
 pub fn sampled_sweep(m: &dyn ApproxMultiplier, pairs: u64, seed: u64) -> ErrorReport {
-    let bits = m.bits();
-    let nthreads = workers();
-    let per_thread = pairs.div_ceil(nthreads as u64);
-    let mut builders: Vec<ErrorReportBuilder> = Vec::new();
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for t in 0..nthreads {
-            let todo = per_thread.min(pairs.saturating_sub(t as u64 * per_thread));
-            if todo == 0 {
-                continue;
-            }
-            handles.push(scope.spawn(move || {
-                let mut rng = Xoshiro256::seed_from_u64(seed ^ (t as u64).wrapping_mul(0x9E37));
-                let mut b = ErrorReportBuilder::new();
-                let mut a_buf = vec![0u64; BATCH];
-                let mut b_buf = vec![0u64; BATCH];
-                let mut out = vec![0u64; BATCH];
-                let mut left = todo;
-                while left > 0 {
-                    let len = (left as usize).min(BATCH);
-                    for i in 0..len {
-                        a_buf[i] = rng.gen_operand(bits);
-                        b_buf[i] = rng.gen_operand(bits);
-                    }
-                    m.mul_batch(&a_buf[..len], &b_buf[..len], &mut out[..len]);
-                    for i in 0..len {
-                        b.push(out[i], a_buf[i] * b_buf[i]);
-                    }
-                    left -= len as u64;
-                }
-                b
-            }));
-        }
-        for h in handles {
-            builders.push(h.join().expect("sweep worker panicked"));
-        }
-    });
-    let mut total = ErrorReportBuilder::new();
-    for b in &builders {
-        total.merge(b);
-    }
-    total.finish()
+    sampled_builder(m, pairs, seed).finish()
 }
 
-/// Exhaustive percentile sweep (Table 3): materialises the full ARED
-/// vector, so widths are capped at [`EXHAUSTIVE_MAX_BITS`] — the same
-/// bound as [`SweepSpec::default_for`]'s exhaustive policy (134 MiB of
-/// f64s at 12 bits; see the constant's memory math). Parallelised over
-/// the `a` axis like its sibling drivers, on the batched plane.
+/// ARED percentile sweep (Table 3), streaming: exhaustive up to
+/// [`EXHAUSTIVE_MAX_BITS`], fixed-seed sampled beyond (the
+/// [`SweepSpec::default_for`] policy) — so 16- and 24-bit spaces work in
+/// O(1) memory per shard instead of the materialising path's
+/// `(2ⁿ − 1)²`-f64 allocation.
 pub fn percentile_sweep(m: &dyn ApproxMultiplier) -> PercentileReport {
+    sweep_builder(m, SweepSpec::default_for(m.bits())).percentiles()
+}
+
+/// The seed materialising percentile sweep: collects the full ARED vector
+/// and sorts it — exact, but `(2^n − 1)²` f64s of memory, so widths are
+/// hard-capped at [`EXHAUSTIVE_MAX_BITS`]. Kept as the exactness
+/// reference [`percentile_sweep`]'s sketch is tested against; route new
+/// callers through the streaming path.
+pub fn percentile_sweep_materializing(m: &dyn ApproxMultiplier) -> PercentileReport {
     assert!(
         m.bits() <= EXHAUSTIVE_MAX_BITS,
-        "percentile sweep materialises all (2^{} - 1)^2 AREDs: past {} bits that is >= 2.1 GiB",
+        "materializing percentile sweep allocates all (2^{} - 1)^2 AREDs: past {} bits that is >= 2.1 GiB (use the streaming percentile_sweep)",
         m.bits(),
         EXHAUSTIVE_MAX_BITS
     );
@@ -273,6 +312,7 @@ mod tests {
     fn exact_multiplier_zero_everything() {
         let r = exhaustive_sweep(&Exact::new(8));
         assert_eq!(r.mred_pct, 0.0);
+        assert_eq!(r.stdared_pct, 0.0);
         assert_eq!(r.med, 0.0);
         assert_eq!(r.pairs, 255 * 255);
     }
@@ -283,8 +323,16 @@ mod tests {
         assert!((r.mred_pct - 3.76).abs() < 0.2, "MRED {}", r.mred_pct);
         // Table 5: MED 611.16, Std 779.87, Max 4096 for Mitchell.
         assert!((r.med - 611.16).abs() < 40.0, "MED {}", r.med);
-        assert!((r.std - 779.87).abs() < 60.0, "Std {}", r.std);
+        assert!((r.ed_std - 779.87).abs() < 60.0, "Std {}", r.ed_std);
         assert!((r.max_error - 4096.0).abs() < 600.0, "Max {}", r.max_error);
+        // StdARED is a bounded, non-degenerate spread: Mitchell's ARED
+        // lives in [0, ~25%], so its std must sit strictly between 0 and
+        // the half-range.
+        assert!(
+            r.stdared_pct > 0.1 && r.stdared_pct < 12.5,
+            "StdARED {}",
+            r.stdared_pct
+        );
     }
 
     #[test]
@@ -296,8 +344,9 @@ mod tests {
             let scalar = exhaustive_sweep_scalar(&m);
             assert_eq!(batched.pairs, scalar.pairs);
             assert!((batched.mred_pct - scalar.mred_pct).abs() < 1e-12);
+            assert!((batched.stdared_pct - scalar.stdared_pct).abs() < 1e-12);
             assert!((batched.med - scalar.med).abs() < 1e-9);
-            assert!((batched.std - scalar.std).abs() < 1e-9);
+            assert!((batched.ed_std - scalar.ed_std).abs() < 1e-9);
             assert_eq!(batched.max_error, scalar.max_error);
         }
     }
@@ -312,6 +361,7 @@ mod tests {
         let r1 = sweep(&m, spec);
         let r2 = sweep(&m, spec);
         assert_eq!(r1.mred_pct, r2.mred_pct);
+        assert_eq!(r1.stdared_pct, r2.stdared_pct);
         assert_eq!(r1.pairs, 50_000);
     }
 
@@ -329,6 +379,17 @@ mod tests {
     }
 
     #[test]
+    fn sweep_full_is_one_consistent_pass() {
+        let m = ScaleTrim::new(8, 3, 4);
+        let (r, p) = sweep_full(&m, SweepSpec::Exhaustive);
+        assert_eq!(r.pairs, 255 * 255);
+        assert_eq!(p.pairs, 255 * 255);
+        // Same underlying accumulator: mean ARED must agree exactly.
+        assert_eq!(r.mred_pct, p.mean_pct);
+        assert!(p.median_pct <= p.p95_pct && p.p95_pct <= p.p99_pct);
+    }
+
+    #[test]
     fn percentile_sweep_table3_shape() {
         let p = percentile_sweep(&Mitchell::new(8));
         // Table 3 Mitchell row: mean 8.91? (that column lists per-method
@@ -339,25 +400,72 @@ mod tests {
         assert!(p.p99_pct <= p.max_pct);
     }
 
+    /// Acceptance anchor: the streaming sketch must agree with the
+    /// materialising reference within 0.1 percentage points at 8 bits.
     #[test]
-    fn percentile_sweep_handles_widths_past_8bit() {
-        // The old guard claimed "8-bit only" while asserting <= 10; the
-        // unified policy admits everything SweepSpec traverses
-        // exhaustively. 10-bit: ~1M AREDs, 8 MiB — comfortably in budget.
-        let p = percentile_sweep(&Exact::new(10));
-        assert_eq!(p.max_pct, 0.0);
-        assert_eq!(p.mean_pct, 0.0);
+    fn streaming_within_tenth_pp_of_materializing_at_8bit() {
+        for m in [
+            Box::new(Mitchell::new(8)) as Box<dyn ApproxMultiplier>,
+            Box::new(ScaleTrim::new(8, 3, 4)),
+            Box::new(ScaleTrim::new(8, 5, 8)),
+        ] {
+            let s = percentile_sweep(m.as_ref());
+            let x = percentile_sweep_materializing(m.as_ref());
+            assert_eq!(s.pairs, x.pairs, "{}", m.name());
+            assert_eq!(s.max_pct, x.max_pct, "{}: max is exact", m.name());
+            assert!((s.mean_pct - x.mean_pct).abs() < 1e-6, "{}", m.name());
+            for (label, a, b) in [
+                ("median", s.median_pct, x.median_pct),
+                ("p95", s.p95_pct, x.p95_pct),
+                ("p99", s.p99_pct, x.p99_pct),
+            ] {
+                assert!(
+                    (a - b).abs() < 0.1,
+                    "{} {label}: streaming {a} vs materializing {b}",
+                    m.name()
+                );
+            }
+        }
     }
 
     #[test]
-    #[should_panic(expected = "percentile sweep materialises")]
-    fn percentile_sweep_rejects_beyond_exhaustive_ceiling() {
-        let _ = percentile_sweep(&Exact::new(13));
+    fn percentile_sweep_handles_widths_past_8bit() {
+        // 10-bit exhaustive: ~1M AREDs through the sketch, a few hundred
+        // KiB per shard instead of the old 8 MiB vector.
+        let p = percentile_sweep(&Exact::new(10));
+        assert_eq!(p.max_pct, 0.0);
+        assert_eq!(p.mean_pct, 0.0);
+        assert_eq!(p.pairs, 1023 * 1023);
+    }
+
+    /// The lifted cap: past EXHAUSTIVE_MAX_BITS the streaming percentile
+    /// sweep samples instead of refusing. (Seed behaviour was a panic.)
+    #[test]
+    fn percentile_sweep_samples_past_exhaustive_ceiling() {
+        let p = percentile_sweep(&Exact::new(13));
+        assert_eq!(p.max_pct, 0.0);
+        assert_eq!(p.pairs, 4_194_304, "default sampled population");
+    }
+
+    /// 16-bit acceptance path: constant memory per shard, sane ordering.
+    #[test]
+    fn percentile_sweep_runs_at_16_bits() {
+        let p = percentile_sweep(&ScaleTrim::new(16, 5, 8));
+        assert!(p.mean_pct > 0.0);
+        assert!(p.median_pct <= p.p95_pct && p.p95_pct <= p.p99_pct);
+        assert!(p.p99_pct <= p.max_pct);
+        assert_eq!(p.pairs, 4_194_304);
+    }
+
+    #[test]
+    #[should_panic(expected = "materializing percentile sweep allocates")]
+    fn materializing_rejects_beyond_exhaustive_ceiling() {
+        let _ = percentile_sweep_materializing(&Exact::new(13));
     }
 
     #[test]
     fn exhaustive_policy_boundary() {
-        // default_for and the percentile guard share EXHAUSTIVE_MAX_BITS:
+        // default_for and the materializing guard share EXHAUSTIVE_MAX_BITS:
         // 12 is the last exhaustive width, 13 falls back to sampling.
         assert!(matches!(
             SweepSpec::default_for(EXHAUSTIVE_MAX_BITS),

@@ -16,10 +16,12 @@
 //! - [`lut`] — the offline calibration flow of Sec. III: zero-intercept
 //!   least-squares linearization (α, ΔEE) and the piecewise-constant
 //!   compensation LUT (C_i).
-//! - [`error`] — error metrics (MRED Eq. 8, MED, Max-Error, Std) and the
-//!   exhaustive / sampled / percentile operand-space sweeps, all driven in
-//!   `mul_batch` chunks over worker threads (the scalar-dyn seed path
-//!   survives only as a benchmark reference).
+//! - [`error`] — error metrics (MARED/MRED Eq. 8, StdARED, MED, Max-Error,
+//!   signed-ED Std) and the exhaustive / sampled / percentile operand-space
+//!   sweeps, all driven in `mul_batch` chunks over worker threads and
+//!   aggregated by one streaming builder whose constant-memory quantile
+//!   sketch covers 16/24-bit percentile runs (the scalar-dyn and
+//!   materializing seed paths survive only as test/benchmark references).
 //! - [`hardware`] — a gate-level structural cost model (area, delay, power,
 //!   PDP) standing in for the paper's 45nm Synopsys flow.
 //! - [`dse`] — design-space exploration: config enumeration, Pareto fronts,

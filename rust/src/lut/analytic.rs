@@ -104,7 +104,7 @@ pub fn calibrate_analytic(bits: u32, h: u32, m: u32) -> ScaleTrimParams {
         let c_fixed = c.iter().map(|&x| (x * q).round() as i64).collect();
         (c, c_fixed)
     };
-    ScaleTrimParams {
+    let params = ScaleTrimParams {
         bits,
         h,
         m,
@@ -112,7 +112,9 @@ pub fn calibrate_analytic(bits: u32, h: u32, m: u32) -> ScaleTrimParams {
         delta_ee,
         c,
         c_fixed,
-    }
+    };
+    params.validate();
+    params
 }
 
 #[cfg(test)]

@@ -52,6 +52,34 @@ pub struct ScaleTrimParams {
 }
 
 impl ScaleTrimParams {
+    /// Validate the fixed-point datapath invariants. The linearization
+    /// term is realised as `(s as i64) << (F − h + ΔEE)` with
+    /// `F = COMP_FRAC_BITS`: if a calibration ever yielded
+    /// `ΔEE < h − F`, the shift amount would underflow to a huge `u32`
+    /// and — in release builds — silently wrap to garbage products.
+    /// Assert it loudly at construction instead, for every construction
+    /// path ([`calibrate`], [`paper_table7_params`],
+    /// [`calibrate_analytic`](crate::lut::calibrate_analytic), and
+    /// `ScaleTrim::with_params` for externally supplied constants).
+    pub fn validate(&self) {
+        let f = COMP_FRAC_BITS as i32;
+        assert!(
+            self.h >= 1 && self.h as i32 <= f,
+            "scaleTRIM(h={}, M={}): h must be in 1..={f} (datapath carries {f} fraction bits)",
+            self.h,
+            self.m
+        );
+        assert!(
+            f - self.h as i32 + self.delta_ee >= 0,
+            "scaleTRIM(h={}, M={}): ΔEE = {} < h − F = {} — the linearization shift \
+             (F − h + ΔEE) would underflow below zero and wrap as u32",
+            self.h,
+            self.m,
+            self.delta_ee,
+            self.h as i32 - f
+        );
+    }
+
     /// Segment index for a truncated sum `s_int` in units of `2^-h`
     /// (hardware: the top ⌈log2 M⌉ bits of `X_h + Y_h`). `S ∈ [0, 2)` is
     /// split into `M` uniform segments.
@@ -164,7 +192,7 @@ pub fn calibrate(bits: u32, h: u32, m: u32) -> ScaleTrimParams {
         (c, c_fixed)
     };
 
-    ScaleTrimParams {
+    let params = ScaleTrimParams {
         bits,
         h,
         m,
@@ -172,7 +200,9 @@ pub fn calibrate(bits: u32, h: u32, m: u32) -> ScaleTrimParams {
         delta_ee,
         c,
         c_fixed,
-    }
+    };
+    params.validate();
+    params
 }
 
 /// The compensation constants the paper *publishes* in Table 7 (8-bit,
@@ -203,7 +233,7 @@ pub fn paper_table7_params(h: u32, m: u32) -> Option<ScaleTrimParams> {
         _ => unreachable!(),
     };
     let q = (1u64 << COMP_FRAC_BITS) as f64;
-    Some(ScaleTrimParams {
+    let params = ScaleTrimParams {
         bits: 8,
         h,
         m,
@@ -211,7 +241,9 @@ pub fn paper_table7_params(h: u32, m: u32) -> Option<ScaleTrimParams> {
         delta_ee: -2,
         c: c.to_vec(),
         c_fixed: c.iter().map(|&x| (x * q).round() as i64).collect(),
-    })
+    };
+    params.validate();
+    Some(params)
 }
 
 /// Process-wide calibration cache: DSE sweeps instantiate the same configs
@@ -333,6 +365,38 @@ mod tests {
             );
             assert!(p.delta_ee < 0);
         }
+    }
+
+    /// The linearization-shift underflow guard: ΔEE below `h − F` must be
+    /// rejected at construction, not wrap at multiply time.
+    #[test]
+    #[should_panic(expected = "linearization shift")]
+    fn validate_rejects_underflowing_delta_ee() {
+        let p = ScaleTrimParams {
+            bits: 8,
+            h: 3,
+            m: 0,
+            alpha: 1.0 + (-14f64).exp2(),
+            delta_ee: -14, // F − h + ΔEE = 16 − 3 − 14 = −1
+            c: Vec::new(),
+            c_fixed: Vec::new(),
+        };
+        p.validate();
+    }
+
+    #[test]
+    fn validate_accepts_boundary_shift() {
+        // F − h + ΔEE = 0 is legal (a 1× shift — no headroom, no wrap).
+        let p = ScaleTrimParams {
+            bits: 8,
+            h: 3,
+            m: 0,
+            alpha: 1.0 + (-13f64).exp2(),
+            delta_ee: -13,
+            c: Vec::new(),
+            c_fixed: Vec::new(),
+        };
+        p.validate();
     }
 
     #[test]

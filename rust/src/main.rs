@@ -14,7 +14,7 @@
 
 use scaletrim::coordinator::{BatchPolicy, Coordinator, PjrtBackend};
 use scaletrim::dse::{evaluate_all, pareto_front};
-use scaletrim::error::{sweep, SweepSpec};
+use scaletrim::error::{sweep_full, SweepSpec};
 use scaletrim::hardware::estimate;
 // NOTE: no glob import — `multipliers::*` would pull in the `scaletrim`
 // *submodule*, shadowing the crate name.
@@ -98,11 +98,15 @@ fn main() -> Result<()> {
             let name = args.opt_or("config", "scaleTRIM(3,4)");
             let m = find_config(&name, bits)
                 .ok_or_else(|| anyhow::anyhow!("unknown config {name:?}"))?;
-            let r = sweep(m.as_ref(), SweepSpec::default_for(bits));
+            let (r, p) = sweep_full(m.as_ref(), SweepSpec::default_for(bits));
             let hw = estimate(m.as_ref());
             println!(
-                "{name} ({bits}-bit): MRED {:.3}%  MED {:.1}  Max {:.0}  Std {:.1}  ({} pairs)",
-                r.mred_pct, r.med, r.max_error, r.std, r.pairs
+                "{name} ({bits}-bit): MARED {:.3}%  StdARED {:.3}%  MED {:.1}  Max {:.0}  ED-std {:.1}  ({} pairs)",
+                r.mred_pct, r.stdared_pct, r.med, r.max_error, r.ed_std, r.pairs
+            );
+            println!(
+                "ARED percentiles: median {:.3}%  p95 {:.3}%  p99 {:.3}%  max {:.3}%",
+                p.median_pct, p.p95_pct, p.p99_pct, p.max_pct
             );
             println!(
                 "hardware: area {:.1} µm², delay {:.2} ns, power {:.1} µW, PDP {:.1} fJ",
@@ -130,7 +134,7 @@ fn main() -> Result<()> {
                 other => anyhow::bail!("no registered zoo at {other} bits (use --bits 8|16)"),
             };
             let points = evaluate_all(&zoo, SweepSpec::default_for(bits));
-            let front = pareto_front(&points, |p| (p.error.mred_pct, p.hw.pdp_fj));
+            let front = pareto_front(&points, |p| p.mared_energy());
             let mut t = Table::new(
                 &format!("{bits}-bit Pareto front (MRED vs PDP)"),
                 &["config", "MRED%", "PDP fJ"],
@@ -167,8 +171,14 @@ fn main() -> Result<()> {
             let r = workloads::evaluate(w.as_ref(), m.as_ref());
             println!("{}: {}", r.workload, w.description());
             println!(
-                "quality under {}: PSNR {:.2} dB  SSIM {:.4}  MSE {:.2}  ({} MACs via mul_batch)",
-                r.config, r.quality.psnr_db, r.quality.ssim, r.quality.mse, r.macs
+                "quality under {}: PSNR {:.2} dB  SSIM {:.4}  MSE {:.2}  MARED {:.3}%  StdARED {:.3}%  ({} MACs via mul_batch)",
+                r.config,
+                r.quality.psnr_db,
+                r.quality.ssim,
+                r.quality.mse,
+                r.quality.mared_pct,
+                r.quality.stdared_pct,
+                r.macs
             );
             println!(
                 "hardware: area {:.1} µm², delay {:.2} ns, power {:.1} µW, PDP {:.2} fJ → {:.3} nJ multiplier energy per run",

@@ -40,8 +40,11 @@ impl ScaleTrim {
     }
 
     /// Construct from externally supplied constants (used by tests and by
-    /// the artifact-export path; skips calibration).
+    /// the artifact-export path; skips calibration but not validation —
+    /// a ΔEE below `h − F` would underflow the linearization shift, see
+    /// [`ScaleTrimParams::validate`]).
     pub fn with_params(bits: u32, params: ScaleTrimParams) -> Self {
+        params.validate();
         Self { bits, params }
     }
 
@@ -92,6 +95,11 @@ impl ApproxMultiplier for ScaleTrim {
         // (4) shift-add approximation in F-bit fixed point:
         //     term = 1 + S + 2^ΔEE·S   (one adder + one hardwired shift).
         let s_f = (s as i64) << (F - h); // S in units of 2^-F
+        debug_assert!(
+            F as i32 - h as i32 + self.params.delta_ee >= 0,
+            "linearization shift underflow: ΔEE {} < h − F (validated at construction)",
+            self.params.delta_ee
+        );
         let shift = (F as i32 - h as i32 + self.params.delta_ee) as u32;
         let scaled = (s as i64) << shift; // 2^ΔEE·S (ΔEE<0 folds into the shift)
         let mut term = (1i64 << F) + s_f + scaled;
@@ -120,6 +128,11 @@ impl ApproxMultiplier for ScaleTrim {
         let h = self.params.h;
         let m = self.params.m;
         let c_fixed = &self.params.c_fixed[..];
+        debug_assert!(
+            F as i32 - h as i32 + self.params.delta_ee >= 0,
+            "linearization shift underflow: ΔEE {} < h − F (validated at construction)",
+            self.params.delta_ee
+        );
         let lin_shift = (F as i32 - h as i32 + self.params.delta_ee) as u32;
         for ((&x, &y), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
             debug_assert!(x < (1u64 << self.bits) && y < (1u64 << self.bits));
@@ -168,6 +181,16 @@ mod tests {
             (3950..=4150).contains(&approx),
             "48*81 ~ 4070 expected, got {approx}"
         );
+    }
+
+    /// The shift-underflow guard is enforced on the external-constants
+    /// path too: `(F − h + ΔEE) as u32` would wrap for ΔEE < h − F.
+    #[test]
+    #[should_panic(expected = "linearization shift")]
+    fn with_params_rejects_underflowing_shift() {
+        let mut params = crate::lut::paper_table7_params(3, 4).unwrap();
+        params.delta_ee = -20; // 16 − 3 − 20 < 0
+        let _ = ScaleTrim::with_params(8, params);
     }
 
     #[test]

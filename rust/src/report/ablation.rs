@@ -147,6 +147,9 @@ pub fn ext32() -> Result<()> {
 /// Wide-operand MRED with an explicit datapath evaluation (u128-safe).
 fn sampled_mred_wide(bits: u32, params: &ScaleTrimParams, pairs: u64) -> f64 {
     use crate::multipliers::{leading_one, truncate_fraction};
+    // This duplicates the scaleTRIM shift datapath, so it shares the
+    // linearization-shift underflow hazard — refuse unvalidated constants.
+    params.validate();
     let h = params.h;
     const F: u32 = COMP_FRAC_BITS;
     let mut rng = Xoshiro256::seed_from_u64(0xE77);

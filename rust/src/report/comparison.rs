@@ -1,5 +1,6 @@
 //! Design-space comparison experiments: Fig. 1, Fig. 9/Table 4, Fig. 10,
-//! Figs. 11–13/Table 5, Fig. 14/Table 3, Table 2.
+//! Figs. 11–13/Table 5, Fig. 14/Table 3, Table 2, and the abstract's
+//! headline iso-energy MARED/StdARED comparison against TOSAM.
 
 use crate::dse::{constrained, evaluate_all, pareto_front, DesignPoint};
 use crate::error::{exhaustive_sweep, percentile_sweep, ErrorHistogram, SweepSpec};
@@ -61,7 +62,7 @@ pub fn fig1() -> Result<()> {
         zoo.push(Box::new(Tosam::new(8, t, h)));
     }
     let points = evaluate_all(&zoo, SweepSpec::Exhaustive);
-    let front = pareto_front(&points, |p| (p.error.mred_pct, p.hw.pdp_fj));
+    let front = pareto_front(&points, |p| p.mared_energy());
     points_table("Fig. 1 — 8-bit TOSAM/DSM/DRUM design space", &points, &front).print();
     Ok(())
 }
@@ -71,7 +72,7 @@ pub fn fig1() -> Result<()> {
 pub fn table4() -> Result<()> {
     let zoo = paper_configs_8bit();
     let points = evaluate_all(&zoo, SweepSpec::Exhaustive);
-    let front = pareto_front(&points, |p| (p.error.mred_pct, p.hw.pdp_fj));
+    let front = pareto_front(&points, |p| p.mared_energy());
     points_table(
         "Fig. 9 / Table 4 — 8-bit comparison (measured | paper)",
         &points,
@@ -114,7 +115,7 @@ pub fn fig10(fast: bool) -> Result<()> {
         SweepSpec::default_for(16)
     };
     let points = evaluate_all(&zoo, spec);
-    let front = pareto_front(&points, |p| (p.error.mred_pct, p.hw.pdp_fj));
+    let front = pareto_front(&points, |p| p.mared_energy());
     points_table("Fig. 10 — 16-bit comparison", &points, &front).print();
     // Table 2's 16-bit anchor rows.
     for (name, paper_mred, paper_pdp) in [
@@ -184,9 +185,14 @@ pub fn table5() -> Result<()> {
         ("scaleTRIM(5,4)", 386.55, 4190.0, 512.30),
         ("scaleTRIM(5,8)", 318.44, 3356.0, 407.95),
     ];
+    // "Std" here is the paper's Table-5 standard deviation of the *signed
+    // error distance* (product units); the extra StdARED column is the
+    // abstract's headline spread of the relative-error distribution —
+    // different quantities, printed side by side so they can never be
+    // conflated again.
     let mut t = Table::new(
-        "Figs. 11-13 / Table 5 — MED, Max-Error, Std (measured | paper)",
-        &["config", "MED", "paper", "Max", "paper", "Std", "paper", "PDP fJ"],
+        "Figs. 11-13 / Table 5 — MED, Max-Error, Std (measured | paper) + StdARED",
+        &["config", "MED", "paper", "Max", "paper", "Std(ED)", "paper", "StdARED%", "PDP fJ"],
     );
     for m in &zoo {
         let r = exhaustive_sweep(m.as_ref());
@@ -201,12 +207,154 @@ pub fn table5() -> Result<()> {
             pm,
             f2(r.max_error),
             px,
-            f2(r.std),
+            f2(r.ed_std),
             ps,
+            f2(r.stdared_pct),
             f2(hw.pdp_fj),
         ]);
     }
     t.print();
+    Ok(())
+}
+
+/// One iso-energy scaleTRIM-vs-TOSAM pairing for the headline experiment.
+#[derive(Debug, Clone)]
+pub struct HeadlinePair {
+    /// scaleTRIM design point.
+    pub st: DesignPoint,
+    /// Its energy-matched TOSAM counterpart.
+    pub tosam: DesignPoint,
+    /// Relative energy gap `|PDP_st − PDP_tosam| / PDP_tosam`, percent.
+    pub energy_gap_pct: f64,
+    /// MARED improvement of scaleTRIM over TOSAM, percent (positive =
+    /// scaleTRIM better).
+    pub mared_impr_pct: f64,
+    /// StdARED improvement, percent (positive = scaleTRIM better).
+    pub stdared_impr_pct: f64,
+}
+
+/// Pair every 8-bit scaleTRIM config with the TOSAM config closest in
+/// *measured* hardware energy (PDP), keeping pairs within the tolerance —
+/// the abstract's "energy consumption is about equal" population. Sweeps
+/// are exhaustive; energies come from the structural `hardware` model.
+pub fn headline_pairs(iso_tolerance_pct: f64) -> Vec<HeadlinePair> {
+    let mut zoo: Vec<Box<dyn ApproxMultiplier>> = Vec::new();
+    for h in 2..=7u32 {
+        for m in [0u32, 4, 8] {
+            zoo.push(Box::new(ScaleTrim::new(8, h, m)));
+        }
+    }
+    let tosam_cfgs = [
+        (0, 2), (0, 3), (1, 3), (2, 3), (0, 4), (1, 4), (2, 4), (1, 5), (2, 5), (2, 6), (3, 7),
+    ];
+    let mut tosams: Vec<Box<dyn ApproxMultiplier>> = Vec::new();
+    for (t, h) in tosam_cfgs {
+        tosams.push(Box::new(Tosam::new(8, t, h)));
+    }
+    let st_points = evaluate_all(&zoo, SweepSpec::Exhaustive);
+    let tosam_points = evaluate_all(&tosams, SweepSpec::Exhaustive);
+    let mut pairs = Vec::new();
+    for st in &st_points {
+        let Some(tosam) = tosam_points.iter().min_by(|a, b| {
+            let da = (a.hw.pdp_fj - st.hw.pdp_fj).abs();
+            let db = (b.hw.pdp_fj - st.hw.pdp_fj).abs();
+            da.partial_cmp(&db).unwrap()
+        }) else {
+            continue;
+        };
+        let gap = 100.0 * (st.hw.pdp_fj - tosam.hw.pdp_fj).abs() / tosam.hw.pdp_fj;
+        if gap > iso_tolerance_pct {
+            continue;
+        }
+        pairs.push(HeadlinePair {
+            mared_impr_pct: 100.0 * (tosam.error.mred_pct - st.error.mred_pct)
+                / tosam.error.mred_pct,
+            stdared_impr_pct: 100.0 * (tosam.error.stdared_pct - st.error.stdared_pct)
+                / tosam.error.stdared_pct,
+            energy_gap_pct: gap,
+            st: st.clone(),
+            tosam: tosam.clone(),
+        });
+    }
+    pairs
+}
+
+/// The pair that best supports (or refutes) the abstract: maximise the
+/// *smaller* of the two improvements, so both metrics must be good.
+pub fn headline_best(pairs: &[HeadlinePair]) -> Option<&HeadlinePair> {
+    pairs.iter().max_by(|a, b| {
+        let ka = a.mared_impr_pct.min(a.stdared_impr_pct);
+        let kb = b.mared_impr_pct.min(b.stdared_impr_pct);
+        ka.partial_cmp(&kb).unwrap()
+    })
+}
+
+/// The abstract's headline claim, recomputed live: "improves the MARED
+/// and StdARED by about 38% and 32% when its energy consumption is about
+/// equal to the state-of-the-art approximate multiplier" (TOSAM). Every
+/// scaleTRIM config is paired with its measured-iso-energy TOSAM
+/// counterpart and both metrics are compared.
+pub fn headline() -> Result<()> {
+    let pairs = headline_pairs(15.0);
+    let mut t = Table::new(
+        "Headline — iso-energy scaleTRIM vs TOSAM (exhaustive 8-bit sweeps, hardware-model energy)",
+        &[
+            "scaleTRIM",
+            "TOSAM",
+            "PDP fJ",
+            "PDP fJ",
+            "gap%",
+            "MARED%",
+            "MARED%",
+            "impr%",
+            "StdARED%",
+            "StdARED%",
+            "impr%",
+        ],
+    );
+    for p in &pairs {
+        t.row(vec![
+            p.st.name.clone(),
+            p.tosam.name.clone(),
+            f2(p.st.hw.pdp_fj),
+            f2(p.tosam.hw.pdp_fj),
+            f2(p.energy_gap_pct),
+            f2(p.st.error.mred_pct),
+            f2(p.tosam.error.mred_pct),
+            f2(p.mared_impr_pct),
+            f2(p.st.error.stdared_pct),
+            f2(p.tosam.error.stdared_pct),
+            f2(p.stdared_impr_pct),
+        ]);
+    }
+    t.print();
+    match headline_best(&pairs) {
+        Some(best) => println!(
+            "headline claim (paper: ~38% MARED, ~32% StdARED at iso-energy): best pair {} vs {} \
+             ({:.1} vs {:.1} fJ) → MARED {:.1}% better, StdARED {:.1}% better",
+            best.st.name,
+            best.tosam.name,
+            best.st.hw.pdp_fj,
+            best.tosam.hw.pdp_fj,
+            best.mared_impr_pct,
+            best.stdared_impr_pct,
+        ),
+        None => println!("no iso-energy pair found within tolerance — widen it and re-run"),
+    }
+    // The StdARED Pareto plane over the combined population: the claim in
+    // front form — scaleTRIM configs should dominate the consistency axis.
+    let mut all: Vec<DesignPoint> = Vec::new();
+    for p in &pairs {
+        all.push(p.st.clone());
+    }
+    for p in &pairs {
+        if !all.iter().any(|q| q.name == p.tosam.name) {
+            all.push(p.tosam.clone());
+        }
+    }
+    let front = pareto_front(&all, |p| p.stdared_energy());
+    let on_front: Vec<&str> = front.iter().map(|&i| all[i].name.as_str()).collect();
+    println!("(StdARED, PDP) Pareto front: {}", on_front.join(", "));
     Ok(())
 }
 
@@ -358,5 +506,30 @@ mod tests {
     #[test]
     fn table3_runs() {
         table3().unwrap();
+    }
+
+    /// Acceptance: the headline experiment must find at least one
+    /// iso-energy pair, and its best pair must improve *both* MARED and
+    /// StdARED — the direction the abstract claims.
+    #[test]
+    fn headline_direction_matches_abstract() {
+        let pairs = headline_pairs(15.0);
+        assert!(!pairs.is_empty(), "no iso-energy scaleTRIM/TOSAM pair within 15%");
+        let best = headline_best(&pairs).unwrap();
+        assert!(
+            best.mared_impr_pct > 0.0,
+            "best pair {} vs {}: MARED must improve, got {:.1}%",
+            best.st.name,
+            best.tosam.name,
+            best.mared_impr_pct
+        );
+        assert!(
+            best.stdared_impr_pct > 0.0,
+            "best pair {} vs {}: StdARED must improve, got {:.1}%",
+            best.st.name,
+            best.tosam.name,
+            best.stdared_impr_pct
+        );
+        assert!(best.energy_gap_pct <= 15.0);
     }
 }

@@ -48,7 +48,10 @@ pub fn workload_suite(fast: bool) -> Result<()> {
                 rows.len(),
                 w.description()
             ),
-            &["config", "PSNR dB", "SSIM", "MSE", "PDP fJ", "energy nJ", "pareto"],
+            &[
+                "config", "PSNR dB", "SSIM", "MSE", "MARED%", "StdARED%", "PDP fJ", "energy nJ",
+                "pareto",
+            ],
         );
         for (i, r) in rows.iter().enumerate() {
             mean_psnr[i] += r.q.psnr_db.min(99.0); // cap ∞ for the mean
@@ -58,6 +61,8 @@ pub fn workload_suite(fast: bool) -> Result<()> {
                 f2(r.q.psnr_db),
                 f4(r.q.ssim),
                 f2(r.q.mse),
+                f2(r.q.mared_pct),
+                f2(r.q.stdared_pct),
                 f2(r.pdp_fj),
                 f4(r.energy_nj),
                 if front.contains(&i) { "*".into() } else { "".into() },
@@ -136,6 +141,11 @@ mod tests {
             assert!(r.q.ssim.is_finite());
             assert!(r.pdp_fj > 0.0 && r.energy_nj > 0.0);
             assert!(r.q.psnr_db > 0.0, "{}: PSNR {}", r.config, r.q.psnr_db);
+            assert!(
+                r.q.mared_pct >= 0.0 && r.q.stdared_pct >= 0.0,
+                "{}: ARED stats must be non-negative",
+                r.config
+            );
         }
     }
 }

@@ -140,6 +140,162 @@ impl OriginFit {
     }
 }
 
+/// Mantissa bits kept per octave in [`LogQuantileSketch`]: 2^9 = 512
+/// sub-bins, so a bin's relative width is ≤ 2⁻⁹ ≈ 0.195% of its value —
+/// comfortably inside the 0.1-percentage-point accuracy budget the ARED
+/// percentile reports need (p99 ≈ 25% × 0.195% ≈ 0.05 pp worst case).
+const QSK_SUB_BITS: u32 = 9;
+const QSK_SUBDIV: usize = 1 << QSK_SUB_BITS;
+/// Smallest octave resolved: values below 2⁻⁴⁸ collapse into bin 0 (an
+/// ARED that small is zero for every reported digit).
+const QSK_EXP_MIN: i32 = -48;
+/// Largest octave resolved: values ≥ 2¹⁶ collapse into the last bin
+/// (AREDs are fractions; even a 65000× miss stays in range).
+const QSK_EXP_MAX: i32 = 15;
+const QSK_OCTAVES: usize = (QSK_EXP_MAX - QSK_EXP_MIN + 1) as usize;
+const QSK_BINS: usize = QSK_OCTAVES * QSK_SUBDIV;
+
+/// Mergeable constant-memory quantile estimator over non-negative samples:
+/// a fixed-bin base-2 log histogram (octave from the f64 exponent, 512
+/// linear sub-bins from the top mantissa bits) plus exact zero-count and
+/// extrema. ~256 KiB per instance regardless of sample count — this is
+/// what lets `percentile_sweep` run 16/24-bit spaces without materialising
+/// `(2ⁿ−1)²` f64s.
+///
+/// Bin counts are integers, so [`merge`](Self::merge) is exact: a sharded
+/// reduction reproduces the sequential sketch *bit-for-bit* (pinned by a
+/// property test in `error::metrics`).
+#[derive(Clone, Debug)]
+pub struct LogQuantileSketch {
+    zeros: u64,
+    bins: Vec<u64>,
+    total: u64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogQuantileSketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogQuantileSketch {
+    /// Fresh, empty sketch.
+    pub fn new() -> Self {
+        Self {
+            zeros: 0,
+            bins: vec![0; QSK_BINS],
+            total: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    #[inline]
+    fn bin_index(v: f64) -> usize {
+        let bits = v.to_bits();
+        let exp = ((bits >> 52) & 0x7ff) as i32 - 1023;
+        if exp < QSK_EXP_MIN {
+            return 0; // subnormals and tiny values: effectively zero ARED
+        }
+        if exp > QSK_EXP_MAX {
+            return QSK_BINS - 1;
+        }
+        let sub = ((bits >> (52 - QSK_SUB_BITS)) & (QSK_SUBDIV as u64 - 1)) as usize;
+        (exp - QSK_EXP_MIN) as usize * QSK_SUBDIV + sub
+    }
+
+    /// Lower/upper value edges of bin `idx`: `2^e·(1 + k/512)` for the
+    /// octave `e` and sub-bin `k` the index encodes.
+    fn bin_edges(idx: usize) -> (f64, f64) {
+        let oct = (QSK_EXP_MIN + (idx / QSK_SUBDIV) as i32) as f64;
+        let sub = (idx % QSK_SUBDIV) as f64;
+        let base = oct.exp2();
+        (
+            base * (1.0 + sub / QSK_SUBDIV as f64),
+            base * (1.0 + (sub + 1.0) / QSK_SUBDIV as f64),
+        )
+    }
+
+    /// Record one non-negative observation.
+    #[inline]
+    pub fn push(&mut self, v: f64) {
+        debug_assert!(v >= 0.0 && !v.is_nan(), "sketch expects non-negative samples");
+        self.total += 1;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+        if v <= 0.0 {
+            self.zeros += 1;
+        } else {
+            self.bins[Self::bin_index(v)] += 1;
+        }
+    }
+
+    /// Merge a shard. Counts add exactly, so merged quantiles equal the
+    /// sequential single-sketch quantiles bit-for-bit.
+    pub fn merge(&mut self, other: &LogQuantileSketch) {
+        self.zeros += other.zeros;
+        self.total += other.total;
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+    /// Exact minimum (+inf when empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    /// Exact maximum (-inf when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Estimated `q`-th percentile (`q` in [0, 100]), following the same
+    /// `(n−1)`-rank linear-interpolation convention as
+    /// [`percentile_sorted`]; error is bounded by one bin width (≤ 0.195%
+    /// of the value). Extremes are exact: `q = 0` → min, `q = 100` → max.
+    /// Returns 0.0 on an empty sketch.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        if q <= 0.0 {
+            return self.min;
+        }
+        if q >= 100.0 {
+            return self.max;
+        }
+        let rank = q / 100.0 * (self.total - 1) as f64;
+        if rank < self.zeros as f64 {
+            return 0.0;
+        }
+        let mut cum = self.zeros;
+        for (i, &c) in self.bins.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if rank < (cum + c) as f64 {
+                let (lo, hi) = Self::bin_edges(i);
+                let frac = (rank - cum as f64) / c as f64;
+                return (lo + (hi - lo) * frac).clamp(self.min, self.max);
+            }
+            cum += c;
+        }
+        self.max
+    }
+}
+
 /// Percentile of a *sorted* slice using linear interpolation (the convention
 /// numpy's `percentile` uses); `q` in [0, 100].
 pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
@@ -205,6 +361,85 @@ mod tests {
             f.push(s, 1.37 * s);
         }
         assert!((f.slope() - 1.37).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sketch_tracks_exact_percentiles_within_bin_width() {
+        // 1..=20000 scaled to (0, 2]: the sketch must agree with the exact
+        // sorted-vector percentile to within one bin (≤ 0.195% relative).
+        let xs: Vec<f64> = (1..=20_000).map(|i| i as f64 / 10_000.0).collect();
+        let mut s = LogQuantileSketch::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 20_000);
+        for q in [1.0, 10.0, 50.0, 95.0, 99.0] {
+            let exact = percentile_sorted(&xs, q);
+            let est = s.quantile(q);
+            // Error budget: one bin width (≤ 0.195% of the value) plus one
+            // sample spacing (1e-4 — rank interpolation cannot bridge
+            // samples that land in different bins).
+            assert!(
+                (est - exact).abs() <= exact * 2.5e-3 + 1.1e-4,
+                "q={q}: sketch {est} vs exact {exact}"
+            );
+        }
+        assert_eq!(s.quantile(0.0), 1e-4);
+        assert_eq!(s.quantile(100.0), 2.0);
+    }
+
+    #[test]
+    fn sketch_merge_is_bit_for_bit() {
+        let mut whole = LogQuantileSketch::new();
+        let mut left = LogQuantileSketch::new();
+        let mut right = LogQuantileSketch::new();
+        for i in 0..5000u64 {
+            let x = ((i as f64).sin().abs() * 10.0).powi(2) / 7.0;
+            whole.push(x);
+            if i % 3 == 0 {
+                left.push(x);
+            } else {
+                right.push(x);
+            }
+        }
+        left.merge(&right);
+        assert_eq!(whole.count(), left.count());
+        for q in [0.0, 12.5, 50.0, 95.0, 99.0, 100.0] {
+            // Integer bin counts merge exactly → identical f64 results.
+            assert_eq!(whole.quantile(q), left.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn sketch_handles_zeros_and_empty() {
+        let empty = LogQuantileSketch::new();
+        assert_eq!(empty.quantile(50.0), 0.0);
+        assert_eq!(empty.count(), 0);
+
+        let mut s = LogQuantileSketch::new();
+        for _ in 0..90 {
+            s.push(0.0);
+        }
+        for _ in 0..10 {
+            s.push(1.0);
+        }
+        assert_eq!(s.quantile(50.0), 0.0, "median of 90% zeros is zero");
+        assert!(s.quantile(99.0) > 0.9, "tail must see the ones");
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 1.0);
+    }
+
+    #[test]
+    fn sketch_extreme_magnitudes_stay_in_range() {
+        let mut s = LogQuantileSketch::new();
+        s.push(1e-300); // collapses into bin 0
+        s.push(1e300); // collapses into the last bin
+        s.push(0.5);
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.quantile(0.0), 1e-300, "min is tracked exactly");
+        assert_eq!(s.quantile(100.0), 1e300, "max is tracked exactly");
+        let mid = s.quantile(50.0);
+        assert!(mid >= 0.4999 && mid <= 0.5011, "median {mid}");
     }
 
     #[test]

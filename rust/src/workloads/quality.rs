@@ -4,7 +4,11 @@
 //! These are the scores the approximate-multiplier application literature
 //! reports (Masadeh et al., the Wu et al. survey): MARED/StdARED say how
 //! wrong individual products are; PSNR/SSIM say whether anyone looking at
-//! the *application* output would notice.
+//! the *application* output would notice. Both views are carried here:
+//! [`Quality`] also reports the application-level MARED/StdARED — the
+//! mean and standard deviation of the per-sample absolute relative error
+//! of the workload output against its exact reference (samples whose
+//! reference value is zero are excluded, as in Eq. 8).
 //!
 //! SSIM is the block form: non-overlapping `8×8` windows (clamped at the
 //! borders, degenerating to `8×1` strips for 1-D signals), per-window
@@ -12,6 +16,7 @@
 //! constants, averaged over windows. Identical signals score exactly 1.
 
 use super::signal::Signal;
+use crate::util::stats::Accumulator;
 
 /// SSIM window edge (samples).
 const SSIM_WINDOW: usize = 8;
@@ -25,6 +30,29 @@ pub struct Quality {
     pub psnr_db: f64,
     /// Mean structural similarity in `[-1, 1]`; 1 when identical.
     pub ssim: f64,
+    /// Application-level MARED: mean `|out − ref| / |ref|` over samples
+    /// with a non-zero reference, percent.
+    pub mared_pct: f64,
+    /// Application-level StdARED: std of the same per-sample ARED
+    /// distribution, percent.
+    pub stdared_pct: f64,
+}
+
+/// Per-sample ARED statistics of an output against its reference
+/// (zero-reference samples excluded). Returns `(mared_pct, stdared_pct)`.
+pub fn ared_stats(reference: &Signal, out: &Signal) -> (f64, f64) {
+    assert_eq!(
+        (reference.w, reference.h),
+        (out.w, out.h),
+        "ared: signal shapes differ"
+    );
+    let mut acc = Accumulator::new();
+    for (&r, &o) in reference.data.iter().zip(&out.data) {
+        if r != 0 {
+            acc.push(((o - r) as f64 / r as f64).abs());
+        }
+    }
+    (100.0 * acc.mean(), 100.0 * acc.std())
 }
 
 /// Mean squared error between two same-shape signals.
@@ -103,13 +131,16 @@ pub fn ssim(reference: &Signal, out: &Signal, peak: f64) -> f64 {
     total / windows as f64
 }
 
-/// All three metrics at once (the workload report row).
+/// All metrics at once (the workload report row).
 pub fn compare(reference: &Signal, out: &Signal, peak: f64) -> Quality {
     let m = mse(reference, out);
+    let (mared_pct, stdared_pct) = ared_stats(reference, out);
     Quality {
         mse: m,
         psnr_db: psnr_db(m, peak),
         ssim: ssim(reference, out, peak),
+        mared_pct,
+        stdared_pct,
     }
 }
 
@@ -125,17 +156,34 @@ mod tests {
         assert_eq!(q.mse, 0.0);
         assert!(q.psnr_db.is_infinite() && q.psnr_db > 0.0);
         assert_eq!(q.ssim, 1.0);
+        assert_eq!(q.mared_pct, 0.0);
+        assert_eq!(q.stdared_pct, 0.0);
     }
 
     #[test]
     fn golden_mse_psnr_uniform_offset() {
         // 4×4 all-100 vs all-102: every error is 2 → MSE = 4,
-        // PSNR = 10·log10(255²/4) = 42.1107 dB (hand-computed).
+        // PSNR = 10·log10(255²/4) = 42.1107 dB (hand-computed); every
+        // per-sample ARED is exactly 2/100 → MARED = 2%, StdARED = 0.
         let a = Signal::new(4, 4, vec![100; 16]);
         let b = Signal::new(4, 4, vec![102; 16]);
         let q = compare(&a, &b, 255.0);
         assert_eq!(q.mse, 4.0);
         assert!((q.psnr_db - 42.1107).abs() < 1e-3, "PSNR {}", q.psnr_db);
+        assert!((q.mared_pct - 2.0).abs() < 1e-12, "MARED {}", q.mared_pct);
+        assert!(q.stdared_pct < 1e-9, "StdARED {}", q.stdared_pct);
+    }
+
+    #[test]
+    fn golden_ared_stats_mixed_population() {
+        // refs {100, 200, 0}, outs {110, 190, 5}: the zero-reference
+        // sample is excluded, AREDs are {0.10, 0.05} → MARED = 7.5%,
+        // population std = 0.025 → StdARED = 2.5% (hand-computed).
+        let a = Signal::new(3, 1, vec![100, 200, 0]);
+        let b = Signal::new(3, 1, vec![110, 190, 5]);
+        let (mared, stdared) = ared_stats(&a, &b);
+        assert!((mared - 7.5).abs() < 1e-9, "MARED {mared}");
+        assert!((stdared - 2.5).abs() < 1e-9, "StdARED {stdared}");
     }
 
     #[test]

@@ -15,7 +15,7 @@ fn scaletrim_populates_the_pareto_front() {
     // Pareto frontier". Require at least 3 scaleTRIM members on the
     // (MRED, PDP) front.
     let pts = points();
-    let front = pareto_front(&pts, |p| (p.error.mred_pct, p.hw.pdp_fj));
+    let front = pareto_front(&pts, |p| p.mared_energy());
     let st = front
         .iter()
         .filter(|&&i| pts[i].name.starts_with("scaleTRIM"))
@@ -30,7 +30,7 @@ fn scaletrim_populates_the_pareto_front() {
 #[test]
 fn front_is_actually_non_dominated() {
     let pts = points();
-    let front = pareto_front(&pts, |p| (p.error.mred_pct, p.hw.pdp_fj));
+    let front = pareto_front(&pts, |p| p.mared_energy());
     for &i in &front {
         for (j, other) in pts.iter().enumerate() {
             if i == j {
