@@ -8,12 +8,12 @@
 
 use scaletrim::dse::{constrained, evaluate_all, pareto_front};
 use scaletrim::error::SweepSpec;
-use scaletrim::multipliers::paper_configs_8bit;
+use scaletrim::multipliers::{paper_configs_8bit, DesignSpec};
 
 fn main() -> scaletrim::Result<()> {
     let zoo = paper_configs_8bit();
     println!("evaluating {} configurations over the full 8-bit space…", zoo.len());
-    let points = evaluate_all(&zoo, SweepSpec::Exhaustive);
+    let points = evaluate_all(&zoo, SweepSpec::Exhaustive)?;
 
     // Pareto front on (MRED, PDP) — Fig. 9d's star markers.
     let front = pareto_front(&points, |p| p.mared_energy());
@@ -25,9 +25,10 @@ fn main() -> scaletrim::Result<()> {
             p.name, p.error.mred_pct, p.hw.pdp_fj
         );
     }
+    // Typed family match — no string prefix sniffing.
     let st_on_front = front
         .iter()
-        .filter(|&&i| points[i].name.starts_with("scaleTRIM"))
+        .filter(|&&i| matches!(points[i].spec, DesignSpec::ScaleTrim { .. }))
         .count();
     println!(
         "\nscaleTRIM holds {st_on_front}/{} of the front — the paper's Sec. IV-C claim.",

@@ -7,12 +7,18 @@
 
 use scaletrim::error::{exhaustive_sweep, SweepSpec};
 use scaletrim::hardware::estimate;
-use scaletrim::multipliers::{ApproxMultiplier, ScaleTrim};
+use scaletrim::multipliers::{ApproxMultiplier, DesignSpec, ScaleTrim};
 
 fn main() -> scaletrim::Result<()> {
+    // Any configuration resolves from its paper label in O(1) — the typed
+    // identity plane (no zoo scan, typos get near-miss suggestions):
+    let by_label = "scaleTRIM(3,4)".parse::<DesignSpec>()?.build(8)?;
+    println!("resolved {} at {} bits", by_label.name(), by_label.bits());
+
     // scaleTRIM(h=3, M=4): 3-bit truncation, 4 compensation segments —
-    // the paper's Fig. 7 configuration.
+    // the paper's Fig. 7 configuration, constructed directly this time.
     let m = ScaleTrim::new(8, 3, 4);
+    assert_eq!(m.spec(), by_label.spec());
 
     // The paper's worked example: 48 × 81.
     let (a, b) = (48u64, 81u64);

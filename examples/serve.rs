@@ -37,7 +37,7 @@ fn main() -> scaletrim::Result<()> {
             max_wait: Duration::from_millis(4),
         },
     );
-    println!("lanes: {:?}", coord.configs());
+    println!("lanes: {}", coord.lane_labels().join(", "));
 
     // Drive 3000 requests round-robin across lanes, tracking accuracy.
     let n = 3000usize;

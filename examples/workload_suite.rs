@@ -21,7 +21,7 @@ fn main() -> scaletrim::Result<()> {
     for w in registry() {
         println!("\n== {} — {}", w.name(), w.description());
         for m in &configs {
-            let r = evaluate(w.as_ref(), m.as_ref());
+            let r = evaluate(w.as_ref(), m.as_ref())?;
             println!(
                 "  {:<16} PSNR {:>6.2} dB   SSIM {:.4}   MARED {:>6.3}%   StdARED {:>6.3}%   {:>7} MACs → {:>8.3} nJ",
                 r.config,

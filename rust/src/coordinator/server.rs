@@ -7,7 +7,7 @@
 use super::backend::Backend;
 use super::batcher::{BatchPolicy, BatchQueue, Request};
 use super::metrics::Metrics;
-use crate::multipliers::ApproxMultiplier;
+use crate::multipliers::{ApproxMultiplier, DesignSpec};
 use crate::nn::cached_lut;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -32,9 +32,11 @@ struct ConfigLane {
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
-/// Multi-config inference coordinator.
+/// Multi-config inference coordinator. Lanes are keyed by the typed
+/// [`DesignSpec`] identity; the string [`Coordinator::submit`] entry point
+/// survives as a parsing shim over [`Coordinator::submit_spec`].
 pub struct Coordinator {
-    lanes: HashMap<String, ConfigLane>,
+    lanes: HashMap<DesignSpec, ConfigLane>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
     img_size: usize,
@@ -74,7 +76,7 @@ impl Coordinator {
                 img_size,
             );
             lanes.insert(
-                m.name(),
+                m.spec(),
                 ConfigLane {
                     queue,
                     worker: Some(worker),
@@ -89,9 +91,16 @@ impl Coordinator {
         }
     }
 
-    /// Configured lane names.
-    pub fn configs(&self) -> Vec<String> {
-        self.lanes.keys().cloned().collect()
+    /// Configured lane specs.
+    pub fn configs(&self) -> Vec<DesignSpec> {
+        self.lanes.keys().copied().collect()
+    }
+
+    /// Configured lane labels (display form of [`Coordinator::configs`]).
+    pub fn lane_labels(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.lanes.keys().map(|s| s.to_string()).collect();
+        v.sort();
+        v
     }
 
     /// Shared metrics handle.
@@ -99,17 +108,36 @@ impl Coordinator {
         self.metrics.clone()
     }
 
-    /// Submit an image to a config lane; returns `(id, receiver)`.
-    /// Errors if the config is unknown or the image size is wrong.
+    /// Submit an image to a config lane by label; returns `(id, receiver)`.
+    ///
+    /// Parsing shim over [`Coordinator::submit_spec`]: the label is parsed
+    /// through `DesignSpec::from_str`, so a typo reports the parse error
+    /// (with near-miss suggestions) instead of a bare "unknown config".
     pub fn submit(
         &self,
         config: &str,
         pixels: Vec<u8>,
     ) -> crate::Result<(u64, mpsc::Receiver<Prediction>)> {
-        let lane = self
-            .lanes
-            .get(config)
-            .ok_or_else(|| anyhow::anyhow!("unknown config {config:?}"))?;
+        let spec: DesignSpec = config
+            .parse()
+            .map_err(|e: crate::multipliers::ParseSpecError| anyhow::anyhow!("{e}"))?;
+        self.submit_spec(spec, pixels)
+    }
+
+    /// Submit an image to a config lane by typed spec; returns
+    /// `(id, receiver)`. Errors if no lane serves the spec or the image
+    /// size is wrong.
+    pub fn submit_spec(
+        &self,
+        spec: DesignSpec,
+        pixels: Vec<u8>,
+    ) -> crate::Result<(u64, mpsc::Receiver<Prediction>)> {
+        let lane = self.lanes.get(&spec).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no lane serves config {spec} (configured: {})",
+                self.lane_labels().join(", ")
+            )
+        })?;
         anyhow::ensure!(
             pixels.len() == self.img_size,
             "image size {} != expected {}",
@@ -248,7 +276,28 @@ mod tests {
         let exact = Exact::new(8);
         let configs: Vec<&dyn crate::multipliers::ApproxMultiplier> = vec![&exact];
         let coord = Coordinator::new(backend, &configs, policy());
-        assert!(coord.submit("DRUM(9)", vec![0; 4]).is_err());
+        // Valid label, no lane: the error names the configured lanes.
+        let e = coord.submit("DRUM(9)", vec![0; 4]).unwrap_err();
+        assert!(e.to_string().contains("Exact8"), "{e}");
+        // Unparseable label: the parsing shim surfaces the spec error.
+        let e = coord.submit("warp-drive", vec![0; 4]).unwrap_err();
+        assert!(e.to_string().contains("unknown config"), "{e}");
+    }
+
+    #[test]
+    fn typed_submit_routes_like_string_submit() {
+        let backend = Arc::new(MockBackend::new(4, 4));
+        let exact = Exact::new(8);
+        let st = ScaleTrim::new(8, 3, 4);
+        let configs: Vec<&dyn crate::multipliers::ApproxMultiplier> = vec![&exact, &st];
+        let coord = Coordinator::new(backend, &configs, policy());
+        let (_, rx) = coord
+            .submit_spec(crate::multipliers::DesignSpec::ScaleTrim { h: 3, m: 4 }, vec![1, 0, 0, 0])
+            .unwrap();
+        assert_eq!(rx.recv().unwrap().class, 1);
+        let mut labels = coord.lane_labels();
+        labels.sort();
+        assert_eq!(labels, vec!["Exact8".to_string(), "scaleTRIM(3,4)".to_string()]);
     }
 
     #[test]

@@ -8,14 +8,16 @@ mod pareto;
 pub use pareto::{dominance, pareto_front, Dominance};
 
 use crate::error::{sweep_full, ErrorReport, PercentileReport, SweepSpec};
-use crate::hardware::{estimate, paper_reference, HwEstimate};
-use crate::multipliers::ApproxMultiplier;
+use crate::hardware::{paper_reference, try_estimate, HwEstimate};
+use crate::multipliers::{ApproxMultiplier, DesignSpec};
 
 /// One evaluated design point: accuracy + hardware, plus the paper's
 /// published values when the config appears in Table 4.
 #[derive(Debug, Clone)]
 pub struct DesignPoint {
-    /// Config label.
+    /// Typed config identity — the key DSE queries and reports route on.
+    pub spec: DesignSpec,
+    /// Config label (display form of `spec`, kept for report columns).
     pub name: String,
     /// Operand width.
     pub bits: u32,
@@ -30,20 +32,31 @@ pub struct DesignPoint {
 }
 
 impl DesignPoint {
-    /// Evaluate one configuration end to end. One traversal of the operand
-    /// space feeds both the scalar metrics and the percentile statistics
-    /// (the streaming builder produces both).
-    pub fn evaluate(m: &dyn ApproxMultiplier, spec: SweepSpec) -> Self {
-        let name = m.name();
-        let (error, percentiles) = sweep_full(m, spec);
-        Self {
+    /// Evaluate one configuration end to end, as a typed result. One
+    /// traversal of the operand space feeds both the scalar metrics and
+    /// the percentile statistics (the streaming builder produces both);
+    /// the hardware axes come from [`try_estimate`], so a config without a
+    /// structural mapping is an error, not a panic.
+    pub fn try_evaluate(m: &dyn ApproxMultiplier, sweep: SweepSpec) -> crate::Result<Self> {
+        let spec = m.spec();
+        let hw = try_estimate(m)?;
+        let (error, percentiles) = sweep_full(m, sweep);
+        Ok(Self {
             bits: m.bits(),
             error,
             percentiles,
-            hw: estimate(m),
-            paper: paper_reference(&name),
-            name,
-        }
+            hw,
+            paper: paper_reference(&spec),
+            name: spec.to_string(),
+            spec,
+        })
+    }
+
+    /// [`DesignPoint::try_evaluate`], panicking on configs without a
+    /// hardware model — convenient for tests and benches over registry
+    /// configs, which always have one.
+    pub fn evaluate(m: &dyn ApproxMultiplier, sweep: SweepSpec) -> Self {
+        Self::try_evaluate(m, sweep).unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// The paper's primary Pareto plane: (MARED %, energy fJ) — both
@@ -60,10 +73,14 @@ impl DesignPoint {
 }
 
 /// Evaluate a whole zoo (used by the Fig. 9/10 harnesses). Multi-threaded
-/// through the sweeps themselves.
-pub fn evaluate_all(zoo: &[Box<dyn ApproxMultiplier>], spec: SweepSpec) -> Vec<DesignPoint> {
+/// through the sweeps themselves; the first config without a hardware
+/// model aborts the run with a typed error.
+pub fn evaluate_all(
+    zoo: &[Box<dyn ApproxMultiplier>],
+    sweep: SweepSpec,
+) -> crate::Result<Vec<DesignPoint>> {
     zoo.iter()
-        .map(|m| DesignPoint::evaluate(m.as_ref(), spec))
+        .map(|m| DesignPoint::try_evaluate(m.as_ref(), sweep))
         .collect()
 }
 
@@ -97,6 +114,7 @@ mod tests {
         let m = ScaleTrim::new(8, 3, 4);
         let p = DesignPoint::evaluate(&m, SweepSpec::Exhaustive);
         assert_eq!(p.name, "scaleTRIM(3,4)");
+        assert_eq!(p.spec, crate::multipliers::DesignSpec::ScaleTrim { h: 3, m: 4 });
         assert!(p.error.mred_pct > 3.0 && p.error.mred_pct < 4.5);
         assert!(p.hw.pdp_fj > 0.0);
         assert!(p.paper.is_some());

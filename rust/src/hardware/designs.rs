@@ -5,7 +5,7 @@
 use super::components::{
     adder, array_multiplier, barrel_shifter, const_lut, lod, mux, zero_detect, Cost,
 };
-use crate::multipliers::ApproxMultiplier;
+use crate::multipliers::{ApproxMultiplier, DesignSpec};
 
 /// A design's hardware estimate (paper Table 4 columns).
 #[derive(Debug, Clone)]
@@ -36,9 +36,9 @@ fn calibration() -> (f64, f64, f64) {
         let (mut ne, mut de) = (0.0, 0.0); // pdp/energy
         for h in 2..=7u32 {
             for m in [0u32, 4, 8] {
-                let name = format!("scaleTRIM({h},{m})");
-                let model = structural(&name, 8).unwrap();
-                let Some((_, p_delay, p_area, _, p_pdp)) = paper_reference(&name) else {
+                let spec = DesignSpec::ScaleTrim { h, m };
+                let model = structural(&spec, 8).expect("scaleTRIM rows always have a model");
+                let Some((_, p_delay, p_area, _, p_pdp)) = paper_reference(&spec) else {
                     continue;
                 };
                 na += p_area * model.area_um2;
@@ -65,12 +65,18 @@ fn scale_energy(c: Cost, f: f64) -> Cost {
     }
 }
 
-/// Uncalibrated structural cost of a named configuration.
-fn structural(name: &str, bits: u32) -> Option<Cost> {
+/// Uncalibrated structural cost of a configuration at operand width
+/// `bits`. Total over the spec enum — the string re-parsing of the seed
+/// (`parse_config`) is gone — but still fallible: a spec can be
+/// structurally unmappable at a given width (`DSM(m)` needs `m < n`, the
+/// width-pinned families must match `n`), and those cases return a typed
+/// error instead of underflowing a datapath width.
+fn structural(spec: &DesignSpec, bits: u32) -> crate::Result<Cost> {
     let n = bits;
-    let p = parse_config(name)?;
-    let c = match p {
-        Config::ScaleTrim { h, m } => {
+    anyhow::ensure!(n >= 2, "structural model needs >= 2-bit operands, got {n}");
+    let c = match *spec {
+        DesignSpec::ScaleTrim { h, m } => {
+            anyhow::ensure!(h < n, "{spec} needs h < {n}");
             // Fig. 8: zero-detect ∥ (LOD → barrel → truncate-mux) per
             // operand → S adder → shift-add → (+C LUT) → output shifter.
             let front = zero_detect(n)
@@ -100,12 +106,16 @@ fn structural(name: &str, bits: u32) -> Option<Cost> {
                 })
                 .then(barrel_shifter(h + 6, 2 * n))
         }
-        Config::Drum { m } => lod(n, false)
-            .then(barrel_shifter(n, n))
-            .beside(lod(n, false).then(barrel_shifter(n, n)))
-            .then(array_multiplier(m))
-            .then(barrel_shifter(2 * m, 2 * n)),
-        Config::Dsm { m } => {
+        DesignSpec::Drum { m } => {
+            anyhow::ensure!(m <= n, "{spec} needs m <= {n}");
+            lod(n, false)
+                .then(barrel_shifter(n, n))
+                .beside(lod(n, false).then(barrel_shifter(n, n)))
+                .then(array_multiplier(m))
+                .then(barrel_shifter(2 * m, 2 * n))
+        }
+        DesignSpec::Dsm { m } => {
+            anyhow::ensure!(m < n, "{spec} needs m < {n}");
             // Steering detector (OR tree over n-m bits) + segment mux per
             // operand, m×m multiplier, output shift mux (3 positions).
             let detect = zero_detect(n - m); // OR-tree ≈ NOR-tree cost
@@ -114,7 +124,8 @@ fn structural(name: &str, bits: u32) -> Option<Cost> {
                 .then(array_multiplier(m))
                 .then(mux(2 * n, 4))
         }
-        Config::Tosam { t, h } => {
+        DesignSpec::Tosam { t, h } => {
+            anyhow::ensure!(h < n, "{spec} needs h < {n}");
             // TOSAM uses LUT-based LODs (Sec. IV-B) — faster, larger.
             let front = zero_detect(n)
                 .beside(lod(n, true).then(barrel_shifter(n, n)))
@@ -128,12 +139,13 @@ fn structural(name: &str, bits: u32) -> Option<Cost> {
                 .then(adder(h + 3))
                 .then(barrel_shifter(h + 6, 2 * n))
         }
-        Config::Mitchell => lod(n, false)
+        DesignSpec::Mitchell => lod(n, false)
             .then(barrel_shifter(n, n))
             .beside(lod(n, false).then(barrel_shifter(n, n)))
             .then(adder(n))
             .then(barrel_shifter(2 * n, 2 * n)),
-        Config::Mbm { k } => {
+        DesignSpec::Mbm { k } => {
+            anyhow::ensure!(k >= 1 && k < n, "{spec} needs 1 <= k < {n}");
             // Mitchell on (n-k+1)-bit truncated operands + bias adder.
             let w = n - (k - 1);
             lod(w, false)
@@ -143,7 +155,7 @@ fn structural(name: &str, bits: u32) -> Option<Cost> {
                 .then(adder(w)) // bias add
                 .then(barrel_shifter(w + n, 2 * n))
         }
-        Config::Ilm { k } => {
+        DesignSpec::Ilm { k } => {
             // Nearest-one detection ≈ LOD + rounding adder per operand.
             let w = if k == 0 { n } else { k.max(4) };
             lod(n, false)
@@ -153,7 +165,7 @@ fn structural(name: &str, bits: u32) -> Option<Cost> {
                 .then(adder(w))
                 .then(barrel_shifter(2 * n, 2 * n))
         }
-        Config::LodII { j } => {
+        DesignSpec::LodII { j } => {
             // Mitchell with a cheaper/approximate LOD.
             let lod_scale = if j == 0 { 0.95 } else { 0.8 };
             let l = lod(n, false);
@@ -168,7 +180,8 @@ fn structural(name: &str, bits: u32) -> Option<Cost> {
                 .then(adder(n))
                 .then(barrel_shifter(2 * n, 2 * n))
         }
-        Config::Axm { k } => {
+        DesignSpec::Axm { bits: b, k } => {
+            anyhow::ensure!(b == n, "wrong width: {spec} is pinned to {b}-bit operands, not {n}");
             // Recursive 2×2 blocks: (n/2)² cells + recombination adders.
             let cells = (n as u64 / 2) * (n as u64 / 2);
             let cell = Cost {
@@ -191,7 +204,8 @@ fn structural(name: &str, bits: u32) -> Option<Cost> {
             }
             c
         }
-        Config::Scdm { k } => {
+        DesignSpec::Scdm { bits: b, k } => {
+            anyhow::ensure!(b == n, "wrong width: {spec} is pinned to {b}-bit operands, not {n}");
             // Array multiplier with k carry-free low columns: those FAs
             // lose their carry chain (≈ XOR-only, 40% cheaper).
             let full = array_multiplier(n);
@@ -202,13 +216,20 @@ fn structural(name: &str, bits: u32) -> Option<Cost> {
                 energy_fj: full.energy_fj * (1.0 - 0.4 * saved_cols),
             }
         }
-        Config::Msamz { k, m } => lod(n, false)
-            .then(barrel_shifter(n, n))
-            .beside(lod(n, false).then(barrel_shifter(n, n)))
-            .then(array_multiplier(m))
-            .then(adder(m + k))
-            .then(barrel_shifter(2 * m, 2 * n)),
-        Config::Piecewise { h, s } => {
+        DesignSpec::Msamz { k, m } => {
+            anyhow::ensure!(
+                m.checked_add(k).is_some_and(|s| s <= 2 * n),
+                "{spec} needs m + k <= 2·{n}"
+            );
+            lod(n, false)
+                .then(barrel_shifter(n, n))
+                .beside(lod(n, false).then(barrel_shifter(n, n)))
+                .then(array_multiplier(m))
+                .then(adder(m + k))
+                .then(barrel_shifter(2 * m, 2 * n))
+        }
+        DesignSpec::Piecewise { h, s } => {
+            anyhow::ensure!(h < n, "{spec} needs h < {n}");
             // scaleTRIM front-end, but two constants per segment and a real
             // (h+2)×(h+2) multiplier for α_s·s — the Sec. IV-D cost story.
             let front = zero_detect(n)
@@ -221,7 +242,7 @@ fn structural(name: &str, bits: u32) -> Option<Cost> {
                 .then(adder(h + 5))
                 .then(barrel_shifter(h + 6, 2 * n))
         }
-        Config::EvoLib { k } => {
+        DesignSpec::EvoLib { k } => {
             // Broken-array surrogate: exact array minus dropped columns.
             let full = array_multiplier(n);
             let dropped = match k {
@@ -237,138 +258,64 @@ fn structural(name: &str, bits: u32) -> Option<Cost> {
                 energy_fj: full.energy_fj * (1.0 - 1.8 * frac),
             }
         }
-        Config::Exact => array_multiplier(n),
-        Config::Letam { t } => lod(n, false)
-            .then(barrel_shifter(n, n))
-            .beside(lod(n, false).then(barrel_shifter(n, n)))
-            .then(array_multiplier(t))
-            .then(barrel_shifter(2 * t, 2 * n)),
-        Config::Roba => lod(n, false)
+        DesignSpec::Exact { bits: b } => {
+            anyhow::ensure!(b == n, "wrong width: {spec} is pinned to {b}-bit operands, not {n}");
+            array_multiplier(n)
+        }
+        DesignSpec::Letam { t } => {
+            anyhow::ensure!(t <= n, "{spec} needs t <= {n}");
+            lod(n, false)
+                .then(barrel_shifter(n, n))
+                .beside(lod(n, false).then(barrel_shifter(n, n)))
+                .then(array_multiplier(t))
+                .then(barrel_shifter(2 * t, 2 * n))
+        }
+        DesignSpec::Roba => lod(n, false)
             .beside(lod(n, false))
             .then(barrel_shifter(2 * n, 2 * n).times(3))
             .then(adder(2 * n).times(2)),
     };
-    Some(c)
+    Ok(c)
 }
 
-/// Hardware estimate for a behavioural model instance.
-pub fn estimate(m: &dyn ApproxMultiplier) -> HwEstimate {
-    let name = m.name();
-    let cost = structural(&name, m.bits())
-        .unwrap_or_else(|| panic!("no structural model for config {name:?}"));
+/// Hardware estimate for a behavioural model instance, as a typed result:
+/// errors when the instance's spec has no structural mapping at its width
+/// (wrong-width-pinned spec, parameter exceeding the datapath). This is
+/// the routing every report/DSE call site uses; [`estimate`] is the
+/// panicking convenience wrapper for contexts that only ever see registry
+/// configs.
+pub fn try_estimate(m: &dyn ApproxMultiplier) -> crate::Result<HwEstimate> {
+    let spec = m.spec();
+    let cost = structural(&spec, m.bits())?;
     let (cal_area, cal_delay, cal_energy) = calibration();
     let area = cost.area_um2 * cal_area;
     let delay = cost.delay_ns * cal_delay;
     let energy = cost.energy_fj * cal_energy;
-    HwEstimate {
-        name,
+    Ok(HwEstimate {
+        name: spec.to_string(),
         area_um2: area,
         delay_ns: delay,
         pdp_fj: energy,
         // fJ/ns == µW: 1e-15 J / 1e-9 s = 1e-6 W.
         power_uw: energy / delay,
-    }
+    })
 }
 
-/// Parsed config label.
-enum Config {
-    ScaleTrim { h: u32, m: u32 },
-    Drum { m: u32 },
-    Dsm { m: u32 },
-    Tosam { t: u32, h: u32 },
-    Mitchell,
-    Mbm { k: u32 },
-    Ilm { k: u32 },
-    LodII { j: u32 },
-    Axm { k: u32 },
-    Scdm { k: u32 },
-    Msamz { k: u32, m: u32 },
-    Piecewise { h: u32, s: u32 },
-    EvoLib { k: u32 },
-    Letam { t: u32 },
-    Roba,
-    Exact,
-}
-
-fn parse_config(name: &str) -> Option<Config> {
-    fn args2(s: &str) -> Option<(u32, u32)> {
-        let inner = s.split('(').nth(1)?.trim_end_matches(')');
-        let mut it = inner.split(',');
-        let a = it.next()?.trim().trim_start_matches("h=").trim_start_matches("S=");
-        let b = it.next()?.trim().trim_start_matches("h=").trim_start_matches("S=");
-        Some((a.parse().ok()?, b.parse().ok()?))
-    }
-    fn arg1(s: &str) -> Option<u32> {
-        let inner = s.split('(').nth(1)?.trim_end_matches(')');
-        inner.trim().parse().ok()
-    }
-    if let Some((h, m)) = name.strip_prefix("scaleTRIM").and_then(args2) {
-        return Some(Config::ScaleTrim { h, m });
-    }
-    if name.starts_with("DRUM") {
-        return Some(Config::Drum { m: arg1(name)? });
-    }
-    if name.starts_with("DSM") {
-        return Some(Config::Dsm { m: arg1(name)? });
-    }
-    if let Some((t, h)) = name.strip_prefix("TOSAM").and_then(args2) {
-        return Some(Config::Tosam { t, h });
-    }
-    if name.starts_with("Mitchell_LODII_") {
-        return Some(Config::LodII {
-            j: name.rsplit('_').next()?.parse().ok()?,
-        });
-    }
-    if name == "Mitchell" {
-        return Some(Config::Mitchell);
-    }
-    if name.starts_with("MBM-") {
-        return Some(Config::Mbm {
-            k: name[4..].parse().ok()?,
-        });
-    }
-    if name.starts_with("ILM") {
-        return Some(Config::Ilm {
-            k: name[3..].parse().ok()?,
-        });
-    }
-    if name.starts_with("AXM") {
-        return Some(Config::Axm {
-            k: name.rsplit('-').next()?.parse().ok()?,
-        });
-    }
-    if name.starts_with("SCDM") {
-        return Some(Config::Scdm {
-            k: name.rsplit('-').next()?.parse().ok()?,
-        });
-    }
-    if let Some((k, m)) = name.strip_prefix("MSAMZ").and_then(args2) {
-        return Some(Config::Msamz { k, m });
-    }
-    if let Some((h, s)) = name.strip_prefix("Piecewise").and_then(args2) {
-        return Some(Config::Piecewise { h, s });
-    }
-    if name.starts_with("EVO-lib") {
-        return Some(Config::EvoLib {
-            k: name[7..].parse().ok()?,
-        });
-    }
-    if name.starts_with("LETAM") {
-        return Some(Config::Letam { t: arg1(name)? });
-    }
-    if name == "RoBA" {
-        return Some(Config::Roba);
-    }
-    if name.starts_with("Exact") {
-        return Some(Config::Exact);
-    }
-    None
+/// Hardware estimate for a behavioural model instance.
+///
+/// Panics when [`try_estimate`] would error — use that instead anywhere a
+/// non-registry spec can appear.
+pub fn estimate(m: &dyn ApproxMultiplier) -> HwEstimate {
+    try_estimate(m).unwrap_or_else(|e| panic!("no structural model: {e}"))
 }
 
 /// The paper's published Table 4 hardware numbers (8-bit), used by the
-/// repro reports for side-by-side columns: `(name, mred, delay, area,
-/// power, pdp)`.
-pub fn paper_reference(name: &str) -> Option<(f64, f64, f64, f64, f64)> {
+/// repro reports for side-by-side columns, keyed by typed spec:
+/// `(mred, delay, area, power, pdp)`. The rows below keep the paper's
+/// labels verbatim and are matched through the spec's canonical display —
+/// no string re-parsing anywhere.
+pub fn paper_reference(spec: &DesignSpec) -> Option<(f64, f64, f64, f64, f64)> {
+    let name = spec.to_string();
     // (MRED %, delay ns, area µm², power µW, PDP fJ) — Table 4 verbatim.
     let t: &[(&str, f64, f64, f64, f64, f64)] = &[
         ("MBM-1", 2.80, 1.50, 232.70, 192.03, 288.045),
@@ -495,7 +442,7 @@ mod tests {
             for m in [0u32, 4, 8] {
                 let st = ScaleTrim::new(8, h, m);
                 let e = estimate(&st);
-                let (_, d, a, _, pdp) = paper_reference(&st.name()).unwrap();
+                let (_, d, a, _, pdp) = paper_reference(&st.spec()).unwrap();
                 ratios_area.push(e.area_um2 / a);
                 ratios_delay.push(e.delay_ns / d);
                 ratios_pdp.push(e.pdp_fj / pdp);
@@ -515,6 +462,44 @@ mod tests {
                 assert!((0.4..2.5).contains(r), "{metric}: row ratio {r:.3}");
             }
         }
+    }
+
+    /// A spec can disagree with the instance width only through a
+    /// hand-rolled trait impl — exactly the case `try_estimate` must turn
+    /// into a typed error rather than a panic or an underflow.
+    #[test]
+    fn try_estimate_rejects_unmappable_specs() {
+        struct WidthLiar;
+        impl ApproxMultiplier for WidthLiar {
+            fn spec(&self) -> DesignSpec {
+                DesignSpec::Exact { bits: 8 }
+            }
+            fn bits(&self) -> u32 {
+                16
+            }
+            fn mul(&self, a: u64, b: u64) -> u64 {
+                a * b
+            }
+        }
+        let e = try_estimate(&WidthLiar).unwrap_err();
+        assert!(e.to_string().contains("wrong width"), "{e}");
+
+        struct DsmTooWide;
+        impl ApproxMultiplier for DsmTooWide {
+            fn spec(&self) -> DesignSpec {
+                DesignSpec::Dsm { m: 9 }
+            }
+            fn bits(&self) -> u32 {
+                8
+            }
+            fn mul(&self, a: u64, b: u64) -> u64 {
+                a * b
+            }
+        }
+        assert!(try_estimate(&DsmTooWide).is_err(), "m >= n must not underflow");
+        // And the happy path agrees with the panicking wrapper.
+        let st = ScaleTrim::new(8, 4, 8);
+        assert_eq!(try_estimate(&st).unwrap().pdp_fj, estimate(&st).pdp_fj);
     }
 
     #[test]

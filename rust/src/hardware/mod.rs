@@ -23,7 +23,7 @@ mod netlist;
 pub use components::{
     adder, array_multiplier, barrel_shifter, const_lut, lod, mux, zero_detect, Cost,
 };
-pub use designs::{estimate, paper_reference, HwEstimate};
+pub use designs::{estimate, paper_reference, try_estimate, HwEstimate};
 pub use gates::{Gate, GateCounts, LIB45};
 pub use netlist::{
     build_barrel_left, build_encoder, build_lod_onehot, build_rca, ActivityProfile, GateInst,

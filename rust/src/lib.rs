@@ -8,11 +8,17 @@
 //! - [`multipliers`] — bit-accurate behavioural models of scaleTRIM and every
 //!   baseline the paper compares against (DRUM, DSM, TOSAM, Mitchell, MBM,
 //!   RoBA, LETAM, ILM, Mitchell-LODII, AXM8, SCDM8, MSAMZ, piecewise-linear,
-//!   EvoLib surrogates, exact), plus the **batched kernel plane**: every
-//!   design answers `mul_batch` over operand chunks (monomorphized
-//!   overrides for the hot designs hoist parameter loads out of the loop),
-//!   and `CompiledMul` folds any design into a full product table for
-//!   pure-load repeat evaluation.
+//!   EvoLib surrogates, exact), plus the **typed identity plane**
+//!   (`multipliers::spec`): every configuration is a
+//!   [`multipliers::DesignSpec`] — a plain-data enum whose `Display` is the
+//!   paper label, whose `FromStr` parses it back losslessly with near-miss
+//!   suggestions, and whose `build(bits)` constructs the model in O(1).
+//!   The hardware model, the LUT cache, the coordinator lanes and the DSE
+//!   points all key on specs, not strings. And the **batched kernel
+//!   plane**: every design answers `mul_batch` over operand chunks
+//!   (monomorphized overrides for the hot designs hoist parameter loads
+//!   out of the loop), and `CompiledMul` folds any design into a full
+//!   product table for pure-load repeat evaluation.
 //! - [`lut`] — the offline calibration flow of Sec. III: zero-intercept
 //!   least-squares linearization (α, ΔEE) and the piecewise-constant
 //!   compensation LUT (C_i).
@@ -49,11 +55,30 @@
 //!
 //! ## Quickstart
 //!
+//! Resolve any configuration by its paper label — no zoo scan, O(1):
+//!
 //! ```no_run
-//! use scaletrim::multipliers::{ApproxMultiplier, ScaleTrim};
-//! let m = ScaleTrim::new(8, 3, 4); // 8-bit, h=3, M=4  (paper Fig. 7)
+//! use scaletrim::multipliers::{ApproxMultiplier, DesignSpec};
+//! # fn main() -> scaletrim::Result<()> {
+//! let m = "scaleTRIM(3,4)".parse::<DesignSpec>()?.build(8)?;
 //! assert_eq!(m.mul(48, 81), 4070); // exact product is 3888
+//! # Ok(()) }
 //! ```
+//!
+//! Or construct directly when the parameters are already typed:
+//!
+//! ```no_run
+//! use scaletrim::multipliers::{ApproxMultiplier, DesignSpec, ScaleTrim};
+//! let m = ScaleTrim::new(8, 3, 4); // 8-bit, h=3, M=4  (paper Fig. 7)
+//! assert_eq!(m.spec(), DesignSpec::ScaleTrim { h: 3, m: 4 });
+//! assert_eq!(m.name(), "scaleTRIM(3,4)"); // name == spec label, always
+//! ```
+//!
+//! Migration note: the zoo-scan resolution path (materialise
+//! `paper_configs_8bit()` and linear-scan on `name()`) is gone — parse a
+//! [`multipliers::DesignSpec`] and `build` it instead. Unknown labels are
+//! typed [`multipliers::ParseSpecError`]s carrying near-miss suggestions,
+//! not a silent `None`.
 pub mod coordinator;
 pub mod dse;
 pub mod error;

@@ -15,11 +15,11 @@
 use scaletrim::coordinator::{BatchPolicy, Coordinator, PjrtBackend};
 use scaletrim::dse::{evaluate_all, pareto_front};
 use scaletrim::error::{sweep_full, SweepSpec};
-use scaletrim::hardware::estimate;
+use scaletrim::hardware::try_estimate;
 // NOTE: no glob import — `multipliers::*` would pull in the `scaletrim`
 // *submodule*, shadowing the crate name.
 use scaletrim::multipliers::{
-    paper_configs_16bit, paper_configs_8bit, ApproxMultiplier, Exact, ScaleTrim,
+    paper_configs_16bit, paper_configs_8bit, ApproxMultiplier, DesignSpec, Exact, ScaleTrim,
 };
 use scaletrim::nn::{cached_lut, exact_lut, Dataset};
 use scaletrim::runtime::{find_artifacts_dir, ArtifactSet};
@@ -28,17 +28,18 @@ use scaletrim::util::table::{f2, Table};
 use scaletrim::{lut, nn, report, runtime, workloads, Result};
 use std::sync::Arc;
 
-fn find_config(name: &str, bits: u32) -> Option<Box<dyn ApproxMultiplier>> {
-    let zoo = if bits == 16 {
-        paper_configs_16bit()
-    } else {
-        paper_configs_8bit()
-    };
-    let mut found = zoo.into_iter().find(|m| m.name() == name);
-    if found.is_none() && name.starts_with("Exact") {
-        found = Some(Box::new(Exact::new(bits)));
+/// Resolve a `--config` label into a built multiplier at the requested
+/// width — O(1) through `DesignSpec::from_str` + `build`, no zoo scan, no
+/// zoo-wide calibration. A typo reports the parse error with the nearest
+/// registered labels; a width mismatch reports a typed build error. The
+/// bare `exact` alias maps to the width-matched `Exact` baseline (the old
+/// `starts_with("Exact")` fallback hack, now a real spec).
+fn resolve_config(label: &str, bits: u32) -> Result<Box<dyn ApproxMultiplier>> {
+    if label.eq_ignore_ascii_case("exact") {
+        return DesignSpec::Exact { bits }.build(bits);
     }
-    found
+    let spec: DesignSpec = label.parse()?;
+    spec.build(bits)
 }
 
 fn main() -> Result<()> {
@@ -71,8 +72,7 @@ fn main() -> Result<()> {
             let name = args.opt_or("config", "scaleTRIM(3,4)");
             let a: u64 = args.positional.get(1).expect("usage: mul A B").parse()?;
             let b: u64 = args.positional.get(2).expect("usage: mul A B").parse()?;
-            let m = find_config(&name, bits)
-                .ok_or_else(|| anyhow::anyhow!("unknown config {name:?} (try `list`)"))?;
+            let m = resolve_config(&name, bits)?;
             let approx = m.mul(a, b);
             let exact = a * b;
             // ARED is undefined at exact == 0 unless the approximation is
@@ -96,10 +96,9 @@ fn main() -> Result<()> {
         "sweep" => {
             let bits = args.opt_parse_or("bits", 8u32);
             let name = args.opt_or("config", "scaleTRIM(3,4)");
-            let m = find_config(&name, bits)
-                .ok_or_else(|| anyhow::anyhow!("unknown config {name:?}"))?;
+            let m = resolve_config(&name, bits)?;
             let (r, p) = sweep_full(m.as_ref(), SweepSpec::default_for(bits));
-            let hw = estimate(m.as_ref());
+            let hw = try_estimate(m.as_ref())?;
             println!(
                 "{name} ({bits}-bit): MARED {:.3}%  StdARED {:.3}%  MED {:.1}  Max {:.0}  ED-std {:.1}  ({} pairs)",
                 r.mred_pct, r.stdared_pct, r.med, r.max_error, r.ed_std, r.pairs
@@ -133,7 +132,7 @@ fn main() -> Result<()> {
                 16 => paper_configs_16bit(),
                 other => anyhow::bail!("no registered zoo at {other} bits (use --bits 8|16)"),
             };
-            let points = evaluate_all(&zoo, SweepSpec::default_for(bits));
+            let points = evaluate_all(&zoo, SweepSpec::default_for(bits))?;
             let front = pareto_front(&points, |p| p.mared_energy());
             let mut t = Table::new(
                 &format!("{bits}-bit Pareto front (MRED vs PDP)"),
@@ -162,13 +161,8 @@ fn main() -> Result<()> {
                         .join(", ")
                 )
             })?;
-            let m: Box<dyn ApproxMultiplier> = if cname == "exact" {
-                Box::new(Exact::new(bits))
-            } else {
-                find_config(&cname, bits)
-                    .ok_or_else(|| anyhow::anyhow!("unknown config {cname:?} (try `list`)"))?
-            };
-            let r = workloads::evaluate(w.as_ref(), m.as_ref());
+            let m = resolve_config(&cname, bits)?;
+            let r = workloads::evaluate(w.as_ref(), m.as_ref())?;
             println!("{}: {}", r.workload, w.description());
             println!(
                 "quality under {}: PSNR {:.2} dB  SSIM {:.4}  MSE {:.2}  MARED {:.3}%  StdARED {:.3}%  ({} MACs via mul_batch)",
@@ -197,8 +191,7 @@ fn main() -> Result<()> {
             let lut: Arc<Vec<i32>> = if config == "exact" {
                 Arc::new(exact_lut())
             } else {
-                let m = find_config(&config, 8)
-                    .ok_or_else(|| anyhow::anyhow!("unknown config {config:?}"))?;
+                let m = resolve_config(&config, 8)?;
                 // Process-wide cache, shared with `serve` lanes.
                 cached_lut(m.as_ref())
             };
@@ -231,13 +224,15 @@ fn main() -> Result<()> {
             let st34 = ScaleTrim::new(8, 3, 4);
             let configs: Vec<&dyn ApproxMultiplier> = vec![&exact, &st48, &st34];
             let coord = Coordinator::new(backend, &configs, BatchPolicy::default());
-            let lanes = ["Exact8", "scaleTRIM(4,8)", "scaleTRIM(3,4)"];
+            // Typed lane routing: the specs are the lane keys, no string
+            // lookup on the submit path.
+            let lanes = [exact.spec(), st48.spec(), st34.spec()];
             let t0 = std::time::Instant::now();
             let mut pending = Vec::new();
             for i in 0..n_requests {
                 let img = data.image(i % data.n).to_vec();
                 let lane = lanes[i % lanes.len()];
-                pending.push((i, coord.submit(lane, img)?.1));
+                pending.push((i, coord.submit_spec(lane, img)?.1));
             }
             let mut correct = 0usize;
             for (i, rx) in pending {

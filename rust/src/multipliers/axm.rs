@@ -10,7 +10,7 @@
 //! (more aggressive, cheaper — matches the paper's MRED ordering
 //! 2.3 vs 8.7).
 
-use super::ApproxMultiplier;
+use super::{ApproxMultiplier, DesignSpec};
 
 /// AXM8-k behavioural model (k ∈ {3, 4}).
 #[derive(Debug, Clone)]
@@ -56,8 +56,11 @@ impl Axm {
 }
 
 impl ApproxMultiplier for Axm {
-    fn name(&self) -> String {
-        format!("AXM{}-{}", self.bits, self.k)
+    fn spec(&self) -> DesignSpec {
+        DesignSpec::Axm {
+            bits: self.bits,
+            k: self.k,
+        }
     }
     fn bits(&self) -> u32 {
         self.bits

@@ -10,11 +10,15 @@
 //! 256 KiB at 8 bits, 67 MiB at the 12-bit ceiling. Wider spaces cannot be
 //! tabulated; [`CompiledMul::compile`] asserts the bound.
 
-use super::ApproxMultiplier;
+use super::{ApproxMultiplier, DesignSpec};
 
 /// Product-table kernel compiled from a behavioural design.
 #[derive(Debug, Clone)]
 pub struct CompiledMul {
+    /// Identity of the source design — a compiled table is observably
+    /// identical to its source, so it shares the source's spec (and
+    /// therefore its LUT-cache slot and hardware model).
+    spec: DesignSpec,
     name: String,
     bits: u32,
     /// Row-major full product table: `table[(a << bits) | b] = mul(a, b)`.
@@ -54,6 +58,7 @@ impl CompiledMul {
             }
         }
         Self {
+            spec: m.spec(),
             name: format!("compiled[{}]", m.name()),
             bits,
             table,
@@ -67,6 +72,10 @@ impl CompiledMul {
 }
 
 impl ApproxMultiplier for CompiledMul {
+    fn spec(&self) -> DesignSpec {
+        self.spec
+    }
+
     fn name(&self) -> String {
         self.name.clone()
     }

@@ -6,7 +6,7 @@
 //! the expected value of the discarded tail), the rest is zeroed, and the two
 //! reduced operands feed an exact `m×m` multiplier plus a shift.
 
-use super::{leading_one, ApproxMultiplier};
+use super::{leading_one, ApproxMultiplier, DesignSpec};
 
 /// DRUM(m) behavioural model.
 #[derive(Debug, Clone)]
@@ -40,8 +40,8 @@ impl Drum {
 }
 
 impl ApproxMultiplier for Drum {
-    fn name(&self) -> String {
-        format!("DRUM({})", self.m)
+    fn spec(&self) -> DesignSpec {
+        DesignSpec::Drum { m: self.m }
     }
     fn bits(&self) -> u32 {
         self.bits

@@ -10,7 +10,7 @@
 //! segments feed an exact `m×m` multiplier; no error compensation is
 //! applied (Table 1).
 
-use super::{leading_one, ApproxMultiplier};
+use super::{leading_one, ApproxMultiplier, DesignSpec};
 
 /// DSM(m) behavioural model.
 #[derive(Debug, Clone)]
@@ -63,8 +63,8 @@ impl Dsm {
 }
 
 impl ApproxMultiplier for Dsm {
-    fn name(&self) -> String {
-        format!("DSM({})", self.m)
+    fn spec(&self) -> DesignSpec {
+        DesignSpec::Dsm { m: self.m }
     }
     fn bits(&self) -> u32 {
         self.bits

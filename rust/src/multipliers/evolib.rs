@@ -11,7 +11,7 @@
 //! MRED (measured: 0.018 / 0.078 / 0.56 / 5.2 %). See DESIGN.md
 //! §Substitutions.
 
-use super::ApproxMultiplier;
+use super::{ApproxMultiplier, DesignSpec};
 
 /// EvoLib-k surrogate: broken-array multiplier.
 #[derive(Debug, Clone)]
@@ -45,8 +45,8 @@ impl EvoLibSurrogate {
 }
 
 impl ApproxMultiplier for EvoLibSurrogate {
-    fn name(&self) -> String {
-        format!("EVO-lib{}", self.k)
+    fn spec(&self) -> DesignSpec {
+        DesignSpec::EvoLib { k: self.k }
     }
     fn bits(&self) -> u32 {
         self.bits

@@ -1,7 +1,7 @@
 //! Exact multiplier — the accuracy reference (`M_ACC` in Eq. 3) and the
 //! baseline row of Figs. 15/16 ("8-bit Accurate multiplier").
 
-use super::ApproxMultiplier;
+use super::{ApproxMultiplier, DesignSpec};
 
 /// Exact `n`-bit unsigned multiplier.
 #[derive(Debug, Clone)]
@@ -18,8 +18,8 @@ impl Exact {
 }
 
 impl ApproxMultiplier for Exact {
-    fn name(&self) -> String {
-        format!("Exact{}", self.bits)
+    fn spec(&self) -> DesignSpec {
+        DesignSpec::Exact { bits: self.bits }
     }
     fn bits(&self) -> u32 {
         self.bits

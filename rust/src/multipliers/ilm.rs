@@ -13,7 +13,7 @@
 //! `ILM-k` additionally truncates each mantissa magnitude to `k` fraction
 //! bits (`k = 0` means no truncation, the paper's ILM0).
 
-use super::{leading_one, ApproxMultiplier};
+use super::{leading_one, ApproxMultiplier, DesignSpec};
 
 /// ILM-k behavioural model.
 #[derive(Debug, Clone)]
@@ -62,8 +62,8 @@ impl Ilm {
 }
 
 impl ApproxMultiplier for Ilm {
-    fn name(&self) -> String {
-        format!("ILM{}", self.k)
+    fn spec(&self) -> DesignSpec {
+        DesignSpec::Ilm { k: self.k }
     }
     fn bits(&self) -> u32 {
         self.bits

@@ -5,7 +5,7 @@
 //! bits from the leading one (no unbiasing bit — that is DRUM's addition),
 //! the reduced operands feed an exact `t×t` multiplier plus shifts.
 
-use super::{leading_one, ApproxMultiplier};
+use super::{leading_one, ApproxMultiplier, DesignSpec};
 
 /// LETAM(t) behavioural model.
 #[derive(Debug, Clone)]
@@ -38,8 +38,8 @@ impl Letam {
 }
 
 impl ApproxMultiplier for Letam {
-    fn name(&self) -> String {
-        format!("LETAM({})", self.t)
+    fn spec(&self) -> DesignSpec {
+        DesignSpec::Letam { t: self.t }
     }
     fn bits(&self) -> u32 {
         self.bits

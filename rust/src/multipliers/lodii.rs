@@ -11,7 +11,7 @@
 //! the true position is odd and the bit below the leading one is clear
 //! (the dominant error case of their group-based detectors).
 
-use super::{leading_one, ApproxMultiplier};
+use super::{leading_one, ApproxMultiplier, DesignSpec};
 
 /// Mitchell_LODII-j behavioural model.
 #[derive(Debug, Clone)]
@@ -46,8 +46,8 @@ impl MitchellLodII {
 }
 
 impl ApproxMultiplier for MitchellLodII {
-    fn name(&self) -> String {
-        format!("Mitchell_LODII_{}", self.j)
+    fn spec(&self) -> DesignSpec {
+        DesignSpec::LodII { j: self.j }
     }
     fn bits(&self) -> u32 {
         self.bits

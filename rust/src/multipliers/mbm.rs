@@ -7,7 +7,7 @@
 //! fixed position before the logarithmic approximation; the bias constant
 //! is calibrated offline over the full operand space (cached per config).
 
-use super::{leading_one, ApproxMultiplier};
+use super::{leading_one, ApproxMultiplier, DesignSpec};
 use std::collections::HashMap;
 use std::sync::Mutex;
 
@@ -55,8 +55,8 @@ impl Mbm {
 }
 
 impl ApproxMultiplier for Mbm {
-    fn name(&self) -> String {
-        format!("MBM-{}", self.k)
+    fn spec(&self) -> DesignSpec {
+        DesignSpec::Mbm { k: self.k }
     }
     fn bits(&self) -> u32 {
         self.bits

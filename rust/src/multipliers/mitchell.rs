@@ -12,7 +12,7 @@
 //! (`bits-1` fraction bits per operand), matching a hardware implementation
 //! with no mantissa truncation.
 
-use super::{leading_one, ApproxMultiplier};
+use super::{leading_one, ApproxMultiplier, DesignSpec};
 
 /// Mitchell behavioural model.
 #[derive(Debug, Clone)]
@@ -28,8 +28,8 @@ impl Mitchell {
 }
 
 impl ApproxMultiplier for Mitchell {
-    fn name(&self) -> String {
-        "Mitchell".to_string()
+    fn spec(&self) -> DesignSpec {
+        DesignSpec::Mitchell
     }
     fn bits(&self) -> u32 {
         self.bits

@@ -55,6 +55,7 @@ pub mod piecewise;
 pub mod roba;
 pub mod scaletrim;
 pub mod scdm;
+pub mod spec;
 pub mod tosam;
 
 pub use axm::Axm;
@@ -73,6 +74,7 @@ pub use piecewise::PiecewiseLinear;
 pub use roba::Roba;
 pub use scaletrim::ScaleTrim;
 pub use scdm::Scdm;
+pub use spec::{DesignSpec, ParseSpecError};
 pub use tosam::Tosam;
 
 /// An `n`-bit unsigned approximate multiplier behavioural model.
@@ -80,8 +82,19 @@ pub use tosam::Tosam;
 /// Implementations must be pure (no interior mutability on the `mul` path) so
 /// sweeps can share one instance across threads.
 pub trait ApproxMultiplier: Send + Sync {
-    /// Display name, matching the paper's config labels (e.g. `scaleTRIM(3,4)`).
-    fn name(&self) -> String;
+    /// Typed identity of this configuration — the single key every
+    /// identity-consuming layer (hardware model, LUT cache, coordinator
+    /// lanes, DSE points) routes on. For zoo designs
+    /// `spec().build(bits())` reconstructs an observably identical
+    /// instance.
+    fn spec(&self) -> DesignSpec;
+
+    /// Display name, matching the paper's config labels (e.g.
+    /// `scaleTRIM(3,4)`). Default: the spec's label; wrappers that decorate
+    /// another design (e.g. [`CompiledMul`]) override it.
+    fn name(&self) -> String {
+        self.spec().to_string()
+    }
 
     /// Operand bit-width `n`; `mul` accepts operands in `[0, 2^n)`.
     fn bits(&self) -> u32;
@@ -150,84 +163,28 @@ pub fn truncate_fraction(v: u64, n: u32, h: u32) -> u64 {
 }
 
 /// All 8-bit configurations evaluated in the paper's Fig. 9 / Table 4, in
-/// paper order. The central registry used by the DSE and repro harnesses.
+/// paper order. The central registry used by the DSE and repro harnesses —
+/// regenerated from [`DesignSpec::enumerate`]'s data tables, so the
+/// registry and the typed identity plane can never drift apart.
 pub fn paper_configs_8bit() -> Vec<Box<dyn ApproxMultiplier>> {
-    let bits = 8;
-    let mut v: Vec<Box<dyn ApproxMultiplier>> = Vec::new();
-    for k in 1..=5 {
-        v.push(Box::new(Mbm::new(bits, k)));
-    }
-    v.push(Box::new(Mitchell::new(bits)));
-    for m in 3..=7 {
-        v.push(Box::new(Dsm::new(bits, m)));
-    }
-    for m in 3..=7 {
-        v.push(Box::new(Drum::new(bits, m)));
-    }
-    for (t, h) in [
-        (0, 2),
-        (1, 2),
-        (0, 3),
-        (1, 3),
-        (2, 3),
-        (0, 4),
-        (1, 4),
-        (2, 4),
-        (3, 4),
-        (0, 5),
-        (1, 5),
-        (2, 5),
-        (3, 5),
-        (0, 6),
-        (2, 6),
-        (2, 7),
-        (3, 7),
-    ] {
-        v.push(Box::new(Tosam::new(bits, t, h)));
-    }
-    for h in 2..=7 {
-        for m in [0, 4, 8] {
-            v.push(Box::new(ScaleTrim::new(bits, h, m)));
-        }
-    }
-    for k in 1..=4 {
-        v.push(Box::new(EvoLibSurrogate::new(bits, k)));
-    }
-    v.push(Box::new(Ilm::new(bits, 0)));
-    v.push(Box::new(Ilm::new(bits, 5)));
-    v.push(Box::new(Axm::new(bits, 4)));
-    v.push(Box::new(Axm::new(bits, 3)));
-    v.push(Box::new(MitchellLodII::new(bits, 0)));
-    v.push(Box::new(MitchellLodII::new(bits, 4)));
-    v.push(Box::new(Scdm::new(bits, 4)));
-    v.push(Box::new(Scdm::new(bits, 6)));
-    v.push(Box::new(Msamz::new(bits, 4, 4)));
-    v
+    build_zoo(8)
 }
 
-/// Representative 16-bit configurations (paper Fig. 10).
+/// Representative 16-bit configurations (paper Fig. 10); see
+/// [`paper_configs_8bit`].
 pub fn paper_configs_16bit() -> Vec<Box<dyn ApproxMultiplier>> {
-    let bits = 16;
-    let mut v: Vec<Box<dyn ApproxMultiplier>> = Vec::new();
-    v.push(Box::new(Mitchell::new(bits)));
-    for k in 1..=4 {
-        v.push(Box::new(Mbm::new(bits, k)));
-    }
-    for m in 3..=8 {
-        v.push(Box::new(Drum::new(bits, m)));
-    }
-    for m in 4..=8 {
-        v.push(Box::new(Dsm::new(bits, m)));
-    }
-    for (t, h) in [(0, 3), (1, 3), (2, 4), (3, 5), (1, 6), (2, 6), (3, 7)] {
-        v.push(Box::new(Tosam::new(bits, t, h)));
-    }
-    for h in 3..=8 {
-        for m in [0, 4, 8] {
-            v.push(Box::new(ScaleTrim::new(bits, h, m)));
-        }
-    }
-    v
+    build_zoo(16)
+}
+
+fn build_zoo(bits: u32) -> Vec<Box<dyn ApproxMultiplier>> {
+    DesignSpec::enumerate(bits)
+        .expect("registry widths are always enumerable")
+        .iter()
+        .map(|s| {
+            s.build(bits)
+                .unwrap_or_else(|e| panic!("registry spec {s} invalid at {bits} bits: {e}"))
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -293,6 +250,19 @@ mod tests {
         let before = names.len();
         names.dedup();
         assert_eq!(before, names.len(), "duplicate config names in 16-bit registry");
+    }
+
+    #[test]
+    fn registries_are_generated_from_enumerate() {
+        for bits in [8u32, 16] {
+            let zoo = build_zoo(bits);
+            let specs = DesignSpec::enumerate(bits).unwrap();
+            assert_eq!(zoo.len(), specs.len());
+            for (m, s) in zoo.iter().zip(&specs) {
+                assert_eq!(m.spec(), *s, "instance/spec drift at {bits} bits");
+                assert_eq!(m.name(), s.to_string(), "name must be the spec label");
+            }
+        }
     }
 
     #[test]

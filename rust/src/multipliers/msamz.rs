@@ -8,7 +8,7 @@
 //! bitwise OR of the contributing operand bits — cheap, biased-high), and
 //! anything below is dropped.
 
-use super::{leading_one, ApproxMultiplier};
+use super::{leading_one, ApproxMultiplier, DesignSpec};
 
 /// MSAMZ(k, m) behavioural model (one-dominating variant with
 /// compensation).
@@ -41,8 +41,8 @@ impl Msamz {
 }
 
 impl ApproxMultiplier for Msamz {
-    fn name(&self) -> String {
-        format!("MSAMZ({},{})", self.k, self.m)
+    fn spec(&self) -> DesignSpec {
+        DesignSpec::Msamz { k: self.k, m: self.m }
     }
     fn bits(&self) -> u32 {
         self.bits

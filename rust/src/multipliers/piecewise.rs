@@ -7,7 +7,7 @@
 //! scaleTRIM (two constants per segment, full-precision multiply by α_s),
 //! traded for local fit quality — exactly the comparison Table 3 makes.
 
-use super::{leading_one, truncate_fraction, ApproxMultiplier};
+use super::{leading_one, truncate_fraction, ApproxMultiplier, DesignSpec};
 use std::collections::HashMap;
 use std::sync::Mutex;
 
@@ -45,8 +45,11 @@ impl PiecewiseLinear {
 }
 
 impl ApproxMultiplier for PiecewiseLinear {
-    fn name(&self) -> String {
-        format!("Piecewise(h={},S={})", self.h, self.segments)
+    fn spec(&self) -> DesignSpec {
+        DesignSpec::Piecewise {
+            h: self.h,
+            s: self.segments,
+        }
     }
     fn bits(&self) -> u32 {
         self.bits

@@ -9,7 +9,7 @@
 //!   A×B ≈ A_r·B + A·B_r − A_r·B_r
 //! ```
 
-use super::{leading_one, ApproxMultiplier};
+use super::{leading_one, ApproxMultiplier, DesignSpec};
 
 /// RoBA behavioural model.
 #[derive(Debug, Clone)]
@@ -42,8 +42,8 @@ impl Roba {
 }
 
 impl ApproxMultiplier for Roba {
-    fn name(&self) -> String {
-        "RoBA".to_string()
+    fn spec(&self) -> DesignSpec {
+        DesignSpec::Roba
     }
     fn bits(&self) -> u32 {
         self.bits

@@ -17,7 +17,7 @@
 //! Constants (α, ΔEE, C_i) come from the design-time calibration in
 //! [`crate::lut`]; they are cached process-wide.
 
-use super::{leading_one, truncate_fraction, ApproxMultiplier};
+use super::{leading_one, truncate_fraction, ApproxMultiplier, DesignSpec};
 use crate::lut::{cached_params, ScaleTrimParams, COMP_FRAC_BITS};
 
 /// scaleTRIM(h, M) behavioural model at a given bit-width.
@@ -65,8 +65,11 @@ impl ScaleTrim {
 }
 
 impl ApproxMultiplier for ScaleTrim {
-    fn name(&self) -> String {
-        format!("scaleTRIM({},{})", self.params.h, self.params.m)
+    fn spec(&self) -> DesignSpec {
+        DesignSpec::ScaleTrim {
+            h: self.params.h,
+            m: self.params.m,
+        }
     }
 
     fn bits(&self) -> u32 {

@@ -7,7 +7,7 @@
 //! the sum bit of its partial products; the carries that would ripple into
 //! higher columns are dropped. Columns ≥ `k` accumulate exactly.
 
-use super::ApproxMultiplier;
+use super::{ApproxMultiplier, DesignSpec};
 
 /// SCDM-k behavioural model.
 #[derive(Debug, Clone)]
@@ -25,8 +25,11 @@ impl Scdm {
 }
 
 impl ApproxMultiplier for Scdm {
-    fn name(&self) -> String {
-        format!("SCDM{}-{}", self.bits, self.k)
+    fn spec(&self) -> DesignSpec {
+        DesignSpec::Scdm {
+            bits: self.bits,
+            k: self.k,
+        }
     }
     fn bits(&self) -> u32 {
         self.bits

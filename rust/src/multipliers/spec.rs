@@ -1,0 +1,984 @@
+//! `DesignSpec` — the typed identity of every configuration in the zoo.
+//!
+//! The paper's central object is a *family* of multipliers parameterised by
+//! truncation width `h` and segment count `M`; this module makes that family
+//! first-class. A `DesignSpec` is a plain-data enum with one variant per
+//! design family, and it is the single source of truth for configuration
+//! identity across the system:
+//!
+//! - [`Display`](std::fmt::Display) renders the exact paper label
+//!   (`scaleTRIM(3,4)`, `TOSAM(1,5)`, `MBM-2`, …);
+//! - [`FromStr`](std::str::FromStr) parses a label back — the round trip is
+//!   lossless, and a failed parse yields a [`ParseSpecError`] that names the
+//!   nearest registered labels instead of a silent `None`;
+//! - [`DesignSpec::build`] constructs the behavioural model in O(1) without
+//!   materialising the zoo;
+//! - [`DesignSpec::enumerate`] regenerates the paper's 8- and 16-bit
+//!   registries from data tables;
+//! - [`DesignSpec::to_json`] / [`DesignSpec::from_json`] make specs wire-
+//!   and artifact-safe through [`crate::util::json`].
+//!
+//! Three families pin their operand width inside the label itself
+//! (`Exact8`, `AXM8-4`, `SCDM8-4`); their variants carry `bits` so the
+//! label round-trips, and [`DesignSpec::build`] rejects a mismatched width
+//! with a typed error.
+
+use super::{
+    ApproxMultiplier, Axm, Drum, Dsm, EvoLibSurrogate, Exact, Ilm, Letam, Mbm, Mitchell,
+    MitchellLodII, Msamz, PiecewiseLinear, Roba, ScaleTrim, Scdm, Tosam,
+};
+use crate::util::json::Json;
+use std::fmt;
+use std::str::FromStr;
+
+/// Typed identity of one zoo configuration: family + parameters.
+///
+/// `Display` renders the paper label, `FromStr` parses it back (lossless),
+/// and [`DesignSpec::build`] turns the spec into a behavioural model at a
+/// given operand width. Equality/hashing over specs replaces every string
+/// comparison the system used to do (LUT cache keys, coordinator lanes,
+/// hardware-model dispatch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DesignSpec {
+    /// scaleTRIM(h, M) — this paper (truncation + linearization + LUT
+    /// compensation); `m == 0` disables compensation.
+    ScaleTrim {
+        /// Truncation width `h` (≥ 2; the ΔEE fit needs α < 2).
+        h: u32,
+        /// Compensation segment count `M` (0 or a power of two).
+        m: u32,
+    },
+    /// TOSAM(t, h) — truncation + rounding (Vahdat'19); the evaluated
+    /// family has `t < h`.
+    Tosam {
+        /// Rounded multiplier-part width `t`.
+        t: u32,
+        /// Truncated adder-part width `h`.
+        h: u32,
+    },
+    /// DRUM(m) — dynamic-range unbiased truncation (Hashemi'15).
+    Drum {
+        /// Kept dynamic range `m` (≥ 2).
+        m: u32,
+    },
+    /// DSM(m) — static segment method (Narayanamoorthy'15).
+    Dsm {
+        /// Segment width `m` (≥ 2).
+        m: u32,
+    },
+    /// Mitchell'62 logarithmic multiplier.
+    Mitchell,
+    /// MBM-k — minimally-biased Mitchell (Saadat'18).
+    Mbm {
+        /// Truncation level `k` (≥ 1).
+        k: u32,
+    },
+    /// ILM-k — improved (nearest-one) logarithmic multiplier (Ansari'21).
+    Ilm {
+        /// Operand-truncation level `k` (0 = untruncated).
+        k: u32,
+    },
+    /// Mitchell with approximate leading-one detector (Ansari'21).
+    LodII {
+        /// LOD approximation level `j`.
+        j: u32,
+    },
+    /// AXM — recursive approximate MAC (Deepsita'23). Width-pinned: the
+    /// label embeds the operand width (e.g. `AXM8-4`).
+    Axm {
+        /// Operand width baked into the design point.
+        bits: u32,
+        /// Accuracy level `k` (3 or 4).
+        k: u32,
+    },
+    /// SCDM — carry-disregard array multiplier (Shakibhamedan'24).
+    /// Width-pinned like AXM (e.g. `SCDM8-4`).
+    Scdm {
+        /// Operand width baked into the design point.
+        bits: u32,
+        /// Number of carry-free low columns `k` (< 2·bits).
+        k: u32,
+    },
+    /// MSAMZ(k, m) — MSB-guided shift-add multiplier (Huang'24).
+    Msamz {
+        /// Correction-adder width `k`.
+        k: u32,
+        /// Kept MSB width `m` (≥ 1).
+        m: u32,
+    },
+    /// Piecewise(h=…,S=…) — piecewise linearization (Sec. IV-D ablation).
+    Piecewise {
+        /// Truncation width `h` (≥ 1).
+        h: u32,
+        /// Segment count `S` (≥ 1).
+        s: u32,
+    },
+    /// EVO-lib-k — broken-array surrogates (Mrazek'17), k ∈ 1..=4.
+    EvoLib {
+        /// Library point `k` (1..=4).
+        k: u32,
+    },
+    /// LETAM(t) — truncation multiplier (Vahdat'17).
+    Letam {
+        /// Kept width `t` (≥ 2).
+        t: u32,
+    },
+    /// RoBA — rounding to powers of two (Zendegani'17).
+    Roba,
+    /// Exact array multiplier baseline. Width-pinned: the label embeds the
+    /// operand width (e.g. `Exact8`).
+    Exact {
+        /// Operand width baked into the design point (2..=32).
+        bits: u32,
+    },
+}
+
+/// Parse failure for a configuration label: the offending input, the
+/// reason, and the nearest registered labels (edit distance over both
+/// zoos), so an `--config` typo points at the fix instead of a bare
+/// "unknown config".
+#[derive(Debug, Clone)]
+pub struct ParseSpecError {
+    /// The label that failed to parse.
+    pub input: String,
+    /// Human-readable reason (wrong arity, out-of-range parameter, …).
+    pub reason: String,
+    /// Closest registered labels, best first (may be empty).
+    pub suggestions: Vec<String>,
+}
+
+impl ParseSpecError {
+    fn new(input: &str, reason: String) -> Self {
+        Self {
+            suggestions: nearest_labels(input, 3),
+            input: input.to_string(),
+            reason,
+        }
+    }
+}
+
+impl fmt::Display for ParseSpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "unknown config {:?}: {}", self.input, self.reason)?;
+        if !self.suggestions.is_empty() {
+            write!(f, " (nearest registered: {})", self.suggestions.join(", "))?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for ParseSpecError {}
+
+impl fmt::Display for DesignSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            DesignSpec::ScaleTrim { h, m } => write!(f, "scaleTRIM({h},{m})"),
+            DesignSpec::Tosam { t, h } => write!(f, "TOSAM({t},{h})"),
+            DesignSpec::Drum { m } => write!(f, "DRUM({m})"),
+            DesignSpec::Dsm { m } => write!(f, "DSM({m})"),
+            DesignSpec::Mitchell => write!(f, "Mitchell"),
+            DesignSpec::Mbm { k } => write!(f, "MBM-{k}"),
+            DesignSpec::Ilm { k } => write!(f, "ILM{k}"),
+            DesignSpec::LodII { j } => write!(f, "Mitchell_LODII_{j}"),
+            DesignSpec::Axm { bits, k } => write!(f, "AXM{bits}-{k}"),
+            DesignSpec::Scdm { bits, k } => write!(f, "SCDM{bits}-{k}"),
+            DesignSpec::Msamz { k, m } => write!(f, "MSAMZ({k},{m})"),
+            DesignSpec::Piecewise { h, s } => write!(f, "Piecewise(h={h},S={s})"),
+            DesignSpec::EvoLib { k } => write!(f, "EVO-lib{k}"),
+            DesignSpec::Letam { t } => write!(f, "LETAM({t})"),
+            DesignSpec::Roba => write!(f, "RoBA"),
+            DesignSpec::Exact { bits } => write!(f, "Exact{bits}"),
+        }
+    }
+}
+
+/// Ceiling on any spec parameter (enforced by `validate_params`, hence by
+/// the label grammar, JSON deserialisation and `build` alike). Every
+/// family parameter is a bit-width, shift amount or segment count —
+/// nothing legitimate exceeds this, and capping keeps later width
+/// arithmetic (`2·bits`, `m + k`) overflow-free by construction.
+const PARAM_MAX: u32 = 64;
+
+fn check_param(family: &str, v: u32) -> Result<u32, String> {
+    if v > PARAM_MAX {
+        Err(format!("{family}: parameter {v} out of range (max {PARAM_MAX})"))
+    } else {
+        Ok(v)
+    }
+}
+
+/// Split a `"(a,b)"` suffix into exactly two raw comma-separated parts.
+fn two_parts<'a>(family: &str, rest: &'a str) -> Result<(&'a str, &'a str), String> {
+    let inner = rest
+        .strip_prefix('(')
+        .and_then(|r| r.strip_suffix(')'))
+        .ok_or_else(|| format!("{family} takes \"(a,b)\" after the family name, got {rest:?}"))?;
+    let parts: Vec<&str> = inner.split(',').collect();
+    if parts.len() != 2 {
+        return Err(format!(
+            "{family} takes exactly two comma-separated parameters, got {} in {rest:?}",
+            parts.len()
+        ));
+    }
+    Ok((parts[0].trim(), parts[1].trim()))
+}
+
+fn int_param(family: &str, p: &str) -> Result<u32, String> {
+    p.parse()
+        .map_err(|_| format!("{family}: {p:?} is not an integer parameter"))
+}
+
+/// Split a bare `"(a,b)"` suffix into exactly two `u32`s.
+fn two_args(family: &str, rest: &str) -> Result<(u32, u32), String> {
+    let (a, b) = two_parts(family, rest)?;
+    Ok((int_param(family, a)?, int_param(family, b)?))
+}
+
+/// Split a keyed `"(k1N,k2M)"` suffix (e.g. `Piecewise(h=4,S=4)`): each
+/// key must appear on its own position — `Piecewise(S=2,h=8)` is a typed
+/// error, not a silent transposition.
+fn two_args_keyed(
+    family: &str,
+    rest: &str,
+    k1: &str,
+    k2: &str,
+) -> Result<(u32, u32), String> {
+    let (a, b) = two_parts(family, rest)?;
+    let a = a
+        .strip_prefix(k1)
+        .ok_or_else(|| format!("{family}: first parameter must be \"{k1}<int>\", got {a:?}"))?;
+    let b = b
+        .strip_prefix(k2)
+        .ok_or_else(|| format!("{family}: second parameter must be \"{k2}<int>\", got {b:?}"))?;
+    Ok((int_param(family, a)?, int_param(family, b)?))
+}
+
+/// Split a `"(a)"` suffix into one `u32`.
+fn one_arg(family: &str, rest: &str) -> Result<u32, String> {
+    let inner = rest
+        .strip_prefix('(')
+        .and_then(|r| r.strip_suffix(')'))
+        .ok_or_else(|| format!("{family} takes \"(m)\" after the family name, got {rest:?}"))?;
+    inner
+        .trim()
+        .parse()
+        .map_err(|_| format!("{family}: {:?} is not an integer parameter", inner.trim()))
+}
+
+/// Split a `"{bits}-{k}"` body (the width-pinned AXM/SCDM label form).
+fn bits_dash_k(family: &str, rest: &str) -> Result<(u32, u32), String> {
+    let (b, k) = rest
+        .split_once('-')
+        .ok_or_else(|| format!("{family} labels look like \"{family}<bits>-<k>\", got {rest:?}"))?;
+    let bits: u32 = b
+        .parse()
+        .map_err(|_| format!("{family}: width {b:?} is not an integer"))?;
+    let k: u32 = k
+        .parse()
+        .map_err(|_| format!("{family}: level {k:?} is not an integer"))?;
+    Ok((bits, k))
+}
+
+impl FromStr for DesignSpec {
+    type Err = ParseSpecError;
+
+    /// Parse a paper label back into its spec. The grammar is exactly what
+    /// [`Display`](std::fmt::Display) emits; family-intrinsic parameter
+    /// rules (those that do not depend on the operand width) are enforced
+    /// here, width-dependent rules in [`DesignSpec::build`].
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let s = s.trim();
+        parse_label(s).map_err(|reason| ParseSpecError::new(s, reason))
+    }
+}
+
+fn parse_label(s: &str) -> Result<DesignSpec, String> {
+    let spec = parse_syntax(s)?;
+    spec.validate_params()?;
+    Ok(spec)
+}
+
+/// Label shape → spec, no parameter-rule checks (those live in
+/// [`DesignSpec::validate_params`], shared with `build` and `from_json`).
+fn parse_syntax(s: &str) -> Result<DesignSpec, String> {
+    if s.is_empty() {
+        return Err("empty label".into());
+    }
+    // Longest-prefix families first (Mitchell_LODII_ before Mitchell).
+    if let Some(j) = s.strip_prefix("Mitchell_LODII_") {
+        let j: u32 = j
+            .parse()
+            .map_err(|_| format!("Mitchell_LODII level {j:?} is not an integer"))?;
+        return Ok(DesignSpec::LodII { j });
+    }
+    if s == "Mitchell" {
+        return Ok(DesignSpec::Mitchell);
+    }
+    if s == "RoBA" {
+        return Ok(DesignSpec::Roba);
+    }
+    if let Some(rest) = s.strip_prefix("scaleTRIM") {
+        let (h, m) = two_args("scaleTRIM", rest)?;
+        return Ok(DesignSpec::ScaleTrim { h, m });
+    }
+    if let Some(rest) = s.strip_prefix("TOSAM") {
+        let (t, h) = two_args("TOSAM", rest)?;
+        return Ok(DesignSpec::Tosam { t, h });
+    }
+    if let Some(rest) = s.strip_prefix("DRUM") {
+        return Ok(DesignSpec::Drum { m: one_arg("DRUM", rest)? });
+    }
+    if let Some(rest) = s.strip_prefix("DSM") {
+        return Ok(DesignSpec::Dsm { m: one_arg("DSM", rest)? });
+    }
+    if let Some(k) = s.strip_prefix("MBM-") {
+        let k: u32 = k
+            .parse()
+            .map_err(|_| format!("MBM level {k:?} is not an integer"))?;
+        return Ok(DesignSpec::Mbm { k });
+    }
+    if let Some(k) = s.strip_prefix("ILM") {
+        let k: u32 = k
+            .parse()
+            .map_err(|_| format!("ILM level {k:?} is not an integer"))?;
+        return Ok(DesignSpec::Ilm { k });
+    }
+    if let Some(rest) = s.strip_prefix("AXM") {
+        let (bits, k) = bits_dash_k("AXM", rest)?;
+        return Ok(DesignSpec::Axm { bits, k });
+    }
+    if let Some(rest) = s.strip_prefix("SCDM") {
+        let (bits, k) = bits_dash_k("SCDM", rest)?;
+        return Ok(DesignSpec::Scdm { bits, k });
+    }
+    if let Some(rest) = s.strip_prefix("MSAMZ") {
+        let (k, m) = two_args("MSAMZ", rest)?;
+        return Ok(DesignSpec::Msamz { k, m });
+    }
+    if let Some(rest) = s.strip_prefix("Piecewise") {
+        let (h, seg) = two_args_keyed("Piecewise", rest, "h=", "S=")?;
+        return Ok(DesignSpec::Piecewise { h, s: seg });
+    }
+    if let Some(k) = s.strip_prefix("EVO-lib") {
+        let k: u32 = k
+            .parse()
+            .map_err(|_| format!("EVO-lib point {k:?} is not an integer"))?;
+        return Ok(DesignSpec::EvoLib { k });
+    }
+    if let Some(rest) = s.strip_prefix("LETAM") {
+        return Ok(DesignSpec::Letam { t: one_arg("LETAM", rest)? });
+    }
+    if let Some(b) = s.strip_prefix("Exact") {
+        if b.is_empty() {
+            return Err("Exact labels carry the width, e.g. \"Exact8\"".into());
+        }
+        let bits: u32 = b
+            .parse()
+            .map_err(|_| format!("Exact width {b:?} is not an integer"))?;
+        return Ok(DesignSpec::Exact { bits });
+    }
+    Err("no design family with this name".into())
+}
+
+impl DesignSpec {
+    /// Family-intrinsic parameter rules — the width-independent half of
+    /// validity, shared by the label grammar, [`DesignSpec::from_json`]
+    /// and [`DesignSpec::build`] (the fields are plain data, so specs can
+    /// arrive unvalidated through direct construction). Width-dependent
+    /// rules live in [`DesignSpec::validate_for`].
+    fn validate_params(&self) -> Result<(), String> {
+        use DesignSpec::*;
+        // Cap every parameter first so later width arithmetic (`2·bits`,
+        // `m + k`) cannot overflow. Every variant carries at most two
+        // numeric fields; 0 pads the unused slot.
+        let (p1, p2) = match *self {
+            ScaleTrim { h, m } => (h, m),
+            Tosam { t, h } => (t, h),
+            Drum { m } | Dsm { m } => (m, 0),
+            Mbm { k } | Ilm { k } | EvoLib { k } => (k, 0),
+            LodII { j } => (j, 0),
+            Axm { bits, k } | Scdm { bits, k } => (bits, k),
+            Msamz { k, m } => (k, m),
+            Piecewise { h, s } => (h, s),
+            Letam { t } => (t, 0),
+            Exact { bits } => (bits, 0),
+            Mitchell | Roba => (0, 0),
+        };
+        check_param(self.family(), p1)?;
+        check_param(self.family(), p2)?;
+        match *self {
+            ScaleTrim { h, m } => {
+                if h < 2 {
+                    return Err(format!(
+                        "scaleTRIM h must be >= 2 (the ΔEE fit needs α < 2), got {h}"
+                    ));
+                }
+                if h > 12 {
+                    return Err(format!("scaleTRIM h must be <= 12 (calibration cap), got {h}"));
+                }
+                if m != 0 && !m.is_power_of_two() {
+                    return Err(format!("scaleTRIM M must be 0 or a power of two, got {m}"));
+                }
+            }
+            Tosam { t, h } => {
+                if h < 1 {
+                    return Err("TOSAM h must be >= 1".into());
+                }
+                if t >= h {
+                    return Err(format!(
+                        "TOSAM(t,h) requires t < h (the paper evaluates t ∈ 0..=3, h ∈ 2..=7), got t={t} h={h}"
+                    ));
+                }
+            }
+            Drum { m } => {
+                if m < 2 {
+                    return Err(format!("DRUM m must be >= 2, got {m}"));
+                }
+            }
+            Dsm { m } => {
+                if m < 2 {
+                    return Err(format!("DSM m must be >= 2, got {m}"));
+                }
+            }
+            Mbm { k } => {
+                if k < 1 {
+                    return Err("MBM k must be >= 1".into());
+                }
+            }
+            Axm { bits, k } => {
+                if !(bits.is_power_of_two() && bits >= 4) {
+                    return Err(format!("AXM width must be a power of two >= 4, got {bits}"));
+                }
+                if !(k == 3 || k == 4) {
+                    return Err(format!("AXM accuracy level must be 3 or 4, got {k}"));
+                }
+            }
+            Scdm { bits, k } => {
+                if bits < 2 {
+                    return Err(format!("SCDM width must be >= 2, got {bits}"));
+                }
+                if k >= 2 * bits {
+                    return Err(format!("SCDM k must be < 2·bits = {}, got {k}", 2 * bits));
+                }
+            }
+            Msamz { m, .. } => {
+                if m < 1 {
+                    return Err("MSAMZ m must be >= 1".into());
+                }
+            }
+            Piecewise { h, s } => {
+                if h < 1 || s < 1 {
+                    return Err(format!("Piecewise needs h >= 1 and S >= 1, got h={h} S={s}"));
+                }
+            }
+            EvoLib { k } => {
+                if !(1..=4).contains(&k) {
+                    return Err(format!("EVO-lib points are 1..=4, got {k}"));
+                }
+            }
+            Letam { t } => {
+                if t < 2 {
+                    return Err(format!("LETAM t must be >= 2, got {t}"));
+                }
+            }
+            Exact { bits } => {
+                if !(2..=32).contains(&bits) {
+                    return Err(format!("Exact width must be in 2..=32, got {bits}"));
+                }
+            }
+            Mitchell | Ilm { .. } | LodII { .. } | Roba => {}
+        }
+        Ok(())
+    }
+
+    /// Width-dependent validity check: does this spec describe a buildable
+    /// configuration at operand width `bits`? Mirrors (and fronts) every
+    /// constructor assertion so [`DesignSpec::build`] returns a typed error
+    /// instead of panicking.
+    pub fn validate_for(&self, bits: u32) -> crate::Result<()> {
+        use DesignSpec::*;
+        anyhow::ensure!((2..=32).contains(&bits), "operand width must be in 2..=32, got {bits}");
+        match *self {
+            ScaleTrim { h, .. } => {
+                anyhow::ensure!(
+                    (4..=24).contains(&bits),
+                    "{self} supports widths 4..=24, got {bits}"
+                );
+                anyhow::ensure!(h < bits, "{self} needs h < bits, got h={h} at {bits} bits");
+            }
+            Tosam { h, .. } => {
+                anyhow::ensure!(h < bits, "{self} needs h < bits, got h={h} at {bits} bits");
+            }
+            Drum { m } => {
+                anyhow::ensure!(m <= bits, "{self} needs m <= bits, got m={m} at {bits} bits");
+            }
+            Dsm { m } => {
+                anyhow::ensure!(m < bits, "{self} needs m < bits, got m={m} at {bits} bits");
+            }
+            Mbm { k } => {
+                anyhow::ensure!(k < bits, "{self} needs k < bits, got k={k} at {bits} bits");
+            }
+            Letam { t } => {
+                anyhow::ensure!(t <= bits, "{self} needs t <= bits, got t={t} at {bits} bits");
+            }
+            Piecewise { h, .. } => {
+                anyhow::ensure!(h < bits, "{self} needs h < bits, got h={h} at {bits} bits");
+            }
+            Msamz { k, m } => {
+                // checked: specs are plain data, so `m`/`k` can arrive
+                // unvalidated through direct construction.
+                anyhow::ensure!(
+                    m.checked_add(k).is_some_and(|s| s <= 2 * bits),
+                    "{self} needs m + k <= 2·bits, got {m}+{k} at {bits} bits"
+                );
+            }
+            Axm { bits: b, .. } | Scdm { bits: b, .. } | Exact { bits: b } => {
+                anyhow::ensure!(
+                    b == bits,
+                    "wrong width: {self} is pinned to {b}-bit operands, cannot build at {bits} bits"
+                );
+            }
+            Mitchell | Ilm { .. } | LodII { .. } | EvoLib { .. } | Roba => {}
+        }
+        Ok(())
+    }
+
+    /// Construct the behavioural model for this spec at operand width
+    /// `bits` — O(1), no zoo materialisation. Returns a typed error when
+    /// the spec is invalid at this width (see [`DesignSpec::validate_for`])
+    /// or carries intrinsically invalid parameters (possible through
+    /// direct construction — the fields are plain data), so it never
+    /// panics inside a constructor assertion.
+    pub fn build(&self, bits: u32) -> crate::Result<Box<dyn ApproxMultiplier>> {
+        self.validate_params()
+            .map_err(|e| anyhow::anyhow!("invalid spec {self}: {e}"))?;
+        self.validate_for(bits)?;
+        use DesignSpec::*;
+        Ok(match *self {
+            ScaleTrim { h, m } => Box::new(self::ScaleTrim::new(bits, h, m)),
+            Tosam { t, h } => Box::new(self::Tosam::new(bits, t, h)),
+            Drum { m } => Box::new(self::Drum::new(bits, m)),
+            Dsm { m } => Box::new(self::Dsm::new(bits, m)),
+            Mitchell => Box::new(self::Mitchell::new(bits)),
+            Mbm { k } => Box::new(self::Mbm::new(bits, k)),
+            Ilm { k } => Box::new(self::Ilm::new(bits, k)),
+            LodII { j } => Box::new(MitchellLodII::new(bits, j)),
+            Axm { bits: b, k } => Box::new(self::Axm::new(b, k)),
+            Scdm { bits: b, k } => Box::new(self::Scdm::new(b, k)),
+            Msamz { k, m } => Box::new(self::Msamz::new(bits, k, m)),
+            Piecewise { h, s } => Box::new(PiecewiseLinear::new(bits, h, s)),
+            EvoLib { k } => Box::new(EvoLibSurrogate::new(bits, k)),
+            Letam { t } => Box::new(self::Letam::new(bits, t)),
+            Roba => Box::new(self::Roba::new(bits)),
+            Exact { bits: b } => Box::new(self::Exact::new(b)),
+        })
+    }
+
+    /// The paper's registered configurations at a given width, in paper
+    /// order — the data tables behind `paper_configs_8bit` (Fig. 9 /
+    /// Table 4) and `paper_configs_16bit` (Fig. 10). Widths other than 8
+    /// and 16 are a typed error, not an empty list.
+    pub fn enumerate(bits: u32) -> crate::Result<Vec<DesignSpec>> {
+        use DesignSpec::*;
+        match bits {
+            8 => {
+                let mut v = Vec::new();
+                for k in 1..=5 {
+                    v.push(Mbm { k });
+                }
+                v.push(Mitchell);
+                for m in 3..=7 {
+                    v.push(Dsm { m });
+                }
+                for m in 3..=7 {
+                    v.push(Drum { m });
+                }
+                for (t, h) in TOSAM_8BIT {
+                    v.push(Tosam { t, h });
+                }
+                for h in 2..=7 {
+                    for m in [0, 4, 8] {
+                        v.push(ScaleTrim { h, m });
+                    }
+                }
+                for k in 1..=4 {
+                    v.push(EvoLib { k });
+                }
+                v.push(Ilm { k: 0 });
+                v.push(Ilm { k: 5 });
+                v.push(Axm { bits: 8, k: 4 });
+                v.push(Axm { bits: 8, k: 3 });
+                v.push(LodII { j: 0 });
+                v.push(LodII { j: 4 });
+                v.push(Scdm { bits: 8, k: 4 });
+                v.push(Scdm { bits: 8, k: 6 });
+                v.push(Msamz { k: 4, m: 4 });
+                Ok(v)
+            }
+            16 => {
+                let mut v = vec![Mitchell];
+                for k in 1..=4 {
+                    v.push(Mbm { k });
+                }
+                for m in 3..=8 {
+                    v.push(Drum { m });
+                }
+                for m in 4..=8 {
+                    v.push(Dsm { m });
+                }
+                for (t, h) in TOSAM_16BIT {
+                    v.push(Tosam { t, h });
+                }
+                for h in 3..=8 {
+                    for m in [0, 4, 8] {
+                        v.push(ScaleTrim { h, m });
+                    }
+                }
+                Ok(v)
+            }
+            other => anyhow::bail!("no registered zoo at {other} bits (supported: 8, 16)"),
+        }
+    }
+
+    /// Serialise to a JSON object (`{"family":"scaleTRIM","h":3,"m":4}`):
+    /// self-describing field names per family, width-pinned families carry
+    /// `bits`. Round-trips through [`DesignSpec::from_json`].
+    pub fn to_json(&self) -> Json {
+        use DesignSpec::*;
+        let o = Json::obj().set("family", self.family());
+        match *self {
+            ScaleTrim { h, m } => o.set("h", h).set("m", m),
+            Tosam { t, h } => o.set("t", t).set("h", h),
+            Drum { m } | Dsm { m } => o.set("m", m),
+            Mbm { k } | Ilm { k } | EvoLib { k } => o.set("k", k),
+            LodII { j } => o.set("j", j),
+            Axm { bits, k } | Scdm { bits, k } => o.set("bits", bits).set("k", k),
+            Msamz { k, m } => o.set("k", k).set("m", m),
+            Piecewise { h, s } => o.set("h", h).set("s", s),
+            Letam { t } => o.set("t", t),
+            Exact { bits } => o.set("bits", bits),
+            Mitchell | Roba => o,
+        }
+    }
+
+    /// Deserialise from the [`DesignSpec::to_json`] object form. The
+    /// reconstructed spec passes through the same parameter rules as the
+    /// label grammar, so a JSON document can never smuggle in parameters
+    /// `FromStr` would reject.
+    pub fn from_json(v: &Json) -> crate::Result<DesignSpec> {
+        let Json::Obj(fields) = v else {
+            anyhow::bail!("DesignSpec JSON must be an object, got {}", v.to_string());
+        };
+        let get = |key: &str| -> crate::Result<u32> {
+            match fields.iter().find(|(k, _)| k == key).map(|(_, v)| v) {
+                Some(Json::Num(x)) if *x >= 0.0 && x.fract() == 0.0 && *x <= u32::MAX as f64 => {
+                    Ok(*x as u32)
+                }
+                Some(other) => anyhow::bail!(
+                    "DesignSpec field {key:?} must be a non-negative integer, got {}",
+                    other.to_string()
+                ),
+                None => anyhow::bail!("DesignSpec JSON missing field {key:?}"),
+            }
+        };
+        let family = match fields.iter().find(|(k, _)| k == "family").map(|(_, v)| v) {
+            Some(Json::Str(s)) => s.as_str(),
+            _ => anyhow::bail!("DesignSpec JSON missing string field \"family\""),
+        };
+        use DesignSpec::*;
+        let spec = match family {
+            "scaleTRIM" => ScaleTrim { h: get("h")?, m: get("m")? },
+            "TOSAM" => Tosam { t: get("t")?, h: get("h")? },
+            "DRUM" => Drum { m: get("m")? },
+            "DSM" => Dsm { m: get("m")? },
+            "Mitchell" => Mitchell,
+            "MBM" => Mbm { k: get("k")? },
+            "ILM" => Ilm { k: get("k")? },
+            "Mitchell_LODII" => LodII { j: get("j")? },
+            "AXM" => Axm { bits: get("bits")?, k: get("k")? },
+            "SCDM" => Scdm { bits: get("bits")?, k: get("k")? },
+            "MSAMZ" => Msamz { k: get("k")?, m: get("m")? },
+            "Piecewise" => Piecewise { h: get("h")?, s: get("s")? },
+            "EVO-lib" => EvoLib { k: get("k")? },
+            "LETAM" => Letam { t: get("t")? },
+            "RoBA" => Roba,
+            "Exact" => Exact { bits: get("bits")? },
+            other => anyhow::bail!("unknown DesignSpec family {other:?}"),
+        };
+        // Same parameter rules as the label grammar, shared.
+        spec.validate_params()
+            .map_err(|e| anyhow::anyhow!("invalid DesignSpec parameters in JSON: {e}"))?;
+        Ok(spec)
+    }
+
+    /// Family tag (the JSON discriminant and the stable grouping key for
+    /// reports: every `scaleTRIM(h,M)` shares `"scaleTRIM"`).
+    pub fn family(&self) -> &'static str {
+        use DesignSpec::*;
+        match self {
+            ScaleTrim { .. } => "scaleTRIM",
+            Tosam { .. } => "TOSAM",
+            Drum { .. } => "DRUM",
+            Dsm { .. } => "DSM",
+            Mitchell => "Mitchell",
+            Mbm { .. } => "MBM",
+            Ilm { .. } => "ILM",
+            LodII { .. } => "Mitchell_LODII",
+            Axm { .. } => "AXM",
+            Scdm { .. } => "SCDM",
+            Msamz { .. } => "MSAMZ",
+            Piecewise { .. } => "Piecewise",
+            EvoLib { .. } => "EVO-lib",
+            Letam { .. } => "LETAM",
+            Roba => "RoBA",
+            Exact { .. } => "Exact",
+        }
+    }
+}
+
+/// The paper's 8-bit TOSAM(t, h) points (Fig. 9 / Table 4 order).
+const TOSAM_8BIT: [(u32, u32); 17] = [
+    (0, 2),
+    (1, 2),
+    (0, 3),
+    (1, 3),
+    (2, 3),
+    (0, 4),
+    (1, 4),
+    (2, 4),
+    (3, 4),
+    (0, 5),
+    (1, 5),
+    (2, 5),
+    (3, 5),
+    (0, 6),
+    (2, 6),
+    (2, 7),
+    (3, 7),
+];
+
+/// The paper's 16-bit TOSAM(t, h) points (Fig. 10 order).
+const TOSAM_16BIT: [(u32, u32); 7] = [(0, 3), (1, 3), (2, 4), (3, 5), (1, 6), (2, 6), (3, 7)];
+
+/// Every label the system registers, for near-miss suggestions: both zoo
+/// enumerations plus the standalone baselines that never enter a registry.
+fn known_labels() -> Vec<String> {
+    let mut labels: Vec<String> = Vec::new();
+    for bits in [8u32, 16] {
+        if let Ok(zoo) = DesignSpec::enumerate(bits) {
+            labels.extend(zoo.iter().map(|s| s.to_string()));
+        }
+    }
+    labels.push("Exact8".into());
+    labels.push("Exact16".into());
+    labels.push("RoBA".into());
+    labels.push("LETAM(4)".into());
+    labels.push("Piecewise(h=4,S=4)".into());
+    labels.sort();
+    labels.dedup();
+    labels
+}
+
+/// Classic Levenshtein edit distance (labels are short; O(a·b) is fine).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The `n` registered labels closest to `input` (case-insensitive edit
+/// distance, ties broken lexicographically), capped at a distance that
+/// still plausibly means "typo".
+fn nearest_labels(input: &str, n: usize) -> Vec<String> {
+    let needle = input.to_ascii_lowercase();
+    let mut scored: Vec<(usize, String)> = known_labels()
+        .into_iter()
+        .map(|l| (edit_distance(&needle, &l.to_ascii_lowercase()), l))
+        .collect();
+    scored.sort();
+    let cap = (input.len() / 2).max(3);
+    scored
+        .into_iter()
+        .take_while(|(d, _)| *d <= cap)
+        .take(n)
+        .map(|(_, l)| l)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_paper_labels() {
+        assert_eq!(DesignSpec::ScaleTrim { h: 3, m: 4 }.to_string(), "scaleTRIM(3,4)");
+        assert_eq!(DesignSpec::Tosam { t: 1, h: 5 }.to_string(), "TOSAM(1,5)");
+        assert_eq!(DesignSpec::Mbm { k: 2 }.to_string(), "MBM-2");
+        assert_eq!(DesignSpec::LodII { j: 0 }.to_string(), "Mitchell_LODII_0");
+        assert_eq!(DesignSpec::Axm { bits: 8, k: 4 }.to_string(), "AXM8-4");
+        assert_eq!(DesignSpec::Exact { bits: 8 }.to_string(), "Exact8");
+        assert_eq!(
+            DesignSpec::Piecewise { h: 4, s: 4 }.to_string(),
+            "Piecewise(h=4,S=4)"
+        );
+    }
+
+    #[test]
+    fn parse_round_trips_both_zoos() {
+        for bits in [8u32, 16] {
+            for spec in DesignSpec::enumerate(bits).unwrap() {
+                let label = spec.to_string();
+                assert_eq!(label.parse::<DesignSpec>().unwrap(), spec, "{label}");
+            }
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_labels() {
+        for bad in [
+            "scaleTRIM(3)",       // wrong arity
+            "scaleTRIM(1,4)",     // h < 2
+            "scaleTRIM(3,3)",     // M not a power of two
+            "TOSAM(9,2)",         // t >= h
+            "TOSAM(3)",           // wrong arity
+            "DRUM(1)",            // m < 2
+            "DRUM(x)",            // not an integer
+            "MBM-0",              // k < 1
+            "EVO-lib9",           // beyond the library
+            "AXM9-4",             // width not a power of two
+            "AXM8-5",             // k not in {3,4}
+            "SCDM8-16",           // k >= 2·bits
+            "Exact",              // width missing
+            "Exact1",             // width out of range
+            "LETAM(1)",           // t < 2
+            "Piecewise(h=0,S=4)", // h < 1
+            "Piecewise(S=2,h=8)", // keys transposed — not silently swapped
+            "Piecewise(2,8)",     // keys missing entirely
+            "TOSAM(h=1,S=5)",     // keyed form on a bare-parameter family
+            "DRUM(999)",          // parameter cap
+            "warp-drive",         // no such family
+            "",                   // empty
+        ] {
+            assert!(bad.parse::<DesignSpec>().is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn parse_error_suggests_near_misses() {
+        let err = "scaleTrim(3,4)".parse::<DesignSpec>().unwrap_err();
+        assert!(
+            err.suggestions.iter().any(|s| s == "scaleTRIM(3,4)"),
+            "suggestions {:?} must contain the case-fixed label",
+            err.suggestions
+        );
+        let msg = err.to_string();
+        assert!(msg.contains("scaleTRIM(3,4)"), "{msg}");
+    }
+
+    #[test]
+    fn build_is_wired_to_every_family() {
+        for bits in [8u32, 16] {
+            for spec in DesignSpec::enumerate(bits).unwrap() {
+                let m = spec.build(bits).unwrap();
+                assert_eq!(m.bits(), bits, "{spec}");
+                assert_eq!(m.spec(), spec);
+                assert_eq!(m.name(), spec.to_string());
+            }
+        }
+        // Standalone baselines outside the registries.
+        for (label, bits) in [
+            ("RoBA", 8u32),
+            ("LETAM(4)", 8),
+            ("Piecewise(h=4,S=4)", 8),
+            ("Exact8", 8),
+            ("Exact16", 16),
+        ] {
+            let spec: DesignSpec = label.parse().unwrap();
+            assert_eq!(spec.build(bits).unwrap().name(), label);
+        }
+    }
+
+    #[test]
+    fn build_rejects_wrong_width() {
+        assert!(DesignSpec::Exact { bits: 8 }.build(16).is_err());
+        assert!(DesignSpec::Axm { bits: 8, k: 4 }.build(16).is_err());
+        assert!(DesignSpec::Scdm { bits: 8, k: 4 }.build(16).is_err());
+        // h must stay below the operand width.
+        assert!(DesignSpec::ScaleTrim { h: 7, m: 4 }.build(4).is_err());
+        assert!(DesignSpec::Tosam { t: 3, h: 9 }.build(8).is_err());
+        // And the error is a message, not a panic.
+        let e = DesignSpec::Exact { bits: 8 }.build(16).unwrap_err();
+        assert!(e.to_string().contains("wrong width"), "{e}");
+    }
+
+    /// The fields are plain data, so invalid parameter combinations can be
+    /// constructed directly — `build` must reject them as typed errors,
+    /// never reach a panicking constructor assertion.
+    #[test]
+    fn build_rejects_directly_constructed_invalid_specs() {
+        assert!(DesignSpec::Tosam { t: 9, h: 2 }.build(8).is_err());
+        assert!(DesignSpec::Axm { bits: 6, k: 5 }.build(6).is_err());
+        assert!(DesignSpec::EvoLib { k: 9 }.build(8).is_err());
+        assert!(DesignSpec::ScaleTrim { h: 1, m: 4 }.build(8).is_err());
+        assert!(DesignSpec::Msamz { k: u32::MAX, m: u32::MAX }.build(8).is_err());
+        // The error talks about the parameter rule, not "unknown config" —
+        // the caller constructed a spec, not a label.
+        let e = DesignSpec::Drum { m: 1 }.build(8).unwrap_err().to_string();
+        assert!(e.contains("m must be >= 2"), "{e}");
+        assert!(!e.contains("unknown config"), "{e}");
+    }
+
+    #[test]
+    fn enumerate_rejects_unregistered_widths() {
+        assert!(DesignSpec::enumerate(12).is_err());
+        let msg = DesignSpec::enumerate(12).unwrap_err().to_string();
+        assert!(msg.contains("12"), "{msg}");
+    }
+
+    #[test]
+    fn json_round_trips() {
+        for bits in [8u32, 16] {
+            for spec in DesignSpec::enumerate(bits).unwrap() {
+                let wire = spec.to_json().to_string();
+                let back = DesignSpec::from_json(&Json::parse(&wire).unwrap()).unwrap();
+                assert_eq!(back, spec, "{wire}");
+            }
+        }
+        assert_eq!(
+            DesignSpec::ScaleTrim { h: 3, m: 4 }.to_json().to_string(),
+            r#"{"family":"scaleTRIM","h":3,"m":4}"#
+        );
+    }
+
+    #[test]
+    fn json_rejects_invalid_parameters() {
+        // Structurally fine, semantically invalid (t >= h) — must be
+        // rejected by the grammar re-validation.
+        let j = Json::parse(r#"{"family":"TOSAM","t":9,"h":2}"#).unwrap();
+        assert!(DesignSpec::from_json(&j).is_err());
+        let j = Json::parse(r#"{"family":"warp","x":1}"#).unwrap();
+        assert!(DesignSpec::from_json(&j).is_err());
+        let j = Json::parse(r#"{"family":"DRUM"}"#).unwrap();
+        assert!(DesignSpec::from_json(&j).is_err(), "missing field");
+    }
+
+    #[test]
+    fn specs_are_usable_as_map_keys() {
+        use std::collections::HashMap;
+        let mut m: HashMap<DesignSpec, u32> = HashMap::new();
+        m.insert(DesignSpec::ScaleTrim { h: 3, m: 4 }, 1);
+        m.insert(DesignSpec::ScaleTrim { h: 3, m: 8 }, 2);
+        assert_eq!(m[&"scaleTRIM(3,4)".parse::<DesignSpec>().unwrap()], 1);
+        assert_eq!(m[&"scaleTRIM(3,8)".parse::<DesignSpec>().unwrap()], 2);
+    }
+}

@@ -15,7 +15,7 @@
 //! is the one that reproduces the published MRED of every TOSAM(t,h) config
 //! in Table 4 to within ~0.2 pp (e.g. TOSAM(1,5): ours 4.09 vs paper 4.09).
 
-use super::{leading_one, truncate_fraction, ApproxMultiplier};
+use super::{leading_one, truncate_fraction, ApproxMultiplier, DesignSpec};
 
 /// TOSAM(t, h) behavioural model.
 #[derive(Debug, Clone)]
@@ -34,8 +34,8 @@ impl Tosam {
 }
 
 impl ApproxMultiplier for Tosam {
-    fn name(&self) -> String {
-        format!("TOSAM({},{})", self.t, self.h)
+    fn spec(&self) -> DesignSpec {
+        DesignSpec::Tosam { t: self.t, h: self.h }
     }
     fn bits(&self) -> u32 {
         self.bits

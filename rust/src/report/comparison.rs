@@ -4,7 +4,7 @@
 
 use crate::dse::{constrained, evaluate_all, pareto_front, DesignPoint};
 use crate::error::{exhaustive_sweep, percentile_sweep, ErrorHistogram, SweepSpec};
-use crate::hardware::estimate;
+use crate::hardware::try_estimate;
 use crate::multipliers::*;
 use crate::util::table::{f2, Table};
 use crate::Result;
@@ -61,7 +61,7 @@ pub fn fig1() -> Result<()> {
     for (t, h) in [(0, 2), (0, 3), (1, 3), (1, 4), (2, 4), (1, 5), (2, 5), (2, 6), (3, 7)] {
         zoo.push(Box::new(Tosam::new(8, t, h)));
     }
-    let points = evaluate_all(&zoo, SweepSpec::Exhaustive);
+    let points = evaluate_all(&zoo, SweepSpec::Exhaustive)?;
     let front = pareto_front(&points, |p| p.mared_energy());
     points_table("Fig. 1 — 8-bit TOSAM/DSM/DRUM design space", &points, &front).print();
     Ok(())
@@ -71,7 +71,7 @@ pub fn fig1() -> Result<()> {
 /// hardware model), Pareto flag computed on the (MRED, PDP) plane.
 pub fn table4() -> Result<()> {
     let zoo = paper_configs_8bit();
-    let points = evaluate_all(&zoo, SweepSpec::Exhaustive);
+    let points = evaluate_all(&zoo, SweepSpec::Exhaustive)?;
     let front = pareto_front(&points, |p| p.mared_energy());
     points_table(
         "Fig. 9 / Table 4 — 8-bit comparison (measured | paper)",
@@ -114,7 +114,7 @@ pub fn fig10(fast: bool) -> Result<()> {
     } else {
         SweepSpec::default_for(16)
     };
-    let points = evaluate_all(&zoo, spec);
+    let points = evaluate_all(&zoo, spec)?;
     let front = pareto_front(&points, |p| p.mared_energy());
     points_table("Fig. 10 — 16-bit comparison", &points, &front).print();
     // Table 2's 16-bit anchor rows.
@@ -196,7 +196,7 @@ pub fn table5() -> Result<()> {
     );
     for m in &zoo {
         let r = exhaustive_sweep(m.as_ref());
-        let hw = estimate(m.as_ref());
+        let hw = try_estimate(m.as_ref())?;
         let p = paper.iter().find(|row| row.0 == m.name());
         let (pm, px, ps) = p
             .map(|(_, a, b, c)| (f2(*a), f2(*b), f2(*c)))
@@ -237,7 +237,7 @@ pub struct HeadlinePair {
 /// *measured* hardware energy (PDP), keeping pairs within the tolerance —
 /// the abstract's "energy consumption is about equal" population. Sweeps
 /// are exhaustive; energies come from the structural `hardware` model.
-pub fn headline_pairs(iso_tolerance_pct: f64) -> Vec<HeadlinePair> {
+pub fn headline_pairs(iso_tolerance_pct: f64) -> Result<Vec<HeadlinePair>> {
     let mut zoo: Vec<Box<dyn ApproxMultiplier>> = Vec::new();
     for h in 2..=7u32 {
         for m in [0u32, 4, 8] {
@@ -251,8 +251,8 @@ pub fn headline_pairs(iso_tolerance_pct: f64) -> Vec<HeadlinePair> {
     for (t, h) in tosam_cfgs {
         tosams.push(Box::new(Tosam::new(8, t, h)));
     }
-    let st_points = evaluate_all(&zoo, SweepSpec::Exhaustive);
-    let tosam_points = evaluate_all(&tosams, SweepSpec::Exhaustive);
+    let st_points = evaluate_all(&zoo, SweepSpec::Exhaustive)?;
+    let tosam_points = evaluate_all(&tosams, SweepSpec::Exhaustive)?;
     let mut pairs = Vec::new();
     for st in &st_points {
         let Some(tosam) = tosam_points.iter().min_by(|a, b| {
@@ -276,7 +276,7 @@ pub fn headline_pairs(iso_tolerance_pct: f64) -> Vec<HeadlinePair> {
             tosam: tosam.clone(),
         });
     }
-    pairs
+    Ok(pairs)
 }
 
 /// The pair that best supports (or refutes) the abstract: maximise the
@@ -295,7 +295,7 @@ pub fn headline_best(pairs: &[HeadlinePair]) -> Option<&HeadlinePair> {
 /// scaleTRIM config is paired with its measured-iso-energy TOSAM
 /// counterpart and both metrics are compared.
 pub fn headline() -> Result<()> {
-    let pairs = headline_pairs(15.0);
+    let pairs = headline_pairs(15.0)?;
     let mut t = Table::new(
         "Headline — iso-energy scaleTRIM vs TOSAM (exhaustive 8-bit sweeps, hardware-model energy)",
         &[
@@ -399,7 +399,7 @@ pub fn table3() -> Result<()> {
     );
     for m in &methods {
         let p = percentile_sweep(m.as_ref());
-        let hw = estimate(m.as_ref());
+        let hw = try_estimate(m.as_ref())?;
         let r = paper.iter().find(|(n, _)| *n == m.name());
         let (pmean, pmax, ppdp) = r
             .map(|(_, v)| (f2(v[0]), f2(v[4]), f2(v[9])))
@@ -441,7 +441,7 @@ pub fn table3() -> Result<()> {
 /// Table 2: Pareto-optimal configurations under the paper's constraint
 /// windows (8-bit: MRED ≤ 4%, 200–250 fJ; 16-bit representative points).
 pub fn table2(fast: bool) -> Result<()> {
-    let points8 = evaluate_all(&paper_configs_8bit(), SweepSpec::Exhaustive);
+    let points8 = evaluate_all(&paper_configs_8bit(), SweepSpec::Exhaustive)?;
     let sel = constrained(&points8, 4.0, (150.0, 260.0));
     let mut t = Table::new(
         "Table 2 — Pareto-optimal configs, 8-bit window (MRED ≤ 4%, PDP 150–260 fJ)",
@@ -481,7 +481,7 @@ pub fn table2(fast: bool) -> Result<()> {
         &["config", "MRED%", "PDP fJ", "area µm²", "delay ns"],
     );
     for m in &zoo16 {
-        let p = DesignPoint::evaluate(m.as_ref(), spec);
+        let p = DesignPoint::try_evaluate(m.as_ref(), spec)?;
         t16.row(vec![
             p.name.clone(),
             f2(p.error.mred_pct),
@@ -513,7 +513,7 @@ mod tests {
     /// StdARED — the direction the abstract claims.
     #[test]
     fn headline_direction_matches_abstract() {
-        let pairs = headline_pairs(15.0);
+        let pairs = headline_pairs(15.0).unwrap();
         assert!(!pairs.is_empty(), "no iso-energy scaleTRIM/TOSAM pair within 15%");
         let best = headline_best(&pairs).unwrap();
         assert!(

@@ -5,7 +5,7 @@
 //! integration suite proves bit-identical to the served PJRT artifact, so
 //! these numbers are exactly what the coordinator would serve.
 
-use crate::hardware::estimate;
+use crate::hardware::try_estimate;
 use crate::multipliers::*;
 use crate::nn::{cached_lut, evaluate_accuracy, exact_lut, Dataset, QuantizedCnn, QuantizedWeights};
 use crate::runtime::{find_artifacts_dir, ArtifactSet};
@@ -83,7 +83,7 @@ fn accuracy_table(model: &str, role: &str, limit: Option<usize>, topk: bool) -> 
         ],
     );
     // Exact baseline first.
-    let exact_hw = estimate(&Exact::new(8));
+    let exact_hw = try_estimate(&Exact::new(8))?;
     let r = evaluate_accuracy(&cnn, &data, &exact_lut(), limit);
     let paper = table6_paper("Exact8");
     t.row(vec![
@@ -100,7 +100,7 @@ fn accuracy_table(model: &str, role: &str, limit: Option<usize>, topk: bool) -> 
         // process-wide, so repeated fig15/fig16 models don't rebuild.
         let lut = cached_lut(m.as_ref());
         let r = evaluate_accuracy(&cnn, &data, &lut, limit);
-        let hw = estimate(m.as_ref());
+        let hw = try_estimate(m.as_ref())?;
         let paper = table6_paper(&m.name());
         t.row(vec![
             m.name(),

@@ -39,7 +39,7 @@ pub fn workload_suite(fast: bool) -> Result<()> {
     let mut mean_psnr = vec![0f64; configs.len()];
     let mut pdp = vec![0f64; configs.len()];
     for w in &suite {
-        let rows = sweep_workload(w.as_ref(), &configs);
+        let rows = sweep_workload(w.as_ref(), &configs)?;
         let front = pareto_front(&rows, |r| (-r.q.psnr_db, r.energy_nj));
         let mut t = Table::new(
             &format!(
@@ -100,19 +100,19 @@ pub fn workload_suite(fast: bool) -> Result<()> {
 }
 
 /// Evaluate one workload across the zoo, sharing one reference computation.
-fn sweep_workload(w: &dyn Workload, configs: &[Box<dyn ApproxMultiplier>]) -> Vec<Row> {
+fn sweep_workload(w: &dyn Workload, configs: &[Box<dyn ApproxMultiplier>]) -> Result<Vec<Row>> {
     // All 8-bit configs share the reference; compute it once, not per row.
     let reference = w.reference(configs[0].bits());
     configs
         .iter()
         .map(|m| {
-            let r = workloads::evaluate_with_reference(w, m.as_ref(), &reference);
-            Row {
+            let r = workloads::evaluate_with_reference(w, m.as_ref(), &reference)?;
+            Ok(Row {
                 config: r.config,
                 q: r.quality,
                 pdp_fj: r.hw.pdp_fj,
                 energy_nj: r.energy_nj,
-            }
+            })
         })
         .collect()
 }
@@ -135,7 +135,7 @@ mod tests {
     fn sweep_rows_are_scored_and_finite_costs() {
         let configs = zoo(true);
         let w = workloads::Conv2d::blur();
-        let rows = sweep_workload(&w, &configs);
+        let rows = sweep_workload(&w, &configs).unwrap();
         assert_eq!(rows.len(), configs.len());
         for r in &rows {
             assert!(r.q.ssim.is_finite());

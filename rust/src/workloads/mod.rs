@@ -39,7 +39,7 @@ pub use quality::Quality;
 pub use signal::Signal;
 
 use crate::error::BATCH;
-use crate::hardware::{estimate, HwEstimate};
+use crate::hardware::{try_estimate, HwEstimate};
 use crate::multipliers::ApproxMultiplier;
 
 /// One multiplication-heavy application kernel.
@@ -200,8 +200,9 @@ pub struct WorkloadReport {
     pub energy_nj: f64,
 }
 
-/// Evaluate one workload under one configuration end to end.
-pub fn evaluate(w: &dyn Workload, m: &dyn ApproxMultiplier) -> WorkloadReport {
+/// Evaluate one workload under one configuration end to end. Errors when
+/// the configuration has no hardware model (the energy column needs one).
+pub fn evaluate(w: &dyn Workload, m: &dyn ApproxMultiplier) -> crate::Result<WorkloadReport> {
     let reference = w.reference(m.bits());
     evaluate_with_reference(w, m, &reference)
 }
@@ -214,19 +215,19 @@ pub fn evaluate_with_reference(
     w: &dyn Workload,
     m: &dyn ApproxMultiplier,
     reference: &Signal,
-) -> WorkloadReport {
+) -> crate::Result<WorkloadReport> {
     let run = w.run(m);
     let quality = quality::compare(reference, &run.output, 255.0);
-    let hw = estimate(m);
+    let hw = try_estimate(m)?;
     let energy_nj = hw.pdp_fj * run.macs as f64 * 1e-6;
-    WorkloadReport {
+    Ok(WorkloadReport {
         workload: w.name().to_string(),
         config: m.name(),
         quality,
         macs: run.macs,
         hw,
         energy_nj,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -290,7 +291,7 @@ mod tests {
     fn evaluate_exact_is_lossless() {
         let m = Exact::new(8);
         let w = Conv2d::blur();
-        let r = evaluate(&w, &m);
+        let r = evaluate(&w, &m).unwrap();
         assert_eq!(r.quality.mse, 0.0);
         assert_eq!(r.quality.ssim, 1.0);
         assert!(r.quality.psnr_db.is_infinite());

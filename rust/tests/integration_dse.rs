@@ -6,7 +6,7 @@ use ::scaletrim::error::SweepSpec;
 use ::scaletrim::multipliers::*;
 
 fn points() -> Vec<::scaletrim::dse::DesignPoint> {
-    evaluate_all(&paper_configs_8bit(), SweepSpec::Exhaustive)
+    evaluate_all(&paper_configs_8bit(), SweepSpec::Exhaustive).expect("registry zoo evaluates")
 }
 
 #[test]
@@ -18,7 +18,7 @@ fn scaletrim_populates_the_pareto_front() {
     let front = pareto_front(&pts, |p| p.mared_energy());
     let st = front
         .iter()
-        .filter(|&&i| pts[i].name.starts_with("scaleTRIM"))
+        .filter(|&&i| matches!(pts[i].spec, DesignSpec::ScaleTrim { .. }))
         .count();
     assert!(
         st >= 3,
@@ -59,7 +59,9 @@ fn table2_window_selects_scaletrim() {
     let sel = constrained(&pts, 4.0, (150.0, 260.0));
     assert!(!sel.is_empty());
     assert!(
-        sel.iter().take(3).any(|p| p.name.starts_with("scaleTRIM")),
+        sel.iter()
+            .take(3)
+            .any(|p| matches!(p.spec, DesignSpec::ScaleTrim { .. })),
         "top of the window: {:?}",
         sel.iter().map(|p| p.name.clone()).take(5).collect::<Vec<_>>()
     );

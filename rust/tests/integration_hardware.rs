@@ -24,7 +24,7 @@ fn scaletrim_rows_track_table4() {
         for m in [0u32, 4, 8] {
             let st = ScaleTrim::new(8, h, m);
             let e = estimate(&st);
-            let (_, pd, pa, _, ppdp) = paper_reference(&st.name()).unwrap();
+            let (_, pd, pa, _, ppdp) = paper_reference(&st.spec()).unwrap();
             for (metric, ours, paper) in [
                 ("area", e.area_um2, pa),
                 ("delay", e.delay_ns, pd),

@@ -1,0 +1,130 @@
+//! The typed-identity-plane acceptance suite: `DesignSpec` label and JSON
+//! round trips over the full 8- and 16-bit zoos, O(1) construction
+//! equivalence against the registries, and rejection of malformed labels
+//! (in-repo prop rig, `util::prop`, for the randomized slice).
+
+use ::scaletrim::multipliers::{
+    paper_configs_16bit, paper_configs_8bit, ApproxMultiplier, DesignSpec,
+};
+use ::scaletrim::util::json::Json;
+use ::scaletrim::util::prop::Runner;
+
+/// Deterministic full-zoo round trip: for every registered spec,
+/// `from_str(spec.to_string()) == spec` and `build(bits).name() ==
+/// spec.to_string()` — the ISSUE-4 acceptance property, exhaustively.
+#[test]
+fn spec_round_trips_exhaustively_over_both_zoos() {
+    for bits in [8u32, 16] {
+        let specs = DesignSpec::enumerate(bits).unwrap();
+        assert!(!specs.is_empty());
+        for spec in specs {
+            let label = spec.to_string();
+            // Label round trip.
+            let parsed: DesignSpec = label.parse().unwrap_or_else(|e| panic!("{label}: {e}"));
+            assert_eq!(parsed, spec, "{label}");
+            // Construction round trip, O(1), no zoo materialisation.
+            let built = spec.build(bits).unwrap_or_else(|e| panic!("{label}: {e}"));
+            assert_eq!(built.name(), label);
+            assert_eq!(built.spec(), spec);
+            assert_eq!(built.bits(), bits);
+            // JSON round trip through the wire form.
+            let wire = spec.to_json().to_string();
+            let back = DesignSpec::from_json(&Json::parse(&wire).unwrap()).unwrap();
+            assert_eq!(back, spec, "{wire}");
+        }
+    }
+}
+
+/// The registries themselves are regenerated from `enumerate`, so a
+/// spec-built instance and its registry twin agree on identity *and*
+/// behaviour (spot-checked over the operand corners).
+#[test]
+fn spec_built_instances_match_registry_instances() {
+    for (bits, zoo) in [(8u32, paper_configs_8bit()), (16, paper_configs_16bit())] {
+        let specs = DesignSpec::enumerate(bits).unwrap();
+        assert_eq!(zoo.len(), specs.len());
+        let probe: Vec<u64> = vec![0, 1, 2, 3, 48, 81, (1 << bits) - 2, (1 << bits) - 1];
+        for (m, spec) in zoo.iter().zip(&specs) {
+            assert_eq!(m.spec(), *spec);
+            let rebuilt = spec.build(bits).unwrap();
+            for &a in &probe {
+                for &b in &probe {
+                    assert_eq!(
+                        m.mul(a, b),
+                        rebuilt.mul(a, b),
+                        "{spec}: registry vs spec-built diverge at {a}*{b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Randomized slice of the same property (exercises the shrinker path and
+/// random label whitespace): any registered spec survives
+/// display→parse→build at its width.
+#[test]
+fn prop_random_spec_round_trip() {
+    let specs8 = DesignSpec::enumerate(8).unwrap();
+    let specs16 = DesignSpec::enumerate(16).unwrap();
+    let mut r = Runner::new("spec-round-trip", 500);
+    r.run(|g| {
+        let (bits, specs) = if g.bool() { (8u32, &specs8) } else { (16u32, &specs16) };
+        let spec = *g.choose(specs);
+        let label = if g.bool() {
+            format!("  {spec}  ") // FromStr trims
+        } else {
+            spec.to_string()
+        };
+        let parsed: DesignSpec = label
+            .parse()
+            .map_err(|e| format!("{label:?} failed to parse: {e}"))?;
+        if parsed != spec {
+            return Err(format!("{label:?} parsed to {parsed}"));
+        }
+        let built = spec.build(bits).map_err(|e| format!("{spec}: {e}"))?;
+        if built.name() != spec.to_string() {
+            return Err(format!("{spec}: built name {}", built.name()));
+        }
+        Ok(())
+    });
+}
+
+/// Malformed labels are typed errors (wrong arity, out-of-range parameter,
+/// unknown family, wrong width), never a silent fallback.
+#[test]
+fn malformed_labels_are_rejected_with_context() {
+    // Wrong arity.
+    assert!("scaleTRIM(3)".parse::<DesignSpec>().is_err());
+    // Out-of-range family parameters.
+    assert!("TOSAM(9,2)".parse::<DesignSpec>().is_err());
+    assert!("scaleTRIM(1,4)".parse::<DesignSpec>().is_err());
+    assert!("scaleTRIM(3,5)".parse::<DesignSpec>().is_err());
+    assert!("MBM-0".parse::<DesignSpec>().is_err());
+    // Unknown family, with near-miss suggestions in the message.
+    let err = "scaletrim(3,4)".parse::<DesignSpec>().unwrap_err();
+    assert!(
+        err.to_string().contains("scaleTRIM(3,4)"),
+        "near-miss missing from: {err}"
+    );
+    // Wrong width: parses, refuses to build at a mismatched width.
+    let spec: DesignSpec = "Exact8".parse().unwrap();
+    let e = spec.build(16).unwrap_err();
+    assert!(e.to_string().contains("wrong width"), "{e}");
+    let spec: DesignSpec = "AXM8-4".parse().unwrap();
+    assert!(spec.build(16).is_err());
+    // Width-dependent parameter violation surfaces at build time.
+    let spec: DesignSpec = "DRUM(7)".parse().unwrap();
+    assert!(spec.build(4).is_err(), "DRUM(7) cannot exist at 4 bits");
+}
+
+/// `enumerate` is total over the supported widths and a typed error
+/// elsewhere — never an empty list that would silently skip a sweep.
+#[test]
+fn enumerate_supported_widths_only() {
+    assert!(DesignSpec::enumerate(8).unwrap().len() > 40);
+    assert!(DesignSpec::enumerate(16).unwrap().len() > 20);
+    for bad in [0u32, 4, 12, 24, 32] {
+        assert!(DesignSpec::enumerate(bad).is_err(), "{bad} bits must error");
+    }
+}
