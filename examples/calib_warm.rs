@@ -1,0 +1,68 @@
+//! The calibration plane end to end: calibrate the 16-bit scaleTRIM family
+//! cold under every strategy, export the artifact bundle, then show a warm
+//! start serving the same constants bit-for-bit from one file read.
+//!
+//! Run: `cargo run --release --example calib_warm`
+
+use scaletrim::calib::{
+    calibrator, default_export_entries, CalibCache, CalibStore, CalibStrategy,
+};
+use scaletrim::lut::calibrate;
+use std::time::Instant;
+
+fn main() -> scaletrim::Result<()> {
+    // Strategy menu: same config, four ways to pay for it.
+    println!("calibrating 16-bit scaleTRIM(6,8) under each strategy:");
+    for strategy in CalibStrategy::ALL {
+        let t0 = Instant::now();
+        let p = calibrator(strategy).calibrate(16, 6, 8);
+        println!(
+            "  {strategy:<10} alpha={:.6}  ΔEE={}  in {:.2?}  (model cost {:.0} ops{})",
+            p.alpha,
+            p.delta_ee,
+            t0.elapsed(),
+            calibrator(strategy).cost_ops(16, 6),
+            if calibrator(strategy).paper_fidelity() {
+                ", paper fidelity"
+            } else {
+                ""
+            }
+        );
+    }
+
+    // Cold export of the whole 16-bit family.
+    let dir = std::env::temp_dir().join(format!("scaletrim-calib-example-{}", std::process::id()));
+    let store = CalibStore::at(&dir);
+    let t0 = Instant::now();
+    let entries = default_export_entries(16)?;
+    let cold = t0.elapsed();
+    let path = store.export(&entries)?;
+    let bytes = std::fs::metadata(&path)?.len();
+    println!(
+        "\ncold-calibrated + exported {} artifacts in {cold:.2?} -> {} ({bytes} bytes)",
+        entries.len(),
+        path.display()
+    );
+
+    // Warm start: a fresh cache seeded from the file.
+    let t0 = Instant::now();
+    let loaded = store.load()?;
+    let cache = CalibCache::new();
+    let seeded = cache.warm(loaded.into_iter().map(|e| (e.key, e.value)));
+    let warm = t0.elapsed();
+    println!("warm start seeded {seeded} entries in {warm:.2?}");
+
+    // Prove bit-for-bit identity on one config.
+    let warmed = cache.scaletrim_params(16, 6, 8, CalibStrategy::Exhaustive);
+    let fresh = calibrate(16, 6, 8);
+    assert_eq!(warmed.alpha.to_bits(), fresh.alpha.to_bits());
+    assert_eq!(warmed.c_fixed, fresh.c_fixed);
+    println!(
+        "scaleTRIM(6,8)@16-bit: warm constants are bit-identical to fresh calibration \
+         (alpha = {:.10})",
+        warmed.alpha
+    );
+    println!("{}", cache.stats().summary());
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

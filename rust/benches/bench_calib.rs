@@ -1,0 +1,60 @@
+//! Calibration-plane benchmarks: cold calibration per strategy and width,
+//! cache-hit acquisition, and the artifact-store round trip that replaces
+//! cold starts (`scaletrim calib export` → warm load).
+//!
+//! The headline comparison is cold-vs-warm: a 16-bit exhaustive
+//! calibration scans 2^16 operands per config, while the warm path parses
+//! one JSON bundle for the whole family — the number EXPERIMENTS.md's
+//! calibration entry tracks.
+
+use ::scaletrim::calib::{
+    calibrator, default_export_entries, CalibCache, CalibStore, CalibStrategy,
+};
+use ::scaletrim::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+
+    for strategy in CalibStrategy::ALL {
+        b.bench(
+            &format!("calib/cold/{strategy} 8-bit h=4 M=8"),
+            None,
+            || {
+                black_box(calibrator(strategy).calibrate(8, 4, 8).alpha);
+            },
+        );
+    }
+    b.bench("calib/cold/exhaustive 16-bit h=6 M=8", None, || {
+        black_box(calibrator(CalibStrategy::Exhaustive).calibrate(16, 6, 8).alpha);
+    });
+    b.bench("calib/cold/analytic 32-bit h=6 M=8", None, || {
+        black_box(calibrator(CalibStrategy::Analytic).calibrate(32, 6, 8).alpha);
+    });
+
+    // Cache-hit acquisition: the steady-state cost every ScaleTrim::new
+    // pays after the first instance of a config.
+    let cache = CalibCache::new();
+    cache.scaletrim_params(8, 4, 8, CalibStrategy::Exhaustive);
+    b.bench("calib/cache-hit scaletrim_params", None, || {
+        black_box(cache.scaletrim_params(8, 4, 8, CalibStrategy::Exhaustive).alpha);
+    });
+
+    // Store round trip: export once, then measure the warm load that
+    // replaces a whole family's cold calibration.
+    let dir = std::env::temp_dir().join(format!("scaletrim-bench-calib-{}", std::process::id()));
+    let store = CalibStore::at(&dir);
+    let entries = default_export_entries(8).expect("default export set");
+    store.export(&entries).expect("export");
+    b.bench(
+        &format!("calib/store-load 8-bit family ({} entries)", entries.len()),
+        Some(entries.len() as u64),
+        || {
+            black_box(store.load().expect("load").len());
+        },
+    );
+    b.bench("calib/store-export 8-bit family (recalibrates)", None, || {
+        let entries = default_export_entries(8).expect("export set");
+        black_box(store.export(&entries).expect("export"));
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,453 @@
+//! The process-wide calibration cache — one typed, poison-safe home for
+//! every design-time artifact the system used to stash in ad-hoc statics.
+//!
+//! Before this plane existed, three independent `Mutex<Option<HashMap>>`
+//! statics held calibration state with three different key shapes:
+//! `lut::cached_params` (`(bits, h, m)`), `PiecewiseLinear`'s private
+//! `cached_fit` (`(bits, h, segments)`), and `nn::cached_lut`
+//! (`(DesignSpec, bits)`). One panicking calibration poisoned its static
+//! and killed every later user of that width. [`CalibCache`] replaces all
+//! three with a single map keyed by [`CalibKey`] — the typed
+//! `(DesignSpec, bits, strategy, kind)` identity — and two poisoning
+//! defenses:
+//!
+//! - the registry `Mutex` is held only for map bookkeeping (no user code
+//!   runs under it) and recovers from poisoning on every acquisition;
+//! - each entry is its own [`OnceLock`]: a calibration that panics leaves
+//!   *that slot* uninitialized (the next caller simply retries) and cannot
+//!   poison any other key.
+//!
+//! The cache also back-ends the warm-start path: the on-disk
+//! [store](super::store) is loaded into it via [`CalibCache::warm`], making
+//! a 16-bit cold start a file read.
+
+use super::strategy::{calibrator, fit_piecewise, CalibStrategy};
+use crate::lut::ScaleTrimParams;
+use crate::multipliers::{ApproxMultiplier, DesignSpec};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+
+/// What kind of design-time artifact a cache entry holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ArtifactKind {
+    /// scaleTRIM constants (α, ΔEE, C_i, segment boundaries).
+    ScaleTrimParams,
+    /// Piecewise-linear per-segment (α_s, β_s) coefficients.
+    PiecewiseFit,
+    /// 256×256 signed product LUT (derived; never persisted).
+    ProductLut,
+}
+
+impl ArtifactKind {
+    /// Stable tag (artifact files).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ArtifactKind::ScaleTrimParams => "scaletrim-params",
+            ArtifactKind::PiecewiseFit => "piecewise-fit",
+            ArtifactKind::ProductLut => "product-lut",
+        }
+    }
+
+    /// Parse the stable tag back.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "scaletrim-params" => Ok(ArtifactKind::ScaleTrimParams),
+            "piecewise-fit" => Ok(ArtifactKind::PiecewiseFit),
+            "product-lut" => Ok(ArtifactKind::ProductLut),
+            other => Err(format!("unknown artifact kind {other:?}")),
+        }
+    }
+}
+
+/// The unified cache key: typed config identity + operand width +
+/// calibration strategy + artifact kind. Strategy is part of the key
+/// because a sampled calibration of the same `(spec, bits)` is *not* the
+/// exhaustive one — keying them apart is what makes strategy selection
+/// safe to thread through shared caches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CalibKey {
+    /// Typed configuration identity.
+    pub spec: DesignSpec,
+    /// Operand width the artifact was calibrated at.
+    pub bits: u32,
+    /// Strategy that produced (or would produce) the artifact.
+    pub strategy: CalibStrategy,
+    /// Artifact kind.
+    pub kind: ArtifactKind,
+}
+
+/// A cached calibration artifact. `Arc`'d so handles are cheap and the
+/// cache, the instances and the artifact store share one allocation.
+#[derive(Debug, Clone)]
+pub enum CalibValue {
+    /// scaleTRIM constants.
+    ScaleTrim(Arc<ScaleTrimParams>),
+    /// Piecewise-linear coefficients.
+    Piecewise(Arc<Vec<(i64, i64)>>),
+    /// Signed product LUT.
+    ProductLut(Arc<Vec<i32>>),
+}
+
+impl CalibValue {
+    /// The artifact kind this value satisfies.
+    pub fn kind(&self) -> ArtifactKind {
+        match self {
+            CalibValue::ScaleTrim(_) => ArtifactKind::ScaleTrimParams,
+            CalibValue::Piecewise(_) => ArtifactKind::PiecewiseFit,
+            CalibValue::ProductLut(_) => ArtifactKind::ProductLut,
+        }
+    }
+
+    /// Resident bytes (payload only, for the sharing statistics).
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            CalibValue::ScaleTrim(p) => {
+                (p.c.len() + p.c_fixed.len() + p.seg_bounds.len()) * 8 + 48
+            }
+            CalibValue::Piecewise(c) => c.len() * 16,
+            CalibValue::ProductLut(l) => l.len() * 4,
+        }
+    }
+}
+
+/// Cache counters — the shared-LUT sharing story (§V of the paper) in
+/// numbers: `hits / (hits + misses)` is the fraction of acquisitions served
+/// without recalibration or rebuild.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    /// Initialized entries resident.
+    pub entries: usize,
+    /// Acquisitions served from an existing entry.
+    pub hits: u64,
+    /// Acquisitions that computed the entry.
+    pub misses: u64,
+    /// Entries seeded from the on-disk artifact store.
+    pub warm_loaded: u64,
+    /// Payload bytes resident across all entries.
+    pub resident_bytes: usize,
+    /// Bytes that per-acquisition dedicated copies would have cost.
+    pub dedicated_bytes: usize,
+}
+
+impl CacheStats {
+    /// Fractional storage saving versus per-acquisition dedicated copies
+    /// (the §V shared-LUT benefit).
+    pub fn saving(&self) -> f64 {
+        if self.dedicated_bytes == 0 {
+            0.0
+        } else {
+            1.0 - self.resident_bytes as f64 / self.dedicated_bytes as f64
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "calib cache: {} entries ({} KiB resident), {} hits / {} misses, {} warm-loaded, sharing saves {:.1}%",
+            self.entries,
+            self.resident_bytes / 1024,
+            self.hits,
+            self.misses,
+            self.warm_loaded,
+            100.0 * self.saving()
+        )
+    }
+}
+
+type SlotMap = HashMap<CalibKey, Arc<OnceLock<CalibValue>>>;
+
+/// The unified calibration cache. See the module docs for the poisoning
+/// contract; see [`super::cache()`] for the process-wide instance.
+#[derive(Default)]
+pub struct CalibCache {
+    slots: Mutex<SlotMap>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    warm_loaded: AtomicU64,
+    /// Σ resident_bytes over acquisitions — what dedicated copies would
+    /// have cost (the denominator of the sharing saving).
+    dedicated_bytes: AtomicU64,
+}
+
+impl CalibCache {
+    /// Fresh, empty cache (tests and tools; production code uses the
+    /// process-wide [`super::cache()`]).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Lock the slot map, recovering from poisoning: the map holds only
+    /// bookkeeping state (no entry is ever half-written under it), so a
+    /// poisoned lock is always safe to take over.
+    fn slots(&self) -> std::sync::MutexGuard<'_, SlotMap> {
+        self.slots.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Acquire the entry for `key`, computing it with `init` on first use.
+    ///
+    /// `init` runs *outside* the registry lock, on at most one thread per
+    /// key at a time. If it panics, the panic propagates to the caller and
+    /// the slot stays uninitialized — the next acquisition of the same key
+    /// retries, and no other key is affected (the regression contract for
+    /// the old poison-the-static failure mode).
+    pub fn get_or_init<F: FnOnce() -> CalibValue>(&self, key: CalibKey, init: F) -> CalibValue {
+        let slot = self.slots().entry(key).or_default().clone();
+        if let Some(v) = slot.get() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.dedicated_bytes
+                .fetch_add(v.resident_bytes() as u64, Ordering::Relaxed);
+            return v.clone();
+        }
+        let mut computed = false;
+        let v = slot.get_or_init(|| {
+            computed = true;
+            init()
+        });
+        debug_assert_eq!(
+            v.kind(),
+            key.kind,
+            "calib cache: value kind does not match key {key:?}"
+        );
+        if computed {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        self.dedicated_bytes
+            .fetch_add(v.resident_bytes() as u64, Ordering::Relaxed);
+        v.clone()
+    }
+
+    /// scaleTRIM constants for `(bits, h, m)` under a strategy, calibrating
+    /// on first use. This is the acquisition path of
+    /// [`ScaleTrim`](crate::multipliers::ScaleTrim) and
+    /// [`LutRegistry`](crate::lut::LutRegistry).
+    pub fn scaletrim_params(
+        &self,
+        bits: u32,
+        h: u32,
+        m: u32,
+        strategy: CalibStrategy,
+    ) -> Arc<ScaleTrimParams> {
+        let spec = if strategy == CalibStrategy::Quantile {
+            DesignSpec::ScaleTrimQ { h, m }
+        } else {
+            DesignSpec::ScaleTrim { h, m }
+        };
+        let key = CalibKey {
+            spec,
+            bits,
+            strategy,
+            kind: ArtifactKind::ScaleTrimParams,
+        };
+        match self.get_or_init(key, || {
+            CalibValue::ScaleTrim(Arc::new(calibrator(strategy).calibrate(bits, h, m)))
+        }) {
+            CalibValue::ScaleTrim(p) => p,
+            other => unreachable!("scaletrim key resolved to {:?}", other.kind()),
+        }
+    }
+
+    /// Piecewise-linear coefficients for `(bits, h, segments)`, fitting on
+    /// first use — the acquisition path of
+    /// [`PiecewiseLinear`](crate::multipliers::PiecewiseLinear).
+    pub fn piecewise_fit(&self, bits: u32, h: u32, segments: u32) -> Arc<Vec<(i64, i64)>> {
+        let key = CalibKey {
+            spec: DesignSpec::Piecewise { h, s: segments },
+            bits,
+            strategy: CalibStrategy::Exhaustive,
+            kind: ArtifactKind::PiecewiseFit,
+        };
+        match self.get_or_init(key, || {
+            CalibValue::Piecewise(Arc::new(fit_piecewise(bits, h, segments)))
+        }) {
+            CalibValue::Piecewise(c) => c,
+            other => unreachable!("piecewise key resolved to {:?}", other.kind()),
+        }
+    }
+
+    /// Shared signed product LUT for a multiplier instance, built in one
+    /// batched pass on first use — the acquisition path of
+    /// [`nn::cached_lut`](crate::nn::cached_lut) and the coordinator lanes.
+    ///
+    /// Invariant: at a given `(bits, strategy)`, a config *spec* must
+    /// uniquely determine numerical behaviour — true for everything the
+    /// registries and [`DesignSpec::build`] produce. Instances carrying
+    /// externally supplied constants (`ScaleTrim::with_params`) are tagged
+    /// [`CalibStrategy::External`], so they can never poison a
+    /// self-calibrated config's slot; but two *different* external
+    /// constant sets for the same `(h, M)` would still share the External
+    /// slot — build those LUTs directly
+    /// ([`nn::build_lut`](crate::nn::build_lut)).
+    pub fn product_lut(&self, m: &dyn ApproxMultiplier) -> Arc<Vec<i32>> {
+        let key = CalibKey {
+            spec: m.spec(),
+            bits: m.bits(),
+            strategy: m.calib_strategy(),
+            kind: ArtifactKind::ProductLut,
+        };
+        match self.get_or_init(key, || {
+            CalibValue::ProductLut(Arc::new(crate::nn::build_lut(m)))
+        }) {
+            CalibValue::ProductLut(l) => l,
+            other => unreachable!("product-lut key resolved to {:?}", other.kind()),
+        }
+    }
+
+    /// Seed entries from the artifact store (warm start). Existing
+    /// initialized slots are never overwritten — fresh calibration already
+    /// in flight wins, keeping in-process state consistent. Entries whose
+    /// value kind does not match the key are skipped. Returns the number
+    /// of slots actually seeded.
+    pub fn warm<I: IntoIterator<Item = (CalibKey, CalibValue)>>(&self, entries: I) -> usize {
+        let mut seeded = 0usize;
+        for (key, value) in entries {
+            if value.kind() != key.kind {
+                continue;
+            }
+            let slot = self.slots().entry(key).or_default().clone();
+            if slot.set(value).is_ok() {
+                seeded += 1;
+                self.warm_loaded.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        seeded
+    }
+
+    /// Snapshot the entry for a key without computing it.
+    pub fn peek(&self, key: &CalibKey) -> Option<CalibValue> {
+        let slots = self.slots();
+        slots.get(key).and_then(|s| s.get().cloned())
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> CacheStats {
+        let slots = self.slots();
+        let mut entries = 0usize;
+        let mut resident = 0usize;
+        for slot in slots.values() {
+            if let Some(v) = slot.get() {
+                entries += 1;
+                resident += v.resident_bytes();
+            }
+        }
+        CacheStats {
+            entries,
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            warm_loaded: self.warm_loaded.load(Ordering::Relaxed),
+            resident_bytes: resident,
+            dedicated_bytes: self.dedicated_bytes.load(Ordering::Relaxed) as usize,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    fn key(h: u32, m: u32) -> CalibKey {
+        CalibKey {
+            spec: DesignSpec::ScaleTrim { h, m },
+            bits: 8,
+            strategy: CalibStrategy::Exhaustive,
+            kind: ArtifactKind::ScaleTrimParams,
+        }
+    }
+
+    #[test]
+    fn same_key_shares_one_entry() {
+        let c = CalibCache::new();
+        let a = c.scaletrim_params(8, 3, 4, CalibStrategy::Exhaustive);
+        let b = c.scaletrim_params(8, 3, 4, CalibStrategy::Exhaustive);
+        assert!(Arc::ptr_eq(&a, &b), "same key must share one allocation");
+        let s = c.stats();
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 1);
+        assert!(s.saving() > 0.0, "second acquisition should count as saved");
+    }
+
+    #[test]
+    fn strategy_is_part_of_the_key() {
+        let c = CalibCache::new();
+        let ex = c.scaletrim_params(8, 4, 8, CalibStrategy::Exhaustive);
+        let sa = c.scaletrim_params(8, 4, 8, CalibStrategy::Sampled);
+        assert!(!Arc::ptr_eq(&ex, &sa), "strategies must not collide");
+        assert_eq!(c.stats().entries, 2);
+    }
+
+    /// The satellite regression: a panicking calibration must leave the
+    /// cache fully usable — the same key retries, other keys never notice.
+    #[test]
+    fn panicking_init_does_not_poison_the_cache() {
+        let c = CalibCache::new();
+        let k = key(3, 4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            c.get_or_init(k, || panic!("injected calibration failure"));
+        }));
+        assert!(r.is_err(), "the injected panic must propagate");
+        // Same key: retried, not dead.
+        let v = c.get_or_init(k, || {
+            CalibValue::ScaleTrim(Arc::new(crate::lut::calibrate(8, 3, 4)))
+        });
+        assert_eq!(v.kind(), ArtifactKind::ScaleTrimParams);
+        // Other keys of the same width: untouched.
+        let other = c.scaletrim_params(8, 4, 4, CalibStrategy::Exhaustive);
+        assert_eq!(other.h, 4);
+    }
+
+    #[test]
+    fn warm_never_overwrites_and_reports_seeded_count() {
+        let c = CalibCache::new();
+        let fresh = c.scaletrim_params(8, 3, 4, CalibStrategy::Exhaustive);
+        let mut doctored = (*fresh).clone();
+        doctored.alpha += 1e-3;
+        let seeded = c.warm(vec![
+            (
+                key(3, 4),
+                CalibValue::ScaleTrim(Arc::new(doctored)),
+            ),
+            (
+                key(3, 8),
+                CalibValue::ScaleTrim(Arc::new(crate::lut::calibrate(8, 3, 8))),
+            ),
+        ]);
+        assert_eq!(seeded, 1, "only the absent key is seeded");
+        // The live entry won; the doctored artifact was dropped.
+        let still = c.scaletrim_params(8, 3, 4, CalibStrategy::Exhaustive);
+        assert_eq!(still.alpha.to_bits(), fresh.alpha.to_bits());
+        // The seeded entry is served without a miss.
+        let misses_before = c.stats().misses;
+        let warmed = c.scaletrim_params(8, 3, 8, CalibStrategy::Exhaustive);
+        assert_eq!(warmed.m, 8);
+        assert_eq!(c.stats().misses, misses_before, "warm entry must be a hit");
+    }
+
+    #[test]
+    fn warm_skips_kind_mismatches() {
+        let c = CalibCache::new();
+        let seeded = c.warm(vec![(
+            key(3, 4),
+            CalibValue::ProductLut(Arc::new(vec![0i32; 4])),
+        )]);
+        assert_eq!(seeded, 0);
+        assert!(c.peek(&key(3, 4)).is_none());
+    }
+
+    #[test]
+    fn piecewise_and_product_lut_paths_share() {
+        let c = CalibCache::new();
+        let a = c.piecewise_fit(8, 4, 4);
+        let b = c.piecewise_fit(8, 4, 4);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.len(), 4);
+        let m = crate::multipliers::ScaleTrim::new(8, 3, 4);
+        let l1 = c.product_lut(&m);
+        let l2 = c.product_lut(&m);
+        assert!(Arc::ptr_eq(&l1, &l2));
+        assert_eq!(l1.len(), 256 * 256);
+    }
+}

@@ -1,0 +1,544 @@
+//! The persistent calibration artifact store — versioned, checksummed
+//! JSON on disk, so one process's design-time calibration is every later
+//! process's file read.
+//!
+//! Layout: one bundle file (`calib-v1.json`) inside a `calib/` directory
+//! that lives next to the model artifacts
+//! [`crate::runtime::find_artifacts_dir`] already discovers
+//! (`SCALETRIM_ARTIFACTS`, then `./artifacts` walking up). The document is
+//!
+//! ```json
+//! {
+//!   "format": "scaletrim-calib",
+//!   "version": 1,
+//!   "checksum": "fnv1a64:<16 hex digits>",
+//!   "entries": [ { "spec": {...}, "bits": 8, "strategy": "exhaustive",
+//!                  "kind": "scaletrim-params", "params": {...} }, ... ]
+//! }
+//! ```
+//!
+//! The checksum covers the canonical serialization of the `entries` array
+//! (the writer is deterministic, so parse → re-serialize is the identity);
+//! a load rejects wrong-format, wrong-version, wrong-checksum and
+//! truncated documents with typed errors, and every loaded constant passes
+//! the same [`ScaleTrimParams::try_validate`] gate as a fresh calibration.
+//! Floating-point fields survive bit-for-bit: the JSON writer emits
+//! shortest-round-trip `f64` text and the parser restores the identical
+//! bits (pinned by `tests/prop_calib.rs`).
+//!
+//! Only design-time constants are persisted ([`ArtifactKind::ScaleTrimParams`],
+//! [`ArtifactKind::PiecewiseFit`]). Product LUTs are derived data — a
+//! single batched pass rebuilds them from the constants — so exporting one
+//! is a typed error, not a 256 KiB JSON blob.
+
+use super::cache::{ArtifactKind, CalibKey, CalibValue};
+use super::strategy::CalibStrategy;
+use crate::lut::ScaleTrimParams;
+use crate::multipliers::DesignSpec;
+use crate::util::json::Json;
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Bundle file name inside the store directory.
+pub const STORE_FILE: &str = "calib-v1.json";
+
+/// Format discriminant.
+pub const STORE_FORMAT: &str = "scaletrim-calib";
+
+/// Current artifact format version. Bump on any layout change: loads
+/// reject other versions instead of guessing.
+pub const STORE_VERSION: u64 = 1;
+
+/// One persistable calibration artifact: key + value.
+#[derive(Debug, Clone)]
+pub struct StoreEntry {
+    /// Cache key the artifact seeds.
+    pub key: CalibKey,
+    /// The constants.
+    pub value: CalibValue,
+}
+
+/// A calibration artifact store rooted at one directory.
+#[derive(Debug, Clone)]
+pub struct CalibStore {
+    dir: PathBuf,
+}
+
+impl CalibStore {
+    /// Store rooted at an explicit directory (created on export).
+    pub fn at(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into() }
+    }
+
+    /// Store in the standard location: `<artifacts>/calib`, where
+    /// `<artifacts>` is whatever [`crate::runtime::find_artifacts_dir`]
+    /// resolves (the `SCALETRIM_ARTIFACTS` override, then `./artifacts`
+    /// walking up). `None` when no artifacts directory exists at all.
+    pub fn discover() -> Option<Self> {
+        let dir = crate::runtime::find_artifacts_dir().ok()?;
+        Some(Self::at(dir.join("calib")))
+    }
+
+    /// The bundle file path.
+    pub fn path(&self) -> PathBuf {
+        self.dir.join(STORE_FILE)
+    }
+
+    /// Serialize, checksum and write the entries. Returns the file path.
+    ///
+    /// The write is atomic (temp file + rename in the same directory), so
+    /// a killed export can never leave a truncated bundle behind — readers
+    /// see either the previous bundle or the complete new one.
+    pub fn export(&self, entries: &[StoreEntry]) -> Result<PathBuf> {
+        let doc = render_document(entries)?;
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating calib store dir {}", self.dir.display()))?;
+        let path = self.path();
+        let tmp = self.dir.join(format!("{STORE_FILE}.tmp.{}", std::process::id()));
+        std::fs::write(&tmp, doc)
+            .with_context(|| format!("writing calib artifacts to {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing calib artifacts at {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load and fully verify the bundle (format, version, checksum, per-
+    /// entry validation). Errors when the file is missing — use
+    /// [`CalibStore::load_if_present`] for the warm-start path.
+    pub fn load(&self) -> Result<Vec<StoreEntry>> {
+        let path = self.path();
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading calib artifacts from {}", path.display()))?;
+        parse_document(&text).with_context(|| format!("calib artifact file {}", path.display()))
+    }
+
+    /// [`CalibStore::load`], returning `Ok(None)` when the bundle file does
+    /// not exist (a store location with nothing in it is not an error).
+    pub fn load_if_present(&self) -> Result<Option<Vec<StoreEntry>>> {
+        if !self.path().is_file() {
+            return Ok(None);
+        }
+        self.load().map(Some)
+    }
+}
+
+/// FNV-1a 64-bit over a byte string — dependency-free integrity check.
+/// (Integrity against corruption/truncation, not an adversarial MAC.)
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn checksum_tag(entries_json: &str) -> String {
+    format!("fnv1a64:{:016x}", fnv1a64(entries_json.as_bytes()))
+}
+
+/// Serialize the full bundle document.
+fn render_document(entries: &[StoreEntry]) -> Result<String> {
+    let arr = Json::Arr(
+        entries
+            .iter()
+            .map(entry_to_json)
+            .collect::<Result<Vec<_>>>()?,
+    );
+    let entries_json = arr.to_string();
+    let doc = Json::obj()
+        .set("format", STORE_FORMAT)
+        .set("version", STORE_VERSION)
+        .set("checksum", checksum_tag(&entries_json))
+        .set("entries", arr);
+    Ok(doc.to_string())
+}
+
+/// Parse + verify the full bundle document.
+fn parse_document(text: &str) -> Result<Vec<StoreEntry>> {
+    let doc = Json::parse(text)
+        .map_err(|e| anyhow!("unparseable (truncated or corrupt?): {e}"))?;
+    let Json::Obj(fields) = &doc else {
+        bail!("document root must be an object");
+    };
+    let get = |key: &str| fields.iter().find(|(k, _)| k == key).map(|(_, v)| v);
+    match get("format") {
+        Some(Json::Str(f)) if f == STORE_FORMAT => {}
+        other => bail!("not a {STORE_FORMAT} document (format field: {other:?})"),
+    }
+    match get("version") {
+        Some(Json::Num(v)) if *v == STORE_VERSION as f64 => {}
+        Some(Json::Num(v)) => bail!(
+            "unsupported artifact version {v} (this build reads version {STORE_VERSION}; \
+             re-export with `scaletrim calib export`)"
+        ),
+        other => bail!("missing or malformed version field: {other:?}"),
+    }
+    let Some(Json::Str(declared)) = get("checksum") else {
+        bail!("missing checksum field");
+    };
+    let Some(entries_val @ Json::Arr(items)) = get("entries") else {
+        bail!("missing entries array");
+    };
+    // The writer is deterministic and parse∘write is the identity, so
+    // re-serializing the parsed array reproduces the checksummed bytes.
+    let actual = checksum_tag(&entries_val.to_string());
+    if *declared != actual {
+        bail!("checksum mismatch: file declares {declared}, content hashes to {actual}");
+    }
+    items
+        .iter()
+        .enumerate()
+        .map(|(i, v)| entry_from_json(v).with_context(|| format!("entry {i}")))
+        .collect()
+}
+
+fn entry_to_json(e: &StoreEntry) -> Result<Json> {
+    let payload = match &e.value {
+        CalibValue::ScaleTrim(p) => ("params", params_to_json(p)),
+        CalibValue::Piecewise(c) => (
+            "coef",
+            Json::Arr(
+                c.iter()
+                    .map(|&(a, b)| Json::Arr(vec![Json::from(a), Json::from(b)]))
+                    .collect(),
+            ),
+        ),
+        CalibValue::ProductLut(_) => bail!(
+            "product LUTs are derived artifacts — rebuild them from the constants \
+             instead of persisting 256 KiB tables"
+        ),
+    };
+    anyhow::ensure!(
+        e.value.kind() == e.key.kind,
+        "entry value kind {:?} does not match key kind {:?}",
+        e.value.kind(),
+        e.key.kind
+    );
+    Ok(Json::obj()
+        .set("spec", e.key.spec.to_json())
+        .set("bits", e.key.bits)
+        .set("strategy", e.key.strategy.as_str())
+        .set("kind", e.key.kind.as_str())
+        .set(payload.0, payload.1))
+}
+
+fn entry_from_json(v: &Json) -> Result<StoreEntry> {
+    let Json::Obj(fields) = v else {
+        bail!("entry must be an object");
+    };
+    let get = |key: &str| {
+        fields
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v)
+            .ok_or_else(|| anyhow!("entry missing field {key:?}"))
+    };
+    let spec = DesignSpec::from_json(get("spec")?)?;
+    let bits = get_u32(get("bits")?, "bits")?;
+    let strategy: CalibStrategy = match get("strategy")? {
+        Json::Str(s) => s.parse().map_err(|e: String| anyhow!(e))?,
+        other => bail!("strategy must be a string, got {}", other.to_string()),
+    };
+    let kind = match get("kind")? {
+        Json::Str(s) => ArtifactKind::parse(s).map_err(|e| anyhow!(e))?,
+        other => bail!("kind must be a string, got {}", other.to_string()),
+    };
+    let key = CalibKey {
+        spec,
+        bits,
+        strategy,
+        kind,
+    };
+    let value = match kind {
+        ArtifactKind::ScaleTrimParams => {
+            let p = params_from_json(get("params")?)?;
+            p.try_validate().map_err(|e| anyhow!("invalid constants: {e}"))?;
+            // The key and the payload must describe the same design point.
+            let (kh, km) = match spec {
+                DesignSpec::ScaleTrim { h, m } | DesignSpec::ScaleTrimQ { h, m } => (h, m),
+                other => bail!("scaletrim-params entry keyed by non-scaleTRIM spec {other}"),
+            };
+            anyhow::ensure!(
+                p.bits == bits && p.h == kh && p.m == km,
+                "constants ({}, h={}, M={}) disagree with key ({bits}, h={kh}, M={km})",
+                p.bits,
+                p.h,
+                p.m
+            );
+            // Segmentation shape must match the design family: a uniform
+            // scaleTRIM key seeded with quantile boundaries would silently
+            // switch the datapath's segment selection, and vice versa.
+            let quantile_key = matches!(spec, DesignSpec::ScaleTrimQ { .. })
+                && strategy == CalibStrategy::Quantile;
+            let uniform_key = matches!(spec, DesignSpec::ScaleTrim { .. })
+                && strategy != CalibStrategy::Quantile;
+            anyhow::ensure!(
+                quantile_key || uniform_key,
+                "spec {spec} and strategy {strategy} disagree (scaleTRIM-Q ⇔ quantile)"
+            );
+            anyhow::ensure!(
+                p.seg_bounds.is_empty() != quantile_key,
+                "{spec}: {} segment boundaries do not fit a {} design",
+                p.seg_bounds.len(),
+                if quantile_key { "quantile" } else { "uniform" }
+            );
+            CalibValue::ScaleTrim(Arc::new(p))
+        }
+        ArtifactKind::PiecewiseFit => {
+            let Json::Arr(items) = get("coef")? else {
+                bail!("coef must be an array");
+            };
+            anyhow::ensure!(
+                matches!(spec, DesignSpec::Piecewise { .. }),
+                "piecewise-fit entry keyed by non-Piecewise spec {spec}"
+            );
+            if let DesignSpec::Piecewise { s, .. } = spec {
+                anyhow::ensure!(
+                    items.len() == s as usize,
+                    "coef length {} disagrees with S={s}",
+                    items.len()
+                );
+            }
+            let coef = items
+                .iter()
+                .map(|it| match it {
+                    Json::Arr(pair) if pair.len() == 2 => {
+                        Ok((get_i64(&pair[0], "alpha")?, get_i64(&pair[1], "beta")?))
+                    }
+                    other => bail!("coef entries must be [alpha, beta] pairs, got {}", other.to_string()),
+                })
+                .collect::<Result<Vec<(i64, i64)>>>()?;
+            CalibValue::Piecewise(Arc::new(coef))
+        }
+        ArtifactKind::ProductLut => bail!("product-lut entries are never persisted"),
+    };
+    Ok(StoreEntry { key, value })
+}
+
+fn params_to_json(p: &ScaleTrimParams) -> Json {
+    Json::obj()
+        .set("bits", p.bits)
+        .set("h", p.h)
+        .set("m", p.m)
+        .set("alpha", p.alpha)
+        .set("delta_ee", p.delta_ee as i64)
+        .set("c", p.c.clone())
+        .set("c_fixed", p.c_fixed.clone())
+        .set(
+            "seg_bounds",
+            p.seg_bounds.iter().map(|&b| b as i64).collect::<Vec<i64>>(),
+        )
+}
+
+fn params_from_json(v: &Json) -> Result<ScaleTrimParams> {
+    let Json::Obj(fields) = v else {
+        bail!("params must be an object");
+    };
+    let get = |key: &str| {
+        fields
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v)
+            .ok_or_else(|| anyhow!("params missing field {key:?}"))
+    };
+    let num_arr = |key: &str| -> Result<Vec<f64>> {
+        match get(key)? {
+            Json::Arr(items) => items
+                .iter()
+                .map(|it| match it {
+                    Json::Num(x) => Ok(*x),
+                    other => bail!("{key} entries must be numbers, got {}", other.to_string()),
+                })
+                .collect(),
+            other => bail!("{key} must be an array, got {}", other.to_string()),
+        }
+    };
+    let alpha = match get("alpha")? {
+        Json::Num(x) => *x,
+        other => bail!("alpha must be a number, got {}", other.to_string()),
+    };
+    let delta_ee = get_i64(get("delta_ee")?, "delta_ee")?;
+    anyhow::ensure!(
+        (i32::MIN as i64..=i32::MAX as i64).contains(&delta_ee),
+        "delta_ee {delta_ee} out of range"
+    );
+    let c = num_arr("c")?;
+    let c_fixed = num_arr("c_fixed")?
+        .into_iter()
+        .map(|x| {
+            anyhow::ensure!(x.fract() == 0.0, "c_fixed entry {x} is not an integer");
+            Ok(x as i64)
+        })
+        .collect::<Result<Vec<i64>>>()?;
+    let seg_bounds = num_arr("seg_bounds")?
+        .into_iter()
+        .map(|x| {
+            anyhow::ensure!(
+                x.fract() == 0.0 && x >= 0.0,
+                "seg_bounds entry {x} is not a non-negative integer"
+            );
+            Ok(x as u64)
+        })
+        .collect::<Result<Vec<u64>>>()?;
+    Ok(ScaleTrimParams {
+        bits: get_u32(get("bits")?, "bits")?,
+        h: get_u32(get("h")?, "h")?,
+        m: get_u32(get("m")?, "m")?,
+        alpha,
+        delta_ee: delta_ee as i32,
+        c,
+        c_fixed,
+        seg_bounds,
+    })
+}
+
+fn get_u32(v: &Json, key: &str) -> Result<u32> {
+    match v {
+        Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= u32::MAX as f64 => Ok(*x as u32),
+        other => bail!("{key} must be a non-negative integer, got {}", other.to_string()),
+    }
+}
+
+fn get_i64(v: &Json, key: &str) -> Result<i64> {
+    match v {
+        Json::Num(x) if x.fract() == 0.0 && x.abs() < 9e15 => Ok(*x as i64),
+        other => bail!("{key} must be an integer, got {}", other.to_string()),
+    }
+}
+
+/// The standard export set at one width: every registered scaleTRIM
+/// configuration calibrated exhaustively (the paper-fidelity constants),
+/// the same family re-segmented by the quantile strategy (`scaleTRIM-Q`),
+/// and the piecewise-linear ablation fit — i.e. everything a cold process
+/// would otherwise have to scan `O(2^bits)` operands for.
+pub fn default_export_entries(bits: u32) -> Result<Vec<StoreEntry>> {
+    let mut entries = Vec::new();
+    for spec in DesignSpec::enumerate(bits)? {
+        let DesignSpec::ScaleTrim { h, m } = spec else {
+            continue;
+        };
+        entries.push(StoreEntry {
+            key: CalibKey {
+                spec,
+                bits,
+                strategy: CalibStrategy::Exhaustive,
+                kind: ArtifactKind::ScaleTrimParams,
+            },
+            value: CalibValue::ScaleTrim(Arc::new(crate::lut::calibrate(bits, h, m))),
+        });
+        if m >= 2 {
+            entries.push(StoreEntry {
+                key: CalibKey {
+                    spec: DesignSpec::ScaleTrimQ { h, m },
+                    bits,
+                    strategy: CalibStrategy::Quantile,
+                    kind: ArtifactKind::ScaleTrimParams,
+                },
+                value: CalibValue::ScaleTrim(Arc::new(
+                    super::strategy::calibrator(CalibStrategy::Quantile).calibrate(bits, h, m),
+                )),
+            });
+        }
+    }
+    // The Table-3 piecewise ablation point.
+    let (ph, ps) = (4u32, 4u32);
+    if ph < bits {
+        entries.push(StoreEntry {
+            key: CalibKey {
+                spec: DesignSpec::Piecewise { h: ph, s: ps },
+                bits,
+                strategy: CalibStrategy::Exhaustive,
+                kind: ArtifactKind::PiecewiseFit,
+            },
+            value: CalibValue::Piecewise(Arc::new(super::strategy::fit_piecewise(bits, ph, ps))),
+        });
+    }
+    Ok(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(tag: &str) -> CalibStore {
+        let dir = std::env::temp_dir().join(format!(
+            "scaletrim-store-test-{tag}-{}",
+            std::process::id()
+        ));
+        CalibStore::at(dir)
+    }
+
+    fn one_entry() -> StoreEntry {
+        StoreEntry {
+            key: CalibKey {
+                spec: DesignSpec::ScaleTrim { h: 3, m: 4 },
+                bits: 8,
+                strategy: CalibStrategy::Exhaustive,
+                kind: ArtifactKind::ScaleTrimParams,
+            },
+            value: CalibValue::ScaleTrim(Arc::new(crate::lut::calibrate(8, 3, 4))),
+        }
+    }
+
+    #[test]
+    fn export_load_round_trip() {
+        let store = tmp_store("roundtrip");
+        let entry = one_entry();
+        store.export(std::slice::from_ref(&entry)).unwrap();
+        let loaded = store.load().unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded[0].key, entry.key);
+        let (CalibValue::ScaleTrim(a), CalibValue::ScaleTrim(b)) =
+            (&loaded[0].value, &entry.value)
+        else {
+            panic!("wrong value kinds");
+        };
+        assert_eq!(a.alpha.to_bits(), b.alpha.to_bits(), "alpha must survive bit-for-bit");
+        assert_eq!(a.c_fixed, b.c_fixed);
+        assert_eq!(a.seg_bounds, b.seg_bounds);
+    }
+
+    #[test]
+    fn load_if_present_on_empty_location() {
+        let store = tmp_store("absent-location");
+        assert!(store.load_if_present().unwrap().is_none());
+        assert!(store.load().is_err(), "explicit load of a missing file errors");
+    }
+
+    #[test]
+    fn product_luts_are_not_persistable() {
+        let store = tmp_store("lut-reject");
+        let entry = StoreEntry {
+            key: CalibKey {
+                spec: DesignSpec::ScaleTrim { h: 3, m: 4 },
+                bits: 8,
+                strategy: CalibStrategy::Exhaustive,
+                kind: ArtifactKind::ProductLut,
+            },
+            value: CalibValue::ProductLut(Arc::new(vec![0i32; 16])),
+        };
+        let e = store.export(&[entry]).unwrap_err();
+        assert!(e.to_string().contains("derived"), "{e}");
+    }
+
+    #[test]
+    fn default_export_set_covers_the_family() {
+        let entries = default_export_entries(8).unwrap();
+        // 18 uniform scaleTRIM configs + 12 quantile (m>=2) + 1 piecewise.
+        assert_eq!(entries.len(), 18 + 12 + 1, "expected the full 8-bit set");
+        assert!(entries.iter().any(|e| e.key.kind == ArtifactKind::PiecewiseFit));
+        assert!(entries
+            .iter()
+            .any(|e| matches!(e.key.spec, DesignSpec::ScaleTrimQ { .. })));
+    }
+
+    #[test]
+    fn fnv_vector() {
+        // Known FNV-1a 64 test vector.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

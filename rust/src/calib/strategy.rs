@@ -1,0 +1,628 @@
+//! Calibration strategies — pluggable ways of producing the scaleTRIM
+//! design-time constants (α, ΔEE, C_i) and the piecewise-linear fits.
+//!
+//! The paper has exactly one calibration procedure: an exhaustive operand
+//! scan followed by uniform S-segmentation (Sec. III-A/B). This module makes
+//! that one point on an accuracy-vs-calibration-cost axis:
+//!
+//! - [`CalibStrategy::Exhaustive`] — the paper's procedure, via the exact
+//!   truncation-class decomposition (`lut::calibrate`): O(2^bits) scan.
+//! - [`CalibStrategy::Analytic`] — closed-form class statistics
+//!   (`lut::calibrate_analytic`): O(bits·2^h), bit-comparable constants at
+//!   8/16 bits and the only practical option at 32+.
+//! - [`CalibStrategy::Sampled`] — Monte-Carlo class statistics from a
+//!   fixed-seed operand sample: cheap and width-independent, at the cost of
+//!   approximate constants (no paper-fidelity claim).
+//! - [`CalibStrategy::Quantile`] — keeps the exact statistics but replaces
+//!   the paper's *uniform* S-segments with error-mass-weighted boundaries:
+//!   segment edges are placed at quantiles of the absolute residual mass
+//!   |Σ EV(s)| over the truncated-sum space, so segments concentrate where
+//!   the linearization error lives. The resulting design is
+//!   [`DesignSpec::ScaleTrimQ`](crate::multipliers::DesignSpec) — distinct
+//!   hardware (boundary comparators instead of MSB indexing), distinct
+//!   identity.
+//!
+//! Every strategy is deterministic (fixed seeds), so calibration artifacts
+//! round-trip bit-for-bit through the artifact store
+//! ([`CalibStore`](super::CalibStore)).
+
+use crate::lut::{
+    analytic_classes, calibrate, calibrate_analytic, OperandClasses, ScaleTrimParams,
+    COMP_FRAC_BITS,
+};
+use crate::util::rng::Xoshiro256;
+use std::fmt;
+use std::str::FromStr;
+
+/// Operand samples drawn per calibration by [`CalibStrategy::Sampled`].
+pub const SAMPLED_OPERANDS: u64 = 1 << 15;
+
+/// Fixed seed for [`CalibStrategy::Sampled`] — part of the strategy's
+/// identity: two processes calibrating the same key must agree bit-for-bit
+/// (the artifact store pins this).
+pub const SAMPLED_SEED: u64 = 0x5CA1E_CA11B;
+
+/// Selectable calibration strategy — the third component of every
+/// [`CalibKey`](super::CalibKey).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum CalibStrategy {
+    /// Exact full-space scan (the paper's procedure; O(2^bits)).
+    Exhaustive,
+    /// Exact closed-form class statistics (O(bits·2^h); any width).
+    Analytic,
+    /// Fixed-seed Monte-Carlo class statistics (O(samples); approximate).
+    Sampled,
+    /// Exact statistics + error-mass-weighted segment boundaries
+    /// (the `scaleTRIM-Q` design family).
+    Quantile,
+    /// Externally supplied constants (`ScaleTrim::with_params` — paper
+    /// Table 7 replays, artifact experiments). Not a calibrator: there is
+    /// nothing to recompute, so [`calibrator`] rejects it — but it *is* a
+    /// cache identity, which keeps external-constant instances out of the
+    /// strategy-keyed product-LUT slots the self-calibrated configs share.
+    External,
+}
+
+impl CalibStrategy {
+    /// Every *calibratable* strategy, in cost order ([`External`]
+    /// (CalibStrategy::External) is an identity tag, not a backend).
+    pub const ALL: [CalibStrategy; 4] = [
+        CalibStrategy::Exhaustive,
+        CalibStrategy::Analytic,
+        CalibStrategy::Sampled,
+        CalibStrategy::Quantile,
+    ];
+
+    /// Stable lower-case tag (artifact files, CLI, cache keys on the wire).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CalibStrategy::Exhaustive => "exhaustive",
+            CalibStrategy::Analytic => "analytic",
+            CalibStrategy::Sampled => "sampled",
+            CalibStrategy::Quantile => "quantile",
+            CalibStrategy::External => "external",
+        }
+    }
+}
+
+impl fmt::Display for CalibStrategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for CalibStrategy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim() {
+            "exhaustive" => Ok(CalibStrategy::Exhaustive),
+            "analytic" => Ok(CalibStrategy::Analytic),
+            "sampled" => Ok(CalibStrategy::Sampled),
+            "quantile" => Ok(CalibStrategy::Quantile),
+            "external" => Ok(CalibStrategy::External),
+            other => Err(format!(
+                "unknown calibration strategy {other:?} \
+                 (known: exhaustive, analytic, sampled, quantile, external)"
+            )),
+        }
+    }
+}
+
+/// A calibration backend: turns `(bits, h, M)` into scaleTRIM constants.
+///
+/// Implementations must be deterministic — same inputs, bit-identical
+/// [`ScaleTrimParams`] — because the artifact store pins warm-start loads
+/// against fresh calibration. Panics on parameters outside the strategy's
+/// domain (the typed gate is
+/// [`DesignSpec::validate`](crate::multipliers::DesignSpec::validate),
+/// which every constructor routes through before reaching a calibrator).
+pub trait Calibrator: Send + Sync {
+    /// Which strategy this backend implements.
+    fn strategy(&self) -> CalibStrategy;
+
+    /// Produce the scaleTRIM(h, M) constants at the given operand width.
+    fn calibrate(&self, bits: u32, h: u32, m: u32) -> ScaleTrimParams;
+
+    /// Rough cold-calibration cost in datapath-equivalent operations —
+    /// the DSE's calibration-cost objective
+    /// ([`DesignPoint::mared_calib_cost`](crate::dse::DesignPoint::mared_calib_cost)).
+    fn cost_ops(&self, bits: u32, h: u32) -> f64;
+
+    /// Whether the strategy claims the paper's Table 4/7 anchors (exact
+    /// statistics + the paper's segmentation). Anchor tests gate on this.
+    fn paper_fidelity(&self) -> bool;
+}
+
+/// Resolve the backend for a strategy (stateless singletons). Panics on
+/// [`CalibStrategy::External`] — external constants are an identity, not a
+/// recomputable calibration (guarded upstream: `ScaleTrim::with_strategy`
+/// rejects it as a typed error).
+pub fn calibrator(s: CalibStrategy) -> &'static dyn Calibrator {
+    match s {
+        CalibStrategy::Exhaustive => &ExhaustiveCalibrator,
+        CalibStrategy::Analytic => &AnalyticCalibrator,
+        CalibStrategy::Sampled => &SampledCalibrator,
+        CalibStrategy::Quantile => &QuantileCalibrator,
+        CalibStrategy::External => {
+            panic!("external constants have no calibrator — they arrive via with_params")
+        }
+    }
+}
+
+/// The paper's procedure: exact class statistics from a full operand scan,
+/// uniform segmentation ([`crate::lut::calibrate`]).
+pub struct ExhaustiveCalibrator;
+
+impl Calibrator for ExhaustiveCalibrator {
+    fn strategy(&self) -> CalibStrategy {
+        CalibStrategy::Exhaustive
+    }
+    fn calibrate(&self, bits: u32, h: u32, m: u32) -> ScaleTrimParams {
+        calibrate(bits, h, m)
+    }
+    fn cost_ops(&self, bits: u32, h: u32) -> f64 {
+        (1u64 << bits) as f64 + 4f64.powi(h as i32)
+    }
+    fn paper_fidelity(&self) -> bool {
+        true
+    }
+}
+
+/// Closed-form class statistics ([`crate::lut::calibrate_analytic`]) —
+/// exact at every width, O(bits·2^h).
+pub struct AnalyticCalibrator;
+
+impl Calibrator for AnalyticCalibrator {
+    fn strategy(&self) -> CalibStrategy {
+        CalibStrategy::Analytic
+    }
+    fn calibrate(&self, bits: u32, h: u32, m: u32) -> ScaleTrimParams {
+        calibrate_analytic(bits, h, m)
+    }
+    fn cost_ops(&self, bits: u32, h: u32) -> f64 {
+        (bits as f64) * (1u64 << h) as f64 + 4f64.powi(h as i32)
+    }
+    fn paper_fidelity(&self) -> bool {
+        true
+    }
+}
+
+/// Fixed-seed Monte-Carlo class statistics: `SAMPLED_OPERANDS` draws per
+/// calibration regardless of width — the cheap option for 16/24-bit spaces
+/// when the closed form is not trusted and a full scan is not affordable.
+pub struct SampledCalibrator;
+
+impl Calibrator for SampledCalibrator {
+    fn strategy(&self) -> CalibStrategy {
+        CalibStrategy::Sampled
+    }
+    fn calibrate(&self, bits: u32, h: u32, m: u32) -> ScaleTrimParams {
+        let (count, sum_x) = sampled_classes(bits, h, SAMPLED_OPERANDS, SAMPLED_SEED);
+        fit_params(bits, h, m, &count, &sum_x, Vec::new())
+    }
+    fn cost_ops(&self, _bits: u32, h: u32) -> f64 {
+        // One class-accumulate per drawn operand, plus the pair loop.
+        SAMPLED_OPERANDS as f64 + 4f64.powi(h as i32)
+    }
+    fn paper_fidelity(&self) -> bool {
+        false
+    }
+}
+
+/// Exact (closed-form) statistics with error-mass-weighted segment
+/// boundaries: the `scaleTRIM-Q` alternative to the paper's uniform
+/// S-segments. Boundaries land at equal quantiles of the absolute residual
+/// mass, so compensation resolution goes where the linearization error is.
+pub struct QuantileCalibrator;
+
+impl Calibrator for QuantileCalibrator {
+    fn strategy(&self) -> CalibStrategy {
+        CalibStrategy::Quantile
+    }
+    fn calibrate(&self, bits: u32, h: u32, m: u32) -> ScaleTrimParams {
+        let (count, sum_x) = analytic_classes(bits, h);
+        if m < 2 {
+            // Degenerate: nothing to segment — identical to the uniform fit.
+            return fit_params(bits, h, m, &count, &sum_x, Vec::new());
+        }
+        let core = fit_core(h, &count, &sum_x, true);
+        let bounds = quantile_bounds(&core.ev_sum, m);
+        assemble(bits, h, m, &core, bounds)
+    }
+    fn cost_ops(&self, bits: u32, h: u32) -> f64 {
+        // Analytic statistics + one extra pass over the 2^(h+1) sums.
+        (bits as f64) * (1u64 << h) as f64 + 4f64.powi(h as i32) + (1u64 << (h + 1)) as f64
+    }
+    fn paper_fidelity(&self) -> bool {
+        false
+    }
+}
+
+/// Monte-Carlo per-class statistics: `samples` operands drawn uniformly
+/// from `[1, 2^bits)` with a fixed seed (deterministic by construction).
+fn sampled_classes(bits: u32, h: u32, samples: u64, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    use crate::multipliers::{leading_one, truncate_fraction};
+    let classes = 1usize << h;
+    let mut count = vec![0f64; classes];
+    let mut sum_x = vec![0f64; classes];
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    for _ in 0..samples {
+        let a = rng.gen_operand(bits);
+        let n = leading_one(a);
+        let x = a as f64 / (1u64 << n) as f64 - 1.0;
+        let u = truncate_fraction(a, n, h) as usize;
+        count[u] += 1.0;
+        sum_x[u] += x;
+    }
+    (count, sum_x)
+}
+
+/// Zero-intercept α fit over all truncation-class pairs — the same math as
+/// `lut::calibrate`, over caller-supplied class statistics.
+fn alpha_fit(h: u32, count: &[f64], sum_x: &[f64]) -> f64 {
+    let classes = 1usize << h;
+    let scale = (1u64 << h) as f64;
+    let mut sum_ts = 0f64;
+    let mut sum_ss = 0f64;
+    for u in 0..classes {
+        let (nu, sxu) = (count[u], sum_x[u]);
+        if nu == 0.0 {
+            continue;
+        }
+        for v in 0..classes {
+            let (nv, sxv) = (count[v], sum_x[v]);
+            if nv == 0.0 {
+                continue;
+            }
+            let s = (u + v) as f64 / scale;
+            let sum_t = nv * sxu + nu * sxv + sxu * sxv;
+            sum_ts += s * sum_t;
+            sum_ss += s * s * nu * nv;
+        }
+    }
+    sum_ts / sum_ss
+}
+
+/// Per-truncated-sum residual profile: for every `s_int ∈ [0, 2^(h+1)−1)`,
+/// the pair mass `w[s] = Σ n_u·n_v` and the summed Error Value
+/// `ev_sum[s] = Σ (t − gain·s)` over class pairs with `u + v = s`.
+fn space_profile(h: u32, count: &[f64], sum_x: &[f64], gain: f64) -> (Vec<f64>, Vec<f64>) {
+    let classes = 1usize << h;
+    let scale = (1u64 << h) as f64;
+    let len = 2 * classes - 1;
+    let mut w = vec![0f64; len];
+    let mut ev_sum = vec![0f64; len];
+    for u in 0..classes {
+        let (nu, sxu) = (count[u], sum_x[u]);
+        if nu == 0.0 {
+            continue;
+        }
+        for v in 0..classes {
+            let (nv, sxv) = (count[v], sum_x[v]);
+            if nv == 0.0 {
+                continue;
+            }
+            let s_int = u + v;
+            let s = s_int as f64 / scale;
+            let sum_t = nv * sxu + nu * sxv + sxu * sxv;
+            w[s_int] += nu * nv;
+            ev_sum[s_int] += sum_t - gain * s * nu * nv;
+        }
+    }
+    (w, ev_sum)
+}
+
+/// Place `m − 1` strictly-increasing segment boundaries at equal quantiles
+/// of the absolute residual mass `|ev_sum[s]|`. Boundaries may run past the
+/// populated range when `m` exceeds the number of mass-bearing sums — the
+/// trailing segments are then empty (`C_i = 0`) and never selected.
+fn quantile_bounds(ev_sum: &[f64], m: u32) -> Vec<u64> {
+    debug_assert!(m >= 2);
+    let total: f64 = ev_sum.iter().map(|e| e.abs()).sum();
+    let mut bounds: Vec<u64> = Vec::with_capacity(m as usize - 1);
+    if total > 0.0 {
+        let mut cum = 0f64;
+        let mut k = 1u32;
+        for (s, e) in ev_sum.iter().enumerate() {
+            cum += e.abs();
+            while k < m && cum >= total * k as f64 / m as f64 - 1e-12 {
+                let cand = (s as u64 + 1).max(bounds.last().map_or(1, |&b| b + 1));
+                bounds.push(cand);
+                k += 1;
+            }
+            if k >= m {
+                break;
+            }
+        }
+    }
+    // Degenerate profiles (all-zero mass, or fewer sums than segments):
+    // pad with strictly-increasing out-of-range boundaries (the trailing
+    // segments stay empty and unselected).
+    while bounds.len() < m as usize - 1 {
+        let floor = ev_sum.len() as u64;
+        let next = bounds.last().map_or(floor, |&b| (b + 1).max(floor));
+        bounds.push(next);
+    }
+    bounds
+}
+
+/// The segmentation-independent half of a calibration: the α fit, its
+/// power-of-two quantisation, and (when segments will be fitted) the
+/// per-truncated-sum residual profile.
+struct FitCore {
+    alpha: f64,
+    delta_ee: i32,
+    /// Pair mass per `s_int` (empty when the profile was skipped).
+    w: Vec<f64>,
+    /// Summed Error Value per `s_int` (empty when the profile was skipped).
+    ev_sum: Vec<f64>,
+}
+
+fn fit_core(h: u32, count: &[f64], sum_x: &[f64], with_profile: bool) -> FitCore {
+    let alpha = alpha_fit(h, count, sum_x);
+    let delta_ee = (alpha - 1.0).log2().floor() as i32;
+    let (w, ev_sum) = if with_profile {
+        let gain = 1.0 + (delta_ee as f64).exp2();
+        space_profile(h, count, sum_x, gain)
+    } else {
+        // Linearization-only (M = 0): the residual pair-loop would be
+        // discarded — skip the whole second pass.
+        (Vec::new(), Vec::new())
+    };
+    FitCore {
+        alpha,
+        delta_ee,
+        w,
+        ev_sum,
+    }
+}
+
+/// Uniform-segmentation fit over caller-supplied class statistics — the
+/// single copy of the paper's fit + averaging math. The reference entry
+/// points [`crate::lut::calibrate`] (scan statistics) and
+/// [`crate::lut::calibrate_analytic`] (closed-form statistics) both route
+/// here, as do the sampled backend and (via explicit bounds) the quantile
+/// backend: only the *class-statistics producer* differs per path.
+pub(crate) fn fit_uniform(
+    bits: u32,
+    h: u32,
+    m: u32,
+    count: &[f64],
+    sum_x: &[f64],
+) -> ScaleTrimParams {
+    fit_params(bits, h, m, count, sum_x, Vec::new())
+}
+
+/// [`fit_uniform`] with optional explicit segment boundaries (`bounds`
+/// empty means the paper's uniform split).
+fn fit_params(
+    bits: u32,
+    h: u32,
+    m: u32,
+    count: &[f64],
+    sum_x: &[f64],
+    bounds: Vec<u64>,
+) -> ScaleTrimParams {
+    let core = fit_core(h, count, sum_x, m > 0);
+    assemble(bits, h, m, &core, bounds)
+}
+
+/// Average the residual per segment (uniform split when `bounds` is empty,
+/// the supplied boundaries otherwise) and assemble validated params. The
+/// segment mapping is [`crate::lut`]'s `segment_of` — the same function
+/// the datapath selects with, so calibration-time averaging and hardware
+/// segment selection cannot drift apart.
+fn assemble(bits: u32, h: u32, m: u32, core: &FitCore, bounds: Vec<u64>) -> ScaleTrimParams {
+    let (c, c_fixed) = if m == 0 {
+        (Vec::new(), Vec::new())
+    } else {
+        let mut err_sum = vec![0f64; m as usize];
+        let mut err_cnt = vec![0f64; m as usize];
+        for (s_int, (&ws, &es)) in core.w.iter().zip(core.ev_sum.iter()).enumerate() {
+            if ws == 0.0 {
+                continue;
+            }
+            let seg = crate::lut::segment_of(s_int as u64, m, h, &bounds);
+            err_sum[seg] += es;
+            err_cnt[seg] += ws;
+        }
+        let c: Vec<f64> = err_sum
+            .iter()
+            .zip(&err_cnt)
+            .map(|(&e, &n)| if n > 0.0 { e / n } else { 0.0 })
+            .collect();
+        let q = (1u64 << COMP_FRAC_BITS) as f64;
+        let c_fixed = c.iter().map(|&x| (x * q).round() as i64).collect();
+        (c, c_fixed)
+    };
+    let params = ScaleTrimParams {
+        bits,
+        h,
+        m,
+        alpha: core.alpha,
+        delta_ee: core.delta_ee,
+        c,
+        c_fixed,
+        seg_bounds: if m == 0 { Vec::new() } else { bounds },
+    };
+    params.validate();
+    params
+}
+
+/// Offline per-segment least-squares fit of `t = X+Y+XY` on `s = X_h+Y_h`
+/// for the piecewise-linear baseline (Sec. IV-D) — the pure computation
+/// behind [`PiecewiseLinear`](crate::multipliers::PiecewiseLinear); the
+/// process-wide copy lives in the [`CalibCache`](super::CalibCache).
+pub fn fit_piecewise(bits: u32, h: u32, segments: u32) -> Vec<(i64, i64)> {
+    let f = crate::multipliers::piecewise::PIECEWISE_FRAC_BITS;
+    let cls = OperandClasses::scan(bits, h);
+    let classes = 1usize << h;
+    let scale = (1u64 << h) as f64;
+    // Per-segment normal-equation sums for t ~ α s + β.
+    let m = segments as usize;
+    let (mut sw, mut ss, mut sss, mut st, mut sst) =
+        (vec![0f64; m], vec![0f64; m], vec![0f64; m], vec![0f64; m], vec![0f64; m]);
+    for u in 0..classes {
+        let (nu, sxu) = (cls.count[u] as f64, cls.sum_x[u]);
+        if nu == 0.0 {
+            continue;
+        }
+        for v in 0..classes {
+            let (nv, sxv) = (cls.count[v] as f64, cls.sum_x[v]);
+            if nv == 0.0 {
+                continue;
+            }
+            let s_int = (u + v) as u64;
+            let s = s_int as f64 / scale;
+            let seg = crate::lut::segment_of(s_int, segments, h, &[]);
+            let wgt = nu * nv;
+            let sum_t = nv * sxu + nu * sxv + sxu * sxv;
+            sw[seg] += wgt;
+            ss[seg] += wgt * s;
+            sss[seg] += wgt * s * s;
+            st[seg] += sum_t;
+            sst[seg] += s * sum_t;
+        }
+    }
+    (0..m)
+        .map(|i| {
+            let det = sw[i] * sss[i] - ss[i] * ss[i];
+            let (alpha, beta) = if det.abs() < 1e-12 {
+                // Degenerate segment (single s value): constant fit.
+                (0.0, if sw[i] > 0.0 { st[i] / sw[i] } else { 0.0 })
+            } else {
+                let alpha = (sw[i] * sst[i] - ss[i] * st[i]) / det;
+                let beta = (sss[i] * st[i] - ss[i] * sst[i]) / det;
+                (alpha, beta)
+            };
+            let q = (1u64 << f) as f64;
+            ((alpha * q).round() as i64, (beta * q).round() as i64)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_tags_round_trip() {
+        for s in CalibStrategy::ALL {
+            assert_eq!(s.as_str().parse::<CalibStrategy>().unwrap(), s);
+            assert_eq!(calibrator(s).strategy(), s);
+        }
+        // The external tag round-trips but is not a backend.
+        assert_eq!(
+            "external".parse::<CalibStrategy>().unwrap(),
+            CalibStrategy::External
+        );
+        assert!("warp".parse::<CalibStrategy>().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "no calibrator")]
+    fn external_has_no_calibrator() {
+        let _ = calibrator(CalibStrategy::External);
+    }
+
+    /// The factored fit over *exhaustive-scan* statistics must reproduce
+    /// `lut::calibrate`: α bit-for-bit (same accumulation order), the
+    /// segment constants to within re-association noise (the factored
+    /// path pre-aggregates per truncated sum, which reorders the float
+    /// additions), and the 16-bit datapath constants exactly.
+    #[test]
+    fn factored_fit_matches_reference_calibration() {
+        for (h, m) in [(3u32, 0u32), (3, 4), (4, 8)] {
+            let cls = OperandClasses::scan(8, h);
+            let count: Vec<f64> = cls.count.iter().map(|&c| c as f64).collect();
+            let ours = fit_params(8, h, m, &count, &cls.sum_x, Vec::new());
+            let reference = calibrate(8, h, m);
+            assert_eq!(ours.alpha.to_bits(), reference.alpha.to_bits(), "h={h} m={m}");
+            assert_eq!(ours.delta_ee, reference.delta_ee);
+            assert_eq!(ours.c_fixed, reference.c_fixed, "h={h} m={m}");
+            for (a, b) in ours.c.iter().zip(&reference.c) {
+                assert!((a - b).abs() < 1e-9, "h={h} m={m}: C {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_close_to_exact() {
+        let exact = calibrate(8, 3, 4);
+        let sampled = calibrator(CalibStrategy::Sampled).calibrate(8, 3, 4);
+        assert!(
+            (exact.alpha - sampled.alpha).abs() < 0.02,
+            "sampled alpha {} vs exact {}",
+            sampled.alpha,
+            exact.alpha
+        );
+        assert_eq!(exact.delta_ee, sampled.delta_ee);
+        for (a, b) in exact.c.iter().zip(&sampled.c) {
+            assert!((a - b).abs() < 0.05, "C drift: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sampled_is_deterministic() {
+        let a = calibrator(CalibStrategy::Sampled).calibrate(16, 5, 8);
+        let b = calibrator(CalibStrategy::Sampled).calibrate(16, 5, 8);
+        assert_eq!(a.alpha.to_bits(), b.alpha.to_bits());
+        assert_eq!(a.c_fixed, b.c_fixed);
+    }
+
+    #[test]
+    fn quantile_bounds_are_strictly_increasing_and_sized() {
+        let p = calibrator(CalibStrategy::Quantile).calibrate(8, 4, 8);
+        assert_eq!(p.seg_bounds.len(), 7);
+        for w in p.seg_bounds.windows(2) {
+            assert!(w[0] < w[1], "bounds not strictly increasing: {:?}", p.seg_bounds);
+        }
+        assert_eq!(p.c.len(), 8);
+        // The α fit is segmentation-independent: identical to analytic.
+        let uniform = calibrate_analytic(8, 4, 8);
+        assert_eq!(p.alpha.to_bits(), uniform.alpha.to_bits());
+        assert_eq!(p.delta_ee, uniform.delta_ee);
+    }
+
+    #[test]
+    fn quantile_segment_lookup_covers_all_segments_in_range() {
+        let p = calibrator(CalibStrategy::Quantile).calibrate(8, 3, 4);
+        let max_s = (1u64 << 4) - 2; // 2^(h+1) − 2
+        let mut seen = vec![false; 4];
+        for s in 0..=max_s {
+            let seg = p.segment(s);
+            assert!(seg < 4);
+            seen[seg] = true;
+        }
+        // At least the first segments must be reachable (trailing ones may
+        // be empty on degenerate profiles, never on the real 8-bit one).
+        assert!(seen[0] && seen[1], "segments unreachable: {seen:?}");
+    }
+
+    #[test]
+    fn cost_ordering_is_sane() {
+        let h = 5u32;
+        let ex = calibrator(CalibStrategy::Exhaustive).cost_ops(16, h);
+        let an = calibrator(CalibStrategy::Analytic).cost_ops(16, h);
+        let sa = calibrator(CalibStrategy::Sampled).cost_ops(16, h);
+        assert!(an < ex, "analytic must be cheaper than a 16-bit scan");
+        assert!(sa < ex);
+        // Paper fidelity: exact statistics + paper segmentation only.
+        assert!(calibrator(CalibStrategy::Exhaustive).paper_fidelity());
+        assert!(calibrator(CalibStrategy::Analytic).paper_fidelity());
+        assert!(!calibrator(CalibStrategy::Sampled).paper_fidelity());
+        assert!(!calibrator(CalibStrategy::Quantile).paper_fidelity());
+    }
+
+    #[test]
+    fn fit_piecewise_matches_expected_shape() {
+        let coef = fit_piecewise(8, 4, 4);
+        assert_eq!(coef.len(), 4);
+        // α_s near the global fit (~1.3·2^24) for interior segments.
+        let q = (1u64 << crate::multipliers::piecewise::PIECEWISE_FRAC_BITS) as f64;
+        for &(a, _) in &coef[1..3] {
+            let a = a as f64 / q;
+            assert!(a > 0.5 && a < 2.5, "per-segment alpha {a} out of family");
+        }
+    }
+}

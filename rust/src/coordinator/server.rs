@@ -52,6 +52,12 @@ impl Coordinator {
         configs: &[&dyn ApproxMultiplier],
         policy: BatchPolicy,
     ) -> Self {
+        // Lane constants and product LUTs resolve through the process-wide
+        // calibration cache, which (under the SCALETRIM_ARTIFACTS opt-in)
+        // seeds itself from the on-disk artifact store on first access —
+        // so constructing a coordinator on the warm path does file reads
+        // instead of O(2^bits) calibration scans. No explicit call needed:
+        // the `cached_lut` acquisitions below reach the cache themselves.
         let metrics = Arc::new(Metrics::new());
         let (c, h, w) = backend.input_shape();
         let img_size = c * h * w;

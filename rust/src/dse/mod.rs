@@ -7,6 +7,7 @@ mod pareto;
 
 pub use pareto::{dominance, pareto_front, Dominance};
 
+use crate::calib::CalibStrategy;
 use crate::error::{sweep_full, ErrorReport, PercentileReport, SweepSpec};
 use crate::hardware::{paper_reference, try_estimate, HwEstimate};
 use crate::multipliers::{ApproxMultiplier, DesignSpec};
@@ -27,6 +28,12 @@ pub struct DesignPoint {
     pub percentiles: PercentileReport,
     /// Modelled hardware cost.
     pub hw: HwEstimate,
+    /// Calibration strategy behind the instance's design-time constants.
+    pub calib: CalibStrategy,
+    /// Design-time calibration cost in datapath-equivalent operations
+    /// (0 for designs that need no calibration) — the third axis the
+    /// calibration plane adds to the exploration.
+    pub calib_cost_ops: f64,
     /// Paper Table 4 row, when published: (mred, delay, area, power, pdp).
     pub paper: Option<(f64, f64, f64, f64, f64)>,
 }
@@ -46,6 +53,8 @@ impl DesignPoint {
             error,
             percentiles,
             hw,
+            calib: m.calib_strategy(),
+            calib_cost_ops: m.calib_cost_ops(),
             paper: paper_reference(&spec),
             name: spec.to_string(),
             spec,
@@ -69,6 +78,15 @@ impl DesignPoint {
     /// error *consistency* against energy, both minimised.
     pub fn stdared_energy(&self) -> (f64, f64) {
         (self.error.stdared_pct, self.hw.pdp_fj)
+    }
+
+    /// The calibration plane's objective: (MARED %, design-time
+    /// calibration cost in ops) — both minimised. Separates "accurate
+    /// because it calibrated hard" from "accurate for free": an analytic
+    /// or sampled strategy Pareto-dominates the exhaustive scan here
+    /// whenever its accuracy holds up.
+    pub fn mared_calib_cost(&self) -> (f64, f64) {
+        (self.error.mred_pct, self.calib_cost_ops)
     }
 }
 
@@ -126,6 +144,28 @@ mod tests {
         assert!(p.error.stdared_pct > 0.0);
         assert_eq!(p.mared_energy(), (p.error.mred_pct, p.hw.pdp_fj));
         assert_eq!(p.stdared_energy(), (p.error.stdared_pct, p.hw.pdp_fj));
+        // The calibration axis: scaleTRIM pays an exhaustive-scan cost.
+        assert_eq!(p.calib, crate::calib::CalibStrategy::Exhaustive);
+        assert!(p.calib_cost_ops > 0.0);
+        assert_eq!(p.mared_calib_cost(), (p.error.mred_pct, p.calib_cost_ops));
+    }
+
+    /// The calibration-cost objective separates calibrated designs from
+    /// calibration-free ones, and cheap strategies from the full scan.
+    #[test]
+    fn calibration_cost_axis_is_populated() {
+        let st = DesignPoint::evaluate(&ScaleTrim::new(8, 3, 4), SweepSpec::Exhaustive);
+        let dr = DesignPoint::evaluate(&Drum::new(8, 4), SweepSpec::Exhaustive);
+        assert_eq!(dr.calib_cost_ops, 0.0, "DRUM needs no design-time calibration");
+        assert!(st.calib_cost_ops > 0.0);
+        let analytic = ScaleTrim::with_strategy(8, 3, 4, crate::calib::CalibStrategy::Analytic)
+            .unwrap();
+        let an = DesignPoint::evaluate(&analytic, SweepSpec::Exhaustive);
+        assert!(
+            an.calib_cost_ops < st.calib_cost_ops,
+            "analytic calibration must be cheaper than the scan"
+        );
+        assert_eq!(an.calib, crate::calib::CalibStrategy::Analytic);
     }
 
     #[test]

@@ -106,6 +106,19 @@ fn structural(spec: &DesignSpec, bits: u32) -> crate::Result<Cost> {
                 })
                 .then(barrel_shifter(h + 6, 2 * n))
         }
+        DesignSpec::ScaleTrimQ { h, m } => {
+            anyhow::ensure!(h < n, "{spec} needs h < {n}");
+            anyhow::ensure!(m >= 2, "{spec} needs at least two segments");
+            // Same datapath as scaleTRIM(h, M); the uniform design's free
+            // MSB segment index is replaced by M−1 parallel (h+1)-bit
+            // threshold comparators (≈ adders) plus a priority encoder
+            // (≈ an M-way mux) — the area price of quantile segmentation.
+            let base = structural(&DesignSpec::ScaleTrim { h, m }, n)?;
+            let select = adder(h + 1)
+                .times(m.saturating_sub(1) as u64)
+                .then(mux(1, m));
+            base.beside(select)
+        }
         DesignSpec::Drum { m } => {
             anyhow::ensure!(m <= n, "{spec} needs m <= {n}");
             lod(n, false)
@@ -500,6 +513,24 @@ mod tests {
         // And the happy path agrees with the panicking wrapper.
         let st = ScaleTrim::new(8, 4, 8);
         assert_eq!(try_estimate(&st).unwrap().pdp_fj, estimate(&st).pdp_fj);
+    }
+
+    /// Quantile segmentation pays for its comparators: scaleTRIM-Q(h,M)
+    /// must cost strictly more area than scaleTRIM(h,M), same datapath
+    /// otherwise.
+    #[test]
+    fn quantile_variant_costs_its_comparators() {
+        let uniform = estimate(&ScaleTrim::new(8, 4, 8));
+        let quantile = estimate(
+            &ScaleTrim::with_strategy(8, 4, 8, crate::calib::CalibStrategy::Quantile).unwrap(),
+        );
+        assert!(
+            quantile.area_um2 > uniform.area_um2,
+            "Q area {} must exceed uniform {}",
+            quantile.area_um2,
+            uniform.area_um2
+        );
+        assert!(quantile.delay_ns >= uniform.delay_ns);
     }
 
     #[test]

@@ -22,6 +22,18 @@
 //! - [`lut`] — the offline calibration flow of Sec. III: zero-intercept
 //!   least-squares linearization (α, ΔEE) and the piecewise-constant
 //!   compensation LUT (C_i).
+//! - [`calib`] — the **unified calibration plane**: a
+//!   [`calib::Calibrator`] trait with four selectable strategies
+//!   (exhaustive scan, closed-form analytic, fixed-seed sampled, and the
+//!   quantile-segmented `scaleTRIM-Q` alternative to the paper's uniform
+//!   S-segments); one process-wide, poison-safe
+//!   [`calib::CalibCache`] keyed on `(DesignSpec, bits, strategy, kind)`
+//!   that replaced the three ad-hoc calibration statics; and a versioned,
+//!   checksummed on-disk artifact store ([`calib::CalibStore`],
+//!   `scaletrim calib export`) whose warm-start loads are bit-for-bit
+//!   identical to fresh calibration. Set `SCALETRIM_ARTIFACTS` at an
+//!   exported set and every calibration in the process becomes a file
+//!   read.
 //! - [`error`] — error metrics (MARED/MRED Eq. 8, StdARED, MED, Max-Error,
 //!   signed-ED Std) and the exhaustive / sampled / percentile operand-space
 //!   sweeps, all driven in `mul_batch` chunks over worker threads and
@@ -79,6 +91,7 @@
 //! [`multipliers::DesignSpec`] and `build` it instead. Unknown labels are
 //! typed [`multipliers::ParseSpecError`]s carrying near-miss suggestions,
 //! not a silent `None`.
+pub mod calib;
 pub mod coordinator;
 pub mod dse;
 pub mod error;

@@ -19,7 +19,7 @@
 //! `O(N · 2^h)` time and `O(2^h)` memory — a 32-bit calibration takes
 //! microseconds instead of the paper's "impractical" `O(4^N)` pair scan.
 
-use super::calib::{ScaleTrimParams, COMP_FRAC_BITS};
+use super::calib::ScaleTrimParams;
 
 /// Exact per-class statistics computed in closed form (no operand scan).
 pub fn analytic_classes(bits: u32, h: u32) -> (Vec<f64>, Vec<f64>) {
@@ -49,72 +49,14 @@ pub fn analytic_classes(bits: u32, h: u32) -> (Vec<f64>, Vec<f64>) {
 }
 
 /// Full closed-form calibration: identical math to [`super::calibrate`]
-/// but with analytic class statistics — valid for any width (8…64).
+/// but with analytic class statistics — valid for any width (8…64). The
+/// fit and averaging are the calibration plane's shared implementation
+/// ([`crate::calib`]); only the statistics producer differs.
 pub fn calibrate_analytic(bits: u32, h: u32, m: u32) -> ScaleTrimParams {
     assert!(h >= 2 && h <= 12 && bits >= 4 && bits <= 63);
     assert!(m == 0 || m.is_power_of_two());
     let (count, sum_x) = analytic_classes(bits, h);
-    let classes = 1usize << h;
-    let scale = (1u64 << h) as f64;
-
-    let mut sum_ts = 0f64;
-    let mut sum_ss = 0f64;
-    for u in 0..classes {
-        let (nu, sxu) = (count[u], sum_x[u]);
-        if nu == 0.0 {
-            continue;
-        }
-        for v in 0..classes {
-            let (nv, sxv) = (count[v], sum_x[v]);
-            let s = (u + v) as f64 / scale;
-            let sum_t = nv * sxu + nu * sxv + sxu * sxv;
-            sum_ts += s * sum_t;
-            sum_ss += s * s * nu * nv;
-        }
-    }
-    let alpha = sum_ts / sum_ss;
-    let delta_ee = (alpha - 1.0).log2().floor() as i32;
-    let gain = 1.0 + (delta_ee as f64).exp2();
-
-    let (c, c_fixed) = if m == 0 {
-        (Vec::new(), Vec::new())
-    } else {
-        let mut err_sum = vec![0f64; m as usize];
-        let mut err_cnt = vec![0f64; m as usize];
-        for u in 0..classes {
-            let (nu, sxu) = (count[u], sum_x[u]);
-            if nu == 0.0 {
-                continue;
-            }
-            for v in 0..classes {
-                let (nv, sxv) = (count[v], sum_x[v]);
-                let s_int = (u + v) as u64;
-                let s = s_int as f64 / scale;
-                let seg = (((s_int as u128 * m as u128) >> (h + 1)) as usize).min(m as usize - 1);
-                err_sum[seg] += nv * sxu + nu * sxv + sxu * sxv - gain * s * nu * nv;
-                err_cnt[seg] += nu * nv;
-            }
-        }
-        let c: Vec<f64> = err_sum
-            .iter()
-            .zip(&err_cnt)
-            .map(|(&e, &n)| if n > 0.0 { e / n } else { 0.0 })
-            .collect();
-        let q = (1u64 << COMP_FRAC_BITS) as f64;
-        let c_fixed = c.iter().map(|&x| (x * q).round() as i64).collect();
-        (c, c_fixed)
-    };
-    let params = ScaleTrimParams {
-        bits,
-        h,
-        m,
-        alpha,
-        delta_ee,
-        c,
-        c_fixed,
-    };
-    params.validate();
-    params
+    crate::calib::fit_uniform(bits, h, m, &count, &sum_x)
 }
 
 #[cfg(test)]

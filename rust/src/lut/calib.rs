@@ -23,8 +23,6 @@
 //! obstacle to 32-bit calibration (see DESIGN.md).
 
 use crate::multipliers::{leading_one, truncate_fraction};
-use std::collections::HashMap;
-use std::sync::Mutex;
 
 /// Fraction bits used for the fixed-point datapath constants. The paper
 /// stores each compensation value in 16 bits; we carry the whole datapath at
@@ -49,6 +47,13 @@ pub struct ScaleTrimParams {
     pub c: Vec<f64>,
     /// C_i quantised to `COMP_FRAC_BITS` fixed point (datapath constants).
     pub c_fixed: Vec<i64>,
+    /// Non-uniform segment boundaries (`m − 1` strictly-increasing
+    /// thresholds on `s_int`, in units of `2^-h`): `seg_bounds[i]` is the
+    /// first truncated sum belonging to segment `i + 1`. Empty means the
+    /// paper's uniform split — hardware MSB indexing. Non-empty only for
+    /// the quantile-calibrated `scaleTRIM-Q` family
+    /// ([`CalibStrategy::Quantile`](crate::calib::CalibStrategy)).
+    pub seg_bounds: Vec<u64>,
 }
 
 impl ScaleTrimParams {
@@ -59,37 +64,102 @@ impl ScaleTrimParams {
     /// and — in release builds — silently wrap to garbage products.
     /// Assert it loudly at construction instead, for every construction
     /// path ([`calibrate`], [`paper_table7_params`],
-    /// [`calibrate_analytic`](crate::lut::calibrate_analytic), and
-    /// `ScaleTrim::with_params` for externally supplied constants).
+    /// [`calibrate_analytic`](crate::lut::calibrate_analytic), the
+    /// strategy backends in [`crate::calib`], and `ScaleTrim::with_params`
+    /// for externally supplied constants). [`ScaleTrimParams::try_validate`]
+    /// is the typed form used by the artifact-store load path.
     pub fn validate(&self) {
-        let f = COMP_FRAC_BITS as i32;
-        assert!(
-            self.h >= 1 && self.h as i32 <= f,
-            "scaleTRIM(h={}, M={}): h must be in 1..={f} (datapath carries {f} fraction bits)",
-            self.h,
-            self.m
-        );
-        assert!(
-            f - self.h as i32 + self.delta_ee >= 0,
-            "scaleTRIM(h={}, M={}): ΔEE = {} < h − F = {} — the linearization shift \
-             (F − h + ΔEE) would underflow below zero and wrap as u32",
-            self.h,
-            self.m,
-            self.delta_ee,
-            self.h as i32 - f
-        );
+        if let Err(msg) = self.try_validate() {
+            panic!("{msg}");
+        }
     }
 
-    /// Segment index for a truncated sum `s_int` in units of `2^-h`
-    /// (hardware: the top ⌈log2 M⌉ bits of `X_h + Y_h`). `S ∈ [0, 2)` is
-    /// split into `M` uniform segments.
+    /// [`ScaleTrimParams::validate`] as a typed error — the gate every
+    /// loaded artifact passes before entering the calibration cache, so a
+    /// corrupt (or hostile) artifact file is a rejection message, not a
+    /// wrapped shift in the datapath.
+    pub fn try_validate(&self) -> Result<(), String> {
+        let f = COMP_FRAC_BITS as i32;
+        if !(self.h >= 1 && self.h as i32 <= f) {
+            return Err(format!(
+                "scaleTRIM(h={}, M={}): h must be in 1..={f} (datapath carries {f} fraction bits)",
+                self.h, self.m
+            ));
+        }
+        if f - self.h as i32 + self.delta_ee < 0 {
+            return Err(format!(
+                "scaleTRIM(h={}, M={}): ΔEE = {} < h − F = {} — the linearization shift \
+                 (F − h + ΔEE) would underflow below zero and wrap as u32",
+                self.h,
+                self.m,
+                self.delta_ee,
+                self.h as i32 - f
+            ));
+        }
+        if !self.alpha.is_finite() {
+            return Err(format!(
+                "scaleTRIM(h={}, M={}): non-finite alpha {}",
+                self.h, self.m, self.alpha
+            ));
+        }
+        let m = self.m as usize;
+        if self.c.len() != m || self.c_fixed.len() != self.c.len() {
+            return Err(format!(
+                "scaleTRIM(h={}, M={}): {} compensation constants / {} fixed-point words \
+                 (expected {m} of each)",
+                self.h,
+                self.m,
+                self.c.len(),
+                self.c_fixed.len()
+            ));
+        }
+        if !self.seg_bounds.is_empty() {
+            if m == 0 || self.seg_bounds.len() != m - 1 {
+                return Err(format!(
+                    "scaleTRIM(h={}, M={}): {} segment boundaries (expected {} or none)",
+                    self.h,
+                    self.m,
+                    self.seg_bounds.len(),
+                    m.saturating_sub(1)
+                ));
+            }
+            if self.seg_bounds.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(format!(
+                    "scaleTRIM(h={}, M={}): segment boundaries not strictly increasing: {:?}",
+                    self.h, self.m, self.seg_bounds
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Segment index for a truncated sum `s_int` in units of `2^-h`.
+    /// Uniform split (empty `seg_bounds`): the hardware's top ⌈log2 M⌉
+    /// bits of `X_h + Y_h`. Quantile split: the number of boundaries at or
+    /// below `s_int` (hardware: `M − 1` parallel threshold comparators).
     #[inline]
     pub fn segment(&self, s_int: u64) -> usize {
         debug_assert!(self.m > 0);
+        segment_of(s_int, self.m, self.h, &self.seg_bounds)
+    }
+}
+
+/// The one segment-index mapping shared by the datapath
+/// ([`ScaleTrimParams::segment`], the piecewise multiplier) and the
+/// calibration-time averaging (`calib::strategy`): calibration must
+/// aggregate residuals over exactly the segments the hardware will select,
+/// so this function is deliberately the only copy of the formula.
+#[inline]
+pub(crate) fn segment_of(s_int: u64, m: u32, h: u32, bounds: &[u64]) -> usize {
+    if bounds.is_empty() {
         // s = s_int / 2^h ∈ [0, 2); segment = floor(s · M / 2).
-        // s_int < 2^(h+1) ≤ 2^13 and M ≤ 2^7, so u64 math suffices.
-        let idx = (s_int * self.m as u64) >> (self.h + 1);
-        (idx as usize).min(self.m as usize - 1)
+        // s_int < 2^(h+1) ≤ 2^13 and M ≤ PARAM_MAX = 2^6, so u64 suffices.
+        let idx = (s_int * m as u64) >> (h + 1);
+        (idx as usize).min(m as usize - 1)
+    } else {
+        // Bounds are validated strictly increasing: binary search gives
+        // the same "number of boundaries at or below s" in O(log M).
+        bounds.partition_point(|&b| b <= s_int)
     }
 }
 
@@ -124,85 +194,18 @@ impl OperandClasses {
 
 /// Run the full calibration for `scaleTRIM(h, M)` at the given width.
 ///
-/// `m == 0` produces linearization-only constants (the paper's ST(h,0) rows).
+/// `m == 0` produces linearization-only constants (the paper's ST(h,0)
+/// rows). The fit itself — the zero-intercept α regression (Σ t·s / Σ s²
+/// over all class pairs), the ΔEE power-of-two rounding (Fig. 5b) and the
+/// per-segment residual averaging — is the calibration plane's single
+/// shared implementation ([`crate::calib`]); this entry point contributes
+/// the *exhaustive-scan* class statistics.
 pub fn calibrate(bits: u32, h: u32, m: u32) -> ScaleTrimParams {
     assert!(h >= 1 && h <= 12, "h out of range");
     assert!(m == 0 || m.is_power_of_two(), "M must be 0 or a power of two");
     let cls = OperandClasses::scan(bits, h);
-    let classes = 1usize << h;
-    let scale = (1u64 << h) as f64;
-
-    // --- α fit: Σ t·s / Σ s² over all class pairs (exact; see module docs).
-    let mut sum_ts = 0f64;
-    let mut sum_ss = 0f64;
-    for u in 0..classes {
-        let (nu, sxu) = (cls.count[u] as f64, cls.sum_x[u]);
-        if nu == 0.0 {
-            continue;
-        }
-        for v in 0..classes {
-            let (nv, sxv) = (cls.count[v] as f64, cls.sum_x[v]);
-            if nv == 0.0 {
-                continue;
-            }
-            let s = (u + v) as f64 / scale;
-            let sum_t = nv * sxu + nu * sxv + sxu * sxv;
-            sum_ts += s * sum_t;
-            sum_ss += s * s * nu * nv;
-        }
-    }
-    let alpha = sum_ts / sum_ss;
-    // ΔEE: round α−1 *down* to the nearest power of two (Fig. 5b).
-    let delta_ee = (alpha - 1.0).log2().floor() as i32;
-    let gain = 1.0 + (delta_ee as f64).exp2();
-
-    // --- C_i: mean residual EV per segment of S = X_h + Y_h ∈ [0, 2).
-    let (c, c_fixed) = if m == 0 {
-        (Vec::new(), Vec::new())
-    } else {
-        let mut err_sum = vec![0f64; m as usize];
-        let mut err_cnt = vec![0f64; m as usize];
-        for u in 0..classes {
-            let (nu, sxu) = (cls.count[u] as f64, cls.sum_x[u]);
-            if nu == 0.0 {
-                continue;
-            }
-            for v in 0..classes {
-                let (nv, sxv) = (cls.count[v] as f64, cls.sum_x[v]);
-                if nv == 0.0 {
-                    continue;
-                }
-                let s_int = (u + v) as u64;
-                let s = s_int as f64 / scale;
-                let seg = ((s_int as u128 * m as u128) >> (h + 1)) as usize;
-                let seg = seg.min(m as usize - 1);
-                let sum_t = nv * sxu + nu * sxv + sxu * sxv;
-                // Σ EV over the class pair = Σ t − gain·s·(n_u·n_v)
-                err_sum[seg] += sum_t - gain * s * nu * nv;
-                err_cnt[seg] += nu * nv;
-            }
-        }
-        let c: Vec<f64> = err_sum
-            .iter()
-            .zip(&err_cnt)
-            .map(|(&e, &n)| if n > 0.0 { e / n } else { 0.0 })
-            .collect();
-        let q = (1u64 << COMP_FRAC_BITS) as f64;
-        let c_fixed = c.iter().map(|&x| (x * q).round() as i64).collect();
-        (c, c_fixed)
-    };
-
-    let params = ScaleTrimParams {
-        bits,
-        h,
-        m,
-        alpha,
-        delta_ee,
-        c,
-        c_fixed,
-    };
-    params.validate();
-    params
+    let count: Vec<f64> = cls.count.iter().map(|&c| c as f64).collect();
+    crate::calib::fit_uniform(bits, h, m, &count, &cls.sum_x)
 }
 
 /// The compensation constants the paper *publishes* in Table 7 (8-bit,
@@ -241,20 +244,10 @@ pub fn paper_table7_params(h: u32, m: u32) -> Option<ScaleTrimParams> {
         delta_ee: -2,
         c: c.to_vec(),
         c_fixed: c.iter().map(|&x| (x * q).round() as i64).collect(),
+        seg_bounds: Vec::new(),
     };
     params.validate();
     Some(params)
-}
-
-/// Process-wide calibration cache: DSE sweeps instantiate the same configs
-/// repeatedly and 16-bit scans are O(2^16) each.
-pub fn cached_params(bits: u32, h: u32, m: u32) -> ScaleTrimParams {
-    static CACHE: Mutex<Option<HashMap<(u32, u32, u32), ScaleTrimParams>>> = Mutex::new(None);
-    let mut guard = CACHE.lock().unwrap();
-    let map = guard.get_or_insert_with(HashMap::new);
-    map.entry((bits, h, m))
-        .or_insert_with(|| calibrate(bits, h, m))
-        .clone()
 }
 
 #[cfg(test)]
@@ -380,6 +373,7 @@ mod tests {
             delta_ee: -14, // F − h + ΔEE = 16 − 3 − 14 = −1
             c: Vec::new(),
             c_fixed: Vec::new(),
+            seg_bounds: Vec::new(),
         };
         p.validate();
     }
@@ -395,15 +389,37 @@ mod tests {
             delta_ee: -13,
             c: Vec::new(),
             c_fixed: Vec::new(),
+            seg_bounds: Vec::new(),
         };
         p.validate();
     }
 
     #[test]
-    fn cache_returns_consistent_values() {
-        let a = cached_params(8, 3, 4);
-        let b = cached_params(8, 3, 4);
-        assert_eq!(a.alpha, b.alpha);
-        assert_eq!(a.c_fixed, b.c_fixed);
+    fn try_validate_rejects_malformed_constants() {
+        let mut p = calibrate(8, 3, 4);
+        assert!(p.try_validate().is_ok());
+        // Wrong LUT length.
+        p.c_fixed.pop();
+        assert!(p.try_validate().is_err());
+        // Malformed quantile boundaries.
+        let mut q = calibrate(8, 3, 4);
+        q.seg_bounds = vec![4, 4, 9]; // not strictly increasing
+        assert!(q.try_validate().is_err());
+        q.seg_bounds = vec![4, 8]; // wrong count for M=4
+        assert!(q.try_validate().is_err());
+        q.seg_bounds = vec![3, 6, 9];
+        assert!(q.try_validate().is_ok());
+    }
+
+    #[test]
+    fn quantile_boundaries_drive_segment_lookup() {
+        let mut p = calibrate(8, 3, 4);
+        p.seg_bounds = vec![4, 8, 12];
+        assert_eq!(p.segment(0), 0);
+        assert_eq!(p.segment(3), 0);
+        assert_eq!(p.segment(4), 1);
+        assert_eq!(p.segment(11), 2);
+        assert_eq!(p.segment(12), 3);
+        assert_eq!(p.segment(14), 3);
     }
 }

@@ -2,14 +2,21 @@
 //! piecewise-constant compensation LUT (C_i). Everything here runs at *design
 //! time* — the deployed multiplier only carries the resulting constants,
 //! exactly like the paper's hardwired LUT (Sec. III-D).
+//!
+//! Caching and persistence of these constants live in the unified
+//! calibration plane ([`crate::calib`]): the per-`(bits, h, m)` process
+//! cache that used to sit here (`cached_params`) is replaced by
+//! [`crate::calib::CalibCache`], keyed on the typed
+//! `(DesignSpec, bits, strategy, kind)` identity and warm-startable from
+//! the on-disk artifact store.
 
 mod analytic;
 mod calib;
 mod shared;
 
 pub use analytic::{analytic_classes, calibrate_analytic};
-pub use shared::{LutRegistry, SharedLut, SharingStats};
 pub use calib::{
-    cached_params, calibrate, paper_table7_params, OperandClasses, ScaleTrimParams,
-    COMP_FRAC_BITS,
+    calibrate, paper_table7_params, OperandClasses, ScaleTrimParams, COMP_FRAC_BITS,
 };
+pub(crate) use calib::segment_of;
+pub use shared::{LutRegistry, SharedLut, SharingStats};

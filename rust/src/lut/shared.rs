@@ -9,15 +9,17 @@
 //! how much storage the sharing saves — the area/memory benefit §V
 //! anticipates.
 
-use super::calib::{cached_params, ScaleTrimParams};
+use super::calib::ScaleTrimParams;
+use crate::calib::CalibStrategy;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-/// One shared compensation table.
+/// One shared compensation table (the constants `Arc` is shared with the
+/// unified calibration cache — one allocation per key, process-wide).
 #[derive(Debug)]
 pub struct SharedLut {
     /// The calibrated constants.
-    pub params: ScaleTrimParams,
+    pub params: Arc<ScaleTrimParams>,
 }
 
 /// Registry statistics.
@@ -58,14 +60,22 @@ impl LutRegistry {
     }
 
     /// Acquire the shared table for `(bits, h, m)`, calibrating on first
-    /// use.
+    /// use. Constants resolve through the unified calibration cache
+    /// ([`crate::calib::cache()`]), so registry tables, `ScaleTrim`
+    /// instances and warm-start artifact loads all share one calibration
+    /// per key — the §V sharing statistics come along for free.
     pub fn acquire(&self, bits: u32, h: u32, m: u32) -> Arc<SharedLut> {
         let mut t = self.tables.lock().unwrap();
         *self.handles.lock().unwrap() += 1;
         t.entry((bits, h, m))
             .or_insert_with(|| {
                 Arc::new(SharedLut {
-                    params: cached_params(bits, h, m),
+                    params: crate::calib::cache().scaletrim_params(
+                        bits,
+                        h,
+                        m,
+                        CalibStrategy::Exhaustive,
+                    ),
                 })
             })
             .clone()
@@ -131,8 +141,12 @@ mod tests {
     fn shared_params_are_correct() {
         let reg = LutRegistry::new();
         let l = reg.acquire(8, 3, 4);
-        let direct = cached_params(8, 3, 4);
+        let direct = crate::lut::calibrate(8, 3, 4);
         assert_eq!(l.params.c_fixed, direct.c_fixed);
         assert_eq!(l.params.delta_ee, direct.delta_ee);
+        // And the allocation is the unified cache's, not a private copy.
+        let cached =
+            crate::calib::cache().scaletrim_params(8, 3, 4, CalibStrategy::Exhaustive);
+        assert!(Arc::ptr_eq(&l.params, &cached));
     }
 }

@@ -6,12 +6,14 @@
 //! - `mul --config <name> A B`     one approximate multiplication, traced
 //! - `sweep --config <name>`       error metrics for one configuration
 //! - `lut-gen --h H --m M`         print calibration constants
+//! - `calib export|show|warm`      manage the on-disk calibration artifact store
 //! - `pareto [--bits 8|16]`        Pareto front of the design space
 //! - `app --workload <name>`       run one application workload under a config
 //! - `infer --model <name>`        batch inference via PJRT on an artifact
 //! - `serve --model <name>`        run the batching coordinator demo
 //! - `list [--bits 8|16]`          list the registered configurations
 
+use scaletrim::calib::{self, CalibStore, CalibValue};
 use scaletrim::coordinator::{BatchPolicy, Coordinator, PjrtBackend};
 use scaletrim::dse::{evaluate_all, pareto_front};
 use scaletrim::error::{sweep_full, SweepSpec};
@@ -40,6 +42,15 @@ fn resolve_config(label: &str, bits: u32) -> Result<Box<dyn ApproxMultiplier>> {
     }
     let spec: DesignSpec = label.parse()?;
     spec.build(bits)
+}
+
+/// Default calibration-store directory: honour the `SCALETRIM_ARTIFACTS`
+/// override like the model-artifact discovery does, else `./artifacts`.
+fn default_calib_dir() -> String {
+    match std::env::var("SCALETRIM_ARTIFACTS") {
+        Ok(d) => format!("{d}/calib"),
+        Err(_) => "artifacts/calib".to_string(),
+    }
 }
 
 fn main() -> Result<()> {
@@ -111,6 +122,94 @@ fn main() -> Result<()> {
                 "hardware: area {:.1} µm², delay {:.2} ns, power {:.1} µW, PDP {:.1} fJ",
                 hw.area_um2, hw.delay_ns, hw.power_uw, hw.pdp_fj
             );
+        }
+        "calib" => {
+            let action = args.positional.get(1).map(|s| s.as_str()).unwrap_or("help");
+            match action {
+                "export" => {
+                    let bits = args.opt_parse_or("bits", 8u32);
+                    let dir = args.opt_or("dir", &default_calib_dir());
+                    let t0 = std::time::Instant::now();
+                    let entries = calib::default_export_entries(bits)?;
+                    let calibrated = t0.elapsed();
+                    let store = CalibStore::at(&dir);
+                    let path = store.export(&entries)?;
+                    println!(
+                        "exported {} calibration artifacts ({bits}-bit scaleTRIM family, \
+                         scaleTRIM-Q, piecewise fit) to {}",
+                        entries.len(),
+                        path.display()
+                    );
+                    // Auto-discovery expects an `<artifacts>/calib` layout;
+                    // only advertise the env hint when the export matches it.
+                    let dir_path = std::path::Path::new(&dir);
+                    match dir_path.parent() {
+                        Some(parent)
+                            if dir_path.file_name() == Some(std::ffi::OsStr::new("calib"))
+                                && !parent.as_os_str().is_empty() =>
+                        {
+                            println!(
+                                "cold calibration took {calibrated:.2?}; warm starts replay \
+                                 this file bit-for-bit (set SCALETRIM_ARTIFACTS={})",
+                                parent.display()
+                            )
+                        }
+                        _ => println!(
+                            "cold calibration took {calibrated:.2?}; note: auto-discovery \
+                             expects an <artifacts>/calib layout — this directory is only \
+                             loadable explicitly (calib show --dir {dir})"
+                        ),
+                    }
+                }
+                "warm" => {
+                    if std::env::var_os("SCALETRIM_ARTIFACTS").is_none() {
+                        println!(
+                            "SCALETRIM_ARTIFACTS is not set — warm starts are an explicit \
+                             opt-in; point it at the directory whose calib/ subdir holds \
+                             the exported bundle"
+                        );
+                    }
+                    let n = calib::warm_start();
+                    println!("warm start seeded {n} cache entries");
+                    println!("{}", calib::cache().stats().summary());
+                }
+                "show" => {
+                    let dir = args.opt_or("dir", &default_calib_dir());
+                    let store = CalibStore::at(&dir);
+                    let entries = store.load()?;
+                    let mut t = Table::new(
+                        &format!("calibration artifacts in {}", store.path().display()),
+                        &["spec", "bits", "strategy", "kind", "alpha", "ΔEE", "constants"],
+                    );
+                    for e in &entries {
+                        let (alpha, dee, n) = match &e.value {
+                            CalibValue::ScaleTrim(p) => {
+                                (f2(p.alpha), p.delta_ee.to_string(), p.c_fixed.len())
+                            }
+                            CalibValue::Piecewise(c) => ("-".into(), "-".into(), c.len()),
+                            CalibValue::ProductLut(l) => ("-".into(), "-".into(), l.len()),
+                        };
+                        t.row(vec![
+                            e.key.spec.to_string(),
+                            e.key.bits.to_string(),
+                            e.key.strategy.to_string(),
+                            e.key.kind.as_str().to_string(),
+                            alpha,
+                            dee,
+                            n.to_string(),
+                        ]);
+                    }
+                    t.print();
+                }
+                other => {
+                    anyhow::bail!(
+                        "unknown calib action {other:?}; usage:\n  \
+                         scaletrim calib export [--bits 8|16] [--dir artifacts/calib]\n  \
+                         scaletrim calib show   [--dir artifacts/calib]\n  \
+                         scaletrim calib warm"
+                    );
+                }
+            }
         }
         "lut-gen" => {
             let bits = args.opt_parse_or("bits", 8u32);
@@ -253,9 +352,11 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "scaletrim — scaleTRIM approximate-multiplier system reproduction\n\n\
-                 usage: scaletrim <repro|list|mul|sweep|lut-gen|pareto|app|infer|serve> [options]\n\
+                 usage: scaletrim <repro|list|mul|sweep|lut-gen|calib|pareto|app|infer|serve> [options]\n\
                  examples:\n  \
                  scaletrim repro --exp table4\n  \
+                 scaletrim repro --exp calib\n  \
+                 scaletrim calib export --bits 8 --dir artifacts/calib\n  \
                  scaletrim mul --config 'scaleTRIM(3,4)' 48 81\n  \
                  scaletrim sweep --config 'TOSAM(1,5)'\n  \
                  scaletrim pareto --bits 16\n  \

@@ -21,6 +21,10 @@ pub struct CompiledMul {
     spec: DesignSpec,
     name: String,
     bits: u32,
+    /// Calibration identity of the source design (mirrored so the table
+    /// shares the source's calibration-cache slots, not the default's).
+    calib: crate::calib::CalibStrategy,
+    calib_cost: f64,
     /// Row-major full product table: `table[(a << bits) | b] = mul(a, b)`.
     table: Vec<u32>,
 }
@@ -61,6 +65,8 @@ impl CompiledMul {
             spec: m.spec(),
             name: format!("compiled[{}]", m.name()),
             bits,
+            calib: m.calib_strategy(),
+            calib_cost: m.calib_cost_ops(),
             table,
         }
     }
@@ -82,6 +88,14 @@ impl ApproxMultiplier for CompiledMul {
 
     fn bits(&self) -> u32 {
         self.bits
+    }
+
+    fn calib_strategy(&self) -> crate::calib::CalibStrategy {
+        self.calib
+    }
+
+    fn calib_cost_ops(&self) -> f64 {
+        self.calib_cost
     }
 
     #[inline]

@@ -99,6 +99,27 @@ pub trait ApproxMultiplier: Send + Sync {
     /// Operand bit-width `n`; `mul` accepts operands in `[0, 2^n)`.
     fn bits(&self) -> u32;
 
+    /// Which calibration strategy produced this instance's design-time
+    /// constants. Part of the instance's identity in the unified
+    /// calibration cache (`(spec, bits, strategy, kind)` keys): a
+    /// sampled-calibrated scaleTRIM must never share a product LUT with
+    /// the exhaustively calibrated one. Designs with no design-time
+    /// calibration report the default
+    /// ([`Exhaustive`](crate::calib::CalibStrategy::Exhaustive)) — for
+    /// them every strategy is trivially the same design.
+    fn calib_strategy(&self) -> crate::calib::CalibStrategy {
+        crate::calib::CalibStrategy::Exhaustive
+    }
+
+    /// Rough design-time calibration cost in datapath-equivalent
+    /// operations — the DSE's calibration-cost objective. `0.0` for
+    /// designs that need no calibration (truncation/logarithmic families);
+    /// scaleTRIM and the piecewise baseline report their strategy's cost
+    /// model.
+    fn calib_cost_ops(&self) -> f64 {
+        0.0
+    }
+
     /// Approximate product of two unsigned operands.
     fn mul(&self, a: u64, b: u64) -> u64;
 

@@ -8,8 +8,10 @@
 //! traded for local fit quality — exactly the comparison Table 3 makes.
 
 use super::{leading_one, truncate_fraction, ApproxMultiplier, DesignSpec};
-use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::Arc;
+
+/// Fraction bits of the per-segment (α_s, β_s) fixed-point coefficients.
+pub(crate) const PIECEWISE_FRAC_BITS: u32 = 24;
 
 /// Piecewise-linear approximate multiplier with `segments` segments over
 /// the truncated-sum space (truncation width `h`).
@@ -18,29 +20,42 @@ pub struct PiecewiseLinear {
     bits: u32,
     h: u32,
     segments: u32,
-    /// Per-segment (α, β) in 2^-F fixed point.
-    coef: Vec<(i64, i64)>,
+    /// Per-segment (α, β) in 2^-F fixed point (allocation shared with the
+    /// unified calibration cache).
+    coef: Arc<Vec<(i64, i64)>>,
 }
 
-const F: u32 = 24;
+const F: u32 = PIECEWISE_FRAC_BITS;
 
 impl PiecewiseLinear {
-    /// Fit (cached) and construct. Table 3 uses `h = 4`, `segments = 4`.
+    /// Fit (cached process-wide) and construct. Table 3 uses `h = 4`,
+    /// `segments = 4`. Panics on invalid parameters —
+    /// [`PiecewiseLinear::try_new`] is the typed form.
     pub fn new(bits: u32, h: u32, segments: u32) -> Self {
-        assert!(segments >= 1 && h >= 1 && h < bits);
-        let coef = cached_fit(bits, h, segments);
-        Self {
+        Self::try_new(bits, h, segments).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`PiecewiseLinear::new`] as a typed error: validity is decided by
+    /// [`DesignSpec::validate`] — the same single path `DesignSpec::build`
+    /// and `ScaleTrim::try_new` use, so the constructors can no longer
+    /// drift apart on what they accept (`h ≥ 1` here, `h ≥ 2` for
+    /// scaleTRIM, both spelled in `spec::validate_params`). The fit
+    /// resolves through the unified calibration cache
+    /// ([`crate::calib::cache()`]).
+    pub fn try_new(bits: u32, h: u32, segments: u32) -> crate::Result<Self> {
+        let spec = DesignSpec::Piecewise { h, s: segments };
+        spec.validate(bits)?;
+        Ok(Self {
             bits,
             h,
             segments,
-            coef,
-        }
+            coef: crate::calib::cache().piecewise_fit(bits, h, segments),
+        })
     }
 
     #[inline]
     fn segment(&self, s_int: u64) -> usize {
-        let idx = (s_int as u128 * self.segments as u128) >> (self.h + 1);
-        (idx as usize).min(self.segments as usize - 1)
+        crate::lut::segment_of(s_int, self.segments, self.h, &[])
     }
 }
 
@@ -53,6 +68,11 @@ impl ApproxMultiplier for PiecewiseLinear {
     }
     fn bits(&self) -> u32 {
         self.bits
+    }
+    fn calib_cost_ops(&self) -> f64 {
+        // Exhaustive-scan fit — priced by the strategy's own cost model.
+        crate::calib::calibrator(crate::calib::CalibStrategy::Exhaustive)
+            .cost_ops(self.bits, self.h)
     }
     #[inline]
     fn mul(&self, a: u64, b: u64) -> u64 {
@@ -71,63 +91,6 @@ impl ApproxMultiplier for PiecewiseLinear {
         }
         ((term as u128) << (na + nb) >> F) as u64
     }
-}
-
-/// Offline per-segment least-squares fit of `t = X+Y+XY` on `s = X_h+Y_h`,
-/// exact via the same class decomposition the scaleTRIM calibration uses.
-fn cached_fit(bits: u32, h: u32, segments: u32) -> Vec<(i64, i64)> {
-    static CACHE: Mutex<Option<HashMap<(u32, u32, u32), Vec<(i64, i64)>>>> = Mutex::new(None);
-    let mut guard = CACHE.lock().unwrap();
-    let map = guard.get_or_insert_with(HashMap::new);
-    map.entry((bits, h, segments))
-        .or_insert_with(|| {
-            let cls = crate::lut::OperandClasses::scan(bits, h);
-            let classes = 1usize << h;
-            let scale = (1u64 << h) as f64;
-            // Per-segment normal-equation sums for t ~ α s + β.
-            let m = segments as usize;
-            let (mut sw, mut ss, mut sss, mut st, mut sst) =
-                (vec![0f64; m], vec![0f64; m], vec![0f64; m], vec![0f64; m], vec![0f64; m]);
-            for u in 0..classes {
-                let (nu, sxu) = (cls.count[u] as f64, cls.sum_x[u]);
-                if nu == 0.0 {
-                    continue;
-                }
-                for v in 0..classes {
-                    let (nv, sxv) = (cls.count[v] as f64, cls.sum_x[v]);
-                    if nv == 0.0 {
-                        continue;
-                    }
-                    let s_int = (u + v) as u64;
-                    let s = s_int as f64 / scale;
-                    let seg = (((s_int as u128 * segments as u128) >> (h + 1)) as usize)
-                        .min(m - 1);
-                    let w = nu * nv;
-                    let sum_t = nv * sxu + nu * sxv + sxu * sxv;
-                    sw[seg] += w;
-                    ss[seg] += w * s;
-                    sss[seg] += w * s * s;
-                    st[seg] += sum_t;
-                    sst[seg] += s * sum_t;
-                }
-            }
-            (0..m)
-                .map(|i| {
-                    let det = sw[i] * sss[i] - ss[i] * ss[i];
-                    let (alpha, beta) = if det.abs() < 1e-12 {
-                        // Degenerate segment (single s value): constant fit.
-                        (0.0, if sw[i] > 0.0 { st[i] / sw[i] } else { 0.0 })
-                    } else {
-                        let alpha = (sw[i] * sst[i] - ss[i] * st[i]) / det;
-                        let beta = (sss[i] * st[i] - ss[i] * sst[i]) / det;
-                        (alpha, beta)
-                    };
-                    let q = (1u64 << F) as f64;
-                    ((alpha * q).round() as i64, (beta * q).round() as i64)
-                })
-                .collect()
-        })
-        .clone()
 }
 
 #[cfg(test)]
@@ -168,5 +131,18 @@ mod tests {
     fn zero_bypass() {
         let m = PiecewiseLinear::new(8, 4, 4);
         assert_eq!(m.mul(0, 99), 0);
+    }
+
+    /// Constructor validation is the spec's: h ≥ 1 stays legal here (the
+    /// spec grammar says so), h ≥ bits is a typed error, and the message
+    /// comes from the same path as `DesignSpec::build`.
+    #[test]
+    fn try_new_agrees_with_spec_build() {
+        assert!(PiecewiseLinear::try_new(8, 1, 4).is_ok(), "h = 1 is a legal fit");
+        let direct = PiecewiseLinear::try_new(8, 9, 4).unwrap_err().to_string();
+        let via_spec = DesignSpec::Piecewise { h: 9, s: 4 }.build(8).unwrap_err().to_string();
+        assert_eq!(direct, via_spec, "one error path for both constructions");
+        assert!(PiecewiseLinear::try_new(8, 0, 4).is_err());
+        assert!(PiecewiseLinear::try_new(8, 4, 0).is_err());
     }
 }

@@ -14,38 +14,88 @@
 //!    in fixed point with `COMP_FRAC_BITS` fraction bits and truncated like
 //!    the hardware.
 //!
-//! Constants (α, ΔEE, C_i) come from the design-time calibration in
-//! [`crate::lut`]; they are cached process-wide.
+//! Constants (α, ΔEE, C_i) come from the design-time calibration plane
+//! ([`crate::calib`]): the selected [`CalibStrategy`] resolves through the
+//! process-wide [`CalibCache`](crate::calib::CalibCache) (warm-startable
+//! from the on-disk artifact store), so N instances of one configuration
+//! share a single calibration — and a single constants allocation.
 
 use super::{leading_one, truncate_fraction, ApproxMultiplier, DesignSpec};
-use crate::lut::{cached_params, ScaleTrimParams, COMP_FRAC_BITS};
+use crate::calib::{calibrator, CalibStrategy};
+use crate::lut::{ScaleTrimParams, COMP_FRAC_BITS};
+use std::sync::Arc;
 
 /// scaleTRIM(h, M) behavioural model at a given bit-width.
 #[derive(Debug, Clone)]
 pub struct ScaleTrim {
     bits: u32,
-    params: ScaleTrimParams,
+    strategy: CalibStrategy,
+    params: Arc<ScaleTrimParams>,
 }
 
 impl ScaleTrim {
     /// Construct (and calibrate, on first use per `(bits, h, M)`) a
-    /// scaleTRIM instance. `m == 0` disables compensation (paper ST(h,0)).
+    /// scaleTRIM instance with the paper's exhaustive calibration.
+    /// `m == 0` disables compensation (paper ST(h,0)). Panics on invalid
+    /// parameters — [`ScaleTrim::try_new`] is the typed form.
     pub fn new(bits: u32, h: u32, m: u32) -> Self {
-        assert!(bits >= 4 && bits <= 24, "supported widths: 4..=24");
-        assert!(h >= 2 && h < bits, "h must be >= 2 (ΔEE fit needs α < 2)");
-        Self {
+        Self::try_new(bits, h, m).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`ScaleTrim::new`] as a typed error: validity is decided by
+    /// [`DesignSpec::validate`], the same path `DesignSpec::build` takes —
+    /// direct construction and spec-driven construction agree by
+    /// construction.
+    pub fn try_new(bits: u32, h: u32, m: u32) -> crate::Result<Self> {
+        Self::with_strategy(bits, h, m, CalibStrategy::Exhaustive)
+    }
+
+    /// Construct under an explicit calibration strategy (the
+    /// accuracy-vs-calibration-cost axis). [`CalibStrategy::Quantile`]
+    /// selects the `scaleTRIM-Q` design — non-uniform segment boundaries,
+    /// distinct [`DesignSpec`] identity; the other strategies are
+    /// different ways of computing the same scaleTRIM(h, M) constants.
+    pub fn with_strategy(
+        bits: u32,
+        h: u32,
+        m: u32,
+        strategy: CalibStrategy,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(
+            strategy != CalibStrategy::External,
+            "CalibStrategy::External tags externally supplied constants — \
+             use ScaleTrim::with_params to provide them"
+        );
+        let spec = if strategy == CalibStrategy::Quantile {
+            DesignSpec::ScaleTrimQ { h, m }
+        } else {
+            DesignSpec::ScaleTrim { h, m }
+        };
+        spec.validate(bits)?;
+        Ok(Self {
             bits,
-            params: cached_params(bits, h, m),
-        }
+            strategy,
+            params: crate::calib::cache().scaletrim_params(bits, h, m, strategy),
+        })
     }
 
     /// Construct from externally supplied constants (used by tests and by
-    /// the artifact-export path; skips calibration but not validation —
+    /// the artifact replay paths; skips calibration but not validation —
     /// a ΔEE below `h − F` would underflow the linearization shift, see
-    /// [`ScaleTrimParams::validate`]).
+    /// [`ScaleTrimParams::validate`]). The instance's calibration identity
+    /// is [`CalibStrategy::External`]: unknown provenance, so it never
+    /// shares a strategy-keyed cache slot (product LUTs included) with the
+    /// self-calibrated configs — external constants can differ from them
+    /// without poisoning anything. The *design family* still follows the
+    /// constants: non-empty `seg_bounds` makes `spec()` report
+    /// `scaleTRIM-Q`.
     pub fn with_params(bits: u32, params: ScaleTrimParams) -> Self {
         params.validate();
-        Self { bits, params }
+        Self {
+            bits,
+            strategy: CalibStrategy::External,
+            params: Arc::new(params),
+        }
     }
 
     /// Calibrated constants (α, ΔEE, C_i).
@@ -62,18 +112,47 @@ impl ScaleTrim {
     pub fn m(&self) -> u32 {
         self.params.m
     }
+
+    /// The calibration strategy that produced the constants.
+    pub fn strategy(&self) -> CalibStrategy {
+        self.strategy
+    }
 }
 
 impl ApproxMultiplier for ScaleTrim {
     fn spec(&self) -> DesignSpec {
-        DesignSpec::ScaleTrim {
-            h: self.params.h,
-            m: self.params.m,
+        // The design family is decided by the constants' segmentation
+        // shape, not the strategy tag — so external quantile-shaped
+        // constants still identify as scaleTRIM-Q (and validation pins
+        // shape ⇔ family everywhere constants can enter).
+        if self.params.seg_bounds.is_empty() {
+            DesignSpec::ScaleTrim {
+                h: self.params.h,
+                m: self.params.m,
+            }
+        } else {
+            DesignSpec::ScaleTrimQ {
+                h: self.params.h,
+                m: self.params.m,
+            }
         }
     }
 
     fn bits(&self) -> u32 {
         self.bits
+    }
+
+    fn calib_strategy(&self) -> CalibStrategy {
+        self.strategy
+    }
+
+    fn calib_cost_ops(&self) -> f64 {
+        if self.strategy == CalibStrategy::External {
+            // Unknown provenance: no design-time cost to model.
+            0.0
+        } else {
+            calibrator(self.strategy).cost_ops(self.bits, self.params.h)
+        }
     }
 
     #[inline]

@@ -48,6 +48,19 @@ pub enum DesignSpec {
         /// Compensation segment count `M` (0 or a power of two).
         m: u32,
     },
+    /// scaleTRIM-Q(h, M) — the quantile-segmented variant: same datapath
+    /// as scaleTRIM, but the compensation segment boundaries are placed at
+    /// error-mass quantiles of the truncated-sum space instead of the
+    /// paper's uniform split (selected by `M − 1` threshold comparators
+    /// rather than MSB indexing). Calibrated by
+    /// [`CalibStrategy::Quantile`](crate::calib::CalibStrategy).
+    ScaleTrimQ {
+        /// Truncation width `h` (≥ 2, like scaleTRIM).
+        h: u32,
+        /// Compensation segment count `M` (≥ 2; any integer — no
+        /// power-of-two constraint, the comparators don't care).
+        m: u32,
+    },
     /// TOSAM(t, h) — truncation + rounding (Vahdat'19); the evaluated
     /// family has `t < h`.
     Tosam {
@@ -173,6 +186,7 @@ impl fmt::Display for DesignSpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match *self {
             DesignSpec::ScaleTrim { h, m } => write!(f, "scaleTRIM({h},{m})"),
+            DesignSpec::ScaleTrimQ { h, m } => write!(f, "scaleTRIM-Q({h},{m})"),
             DesignSpec::Tosam { t, h } => write!(f, "TOSAM({t},{h})"),
             DesignSpec::Drum { m } => write!(f, "DRUM({m})"),
             DesignSpec::Dsm { m } => write!(f, "DSM({m})"),
@@ -317,6 +331,11 @@ fn parse_syntax(s: &str) -> Result<DesignSpec, String> {
     if s == "RoBA" {
         return Ok(DesignSpec::Roba);
     }
+    // scaleTRIM-Q before scaleTRIM (longest-prefix, like Mitchell_LODII_).
+    if let Some(rest) = s.strip_prefix("scaleTRIM-Q") {
+        let (h, m) = two_args("scaleTRIM-Q", rest)?;
+        return Ok(DesignSpec::ScaleTrimQ { h, m });
+    }
     if let Some(rest) = s.strip_prefix("scaleTRIM") {
         let (h, m) = two_args("scaleTRIM", rest)?;
         return Ok(DesignSpec::ScaleTrim { h, m });
@@ -392,7 +411,7 @@ impl DesignSpec {
         // `m + k`) cannot overflow. Every variant carries at most two
         // numeric fields; 0 pads the unused slot.
         let (p1, p2) = match *self {
-            ScaleTrim { h, m } => (h, m),
+            ScaleTrim { h, m } | ScaleTrimQ { h, m } => (h, m),
             Tosam { t, h } => (t, h),
             Drum { m } | Dsm { m } => (m, 0),
             Mbm { k } | Ilm { k } | EvoLib { k } => (k, 0),
@@ -418,6 +437,24 @@ impl DesignSpec {
                 }
                 if m != 0 && !m.is_power_of_two() {
                     return Err(format!("scaleTRIM M must be 0 or a power of two, got {m}"));
+                }
+            }
+            ScaleTrimQ { h, m } => {
+                if h < 2 {
+                    return Err(format!(
+                        "scaleTRIM-Q h must be >= 2 (the ΔEE fit needs α < 2), got {h}"
+                    ));
+                }
+                if h > 12 {
+                    return Err(format!(
+                        "scaleTRIM-Q h must be <= 12 (calibration cap), got {h}"
+                    ));
+                }
+                if m < 2 {
+                    return Err(format!(
+                        "scaleTRIM-Q M must be >= 2 (quantile segmentation needs at least \
+                         two segments; use scaleTRIM(h,0) for no compensation), got {m}"
+                    ));
                 }
             }
             Tosam { t, h } => {
@@ -499,7 +536,7 @@ impl DesignSpec {
         use DesignSpec::*;
         anyhow::ensure!((2..=32).contains(&bits), "operand width must be in 2..=32, got {bits}");
         match *self {
-            ScaleTrim { h, .. } => {
+            ScaleTrim { h, .. } | ScaleTrimQ { h, .. } => {
                 anyhow::ensure!(
                     (4..=24).contains(&bits),
                     "{self} supports widths 4..=24, got {bits}"
@@ -543,19 +580,36 @@ impl DesignSpec {
         Ok(())
     }
 
+    /// The full validity check at a width: family-intrinsic parameter
+    /// rules plus the width-dependent rules of
+    /// [`DesignSpec::validate_for`]. This is the *single* typed error path
+    /// shared by [`DesignSpec::build`] and the direct constructors
+    /// (`ScaleTrim::try_new`, `PiecewiseLinear::try_new`, …) — direct
+    /// construction and spec-driven construction can no longer disagree
+    /// about what is a valid configuration.
+    pub fn validate(&self, bits: u32) -> crate::Result<()> {
+        self.validate_params()
+            .map_err(|e| anyhow::anyhow!("invalid spec {self}: {e}"))?;
+        self.validate_for(bits)
+    }
+
     /// Construct the behavioural model for this spec at operand width
     /// `bits` — O(1), no zoo materialisation. Returns a typed error when
-    /// the spec is invalid at this width (see [`DesignSpec::validate_for`])
+    /// the spec is invalid at this width (see [`DesignSpec::validate`])
     /// or carries intrinsically invalid parameters (possible through
     /// direct construction — the fields are plain data), so it never
     /// panics inside a constructor assertion.
     pub fn build(&self, bits: u32) -> crate::Result<Box<dyn ApproxMultiplier>> {
-        self.validate_params()
-            .map_err(|e| anyhow::anyhow!("invalid spec {self}: {e}"))?;
-        self.validate_for(bits)?;
+        self.validate(bits)?;
         use DesignSpec::*;
         Ok(match *self {
             ScaleTrim { h, m } => Box::new(self::ScaleTrim::new(bits, h, m)),
+            ScaleTrimQ { h, m } => Box::new(self::ScaleTrim::with_strategy(
+                bits,
+                h,
+                m,
+                crate::calib::CalibStrategy::Quantile,
+            )?),
             Tosam { t, h } => Box::new(self::Tosam::new(bits, t, h)),
             Drum { m } => Box::new(self::Drum::new(bits, m)),
             Dsm { m } => Box::new(self::Dsm::new(bits, m)),
@@ -647,7 +701,7 @@ impl DesignSpec {
         use DesignSpec::*;
         let o = Json::obj().set("family", self.family());
         match *self {
-            ScaleTrim { h, m } => o.set("h", h).set("m", m),
+            ScaleTrim { h, m } | ScaleTrimQ { h, m } => o.set("h", h).set("m", m),
             Tosam { t, h } => o.set("t", t).set("h", h),
             Drum { m } | Dsm { m } => o.set("m", m),
             Mbm { k } | Ilm { k } | EvoLib { k } => o.set("k", k),
@@ -688,6 +742,7 @@ impl DesignSpec {
         use DesignSpec::*;
         let spec = match family {
             "scaleTRIM" => ScaleTrim { h: get("h")?, m: get("m")? },
+            "scaleTRIM-Q" => ScaleTrimQ { h: get("h")?, m: get("m")? },
             "TOSAM" => Tosam { t: get("t")?, h: get("h")? },
             "DRUM" => Drum { m: get("m")? },
             "DSM" => Dsm { m: get("m")? },
@@ -717,6 +772,7 @@ impl DesignSpec {
         use DesignSpec::*;
         match self {
             ScaleTrim { .. } => "scaleTRIM",
+            ScaleTrimQ { .. } => "scaleTRIM-Q",
             Tosam { .. } => "TOSAM",
             Drum { .. } => "DRUM",
             Dsm { .. } => "DSM",
@@ -774,6 +830,7 @@ fn known_labels() -> Vec<String> {
     labels.push("RoBA".into());
     labels.push("LETAM(4)".into());
     labels.push("Piecewise(h=4,S=4)".into());
+    labels.push("scaleTRIM-Q(4,8)".into());
     labels.sort();
     labels.dedup();
     labels
@@ -831,6 +888,33 @@ mod tests {
             DesignSpec::Piecewise { h: 4, s: 4 }.to_string(),
             "Piecewise(h=4,S=4)"
         );
+        assert_eq!(
+            DesignSpec::ScaleTrimQ { h: 4, m: 8 }.to_string(),
+            "scaleTRIM-Q(4,8)"
+        );
+    }
+
+    #[test]
+    fn scaletrim_q_round_trips_and_builds() {
+        for label in ["scaleTRIM-Q(3,4)", "scaleTRIM-Q(4,8)", "scaleTRIM-Q(4,6)"] {
+            let spec: DesignSpec = label.parse().unwrap();
+            assert!(matches!(spec, DesignSpec::ScaleTrimQ { .. }), "{label}");
+            assert_eq!(spec.to_string(), label);
+            let wire = spec.to_json().to_string();
+            assert_eq!(DesignSpec::from_json(&Json::parse(&wire).unwrap()).unwrap(), spec);
+            let m = spec.build(8).unwrap();
+            assert_eq!(m.spec(), spec, "{label}");
+            assert_eq!(m.name(), label);
+        }
+        // The -Q prefix must never be swallowed by the scaleTRIM parser.
+        assert_ne!(
+            "scaleTRIM-Q(3,4)".parse::<DesignSpec>().unwrap(),
+            "scaleTRIM(3,4)".parse::<DesignSpec>().unwrap()
+        );
+        // Family-intrinsic rules: M >= 2, h >= 2.
+        assert!("scaleTRIM-Q(3,1)".parse::<DesignSpec>().is_err());
+        assert!("scaleTRIM-Q(1,4)".parse::<DesignSpec>().is_err());
+        assert!(DesignSpec::ScaleTrimQ { h: 3, m: 0 }.build(8).is_err());
     }
 
     #[test]

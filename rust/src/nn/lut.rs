@@ -8,14 +8,14 @@
 //!
 //! Construction runs on the batched kernel plane: one
 //! [`ApproxMultiplier::mul_batch`] call over all 65,536 operand pairs
-//! instead of 65,536 virtual `mul` calls. [`cached_lut`] adds a
-//! process-wide cache keyed by the typed `(DesignSpec, bits)` identity, so
-//! the coordinator's lanes, the report harnesses and the CLI share a
-//! single 256 KiB build per configuration instead of each rebuilding it.
+//! instead of 65,536 virtual `mul` calls. [`cached_lut`] resolves through
+//! the unified calibration cache ([`crate::calib::CalibCache`]) keyed by
+//! the typed `(DesignSpec, bits, strategy)` identity, so the coordinator's
+//! lanes, the report harnesses and the CLI share a single 256 KiB build
+//! per configuration instead of each rebuilding it.
 
-use crate::multipliers::{ApproxMultiplier, DesignSpec};
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use crate::multipliers::ApproxMultiplier;
+use std::sync::Arc;
 
 /// Build the signed product LUT for a multiplier model (one batched pass).
 pub fn build_lut(m: &dyn ApproxMultiplier) -> Vec<i32> {
@@ -54,28 +54,17 @@ pub fn build_lut(m: &dyn ApproxMultiplier) -> Vec<i32> {
 
 /// Process-wide product-LUT cache: the shared table for a configuration,
 /// built on first use. N coordinator lanes, the report harnesses and the
-/// CLI all resolve the same typed `(DesignSpec, bits)` key to one `Arc`'d
-/// 256 KiB table instead of rebuilding it per consumer. Building happens
-/// under the cache lock, which also collapses concurrent first-use races
-/// into a single build.
+/// CLI all resolve the same typed `(DesignSpec, bits, strategy)` key to
+/// one `Arc`'d 256 KiB table instead of rebuilding it per consumer.
 ///
-/// Invariant: at a given bit-width, a config *spec* must uniquely
-/// determine its numerical behaviour — true for everything the
-/// registries produce. Instances carrying externally supplied constants
-/// (e.g. `ScaleTrim::with_params` with non-default tables) share a spec
-/// with the self-calibrated config of the same `(h, M)`; do not route
-/// those through the cache — call [`build_lut`] directly.
+/// This is a thin shim over the unified calibration cache
+/// ([`CalibCache::product_lut`](crate::calib::CalibCache::product_lut)) —
+/// the ad-hoc `Mutex<Option<HashMap>>` static that used to live here is
+/// gone, and with it its poison-on-panic failure mode. See the cache docs
+/// for the spec-determines-behaviour invariant (instances carrying
+/// externally supplied constants must use [`build_lut`] directly).
 pub fn cached_lut(m: &dyn ApproxMultiplier) -> Arc<Vec<i32>> {
-    static CACHE: Mutex<Option<HashMap<(DesignSpec, u32), Arc<Vec<i32>>>>> = Mutex::new(None);
-    let key = (m.spec(), m.bits());
-    let mut guard = CACHE.lock().unwrap();
-    let map = guard.get_or_insert_with(HashMap::new);
-    if let Some(lut) = map.get(&key) {
-        return lut.clone();
-    }
-    let lut = Arc::new(build_lut(m));
-    map.insert(key, lut.clone());
-    lut
+    crate::calib::cache().product_lut(m)
 }
 
 /// Exact product LUT (the accurate-multiplier baseline of Figs. 15/16).

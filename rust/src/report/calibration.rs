@@ -1,9 +1,14 @@
 //! Calibration-flow experiments: Fig. 5 (curve fit), Fig. 6 (error values
-//! per segment), Fig. 7 (worked example), Table 7 (compensation LUTs).
+//! per segment), Fig. 7 (worked example), Table 7 (compensation LUTs),
+//! plus the strategy comparison of the unified calibration plane
+//! (`repro --exp calib`).
 
+use crate::calib::{calibrator, CalibStrategy};
+use crate::error::exhaustive_sweep;
+use crate::hardware::try_estimate;
 use crate::lut::{calibrate, paper_table7_params, OperandClasses};
 use crate::multipliers::{ApproxMultiplier, ScaleTrim};
-use crate::util::table::{f3, f4, Table};
+use crate::util::table::{f2, f3, f4, Table};
 use crate::Result;
 
 /// Fig. 5: the linearization fit. Prints α and ΔEE per h; the paper's
@@ -141,5 +146,93 @@ pub fn table7() -> Result<()> {
         "note: our full-space calibration reproduces the paper's reported MRED more closely\n\
          than its printed Table 7 constants do — see EXPERIMENTS.md §table7."
     );
+    Ok(())
+}
+
+/// `repro --exp calib` — the calibration-strategy comparison: every
+/// selectable [`CalibStrategy`] against the paper's Table 4 MRED anchors
+/// (accuracy vs calibration cost), plus the quantile-vs-uniform
+/// segmentation head-to-head at fixed M (the `scaleTRIM-Q` family).
+pub fn calib_strategies(fast: bool) -> Result<()> {
+    // --- Table A: strategy × anchor config, 8-bit full-space MRED.
+    let anchors: &[(u32, u32, f64)] = if fast {
+        &[(3, 4, 3.73), (4, 8, 3.34)]
+    } else {
+        &[(3, 0, 5.75), (3, 4, 3.73), (3, 8, 3.53), (4, 8, 3.34), (5, 8, 2.12)]
+    };
+    let mut t = Table::new(
+        "Calibration strategies vs Table 4 anchors (8-bit, full-space MRED)",
+        &[
+            "strategy", "config", "alpha", "ΔEE", "calib time", "cost ops", "MRED %",
+            "paper %", "fidelity",
+        ],
+    );
+    for strategy in CalibStrategy::ALL {
+        let cal = calibrator(strategy);
+        for &(h, m, paper) in anchors {
+            if strategy == CalibStrategy::Quantile && m < 2 {
+                continue; // no segments to re-place
+            }
+            let t0 = std::time::Instant::now();
+            let params = cal.calibrate(8, h, m);
+            let dt = t0.elapsed();
+            let mult = ScaleTrim::with_params(8, params.clone());
+            let mred = exhaustive_sweep(&mult).mred_pct;
+            let label = if strategy == CalibStrategy::Quantile {
+                format!("scaleTRIM-Q({h},{m})")
+            } else {
+                format!("scaleTRIM({h},{m})")
+            };
+            t.row(vec![
+                strategy.to_string(),
+                label,
+                f4(params.alpha),
+                params.delta_ee.to_string(),
+                format!("{dt:.2?}"),
+                format!("{:.0}", cal.cost_ops(8, h)),
+                f2(mred),
+                f2(paper),
+                if cal.paper_fidelity() { "yes" } else { "no" }.into(),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "(paper-fidelity strategies must match-or-beat the anchors; sampled and quantile\n\
+         trade the anchor claim for calibration cost and segmentation freedom respectively)"
+    );
+
+    // --- Table B: uniform vs quantile segmentation at fixed (h, M).
+    let pairs: &[(u32, u32)] = if fast {
+        &[(3, 4), (4, 8)]
+    } else {
+        &[(3, 4), (3, 8), (4, 4), (4, 8), (5, 8)]
+    };
+    let mut t = Table::new(
+        "Uniform (paper) vs quantile segmentation at equal LUT size (8-bit)",
+        &[
+            "h", "M", "MRED uniform %", "MRED quantile %", "Δ pp", "PDP uniform fJ",
+            "PDP quantile fJ",
+        ],
+    );
+    for &(h, m) in pairs {
+        let uniform = ScaleTrim::new(8, h, m);
+        let quantile = ScaleTrim::with_strategy(8, h, m, CalibStrategy::Quantile)?;
+        let mu = exhaustive_sweep(&uniform).mred_pct;
+        let mq = exhaustive_sweep(&quantile).mred_pct;
+        let hu = try_estimate(&uniform)?;
+        let hq = try_estimate(&quantile)?;
+        t.row(vec![
+            h.to_string(),
+            m.to_string(),
+            f2(mu),
+            f2(mq),
+            f2(mu - mq),
+            f2(hu.pdp_fj),
+            f2(hq.pdp_fj),
+        ]);
+    }
+    t.print();
+    println!("{}", crate::calib::cache().stats().summary());
     Ok(())
 }

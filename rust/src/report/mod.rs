@@ -9,7 +9,7 @@ mod dnn;
 mod workloads;
 
 pub use ablation::{ablation_alpha_quant, ablation_constants, ablation_segments, ext32};
-pub use calibration::{fig5, fig6, fig7, table7};
+pub use calibration::{calib_strategies, fig5, fig6, fig7, table7};
 pub use comparison::{
     fig1, fig10, headline, headline_best, headline_pairs, table2, table3, table4, table5,
     HeadlinePair,
@@ -23,7 +23,7 @@ use crate::Result;
 pub const EXPERIMENTS: &[&str] = &[
     "fig1", "fig5", "fig6", "fig7", "table4", "fig9", "fig10", "table5", "fig11-13", "table3",
     "fig14", "table2", "table7", "fig15", "fig16", "table6", "ablation", "ext32", "workloads",
-    "headline",
+    "headline", "calib",
 ];
 
 /// Run one experiment by id. `fast` trims sample counts (CI smoke).
@@ -49,10 +49,11 @@ pub fn run_experiment(id: &str, fast: bool) -> Result<()> {
         "fig16" | "table6" => fig16(fast),
         "workloads" => workload_suite(fast),
         "headline" => headline(),
+        "calib" => calib_strategies(fast),
         "all" => {
             for e in [
                 "fig1", "fig5", "fig6", "fig7", "table4", "fig10", "table5", "table3", "table2",
-                "table7", "fig15", "fig16", "ablation", "ext32", "workloads", "headline",
+                "table7", "fig15", "fig16", "ablation", "ext32", "workloads", "headline", "calib",
             ] {
                 println!("\n################ {e} ################");
                 run_experiment(e, fast)?;

@@ -1,0 +1,464 @@
+//! The calibration plane's acceptance gate:
+//!
+//! - artifact round trips are **bit-for-bit**: export → load reproduces
+//!   `ScaleTrimParams` (α down to the f64 bits, `c_fixed`, the quantile
+//!   `seg_bounds`) and piecewise coefficients exactly, for every strategy;
+//! - corrupted stores are typed rejections: wrong version, wrong
+//!   checksum, truncated file, tampered entries;
+//! - a warm-started cache serves constants identical to fresh calibration;
+//! - a panicking calibration never poisons the cache (the old
+//!   `Mutex<Option<HashMap>>` statics died here);
+//! - Table 4 MRED anchors hold for every strategy that claims paper
+//!   fidelity.
+
+use scaletrim::calib::{
+    calibrator, default_export_entries, ArtifactKind, CalibCache, CalibKey, CalibStore,
+    CalibStrategy, CalibValue, StoreEntry,
+};
+use scaletrim::lut::calibrate;
+use scaletrim::multipliers::{ApproxMultiplier, DesignSpec, PiecewiseLinear, ScaleTrim};
+use scaletrim::util::prop::Runner;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Unique temp directory per call (tests run in parallel; one shared dir
+/// would race on the bundle file).
+fn tmp_dir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "scaletrim-prop-calib-{tag}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+fn assert_params_bitwise_eq(
+    a: &scaletrim::lut::ScaleTrimParams,
+    b: &scaletrim::lut::ScaleTrimParams,
+) -> Result<(), String> {
+    if a.alpha.to_bits() != b.alpha.to_bits() {
+        return Err(format!("alpha bits differ: {} vs {}", a.alpha, b.alpha));
+    }
+    if (a.bits, a.h, a.m, a.delta_ee) != (b.bits, b.h, b.m, b.delta_ee) {
+        return Err("header fields differ".into());
+    }
+    if a.c.len() != b.c.len()
+        || a.c.iter().zip(&b.c).any(|(x, y)| x.to_bits() != y.to_bits())
+    {
+        return Err(format!("c differs: {:?} vs {:?}", a.c, b.c));
+    }
+    if a.c_fixed != b.c_fixed {
+        return Err(format!("c_fixed differs: {:?} vs {:?}", a.c_fixed, b.c_fixed));
+    }
+    if a.seg_bounds != b.seg_bounds {
+        return Err(format!(
+            "seg_bounds differ: {:?} vs {:?}",
+            a.seg_bounds, b.seg_bounds
+        ));
+    }
+    Ok(())
+}
+
+/// Property: export → load is the identity on calibration constants, for
+/// random (strategy, h, M, bits) across the supported space.
+#[test]
+fn artifact_round_trip_is_bit_for_bit() {
+    let dir = tmp_dir("roundtrip");
+    let store = CalibStore::at(&dir);
+    let mut r = Runner::new("calib-artifact-roundtrip", 30);
+    r.run(|g| {
+        let strategy = *g.choose(&CalibStrategy::ALL);
+        let bits = *g.choose(&[6u32, 8]);
+        let h = g.u32_in(2, 5);
+        let m = *g.choose(&[0u32, 4, 8]);
+        if strategy == CalibStrategy::Quantile && m < 2 {
+            return Ok(()); // not a quantile design point
+        }
+        let params = calibrator(strategy).calibrate(bits, h, m);
+        let spec = if strategy == CalibStrategy::Quantile {
+            DesignSpec::ScaleTrimQ { h, m }
+        } else {
+            DesignSpec::ScaleTrim { h, m }
+        };
+        let entry = StoreEntry {
+            key: CalibKey {
+                spec,
+                bits,
+                strategy,
+                kind: ArtifactKind::ScaleTrimParams,
+            },
+            value: CalibValue::ScaleTrim(Arc::new(params.clone())),
+        };
+        store
+            .export(std::slice::from_ref(&entry))
+            .map_err(|e| format!("export failed: {e}"))?;
+        let loaded = store.load().map_err(|e| format!("load failed: {e}"))?;
+        if loaded.len() != 1 || loaded[0].key != entry.key {
+            return Err("key did not round-trip".into());
+        }
+        let CalibValue::ScaleTrim(back) = &loaded[0].value else {
+            return Err("value kind did not round-trip".into());
+        };
+        assert_params_bitwise_eq(back, &params)
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn piecewise_fit_round_trips_exactly() {
+    let dir = tmp_dir("piecewise");
+    let store = CalibStore::at(&dir);
+    for (h, s) in [(4u32, 4u32), (3, 8), (1, 2)] {
+        let coef = scaletrim::calib::fit_piecewise(8, h, s);
+        let entry = StoreEntry {
+            key: CalibKey {
+                spec: DesignSpec::Piecewise { h, s },
+                bits: 8,
+                strategy: CalibStrategy::Exhaustive,
+                kind: ArtifactKind::PiecewiseFit,
+            },
+            value: CalibValue::Piecewise(Arc::new(coef.clone())),
+        };
+        store.export(&[entry]).unwrap();
+        let loaded = store.load().unwrap();
+        let CalibValue::Piecewise(back) = &loaded[0].value else {
+            panic!("wrong kind");
+        };
+        assert_eq!(**back, coef, "h={h} S={s}: coefficients must be identical");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A warm-started cache must be indistinguishable from fresh calibration,
+/// for the whole default export set (including `c_fixed` — the datapath
+/// constants — and the quantile boundaries).
+#[test]
+fn warm_start_is_bit_for_bit_identical_to_fresh() {
+    let dir = tmp_dir("warm");
+    let store = CalibStore::at(&dir);
+    let entries = default_export_entries(8).unwrap();
+    store.export(&entries).unwrap();
+    let loaded = store.load().unwrap();
+    assert_eq!(loaded.len(), entries.len());
+
+    let cache = CalibCache::new();
+    let seeded = cache.warm(loaded.into_iter().map(|e| (e.key, e.value)));
+    assert_eq!(seeded, entries.len(), "every exported entry must seed");
+
+    for entry in &entries {
+        match (&entry.key.spec, &entry.value) {
+            (DesignSpec::ScaleTrim { h, m }, CalibValue::ScaleTrim(_)) => {
+                let warmed = cache.scaletrim_params(8, *h, *m, CalibStrategy::Exhaustive);
+                let fresh = calibrate(8, *h, *m);
+                assert_params_bitwise_eq(&warmed, &fresh).unwrap_or_else(|e| {
+                    panic!("scaleTRIM({h},{m}) warm != fresh: {e}")
+                });
+                // The warm constants drive the datapath identically.
+                let a = ScaleTrim::with_params(8, (*warmed).clone());
+                let b = ScaleTrim::with_params(8, fresh);
+                for (x, y) in [(48u64, 81u64), (255, 255), (3, 200)] {
+                    assert_eq!(a.mul(x, y), b.mul(x, y));
+                }
+            }
+            (DesignSpec::ScaleTrimQ { h, m }, CalibValue::ScaleTrim(_)) => {
+                let warmed = cache.scaletrim_params(8, *h, *m, CalibStrategy::Quantile);
+                let fresh = calibrator(CalibStrategy::Quantile).calibrate(8, *h, *m);
+                assert_params_bitwise_eq(&warmed, &fresh).unwrap_or_else(|e| {
+                    panic!("scaleTRIM-Q({h},{m}) warm != fresh: {e}")
+                });
+            }
+            (DesignSpec::Piecewise { h, s }, CalibValue::Piecewise(_)) => {
+                let warmed = cache.piecewise_fit(8, *h, *s);
+                let fresh = scaletrim::calib::fit_piecewise(8, *h, *s);
+                assert_eq!(*warmed, fresh, "Piecewise(h={h},S={s}) warm != fresh");
+            }
+            other => panic!("unexpected export entry {other:?}"),
+        }
+    }
+    // All of the above must have been served from the warm slots.
+    assert_eq!(cache.stats().misses, 0, "warm start must not recalibrate");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- corrupted-store rejections -----------------------------------------
+
+fn valid_store_text(dir: &PathBuf) -> (CalibStore, String) {
+    let store = CalibStore::at(dir);
+    let entry = StoreEntry {
+        key: CalibKey {
+            spec: DesignSpec::ScaleTrim { h: 3, m: 4 },
+            bits: 8,
+            strategy: CalibStrategy::Exhaustive,
+            kind: ArtifactKind::ScaleTrimParams,
+        },
+        value: CalibValue::ScaleTrim(Arc::new(calibrate(8, 3, 4))),
+    };
+    store.export(&[entry]).unwrap();
+    let text = std::fs::read_to_string(store.path()).unwrap();
+    (store, text)
+}
+
+#[test]
+fn load_rejects_wrong_version() {
+    let dir = tmp_dir("version");
+    let (store, text) = valid_store_text(&dir);
+    let tampered = text.replacen("\"version\":1", "\"version\":2", 1);
+    assert_ne!(tampered, text, "the version field must exist to tamper");
+    std::fs::write(store.path(), tampered).unwrap();
+    let e = store.load().unwrap_err().to_string();
+    let chain = format!("{:#}", store.load().unwrap_err());
+    assert!(
+        e.contains("version") || chain.contains("version"),
+        "error must name the version: {chain}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn load_rejects_wrong_checksum() {
+    let dir = tmp_dir("checksum");
+    let (store, text) = valid_store_text(&dir);
+    // Flip the first checksum hex digit (0 <-> f keeps it hex).
+    let idx = text.find("fnv1a64:").unwrap() + "fnv1a64:".len();
+    let orig = text.as_bytes()[idx] as char;
+    let flipped = if orig == 'f' { '0' } else { 'f' };
+    let mut tampered = text.clone();
+    tampered.replace_range(idx..idx + 1, &flipped.to_string());
+    std::fs::write(store.path(), tampered).unwrap();
+    let chain = format!("{:#}", store.load().unwrap_err());
+    assert!(chain.contains("checksum"), "{chain}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn load_rejects_tampered_entries() {
+    let dir = tmp_dir("tamper");
+    let (store, text) = valid_store_text(&dir);
+    // Change a constant inside the checksummed region.
+    let tampered = text.replacen("\"delta_ee\":-2", "\"delta_ee\":-1", 1);
+    assert_ne!(tampered, text);
+    std::fs::write(store.path(), tampered).unwrap();
+    let chain = format!("{:#}", store.load().unwrap_err());
+    assert!(chain.contains("checksum"), "{chain}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn load_rejects_truncated_files() {
+    let dir = tmp_dir("truncated");
+    let (store, text) = valid_store_text(&dir);
+    for frac in [2usize, 3, 10] {
+        std::fs::write(store.path(), &text[..text.len() / frac]).unwrap();
+        assert!(
+            store.load().is_err(),
+            "a 1/{frac}-length file must not load"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn load_rejects_invalid_constants_even_with_valid_checksum() {
+    // A well-formed, correctly checksummed bundle whose constants violate
+    // the datapath invariant (ΔEE < h − F) must still be rejected — the
+    // store re-runs `try_validate`, it does not trust the file.
+    let dir = tmp_dir("invalid-constants");
+    let store = CalibStore::at(&dir);
+    let mut params = calibrate(8, 3, 0);
+    params.delta_ee = -14; // F − h + ΔEE = −1: the underflow case
+    let entry = StoreEntry {
+        key: CalibKey {
+            spec: DesignSpec::ScaleTrim { h: 3, m: 0 },
+            bits: 8,
+            strategy: CalibStrategy::Exhaustive,
+            kind: ArtifactKind::ScaleTrimParams,
+        },
+        value: CalibValue::ScaleTrim(Arc::new(params)),
+    };
+    // Export does not validate (it trusts in-process values — they passed
+    // construction validation); craft the file directly.
+    store.export(&[entry]).unwrap();
+    let chain = format!("{:#}", store.load().unwrap_err());
+    assert!(chain.contains("linearization shift"), "{chain}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A well-formed, checksummed bundle must not be able to smuggle quantile
+/// boundaries under a uniform scaleTRIM key (or mismatch spec/strategy):
+/// that would silently switch the datapath's segment selection on warm
+/// start.
+#[test]
+fn load_rejects_segmentation_shape_mismatches() {
+    let dir = tmp_dir("shape-mismatch");
+    let store = CalibStore::at(&dir);
+    // Uniform key carrying quantile boundaries.
+    let mut params = calibrate(8, 3, 4);
+    params.seg_bounds = vec![3, 6, 9]; // passes try_validate on its own
+    let entry = StoreEntry {
+        key: CalibKey {
+            spec: DesignSpec::ScaleTrim { h: 3, m: 4 },
+            bits: 8,
+            strategy: CalibStrategy::Exhaustive,
+            kind: ArtifactKind::ScaleTrimParams,
+        },
+        value: CalibValue::ScaleTrim(Arc::new(params)),
+    };
+    store.export(&[entry]).unwrap();
+    let chain = format!("{:#}", store.load().unwrap_err());
+    assert!(chain.contains("segment boundaries"), "{chain}");
+    // Quantile spec keyed by a non-quantile strategy.
+    let entry = StoreEntry {
+        key: CalibKey {
+            spec: DesignSpec::ScaleTrimQ { h: 3, m: 4 },
+            bits: 8,
+            strategy: CalibStrategy::Exhaustive,
+            kind: ArtifactKind::ScaleTrimParams,
+        },
+        value: CalibValue::ScaleTrim(Arc::new(
+            calibrator(CalibStrategy::Quantile).calibrate(8, 3, 4),
+        )),
+    };
+    store.export(&[entry]).unwrap();
+    let chain = format!("{:#}", store.load().unwrap_err());
+    assert!(chain.contains("disagree"), "{chain}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- cache poisoning regression ------------------------------------------
+
+/// The satellite fix, end to end: with the old per-module statics, one
+/// panicking calibration poisoned the `Mutex` and every later acquisition
+/// of that width died with it. The unified cache must retry the key and
+/// leave every other key untouched — including across threads.
+#[test]
+fn poisoned_calibration_is_survivable() {
+    let cache = Arc::new(CalibCache::new());
+    let key = CalibKey {
+        spec: DesignSpec::ScaleTrim { h: 5, m: 4 },
+        bits: 8,
+        strategy: CalibStrategy::Exhaustive,
+        kind: ArtifactKind::ScaleTrimParams,
+    };
+    // Panic inside the init closure, on another thread (so the panic also
+    // crosses a thread boundary, like a real racing calibration would).
+    let c2 = cache.clone();
+    let t = std::thread::spawn(move || {
+        c2.get_or_init(key, || panic!("injected: invalid spec raced in"));
+    });
+    assert!(t.join().is_err(), "the injected panic must kill that thread");
+    // Same key: retried and served.
+    let p = cache.scaletrim_params(8, 5, 4, CalibStrategy::Exhaustive);
+    assert_eq!((p.h, p.m), (5, 4));
+    // Same width, different key: never affected.
+    let q = cache.scaletrim_params(8, 5, 8, CalibStrategy::Exhaustive);
+    assert_eq!(q.m, 8);
+}
+
+// --- paper anchors per strategy ------------------------------------------
+
+/// Acceptance criterion: the Table 4 MRED anchors hold for every
+/// calibration strategy that claims paper fidelity.
+#[test]
+fn table4_anchors_hold_for_every_paper_fidelity_strategy() {
+    let anchors = [(3u32, 4u32, 3.73f64), (4, 8, 3.34), (5, 8, 2.12)];
+    for strategy in CalibStrategy::ALL {
+        let cal = calibrator(strategy);
+        if !cal.paper_fidelity() {
+            continue;
+        }
+        for (h, m, paper) in anchors {
+            let mult = ScaleTrim::with_params(8, cal.calibrate(8, h, m));
+            let mut sum = 0.0;
+            for a in 1..256u64 {
+                for b in 1..256u64 {
+                    let exact = (a * b) as f64;
+                    sum += ((mult.mul(a, b) as f64 - exact) / exact).abs();
+                }
+            }
+            let mred = 100.0 * sum / (255.0 * 255.0);
+            assert!(
+                mred <= paper + 0.35,
+                "{strategy} scaleTRIM({h},{m}): MRED {mred:.2} vs paper {paper}"
+            );
+        }
+    }
+}
+
+/// The quantile family: a real design (parse → build → multiply), with
+/// compensation that demonstrably works at equal LUT size.
+#[test]
+fn quantile_family_is_a_working_design() {
+    let q: DesignSpec = "scaleTRIM-Q(4,8)".parse().unwrap();
+    let mq = q.build(8).unwrap();
+    assert_eq!(mq.spec(), q);
+    assert_eq!(mq.calib_strategy(), CalibStrategy::Quantile);
+    let m0 = ScaleTrim::new(8, 4, 0); // no compensation baseline
+    let mut sum_q = 0.0;
+    let mut sum_0 = 0.0;
+    for a in 1..256u64 {
+        for b in 1..256u64 {
+            let exact = (a * b) as f64;
+            sum_q += ((mq.mul(a, b) as f64 - exact) / exact).abs();
+            sum_0 += ((m0.mul(a, b) as f64 - exact) / exact).abs();
+        }
+    }
+    let (mred_q, mred_0) = (100.0 * sum_q / 65025.0, 100.0 * sum_0 / 65025.0);
+    assert!(
+        mred_q < mred_0,
+        "quantile compensation must beat no compensation: {mred_q:.2} !< {mred_0:.2}"
+    );
+    // And it must be in the family of the uniform design at the same M.
+    let mu = ScaleTrim::new(8, 4, 8);
+    let mut sum_u = 0.0;
+    for a in 1..256u64 {
+        for b in 1..256u64 {
+            let exact = (a * b) as f64;
+            sum_u += ((mu.mul(a, b) as f64 - exact) / exact).abs();
+        }
+    }
+    let mred_u = 100.0 * sum_u / 65025.0;
+    assert!(
+        mred_q <= mred_u + 0.5,
+        "quantile segmentation far off uniform at equal M: {mred_q:.2} vs {mred_u:.2}"
+    );
+}
+
+/// External constants (`with_params`) carry their own cache identity:
+/// they can never poison — or be served — a self-calibrated config's
+/// strategy-keyed slot, even when their spec matches.
+#[test]
+fn external_constants_never_share_cache_identity() {
+    let external = ScaleTrim::with_params(8, calibrator(CalibStrategy::Sampled).calibrate(8, 3, 4));
+    assert_eq!(external.calib_strategy(), CalibStrategy::External);
+    assert_eq!(external.spec(), DesignSpec::ScaleTrim { h: 3, m: 4 });
+    let cache = CalibCache::new();
+    let ext_lut = cache.product_lut(&external);
+    let own_lut = cache.product_lut(&ScaleTrim::new(8, 3, 4));
+    assert!(
+        !Arc::ptr_eq(&ext_lut, &own_lut),
+        "external constants must occupy their own product-LUT slot"
+    );
+    // And External is an identity, not a requestable calibration.
+    assert!(ScaleTrim::with_strategy(8, 3, 4, CalibStrategy::External).is_err());
+}
+
+/// Constructor alignment (satellite): `ScaleTrim` and `PiecewiseLinear`
+/// direct construction go through the same typed validation as
+/// `DesignSpec::build`.
+#[test]
+fn constructors_share_the_spec_error_path() {
+    // scaleTRIM: h >= 2, via the spec's words.
+    let direct = ScaleTrim::try_new(8, 1, 4).unwrap_err().to_string();
+    let via_spec = DesignSpec::ScaleTrim { h: 1, m: 4 }
+        .build(8)
+        .unwrap_err()
+        .to_string();
+    assert_eq!(direct, via_spec);
+    assert!(direct.contains(">= 2"), "{direct}");
+    // Piecewise: h >= 1 is legal — the aligned rule, not scaleTRIM's.
+    assert!(PiecewiseLinear::try_new(8, 1, 4).is_ok());
+    // Width rules agree too.
+    assert!(ScaleTrim::try_new(30, 4, 4).is_err(), "width cap is 24");
+    assert!(ScaleTrim::try_new(8, 3, 3).is_err(), "M must be 0 or a power of two");
+}
