@@ -2,11 +2,13 @@
 //! DSE hot path (§Perf L3) — a full 8-bit sweep is 65k `mul` calls per
 //! config, a 16-bit sweep 4M+.
 //!
-//! Three planes per design where it matters:
+//! Four planes per design where it matters:
 //! - `mul/…`        scalar through `&dyn` (the seed path: one virtual call
 //!                  plus parameter reloads per pair);
 //! - `mul_batch/…`  the batched kernel plane (one virtual call per 4096
 //!                  pairs, monomorphized loop body);
+//! - `mul_simd/…`   the explicit lane plane (`mul_batch_simd`: 8-wide
+//!                  branchless unrolled bodies, see `simd` module docs);
 //! - `compiled/…`   `CompiledMul` (every multiply a table load).
 
 use ::scaletrim::multipliers::*;
@@ -43,6 +45,37 @@ fn bench_mult_batch(b: &mut Bencher, m: &dyn ApproxMultiplier) {
     });
 }
 
+fn bench_mult_simd(b: &mut Bencher, m: &dyn ApproxMultiplier) {
+    let (xs, ys) = operands(m.bits());
+    let mut out = vec![0u64; OPS];
+    b.bench(&format!("mul_simd/{}", m.name()), Some(OPS as u64), || {
+        m.mul_batch_simd(&xs, &ys, &mut out);
+        black_box(out[0]);
+    });
+}
+
+fn bench_mult_simd_zero_heavy(b: &mut Bencher, m: &dyn ApproxMultiplier) {
+    // ~50% zeros: ReLU-style activation streams. The scalar path takes the
+    // zero-detect branch erratically; the lane plane pre-masks and stays
+    // branchless, so the gap here is the point of the satellite.
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let bits = m.bits();
+    let xs: Vec<u64> = (0..OPS).map(|_| rng.gen_operand(bits) * rng.gen_range(2)).collect();
+    let ys: Vec<u64> = (0..OPS).map(|_| rng.gen_operand(bits) * rng.gen_range(2)).collect();
+    let mut out = vec![0u64; OPS];
+    b.bench(&format!("mul_simd_zh/{}", m.name()), Some(OPS as u64), || {
+        m.mul_batch_simd(&xs, &ys, &mut out);
+        black_box(out[0]);
+    });
+    b.bench(&format!("mul_zh/{}", m.name()), Some(OPS as u64), || {
+        let mut acc = 0u64;
+        for (&x, &y) in xs.iter().zip(ys.iter()) {
+            acc = acc.wrapping_add(m.mul(x, y));
+        }
+        black_box(acc);
+    });
+}
+
 fn main() {
     let mut b = Bencher::new();
     // Scalar-vs-batched pairs for every design with a monomorphized
@@ -50,20 +83,27 @@ fn main() {
     // delta).
     bench_mult(&mut b, &Exact::new(8));
     bench_mult_batch(&mut b, &Exact::new(8));
+    bench_mult_simd(&mut b, &Exact::new(8));
     bench_mult(&mut b, &ScaleTrim::new(8, 3, 4));
     bench_mult_batch(&mut b, &ScaleTrim::new(8, 3, 4));
+    bench_mult_simd(&mut b, &ScaleTrim::new(8, 3, 4));
+    bench_mult_simd_zero_heavy(&mut b, &ScaleTrim::new(8, 3, 4));
     bench_mult(&mut b, &ScaleTrim::new(8, 4, 8));
     bench_mult_batch(&mut b, &ScaleTrim::new(8, 4, 8));
+    bench_mult_simd(&mut b, &ScaleTrim::new(8, 4, 8));
     bench_mult(&mut b, &ScaleTrim::new(16, 5, 8));
     bench_mult_batch(&mut b, &ScaleTrim::new(16, 5, 8));
+    bench_mult_simd(&mut b, &ScaleTrim::new(16, 5, 8));
     bench_mult(&mut b, &Drum::new(8, 4));
     bench_mult_batch(&mut b, &Drum::new(8, 4));
     bench_mult(&mut b, &Dsm::new(8, 4));
     bench_mult_batch(&mut b, &Dsm::new(8, 4));
     bench_mult(&mut b, &Tosam::new(8, 1, 5));
     bench_mult_batch(&mut b, &Tosam::new(8, 1, 5));
+    bench_mult_simd(&mut b, &Tosam::new(8, 1, 5));
     bench_mult(&mut b, &Mitchell::new(8));
     bench_mult_batch(&mut b, &Mitchell::new(8));
+    bench_mult_simd(&mut b, &Mitchell::new(8));
     bench_mult(&mut b, &Mbm::new(8, 2));
     bench_mult_batch(&mut b, &Mbm::new(8, 2));
     // Default-method designs: batched still saves dispatch per chunk.

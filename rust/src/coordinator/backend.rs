@@ -110,6 +110,10 @@ impl Backend for PjrtBackend {
 }
 
 /// Pure-rust interpreter backend (no PJRT dependency; any batch size).
+/// Batches of ≥ 4 images fan out across [`crate::util::parallel::workers`]
+/// threads — images are independent, so the logits are bit-identical to
+/// the serial loop and lanes get the fastest kernel path end to end (the
+/// product LUT itself is built on the SIMD plane via `nn::cached_lut`).
 pub struct PureRustBackend {
     cnn: QuantizedCnn,
     batch: usize,
@@ -138,10 +142,34 @@ impl Backend for PureRustBackend {
         if pixels.len() != self.batch * img {
             bail!("bad batch payload: {} != {}", pixels.len(), self.batch * img);
         }
-        let mut out = Vec::with_capacity(self.batch * self.cnn.n_classes());
-        for i in 0..self.batch {
-            out.extend(self.cnn.forward(&pixels[i * img..(i + 1) * img], lut));
+        let nc = self.cnn.n_classes();
+        let nthreads = crate::util::parallel::workers().min(self.batch.max(1));
+        if self.batch < 4 || nthreads < 2 {
+            // Tiny batches: thread spawn would dominate — run inline.
+            let mut out = Vec::with_capacity(self.batch * nc);
+            for i in 0..self.batch {
+                out.extend(self.cnn.forward(&pixels[i * img..(i + 1) * img], lut));
+            }
+            return Ok(out);
         }
+        // Images are independent — fan the batch out across workers,
+        // each writing its own disjoint logit span (output order, and
+        // every logit, identical to the serial loop).
+        let mut out = vec![0i32; self.batch * nc];
+        let chunk = self.batch.div_ceil(nthreads);
+        std::thread::scope(|scope| {
+            for (t, out_span) in out.chunks_mut(chunk * nc).enumerate() {
+                let lo = t * chunk;
+                let hi = (lo + chunk).min(self.batch);
+                let cnn = &self.cnn;
+                scope.spawn(move || {
+                    for (i, logits) in (lo..hi).zip(out_span.chunks_mut(nc)) {
+                        let img_px = &pixels[i * img..(i + 1) * img];
+                        logits.copy_from_slice(&cnn.forward(img_px, lut));
+                    }
+                });
+            }
+        });
         Ok(out)
     }
 }

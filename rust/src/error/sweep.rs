@@ -64,10 +64,11 @@ impl SweepSpec {
     }
 }
 
-/// Drive `m.mul_batch` over a pair stream in [`BATCH`]-sized chunks,
-/// handing `(a, b, approx)` to the sink per pair, in stream order (so
-/// accumulation order — and therefore every float result — is identical
-/// to the scalar reference path).
+/// Drive `m.mul_batch_simd` (the SIMD kernel plane; bit-identical to
+/// `mul_batch` by the property suite) over a pair stream in
+/// [`BATCH`]-sized chunks, handing `(a, b, approx)` to the sink per pair,
+/// in stream order (so accumulation order — and therefore every float
+/// result — is identical to the scalar reference path).
 fn drive_batched<I, S>(m: &dyn ApproxMultiplier, pairs: I, mut sink: S)
 where
     I: Iterator<Item = (u64, u64)>,
@@ -80,7 +81,7 @@ where
         a_buf.push(a);
         b_buf.push(b);
         if a_buf.len() == BATCH {
-            m.mul_batch(&a_buf, &b_buf, &mut out);
+            m.mul_batch_simd(&a_buf, &b_buf, &mut out);
             for i in 0..BATCH {
                 sink(a_buf[i], b_buf[i], out[i]);
             }
@@ -90,7 +91,7 @@ where
     }
     if !a_buf.is_empty() {
         let len = a_buf.len();
-        m.mul_batch(&a_buf, &b_buf, &mut out[..len]);
+        m.mul_batch_simd(&a_buf, &b_buf, &mut out[..len]);
         for i in 0..len {
             sink(a_buf[i], b_buf[i], out[i]);
         }
@@ -164,7 +165,7 @@ fn sampled_builder(m: &dyn ApproxMultiplier, pairs: u64, seed: u64) -> ErrorRepo
                         a_buf[i] = rng.gen_operand(bits);
                         b_buf[i] = rng.gen_operand(bits);
                     }
-                    m.mul_batch(&a_buf[..len], &b_buf[..len], &mut out[..len]);
+                    m.mul_batch_simd(&a_buf[..len], &b_buf[..len], &mut out[..len]);
                     for i in 0..len {
                         b.push(out[i], a_buf[i] * b_buf[i]);
                     }

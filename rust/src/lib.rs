@@ -19,6 +19,18 @@
 //!   (monomorphized overrides for the hot designs hoist parameter loads
 //!   out of the loop), and `CompiledMul` folds any design into a full
 //!   product table for pure-load repeat evaluation.
+//! - [`simd`] — the **explicit SIMD kernel plane** above `mul_batch`:
+//!   structure-of-arrays operand batches, 8-wide branch-free lane blocks
+//!   with batched leading-one detection and branchless zero pre-masking,
+//!   consumed through `ApproxMultiplier::mul_batch_simd` (hand-unrolled
+//!   lane kernels for scaleTRIM, TOSAM, Mitchell and exact; `mul_batch`
+//!   fallback everywhere else). The MAC plane, the sweeps, the LUT
+//!   builders and `CompiledMul::compile` all route through it.
+//! - [`perf`] — the persisted perf trajectory: the `scaletrim bench`
+//!   micro-bench harness timing scalar vs batched vs SIMD vs compiled
+//!   kernels per design family, emitting schema-versioned `BENCH_*.json`
+//!   at the repo root, with a regression comparator the CI bench job
+//!   fails on (>15% throughput drop vs the committed baseline).
 //! - [`lut`] — the offline calibration flow of Sec. III: zero-intercept
 //!   least-squares linearization (α, ΔEE) and the piecewise-constant
 //!   compensation LUT (C_i).
@@ -99,8 +111,10 @@ pub mod hardware;
 pub mod lut;
 pub mod multipliers;
 pub mod nn;
+pub mod perf;
 pub mod report;
 pub mod runtime;
+pub mod simd;
 pub mod util;
 pub mod workloads;
 

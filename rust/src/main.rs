@@ -8,6 +8,9 @@
 //! - `lut-gen --h H --m M`         print calibration constants
 //! - `calib export|show|warm`      manage the on-disk calibration artifact store
 //! - `pareto [--bits 8|16]`        Pareto front of the design space
+//! - `bench [--out F] [--fast] [--check BASELINE]`  kernel-tier micro-bench,
+//!   emits the schema-versioned `BENCH_*.json` perf trajectory document and
+//!   optionally gates against a committed baseline (>15% drop fails)
 //! - `app --workload <name>`       run one application workload under a config
 //! - `infer --model <name>`        batch inference via PJRT on an artifact
 //! - `serve --model <name>`        run the batching coordinator demo
@@ -306,6 +309,33 @@ fn main() -> Result<()> {
                 r.n as f64 / dt.as_secs_f64()
             );
         }
+        "bench" => {
+            let out = args.opt_or("out", "BENCH_6.json");
+            let fast = args.has_flag("fast") || scaletrim::perf::env_fast();
+            // Read the baseline before writing, so `--out X --check X`
+            // compares against the committed document and then advances it,
+            // instead of silently diffing the fresh run against itself.
+            let baseline_src = match args.opt("check") {
+                Some(p) => Some((p, std::fs::read_to_string(p)?)),
+                None => None,
+            };
+            let doc = scaletrim::perf::run_bench(fast);
+            std::fs::write(&out, doc.to_string() + "\n")?;
+            println!("bench document written to {out} (schema {})", scaletrim::perf::SCHEMA);
+            if let Some((baseline_path, raw)) = baseline_src {
+                let baseline = scaletrim::util::json::Json::parse(&raw)
+                    .map_err(|e| anyhow::anyhow!("parsing {baseline_path}: {e}"))?;
+                let lines =
+                    scaletrim::perf::compare(&doc, &baseline, scaletrim::perf::DEFAULT_TOLERANCE)?;
+                for l in &lines {
+                    println!("  {l}");
+                }
+                println!(
+                    "no regression beyond {:.0}% vs {baseline_path}",
+                    scaletrim::perf::DEFAULT_TOLERANCE * 100.0
+                );
+            }
+        }
         "serve" => {
             let model = args.opt_or("model", "lenet");
             let n_requests = args.opt_parse_or("requests", 1000usize);
@@ -352,9 +382,10 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "scaletrim — scaleTRIM approximate-multiplier system reproduction\n\n\
-                 usage: scaletrim <repro|list|mul|sweep|lut-gen|calib|pareto|app|infer|serve> [options]\n\
+                 usage: scaletrim <repro|list|mul|sweep|lut-gen|calib|pareto|bench|app|infer|serve> [options]\n\
                  examples:\n  \
                  scaletrim repro --exp table4\n  \
+                 scaletrim bench --out BENCH_6.json --check BENCH_6.json\n  \
                  scaletrim repro --exp calib\n  \
                  scaletrim calib export --bits 8 --dir artifacts/calib\n  \
                  scaletrim mul --config 'scaleTRIM(3,4)' 48 81\n  \

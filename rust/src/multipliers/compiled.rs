@@ -1,7 +1,7 @@
 //! `CompiledMul` — a table-backed kernel on the batched plane: folds *any*
 //! behavioural design into its full `2^n × 2^n` product table so every
-//! subsequent multiply is a single load. Built once via `mul_batch` (the
-//! batched plane compiles itself), usable anywhere an [`ApproxMultiplier`]
+//! subsequent multiply is a single load. Built once via `mul_batch_simd`
+//! (the kernel plane compiles itself), usable anywhere an [`ApproxMultiplier`]
 //! is: repeat-evaluation paths (DSE re-sweeps, calibration scans, serving
 //! lanes that re-characterise a config) trade one up-front pass over the
 //! operand space for pure-load steady-state throughput.
@@ -54,7 +54,9 @@ impl CompiledMul {
         let mut out = vec![0u64; n];
         for a in 0..n as u64 {
             a_ops.fill(a);
-            m.mul_batch(&a_ops, &b_ops, &mut out);
+            // Compile through the SIMD plane — the fastest kernel the
+            // source design offers (falls back to its `mul_batch`).
+            m.mul_batch_simd(&a_ops, &b_ops, &mut out);
             let row = &mut table[(a as usize) * n..(a as usize + 1) * n];
             for (slot, &p) in row.iter_mut().zip(out.iter()) {
                 assert!(p <= u32::MAX as u64, "{}: product {p} overflows u32", m.name());

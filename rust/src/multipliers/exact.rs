@@ -38,6 +38,26 @@ impl ApproxMultiplier for Exact {
             *o = x * y;
         }
     }
+
+    /// Lane kernel: straight-line `x·y` per lane (lowers to `vpmuludq`
+    /// blocks) — the SIMD throughput ceiling the approximate lane kernels
+    /// are compared against in the bench trajectory.
+    fn mul_batch_simd(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        use crate::simd;
+        simd::drive_lanes(
+            a,
+            b,
+            out,
+            |xa, xb| {
+                let mut r = [0u64; simd::LANES];
+                for ((r_i, x), y) in r.iter_mut().zip(xa.iter()).zip(xb.iter()) {
+                    *r_i = x * y;
+                }
+                r
+            },
+            |ta, tb, tout| self.mul_batch(ta, tb, tout),
+        );
+    }
 }
 
 #[cfg(test)]

@@ -80,6 +80,41 @@ impl ApproxMultiplier for Mitchell {
             };
         }
     }
+
+    /// Hand-vectorized lane kernel. Both data-dependent branches of the
+    /// scalar kernels go branchless: zero operands are pre-masked
+    /// ([`crate::simd`]), and the Eq. 10 carry case `X + Y ≥ 1` becomes a
+    /// select — `wrap = (s ≥ 1)` folds the mantissa (`1 + s` vs `s`) and
+    /// the extra output shift (`na + nb + wrap`) without branching, so the
+    /// lane body is straight-line shifts and adds.
+    fn mul_batch_simd(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        use crate::simd;
+        let f = self.bits;
+        let one = 1u128 << f;
+        simd::drive_lanes(
+            a,
+            b,
+            out,
+            |xa, xb| {
+                let keep = simd::nonzero_flags(xa, xb);
+                let xm = simd::mask_zero_to_one(xa);
+                let ym = simd::mask_zero_to_one(xb);
+                let na = simd::leading_one_lanes(&xm);
+                let nb = simd::leading_one_lanes(&ym);
+                let mut r = [0u64; simd::LANES];
+                for (i, r_i) in r.iter_mut().enumerate() {
+                    let x = ((xm[i] - (1 << na[i])) as u128) << (f - na[i]);
+                    let y = ((ym[i] - (1 << nb[i])) as u128) << (f - nb[i]);
+                    let s = x + y;
+                    let wrap = (s >= one) as u32;
+                    let mant = s + (1 - wrap as u128) * one;
+                    *r_i = (((mant << (na[i] + nb[i] + wrap)) >> f) as u64) * keep[i];
+                }
+                r
+            },
+            |ta, tb, tout| self.mul_batch(ta, tb, tout),
+        );
+    }
 }
 
 #[cfg(test)]

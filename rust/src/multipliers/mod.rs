@@ -14,9 +14,13 @@
 //! the hottest designs (scaleTRIM, Mitchell, MBM, DRUM, DSM, TOSAM, exact)
 //! override it with monomorphized loops that hoist parameter loads
 //! (`h`, `ΔEE`, the compensation-LUT base pointer, segment tables) out of
-//! the loop and let LLVM inline and vectorise the datapath. For repeat
-//! evaluation of one config, [`CompiledMul`] folds any design into a full
-//! product table (widths ≤ 12 bits) so every multiply becomes a load.
+//! the loop and let LLVM inline and vectorise the datapath. Above that
+//! sits [`ApproxMultiplier::mul_batch_simd`] — the explicit SIMD kernel
+//! plane ([`crate::simd`]): 8-wide branch-free lane blocks with batched
+//! LOD and branchless zero masking, defaulting to `mul_batch` for designs
+//! without a hand-written lane kernel. For repeat evaluation of one
+//! config, [`CompiledMul`] folds any design into a full product table
+//! (widths ≤ 12 bits) so every multiply becomes a load.
 //!
 //! The zoo (one module per design):
 //!
@@ -140,6 +144,23 @@ pub trait ApproxMultiplier: Send + Sync {
         for ((&x, &y), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
             *o = self.mul(x, y);
         }
+    }
+
+    /// Element-wise approximate products through the explicit SIMD kernel
+    /// plane ([`crate::simd`]): operands stream in structure-of-arrays
+    /// layout through [`LANES`](crate::simd::LANES)-wide branch-free lane
+    /// blocks (batched leading-one detection, branchless zero
+    /// pre-masking), with the sub-lane tail delegated to `mul_batch`.
+    ///
+    /// The default falls back to `mul_batch` — every design gets the SIMD
+    /// entry point, and only the hottest kernels (scaleTRIM, TOSAM,
+    /// Mitchell, exact) override it with hand-unrolled lane bodies.
+    /// Overrides must be observably identical to `mul` per element,
+    /// including at zero operands and off-lane-width batch lengths
+    /// (enforced by `tests/prop_multipliers.rs` over every enumerable
+    /// spec).
+    fn mul_batch_simd(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        self.mul_batch(a, b, out);
     }
 
     /// Exact product for reference (identical for every design).

@@ -117,6 +117,32 @@ impl ScaleTrim {
     pub fn strategy(&self) -> CalibStrategy {
         self.strategy
     }
+
+    /// The linearization shift realising `2^ΔEE·S` as one hardwired shift
+    /// in `COMP_FRAC_BITS` fixed point (`F − h + ΔEE`; ΔEE folds in).
+    /// Non-negative by construction — [`ScaleTrimParams::validate`] pins
+    /// `ΔEE ≥ h − F` on every constants-entry path.
+    #[inline(always)]
+    fn lin_shift(&self) -> u32 {
+        const F: u32 = COMP_FRAC_BITS;
+        debug_assert!(
+            F as i32 - self.params.h as i32 + self.params.delta_ee >= 0,
+            "linearization shift underflow: ΔEE {} < h − F (validated at construction)",
+            self.params.delta_ee
+        );
+        (F as i32 - self.params.h as i32 + self.params.delta_ee) as u32
+    }
+}
+
+/// Linearization term `1 + S + 2^ΔEE·S` in `COMP_FRAC_BITS` fixed point
+/// (Sec. III-A Eq. 6, one adder + one hardwired shift; `lin_shift` already
+/// folds ΔEE). The single source of the term for all three kernel paths —
+/// scalar [`ScaleTrim::mul`], the batched loop, and the SIMD lane kernel —
+/// so they cannot drift.
+#[inline(always)]
+fn lin_term(s: u64, h: u32, lin_shift: u32) -> i64 {
+    const F: u32 = COMP_FRAC_BITS;
+    (1i64 << F) + ((s as i64) << (F - h)) + ((s as i64) << lin_shift)
 }
 
 impl ApproxMultiplier for ScaleTrim {
@@ -176,15 +202,7 @@ impl ApproxMultiplier for ScaleTrim {
 
         // (4) shift-add approximation in F-bit fixed point:
         //     term = 1 + S + 2^ΔEE·S   (one adder + one hardwired shift).
-        let s_f = (s as i64) << (F - h); // S in units of 2^-F
-        debug_assert!(
-            F as i32 - h as i32 + self.params.delta_ee >= 0,
-            "linearization shift underflow: ΔEE {} < h − F (validated at construction)",
-            self.params.delta_ee
-        );
-        let shift = (F as i32 - h as i32 + self.params.delta_ee) as u32;
-        let scaled = (s as i64) << shift; // 2^ΔEE·S (ΔEE<0 folds into the shift)
-        let mut term = (1i64 << F) + s_f + scaled;
+        let mut term = lin_term(s, h, self.lin_shift());
 
         // (5) LUT compensation (selected by the MSBs of S).
         if self.params.m > 0 {
@@ -210,12 +228,7 @@ impl ApproxMultiplier for ScaleTrim {
         let h = self.params.h;
         let m = self.params.m;
         let c_fixed = &self.params.c_fixed[..];
-        debug_assert!(
-            F as i32 - h as i32 + self.params.delta_ee >= 0,
-            "linearization shift underflow: ΔEE {} < h − F (validated at construction)",
-            self.params.delta_ee
-        );
-        let lin_shift = (F as i32 - h as i32 + self.params.delta_ee) as u32;
+        let lin_shift = self.lin_shift();
         for ((&x, &y), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
             debug_assert!(x < (1u64 << self.bits) && y < (1u64 << self.bits));
             *o = if x == 0 || y == 0 {
@@ -224,13 +237,54 @@ impl ApproxMultiplier for ScaleTrim {
                 let na = leading_one(x);
                 let nb = leading_one(y);
                 let s = truncate_fraction(x, na, h) + truncate_fraction(y, nb, h);
-                let mut term = (1i64 << F) + ((s as i64) << (F - h)) + ((s as i64) << lin_shift);
+                let mut term = lin_term(s, h, lin_shift);
                 if m > 0 {
                     term += c_fixed[self.params.segment(s)];
                 }
                 (((term as u128) << (na + nb)) >> F) as u64
             };
         }
+    }
+
+    /// Hand-vectorized lane kernel: the full scaleTRIM datapath evaluated
+    /// over [`simd::LANES`]-wide branch-free blocks. The per-pair
+    /// `x == 0 || y == 0` branch of the scalar kernels — unpredictable on
+    /// zero-heavy post-ReLU streams — becomes branchless pre-masking:
+    /// zero lanes compute on placeholder operand `1` (LOD 0, empty
+    /// fraction) and the result lane is multiplied by the nonzero flag.
+    /// Term math is [`lin_term`], shared with `mul`/`mul_batch`; the
+    /// sub-lane tail delegates to `mul_batch`.
+    fn mul_batch_simd(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        use crate::simd;
+        const F: u32 = COMP_FRAC_BITS;
+        let h = self.params.h;
+        let m = self.params.m;
+        let params = &*self.params;
+        let lin_shift = self.lin_shift();
+        simd::drive_lanes(
+            a,
+            b,
+            out,
+            |xa, xb| {
+                let keep = simd::nonzero_flags(xa, xb);
+                let xm = simd::mask_zero_to_one(xa);
+                let ym = simd::mask_zero_to_one(xb);
+                let na = simd::leading_one_lanes(&xm);
+                let nb = simd::leading_one_lanes(&ym);
+                let mut r = [0u64; simd::LANES];
+                for (i, r_i) in r.iter_mut().enumerate() {
+                    let s = truncate_fraction(xm[i], na[i], h)
+                        + truncate_fraction(ym[i], nb[i], h);
+                    let mut term = lin_term(s, h, lin_shift);
+                    if m > 0 {
+                        term += params.c_fixed[params.segment(s)];
+                    }
+                    *r_i = ((((term as u128) << (na[i] + nb[i])) >> F) as u64) * keep[i];
+                }
+                r
+            },
+            |ta, tb, tout| self.mul_batch(ta, tb, tout),
+        );
     }
 }
 

@@ -91,6 +91,44 @@ impl ApproxMultiplier for Tosam {
             };
         }
     }
+
+    /// Hand-vectorized lane kernel: batched LOD over the lane block,
+    /// branchless zero pre-masking (placeholder operand `1` has LOD 0 and
+    /// empty fractions, so `xt1 = yt1 = 1` — well defined), fixed-point
+    /// shifts hoisted; the sub-lane tail delegates to `mul_batch`.
+    fn mul_batch_simd(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        use crate::simd;
+        const F: u32 = 24;
+        let (t, h) = (self.t, self.h);
+        let one = 1u128 << F;
+        let sum_shift = F - h;
+        let prod_shift = F - 2 * (t + 1);
+        simd::drive_lanes(
+            a,
+            b,
+            out,
+            |xa, xb| {
+                let keep = simd::nonzero_flags(xa, xb);
+                let xm = simd::mask_zero_to_one(xa);
+                let ym = simd::mask_zero_to_one(xb);
+                let na = simd::leading_one_lanes(&xm);
+                let nb = simd::leading_one_lanes(&ym);
+                let mut r = [0u64; simd::LANES];
+                for (i, r_i) in r.iter_mut().enumerate() {
+                    let xh = truncate_fraction(xm[i], na[i], h);
+                    let yh = truncate_fraction(ym[i], nb[i], h);
+                    let xt1 = (truncate_fraction(xm[i], na[i], t) << 1) | 1;
+                    let yt1 = (truncate_fraction(ym[i], nb[i], t) << 1) | 1;
+                    let term = one
+                        + (((xh + yh) as u128) << sum_shift)
+                        + (((xt1 * yt1) as u128) << prod_shift);
+                    *r_i = (((term << (na[i] + nb[i])) >> F) as u64) * keep[i];
+                }
+                r
+            },
+            |ta, tb, tout| self.mul_batch(ta, tb, tout),
+        );
+    }
 }
 
 #[cfg(test)]

@@ -139,14 +139,24 @@ impl QuantizedCnn {
                     final_layer,
                 } => {
                     debug_assert_eq!(*n_in, c * h * w);
-                    let mut logits = vec![0i32; *n_out];
-                    for (o, logit) in logits.iter_mut().enumerate() {
-                        let mut acc: i32 = bias[o];
-                        for (i, &a) in act.iter().enumerate() {
-                            let wv = wq[i * n_out + o] as i32;
-                            acc = acc.wrapping_add(lut[a as usize * 256 + (wv + 128) as usize]);
+                    // Row-blocked FC (same scheme as the scatter conv):
+                    // outer loop over input activations so each 256-entry
+                    // LUT row is fetched once and streamed across the
+                    // contiguous weight row, and zero activations —
+                    // common post-ReLU, with lut[0][*] all-zero by the
+                    // zero-detect bypass — skip the whole row. Wrapping
+                    // i32 adds commute, so logits are bit-identical to
+                    // the gather form.
+                    let mut logits: Vec<i32> = bias.clone();
+                    for (i, &a) in act.iter().enumerate() {
+                        if a == 0 {
+                            continue;
                         }
-                        *logit = acc;
+                        let lrow = &lut[a as usize * 256..a as usize * 256 + 256];
+                        let wrow = &wq[i * n_out..(i + 1) * n_out];
+                        for (logit, &wv) in logits.iter_mut().zip(wrow) {
+                            *logit = logit.wrapping_add(lrow[(wv as i32 + 128) as usize]);
+                        }
                     }
                     if *final_layer {
                         return logits;

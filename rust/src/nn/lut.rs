@@ -6,9 +6,9 @@
 //! are unsigned (post-ReLU uint8), weights signed int8; sign-magnitude
 //! wrapping per paper Sec. III-D.
 //!
-//! Construction runs on the batched kernel plane: one
-//! [`ApproxMultiplier::mul_batch`] call over all 65,536 operand pairs
-//! instead of 65,536 virtual `mul` calls. [`cached_lut`] resolves through
+//! Construction runs on the SIMD kernel plane: one
+//! [`ApproxMultiplier::mul_batch_simd`] call over all 65,536 operand
+//! pairs instead of 65,536 virtual `mul` calls. [`cached_lut`] resolves through
 //! the unified calibration cache ([`crate::calib::CalibCache`]) keyed by
 //! the typed `(DesignSpec, bits, strategy)` identity, so the coordinator's
 //! lanes, the report harnesses and the CLI share a single 256 KiB build
@@ -33,7 +33,7 @@ pub fn build_lut(m: &dyn ApproxMultiplier) -> Vec<i32> {
         }
     }
     let mut prods = vec![0u64; N];
-    m.mul_batch(&mags, &acts, &mut prods);
+    m.mul_batch_simd(&mags, &acts, &mut prods);
     let mut lut = vec![0i32; N];
     for a in 0..256usize {
         for wi in 0..256usize {

@@ -1,0 +1,499 @@
+//! Persisted perf trajectory: the `scaletrim bench` micro-bench harness.
+//!
+//! Times the four kernel tiers of the multiplier plane — scalar `mul`,
+//! batched `mul_batch`, SIMD `mul_batch_simd` ([`crate::simd`]), and the
+//! table-compiled [`CompiledMul`] — per design family, plus one end-to-end
+//! workload row (blocked GEMM under scaleTRIM), and emits a
+//! schema-versioned JSON document (`BENCH_6.json` at the repo root) so the
+//! repo's throughput position on the accuracy-vs-throughput frontier is a
+//! *committed artifact with a trajectory*, not a claim in prose.
+//!
+//! ## Methodology
+//!
+//! Median-of-k: each kernel is warmed up for `warmup_passes` full passes
+//! over a fixed [`STREAM`]-element operand stream, then timed for `k`
+//! samples; each sample repeats whole passes until `min_pass_ms` of wall
+//! clock has elapsed (so one sample is never a single unamortised pass),
+//! and the reported number is the **median** sample's throughput in
+//! M elems/s. Medians are robust to the one-sided noise (preemption,
+//! frequency ramps) that plagues short micro-benches; k stays odd so the
+//! median is a real sample. Operand streams are fixed-seed
+//! ([`crate::util::rng::Xoshiro256`]) — every run times the same work.
+//!
+//! ## Regression gate
+//!
+//! [`compare`] diffs a fresh document against the last committed
+//! `BENCH_*.json` per `(config, bits, operands, kernel)` cell and fails on
+//! any throughput drop beyond [`DEFAULT_TOLERANCE`] (15%). CI runs it on
+//! one pinned runner class and records `host.simd_backend` so numbers are
+//! only ever compared within one ISA class; see EXPERIMENTS.md §Perf
+//! trajectory.
+
+use crate::calib::CalibStrategy;
+use crate::multipliers::{ApproxMultiplier, CompiledMul, Exact, ScaleTrim, Tosam};
+use crate::util::bench::black_box;
+use crate::util::json::Json;
+use crate::workloads::Workload;
+use std::time::Instant;
+
+/// Schema tag of the emitted document; bump on breaking layout changes so
+/// the comparator refuses cross-schema diffs instead of mis-reading them.
+pub const SCHEMA: &str = "scaletrim-bench/v1";
+
+/// Regression tolerance of the CI gate: a cell may lose at most this
+/// fraction of its committed throughput before `--check` fails.
+pub const DEFAULT_TOLERANCE: f64 = 0.15;
+
+/// Operand-stream length per pass: large enough to amortise dispatch and
+/// exercise the lane pipeline, small enough (3 × 128 KiB) to stay
+/// cache-resident so we time kernels, not DRAM.
+pub const STREAM: usize = 1 << 14;
+
+/// Timing method parameters (see module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct BenchMethod {
+    /// Untimed full passes before sampling.
+    pub warmup_passes: u32,
+    /// Timed samples; the median is reported. Keep odd.
+    pub k: u32,
+    /// Minimum wall-clock per sample, in ms (whole passes repeat until
+    /// exceeded).
+    pub min_pass_ms: u64,
+}
+
+impl BenchMethod {
+    /// The committed-baseline method: 3 warmup passes, median of 7
+    /// samples, ≥ 40 ms per sample.
+    pub fn standard() -> Self {
+        Self {
+            warmup_passes: 3,
+            k: 7,
+            min_pass_ms: 40,
+        }
+    }
+
+    /// Smoke-test method for CI tier-1 and local iteration (`--fast`):
+    /// same shape, drastically smaller budget. Numbers from this method
+    /// are NOT comparable to a standard-method baseline.
+    pub fn fast() -> Self {
+        Self {
+            warmup_passes: 1,
+            k: 3,
+            min_pass_ms: 2,
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        if self.min_pass_ms >= 40 {
+            "standard"
+        } else {
+            "fast"
+        }
+    }
+}
+
+/// True when `SCALETRIM_BENCH_FAST=1` — the same smoke-budget switch the
+/// `util::bench` harness honors. CI sets it globally (so incidental bench
+/// invocations stay cheap) and the `bench` gate job overrides it to `0`;
+/// callers OR it with their own `--fast` flag.
+pub fn env_fast() -> bool {
+    std::env::var("SCALETRIM_BENCH_FAST").ok().as_deref() == Some("1")
+}
+
+/// Median-of-k throughput of one kernel closure, in M elems/s. `pass`
+/// must process `elems` logical elements per call.
+fn time_kernel(method: &BenchMethod, elems: usize, mut pass: impl FnMut()) -> f64 {
+    for _ in 0..method.warmup_passes {
+        pass();
+    }
+    let min_pass = std::time::Duration::from_millis(method.min_pass_ms);
+    let mut samples: Vec<f64> = Vec::with_capacity(method.k as usize);
+    for _ in 0..method.k {
+        let t0 = Instant::now();
+        let mut passes = 0u64;
+        loop {
+            pass();
+            passes += 1;
+            if t0.elapsed() >= min_pass {
+                break;
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        samples.push((passes * elems as u64) as f64 / secs / 1e6);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// Throughput of the four kernel tiers for one design over one operand
+/// stream. `compiled` is `None` past [`CompiledMul::MAX_BITS`] — the
+/// table would exceed its 67 MiB ceiling, so the tier does not exist.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelRates {
+    /// Per-pair virtual `mul` calls.
+    pub scalar: f64,
+    /// Monomorphized `mul_batch`.
+    pub batched: f64,
+    /// SIMD lane kernel (`mul_batch_simd`; designs without a lane kernel
+    /// measure their `mul_batch` fallback here — the honest number for
+    /// what the SIMD entry point delivers).
+    pub simd: f64,
+    /// `CompiledMul` table gather, when tabulatable.
+    pub compiled: Option<f64>,
+}
+
+/// Operand-stream flavour of a bench row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Operands {
+    /// Uniform non-zero operands in `[1, 2^bits)`.
+    Uniform,
+    /// ~50% zero lanes (post-ReLU activation statistics): exercises the
+    /// zero-handling path — branchy in the scalar kernels, branchless
+    /// pre-masking in the lane kernels.
+    ZeroHeavy,
+}
+
+impl Operands {
+    fn label(&self) -> &'static str {
+        match self {
+            Operands::Uniform => "uniform",
+            Operands::ZeroHeavy => "zero-heavy",
+        }
+    }
+}
+
+/// Fixed-seed operand streams for one row.
+fn operand_streams(bits: u32, operands: Operands) -> (Vec<u64>, Vec<u64>) {
+    let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(0xBE_6C_0DE ^ bits as u64);
+    let mut gen = |_i: usize| -> u64 {
+        let v = rng.gen_operand(bits);
+        match operands {
+            Operands::Uniform => v,
+            // gen_range(2) is an unbiased coin: ~half the lanes zero.
+            Operands::ZeroHeavy => v * rng.gen_range(2),
+        }
+    };
+    let a: Vec<u64> = (0..STREAM).map(&mut gen).collect();
+    let b: Vec<u64> = (0..STREAM).map(&mut gen).collect();
+    (a, b)
+}
+
+/// Measure all four kernel tiers of one design over one stream flavour.
+pub fn measure_config(
+    m: &dyn ApproxMultiplier,
+    method: &BenchMethod,
+    operands: Operands,
+) -> KernelRates {
+    let (a, b) = operand_streams(m.bits(), operands);
+    let mut out = vec![0u64; STREAM];
+
+    let scalar = time_kernel(method, STREAM, || {
+        for ((&x, &y), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
+            *o = m.mul(x, y);
+        }
+        black_box(&out);
+    });
+    let batched = time_kernel(method, STREAM, || {
+        m.mul_batch(&a, &b, &mut out);
+        black_box(&out);
+    });
+    let simd = time_kernel(method, STREAM, || {
+        m.mul_batch_simd(&a, &b, &mut out);
+        black_box(&out);
+    });
+    let compiled = (m.bits() <= CompiledMul::MAX_BITS).then(|| {
+        let c = CompiledMul::compile(m);
+        time_kernel(method, STREAM, || {
+            c.mul_batch(&a, &b, &mut out);
+            black_box(&out);
+        })
+    });
+    KernelRates {
+        scalar,
+        batched,
+        simd,
+        compiled,
+    }
+}
+
+/// The committed bench targets: the acceptance families (exact, scaleTRIM,
+/// scaleTRIM-Q, TOSAM) at 8 and 16 bits, plus the zero-heavy scaleTRIM
+/// row. Paper-anchored parameter picks: scaleTRIM(3,4) is the Fig. 7
+/// worked example, scaleTRIM(5,8) the accuracy flagship, TOSAM(1,5) and
+/// TOSAM(3,7) the Table 4 anchors.
+fn targets() -> Vec<(Box<dyn ApproxMultiplier>, u32, Operands)> {
+    let stq = |bits: u32, h: u32, m: u32| -> Box<dyn ApproxMultiplier> {
+        Box::new(
+            ScaleTrim::with_strategy(bits, h, m, CalibStrategy::Quantile)
+                .expect("registry scaleTRIM-Q params are valid"),
+        )
+    };
+    vec![
+        (Box::new(Exact::new(8)), 8, Operands::Uniform),
+        (Box::new(Exact::new(16)), 16, Operands::Uniform),
+        (Box::new(ScaleTrim::new(8, 3, 4)), 8, Operands::Uniform),
+        (Box::new(ScaleTrim::new(8, 3, 4)), 8, Operands::ZeroHeavy),
+        (Box::new(ScaleTrim::new(16, 5, 8)), 16, Operands::Uniform),
+        (stq(8, 3, 4), 8, Operands::Uniform),
+        (stq(16, 5, 8), 16, Operands::Uniform),
+        (Box::new(Tosam::new(8, 1, 5)), 8, Operands::Uniform),
+        (Box::new(Tosam::new(16, 3, 7)), 16, Operands::Uniform),
+    ]
+}
+
+/// Run the full bench suite and build the schema-versioned document.
+/// `fast` swaps in [`BenchMethod::fast`] (numbers not baseline-comparable;
+/// the document records which method produced it).
+pub fn run_bench(fast: bool) -> Json {
+    let method = if fast {
+        BenchMethod::fast()
+    } else {
+        BenchMethod::standard()
+    };
+    let mut rows = Vec::new();
+    for (m, bits, operands) in targets() {
+        let rates = measure_config(m.as_ref(), &method, operands);
+        eprintln!(
+            "bench {:<20} {bits:>2}b {:<10} scalar {:>8.1}  batched {:>8.1}  simd {:>8.1}  compiled {}",
+            m.name(),
+            operands.label(),
+            rates.scalar,
+            rates.batched,
+            rates.simd,
+            rates
+                .compiled
+                .map(|c| format!("{c:>8.1}"))
+                .unwrap_or_else(|| "       —".into()),
+        );
+        rows.push(
+            Json::obj()
+                .set("config", m.name().as_str())
+                .set("bits", bits)
+                .set("operands", operands.label())
+                .set("scalar", round1(rates.scalar))
+                .set("batched", round1(rates.batched))
+                .set("simd", round1(rates.simd))
+                .set(
+                    "compiled",
+                    rates
+                        .compiled
+                        .map(|c| Json::from(round1(c)))
+                        .unwrap_or(Json::Null),
+                ),
+        );
+    }
+
+    // One end-to-end row: blocked GEMM under scaleTRIM(3,4) through the
+    // MAC plane — ties the kernel-tier numbers to a real workload.
+    let gemm = crate::workloads::Gemm::new();
+    let st = ScaleTrim::new(8, 3, 4);
+    let macs = gemm.run(&st).macs as usize;
+    let gemm_rate = time_kernel(&method, macs, || {
+        black_box(gemm.run(&st).macs);
+    });
+    eprintln!("bench gemm[scaleTRIM(3,4)]             {gemm_rate:>8.1} M MACs/s");
+
+    Json::obj()
+        .set("schema", SCHEMA)
+        .set(
+            "generated_by",
+            if fast {
+                "scaletrim bench --fast --out BENCH_6.json"
+            } else {
+                "scaletrim bench --out BENCH_6.json"
+            },
+        )
+        .set(
+            "host",
+            Json::obj()
+                .set("arch", std::env::consts::ARCH)
+                .set("os", std::env::consts::OS)
+                .set("lanes", crate::simd::LANES)
+                .set("simd_backend", crate::simd::backend()),
+        )
+        .set(
+            "method",
+            Json::obj()
+                .set("name", method.label())
+                .set("warmup_passes", method.warmup_passes)
+                .set("k", method.k)
+                .set("min_pass_ms", method.min_pass_ms)
+                .set("stream_elems", STREAM)
+                .set("statistic", "median-of-k")
+                .set("unit", "M elems/s"),
+        )
+        .set("rows", Json::Arr(rows))
+        .set(
+            "workloads",
+            Json::Arr(vec![Json::obj()
+                .set("name", "gemm")
+                .set("config", st.name().as_str())
+                .set("m_macs_per_s", round1(gemm_rate))]),
+        )
+}
+
+fn round1(x: f64) -> f64 {
+    (x * 10.0).round() / 10.0
+}
+
+fn row_key(row: &Json) -> Option<String> {
+    Some(format!(
+        "{}/{}b/{}",
+        row.get("config")?.as_str()?,
+        row.get("bits")?.as_f64()?,
+        row.get("operands")?.as_str()?,
+    ))
+}
+
+/// Diff a fresh bench document against a committed baseline: every
+/// `(config, bits, operands, kernel)` cell present in both must not have
+/// lost more than `tolerance` of its throughput. Returns the human-readable
+/// comparison lines; errors list every regressed cell (the CI gate prints
+/// and exits non-zero). Cells present in only one document are reported,
+/// not failed — the trajectory is allowed to grow. Schema mismatch is an
+/// error: cross-schema numbers are not comparable.
+pub fn compare(new: &Json, baseline: &Json, tolerance: f64) -> crate::Result<Vec<String>> {
+    let (ns, bs) = (
+        new.get("schema").and_then(Json::as_str),
+        baseline.get("schema").and_then(Json::as_str),
+    );
+    anyhow::ensure!(
+        ns == Some(SCHEMA) && bs == Some(SCHEMA),
+        "schema mismatch: new {ns:?} vs baseline {bs:?} (expected {SCHEMA})"
+    );
+    let empty: [Json; 0] = [];
+    let new_rows = new.get("rows").and_then(Json::as_arr).unwrap_or(&empty);
+    let base_rows = baseline.get("rows").and_then(Json::as_arr).unwrap_or(&empty);
+    let mut lines = Vec::new();
+    let mut regressions = Vec::new();
+    for nrow in new_rows {
+        let Some(key) = row_key(nrow) else { continue };
+        let Some(brow) = base_rows.iter().find(|r| row_key(r).as_deref() == Some(&key)) else {
+            lines.push(format!("{key}: new row (no baseline)"));
+            continue;
+        };
+        for kernel in ["scalar", "batched", "simd", "compiled"] {
+            let nv = nrow.get(kernel).and_then(Json::as_f64);
+            let bv = brow.get(kernel).and_then(Json::as_f64);
+            match (nv, bv) {
+                (Some(nv), Some(bv)) if bv > 0.0 => {
+                    let ratio = nv / bv;
+                    let line = format!(
+                        "{key}/{kernel}: {bv:.1} -> {nv:.1} M elems/s ({:+.1}%)",
+                        (ratio - 1.0) * 100.0
+                    );
+                    if ratio < 1.0 - tolerance {
+                        regressions.push(line.clone());
+                    }
+                    lines.push(line);
+                }
+                _ => lines.push(format!("{key}/{kernel}: not comparable")),
+            }
+        }
+    }
+    for brow in base_rows {
+        if let Some(key) = row_key(brow) {
+            if !new_rows.iter().any(|r| row_key(r).as_deref() == Some(&key)) {
+                lines.push(format!("{key}: baseline row missing from new run"));
+            }
+        }
+    }
+    anyhow::ensure!(
+        regressions.is_empty(),
+        "bench regression beyond {:.0}% tolerance:\n  {}",
+        tolerance * 100.0,
+        regressions.join("\n  ")
+    );
+    Ok(lines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(rows: Vec<Json>) -> Json {
+        Json::obj().set("schema", SCHEMA).set("rows", Json::Arr(rows))
+    }
+
+    fn row(config: &str, scalar: f64, simd: f64) -> Json {
+        Json::obj()
+            .set("config", config)
+            .set("bits", 8u32)
+            .set("operands", "uniform")
+            .set("scalar", scalar)
+            .set("batched", scalar)
+            .set("simd", simd)
+            .set("compiled", Json::Null)
+    }
+
+    #[test]
+    fn compare_passes_within_tolerance() {
+        let base = doc(vec![row("x", 100.0, 400.0)]);
+        let fresh = doc(vec![row("x", 90.0, 380.0)]);
+        let lines = compare(&fresh, &base, DEFAULT_TOLERANCE).unwrap();
+        assert!(lines.iter().any(|l| l.contains("x/8b/uniform/simd")));
+    }
+
+    #[test]
+    fn compare_fails_loudly_on_regression() {
+        let base = doc(vec![row("x", 100.0, 400.0)]);
+        let fresh = doc(vec![row("x", 100.0, 300.0)]); // -25% simd
+        let err = compare(&fresh, &base, DEFAULT_TOLERANCE).unwrap_err();
+        assert!(err.to_string().contains("simd"), "{err}");
+    }
+
+    #[test]
+    fn compare_tolerates_new_and_missing_rows() {
+        let base = doc(vec![row("old", 100.0, 400.0)]);
+        let fresh = doc(vec![row("new", 100.0, 400.0)]);
+        let lines = compare(&fresh, &base, DEFAULT_TOLERANCE).unwrap();
+        assert!(lines.iter().any(|l| l.contains("new row")));
+        assert!(lines.iter().any(|l| l.contains("missing")));
+    }
+
+    #[test]
+    fn compare_rejects_schema_mismatch() {
+        let base = Json::obj().set("schema", "other/v9");
+        let fresh = doc(vec![]);
+        assert!(compare(&fresh, &base, DEFAULT_TOLERANCE).is_err());
+    }
+
+    #[test]
+    fn zero_heavy_streams_are_half_zero() {
+        let (a, b) = operand_streams(8, Operands::ZeroHeavy);
+        let zeros = a.iter().chain(b.iter()).filter(|&&v| v == 0).count();
+        let frac = zeros as f64 / (2 * STREAM) as f64;
+        assert!((0.4..0.6).contains(&frac), "zero fraction {frac}");
+        let (u, _) = operand_streams(8, Operands::Uniform);
+        assert!(u.iter().all(|&v| v != 0));
+    }
+
+    #[test]
+    fn fast_bench_emits_schema_complete_document() {
+        // Smoke the whole harness with the fast method; verify the
+        // document round-trips through the parser with every cell the
+        // comparator needs, and that a run compares clean against itself.
+        let d = run_bench(true);
+        let parsed = Json::parse(&d.to_string()).unwrap();
+        assert_eq!(parsed.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        let rows = parsed.get("rows").and_then(Json::as_arr).unwrap();
+        assert!(rows.len() >= 9, "expected ≥9 rows, got {}", rows.len());
+        for required in [
+            "Exact8/8b/uniform",
+            "scaleTRIM(3,4)/8b/uniform",
+            "scaleTRIM(3,4)/8b/zero-heavy",
+        ] {
+            assert!(
+                rows.iter().any(|r| row_key(r).as_deref() == Some(required)),
+                "missing row {required}"
+            );
+        }
+        // 16-bit rows cannot have a compiled tier.
+        for r in rows {
+            if r.get("bits").and_then(Json::as_f64) == Some(16.0) {
+                assert_eq!(r.get("compiled"), Some(&Json::Null));
+            }
+        }
+        assert!(compare(&parsed, &parsed, DEFAULT_TOLERANCE).is_ok());
+    }
+}

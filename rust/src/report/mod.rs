@@ -23,7 +23,7 @@ use crate::Result;
 pub const EXPERIMENTS: &[&str] = &[
     "fig1", "fig5", "fig6", "fig7", "table4", "fig9", "fig10", "table5", "fig11-13", "table3",
     "fig14", "table2", "table7", "fig15", "fig16", "table6", "ablation", "ext32", "workloads",
-    "headline", "calib",
+    "headline", "calib", "bench",
 ];
 
 /// Run one experiment by id. `fast` trims sample counts (CI smoke).
@@ -50,6 +50,14 @@ pub fn run_experiment(id: &str, fast: bool) -> Result<()> {
         "workloads" => workload_suite(fast),
         "headline" => headline(),
         "calib" => calib_strategies(fast),
+        "bench" => {
+            // The perf trajectory (EXPERIMENTS.md §Perf trajectory): print
+            // the document; `scaletrim bench --out ... --check ...` is the
+            // persisting/gating form the CI bench job runs.
+            let doc = crate::perf::run_bench(fast || crate::perf::env_fast());
+            println!("{}", doc.to_string());
+            Ok(())
+        }
         "all" => {
             for e in [
                 "fig1", "fig5", "fig6", "fig7", "table4", "fig10", "table5", "table3", "table2",

@@ -1,0 +1,284 @@
+//! Explicit SIMD kernel plane: structure-of-arrays operand batches,
+//! lane-blocked drivers, and the shared lane primitives (batched
+//! leading-one detection, branchless zero pre-masking) that the
+//! monomorphized [`mul_batch_simd`] kernels are built from.
+//!
+//! ## Why a stable 8-wide unrolled kernel and not `std::simd`
+//!
+//! The issue allowed either portable `std::simd` behind a nightly feature
+//! gate or a stable fixed-width unrolled kernel. We pick the **stable
+//! 8-wide unrolled lane kernel**, deliberately:
+//!
+//! 1. The tier-1 gate (and every CI job) builds on *stable* — a
+//!    nightly-gated `std::simd` path would be dead code in every gate we
+//!    actually run, which is exactly how SIMD kernels rot.
+//! 2. A fixed `[u64; LANES]` block evaluated in straight-line, branch-free
+//!    code is the shape LLVM's SLP/loop vectorizer reliably lowers to
+//!    vector ISA (`vpmuludq`/`vpsllvq`/`vplzcntq` where the target has
+//!    them) without any `unsafe` and without per-arch intrinsics.
+//! 3. The algorithmic wins are lane-shape independent: hoisted constants,
+//!    batched LOD over a lane block, and *branchless* zero handling (the
+//!    scalar kernels branch per pair on `x == 0 || y == 0`, which is
+//!    poorly predicted exactly where throughput matters — post-ReLU NN
+//!    activation streams are zero-heavy).
+//!
+//! The actually-compiled lane backend is reported by [`backend`] and
+//! recorded in every `BENCH_*.json` so trajectory numbers are only ever
+//! compared within one ISA class.
+//!
+//! ## Correctness contract
+//!
+//! Every lane kernel must be observably identical to the scalar `mul` —
+//! bit for bit, including the sub-lane tail (the classic SIMD bug lives
+//! off the lane-width boundary, so [`drive_lanes`] centralises tail
+//! handling in one place and `tests/prop_multipliers.rs` property-tests
+//! SIMD == scalar over every enumerable 8- and 16-bit spec at odd batch
+//! lengths).
+//!
+//! [`mul_batch_simd`]: crate::multipliers::ApproxMultiplier::mul_batch_simd
+
+/// Lane width of the unrolled kernels: 8 × u64 = one 512-bit block (two
+/// 256-bit ops on AVX2, one on AVX-512, four 128-bit ops on NEON/SSE2).
+pub const LANES: usize = 8;
+
+/// One operand/result block in structure-of-arrays layout.
+pub type Lane = [u64; LANES];
+
+/// Structure-of-arrays operand batch: `a[i] · b[i] → out[i]` with each
+/// stream contiguous, so lane kernels load operand blocks with unit-stride
+/// reads instead of gathering from an array-of-pairs layout. This is the
+/// batch container the MAC plane ([`crate::workloads::MacPlane`]) and the
+/// bench harness accumulate into.
+#[derive(Debug, Default)]
+pub struct SoaBatch {
+    /// First operands, contiguous.
+    pub a: Vec<u64>,
+    /// Second operands, contiguous.
+    pub b: Vec<u64>,
+    /// Products, resized to match on [`SoaBatch::run`].
+    pub out: Vec<u64>,
+}
+
+impl SoaBatch {
+    /// New batch with reserved capacity on all three streams.
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            a: Vec::with_capacity(n),
+            b: Vec::with_capacity(n),
+            out: vec![0; n],
+        }
+    }
+
+    /// Queued pair count.
+    pub fn len(&self) -> usize {
+        self.a.len()
+    }
+
+    /// True when no pairs are queued.
+    pub fn is_empty(&self) -> bool {
+        self.a.is_empty()
+    }
+
+    /// Queue one operand pair.
+    #[inline]
+    pub fn push(&mut self, a: u64, b: u64) {
+        self.a.push(a);
+        self.b.push(b);
+    }
+
+    /// Drop all queued pairs (results in `out` become stale).
+    pub fn clear(&mut self) {
+        self.a.clear();
+        self.b.clear();
+    }
+
+    /// Run the multiplier's SIMD kernel over the queued pairs;
+    /// `out[..len()]` holds the products afterwards.
+    pub fn run(&mut self, m: &dyn crate::multipliers::ApproxMultiplier) {
+        let len = self.a.len();
+        if self.out.len() < len {
+            self.out.resize(len, 0);
+        }
+        m.mul_batch_simd(&self.a, &self.b, &mut self.out[..len]);
+    }
+}
+
+/// Drive a lane kernel over an SoA operand stream: full [`LANES`]-wide
+/// blocks go through `kernel`, the sub-lane tail through `tail` (normally
+/// the design's scalar-loop `mul_batch`). Tail handling lives here, once,
+/// for every design — off-lane-width batches are the classic SIMD bug and
+/// are property-tested at odd lengths.
+///
+/// Panics when the three slices differ in length (same contract as
+/// `mul_batch`).
+#[inline]
+pub fn drive_lanes(
+    a: &[u64],
+    b: &[u64],
+    out: &mut [u64],
+    mut kernel: impl FnMut(&Lane, &Lane) -> Lane,
+    mut tail: impl FnMut(&[u64], &[u64], &mut [u64]),
+) {
+    assert_eq!(a.len(), b.len(), "mul_batch_simd: operand slices differ");
+    assert_eq!(a.len(), out.len(), "mul_batch_simd: output slice differs");
+    let main = a.len() - a.len() % LANES;
+    let (a_main, a_tail) = a.split_at(main);
+    let (b_main, b_tail) = b.split_at(main);
+    let (out_main, out_tail) = out.split_at_mut(main);
+    for ((ca, cb), co) in a_main
+        .chunks_exact(LANES)
+        .zip(b_main.chunks_exact(LANES))
+        .zip(out_main.chunks_exact_mut(LANES))
+    {
+        let xa: &Lane = ca.try_into().expect("chunk is LANES wide");
+        let xb: &Lane = cb.try_into().expect("chunk is LANES wide");
+        co.copy_from_slice(&kernel(xa, xb));
+    }
+    if !a_tail.is_empty() {
+        tail(a_tail, b_tail, out_tail);
+    }
+}
+
+/// Batched leading-one detection: `⌊log2 v⌋` per lane via
+/// `u64::leading_zeros` (one `lzcnt`/`clz` per lane; `vplzcntq` where the
+/// target vectorises it). Lanes must be non-zero — run
+/// [`mask_zero_to_one`] first; zero lanes are the caller's pre-masked
+/// bypass, exactly like the hardware's parallel zero-detect (Fig. 8a).
+#[inline(always)]
+pub fn leading_one_lanes(v: &Lane) -> [u32; LANES] {
+    let mut n = [0u32; LANES];
+    for (n_i, v_i) in n.iter_mut().zip(v.iter()) {
+        debug_assert!(*v_i != 0, "leading_one_lanes: zero lane not pre-masked");
+        *n_i = 63 - v_i.leading_zeros();
+    }
+    n
+}
+
+/// Branchless zero pre-mask, part 1: `1` where **both** lanes are
+/// non-zero, else `0`. Multiply the lane result by this flag instead of
+/// branching per pair — the zero branch is unpredictable exactly on the
+/// streams where throughput matters (post-ReLU activations).
+#[inline(always)]
+pub fn nonzero_flags(x: &Lane, y: &Lane) -> Lane {
+    let mut f = [0u64; LANES];
+    for ((f_i, x_i), y_i) in f.iter_mut().zip(x.iter()).zip(y.iter()) {
+        *f_i = ((*x_i != 0) & (*y_i != 0)) as u64;
+    }
+    f
+}
+
+/// Branchless zero pre-mask, part 2: rewrite zero lanes to operand `1`
+/// (leading-one 0, empty fraction) so the LOD/truncation lanes stay
+/// branch-free and defined; the final result lane is multiplied by
+/// [`nonzero_flags`], which zeroes whatever the placeholder computed.
+#[inline(always)]
+pub fn mask_zero_to_one(x: &Lane) -> Lane {
+    let mut m = [0u64; LANES];
+    for (m_i, x_i) in m.iter_mut().zip(x.iter()) {
+        *m_i = *x_i + (*x_i == 0) as u64;
+    }
+    m
+}
+
+/// Compile-time lane-backend label, recorded in `BENCH_*.json` so
+/// trajectory numbers are only compared within one ISA class.
+pub fn backend() -> &'static str {
+    if cfg!(target_feature = "avx512f") {
+        "unrolled8/avx512"
+    } else if cfg!(target_feature = "avx2") {
+        "unrolled8/avx2"
+    } else if cfg!(all(target_arch = "x86_64", target_feature = "sse2")) {
+        "unrolled8/sse2"
+    } else if cfg!(target_arch = "aarch64") {
+        "unrolled8/neon"
+    } else {
+        "unrolled8/portable"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::Exact;
+
+    #[test]
+    fn leading_one_lanes_matches_scalar() {
+        let v: Lane = [1, 2, 3, 128, 255, 48, 81, u64::MAX];
+        let n = leading_one_lanes(&v);
+        for (n_i, v_i) in n.iter().zip(v.iter()) {
+            assert_eq!(*n_i, crate::multipliers::leading_one(*v_i));
+        }
+    }
+
+    #[test]
+    fn zero_masks_compose_to_the_scalar_bypass() {
+        let x: Lane = [0, 5, 0, 7, 1, 0, 255, 3];
+        let y: Lane = [4, 0, 0, 2, 1, 9, 255, 3];
+        let keep = nonzero_flags(&x, &y);
+        assert_eq!(keep, [0, 0, 0, 1, 1, 0, 1, 1]);
+        let xm = mask_zero_to_one(&x);
+        assert_eq!(xm, [1, 5, 1, 7, 1, 1, 255, 3]);
+        // Placeholder lanes are well-formed operands (LOD defined).
+        let _ = leading_one_lanes(&xm);
+    }
+
+    #[test]
+    fn drive_lanes_covers_every_tail_length() {
+        // The tail path must fire for every residue class mod LANES.
+        for len in 0..(3 * LANES + 1) {
+            let a: Vec<u64> = (0..len as u64).map(|i| i + 1).collect();
+            let b: Vec<u64> = (0..len as u64).map(|i| 2 * i + 1).collect();
+            let mut out = vec![0u64; len];
+            drive_lanes(
+                &a,
+                &b,
+                &mut out,
+                |xa, xb| {
+                    let mut r = [0u64; LANES];
+                    for ((r_i, x), y) in r.iter_mut().zip(xa.iter()).zip(xb.iter()) {
+                        *r_i = x * y;
+                    }
+                    r
+                },
+                |ta, tb, tout| {
+                    for ((&x, &y), o) in ta.iter().zip(tb.iter()).zip(tout.iter_mut()) {
+                        *o = x * y;
+                    }
+                },
+            );
+            for i in 0..len {
+                assert_eq!(out[i], a[i] * b[i], "len={len} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "mul_batch_simd")]
+    fn drive_lanes_rejects_length_mismatch() {
+        let mut out = vec![0u64; 2];
+        drive_lanes(
+            &[1, 2, 3],
+            &[1, 2, 3],
+            &mut out,
+            |_, _| [0; LANES],
+            |_, _, _| {},
+        );
+    }
+
+    #[test]
+    fn soa_batch_runs_the_simd_plane() {
+        let m = Exact::new(8);
+        let mut batch = SoaBatch::with_capacity(4);
+        assert!(batch.is_empty());
+        for i in 0..20u64 {
+            batch.push(i, i + 1);
+        }
+        assert_eq!(batch.len(), 20);
+        batch.run(&m);
+        for i in 0..20u64 {
+            assert_eq!(batch.out[i as usize], i * (i + 1));
+        }
+        batch.clear();
+        assert!(batch.is_empty());
+    }
+}

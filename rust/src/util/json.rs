@@ -65,6 +65,41 @@ impl Json {
         Ok(v)
     }
 
+    /// Field lookup on an object (first match, the only one the writer
+    /// emits); `None` on non-objects and missing keys. The read-side
+    /// counterpart of [`Json::set`] — the bench comparator walks parsed
+    /// `BENCH_*.json` baselines with it.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric value of a `Num`, else `None`.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// String value of a `Str`, else `None`.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Items of an `Arr`, else `None`.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),

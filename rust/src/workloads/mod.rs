@@ -8,9 +8,10 @@
 //! ## The MAC plane
 //!
 //! Every workload inner loop goes through [`MacPlane`], which streams
-//! sign-magnitude operand pairs into
-//! [`ApproxMultiplier::mul_batch`][crate::multipliers::ApproxMultiplier::mul_batch]
-//! in [`BATCH`]-sized chunks — the PR-1 batched kernel plane. No workload
+//! sign-magnitude operand pairs in structure-of-arrays layout into
+//! [`ApproxMultiplier::mul_batch_simd`][crate::multipliers::ApproxMultiplier::mul_batch_simd]
+//! in [`BATCH`]-sized chunks — the explicit SIMD kernel plane, falling
+//! back to `mul_batch` for designs without a lane kernel. No workload
 //! ever calls scalar `mul` per pair (pinned by
 //! `tests/integration_workloads.rs`, which runs the whole registry under a
 //! mock whose scalar path panics). Operand magnitudes saturate at the
@@ -96,16 +97,16 @@ pub fn exact_mac(x: i64, w: i64, bits: u32) -> i64 {
 }
 
 /// Batched signed multiply-accumulate engine: collects sign-magnitude
-/// operand pairs with their accumulator targets and flushes them through
-/// `mul_batch` in [`BATCH`]-sized chunks. This is the only way workloads
-/// touch a multiplier — dynamic dispatch is paid once per chunk, and the
-/// monomorphized kernel overrides (PR 1) do the per-pair work.
+/// operand pairs (structure-of-arrays, [`crate::simd::SoaBatch`]) with
+/// their accumulator targets and flushes them through the SIMD kernel
+/// plane (`mul_batch_simd`, falling back to `mul_batch` for designs
+/// without a lane kernel) in [`BATCH`]-sized chunks. This is the only way
+/// workloads touch a multiplier — dynamic dispatch is paid once per
+/// chunk, and the monomorphized kernel overrides do the per-pair work.
 pub struct MacPlane<'m> {
     m: &'m dyn ApproxMultiplier,
     bits: u32,
-    a: Vec<u64>,
-    b: Vec<u64>,
-    out: Vec<u64>,
+    batch: crate::simd::SoaBatch,
     sgn: Vec<i64>,
     tgt: Vec<usize>,
     acc: Vec<i64>,
@@ -118,9 +119,7 @@ impl<'m> MacPlane<'m> {
         Self {
             bits: m.bits(),
             m,
-            a: Vec::with_capacity(BATCH),
-            b: Vec::with_capacity(BATCH),
-            out: vec![0; BATCH],
+            batch: crate::simd::SoaBatch::with_capacity(BATCH),
             sgn: Vec::with_capacity(BATCH),
             tgt: Vec::with_capacity(BATCH),
             acc: vec![0; outputs],
@@ -132,27 +131,31 @@ impl<'m> MacPlane<'m> {
     #[inline]
     pub fn mac(&mut self, target: usize, x: i64, w: i64) {
         debug_assert!(target < self.acc.len(), "mac target out of range");
-        self.a.push(sat_operand(x, self.bits));
-        self.b.push(sat_operand(w, self.bits));
+        self.batch
+            .push(sat_operand(x, self.bits), sat_operand(w, self.bits));
         self.sgn.push(if (x < 0) ^ (w < 0) { -1 } else { 1 });
         self.tgt.push(target);
-        if self.a.len() == BATCH {
+        if self.batch.len() == BATCH {
             self.flush();
         }
     }
 
     fn flush(&mut self) {
-        let len = self.a.len();
+        let len = self.batch.len();
         if len == 0 {
             return;
         }
-        self.m.mul_batch(&self.a, &self.b, &mut self.out[..len]);
-        for i in 0..len {
-            self.acc[self.tgt[i]] += self.sgn[i] * self.out[i] as i64;
+        self.batch.run(self.m);
+        for ((&tgt, &sgn), &p) in self
+            .tgt
+            .iter()
+            .zip(self.sgn.iter())
+            .zip(self.batch.out[..len].iter())
+        {
+            self.acc[tgt] += sgn * p as i64;
         }
         self.macs += len as u64;
-        self.a.clear();
-        self.b.clear();
+        self.batch.clear();
         self.sgn.clear();
         self.tgt.clear();
     }

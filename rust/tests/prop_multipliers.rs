@@ -126,6 +126,177 @@ fn prop_mul_batch_matches_scalar() {
     });
 }
 
+/// Build the full enumerable zoo at a width via the typed identity plane
+/// — every `DesignSpec::enumerate(bits)` spec, not just the paper-table
+/// subset, so the SIMD==scalar contract is checked for designs that only
+/// have the trait-default (`mul_batch_simd` → `mul_batch`) too.
+fn enumerated_zoo(bits: u32) -> Vec<Box<dyn ApproxMultiplier>> {
+    DesignSpec::enumerate(bits)
+        .expect("enumerable width")
+        .iter()
+        .map(|s| s.build(bits).expect("enumerated specs build"))
+        .collect()
+}
+
+/// Deterministic guarantee behind the random properties below: every
+/// enumerable spec at `bits` sees one odd-length batch (crossing the lane
+/// width, tail of 3) with a zero-dense operand stream, and `mul_batch_simd`
+/// must equal per-element `mul` bit for bit.
+fn assert_simd_matches_scalar_all_specs(bits: u32) {
+    use ::scaletrim::util::rng::Xoshiro256;
+    let len = 4 * scaletrim::simd::LANES + 3;
+    for m in enumerated_zoo(bits) {
+        let mut rng = Xoshiro256::seed_from_u64(0x51D0 + u64::from(bits));
+        // gen_operand never returns 0; the coin flip restores a ~50%
+        // zero-dense stream so the pre-masking path is always exercised.
+        let a: Vec<u64> = (0..len).map(|_| rng.gen_operand(bits) * rng.gen_range(2)).collect();
+        let b: Vec<u64> = (0..len).map(|_| rng.gen_operand(bits) * rng.gen_range(2)).collect();
+        let mut out = vec![0u64; len];
+        m.mul_batch_simd(&a, &b, &mut out);
+        for i in 0..len {
+            assert_eq!(
+                out[i],
+                m.mul(a[i], b[i]),
+                "{}: simd[{i}] diverges at {}*{}",
+                m.name(),
+                a[i],
+                b[i]
+            );
+        }
+    }
+}
+
+/// The SIMD kernel plane can never drift from the scalar reference:
+/// for every enumerable 8-bit spec, `mul_batch_simd` over random batches
+/// equals per-element `mul` bit for bit. Lengths are drawn to cross the
+/// lane width at every residue (tail handling off the lane width is the
+/// classic SIMD bug), and operands are zero-dense with probability ~1/3
+/// so the branchless zero pre-masking is exercised, not just the happy
+/// path.
+#[test]
+fn prop_mul_batch_simd_matches_scalar_8bit() {
+    assert_simd_matches_scalar_all_specs(8);
+    let zoo = enumerated_zoo(8);
+    let mut r = Runner::new("mul-batch-simd-matches-scalar-8", 600);
+    r.run(|g| {
+        let m = g.choose(&zoo);
+        // 0..=4*LANES+3 covers empty, sub-lane, exact-lane and tailed
+        // lengths for LANES = 8.
+        let len = g.usize_in(0, 4 * scaletrim::simd::LANES + 3);
+        let zero_dense = g.bool();
+        let a: Vec<u64> = (0..len)
+            .map(|_| {
+                let v = g.u64_in(0, 255);
+                if zero_dense && g.u32_in(0, 2) == 0 {
+                    0
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let b: Vec<u64> = (0..len)
+            .map(|_| {
+                let v = g.u64_in(0, 255);
+                if zero_dense && g.u32_in(0, 2) == 0 {
+                    0
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let mut out = vec![0u64; len];
+        m.mul_batch_simd(&a, &b, &mut out);
+        for i in 0..len {
+            let scalar = m.mul(a[i], b[i]);
+            if out[i] != scalar {
+                return Err(format!(
+                    "{}: simd[{i}] (len {len}) = {} but mul({}, {}) = {scalar}",
+                    m.name(),
+                    out[i],
+                    a[i],
+                    b[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Same contract at 16 bits — the width where scaleTRIM(5,8) and
+/// TOSAM(3,7) actually run and where the truncation paths take the
+/// `n >= h` branch far more often.
+#[test]
+fn prop_mul_batch_simd_matches_scalar_16bit() {
+    assert_simd_matches_scalar_all_specs(16);
+    let zoo = enumerated_zoo(16);
+    let mut r = Runner::new("mul-batch-simd-matches-scalar-16", 400);
+    r.run(|g| {
+        let m = g.choose(&zoo);
+        let len = g.usize_in(0, 4 * scaletrim::simd::LANES + 3);
+        let zero_dense = g.bool();
+        let a: Vec<u64> = (0..len)
+            .map(|_| {
+                let v = g.u64_in(0, 65_535);
+                if zero_dense && g.u32_in(0, 2) == 0 {
+                    0
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let b: Vec<u64> = (0..len)
+            .map(|_| {
+                let v = g.u64_in(0, 65_535);
+                if zero_dense && g.u32_in(0, 2) == 0 {
+                    0
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let mut out = vec![0u64; len];
+        m.mul_batch_simd(&a, &b, &mut out);
+        for i in 0..len {
+            let scalar = m.mul(a[i], b[i]);
+            if out[i] != scalar {
+                return Err(format!(
+                    "{}: simd[{i}] (len {len}) = {} but mul({}, {}) = {scalar}",
+                    m.name(),
+                    out[i],
+                    a[i],
+                    b[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Exhaustive lane coverage for the hand-written kernels at the widths
+/// the lane bodies specialise: every full-lane block of the sequential
+/// operand space for the designs with real SIMD overrides. Complements
+/// the random property above with deterministic coverage of the
+/// scaleTRIM segment boundaries and the Mitchell `X + Y ≥ 1` carry case.
+#[test]
+fn simd_kernels_exhaustive_lane_blocks() {
+    let kernels: Vec<Box<dyn ApproxMultiplier>> = vec![
+        Box::new(Exact::new(8)),
+        Box::new(Mitchell::new(8)),
+        Box::new(ScaleTrim::new(8, 3, 4)),
+        Box::new(ScaleTrim::new(8, 5, 8)),
+        Box::new(Tosam::new(8, 1, 5)),
+    ];
+    let a: Vec<u64> = (0..256u64).flat_map(|x| std::iter::repeat_n(x, 256)).collect();
+    let b: Vec<u64> = (0..256).flat_map(|_| 0..256u64).collect();
+    let mut out = vec![0u64; a.len()];
+    for m in &kernels {
+        m.mul_batch_simd(&a, &b, &mut out);
+        for ((&x, &y), &p) in a.iter().zip(b.iter()).zip(out.iter()) {
+            assert_eq!(p, m.mul(x, y), "{}: {x}*{y}", m.name());
+        }
+    }
+}
+
 /// Same drift guard for the compiled table kernel, which additionally
 /// narrows storage to u32: compiled scalar and batch must equal the
 /// source design everywhere it was tabulated.
