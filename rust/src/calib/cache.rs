@@ -122,6 +122,9 @@ pub struct CacheStats {
     pub hits: u64,
     /// Acquisitions that computed the entry.
     pub misses: u64,
+    /// Calibration closures actually entered (≥ misses: a panicking init
+    /// leaves its slot empty, so the next acquisition attempts again).
+    pub init_attempts: u64,
     /// Entries seeded from the on-disk artifact store.
     pub warm_loaded: u64,
     /// Payload bytes resident across all entries.
@@ -131,6 +134,12 @@ pub struct CacheStats {
 }
 
 impl CacheStats {
+    /// Calibration retries after a panicking init (the poison-safety
+    /// contract in action: attempts beyond the one that completed).
+    pub fn retries(&self) -> u64 {
+        self.init_attempts.saturating_sub(self.misses)
+    }
+
     /// Fractional storage saving versus per-acquisition dedicated copies
     /// (the §V shared-LUT benefit).
     pub fn saving(&self) -> f64 {
@@ -164,6 +173,7 @@ pub struct CalibCache {
     slots: Mutex<SlotMap>,
     hits: AtomicU64,
     misses: AtomicU64,
+    init_attempts: AtomicU64,
     warm_loaded: AtomicU64,
     /// Σ resident_bytes over acquisitions — what dedicated copies would
     /// have cost (the denominator of the sharing saving).
@@ -201,6 +211,10 @@ impl CalibCache {
         }
         let mut computed = false;
         let v = slot.get_or_init(|| {
+            // Counted before `init` runs: a panicking calibration still
+            // registers as an attempt, so `attempts - misses` exposes the
+            // retry count the poison-safety contract promises.
+            self.init_attempts.fetch_add(1, Ordering::Relaxed);
             computed = true;
             init()
         });
@@ -336,6 +350,7 @@ impl CalibCache {
             entries,
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            init_attempts: self.init_attempts.load(Ordering::Relaxed),
             warm_loaded: self.warm_loaded.load(Ordering::Relaxed),
             resident_bytes: resident,
             dedicated_bytes: self.dedicated_bytes.load(Ordering::Relaxed) as usize,
@@ -397,6 +412,10 @@ mod tests {
         // Other keys of the same width: untouched.
         let other = c.scaletrim_params(8, 4, 4, CalibStrategy::Exhaustive);
         assert_eq!(other.h, 4);
+        // The failed attempt is visible as a retry in the counters: two
+        // init closures entered for `k`, one miss completed.
+        let s = c.stats();
+        assert_eq!(s.retries(), 1, "attempts={} misses={}", s.init_attempts, s.misses);
     }
 
     #[test]

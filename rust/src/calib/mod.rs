@@ -84,6 +84,22 @@ fn load_default_store(c: &CalibCache) -> usize {
     }
 }
 
+/// Publish the process-wide cache's counters as gauges on the
+/// [`crate::obs`] registry (pull-style bridge: the cache keeps its own
+/// atomics on the hot path; call this before snapshotting — `scaletrim
+/// obs`, `--metrics-out` and `repro --exp obs` do).
+pub fn publish_obs() {
+    let s = cache().stats();
+    let r = crate::obs::registry();
+    r.gauge("calib_cache_entries", &[]).set(s.entries as i64);
+    r.gauge("calib_cache_hits", &[]).set(s.hits as i64);
+    r.gauge("calib_cache_misses", &[]).set(s.misses as i64);
+    r.gauge("calib_cache_warm_loaded", &[]).set(s.warm_loaded as i64);
+    r.gauge("calib_cache_init_retries", &[]).set(s.retries() as i64);
+    r.gauge("calib_cache_resident_bytes", &[]).set(s.resident_bytes as i64);
+    r.gauge("calib_cache_dedicated_bytes", &[]).set(s.dedicated_bytes as i64);
+}
+
 /// Explicit warm start: make sure the process-wide cache is initialized
 /// (which, under the `SCALETRIM_ARTIFACTS` opt-in, loads the artifact
 /// bundle) and report how many entries came from disk. Strictly

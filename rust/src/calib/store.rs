@@ -101,6 +101,9 @@ impl CalibStore {
             .with_context(|| format!("writing calib artifacts to {}", tmp.display()))?;
         std::fs::rename(&tmp, &path)
             .with_context(|| format!("publishing calib artifacts at {}", path.display()))?;
+        crate::obs::registry()
+            .counter("calib_store_exports_total", &[])
+            .inc();
         Ok(path)
     }
 
@@ -109,9 +112,21 @@ impl CalibStore {
     /// [`CalibStore::load_if_present`] for the warm-start path.
     pub fn load(&self) -> Result<Vec<StoreEntry>> {
         let path = self.path();
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading calib artifacts from {}", path.display()))?;
-        parse_document(&text).with_context(|| format!("calib artifact file {}", path.display()))
+        let obs = crate::obs::registry();
+        let loaded = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading calib artifacts from {}", path.display()))
+            .and_then(|text| {
+                parse_document(&text)
+                    .with_context(|| format!("calib artifact file {}", path.display()))
+            });
+        match &loaded {
+            Ok(_) => obs.counter("calib_store_loads_total", &[]).inc(),
+            Err(_) => {
+                obs.counter("calib_store_verify_failures_total", &[]).inc();
+                crate::obs::record_error("calib.store.verify");
+            }
+        }
+        loaded
     }
 
     /// [`CalibStore::load`], returning `Ok(None)` when the bundle file does

@@ -1,95 +1,204 @@
-//! Serving metrics: counters plus a fixed-bucket latency histogram
-//! (lock-free on the hot path — the batcher increments atomics only).
+//! Serving metrics: a registry-backed view over the [`crate::obs`] plane.
+//!
+//! Each coordinator owns an obs registry *shard* ([`crate::obs::new_shard`])
+//! so its counts stay exact and separable (concurrent coordinators — e.g.
+//! parallel tests — never bleed into each other) while
+//! [`crate::obs::snapshot_all`] still merges every live coordinator into
+//! the process-wide view. The hot path is unchanged from the old
+//! hand-rolled struct: relaxed atomic increments per request, one sketch
+//! batch-push per executed batch. The old fixed-bucket latency histogram
+//! is gone — latency lives in a [`crate::util::stats::LogQuantileSketch`]
+//! (the error plane's mergeable quantile machinery), in seconds, so
+//! `Duration::MAX` lands in the sketch's final octave instead of
+//! truncating or panicking a bucket scan.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::obs::{self, Counter, Gauge, Histogram, Registry};
+use std::sync::Arc;
 use std::time::Duration;
 
-/// Log-spaced latency buckets (µs upper bounds).
-const BUCKETS_US: [u64; 12] = [
-    50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, u64::MAX,
-];
+/// Per-lane instruments handed to a lane worker: live queue depth and the
+/// lane-labelled end-to-end latency sketch.
+#[derive(Clone)]
+pub struct LaneMetrics {
+    /// `coordinator_queue_depth{lane=...}` — requests admitted but not yet
+    /// answered by this lane.
+    pub depth: Arc<Gauge>,
+    /// `coordinator_latency_seconds{lane=...}` — end-to-end latency of
+    /// requests answered by this lane.
+    pub latency: Arc<Histogram>,
+}
 
-/// Coordinator-wide metrics.
-#[derive(Debug, Default)]
+/// Coordinator-wide metrics, backed by a per-coordinator registry shard.
 pub struct Metrics {
-    /// Requests accepted.
-    pub requests: AtomicU64,
-    /// Responses delivered.
-    pub responses: AtomicU64,
-    /// Batches executed.
-    pub batches: AtomicU64,
-    /// Sum of batch occupancies (requests per batch).
-    pub occupancy_sum: AtomicU64,
-    /// Backend errors observed.
-    pub backend_errors: AtomicU64,
-    latency: [AtomicU64; 12],
-    latency_sum_us: AtomicU64,
+    registry: Arc<Registry>,
+    requests: Arc<Counter>,
+    responses_ok: Arc<Counter>,
+    responses_error: Arc<Counter>,
+    batches: Arc<Counter>,
+    occupancy_sum: Arc<Counter>,
+    backend_errors: Arc<Counter>,
+    parse_errors: Arc<Counter>,
+    latency: Arc<Histogram>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Metrics {
-    /// Fresh metrics.
+    /// Fresh metrics on a fresh registry shard (attached to the
+    /// process-wide snapshot for as long as this `Metrics` lives).
     pub fn new() -> Self {
-        Self::default()
+        let registry = obs::new_shard();
+        Self {
+            requests: registry.counter("coordinator_requests_total", &[]),
+            responses_ok: registry.counter("coordinator_responses_ok_total", &[]),
+            responses_error: registry.counter("coordinator_responses_error_total", &[]),
+            batches: registry.counter("coordinator_batches_total", &[]),
+            occupancy_sum: registry.counter("coordinator_batch_occupancy_total", &[]),
+            backend_errors: registry.counter("coordinator_backend_errors_total", &[]),
+            parse_errors: registry.counter("coordinator_parse_errors_total", &[]),
+            latency: registry.histogram("coordinator_latency_seconds", &[]),
+            registry,
+        }
     }
 
-    /// Record one request's end-to-end latency.
+    /// The underlying registry shard (for snapshots/exposition of this
+    /// coordinator alone; the process-wide view is
+    /// [`crate::obs::snapshot_all`]).
+    pub fn registry(&self) -> Arc<Registry> {
+        self.registry.clone()
+    }
+
+    /// Instruments for one lane, labelled by its display name.
+    pub fn lane_instruments(&self, lane: &str) -> LaneMetrics {
+        LaneMetrics {
+            depth: self.registry.gauge("coordinator_queue_depth", &[("lane", lane)]),
+            latency: self
+                .registry
+                .histogram("coordinator_latency_seconds", &[("lane", lane)]),
+        }
+    }
+
+    /// Count one admitted request.
+    pub fn inc_requests(&self) {
+        self.requests.inc();
+    }
+
+    /// Count one successfully answered request.
+    pub fn inc_response_ok(&self) {
+        self.responses_ok.inc();
+    }
+
+    /// Count one request answered with a backend error.
+    pub fn inc_response_error(&self) {
+        self.responses_error.inc();
+    }
+
+    /// Count one executed batch of the given occupancy.
+    pub fn inc_batch(&self, occupancy: usize) {
+        self.batches.inc();
+        self.occupancy_sum.add(occupancy as u64);
+    }
+
+    /// Count one backend failure (a whole batch erroring).
+    pub fn inc_backend_error(&self) {
+        self.backend_errors.inc();
+    }
+
+    /// Count one unparseable config label hitting the string submit shim.
+    pub fn inc_parse_error(&self) {
+        self.parse_errors.inc();
+    }
+
+    /// Requests accepted.
+    pub fn requests(&self) -> u64 {
+        self.requests.get()
+    }
+
+    /// Responses delivered (ok + error).
+    pub fn responses(&self) -> u64 {
+        self.responses_ok.get() + self.responses_error.get()
+    }
+
+    /// Responses delivered successfully.
+    pub fn responses_ok(&self) -> u64 {
+        self.responses_ok.get()
+    }
+
+    /// Responses delivered carrying a backend error.
+    pub fn responses_error(&self) -> u64 {
+        self.responses_error.get()
+    }
+
+    /// Batches executed.
+    pub fn batches(&self) -> u64 {
+        self.batches.get()
+    }
+
+    /// Sum of batch occupancies (requests per batch).
+    pub fn occupancy_sum(&self) -> u64 {
+        self.occupancy_sum.get()
+    }
+
+    /// Backend errors observed (per failed batch, not per request).
+    pub fn backend_errors(&self) -> u64 {
+        self.backend_errors.get()
+    }
+
+    /// Unparseable config labels seen by the string submit shim.
+    pub fn parse_errors(&self) -> u64 {
+        self.parse_errors.get()
+    }
+
+    /// Record one request's end-to-end latency into the aggregate sketch.
+    /// Any duration is safe: values are recorded in seconds and the sketch
+    /// saturates its final octave, so even `Duration::MAX` lands in a
+    /// guaranteed catch-all bin.
     pub fn record_latency(&self, d: Duration) {
-        let us = d.as_micros() as u64;
-        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
-        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap();
-        self.latency[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency.record_duration(d);
+    }
+
+    /// Record a batch of end-to-end latencies (seconds) in one lock
+    /// acquisition — the per-batch amortization the lane worker uses.
+    pub fn record_latencies(&self, secs: &[f64]) {
+        self.latency.record_many(secs);
     }
 
     /// Mean latency (µs).
     pub fn mean_latency_us(&self) -> f64 {
-        let n = self.responses.load(Ordering::Relaxed);
-        if n == 0 {
-            return 0.0;
-        }
-        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        self.latency.mean() * 1e6
     }
 
-    /// Approximate latency percentile from the histogram (µs upper bound of
-    /// the bucket containing the quantile).
+    /// Approximate latency percentile (µs) from the sketch; `q` in [0, 1]
+    /// (the historical signature). Saturates on overflow.
     pub fn latency_percentile_us(&self, q: f64) -> u64 {
-        let total: u64 = self.latency.iter().map(|c| c.load(Ordering::Relaxed)).sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = (q * total as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, c) in self.latency.iter().enumerate() {
-            seen += c.load(Ordering::Relaxed);
-            if seen >= target {
-                return BUCKETS_US[i];
-            }
-        }
-        u64::MAX
+        (self.latency.quantile(q * 100.0) * 1e6) as u64
     }
 
     /// Mean requests per executed batch.
     pub fn mean_occupancy(&self) -> f64 {
-        let b = self.batches.load(Ordering::Relaxed);
+        let b = self.batches.get();
         if b == 0 {
             return 0.0;
         }
-        self.occupancy_sum.load(Ordering::Relaxed) as f64 / b as f64
+        self.occupancy_sum.get() as f64 / b as f64
     }
 
     /// One-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} responses={} batches={} occupancy={:.2} errors={} mean_latency={:.0}µs p99<={}µs",
-            self.requests.load(Ordering::Relaxed),
-            self.responses.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
+            "requests={} responses={} batches={} occupancy={:.2} errors={} parse_errors={} mean_latency={:.0}µs p99≈{}µs",
+            self.requests(),
+            self.responses(),
+            self.batches(),
             self.mean_occupancy(),
-            self.backend_errors.load(Ordering::Relaxed),
+            self.backend_errors(),
+            self.parse_errors(),
             self.mean_latency_us(),
-            match self.latency_percentile_us(0.99) {
-                u64::MAX => ">100000".to_string(),
-                v => v.to_string(),
-            },
+            self.latency_percentile_us(0.99),
         )
     }
 }
@@ -99,24 +208,63 @@ mod tests {
     use super::*;
 
     #[test]
-    fn latency_percentiles_monotone() {
+    fn latency_percentiles_monotone_and_in_range() {
         let m = Metrics::new();
         for us in [10u64, 80, 300, 900, 4000, 90_000] {
-            m.responses.fetch_add(1, Ordering::Relaxed);
+            m.inc_response_ok();
             m.record_latency(Duration::from_micros(us));
         }
         let p50 = m.latency_percentile_us(0.5);
         let p99 = m.latency_percentile_us(0.99);
-        assert!(p50 <= p99);
-        assert!(p99 >= 90_000);
+        assert!(p50 <= p99, "p50={p50} p99={p99}");
+        // The sketch interpolates within log-spaced bins: assert the p99
+        // is in the right neighbourhood, not on an exact bucket edge.
+        assert!(
+            (45_000..=180_000).contains(&p99),
+            "p99={p99}µs not near the 90ms tail"
+        );
+        assert!(m.mean_latency_us() > 0.0);
+    }
+
+    /// Regression (satellite): the old fixed-bucket histogram did
+    /// `as_micros() as u64` (silent truncation) and
+    /// `position().unwrap()` over bucket bounds. `Duration::MAX` must now
+    /// land in the sketch's catch-all final octave — no panic, no wrap.
+    #[test]
+    fn duration_max_saturates_into_catch_all() {
+        let m = Metrics::new();
+        m.record_latency(Duration::MAX);
+        m.record_latency(Duration::from_micros(100));
+        let p100 = m.latency_percentile_us(1.0);
+        assert!(p100 >= m.latency_percentile_us(0.5));
+        // Finite and huge: the catch-all octave, not a wrapped small value.
+        assert!(p100 > 1_000_000_000, "p100={p100}µs lost the outlier");
     }
 
     #[test]
     fn occupancy_mean() {
         let m = Metrics::new();
-        m.batches.fetch_add(2, Ordering::Relaxed);
-        m.occupancy_sum.fetch_add(3 + 5, Ordering::Relaxed);
+        m.inc_batch(3);
+        m.inc_batch(5);
         assert!((m.mean_occupancy() - 4.0).abs() < 1e-12);
+        assert_eq!(m.occupancy_sum(), 8);
+        assert_eq!(m.batches(), 2);
+    }
+
+    #[test]
+    fn response_split_and_parse_errors() {
+        let m = Metrics::new();
+        m.inc_requests();
+        m.inc_requests();
+        m.inc_response_ok();
+        m.inc_response_error();
+        m.inc_parse_error();
+        assert_eq!(m.requests(), 2);
+        assert_eq!(m.responses(), 2);
+        assert_eq!(m.responses_ok(), 1);
+        assert_eq!(m.responses_error(), 1);
+        assert_eq!(m.parse_errors(), 1);
+        assert!(m.summary().contains("parse_errors=1"));
     }
 
     #[test]
@@ -125,5 +273,22 @@ mod tests {
         assert_eq!(m.mean_latency_us(), 0.0);
         assert_eq!(m.latency_percentile_us(0.99), 0);
         assert!(m.summary().contains("requests=0"));
+    }
+
+    #[test]
+    fn lane_instruments_register_depth_and_latency_series() {
+        let m = Metrics::new();
+        let lane = m.lane_instruments("Exact8");
+        lane.depth.add(3);
+        lane.latency.record(0.001);
+        let snap = m.registry().snapshot();
+        assert!(snap
+            .gauges
+            .keys()
+            .any(|id| id.name == "coordinator_queue_depth"));
+        assert!(snap
+            .hists
+            .keys()
+            .any(|id| id.name == "coordinator_latency_seconds" && !id.labels.is_empty()));
     }
 }

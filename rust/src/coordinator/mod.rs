@@ -17,5 +17,5 @@ mod server;
 pub use adaptive::{standard_controller, AdaptiveController, ConfigEntry, OperandMonitor};
 pub use backend::{Backend, MockBackend, PjrtBackend, PureRustBackend};
 pub use batcher::{BatchPolicy, BatchQueue, Request};
-pub use metrics::Metrics;
+pub use metrics::{LaneMetrics, Metrics};
 pub use server::{Coordinator, Prediction};

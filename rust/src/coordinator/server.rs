@@ -6,9 +6,10 @@
 
 use super::backend::Backend;
 use super::batcher::{BatchPolicy, BatchQueue, Request};
-use super::metrics::Metrics;
+use super::metrics::{LaneMetrics, Metrics};
 use crate::multipliers::{ApproxMultiplier, DesignSpec};
 use crate::nn::cached_lut;
+use crate::obs;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -29,6 +30,7 @@ pub struct Prediction {
 
 struct ConfigLane {
     queue: Arc<BatchQueue>,
+    instruments: LaneMetrics,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -73,18 +75,21 @@ impl Coordinator {
         for m in configs {
             let lut = cached_lut(*m);
             let queue = Arc::new(BatchQueue::new(policy));
+            let instruments = metrics.lane_instruments(&m.name());
             let worker = spawn_worker(
                 m.name(),
                 backend.clone(),
                 queue.clone(),
                 lut,
                 metrics.clone(),
+                instruments.clone(),
                 img_size,
             );
             lanes.insert(
                 m.spec(),
                 ConfigLane {
                     queue,
+                    instruments,
                     worker: Some(worker),
                 },
             );
@@ -124,9 +129,15 @@ impl Coordinator {
         config: &str,
         pixels: Vec<u8>,
     ) -> crate::Result<(u64, mpsc::Receiver<Prediction>)> {
-        let spec: DesignSpec = config
-            .parse()
-            .map_err(|e: crate::multipliers::ParseSpecError| anyhow::anyhow!("{e}"))?;
+        let spec: DesignSpec = config.parse().map_err(
+            |e: crate::multipliers::ParseSpecError| {
+                // The shim is the only place raw strings enter the
+                // coordinator: count the rejects so bad producers show up
+                // in the snapshot instead of vanishing into Err returns.
+                self.metrics.inc_parse_error();
+                anyhow::anyhow!("{e}")
+            },
+        )?;
         self.submit_spec(spec, pixels)
     }
 
@@ -159,7 +170,8 @@ impl Coordinator {
             reply: tx,
         });
         anyhow::ensure!(ok, "coordinator shutting down");
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.metrics.inc_requests();
+        lane.instruments.depth.add(1);
         Ok((id, rx))
     }
 
@@ -194,6 +206,7 @@ fn spawn_worker(
     queue: Arc<BatchQueue>,
     lut: Arc<Vec<i32>>,
     metrics: Arc<Metrics>,
+    instruments: LaneMetrics,
     img_size: usize,
 ) -> std::thread::JoinHandle<()> {
     std::thread::Builder::new()
@@ -201,23 +214,27 @@ fn spawn_worker(
         .spawn(move || {
             let bsz = backend.batch();
             let classes = backend.n_classes();
+            // One span handle for the whole lane lifetime; per-batch cost
+            // is one guard (Instant + sketch push + ring write on drop).
+            let batch_span = obs::span("coordinator.lane.batch");
+            let mut latencies: Vec<f64> = Vec::with_capacity(bsz);
             while let Some(batch) = queue.pop_batch() {
+                let _span = batch_span.start();
+                instruments.depth.sub(batch.len() as i64);
                 // Pad the pixel payload to the artifact's fixed batch size.
                 let mut pixels = vec![0u8; bsz * img_size];
                 for (i, req) in batch.iter().enumerate() {
                     pixels[i * img_size..(i + 1) * img_size].copy_from_slice(&req.pixels);
                 }
-                metrics.batches.fetch_add(1, Ordering::Relaxed);
-                metrics
-                    .occupancy_sum
-                    .fetch_add(batch.len() as u64, Ordering::Relaxed);
+                metrics.inc_batch(batch.len());
+                latencies.clear();
                 match backend.infer(&pixels, &lut) {
                     Ok(logits) => {
                         for (i, req) in batch.into_iter().enumerate() {
                             let row = logits[i * classes..(i + 1) * classes].to_vec();
                             let class = crate::nn::argmax(&row);
-                            metrics.record_latency(req.enqueued.elapsed());
-                            metrics.responses.fetch_add(1, Ordering::Relaxed);
+                            latencies.push(req.enqueued.elapsed().as_secs_f64());
+                            metrics.inc_response_ok();
                             let _ = req.reply.send(Prediction {
                                 id: req.id,
                                 logits: row,
@@ -229,11 +246,12 @@ fn spawn_worker(
                     Err(e) => {
                         // Failure isolation: the batch errors, the lane
                         // keeps serving subsequent batches.
-                        metrics.backend_errors.fetch_add(1, Ordering::Relaxed);
+                        metrics.inc_backend_error();
+                        obs::record_error("coordinator.backend");
                         let msg = e.to_string();
                         for req in batch {
-                            metrics.record_latency(req.enqueued.elapsed());
-                            metrics.responses.fetch_add(1, Ordering::Relaxed);
+                            latencies.push(req.enqueued.elapsed().as_secs_f64());
+                            metrics.inc_response_error();
                             let _ = req.reply.send(Prediction {
                                 id: req.id,
                                 logits: Vec::new(),
@@ -243,6 +261,10 @@ fn spawn_worker(
                         }
                     }
                 }
+                // Two sketch pushes per batch (aggregate + lane), not two
+                // per request.
+                metrics.record_latencies(&latencies);
+                instruments.latency.record_many(&latencies);
             }
         })
         .expect("spawning lane worker")
@@ -282,12 +304,16 @@ mod tests {
         let exact = Exact::new(8);
         let configs: Vec<&dyn crate::multipliers::ApproxMultiplier> = vec![&exact];
         let coord = Coordinator::new(backend, &configs, policy());
-        // Valid label, no lane: the error names the configured lanes.
+        // Valid label, no lane: the error names the configured lanes (and
+        // is not a parse failure).
         let e = coord.submit("DRUM(9)", vec![0; 4]).unwrap_err();
         assert!(e.to_string().contains("Exact8"), "{e}");
-        // Unparseable label: the parsing shim surfaces the spec error.
+        assert_eq!(coord.metrics().parse_errors(), 0);
+        // Unparseable label: the parsing shim surfaces the spec error and
+        // counts the reject.
         let e = coord.submit("warp-drive", vec![0; 4]).unwrap_err();
         assert!(e.to_string().contains("unknown config"), "{e}");
+        assert_eq!(coord.metrics().parse_errors(), 1);
     }
 
     #[test]
@@ -332,11 +358,14 @@ mod tests {
             }
         }
         assert!(errors > 0 && oks > 0, "errors={errors} oks={oks}");
+        let m = coord.metrics();
+        assert_eq!(m.responses(), 6, "every request answered exactly once");
         assert_eq!(
-            coord.metrics().responses.load(Ordering::Relaxed),
+            m.responses_ok() as usize + m.responses_error() as usize,
             6,
-            "every request answered exactly once"
+            "ok/error split covers every response"
         );
+        assert!(m.backend_errors() > 0);
     }
 
     /// Regression: a policy `max_batch` larger than the backend's fixed
@@ -368,7 +397,7 @@ mod tests {
                 .unwrap_or_else(|_| panic!("request {i} never answered — lane worker died"));
             assert!(p.error.is_none(), "request {i}: {:?}", p.error);
         }
-        assert_eq!(coord.metrics().responses.load(Ordering::Relaxed), 6);
+        assert_eq!(coord.metrics().responses(), 6);
     }
 
     #[test]

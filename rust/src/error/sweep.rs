@@ -101,12 +101,34 @@ where
 /// The unified parallel driver: traverse the spec'd operand space on the
 /// batched kernel plane, one [`ErrorReportBuilder`] per worker, merged in
 /// worker-index order (deterministic float results). Every public sweep
-/// entry point reduces to this.
+/// entry point reduces to this — which makes it the one choke point where
+/// sweep throughput is observed: one span, one pair counter and one
+/// pairs/s histogram per driver call, all labelled by design family.
 fn sweep_builder(m: &dyn ApproxMultiplier, spec: SweepSpec) -> ErrorReportBuilder {
-    match spec {
+    let family = m.spec().family();
+    let (span_name, pairs) = match spec {
+        SweepSpec::Exhaustive => {
+            let n = (1u64 << m.bits()) - 1;
+            ("sweep.exhaustive", n * n)
+        }
+        SweepSpec::Sampled { pairs, .. } => ("sweep.sampled", pairs),
+    };
+    let span = crate::obs::span_with(span_name, &[("family", family)]);
+    let _guard = span.start();
+    let t0 = std::time::Instant::now();
+    let builder = match spec {
         SweepSpec::Exhaustive => exhaustive_builder(m),
         SweepSpec::Sampled { pairs, seed } => sampled_builder(m, pairs, seed),
+    };
+    let obs = crate::obs::registry();
+    obs.counter("sweep_pairs_total", &[("family", family)])
+        .add(pairs);
+    let dt = t0.elapsed().as_secs_f64();
+    if dt > 0.0 {
+        obs.histogram("sweep_pairs_per_s", &[("family", family)])
+            .record(pairs as f64 / dt);
     }
+    builder
 }
 
 fn exhaustive_builder(m: &dyn ApproxMultiplier) -> ErrorReportBuilder {
@@ -203,7 +225,7 @@ pub fn sweep_full(m: &dyn ApproxMultiplier, spec: SweepSpec) -> (ErrorReport, Pe
 /// chunking the `a` axis, each worker streaming its rows through the
 /// batched kernel plane.
 pub fn exhaustive_sweep(m: &dyn ApproxMultiplier) -> ErrorReport {
-    exhaustive_builder(m).finish()
+    sweep_builder(m, SweepSpec::Exhaustive).finish()
 }
 
 /// The seed scalar-dyn exhaustive sweep: one virtual `mul` per pair.
@@ -246,7 +268,7 @@ pub fn exhaustive_sweep_scalar(m: &dyn ApproxMultiplier) -> ErrorReport {
 /// Fixed-seed sampled sweep (16-bit spaces), parallelised with per-thread
 /// derived seeds, batched per chunk.
 pub fn sampled_sweep(m: &dyn ApproxMultiplier, pairs: u64, seed: u64) -> ErrorReport {
-    sampled_builder(m, pairs, seed).finish()
+    sweep_builder(m, SweepSpec::Sampled { pairs, seed }).finish()
 }
 
 /// ARED percentile sweep (Table 3), streaming: exhaustive up to
@@ -462,6 +484,17 @@ mod tests {
     #[should_panic(expected = "materializing percentile sweep allocates")]
     fn materializing_rejects_beyond_exhaustive_ceiling() {
         let _ = percentile_sweep_materializing(&Exact::new(13));
+    }
+
+    #[test]
+    fn sweeps_count_pairs_in_obs() {
+        let counter = crate::obs::registry()
+            .counter("sweep_pairs_total", &[("family", "scaleTRIM")]);
+        let before = counter.get();
+        let _ = sampled_sweep(&ScaleTrim::new(8, 3, 4), 10_000, 1);
+        // Global counter: other tests sweeping the same family may add
+        // concurrently, so assert at-least, not exactly.
+        assert!(counter.get() >= before + 10_000);
     }
 
     #[test]

@@ -65,6 +65,14 @@
 //!   executes them on the CPU client.
 //! - [`coordinator`] — the serving layer: request router, dynamic batcher,
 //!   per-config queues, worker threads, metrics.
+//! - [`obs`] — the **observability plane**: one process-wide metrics
+//!   registry (counters, gauges, sketch-backed latency histograms whose
+//!   p50/p99/p999 merge bit-for-bit across shards), RAII tracing spans
+//!   over a static name hierarchy, and a lock-free flight recorder dumped
+//!   on panic. Exposed as Prometheus-style text and schema-versioned JSON
+//!   (`scaletrim obs`, `--metrics-out`, `repro --exp obs`); the
+//!   coordinator, calibration cache/store, sweep drivers, NN inference
+//!   and workloads all emit through it.
 //! - [`workloads`] — the error-resilient application suite: image
 //!   filtering (blur/sharpen/Sobel), alpha compositing, an 8×8 DCT
 //!   compression round-trip, FIR filtering and integer GEMM, each running
@@ -111,6 +119,7 @@ pub mod hardware;
 pub mod lut;
 pub mod multipliers;
 pub mod nn;
+pub mod obs;
 pub mod perf;
 pub mod report;
 pub mod runtime;

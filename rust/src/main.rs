@@ -14,7 +14,14 @@
 //! - `app --workload <name>`       run one application workload under a config
 //! - `infer --model <name>`        batch inference via PJRT on an artifact
 //! - `serve --model <name>`        run the batching coordinator demo
+//! - `obs [--json] [--out F]`      drive demo traffic and print the process
+//!   metrics snapshot (Prometheus-style text, or the schema-versioned JSON)
 //! - `list [--bits 8|16]`          list the registered configurations
+//!
+//! Every subcommand also accepts `--metrics-out <path>`: on exit, the
+//! process-wide [`scaletrim::obs`] snapshot is written there as JSON.
+//! Progress chatter goes to stderr (suppress with `--quiet`), so stdout
+//! stays machine-parseable.
 
 use scaletrim::calib::{self, CalibStore, CalibValue};
 use scaletrim::coordinator::{BatchPolicy, Coordinator, PjrtBackend};
@@ -27,6 +34,7 @@ use scaletrim::multipliers::{
     paper_configs_16bit, paper_configs_8bit, ApproxMultiplier, DesignSpec, Exact, ScaleTrim,
 };
 use scaletrim::nn::{cached_lut, exact_lut, Dataset};
+use scaletrim::obs;
 use scaletrim::runtime::{find_artifacts_dir, ArtifactSet};
 use scaletrim::util::cli::Args;
 use scaletrim::util::table::{f2, Table};
@@ -57,6 +65,9 @@ fn default_calib_dir() -> String {
 }
 
 fn main() -> Result<()> {
+    // Post-mortem dumps: a panic anywhere prints the flight recorder's
+    // newest span/error events before the default backtrace.
+    obs::install_panic_hook();
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
@@ -321,19 +332,54 @@ fn main() -> Result<()> {
             };
             let doc = scaletrim::perf::run_bench(fast);
             std::fs::write(&out, doc.to_string() + "\n")?;
-            println!("bench document written to {out} (schema {})", scaletrim::perf::SCHEMA);
+            // Status chatter on stderr: stdout is reserved for machine-
+            // readable output, so `scaletrim bench | jq` style piping works.
+            eprintln!("bench document written to {out} (schema {})", scaletrim::perf::SCHEMA);
             if let Some((baseline_path, raw)) = baseline_src {
                 let baseline = scaletrim::util::json::Json::parse(&raw)
                     .map_err(|e| anyhow::anyhow!("parsing {baseline_path}: {e}"))?;
                 let lines =
                     scaletrim::perf::compare(&doc, &baseline, scaletrim::perf::DEFAULT_TOLERANCE)?;
                 for l in &lines {
-                    println!("  {l}");
+                    eprintln!("  {l}");
                 }
-                println!(
+                eprintln!(
                     "no regression beyond {:.0}% vs {baseline_path}",
                     scaletrim::perf::DEFAULT_TOLERANCE * 100.0
                 );
+            }
+        }
+        "obs" => {
+            let quiet = args.has_flag("quiet");
+            let fast = args.has_flag("fast");
+            if !quiet {
+                eprintln!("driving demo traffic through the instrumented layers...");
+            }
+            // Hold the coordinator across the snapshot: its metrics live on
+            // a registry shard that drops out of `snapshot_all` with it.
+            let _coord = report::obs_demo_traffic(fast)?;
+            calib::publish_obs();
+            let snap = obs::snapshot_all();
+            obs::check_invariants(&snap)
+                .map_err(|e| anyhow::anyhow!("obs invariant violated: {e}"))?;
+            let wire = obs::to_json(&snap).to_string();
+            // Both expositions must round-trip through the parsers CI (and
+            // any scraper) will use — fail loudly here, not downstream.
+            scaletrim::util::json::Json::parse(&wire)
+                .map_err(|e| anyhow::anyhow!("obs JSON does not round-trip: {e}"))?;
+            let text = obs::to_text(&snap);
+            obs::parse_text(&text)
+                .map_err(|e| anyhow::anyhow!("obs text exposition does not round-trip: {e}"))?;
+            if let Some(path) = args.opt("out") {
+                std::fs::write(path, wire.clone() + "\n")?;
+                if !quiet {
+                    eprintln!("JSON snapshot (schema {}) written to {path}", obs::OBS_SCHEMA);
+                }
+            }
+            if args.has_flag("json") {
+                println!("{wire}");
+            } else {
+                print!("{text}");
             }
         }
         "serve" => {
@@ -382,9 +428,10 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "scaletrim — scaleTRIM approximate-multiplier system reproduction\n\n\
-                 usage: scaletrim <repro|list|mul|sweep|lut-gen|calib|pareto|bench|app|infer|serve> [options]\n\
+                 usage: scaletrim <repro|list|mul|sweep|lut-gen|calib|pareto|bench|app|infer|serve|obs> [options]\n\
                  examples:\n  \
                  scaletrim repro --exp table4\n  \
+                 scaletrim obs --json --out obs-snapshot.json\n  \
                  scaletrim bench --out BENCH_6.json --check BENCH_6.json\n  \
                  scaletrim repro --exp calib\n  \
                  scaletrim calib export --bits 8 --dir artifacts/calib\n  \
@@ -397,6 +444,14 @@ fn main() -> Result<()> {
                  scaletrim serve --model lenet --requests 2000"
             );
         }
+    }
+    // Cross-cutting metrics export: any subcommand can persist the final
+    // process-wide snapshot for offline inspection or scraping.
+    if let Some(path) = args.opt("metrics-out") {
+        calib::publish_obs();
+        let snap = obs::snapshot_all();
+        std::fs::write(path, obs::to_json(&snap).to_string() + "\n")?;
+        eprintln!("metrics snapshot (schema {}) written to {path}", obs::OBS_SCHEMA);
     }
     Ok(())
 }

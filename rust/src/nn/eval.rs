@@ -24,7 +24,12 @@ pub fn evaluate_accuracy(
     lut: &[i32],
     limit: Option<usize>,
 ) -> AccuracyReport {
+    static SPAN: std::sync::OnceLock<crate::obs::SpanHandle> = std::sync::OnceLock::new();
+    let _span = SPAN.get_or_init(|| crate::obs::span("nn.evaluate")).start();
     let n = limit.unwrap_or(data.n).min(data.n);
+    crate::obs::registry()
+        .counter("nn_images_total", &[])
+        .add(n as u64);
     let nthreads = crate::util::parallel::workers().min(n.max(1));
     let chunk = n.div_ceil(nthreads);
     let mut hits1 = 0usize;

@@ -34,6 +34,12 @@ impl QuantizedCnn {
         debug_assert_eq!(lut.len(), 256 * 256);
         let (c0, h0, w0) = self.input_shape();
         debug_assert_eq!(image.len(), c0 * h0 * w0);
+        // Per-layer timing spans, resolved once per process (the handles
+        // cache the histogram series and the interned recorder names).
+        static SPANS: std::sync::OnceLock<(crate::obs::SpanHandle, crate::obs::SpanHandle)> =
+            std::sync::OnceLock::new();
+        let (conv_span, fc_span) =
+            SPANS.get_or_init(|| (crate::obs::span("nn.layer.conv"), crate::obs::span("nn.layer.fc")));
         // Activations carried as u8 planes [c][h][w].
         let mut act: Vec<u8> = image.to_vec();
         let (mut c, mut h, mut w) = (c0, h0, w0);
@@ -49,6 +55,7 @@ impl QuantizedCnn {
                     m_q,
                     pool,
                 } => {
+                    let _span = conv_span.start();
                     debug_assert_eq!(*in_c, c);
                     debug_assert_eq!((*kh, *kw), (3, 3));
                     // Scatter-form convolution (§Perf L3 optimization, see
@@ -138,6 +145,7 @@ impl QuantizedCnn {
                     m_q,
                     final_layer,
                 } => {
+                    let _span = fc_span.start();
                     debug_assert_eq!(*n_in, c * h * w);
                     // Row-blocked FC (same scheme as the scatter conv):
                     // outer loop over input activations so each 256-entry

@@ -1,0 +1,255 @@
+//! Snapshot exposition: Prometheus-style text and a schema-versioned JSON
+//! document over [`crate::util::json`] (the same writer/parser pair the
+//! bench trajectory and the calibration store trust).
+//!
+//! Histograms are exposed Prometheus-summary-style: `{quantile="..."}`
+//! series for p50/p99/p999 (values in the histogram's native unit —
+//! seconds for every `_seconds` metric) plus `_sum`, `_count`, `_min` and
+//! `_max`. The text form is scrape-ready; the JSON form is the
+//! machine-readable snapshot `--metrics-out` and `scaletrim obs --json`
+//! emit, and [`parse_text`] round-trips the text form back into numbers so
+//! CI can assert the two expositions agree.
+
+use super::registry::{MetricId, Snapshot};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Schema tag on every JSON snapshot. Bump on layout changes: consumers
+/// check it instead of guessing.
+pub const OBS_SCHEMA: &str = "scaletrim-obs/v1";
+
+/// The summary quantiles every histogram exposes, as `(label, q)` with
+/// `q` in [0, 100].
+pub const QUANTILES: [(&str, f64); 3] = [("0.5", 50.0), ("0.99", 99.0), ("0.999", 99.9)];
+
+/// Render a series name with one extra label appended (the `quantile`
+/// series of a summary), preserving the escape rules of
+/// [`MetricId::render`].
+fn series(id: &MetricId, extra: (&str, &str)) -> String {
+    let (k, v) = extra;
+    let mut s = String::from(id.name);
+    s.push('{');
+    for (lk, lv) in &id.labels {
+        s.push_str(lk);
+        s.push_str("=\"");
+        s.push_str(&escape(lv));
+        s.push_str("\",");
+    }
+    s.push_str(k);
+    s.push_str("=\"");
+    s.push_str(&escape(v));
+    s.push_str("\"}");
+    s
+}
+
+fn escape(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn fmt_num(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render a snapshot as Prometheus-style text exposition.
+pub fn to_text(s: &Snapshot) -> String {
+    let mut out = String::new();
+    let mut last_name = "";
+    let mut typed = |out: &mut String, name: &'static str, kind: &str| {
+        if name != last_name {
+            out.push_str("# TYPE ");
+            out.push_str(name);
+            out.push(' ');
+            out.push_str(kind);
+            out.push('\n');
+            last_name = name;
+        }
+    };
+    for (id, v) in &s.counters {
+        typed(&mut out, id.name, "counter");
+        out.push_str(&format!("{} {v}\n", id.render()));
+    }
+    for (id, v) in &s.gauges {
+        typed(&mut out, id.name, "gauge");
+        out.push_str(&format!("{} {v}\n", id.render()));
+    }
+    for (id, h) in &s.hists {
+        typed(&mut out, id.name, "summary");
+        for (label, q) in QUANTILES {
+            out.push_str(&format!(
+                "{} {}\n",
+                series(id, ("quantile", label)),
+                fmt_num(h.quantile(q))
+            ));
+        }
+        let base = id.render();
+        let (bare, labels) = match base.find('{') {
+            Some(i) => (&base[..i], &base[i..]),
+            None => (base.as_str(), ""),
+        };
+        out.push_str(&format!("{bare}_sum{labels} {}\n", fmt_num(h.sum)));
+        out.push_str(&format!("{bare}_count{labels} {}\n", h.count()));
+        out.push_str(&format!("{bare}_min{labels} {}\n", fmt_num(h.min())));
+        out.push_str(&format!("{bare}_max{labels} {}\n", fmt_num(h.max())));
+    }
+    out
+}
+
+fn labels_json(id: &MetricId) -> Json {
+    let mut o = Json::obj();
+    for (k, v) in &id.labels {
+        o = o.set(k, v.as_str());
+    }
+    o
+}
+
+/// Render a snapshot as the schema-versioned JSON document.
+pub fn to_json(s: &Snapshot) -> Json {
+    let counters = Json::Arr(
+        s.counters
+            .iter()
+            .map(|(id, v)| {
+                Json::obj()
+                    .set("name", id.name)
+                    .set("labels", labels_json(id))
+                    .set("value", *v)
+            })
+            .collect(),
+    );
+    let gauges = Json::Arr(
+        s.gauges
+            .iter()
+            .map(|(id, v)| {
+                Json::obj()
+                    .set("name", id.name)
+                    .set("labels", labels_json(id))
+                    .set("value", *v)
+            })
+            .collect(),
+    );
+    let hists = Json::Arr(
+        s.hists
+            .iter()
+            .map(|(id, h)| {
+                Json::obj()
+                    .set("name", id.name)
+                    .set("labels", labels_json(id))
+                    .set("count", h.count())
+                    .set("sum", h.sum)
+                    .set("min", h.min())
+                    .set("max", h.max())
+                    .set("p50", h.quantile(50.0))
+                    .set("p99", h.quantile(99.0))
+                    .set("p999", h.quantile(99.9))
+            })
+            .collect(),
+    );
+    Json::obj()
+        .set("schema", OBS_SCHEMA)
+        .set("counters", counters)
+        .set("gauges", gauges)
+        .set("histograms", hists)
+}
+
+/// Parse a text exposition back into `series -> value` (comment lines
+/// skipped). The CI smoke and the integration suite use this to assert
+/// the text form agrees with the snapshot it was rendered from.
+pub fn parse_text(text: &str) -> Result<BTreeMap<String, f64>, String> {
+    let mut out = BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        // The value is the suffix after the last space *outside* braces —
+        // label values may contain spaces.
+        let split = match line.rfind(' ') {
+            Some(i) if !line[i..].contains('}') => i,
+            _ => return Err(format!("line {}: no value field: {line:?}", lineno + 1)),
+        };
+        let (series, value) = (line[..split].trim(), line[split + 1..].trim());
+        let v: f64 = value
+            .parse()
+            .map_err(|_| format!("line {}: bad value {value:?}", lineno + 1))?;
+        if out.insert(series.to_string(), v).is_some() {
+            return Err(format!("line {}: duplicate series {series:?}", lineno + 1));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Registry;
+
+    fn demo_snapshot() -> Snapshot {
+        let r = Registry::new();
+        r.counter("reqs_total", &[("lane", "Exact8")]).add(7);
+        r.counter("reqs_total", &[("lane", "scaleTRIM(3,4)")]).add(3);
+        r.gauge("depth", &[("lane", "Exact8")]).set(2);
+        let h = r.histogram("lat_seconds", &[("lane", "Exact8")]);
+        for i in 1..=100 {
+            h.record(i as f64 / 1000.0);
+        }
+        r.snapshot()
+    }
+
+    #[test]
+    fn text_has_types_series_and_summaries() {
+        let t = to_text(&demo_snapshot());
+        assert!(t.contains("# TYPE reqs_total counter"));
+        assert!(t.contains("reqs_total{lane=\"Exact8\"} 7"));
+        assert!(t.contains("# TYPE lat_seconds summary"));
+        assert!(t.contains("lat_seconds{lane=\"Exact8\",quantile=\"0.5\"}"));
+        assert!(t.contains("lat_seconds_count{lane=\"Exact8\"} 100"));
+    }
+
+    #[test]
+    fn text_round_trips_through_parse_text() {
+        let s = demo_snapshot();
+        let parsed = parse_text(&to_text(&s)).unwrap();
+        assert_eq!(parsed["reqs_total{lane=\"Exact8\"}"], 7.0);
+        assert_eq!(parsed["depth{lane=\"Exact8\"}"], 2.0);
+        assert_eq!(parsed["lat_seconds_count{lane=\"Exact8\"}"], 100.0);
+        let id = s.hists.keys().next().unwrap();
+        let h = &s.hists[id];
+        let p50 = parsed["lat_seconds{lane=\"Exact8\",quantile=\"0.5\"}"];
+        // The text form prints f64s with Display round-trip precision.
+        assert!((p50 - h.quantile(50.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_snapshot_is_parseable_and_schema_tagged() {
+        let j = to_json(&demo_snapshot());
+        let wire = j.to_string();
+        let back = Json::parse(&wire).unwrap();
+        assert_eq!(back.get("schema").and_then(|s| s.as_str()), Some(OBS_SCHEMA));
+        let hists = back.get("histograms").and_then(|h| h.as_arr()).unwrap();
+        assert_eq!(hists.len(), 1);
+        assert_eq!(hists[0].get("count").and_then(|c| c.as_f64()), Some(100.0));
+    }
+
+    #[test]
+    fn empty_histogram_exports_finite_numbers() {
+        let r = Registry::new();
+        let _ = r.histogram("empty_seconds", &[]);
+        let s = r.snapshot();
+        let t = to_text(&s);
+        assert!(t.contains("empty_seconds_min 0"));
+        assert!(t.contains("empty_seconds_max 0"));
+        assert!(parse_text(&t).is_ok(), "no inf/nan leaks into the text form");
+    }
+}

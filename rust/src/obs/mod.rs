@@ -1,0 +1,243 @@
+//! The unified observability plane: one process-wide metrics registry
+//! (counters, gauges, sketch-backed latency/value histograms), structured
+//! tracing spans, and a lock-free flight recorder — the measurement
+//! substrate every layer (coordinator, calibration, sweeps, NN inference,
+//! workloads) emits through.
+//!
+//! ## Shape
+//!
+//! - [`registry()`] — the global root [`Registry`]. Library-wide
+//!   instrumentation (sweep throughput, span timings, calib store
+//!   counters) lives here.
+//! - [`new_shard()`] — a per-component registry attached to the root by a
+//!   weak reference. The coordinator's [`Metrics`] uses one per instance,
+//!   so concurrent coordinators (e.g. parallel tests) keep exact,
+//!   separable counts while [`snapshot_all()`] still merges every live
+//!   shard into the process-wide view — with histogram quantiles
+//!   reproduced bit-for-bit, because the sketch bins are integers.
+//! - [`span()`] / [`span_with()`] — RAII timers recording into
+//!   `scaletrim_span_seconds{span="..."}` and the flight recorder.
+//! - [`recorder()`] — the ring buffer of recent events;
+//!   [`install_panic_hook()`] dumps its tail on panic.
+//! - [`to_text`] / [`to_json`] — Prometheus-style text exposition and the
+//!   schema-versioned JSON snapshot (`scaletrim obs`, `--metrics-out`).
+//!
+//! ## Cost discipline
+//!
+//! Hot paths touch relaxed atomics only (counter/gauge). Sketch updates
+//! are amortized per batch ([`Histogram::record_many`]) or per span —
+//! never per multiply; the multiplier kernels themselves stay
+//! uninstrumented. Everything is poison-safe: a panicking instrumented
+//! thread can never take the metrics plane down
+//! (`PoisonError::into_inner` on every lock, the calibration cache's
+//! contract).
+//!
+//! [`Metrics`]: crate::coordinator::Metrics
+
+mod export;
+mod recorder;
+mod registry;
+mod span;
+
+pub use export::{parse_text, to_json, to_text, OBS_SCHEMA, QUANTILES};
+pub use recorder::{Event, EventKind, FlightRecorder, RECORDER_CAPACITY};
+pub use registry::{Counter, Gauge, HistSnapshot, Histogram, MetricId, Registry, Snapshot};
+pub use span::{SpanGuard, SpanHandle};
+
+use std::sync::{Arc, Mutex, OnceLock, PoisonError, Weak};
+
+/// The process-wide root registry.
+pub fn registry() -> &'static Registry {
+    static ROOT: OnceLock<Registry> = OnceLock::new();
+    ROOT.get_or_init(Registry::new)
+}
+
+fn shards() -> &'static Mutex<Vec<Weak<Registry>>> {
+    static SHARDS: OnceLock<Mutex<Vec<Weak<Registry>>>> = OnceLock::new();
+    SHARDS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Create a registry shard attached to the process-wide view: its series
+/// are merged into [`snapshot_all`] for as long as the returned `Arc` is
+/// alive, and silently pruned once dropped. Use one per component whose
+/// counts must stay separable (the coordinator holds one per instance).
+pub fn new_shard() -> Arc<Registry> {
+    let shard = Arc::new(Registry::new());
+    let mut g = shards().lock().unwrap_or_else(PoisonError::into_inner);
+    g.retain(|w| w.strong_count() > 0);
+    g.push(Arc::downgrade(&shard));
+    shard
+}
+
+/// Snapshot the root registry merged with every live shard. Counters and
+/// gauges add; histogram sketches merge bit-for-bit. Quiesce the
+/// components you care about first (e.g. `Coordinator::shutdown`) if the
+/// snapshot must balance exactly.
+pub fn snapshot_all() -> Snapshot {
+    let mut snap = registry().snapshot();
+    let shards_alive: Vec<Arc<Registry>> = {
+        let mut g = shards().lock().unwrap_or_else(PoisonError::into_inner);
+        g.retain(|w| w.strong_count() > 0);
+        g.iter().filter_map(Weak::upgrade).collect()
+    };
+    for s in shards_alive {
+        snap.merge(&s.snapshot());
+    }
+    snap
+}
+
+/// The process-wide flight recorder.
+pub fn recorder() -> &'static FlightRecorder {
+    static RECORDER: OnceLock<FlightRecorder> = OnceLock::new();
+    RECORDER.get_or_init(FlightRecorder::new)
+}
+
+/// A span handle on the root registry: records into
+/// `scaletrim_span_seconds{span=name}`. Create once per site (cache in a
+/// `OnceLock` static or a pre-loop local), then `start()` per occurrence.
+pub fn span(name: &'static str) -> SpanHandle {
+    let hist = registry().histogram("scaletrim_span_seconds", &[("span", name)]);
+    SpanHandle::new(name, recorder().intern(name), hist)
+}
+
+/// [`span`] with extra labels on the histogram series (e.g.
+/// `("workload", "blur")`). The flight-recorder event carries the span
+/// name only.
+pub fn span_with(name: &'static str, extra: &[(&'static str, &str)]) -> SpanHandle {
+    let mut labels: Vec<(&'static str, &str)> = Vec::with_capacity(extra.len() + 1);
+    labels.push(("span", name));
+    labels.extend_from_slice(extra);
+    let hist = registry().histogram("scaletrim_span_seconds", &labels);
+    SpanHandle::new(name, recorder().intern(name), hist)
+}
+
+/// Record an error event in the flight recorder and bump the
+/// `scaletrim_errors_total{source=name}` counter.
+pub fn record_error(name: &'static str) {
+    recorder().record_error(name);
+    registry().counter("scaletrim_errors_total", &[("source", name)]).inc();
+}
+
+/// Install a panic hook that prints the flight recorder's newest events
+/// to stderr before the default hook runs — the post-mortem dump. Calling
+/// it more than once is a no-op.
+pub fn install_panic_hook() {
+    static INSTALLED: OnceLock<()> = OnceLock::new();
+    INSTALLED.get_or_init(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let rec = recorder();
+            if rec.recorded() > 0 {
+                eprintln!("--- flight recorder (newest {} events) ---", 32);
+                eprint!("{}", rec.tail(32));
+                eprintln!("--- end flight recorder ---");
+            }
+            default(info);
+        }));
+    });
+}
+
+/// Cross-layer invariants a quiesced snapshot must satisfy. Used by
+/// `scaletrim obs`, `repro --exp obs` and the CI smoke step:
+///
+/// - submitted requests balance answered responses
+///   (`coordinator_requests_total == coordinator_responses_ok_total +
+///   coordinator_responses_error_total`, summed over lanes and shards);
+/// - every declared lane (a `coordinator_queue_depth{lane=...}` gauge)
+///   has a latency sketch (`coordinator_latency_seconds{lane=...}`).
+///
+/// Only valid after the coordinators in the snapshot have quiesced
+/// (shut down or drained) — in-flight requests legitimately unbalance a
+/// live snapshot.
+pub fn check_invariants(s: &Snapshot) -> Result<(), String> {
+    let req = s.counter_sum("coordinator_requests_total");
+    let ok = s.counter_sum("coordinator_responses_ok_total");
+    let err = s.counter_sum("coordinator_responses_error_total");
+    if req != ok + err {
+        return Err(format!(
+            "request conservation broken: {req} submitted != {ok} ok + {err} errored"
+        ));
+    }
+    for id in s.gauges.keys() {
+        if id.name != "coordinator_queue_depth" {
+            continue;
+        }
+        let has_hist = s
+            .hists
+            .keys()
+            .any(|h| h.name == "coordinator_latency_seconds" && h.labels == id.labels);
+        if !has_hist {
+            return Err(format!(
+                "lane {} declares a queue-depth gauge but no latency sketch",
+                id.render()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_merge_into_snapshot_all_and_prune_on_drop() {
+        // Distinct metric name per test to stay independent of other
+        // tests touching the same global registry.
+        let shard = new_shard();
+        shard.counter("obs_mod_test_total", &[]).add(5);
+        let snap = snapshot_all();
+        assert_eq!(snap.counter_sum("obs_mod_test_total"), 5);
+        drop(shard);
+        let snap = snapshot_all();
+        assert_eq!(snap.counter_sum("obs_mod_test_total"), 0, "dead shard pruned");
+    }
+
+    #[test]
+    fn spans_record_into_histogram_and_recorder() {
+        let h = span("obs.mod.test");
+        let before = recorder().recorded();
+        {
+            let _g = h.start();
+        }
+        // At-least: the recorder is process-global and parallel tests
+        // (coordinator lane workers) record events concurrently.
+        assert!(recorder().recorded() >= before + 1);
+        let hist = registry().histogram("scaletrim_span_seconds", &[("span", "obs.mod.test")]);
+        assert!(hist.count() >= 1);
+    }
+
+    #[test]
+    fn invariants_catch_imbalance_and_missing_lane_sketch() {
+        let r = Registry::new();
+        r.counter("coordinator_requests_total", &[]).add(3);
+        r.counter("coordinator_responses_ok_total", &[]).add(2);
+        let snap = r.snapshot();
+        assert!(check_invariants(&snap).is_err(), "2 != 3 must fail");
+        r.counter("coordinator_responses_error_total", &[]).inc();
+        let snap = r.snapshot();
+        assert!(check_invariants(&snap).is_ok());
+        // A lane gauge with no latency sketch is a violation...
+        r.gauge("coordinator_queue_depth", &[("lane", "X")]).set(0);
+        assert!(check_invariants(&r.snapshot()).is_err());
+        // ...until the sketch exists.
+        let _ = r.histogram("coordinator_latency_seconds", &[("lane", "X")]);
+        assert!(check_invariants(&r.snapshot()).is_ok());
+    }
+
+    #[test]
+    fn record_error_feeds_counter_and_recorder() {
+        let before = registry()
+            .counter("scaletrim_errors_total", &[("source", "obs.test.err")])
+            .get();
+        record_error("obs.test.err");
+        let after = registry()
+            .counter("scaletrim_errors_total", &[("source", "obs.test.err")])
+            .get();
+        assert_eq!(after, before + 1);
+        assert!(recorder()
+            .dump()
+            .iter()
+            .any(|e| e.name == "obs.test.err" && e.kind == EventKind::Error));
+    }
+}

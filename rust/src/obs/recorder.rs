@@ -1,0 +1,280 @@
+//! The flight recorder: a fixed-capacity lock-free ring buffer of recent
+//! span/error events, dumped on panic or on demand for post-mortems.
+//!
+//! Writers are wait-free on the hot path: claim a slot with one
+//! `fetch_add`, store the payload with relaxed atomics, then publish the
+//! sequence number with a release store. Readers ([`FlightRecorder::dump`])
+//! snapshot every slot and re-check the sequence number around the payload
+//! read — a slot being overwritten mid-read fails the check and is
+//! skipped. A torn read can therefore drop an event from a dump, never
+//! corrupt one; for post-mortem diagnostics that trade is right (the dump
+//! races only against the newest writes).
+//!
+//! Span names are `&'static str`s interned once per distinct name into a
+//! small table (a handful of instrumentation sites), so the hot-path event
+//! payload is four integers — no allocation, no string copy.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
+use std::time::Instant;
+
+/// Ring capacity (events). Power of two so the slot index is a mask.
+pub const RECORDER_CAPACITY: usize = 1024;
+
+/// What kind of event a recorder entry is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A completed tracing span (duration carried in `dur_ns`).
+    Span,
+    /// An error mark (backend failure, verify failure).
+    Error,
+    /// A point-in-time mark with no duration.
+    Mark,
+}
+
+impl EventKind {
+    fn code(self) -> u32 {
+        match self {
+            EventKind::Span => 0,
+            EventKind::Error => 1,
+            EventKind::Mark => 2,
+        }
+    }
+
+    fn from_code(c: u32) -> Self {
+        match c {
+            1 => EventKind::Error,
+            2 => EventKind::Mark,
+            _ => EventKind::Span,
+        }
+    }
+}
+
+/// One decoded recorder event.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Global sequence number (1-based, monotone).
+    pub seq: u64,
+    /// Interned span/mark name.
+    pub name: &'static str,
+    /// Event kind.
+    pub kind: EventKind,
+    /// Microseconds since process start at event completion.
+    pub t_us: u64,
+    /// Span duration in nanoseconds (0 for marks/errors).
+    pub dur_ns: u64,
+}
+
+/// One ring slot. `seq == 0` means never written; otherwise the payload
+/// fields are valid iff `seq` reads the same value before and after.
+#[derive(Default)]
+struct Slot {
+    seq: AtomicU64,
+    name: AtomicU32,
+    kind: AtomicU32,
+    t_us: AtomicU64,
+    dur_ns: AtomicU64,
+}
+
+/// The fixed-capacity lock-free event ring. One process-wide instance
+/// lives behind [`crate::obs::recorder`].
+pub struct FlightRecorder {
+    cursor: AtomicU64,
+    slots: Vec<Slot>,
+    /// Interned names. The mutex is touched only on first use of a new
+    /// name (instrumentation sites cache the returned index).
+    names: Mutex<Vec<&'static str>>,
+    start: Instant,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FlightRecorder {
+    /// Fresh recorder (tests; production uses [`crate::obs::recorder`]).
+    pub fn new() -> Self {
+        Self {
+            cursor: AtomicU64::new(0),
+            slots: (0..RECORDER_CAPACITY).map(|_| Slot::default()).collect(),
+            names: Mutex::new(Vec::new()),
+            start: Instant::now(),
+        }
+    }
+
+    /// Intern a static name, returning its stable index. O(n) over a
+    /// table of a few dozen entries, and called once per instrumentation
+    /// site — cache the index (span handles do).
+    pub fn intern(&self, name: &'static str) -> u32 {
+        let mut names = self.names.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(i) = names.iter().position(|&n| n == name) {
+            return i as u32;
+        }
+        names.push(name);
+        (names.len() - 1) as u32
+    }
+
+    fn resolve(&self, idx: u32) -> &'static str {
+        let names = self.names.lock().unwrap_or_else(PoisonError::into_inner);
+        names.get(idx as usize).copied().unwrap_or("?")
+    }
+
+    /// Record an event by interned name index (the span hot path).
+    pub fn record(&self, name_idx: u32, kind: EventKind, dur_ns: u64) {
+        let seq = self.cursor.fetch_add(1, Ordering::Relaxed) + 1;
+        let slot = &self.slots[(seq - 1) as usize & (RECORDER_CAPACITY - 1)];
+        let t_us = self.start.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        // Invalidate first so a concurrent reader can't pair the old seq
+        // with the new payload, then publish the new seq after the payload.
+        slot.seq.store(0, Ordering::Release);
+        slot.name.store(name_idx, Ordering::Relaxed);
+        slot.kind.store(kind.code(), Ordering::Relaxed);
+        slot.t_us.store(t_us, Ordering::Relaxed);
+        slot.dur_ns.store(dur_ns, Ordering::Relaxed);
+        slot.seq.store(seq, Ordering::Release);
+    }
+
+    /// Record an error mark by name (interned on the spot — error paths
+    /// are cold).
+    pub fn record_error(&self, name: &'static str) {
+        let idx = self.intern(name);
+        self.record(idx, EventKind::Error, 0);
+    }
+
+    /// Record a point-in-time mark by name.
+    pub fn record_mark(&self, name: &'static str) {
+        let idx = self.intern(name);
+        self.record(idx, EventKind::Mark, 0);
+    }
+
+    /// Total events ever recorded (≥ the ring's resident count).
+    pub fn recorded(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot the resident events, oldest first. Slots being overwritten
+    /// concurrently are skipped (see the module docs), so a dump taken
+    /// under fire may have small gaps — never garbage.
+    pub fn dump(&self) -> Vec<Event> {
+        let mut out = Vec::with_capacity(RECORDER_CAPACITY);
+        for slot in &self.slots {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 {
+                continue;
+            }
+            let name = slot.name.load(Ordering::Relaxed);
+            let kind = slot.kind.load(Ordering::Relaxed);
+            let t_us = slot.t_us.load(Ordering::Relaxed);
+            let dur_ns = slot.dur_ns.load(Ordering::Relaxed);
+            let s2 = slot.seq.load(Ordering::Acquire);
+            if s1 != s2 {
+                continue; // torn read: the slot was recycled under us
+            }
+            out.push(Event {
+                seq: s1,
+                name: self.resolve(name),
+                kind: EventKind::from_code(kind),
+                t_us,
+                dur_ns,
+            });
+        }
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+
+    /// Render the newest `n` events as human-readable lines (panic-hook
+    /// output).
+    pub fn tail(&self, n: usize) -> String {
+        let events = self.dump();
+        let skip = events.len().saturating_sub(n);
+        let mut s = String::new();
+        for e in &events[skip..] {
+            let kind = match e.kind {
+                EventKind::Span => "span",
+                EventKind::Error => "ERROR",
+                EventKind::Mark => "mark",
+            };
+            s.push_str(&format!(
+                "  #{:<8} +{:>10}µs {:5} {:<28} {:.3}ms\n",
+                e.seq,
+                e.t_us,
+                kind,
+                e.name,
+                e.dur_ns as f64 / 1e6
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_come_back_in_order() {
+        let r = FlightRecorder::new();
+        let a = r.intern("a");
+        let b = r.intern("b");
+        assert_eq!(r.intern("a"), a, "interning is idempotent");
+        r.record(a, EventKind::Span, 10);
+        r.record(b, EventKind::Span, 20);
+        r.record_error("boom");
+        let d = r.dump();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d[0].name, "a");
+        assert_eq!(d[1].name, "b");
+        assert_eq!(d[2].kind, EventKind::Error);
+        assert_eq!(d[2].name, "boom");
+        assert!(d.windows(2).all(|w| w[0].seq < w[1].seq));
+        assert_eq!(r.recorded(), 3);
+    }
+
+    #[test]
+    fn ring_keeps_only_the_newest_capacity_events() {
+        let r = FlightRecorder::new();
+        let idx = r.intern("x");
+        let total = RECORDER_CAPACITY as u64 + 77;
+        for i in 0..total {
+            r.record(idx, EventKind::Span, i);
+        }
+        let d = r.dump();
+        assert_eq!(d.len(), RECORDER_CAPACITY);
+        assert_eq!(d.first().unwrap().seq, total - RECORDER_CAPACITY as u64 + 1);
+        assert_eq!(d.last().unwrap().seq, total);
+    }
+
+    #[test]
+    fn concurrent_writers_never_produce_garbage() {
+        let r = std::sync::Arc::new(FlightRecorder::new());
+        let idx = r.intern("w");
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..2000u64 {
+                    r.record(idx, EventKind::Span, i);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let d = r.dump();
+        assert!(!d.is_empty() && d.len() <= RECORDER_CAPACITY);
+        assert!(d.windows(2).all(|w| w[0].seq < w[1].seq), "strictly ordered");
+        assert!(d.iter().all(|e| e.name == "w" && e.dur_ns < 2000));
+        assert_eq!(r.recorded(), 8000);
+    }
+
+    #[test]
+    fn tail_renders_newest_lines() {
+        let r = FlightRecorder::new();
+        r.record_mark("start");
+        r.record_error("backend");
+        let t = r.tail(8);
+        assert!(t.contains("start") && t.contains("ERROR") && t.contains("backend"));
+    }
+}

@@ -1,0 +1,527 @@
+//! The metrics registry: typed counters, gauges and sketch-backed
+//! histograms behind one poison-safe home, snapshotted into a mergeable
+//! [`Snapshot`].
+//!
+//! Three rules keep the hot paths cheap and the numbers trustworthy:
+//!
+//! - **Atomics only on hot paths.** [`Counter`] and [`Gauge`] are single
+//!   relaxed atomics; instrumented code holds an `Arc` to the instrument
+//!   and never touches the registry map again after creation.
+//! - **One quantile machinery.** [`Histogram`] wraps the same mergeable
+//!   [`LogQuantileSketch`] the error plane's percentile sweeps trust, so
+//!   p50/p99/p999 here and MARED percentiles there come from identical
+//!   bin math — and per-shard merges stay bit-for-bit
+//!   ([`Snapshot::merge`]).
+//! - **Poison-safe everywhere.** Every lock acquisition recovers from
+//!   poisoning (`PoisonError::into_inner`, the [`CalibCache`] idiom):
+//!   the guarded state is plain bookkeeping that is never left
+//!   half-written, so a panicking instrumented thread can't take the
+//!   metrics plane down with it.
+//!
+//! [`LogQuantileSketch`]: crate::util::stats::LogQuantileSketch
+//! [`CalibCache`]: crate::calib::CalibCache
+
+use crate::util::stats::LogQuantileSketch;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+/// Identity of one metric series: a static name plus sorted-as-given
+/// `(key, value)` labels. Label *keys* are static (the instrumentation
+/// vocabulary is fixed at compile time); label *values* are runtime
+/// strings (lane labels, design families, workload names).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct MetricId {
+    /// Metric name (`snake_case`, `_total` suffix on counters).
+    pub name: &'static str,
+    /// Label set, in declaration order.
+    pub labels: Vec<(&'static str, String)>,
+}
+
+impl MetricId {
+    fn new(name: &'static str, labels: &[(&'static str, &str)]) -> Self {
+        Self {
+            name,
+            labels: labels.iter().map(|&(k, v)| (k, v.to_string())).collect(),
+        }
+    }
+
+    /// Render `name{k="v",...}` (the Prometheus series syntax); bare name
+    /// when there are no labels.
+    pub fn render(&self) -> String {
+        if self.labels.is_empty() {
+            return self.name.to_string();
+        }
+        let mut s = String::from(self.name);
+        s.push('{');
+        for (i, (k, v)) in self.labels.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(k);
+            s.push_str("=\"");
+            for c in v.chars() {
+                match c {
+                    '"' => s.push_str("\\\""),
+                    '\\' => s.push_str("\\\\"),
+                    '\n' => s.push_str("\\n"),
+                    c => s.push(c),
+                }
+            }
+            s.push('"');
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// Monotone event counter (one relaxed atomic).
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed level (queue depths, resident bytes).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    /// Set the level.
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise by `n`.
+    #[inline]
+    pub fn add(&self, n: i64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Lower by `n`.
+    #[inline]
+    pub fn sub(&self, n: i64) {
+        self.v.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    /// Current level.
+    #[inline]
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Sketch state + exact sum, guarded together so count/sum/quantiles in a
+/// snapshot are mutually consistent.
+#[derive(Debug)]
+struct HistInner {
+    sketch: LogQuantileSketch,
+    sum: f64,
+}
+
+/// Latency/value distribution over non-negative samples, backed by the
+/// mergeable [`LogQuantileSketch`] (so shard merges reproduce single-shard
+/// quantiles bit-for-bit).
+///
+/// Durations are recorded in **seconds** ([`Histogram::record_duration`]):
+/// the sketch resolves octaves up to 2¹⁵, which comfortably covers every
+/// finite latency in seconds, whereas microsecond units would collapse
+/// everything past ~65 ms into one bin. `Duration::MAX` is finite as
+/// seconds-f64 and lands in the sketch's last catch-all bin with the exact
+/// max still tracked — overflow saturates, it never panics.
+///
+/// [`LogQuantileSketch`]: crate::util::stats::LogQuantileSketch
+#[derive(Debug)]
+pub struct Histogram {
+    inner: Mutex<HistInner>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            inner: Mutex::new(HistInner {
+                sketch: LogQuantileSketch::new(),
+                sum: 0.0,
+            }),
+        }
+    }
+}
+
+impl Histogram {
+    fn lock(&self) -> MutexGuard<'_, HistInner> {
+        // Plain data under the lock — poisoning is always safe to clear.
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Record one observation. Negative values saturate to 0.0 and NaN is
+    /// dropped (the sketch's domain is non-negative reals) — instrumented
+    /// code never has to pre-validate.
+    pub fn record(&self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        let v = v.max(0.0);
+        let mut g = self.lock();
+        g.sketch.push(v);
+        g.sum += v;
+    }
+
+    /// Record a batch under one lock acquisition — the per-batch
+    /// amortization the coordinator's response loop uses.
+    pub fn record_many(&self, vs: &[f64]) {
+        if vs.is_empty() {
+            return;
+        }
+        let mut g = self.lock();
+        for &v in vs {
+            if v.is_nan() {
+                continue;
+            }
+            let v = v.max(0.0);
+            g.sketch.push(v);
+            g.sum += v;
+        }
+    }
+
+    /// Record a duration in seconds. Saturating: any `Duration` (including
+    /// `Duration::MAX`) is a finite non-negative f64 and lands in the
+    /// sketch's guaranteed catch-all last bin.
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_secs_f64());
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.lock().sketch.count()
+    }
+
+    /// Sum of observations.
+    pub fn sum(&self) -> f64 {
+        self.lock().sum
+    }
+
+    /// Mean observation (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        let g = self.lock();
+        let n = g.sketch.count();
+        if n == 0 {
+            0.0
+        } else {
+            g.sum / n as f64
+        }
+    }
+
+    /// Estimated `q`-th percentile, `q` in [0, 100] (0.0 when empty).
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.lock().sketch.quantile(q)
+    }
+
+    /// Exact minimum (+inf when empty).
+    pub fn min(&self) -> f64 {
+        self.lock().sketch.min()
+    }
+
+    /// Exact maximum (-inf when empty).
+    pub fn max(&self) -> f64 {
+        self.lock().sketch.max()
+    }
+
+    fn snapshot(&self) -> HistSnapshot {
+        let g = self.lock();
+        HistSnapshot {
+            sketch: g.sketch.clone(),
+            sum: g.sum,
+        }
+    }
+}
+
+/// Point-in-time copy of one histogram: the full sketch (so merged
+/// quantiles stay bit-for-bit) plus the exact sum.
+#[derive(Debug, Clone)]
+pub struct HistSnapshot {
+    sketch: LogQuantileSketch,
+    /// Sum of observations.
+    pub sum: f64,
+}
+
+impl HistSnapshot {
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.sketch.count()
+    }
+
+    /// Mean observation (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.sketch.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum / n as f64
+        }
+    }
+
+    /// Estimated `q`-th percentile, `q` in [0, 100] (0.0 when empty).
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.sketch.quantile(q)
+    }
+
+    /// Exact minimum, or 0.0 when empty (keeps exports finite).
+    pub fn min(&self) -> f64 {
+        if self.sketch.count() == 0 {
+            0.0
+        } else {
+            self.sketch.min()
+        }
+    }
+
+    /// Exact maximum, or 0.0 when empty (keeps exports finite).
+    pub fn max(&self) -> f64 {
+        if self.sketch.count() == 0 {
+            0.0
+        } else {
+            self.sketch.max()
+        }
+    }
+
+    /// Merge another snapshot of the same series. Integer bin counts add
+    /// exactly, so merged quantiles equal single-shard quantiles
+    /// bit-for-bit (the shard-merge property test pins this).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        self.sketch.merge(&other.sketch);
+        self.sum += other.sum;
+    }
+}
+
+/// A metrics registry: three `MetricId`-keyed instrument maps. Process
+/// code uses the global root ([`crate::obs::registry`]); per-coordinator
+/// shards ([`crate::obs::new_shard`]) keep concurrent coordinators'
+/// counters separable while [`crate::obs::snapshot_all`] merges them.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<MetricId, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<MetricId, Arc<Gauge>>>,
+    hists: Mutex<BTreeMap<MetricId, Arc<Histogram>>>,
+}
+
+impl Registry {
+    /// Fresh, empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn lock<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+        m.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// The counter for `(name, labels)`, created on first use. Hold the
+    /// returned `Arc` at instrumentation sites — creation takes the map
+    /// lock, increments don't.
+    pub fn counter(&self, name: &'static str, labels: &[(&'static str, &str)]) -> Arc<Counter> {
+        Self::lock(&self.counters)
+            .entry(MetricId::new(name, labels))
+            .or_default()
+            .clone()
+    }
+
+    /// The gauge for `(name, labels)`, created on first use.
+    pub fn gauge(&self, name: &'static str, labels: &[(&'static str, &str)]) -> Arc<Gauge> {
+        Self::lock(&self.gauges)
+            .entry(MetricId::new(name, labels))
+            .or_default()
+            .clone()
+    }
+
+    /// The histogram for `(name, labels)`, created on first use.
+    pub fn histogram(&self, name: &'static str, labels: &[(&'static str, &str)]) -> Arc<Histogram> {
+        Self::lock(&self.hists)
+            .entry(MetricId::new(name, labels))
+            .or_default()
+            .clone()
+    }
+
+    /// Point-in-time copy of every instrument.
+    pub fn snapshot(&self) -> Snapshot {
+        let counters = Self::lock(&self.counters)
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect();
+        let gauges = Self::lock(&self.gauges)
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect();
+        let hists = Self::lock(&self.hists)
+            .iter()
+            .map(|(k, v)| (k.clone(), v.snapshot()))
+            .collect();
+        Snapshot {
+            counters,
+            gauges,
+            hists,
+        }
+    }
+}
+
+/// Point-in-time state of a registry (or a merge of several). Ordered
+/// maps, so exports are deterministic and diff cleanly.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    /// Counter values by series.
+    pub counters: BTreeMap<MetricId, u64>,
+    /// Gauge levels by series.
+    pub gauges: BTreeMap<MetricId, i64>,
+    /// Histogram states by series.
+    pub hists: BTreeMap<MetricId, HistSnapshot>,
+}
+
+impl Snapshot {
+    /// Merge another snapshot: counters and gauges add, histograms merge
+    /// their sketches (bit-for-bit quantile reproduction — integer bins).
+    /// Merging is commutative and associative over quantiles, so shard
+    /// order never matters.
+    pub fn merge(&mut self, other: &Snapshot) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            *self.gauges.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.hists {
+            match self.hists.get_mut(k) {
+                Some(mine) => mine.merge(v),
+                None => {
+                    self.hists.insert(k.clone(), v.clone());
+                }
+            }
+        }
+    }
+
+    /// Sum of one counter over every label set (e.g. total requests across
+    /// lanes and shards).
+    pub fn counter_sum(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .filter(|(k, _)| k.name == name)
+            .map(|(_, v)| v)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_accumulate() {
+        let r = Registry::new();
+        let c = r.counter("events_total", &[]);
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Same id resolves to the same instrument.
+        assert_eq!(r.counter("events_total", &[]).get(), 5);
+        let g = r.gauge("depth", &[("lane", "a")]);
+        g.add(3);
+        g.sub(1);
+        assert_eq!(g.get(), 2);
+        // Distinct labels are distinct series.
+        assert_eq!(r.gauge("depth", &[("lane", "b")]).get(), 0);
+    }
+
+    #[test]
+    fn histogram_guards_domain_and_saturates() {
+        let r = Registry::new();
+        let h = r.histogram("v", &[]);
+        h.record(1.0);
+        h.record(-5.0); // saturates to 0.0
+        h.record(f64::NAN); // dropped
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 1.0);
+        // Duration::MAX: finite seconds, lands in the catch-all last bin.
+        h.record_duration(Duration::MAX);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.max(), Duration::MAX.as_secs_f64());
+        assert!(h.quantile(100.0).is_finite());
+    }
+
+    #[test]
+    fn snapshot_merge_is_bit_for_bit_on_quantiles() {
+        let whole = Registry::new();
+        let a = Registry::new();
+        let b = Registry::new();
+        let hw = whole.histogram("lat", &[]);
+        let ha = a.histogram("lat", &[]);
+        let hb = b.histogram("lat", &[]);
+        for i in 0..2000u64 {
+            let v = ((i as f64).sin().abs() + 0.01) / 3.0;
+            hw.record(v);
+            if i % 2 == 0 {
+                ha.record(v);
+            } else {
+                hb.record(v);
+            }
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        let reference = whole.snapshot();
+        let id = MetricId::new("lat", &[]);
+        let (m, r) = (&merged.hists[&id], &reference.hists[&id]);
+        assert_eq!(m.count(), r.count());
+        for q in [50.0, 99.0, 99.9] {
+            assert_eq!(m.quantile(q).to_bits(), r.quantile(q).to_bits(), "q={q}");
+        }
+    }
+
+    #[test]
+    fn metric_id_renders_prometheus_series() {
+        assert_eq!(MetricId::new("a_total", &[]).render(), "a_total");
+        assert_eq!(
+            MetricId::new("d", &[("lane", "scaleTRIM(3,4)")]).render(),
+            "d{lane=\"scaleTRIM(3,4)\"}"
+        );
+        assert_eq!(
+            MetricId::new("d", &[("k", "a\"b")]).render(),
+            "d{k=\"a\\\"b\"}"
+        );
+    }
+
+    #[test]
+    fn poisoned_histogram_recovers() {
+        let r = Registry::new();
+        let h = r.histogram("lat", &[]);
+        h.record(1.0);
+        // Poison the inner mutex by panicking while holding it.
+        let h2 = r.histogram("lat", &[]);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = h2.inner.lock().unwrap();
+            panic!("poison");
+        }));
+        // Still readable and writable.
+        h.record(2.0);
+        assert_eq!(h.count(), 2);
+    }
+}

@@ -1,0 +1,69 @@
+//! Structured tracing spans: scoped RAII timers over a static-str name
+//! hierarchy (`coordinator.lane.batch`, `sweep.exhaustive`,
+//! `nn.layer.fc`, ...).
+//!
+//! A [`SpanHandle`] is created once per instrumentation site (it resolves
+//! the histogram and interns the recorder name — both take a lock);
+//! [`SpanHandle::start`] is the hot path: one `Instant::now`, and on drop
+//! one sketch push plus one wait-free flight-recorder write. Sites that
+//! fire per layer or per batch keep the handle in a `OnceLock` static or
+//! a local outside the loop.
+
+use super::recorder::EventKind;
+use super::registry::Histogram;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A reusable handle for one span name (+ optional extra labels): the
+/// `scaletrim_span_seconds` histogram series and the interned
+/// flight-recorder name. Cheap to clone, `Sync` — cache it at the site.
+#[derive(Clone)]
+pub struct SpanHandle {
+    name: &'static str,
+    name_idx: u32,
+    hist: Arc<Histogram>,
+}
+
+impl SpanHandle {
+    pub(super) fn new(name: &'static str, name_idx: u32, hist: Arc<Histogram>) -> Self {
+        Self {
+            name,
+            name_idx,
+            hist,
+        }
+    }
+
+    /// The span name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Begin a timed scope; the returned guard records on drop.
+    #[inline]
+    pub fn start(&self) -> SpanGuard {
+        SpanGuard {
+            handle: self.clone(),
+            t0: Instant::now(),
+        }
+    }
+}
+
+/// RAII scope for one span occurrence. On drop: records the elapsed
+/// duration (in seconds) into the span histogram and appends a span event
+/// to the flight recorder.
+pub struct SpanGuard {
+    handle: SpanHandle,
+    t0: Instant,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let d = self.t0.elapsed();
+        self.handle.hist.record_duration(d);
+        super::recorder().record(
+            self.handle.name_idx,
+            EventKind::Span,
+            d.as_nanos().min(u64::MAX as u128) as u64,
+        );
+    }
+}

@@ -6,6 +6,7 @@ mod ablation;
 mod calibration;
 mod comparison;
 mod dnn;
+mod obs;
 mod workloads;
 
 pub use ablation::{ablation_alpha_quant, ablation_constants, ablation_segments, ext32};
@@ -15,6 +16,7 @@ pub use comparison::{
     HeadlinePair,
 };
 pub use dnn::{dnn_config_zoo, fig15, fig16};
+pub use obs::{obs_demo_traffic, obs_report};
 pub use workloads::workload_suite;
 
 use crate::Result;
@@ -23,7 +25,7 @@ use crate::Result;
 pub const EXPERIMENTS: &[&str] = &[
     "fig1", "fig5", "fig6", "fig7", "table4", "fig9", "fig10", "table5", "fig11-13", "table3",
     "fig14", "table2", "table7", "fig15", "fig16", "table6", "ablation", "ext32", "workloads",
-    "headline", "calib", "bench",
+    "headline", "calib", "bench", "obs",
 ];
 
 /// Run one experiment by id. `fast` trims sample counts (CI smoke).
@@ -50,6 +52,7 @@ pub fn run_experiment(id: &str, fast: bool) -> Result<()> {
         "workloads" => workload_suite(fast),
         "headline" => headline(),
         "calib" => calib_strategies(fast),
+        "obs" => obs_report(fast),
         "bench" => {
             // The perf trajectory (EXPERIMENTS.md §Perf trajectory): print
             // the document; `scaletrim bench --out ... --check ...` is the

@@ -1,0 +1,131 @@
+//! Observability experiment (`repro --exp obs`): drive every instrumented
+//! layer once — a sampled error sweep, product-LUT builds through the
+//! calibration cache, and a coordinator round-trip including a deliberate
+//! parse failure — then snapshot the process-wide registry, check the
+//! cross-layer invariants, and print the key series plus the flight
+//! recorder's newest events.
+
+use crate::coordinator::{BatchPolicy, Coordinator, MockBackend};
+use crate::error::sampled_sweep;
+use crate::multipliers::{ApproxMultiplier, Exact, ScaleTrim};
+use crate::obs;
+use crate::util::table::Table;
+use crate::Result;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Generate deterministic demo traffic through the instrumented layers.
+///
+/// Returns the (shut-down) coordinator: its metrics live on a registry
+/// shard that stays in [`obs::snapshot_all`] only while the coordinator is
+/// alive, so the caller must hold it across the snapshot.
+pub fn obs_demo_traffic(fast: bool) -> Result<Coordinator> {
+    // Error plane: one sampled sweep (also exercises the SIMD kernel
+    // plane and the sweep throughput instruments).
+    let st = ScaleTrim::new(8, 3, 4);
+    let pairs = if fast { 16_384 } else { 65_536 };
+    let _ = sampled_sweep(&st, pairs, 1);
+
+    // Serving plane: two lanes over a mock backend (image size 1·2·2 = 4),
+    // a burst of round-robin submits, and one deliberately unparseable
+    // label so the parse-failure counter is non-zero in the snapshot.
+    let backend = Arc::new(MockBackend::new(4, 4));
+    let exact = Exact::new(8);
+    let configs: Vec<&dyn ApproxMultiplier> = vec![&exact, &st];
+    let mut coord = Coordinator::new(
+        backend,
+        &configs,
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        },
+    );
+    let n = if fast { 16 } else { 64 };
+    let pending: Vec<_> = (0..n)
+        .map(|i| {
+            let lane = if i % 2 == 0 { "Exact8" } else { "scaleTRIM(3,4)" };
+            coord.submit(lane, vec![i as u8 % 4, 0, 0, 0]).map(|(_, rx)| rx)
+        })
+        .collect::<crate::Result<_>>()?;
+    for rx in pending {
+        let _ = rx.recv()?;
+    }
+    anyhow::ensure!(
+        coord.submit("warp-drive", vec![0; 4]).is_err(),
+        "the deliberate parse failure must be rejected"
+    );
+    // Quiesce so request conservation holds exactly in the snapshot.
+    coord.shutdown();
+    Ok(coord)
+}
+
+/// Run the experiment: traffic, snapshot, invariants, key-series table,
+/// flight-recorder tail.
+pub fn obs_report(fast: bool) -> Result<()> {
+    let coord = obs_demo_traffic(fast)?;
+    crate::calib::publish_obs();
+    let snap = obs::snapshot_all();
+    obs::check_invariants(&snap).map_err(|e| anyhow::anyhow!("obs invariant violated: {e}"))?;
+
+    let mut t = Table::new(
+        "observability snapshot — key series (full exposition: `scaletrim obs`)",
+        &["series", "value"],
+    );
+    for name in [
+        "coordinator_requests_total",
+        "coordinator_responses_ok_total",
+        "coordinator_responses_error_total",
+        "coordinator_batches_total",
+        "coordinator_parse_errors_total",
+        "sweep_pairs_total",
+    ] {
+        t.row(vec![name.to_string(), snap.counter_sum(name).to_string()]);
+    }
+    for (id, g) in &snap.gauges {
+        if id.name.starts_with("calib_cache_") {
+            t.row(vec![id.render(), g.to_string()]);
+        }
+    }
+    for (id, h) in &snap.hists {
+        if id.name == "coordinator_latency_seconds" {
+            t.row(vec![
+                format!("{} p50/p99 µs", id.render()),
+                format!(
+                    "{:.0} / {:.0} (n={})",
+                    h.quantile(50.0) * 1e6,
+                    h.quantile(99.0) * 1e6,
+                    h.count()
+                ),
+            ]);
+        }
+    }
+    t.print();
+
+    let m = coord.metrics();
+    println!("coordinator: {}", m.summary());
+    println!("\nflight recorder (newest 16 of {} events):", obs::recorder().recorded());
+    print!("{}", obs::recorder().tail(16));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_traffic_satisfies_invariants_while_coordinator_lives() {
+        let coord = obs_demo_traffic(true).unwrap();
+        crate::calib::publish_obs();
+        // The coordinator's own shard alone must balance (the global
+        // snapshot may include other tests' in-flight coordinators).
+        let snap = coord.metrics().registry().snapshot();
+        obs::check_invariants(&snap).unwrap();
+        assert_eq!(snap.counter_sum("coordinator_requests_total"), 16);
+        assert_eq!(
+            snap.counter_sum("coordinator_responses_ok_total")
+                + snap.counter_sum("coordinator_responses_error_total"),
+            16
+        );
+        assert_eq!(snap.counter_sum("coordinator_parse_errors_total"), 1);
+    }
+}

@@ -219,7 +219,14 @@ pub fn evaluate_with_reference(
     m: &dyn ApproxMultiplier,
     reference: &Signal,
 ) -> crate::Result<WorkloadReport> {
-    let run = w.run(m);
+    let span = crate::obs::span_with("workload.run", &[("workload", w.name())]);
+    let run = {
+        let _guard = span.start();
+        w.run(m)
+    };
+    crate::obs::registry()
+        .counter("workload_macs_total", &[("workload", w.name())])
+        .add(run.macs);
     let quality = quality::compare(reference, &run.output, 255.0);
     let hw = try_estimate(m)?;
     let energy_nj = hw.pdp_fj * run.macs as f64 * 1e-6;

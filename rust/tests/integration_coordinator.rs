@@ -31,7 +31,7 @@ fn high_load_fills_batches() {
     let m = coord.metrics();
     let occ = m.mean_occupancy();
     assert!(occ > 8.0, "occupancy {occ} too low under saturation");
-    assert_eq!(m.responses.load(std::sync::atomic::Ordering::Relaxed), 512);
+    assert_eq!(m.responses(), 512);
 }
 
 #[test]

@@ -1,0 +1,164 @@
+//! Observability integration: coordinator traffic balances in the metrics
+//! snapshot, both expositions round-trip against the snapshot they were
+//! rendered from, spans/errors surface in the global registry, and
+//! `Duration::MAX` saturates into the latency sketch instead of panicking
+//! (regression for the old fixed-bucket `position().unwrap()` path).
+
+use ::scaletrim::coordinator::{BatchPolicy, Coordinator, Metrics, MockBackend};
+use ::scaletrim::multipliers::{ApproxMultiplier, Exact, ScaleTrim};
+use ::scaletrim::obs;
+use ::scaletrim::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Round-robin `n` requests over two lanes of a mock backend, wait for
+/// every response, quiesce. The returned coordinator's registry shard
+/// holds the complete traffic accounting.
+fn demo_coordinator(n: usize) -> Coordinator {
+    let backend = Arc::new(MockBackend::new(4, 4));
+    let exact = Exact::new(8);
+    let st = ScaleTrim::new(8, 3, 4);
+    let configs: Vec<&dyn ApproxMultiplier> = vec![&exact, &st];
+    let mut coord = Coordinator::new(
+        backend,
+        &configs,
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        },
+    );
+    let pending: Vec<_> = (0..n)
+        .map(|i| {
+            let lane = if i % 2 == 0 { "Exact8" } else { "scaleTRIM(3,4)" };
+            coord.submit(lane, vec![i as u8 % 4, 0, 0, 0]).unwrap().1
+        })
+        .collect();
+    for rx in pending {
+        rx.recv().unwrap();
+    }
+    coord.shutdown();
+    coord
+}
+
+#[test]
+fn coordinator_shard_balances_and_passes_invariants() {
+    let coord = demo_coordinator(32);
+    let snap = coord.metrics().registry().snapshot();
+    obs::check_invariants(&snap).unwrap();
+    assert_eq!(snap.counter_sum("coordinator_requests_total"), 32);
+    assert_eq!(
+        snap.counter_sum("coordinator_responses_ok_total")
+            + snap.counter_sum("coordinator_responses_error_total"),
+        32
+    );
+    assert!(snap.counter_sum("coordinator_batches_total") >= 8);
+    // Per-lane latency sketches account for every response exactly once.
+    let per_lane: u64 = snap
+        .hists
+        .iter()
+        .filter(|(id, _)| id.name == "coordinator_latency_seconds" && !id.labels.is_empty())
+        .map(|(_, h)| h.count())
+        .sum();
+    assert_eq!(per_lane, 32);
+    // Queues drained back to zero after shutdown.
+    for (id, v) in &snap.gauges {
+        if id.name == "coordinator_queue_depth" {
+            assert_eq!(*v, 0, "lane {} still has queued work", id.render());
+        }
+    }
+}
+
+#[test]
+fn duration_max_latency_saturates_via_public_api() {
+    let m = Metrics::new();
+    m.record_latency(Duration::from_micros(100));
+    m.record_latency(Duration::MAX);
+    // The old fixed-bucket path panicked (`position().unwrap()`) or
+    // silently truncated here; the sketch's catch-all last bin must
+    // absorb it and keep every quantile finite and ordered.
+    let p50 = m.latency_percentile_us(0.5);
+    let p100 = m.latency_percentile_us(1.0);
+    assert!(p100 > 1_000_000_000, "catch-all bin missing: p100={p100}µs");
+    assert!(p50 <= p100);
+    assert!(m.mean_latency_us().is_finite());
+}
+
+#[test]
+fn empty_metrics_report_zero_not_panic() {
+    let m = Metrics::new();
+    assert_eq!(m.latency_percentile_us(0.99), 0);
+    assert_eq!(m.mean_latency_us(), 0.0);
+    assert_eq!(m.mean_occupancy(), 0.0);
+}
+
+#[test]
+fn expositions_round_trip_against_snapshot() {
+    let coord = demo_coordinator(16);
+    let snap = coord.metrics().registry().snapshot();
+
+    // Text: parse back and compare every histogram's _count series plus
+    // the headline counter against the snapshot it came from.
+    let text = obs::to_text(&snap);
+    let parsed = obs::parse_text(&text).unwrap();
+    assert_eq!(
+        parsed["coordinator_requests_total"],
+        snap.counter_sum("coordinator_requests_total") as f64
+    );
+    for (id, h) in &snap.hists {
+        let base = id.render();
+        let (bare, labels) = match base.find('{') {
+            Some(i) => (&base[..i], &base[i..]),
+            None => (base.as_str(), ""),
+        };
+        let key = format!("{bare}_count{labels}");
+        assert_eq!(parsed[&key], h.count() as f64, "series {key}");
+    }
+
+    // JSON: schema-tagged, parseable by the in-repo parser, and the
+    // counter values survive the round trip.
+    let wire = obs::to_json(&snap).to_string();
+    let back = Json::parse(&wire).unwrap();
+    assert_eq!(
+        back.get("schema").and_then(|s| s.as_str()),
+        Some(obs::OBS_SCHEMA)
+    );
+    let counters = back.get("counters").and_then(|c| c.as_arr()).unwrap();
+    let requests: f64 = counters
+        .iter()
+        .filter(|c| c.get("name").and_then(|n| n.as_str()) == Some("coordinator_requests_total"))
+        .filter_map(|c| c.get("value").and_then(|v| v.as_f64()))
+        .sum();
+    assert_eq!(requests, 16.0);
+}
+
+#[test]
+fn spans_and_errors_surface_in_global_snapshot() {
+    {
+        let span = obs::span("test.integration.obs");
+        let _g = span.start();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    obs::record_error("test.integration.obs.error");
+    let snap = obs::snapshot_all();
+    let span_count: u64 = snap
+        .hists
+        .iter()
+        .filter(|(id, _)| {
+            id.name == "scaletrim_span_seconds"
+                && id.labels.iter().any(|(k, v)| *k == "span" && v == "test.integration.obs")
+        })
+        .map(|(_, h)| h.count())
+        .sum();
+    assert!(span_count >= 1, "span did not record into the registry");
+    let errors: u64 = snap
+        .counters
+        .iter()
+        .filter(|(id, _)| {
+            id.name == "scaletrim_errors_total"
+                && id.labels.iter().any(|(_, v)| v == "test.integration.obs.error")
+        })
+        .map(|(_, v)| v)
+        .sum();
+    assert!(errors >= 1, "error did not count into the registry");
+    assert!(obs::recorder().recorded() >= 2, "flight recorder missed the events");
+}

@@ -6,7 +6,6 @@
 use ::scaletrim::coordinator::{BatchPolicy, BatchQueue, Coordinator, MockBackend, Request};
 use ::scaletrim::multipliers::{ApproxMultiplier, Exact, ScaleTrim};
 use ::scaletrim::util::prop::Runner;
-use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -98,12 +97,12 @@ fn prop_coordinator_exactly_once() {
             }
         }
         let m = coord.metrics();
-        let (req, resp) = (
-            m.requests.load(Ordering::Relaxed),
-            m.responses.load(Ordering::Relaxed),
-        );
+        let (req, resp) = (m.requests(), m.responses());
         if req != n as u64 || resp != n as u64 {
             return Err(format!("conservation broken: {req} submitted, {resp} answered"));
+        }
+        if m.responses_ok() + m.responses_error() != resp {
+            return Err("ok/error split does not cover every response".to_string());
         }
         Ok(())
     });
@@ -134,8 +133,8 @@ fn prop_occupancy_accounting() {
             r.recv().unwrap();
         }
         let m = coord.metrics();
-        let occ_sum = m.occupancy_sum.load(Ordering::Relaxed);
-        let resp = m.responses.load(Ordering::Relaxed);
+        let occ_sum = m.occupancy_sum();
+        let resp = m.responses();
         if occ_sum != resp {
             return Err(format!("occupancy sum {occ_sum} != responses {resp}"));
         }

@@ -1,0 +1,83 @@
+//! Property test (the obs plane's headline guarantee): registry shards
+//! merged in *any* order reproduce the single-registry quantiles
+//! bit-for-bit. The sketch's integer bins make histogram merging exactly
+//! commutative and associative, so a scrape over N coordinator shards can
+//! never drift from what one global registry would have reported.
+
+use ::scaletrim::obs::{Registry, Snapshot};
+use ::scaletrim::util::prop::Runner;
+
+#[test]
+fn shard_merge_quantiles_are_bit_identical_in_any_order() {
+    let mut r = Runner::new("obs-shard-merge-bit-identical", 60);
+    r.run(|g| {
+        let n_shards = g.usize_in(2, 6);
+        let whole = Registry::new();
+        let shards: Vec<Registry> = (0..n_shards).map(|_| Registry::new()).collect();
+        let hw = whole.histogram("lat_seconds", &[]);
+        let cw = whole.counter("events_total", &[]);
+        let gw = whole.gauge("depth", &[]);
+
+        // Spray samples over the shards: wide dynamic range (microseconds
+        // to kiloseconds) so many octaves of the sketch participate.
+        let n_samples = g.usize_in(1, 400);
+        for _ in 0..n_samples {
+            let shard = g.usize_in(0, n_shards - 1);
+            let v = g.u64_in(1, 1_000_000_000) as f64 / 1e6;
+            hw.record(v);
+            cw.inc();
+            gw.add(1);
+            shards[shard].histogram("lat_seconds", &[]).record(v);
+            shards[shard].counter("events_total", &[]).inc();
+            shards[shard].gauge("depth", &[]).add(1);
+        }
+
+        // Merge the shard snapshots in a random permutation of the order.
+        let mut order: Vec<usize> = (0..n_shards).collect();
+        for i in 0..n_shards {
+            let j = g.usize_in(i, n_shards - 1);
+            order.swap(i, j);
+        }
+        let mut merged = Snapshot::default();
+        for &i in &order {
+            merged.merge(&shards[i].snapshot());
+        }
+
+        let reference = whole.snapshot();
+        let id = reference.hists.keys().next().unwrap();
+        let (m, rf) = (&merged.hists[id], &reference.hists[id]);
+        if m.count() != rf.count() {
+            return Err(format!("count {} != {}", m.count(), rf.count()));
+        }
+        for q in [50.0, 99.0, 99.9] {
+            let (a, b) = (m.quantile(q), rf.quantile(q));
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("p{q}: merged {a} != reference {b} (order {order:?})"));
+            }
+        }
+        // min/max are exact set extrema — order-independent, bit-for-bit.
+        if m.min().to_bits() != rf.min().to_bits() || m.max().to_bits() != rf.max().to_bits() {
+            return Err("min/max drifted under merge".into());
+        }
+        // Sums are f64 additions, so only order-tolerant agreement holds.
+        if (m.sum - rf.sum).abs() > 1e-9 * rf.sum.abs().max(1.0) {
+            return Err(format!("sum {} != {}", m.sum, rf.sum));
+        }
+        if merged.counter_sum("events_total") != n_samples as u64 {
+            return Err(format!(
+                "counter lost events: {} != {n_samples}",
+                merged.counter_sum("events_total")
+            ));
+        }
+        let depth: i64 = merged
+            .gauges
+            .iter()
+            .filter(|(k, _)| k.name == "depth")
+            .map(|(_, v)| v)
+            .sum();
+        if depth != n_samples as i64 {
+            return Err(format!("gauge lost events: {depth} != {n_samples}"));
+        }
+        Ok(())
+    });
+}
