@@ -1,0 +1,264 @@
+//! Line lexer for the project lint engine.
+//!
+//! This is not a Rust parser — it is a deliberately small per-line token
+//! scanner that produces exactly what the rule checks need and nothing
+//! more:
+//!
+//! - comments split off (`//` text is kept — pragmas live there; `/* */`
+//!   bodies are dropped, including across lines);
+//! - string literal *contents* blanked to `""` (plain, `b"`, `r"`, and
+//!   one-hash `r#"` forms), so a rule pattern can never match inside a
+//!   message string;
+//! - char literals blanked to `' '` while lifetimes (`'a`) pass through —
+//!   disambiguated by shape, not by parsing generics;
+//! - `#[cfg(test)]` items (and `#[cfg(all(test, ...))]`) marked as
+//!   *skipped*: the rules keep brace bookkeeping over them but report
+//!   nothing, because test code is exempt from the production rules.
+//!
+//! The trade-off is explicit: a line lexer cannot see a string literal
+//! that spans physical lines (only possible in raw strings here), so
+//! fixtures in tests either live in escaped one-line strings or stay
+//! brace-balanced. In exchange the whole analyzer is dependency-free and
+//! fast enough to run on every `cargo test`.
+
+/// One lexed source line.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// 1-based line number.
+    pub number: usize,
+    /// Code text with comments removed and literal contents blanked.
+    pub code: String,
+    /// Text after `//` (empty when the line has no line comment).
+    pub comment: String,
+    /// True inside (or on the attribute/closing lines of) a
+    /// `#[cfg(test)]` item — rules skip these lines.
+    pub skipped: bool,
+}
+
+/// Lex a whole file into [`Line`]s.
+pub fn lex(text: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut in_block_comment = false;
+    // cfg(test) skip state: attribute seen, waiting for the item's `{`.
+    let mut skip_pending = false;
+    // Brace depth *inside* the skipped item, once entered.
+    let mut skip_depth: Option<i64> = None;
+    let mut depth: i64 = 0;
+
+    for (idx, raw_line) in text.split('\n').enumerate() {
+        let raw = raw_line.as_bytes();
+        let n = raw.len();
+        let mut code: Vec<u8> = Vec::with_capacity(n);
+        let mut comment = String::new();
+        let mut i = 0;
+        while i < n {
+            let c = raw[i];
+            if in_block_comment {
+                if raw[i..].starts_with(b"*/") {
+                    in_block_comment = false;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            if raw[i..].starts_with(b"//") {
+                comment = String::from_utf8_lossy(&raw[i + 2..]).into_owned();
+                break;
+            }
+            if raw[i..].starts_with(b"/*") {
+                in_block_comment = true;
+                i += 2;
+                continue;
+            }
+            if c == b'"'
+                || raw[i..].starts_with(b"b\"")
+                || raw[i..].starts_with(b"r\"")
+                || raw[i..].starts_with(b"r#\"")
+            {
+                if raw[i..].starts_with(b"r#\"") {
+                    code.extend_from_slice(b"\"\"");
+                    i = match find_from(raw, b"\"#", i + 3) {
+                        Some(j) => j + 2,
+                        None => n,
+                    };
+                    continue;
+                }
+                if c != b'"' {
+                    i += 1; // skip the b/r prefix byte
+                }
+                code.extend_from_slice(b"\"\"");
+                i += 1;
+                while i < n {
+                    if raw[i] == b'\\' {
+                        i += 2;
+                        continue;
+                    }
+                    if raw[i] == b'"' {
+                        i += 1;
+                        break;
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+            if c == b'\'' {
+                if let Some(len) = char_literal_len(raw, i) {
+                    code.extend_from_slice(b"' '");
+                    i += len;
+                    continue;
+                }
+                // A lifetime tick — keep it, it is harmless to the rules.
+                code.push(c);
+                i += 1;
+                continue;
+            }
+            code.push(c);
+            i += 1;
+        }
+        let code = String::from_utf8_lossy(&code).into_owned();
+
+        // cfg(test) region tracking on the comment-stripped code text.
+        let stripped = code.trim();
+        let mut in_skip = skip_depth.is_some();
+        if !in_skip
+            && !skip_pending
+            && (stripped.starts_with("#[cfg(test)]") || stripped.starts_with("#[cfg(all(test"))
+        {
+            skip_pending = true;
+        }
+        let opens = code.bytes().filter(|b| *b == b'{').count() as i64;
+        let closes = code.bytes().filter(|b| *b == b'}').count() as i64;
+        if skip_pending && opens > 0 {
+            // The skipped item's body starts on this line.
+            skip_depth = Some(depth + 1);
+            skip_pending = false;
+            in_skip = true;
+        }
+        depth += opens - closes;
+        if let Some(sd) = skip_depth {
+            if depth < sd {
+                // This line closes the skipped item; it still counts as
+                // skipped itself.
+                skip_depth = None;
+                in_skip = true;
+            }
+        }
+        out.push(Line {
+            number: idx + 1,
+            code,
+            comment,
+            skipped: in_skip || skip_pending,
+        });
+    }
+    out
+}
+
+/// Naive substring search from a byte offset.
+fn find_from(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if from > hay.len() {
+        return None;
+    }
+    hay[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|p| p + from)
+}
+
+/// Length in bytes of a char literal starting at `raw[i] == '\''`, or
+/// `None` when the tick is a lifetime. Accepts `'x'`, `'\n'`-style
+/// escapes and multi-byte scalar values.
+fn char_literal_len(raw: &[u8], i: usize) -> Option<usize> {
+    let rest = &raw[i..];
+    if rest.len() < 3 || rest[0] != b'\'' {
+        return None;
+    }
+    let (payload, first) = if rest[1] == b'\\' {
+        (2usize, *rest.get(2)?)
+    } else {
+        if rest[1] == b'\'' {
+            return None;
+        }
+        (1usize, rest[1])
+    };
+    let close = payload + utf8_len(first);
+    if *rest.get(close)? == b'\'' {
+        Some(close + 1)
+    } else {
+        None
+    }
+}
+
+fn utf8_len(lead: u8) -> usize {
+    if lead < 0xC0 {
+        1 // ASCII, or a stray continuation byte — advance one
+    } else if lead < 0xE0 {
+        2
+    } else if lead < 0xF0 {
+        3
+    } else {
+        4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(src: &str) -> Line {
+        let v = lex(src);
+        assert_eq!(v.len(), 1);
+        v.into_iter().next().unwrap()
+    }
+
+    #[test]
+    fn strings_are_blanked() {
+        let l = one("let s = \"x.unwrap() << k\"; f(s);");
+        assert_eq!(l.code, "let s = \"\"; f(s);");
+        assert!(l.comment.is_empty());
+    }
+
+    #[test]
+    fn byte_and_raw_strings_are_blanked() {
+        assert_eq!(one("let b = b\"ab\\\"c\";").code, "let b = \"\";");
+        assert_eq!(one("let r = r\"a\\b\";").code, "let r = \"\";");
+        assert_eq!(one("let h = r#\"say \"hi\"\"#;").code, "let h = \"\";");
+    }
+
+    #[test]
+    fn line_comment_split_off() {
+        let l = one("let x = 1; // and .unwrap() here is fine");
+        assert_eq!(l.code, "let x = 1; ");
+        assert_eq!(l.comment, " and .unwrap() here is fine");
+    }
+
+    #[test]
+    fn block_comment_spans_lines() {
+        let v = lex("a(); /* start\n .unwrap() inside\n end */ b();");
+        assert_eq!(v[0].code, "a(); ");
+        assert_eq!(v[1].code, "");
+        assert_eq!(v[2].code, " b();");
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        assert_eq!(one("let c = '\\n'; let d = 'x';").code, "let c = ' '; let d = ' ';");
+        let l = one("fn f<'a>(x: &'a str) {}");
+        assert!(l.code.contains("<'a>"), "lifetime must survive: {}", l.code);
+    }
+
+    #[test]
+    fn cfg_test_region_is_skipped() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}";
+        let v = lex(src);
+        let skipped: Vec<bool> = v.iter().map(|l| l.skipped).collect();
+        assert_eq!(skipped, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn cfg_all_test_region_is_skipped() {
+        let src = "#[cfg(all(test, feature = \"x\"))]\nmod t {\n    fn b() {}\n}";
+        let v = lex(src);
+        assert!(v.iter().all(|l| l.skipped));
+    }
+}

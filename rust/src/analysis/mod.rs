@@ -1,0 +1,301 @@
+//! The in-repo static-analysis plane: a dependency-free project lint
+//! engine plus a bounded interleaving explorer for concurrency models.
+//!
+//! ## Why in-repo
+//!
+//! Clippy enforces language-level hygiene, but the rules this system
+//! actually lives by are *project* rules: kernel shifts must be
+//! width-guarded, metric names must come from the [`crate::obs::names`]
+//! vocabulary, library code must not panic, nobody bypasses the
+//! poison-safe lock helpers, kernel loops stay free of IO. Those are not
+//! expressible as clippy lints without a dylib plugin — so the engine
+//! lives here, as ordinary library code with ordinary tests, and runs as
+//! `scaletrim lint` in CI and as a plain `cargo test` (see
+//! `tests/lint_clean.rs`).
+//!
+//! ## The rules
+//!
+//! | rule | scope | requirement |
+//! |---|---|---|
+//! | `shift-unguarded` | multipliers/, simd/, nn/, lut/ | a shift by a runtime amount has a `debug_assert!` width guard in the same function |
+//! | `no-panic` | everything except `main.rs` | no `unwrap`/`expect`/`panic!`/`unimplemented!`/`todo!` in production code |
+//! | `raw-lock` | everywhere | lock acquisition goes through `util::sync::lock_unpoisoned`, never raw `lock().unwrap()` |
+//! | `narrow-cast` | multipliers/, simd/, nn/ | a narrowing `as u8/u16/i8/i16` carries a mask, clamp, shift or nearby assert |
+//! | `obs-names` | everything except `obs/names.rs` | metric/span/error-source names are `obs::names` constants, not inline literals |
+//! | `kernel-loop-io` | multipliers/, simd/, workloads/, nn/infer.rs | no printing or `Instant::now` inside loop bodies |
+//! | `forbid-unsafe` | everywhere + crate root | no `unsafe` token anywhere; `lib.rs` carries the forbid attribute |
+//! | `stale-pragma` | pragma sites | every suppression names a known rule, gives a reason, and still suppresses something |
+//!
+//! ## Suppression
+//!
+//! A finding is silenced by a comment pragma on the flagged line or on
+//! the line directly above it: the marker `lint:allow`, immediately
+//! followed by the rule list in parentheses, then a colon and a
+//! non-empty reason. Pragmas are themselves linted (`stale-pragma`):
+//! missing reasons, unknown rule names and pragmas that no longer
+//! suppress anything are findings too, so suppressions cannot rot.
+//! (This file spells the marker without its opening parenthesis —
+//! the engine reads comments, including doc comments, and a literal
+//! example here would register as a pragma site.)
+//!
+//! Test code (`#[cfg(test)]` items) is exempt from all rules — the lexer
+//! marks those regions and the checks skip them.
+
+pub mod interleave;
+mod lexer;
+mod rules;
+
+pub use lexer::{lex, Line};
+
+use std::collections::HashSet;
+use std::path::Path;
+
+/// The project lint rules. `ALL` is the authoritative vocabulary —
+/// pragma rule lists are validated against it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Rule {
+    ShiftUnguarded,
+    NoPanic,
+    RawLock,
+    NarrowCast,
+    ObsNames,
+    KernelLoopIo,
+    ForbidUnsafe,
+    StalePragma,
+}
+
+impl Rule {
+    /// Every rule, in reporting order.
+    pub const ALL: [Rule; 8] = [
+        Rule::ShiftUnguarded,
+        Rule::NoPanic,
+        Rule::RawLock,
+        Rule::NarrowCast,
+        Rule::ObsNames,
+        Rule::KernelLoopIo,
+        Rule::ForbidUnsafe,
+        Rule::StalePragma,
+    ];
+
+    /// The kebab-case name used in reports and pragma rule lists.
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::ShiftUnguarded => "shift-unguarded",
+            Rule::NoPanic => "no-panic",
+            Rule::RawLock => "raw-lock",
+            Rule::NarrowCast => "narrow-cast",
+            Rule::ObsNames => "obs-names",
+            Rule::KernelLoopIo => "kernel-loop-io",
+            Rule::ForbidUnsafe => "forbid-unsafe",
+            Rule::StalePragma => "stale-pragma",
+        }
+    }
+
+    /// Inverse of [`Rule::name`].
+    pub fn from_name(name: &str) -> Option<Rule> {
+        Rule::ALL.iter().copied().find(|r| r.name() == name)
+    }
+}
+
+impl std::fmt::Display for Rule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One lint finding, after pragma application.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Slash-separated path relative to the linted root.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl Finding {
+    /// `path:line: [rule] message` — the compiler-style report line.
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// A parsed suppression pragma site.
+struct PragmaSite {
+    path: String,
+    line: usize,
+    /// Shares its line with code (suppresses that line) vs. standalone
+    /// (suppresses the next line).
+    trailing: bool,
+    rules: Vec<String>,
+    has_reason: bool,
+}
+
+/// Lint a set of in-memory sources given as `(relpath, text)` pairs.
+///
+/// This is the whole engine: lex, run the per-file rules, validate the
+/// crate-root forbid attribute (when `lib.rs` is in the set), apply
+/// suppression pragmas, and report stale pragmas. Findings come back
+/// sorted by `(path, line, rule, message)`.
+pub fn check_sources(files: &[(&str, &str)]) -> Vec<Finding> {
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut sites: Vec<PragmaSite> = Vec::new();
+
+    for (relpath, text) in files {
+        let lexed = lexer::lex(text);
+        for raw in rules::check_file(relpath, &lexed) {
+            findings.push(Finding {
+                path: (*relpath).to_string(),
+                line: raw.line,
+                rule: raw.rule,
+                message: raw.message,
+            });
+        }
+        for line in &lexed {
+            if line.skipped {
+                continue;
+            }
+            if let Some((rules, has_reason)) = parse_pragma(&line.comment) {
+                sites.push(PragmaSite {
+                    path: (*relpath).to_string(),
+                    line: line.number,
+                    trailing: !line.code.trim().is_empty(),
+                    rules,
+                    has_reason,
+                });
+            }
+        }
+        if *relpath == "lib.rs"
+            && !lexed.iter().any(|l| l.code.contains("#![forbid(unsafe_code)]"))
+        {
+            findings.push(Finding {
+                path: (*relpath).to_string(),
+                line: 1,
+                rule: Rule::ForbidUnsafe,
+                message: "crate root missing #![forbid(unsafe_code)]".into(),
+            });
+        }
+    }
+
+    // Apply pragmas: a site suppresses a finding of a listed rule on its
+    // own line (trailing) or on the line directly below (standalone).
+    let mut used: HashSet<usize> = HashSet::new();
+    let mut remaining: Vec<Finding> = Vec::new();
+    for f in findings {
+        let hit = sites.iter().enumerate().find(|(_, s)| {
+            s.path == f.path
+                && s.rules.iter().any(|r| r == f.rule.name())
+                && ((s.trailing && s.line == f.line) || (!s.trailing && s.line + 1 == f.line))
+        });
+        match hit {
+            Some((i, _)) => {
+                used.insert(i);
+            }
+            None => remaining.push(f),
+        }
+    }
+
+    // Pragmas are linted too: reasons are mandatory, rule names must be
+    // real, and a suppression that suppresses nothing is rot.
+    for (i, s) in sites.iter().enumerate() {
+        if !s.has_reason {
+            remaining.push(Finding {
+                path: s.path.clone(),
+                line: s.line,
+                rule: Rule::StalePragma,
+                message: "pragma without a `: reason`".into(),
+            });
+        }
+        let mut all_known = true;
+        for r in &s.rules {
+            if Rule::from_name(r).is_none() {
+                all_known = false;
+                remaining.push(Finding {
+                    path: s.path.clone(),
+                    line: s.line,
+                    rule: Rule::StalePragma,
+                    message: format!("unknown rule '{r}'"),
+                });
+            }
+        }
+        if !used.contains(&i) && s.has_reason && all_known {
+            remaining.push(Finding {
+                path: s.path.clone(),
+                line: s.line,
+                rule: Rule::StalePragma,
+                message: "pragma suppresses nothing".into(),
+            });
+        }
+    }
+
+    remaining.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule.name(), a.message.as_str()).cmp(&(
+            b.path.as_str(),
+            b.line,
+            b.rule.name(),
+            b.message.as_str(),
+        ))
+    });
+    remaining
+}
+
+/// Parse a suppression pragma out of a comment: the `lint:allow` marker
+/// directly followed by a parenthesized rule list, then `: reason`.
+/// Returns the rule names and whether a non-trivial reason is present.
+fn parse_pragma(comment: &str) -> Option<(Vec<String>, bool)> {
+    const MARKER: &str = "lint:allow(";
+    let start = comment.find(MARKER)?;
+    let after = &comment[start + MARKER.len()..];
+    let close = after.find(')')?;
+    let rules: Vec<String> = after[..close]
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    let rest = &after[close + 1..];
+    let has_reason = rest.starts_with(':') && rest[1..].trim().len() > 2;
+    Some((rules, has_reason))
+}
+
+/// Lint every `.rs` file under `root` (recursively, sorted, paths
+/// reported relative to `root`).
+pub fn lint_tree(root: &Path) -> crate::Result<Vec<Finding>> {
+    let mut paths: Vec<(String, std::path::PathBuf)> = Vec::new();
+    collect_rs(root, root, &mut paths)?;
+    paths.sort();
+    let mut owned: Vec<(String, String)> = Vec::with_capacity(paths.len());
+    for (rel, abs) in paths {
+        let text = std::fs::read_to_string(&abs)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", abs.display()))?;
+        owned.push((rel, text));
+    }
+    let refs: Vec<(&str, &str)> = owned.iter().map(|(p, t)| (p.as_str(), t.as_str())).collect();
+    Ok(check_sources(&refs))
+}
+
+fn collect_rs(
+    root: &Path,
+    dir: &Path,
+    out: &mut Vec<(String, std::path::PathBuf)>,
+) -> crate::Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("listing {}: {e}", dir.display()))?;
+    for entry in entries {
+        let path = entry
+            .map_err(|e| anyhow::anyhow!("listing {}: {e}", dir.display()))?
+            .path();
+        if path.is_dir() {
+            collect_rs(root, &path, out)?;
+        } else if path.extension().is_some_and(|ext| ext == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push((rel, path));
+        }
+    }
+    Ok(())
+}

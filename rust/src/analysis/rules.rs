@@ -1,0 +1,405 @@
+//! The per-file rule checks of the project lint engine.
+//!
+//! Every check here works on [`Line`]s from the lexer — comment-stripped,
+//! string-blanked code text — so patterns can be matched as plain
+//! substrings and word-bounded tokens without a full parser. The checks
+//! are scoped by path (kernel directories get the arithmetic rules, the
+//! whole library gets the panic and observability rules) and emit *raw*
+//! findings; pragma suppression happens in the caller, which sees the
+//! whole file set.
+
+use super::lexer::Line;
+use super::Rule;
+
+/// A finding before pragma application: file-relative line + rule + text.
+#[derive(Debug, Clone)]
+pub struct RawFinding {
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+/// Directories whose shifts must be width-guarded.
+const KERNEL_DIRS: [&str; 4] = ["multipliers/", "simd/", "nn/", "lut/"];
+/// Directories whose narrowing casts must be masked or range-guarded.
+const CAST_DIRS: [&str; 3] = ["multipliers/", "simd/", "nn/"];
+/// Directories whose loop bodies must stay free of IO and timing calls.
+const LOOP_DIRS: [&str; 3] = ["multipliers/", "simd/", "workloads/"];
+
+/// Run every rule over one lexed file. `relpath` is slash-separated and
+/// relative to the tree root (e.g. `multipliers/scaletrim.rs`).
+pub fn check_file(relpath: &str, lexed: &[Line]) -> Vec<RawFinding> {
+    let mut findings = Vec::new();
+    let is_main = relpath == "main.rs";
+    let in_kernel_dirs = KERNEL_DIRS.iter().any(|d| relpath.starts_with(d));
+    let in_cast_dirs = CAST_DIRS.iter().any(|d| relpath.starts_with(d));
+    let in_loop_dirs =
+        LOOP_DIRS.iter().any(|d| relpath.starts_with(d)) || relpath == "nn/infer.rs";
+    let is_names = relpath == "obs/names.rs";
+
+    let assert_spans = assert_spans(lexed);
+
+    // Loop-region state: entries are the brace depth at which a loop body
+    // opened. Tracked across skipped regions too, to keep depth honest.
+    let mut loop_stack: Vec<i64> = Vec::new();
+    let mut depth: i64 = 0;
+    let mut pending_loop = false;
+
+    for line in lexed {
+        let ln = line.number;
+        let code = line.code.as_str();
+
+        let mut kw = first_loop_keyword(code);
+        for (i, ch) in code.bytes().enumerate() {
+            if ch == b'{' {
+                depth += 1;
+                if pending_loop || kw.is_some_and(|k| i > k) {
+                    loop_stack.push(depth);
+                    pending_loop = false;
+                    kw = None;
+                }
+            } else if ch == b'}' {
+                if loop_stack.last() == Some(&depth) {
+                    loop_stack.pop();
+                }
+                depth -= 1;
+            }
+        }
+        if kw.is_some() {
+            // `for`/`while`/`loop` with the body brace on a later line.
+            pending_loop = true;
+        }
+        if line.skipped {
+            continue;
+        }
+
+        // R1: computed shift amounts in kernel code need a width guard.
+        if in_kernel_dirs && !has_assert_word(code) {
+            for idx in shift_operator_ends(code) {
+                let Some(tok) = shift_rhs_ident(code, idx) else {
+                    continue;
+                };
+                let last = tok.rsplit('.').next().unwrap_or(tok);
+                if last.as_bytes().first().is_none_or(|b| b.is_ascii_uppercase()) {
+                    continue; // consts and assoc items are hardwired widths
+                }
+                let fn_line = enclosing_fn_line(lexed, ln);
+                let guarded = assert_spans.iter().any(|(start, text)| {
+                    fn_line < *start && *start <= ln && contains_word(text, last)
+                });
+                if !guarded {
+                    findings.push(RawFinding {
+                        line: ln,
+                        rule: Rule::ShiftUnguarded,
+                        message: format!(
+                            "computed shift by `{tok}` without an adjacent width debug_assert!"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // R2: library code answers with Result, it does not panic.
+        if !is_main {
+            for (pat, what) in [
+                (".unwrap()", "unwrap()"),
+                (".expect(", "expect()"),
+                ("panic!(", "panic!"),
+                ("unimplemented!(", "unimplemented!"),
+                ("todo!(", "todo!"),
+            ] {
+                if code.contains(pat) {
+                    findings.push(RawFinding {
+                        line: ln,
+                        rule: Rule::NoPanic,
+                        message: format!("{what} in library code"),
+                    });
+                }
+            }
+        }
+
+        // R3: raw mutex acquisition bypasses the poison-safe helpers.
+        if code.contains("lock().unwrap()") {
+            findings.push(RawFinding {
+                line: ln,
+                rule: Rule::RawLock,
+                message: "raw Mutex lock().unwrap() — use util::sync::lock_unpoisoned".into(),
+            });
+        }
+
+        // R4: narrowing casts in arithmetic code need a mask or a guard.
+        if in_cast_dirs && !has_assert_word(code) {
+            let masked = code.contains(" & ")
+                || code.contains(".min(")
+                || code.contains(".clamp(")
+                || code.contains(">>");
+            for ty in narrow_cast_types(code) {
+                if masked {
+                    continue;
+                }
+                let guarded = (1..=8).any(|back| {
+                    back < ln
+                        && lexed.get(ln - back - 1).is_some_and(|prev| {
+                            prev.code.contains("debug_assert") || prev.code.contains("assert!")
+                        })
+                });
+                if !guarded {
+                    findings.push(RawFinding {
+                        line: ln,
+                        rule: Rule::NarrowCast,
+                        message: format!("narrowing `as {ty}` without mask or range guard"),
+                    });
+                }
+            }
+        }
+
+        // R5: metric and span names come from the obs::names vocabulary.
+        if !is_names {
+            for pat in [
+                "span(\"",
+                "span_with(\"",
+                ".counter(\"",
+                ".gauge(\"",
+                ".histogram(\"",
+                "record_error(\"",
+                "record_mark(\"",
+            ] {
+                if code.contains(pat) {
+                    findings.push(RawFinding {
+                        line: ln,
+                        rule: Rule::ObsNames,
+                        message: format!(
+                            "inline metric/span name literal at `{pat}...` — use obs::names"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // R6: no IO or timing calls inside kernel loop bodies.
+        if in_loop_dirs && !loop_stack.is_empty() {
+            for pat in ["println!(", "eprintln!(", "print!(", "dbg!(", "Instant::now"] {
+                if code.contains(pat) {
+                    findings.push(RawFinding {
+                        line: ln,
+                        rule: Rule::KernelLoopIo,
+                        message: format!("{} inside a kernel loop", pat.trim_end_matches('(')),
+                    });
+                }
+            }
+        }
+
+        // R7 (token half): no `unsafe` anywhere in the crate. The other
+        // half — the crate-root forbid attribute — is checked by the
+        // caller, which knows whether lib.rs is in the file set.
+        if contains_word(code, "unsafe") {
+            findings.push(RawFinding {
+                line: ln,
+                rule: Rule::ForbidUnsafe,
+                message: "`unsafe` token".into(),
+            });
+        }
+    }
+
+    findings
+}
+
+fn is_word(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn find_from(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if from > hay.len() || needle.is_empty() {
+        return None;
+    }
+    hay[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|p| p + from)
+}
+
+/// Word-bounded occurrence of `needle` in `hay`; returns the byte offset
+/// of the first match.
+fn find_word(hay: &str, needle: &str) -> Option<usize> {
+    let h = hay.as_bytes();
+    let nd = needle.as_bytes();
+    let mut from = 0;
+    while let Some(p) = find_from(h, nd, from) {
+        let pre_ok = p == 0 || !is_word(h[p - 1]);
+        let post = p + nd.len();
+        let post_ok = post >= h.len() || !is_word(h[post]);
+        if pre_ok && post_ok {
+            return Some(p);
+        }
+        from = p + 1;
+    }
+    None
+}
+
+fn contains_word(hay: &str, needle: &str) -> bool {
+    find_word(hay, needle).is_some()
+}
+
+/// Does the line mention `assert` / `debug_assert` as a word? Lines that
+/// do are their own guard and the shift/cast rules skip them.
+fn has_assert_word(code: &str) -> bool {
+    let h = code.as_bytes();
+    let mut from = 0;
+    while let Some(p) = find_from(h, b"assert", from) {
+        if p == 0 || !is_word(h[p - 1]) {
+            return true;
+        }
+        if p >= 6 && &h[p - 6..p] == b"debug_" && (p == 6 || !is_word(h[p - 7])) {
+            return true;
+        }
+        from = p + 1;
+    }
+    false
+}
+
+/// Start offset of an assert-family macro invocation (`assert!`,
+/// `assert_eq!`, `debug_assert!`, ...) on this line, including the
+/// `debug_` prefix when present.
+fn find_assert_bang(code: &str) -> Option<usize> {
+    let h = code.as_bytes();
+    let mut from = 0;
+    while let Some(p) = find_from(h, b"assert", from) {
+        let start = if p >= 6 && &h[p - 6..p] == b"debug_" {
+            p - 6
+        } else {
+            p
+        };
+        if start == 0 || !is_word(h[start - 1]) {
+            let mut j = p + 6;
+            while j < h.len() && is_word(h[j]) {
+                j += 1;
+            }
+            if j < h.len() && h[j] == b'!' {
+                return Some(start);
+            }
+        }
+        from = p + 1;
+    }
+    None
+}
+
+fn paren_delta(s: &str) -> i64 {
+    let opens = s.bytes().filter(|b| *b == b'(').count() as i64;
+    let closes = s.bytes().filter(|b| *b == b')').count() as i64;
+    opens - closes
+}
+
+/// Collect paren-balanced assert statements as `(start_line, joined
+/// text)` spans — under rustfmt a guard's identifiers often sit on
+/// continuation lines, and the span text is what the shift rule searches.
+fn assert_spans(lexed: &[Line]) -> Vec<(usize, String)> {
+    let mut spans = Vec::new();
+    let mut start: Option<usize> = None;
+    let mut text = String::new();
+    let mut depth: i64 = 0;
+    for line in lexed {
+        match start {
+            None => {
+                let Some(s) = find_assert_bang(&line.code) else {
+                    continue;
+                };
+                start = Some(line.number);
+                text = line.code[s..].to_string();
+                depth = paren_delta(&text);
+            }
+            Some(_) => {
+                text.push(' ');
+                text.push_str(&line.code);
+                depth += paren_delta(&line.code);
+            }
+        }
+        if depth <= 0 {
+            if let Some(s) = start.take() {
+                spans.push((s, std::mem::take(&mut text)));
+            }
+        }
+    }
+    spans
+}
+
+/// Offsets of the trailing space of every ` << `, ` >> `, ` <<= `,
+/// ` >>= ` occurrence — the position where the RHS scan starts.
+fn shift_operator_ends(code: &str) -> Vec<usize> {
+    let h = code.as_bytes();
+    let mut ends = Vec::new();
+    for op in [" << ", " >> ", " <<= ", " >>= "] {
+        let nd = op.as_bytes();
+        let mut from = 0;
+        while let Some(p) = find_from(h, nd, from) {
+            ends.push(p + nd.len() - 1);
+            from = p + 1;
+        }
+    }
+    ends.sort_unstable();
+    ends
+}
+
+/// First identifier of a shift RHS starting at the operator's trailing
+/// space: skips spaces and opening parens, then reads a dotted ident.
+/// `None` means the RHS is a literal (or missing) — hardwired widths are
+/// fine.
+fn shift_rhs_ident(code: &str, idx: usize) -> Option<&str> {
+    let h = code.as_bytes();
+    let mut j = idx;
+    while j < h.len() && (h[j] == b' ' || h[j] == b'(') {
+        j += 1;
+    }
+    let c = *h.get(j)?;
+    if !(c.is_ascii_alphabetic() || c == b'_') {
+        return None;
+    }
+    let mut k = j + 1;
+    while k < h.len() && (is_word(h[k]) || h[k] == b'.') {
+        k += 1;
+    }
+    Some(&code[j..k])
+}
+
+/// The narrow target types of every ` as u8`-family cast on the line.
+fn narrow_cast_types(code: &str) -> Vec<&'static str> {
+    let h = code.as_bytes();
+    let mut tys = Vec::new();
+    for ty in ["u8", "u16", "i8", "i16"] {
+        let needle = format!(" as {ty}");
+        let nd = needle.as_bytes();
+        let mut from = 0;
+        while let Some(p) = find_from(h, nd, from) {
+            let post = p + nd.len();
+            if post >= h.len() || !is_word(h[post]) {
+                tys.push(ty);
+            }
+            from = p + 1;
+        }
+    }
+    tys
+}
+
+/// Byte offset of the first word-bounded `for`/`while`/`loop` keyword.
+fn first_loop_keyword(code: &str) -> Option<usize> {
+    ["for", "while", "loop"]
+        .iter()
+        .filter_map(|kw| find_word(code, kw))
+        .min()
+}
+
+/// Nearest line above `ln` whose code mentions `fn` as a word (the
+/// enclosing function header, approximately), looking back up to 400
+/// lines; 0 when none is found.
+fn enclosing_fn_line(lexed: &[Line], ln: usize) -> usize {
+    for back in 1..=400usize {
+        if back >= ln {
+            break;
+        }
+        if let Some(prev) = lexed.get(ln - back - 1) {
+            if contains_word(&prev.code, "fn") {
+                return ln - back;
+            }
+        }
+    }
+    0
+}

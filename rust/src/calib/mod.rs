@@ -40,6 +40,7 @@ pub use strategy::{
 };
 pub(crate) use strategy::fit_uniform;
 
+use crate::obs::names::metric;
 use std::sync::OnceLock;
 
 /// The process-wide calibration cache.
@@ -91,13 +92,13 @@ fn load_default_store(c: &CalibCache) -> usize {
 pub fn publish_obs() {
     let s = cache().stats();
     let r = crate::obs::registry();
-    r.gauge("calib_cache_entries", &[]).set(s.entries as i64);
-    r.gauge("calib_cache_hits", &[]).set(s.hits as i64);
-    r.gauge("calib_cache_misses", &[]).set(s.misses as i64);
-    r.gauge("calib_cache_warm_loaded", &[]).set(s.warm_loaded as i64);
-    r.gauge("calib_cache_init_retries", &[]).set(s.retries() as i64);
-    r.gauge("calib_cache_resident_bytes", &[]).set(s.resident_bytes as i64);
-    r.gauge("calib_cache_dedicated_bytes", &[]).set(s.dedicated_bytes as i64);
+    r.gauge(metric::CALIB_CACHE_ENTRIES, &[]).set(s.entries as i64);
+    r.gauge(metric::CALIB_CACHE_HITS, &[]).set(s.hits as i64);
+    r.gauge(metric::CALIB_CACHE_MISSES, &[]).set(s.misses as i64);
+    r.gauge(metric::CALIB_CACHE_WARM_LOADED, &[]).set(s.warm_loaded as i64);
+    r.gauge(metric::CALIB_CACHE_INIT_RETRIES, &[]).set(s.retries() as i64);
+    r.gauge(metric::CALIB_CACHE_RESIDENT_BYTES, &[]).set(s.resident_bytes as i64);
+    r.gauge(metric::CALIB_CACHE_DEDICATED_BYTES, &[]).set(s.dedicated_bytes as i64);
 }
 
 /// Explicit warm start: make sure the process-wide cache is initialized

@@ -102,7 +102,7 @@ impl CalibStore {
         std::fs::rename(&tmp, &path)
             .with_context(|| format!("publishing calib artifacts at {}", path.display()))?;
         crate::obs::registry()
-            .counter("calib_store_exports_total", &[])
+            .counter(crate::obs::names::metric::CALIB_STORE_EXPORTS_TOTAL, &[])
             .inc();
         Ok(path)
     }
@@ -120,10 +120,10 @@ impl CalibStore {
                     .with_context(|| format!("calib artifact file {}", path.display()))
             });
         match &loaded {
-            Ok(_) => obs.counter("calib_store_loads_total", &[]).inc(),
+            Ok(_) => obs.counter(crate::obs::names::metric::CALIB_STORE_LOADS_TOTAL, &[]).inc(),
             Err(_) => {
-                obs.counter("calib_store_verify_failures_total", &[]).inc();
-                crate::obs::record_error("calib.store.verify");
+                obs.counter(crate::obs::names::metric::CALIB_STORE_VERIFY_FAILURES_TOTAL, &[]).inc();
+                crate::obs::record_error(crate::obs::names::error_source::CALIB_STORE_VERIFY);
             }
         }
         loaded

@@ -144,6 +144,7 @@ pub fn calibrator(s: CalibStrategy) -> &'static dyn Calibrator {
         CalibStrategy::Sampled => &SampledCalibrator,
         CalibStrategy::Quantile => &QuantileCalibrator,
         CalibStrategy::External => {
+            // lint:allow(no-panic): External params never calibrate — reaching here is a caller bug
             panic!("external constants have no calibrator — they arrive via with_params")
         }
     }

@@ -47,8 +47,10 @@ impl OperandMonitor {
             self.lead_hist[crate::multipliers::leading_one(v) as usize] += 1;
         }
         self.sum += v as u128;
-        if self.samples.len() > self.window {
-            let old = self.samples.pop_front().unwrap();
+        if let Some(old) = (self.samples.len() > self.window)
+            .then(|| self.samples.pop_front())
+            .flatten()
+        {
             if old == 0 {
                 self.zeros -= 1;
             } else {
@@ -120,7 +122,7 @@ impl AdaptiveController {
     /// `base_mred` / `pdp` come from the DSE (see `dse::DesignPoint`).
     pub fn new(mut configs: Vec<ConfigEntry>, mred_budget_pct: f64, min_dwell: u32) -> Self {
         assert!(!configs.is_empty());
-        configs.sort_by(|a, b| a.pdp_fj.partial_cmp(&b.pdp_fj).unwrap());
+        configs.sort_by(|a, b| a.pdp_fj.total_cmp(&b.pdp_fj));
         // Start at the most accurate (most expensive) config.
         let current = configs.len() - 1;
         Self {

@@ -72,7 +72,7 @@ impl PjrtBackend {
                     }
                 }
             })
-            .expect("spawning pjrt actor");
+            .map_err(|e| anyhow::anyhow!("spawning the pjrt actor thread: {e}"))?;
         ready_rx.recv()??;
         Ok(Self {
             tx: Mutex::new(tx),
@@ -100,9 +100,7 @@ impl Backend for PjrtBackend {
             lut: lut.clone(),
             reply: reply_tx,
         };
-        self.tx
-            .lock()
-            .unwrap()
+        crate::util::sync::lock_unpoisoned(&self.tx)
             .send(job)
             .map_err(|_| anyhow::anyhow!("pjrt actor gone"))?;
         reply_rx.recv()?

@@ -3,6 +3,7 @@
 //! the *oldest* request has waited `max_wait` — bounding tail latency while
 //! keeping occupancy high under load.
 
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -69,8 +70,13 @@ impl BatchQueue {
     }
 
     /// Enqueue a request. Returns false if the queue is closed.
+    ///
+    /// Locking is poison-safe throughout this queue: every critical
+    /// section is a single push/pop/flag write that cannot be observed
+    /// half-done, so a panicking peer must not wedge the queue for every
+    /// later submitter.
     pub fn push(&self, req: Request) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         if g.closed {
             return false;
         }
@@ -81,12 +87,12 @@ impl BatchQueue {
 
     /// Current depth (diagnostics).
     pub fn depth(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
+        lock_unpoisoned(&self.inner).queue.len()
     }
 
     /// Close the queue: waiting poppers drain what is left, then get `None`.
     pub fn close(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         g.closed = true;
         self.cv.notify_all();
     }
@@ -94,22 +100,19 @@ impl BatchQueue {
     /// Blocking pop of the next batch under the size-or-deadline policy.
     /// Returns `None` once closed *and* drained.
     pub fn pop_batch(&self) -> Option<Vec<Request>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         loop {
             if g.queue.len() >= self.policy.max_batch {
                 return Some(drain(&mut g.queue, self.policy.max_batch));
             }
-            if !g.queue.is_empty() {
-                // Wait only until the oldest request's deadline.
-                let oldest = g.queue.front().unwrap().enqueued;
+            // Wait only until the oldest request's deadline.
+            if let Some(oldest) = g.queue.front().map(|r| r.enqueued) {
                 let elapsed = oldest.elapsed();
                 if elapsed >= self.policy.max_wait {
                     return Some(drain(&mut g.queue, self.policy.max_batch));
                 }
-                let (ng, timeout) = self
-                    .cv
-                    .wait_timeout(g, self.policy.max_wait - elapsed)
-                    .unwrap();
+                let (ng, timeout) =
+                    wait_timeout_unpoisoned(&self.cv, g, self.policy.max_wait - elapsed);
                 g = ng;
                 if timeout.timed_out() && !g.queue.is_empty() {
                     return Some(drain(&mut g.queue, self.policy.max_batch));
@@ -119,7 +122,7 @@ impl BatchQueue {
             if g.closed {
                 return None;
             }
-            g = self.cv.wait(g).unwrap();
+            g = wait_unpoisoned(&self.cv, g);
         }
     }
 }

@@ -12,7 +12,7 @@
 //! `Duration::MAX` lands in the sketch's final octave instead of
 //! truncating or panicking a bucket scan.
 
-use crate::obs::{self, Counter, Gauge, Histogram, Registry};
+use crate::obs::{self, names::metric, Counter, Gauge, Histogram, Registry};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -53,14 +53,14 @@ impl Metrics {
     pub fn new() -> Self {
         let registry = obs::new_shard();
         Self {
-            requests: registry.counter("coordinator_requests_total", &[]),
-            responses_ok: registry.counter("coordinator_responses_ok_total", &[]),
-            responses_error: registry.counter("coordinator_responses_error_total", &[]),
-            batches: registry.counter("coordinator_batches_total", &[]),
-            occupancy_sum: registry.counter("coordinator_batch_occupancy_total", &[]),
-            backend_errors: registry.counter("coordinator_backend_errors_total", &[]),
-            parse_errors: registry.counter("coordinator_parse_errors_total", &[]),
-            latency: registry.histogram("coordinator_latency_seconds", &[]),
+            requests: registry.counter(metric::COORD_REQUESTS_TOTAL, &[]),
+            responses_ok: registry.counter(metric::COORD_RESPONSES_OK_TOTAL, &[]),
+            responses_error: registry.counter(metric::COORD_RESPONSES_ERROR_TOTAL, &[]),
+            batches: registry.counter(metric::COORD_BATCHES_TOTAL, &[]),
+            occupancy_sum: registry.counter(metric::COORD_BATCH_OCCUPANCY_TOTAL, &[]),
+            backend_errors: registry.counter(metric::COORD_BACKEND_ERRORS_TOTAL, &[]),
+            parse_errors: registry.counter(metric::COORD_PARSE_ERRORS_TOTAL, &[]),
+            latency: registry.histogram(metric::COORD_LATENCY_SECONDS, &[]),
             registry,
         }
     }
@@ -75,10 +75,10 @@ impl Metrics {
     /// Instruments for one lane, labelled by its display name.
     pub fn lane_instruments(&self, lane: &str) -> LaneMetrics {
         LaneMetrics {
-            depth: self.registry.gauge("coordinator_queue_depth", &[("lane", lane)]),
+            depth: self.registry.gauge(metric::COORD_QUEUE_DEPTH, &[("lane", lane)]),
             latency: self
                 .registry
-                .histogram("coordinator_latency_seconds", &[("lane", lane)]),
+                .histogram(metric::COORD_LATENCY_SECONDS, &[("lane", lane)]),
         }
     }
 

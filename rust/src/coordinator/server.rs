@@ -200,6 +200,7 @@ impl Drop for Coordinator {
     }
 }
 
+#[allow(clippy::expect_used)]
 fn spawn_worker(
     name: String,
     backend: Arc<dyn Backend>,
@@ -216,7 +217,7 @@ fn spawn_worker(
             let classes = backend.n_classes();
             // One span handle for the whole lane lifetime; per-batch cost
             // is one guard (Instant + sketch push + ring write on drop).
-            let batch_span = obs::span("coordinator.lane.batch");
+            let batch_span = obs::span(obs::names::span::COORD_LANE_BATCH);
             let mut latencies: Vec<f64> = Vec::with_capacity(bsz);
             while let Some(batch) = queue.pop_batch() {
                 let _span = batch_span.start();
@@ -247,7 +248,7 @@ fn spawn_worker(
                         // Failure isolation: the batch errors, the lane
                         // keeps serving subsequent batches.
                         metrics.inc_backend_error();
-                        obs::record_error("coordinator.backend");
+                        obs::record_error(obs::names::error_source::COORD_BACKEND);
                         let msg = e.to_string();
                         for req in batch {
                             latencies.push(req.enqueued.elapsed().as_secs_f64());
@@ -267,6 +268,7 @@ fn spawn_worker(
                 instruments.latency.record_many(&latencies);
             }
         })
+        // lint:allow(no-panic): thread spawn fails only on resource exhaustion at startup
         .expect("spawning lane worker")
 }
 

@@ -65,6 +65,7 @@ impl DesignPoint {
     /// hardware model — convenient for tests and benches over registry
     /// configs, which always have one.
     pub fn evaluate(m: &dyn ApproxMultiplier, sweep: SweepSpec) -> Self {
+        // lint:allow(no-panic): documented panicking convenience over try_evaluate
         Self::try_evaluate(m, sweep).unwrap_or_else(|e| panic!("{e}"))
     }
 
@@ -118,7 +119,7 @@ pub fn constrained(
         })
         .cloned()
         .collect();
-    v.sort_by(|a, b| a.error.mred_pct.partial_cmp(&b.error.mred_pct).unwrap());
+    v.sort_by(|a, b| a.error.mred_pct.total_cmp(&b.error.mred_pct));
     v
 }
 

@@ -34,7 +34,7 @@ pub fn pareto_front<T>(items: &[T], objectives: impl Fn(&T) -> (f64, f64)) -> Ve
     // Sort by first objective, tie-break on second.
     idx.sort_by(|&i, &j| {
         let (a, b) = (objectives(&items[i]), objectives(&items[j]));
-        a.partial_cmp(&b).unwrap()
+        a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1))
     });
     let mut front = Vec::new();
     let mut best_second = f64::INFINITY;

@@ -149,7 +149,7 @@ impl PercentileReport {
         if areds.is_empty() {
             return Self::empty();
         }
-        areds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        areds.sort_by(f64::total_cmp);
         let mean = areds.iter().sum::<f64>() / areds.len() as f64;
         Self {
             mean_pct: 100.0 * mean,

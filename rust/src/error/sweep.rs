@@ -109,9 +109,9 @@ fn sweep_builder(m: &dyn ApproxMultiplier, spec: SweepSpec) -> ErrorReportBuilde
     let (span_name, pairs) = match spec {
         SweepSpec::Exhaustive => {
             let n = (1u64 << m.bits()) - 1;
-            ("sweep.exhaustive", n * n)
+            (crate::obs::names::span::SWEEP_EXHAUSTIVE, n * n)
         }
-        SweepSpec::Sampled { pairs, .. } => ("sweep.sampled", pairs),
+        SweepSpec::Sampled { pairs, .. } => (crate::obs::names::span::SWEEP_SAMPLED, pairs),
     };
     let span = crate::obs::span_with(span_name, &[("family", family)]);
     let _guard = span.start();
@@ -121,11 +121,11 @@ fn sweep_builder(m: &dyn ApproxMultiplier, spec: SweepSpec) -> ErrorReportBuilde
         SweepSpec::Sampled { pairs, seed } => sampled_builder(m, pairs, seed),
     };
     let obs = crate::obs::registry();
-    obs.counter("sweep_pairs_total", &[("family", family)])
+    obs.counter(crate::obs::names::metric::SWEEP_PAIRS_TOTAL, &[("family", family)])
         .add(pairs);
     let dt = t0.elapsed().as_secs_f64();
     if dt > 0.0 {
-        obs.histogram("sweep_pairs_per_s", &[("family", family)])
+        obs.histogram(crate::obs::names::metric::SWEEP_PAIRS_PER_S, &[("family", family)])
             .record(pairs as f64 / dt);
     }
     builder
@@ -152,7 +152,7 @@ fn exhaustive_builder(m: &dyn ApproxMultiplier) -> ErrorReportBuilder {
             }));
         }
         for h in handles {
-            builders.push(h.join().expect("sweep worker panicked"));
+            builders.push(h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)));
         }
     });
     let mut total = ErrorReportBuilder::new();
@@ -197,7 +197,7 @@ fn sampled_builder(m: &dyn ApproxMultiplier, pairs: u64, seed: u64) -> ErrorRepo
             }));
         }
         for h in handles {
-            builders.push(h.join().expect("sweep worker panicked"));
+            builders.push(h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)));
         }
     });
     let mut total = ErrorReportBuilder::new();
@@ -255,7 +255,7 @@ pub fn exhaustive_sweep_scalar(m: &dyn ApproxMultiplier) -> ErrorReport {
             }));
         }
         for h in handles {
-            builders.push(h.join().expect("sweep worker panicked"));
+            builders.push(h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)));
         }
     });
     let mut total = ErrorReportBuilder::new();

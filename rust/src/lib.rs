@@ -111,6 +111,17 @@
 //! [`multipliers::DesignSpec`] and `build` it instead. Unknown labels are
 //! typed [`multipliers::ParseSpecError`]s carrying near-miss suggestions,
 //! not a silent `None`.
+
+// The whole crate is safe Rust — the SIMD plane is autovectorized slices,
+// the recorder is atomics — and the `forbid` makes that a compile-time
+// contract (the `forbid-unsafe` lint rule's static half).
+#![forbid(unsafe_code)]
+// Library modules answer with typed errors; panicking is for bugs. Sites
+// that legitimately keep unwrap/expect carry a reasoned no-panic lint
+// pragma plus a scoped clippy allow.
+#![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::expect_used))]
+
+pub mod analysis;
 pub mod calib;
 pub mod coordinator;
 pub mod dse;

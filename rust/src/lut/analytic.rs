@@ -23,10 +23,12 @@ use super::calib::ScaleTrimParams;
 
 /// Exact per-class statistics computed in closed form (no operand scan).
 pub fn analytic_classes(bits: u32, h: u32) -> (Vec<f64>, Vec<f64>) {
+    debug_assert!(h < bits && bits < u64::BITS, "class width exceeds the operand width");
     let classes = 1usize << h;
     let mut count = vec![0f64; classes];
     let mut sum_x = vec![0f64; classes];
     for n in 0..bits {
+        debug_assert!(n < u64::BITS, "leading-one position exceeds the u64 range");
         if n >= h {
             let block = (1u64 << (n - h)) as f64; // operands per class
             let pow_n = (1u64 << n) as f64;

@@ -70,6 +70,7 @@ impl ScaleTrimParams {
     /// is the typed form used by the artifact-store load path.
     pub fn validate(&self) {
         if let Err(msg) = self.try_validate() {
+            // lint:allow(no-panic): documented panicking form of try_validate
             panic!("{msg}");
         }
     }
@@ -154,6 +155,7 @@ pub(crate) fn segment_of(s_int: u64, m: u32, h: u32, bounds: &[u64]) -> usize {
     if bounds.is_empty() {
         // s = s_int / 2^h ∈ [0, 2); segment = floor(s · M / 2).
         // s_int < 2^(h+1) ≤ 2^13 and M ≤ PARAM_MAX = 2^6, so u64 suffices.
+        debug_assert!(h + 1 < u64::BITS, "segment index shift exceeds the u64 range");
         let idx = (s_int * m as u64) >> (h + 1);
         (idx as usize).min(m as usize - 1)
     } else {
@@ -178,11 +180,13 @@ pub struct OperandClasses {
 impl OperandClasses {
     /// Scan all non-zero operands of the given width.
     pub fn scan(bits: u32, h: u32) -> Self {
+        debug_assert!(h <= bits && bits < u64::BITS, "scan width exceeds the u64 range");
         let classes = 1usize << h;
         let mut count = vec![0u64; classes];
         let mut sum_x = vec![0f64; classes];
         for a in 1u64..(1u64 << bits) {
             let n = leading_one(a);
+            debug_assert!(n < bits, "leading-one position exceeds the scan width");
             let x = (a as f64) / (1u64 << n) as f64 - 1.0;
             let u = truncate_fraction(a, n, h) as usize;
             count[u] += 1;

@@ -11,6 +11,7 @@
 
 use super::calib::ScaleTrimParams;
 use crate::calib::CalibStrategy;
+use crate::util::sync::lock_unpoisoned;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -65,8 +66,10 @@ impl LutRegistry {
     /// instances and warm-start artifact loads all share one calibration
     /// per key — the §V sharing statistics come along for free.
     pub fn acquire(&self, bits: u32, h: u32, m: u32) -> Arc<SharedLut> {
-        let mut t = self.tables.lock().unwrap();
-        *self.handles.lock().unwrap() += 1;
+        // Entry-API insertion is all-or-nothing and the handle counter is a
+        // single add, so poison recovery cannot observe partial state.
+        let mut t = lock_unpoisoned(&self.tables);
+        *lock_unpoisoned(&self.handles) += 1;
         t.entry((bits, h, m))
             .or_insert_with(|| {
                 Arc::new(SharedLut {
@@ -83,8 +86,8 @@ impl LutRegistry {
 
     /// Sharing statistics (each compensation word is 16 bits, Sec. III-B).
     pub fn stats(&self) -> SharingStats {
-        let t = self.tables.lock().unwrap();
-        let handles = *self.handles.lock().unwrap();
+        let t = lock_unpoisoned(&self.tables);
+        let handles = *lock_unpoisoned(&self.handles);
         let shared_bytes: usize = t.values().map(|l| l.params.c_fixed.len() * 2).sum();
         // A dedicated design stores one table per handle.
         let mut dedicated = 0usize;

@@ -17,6 +17,9 @@
 //! - `obs [--json] [--out F]`      drive demo traffic and print the process
 //!   metrics snapshot (Prometheus-style text, or the schema-versioned JSON)
 //! - `list [--bits 8|16]`          list the registered configurations
+//! - `lint [--root DIR]`           run the in-repo project lint engine over
+//!   the source tree; prints `path:line: [rule] message` findings and exits
+//!   nonzero if any remain
 //!
 //! Every subcommand also accepts `--metrics-out <path>`: on exit, the
 //! process-wide [`scaletrim::obs`] snapshot is written there as JSON.
@@ -64,7 +67,16 @@ fn default_calib_dir() -> String {
     }
 }
 
-fn main() -> Result<()> {
+fn main() {
+    if let Err(e) = run() {
+        // Every failure surfaces as one clean line and a nonzero exit —
+        // a mistyped `--bits eight` must not spray a panic backtrace.
+        eprintln!("error: {e:#}");
+        std::process::exit(2);
+    }
+}
+
+fn run() -> Result<()> {
     // Post-mortem dumps: a panic anywhere prints the flight recorder's
     // newest span/error events before the default backtrace.
     obs::install_panic_hook();
@@ -77,7 +89,7 @@ fn main() -> Result<()> {
             report::run_experiment(&exp, fast)?;
         }
         "list" => {
-            let bits = args.opt_parse_or("bits", 8u32);
+            let bits = args.opt_parse_or("bits", 8u32)?;
             let zoo = match bits {
                 8 => paper_configs_8bit(),
                 16 => paper_configs_16bit(),
@@ -93,10 +105,11 @@ fn main() -> Result<()> {
             t.print();
         }
         "mul" => {
-            let bits = args.opt_parse_or("bits", 8u32);
+            let bits = args.opt_parse_or("bits", 8u32)?;
             let name = args.opt_or("config", "scaleTRIM(3,4)");
-            let a: u64 = args.positional.get(1).expect("usage: mul A B").parse()?;
-            let b: u64 = args.positional.get(2).expect("usage: mul A B").parse()?;
+            let usage = || anyhow::anyhow!("usage: scaletrim mul [--config <name>] A B");
+            let a: u64 = args.positional.get(1).ok_or_else(usage)?.parse()?;
+            let b: u64 = args.positional.get(2).ok_or_else(usage)?.parse()?;
             let m = resolve_config(&name, bits)?;
             let approx = m.mul(a, b);
             let exact = a * b;
@@ -119,7 +132,7 @@ fn main() -> Result<()> {
             );
         }
         "sweep" => {
-            let bits = args.opt_parse_or("bits", 8u32);
+            let bits = args.opt_parse_or("bits", 8u32)?;
             let name = args.opt_or("config", "scaleTRIM(3,4)");
             let m = resolve_config(&name, bits)?;
             let (r, p) = sweep_full(m.as_ref(), SweepSpec::default_for(bits));
@@ -141,7 +154,7 @@ fn main() -> Result<()> {
             let action = args.positional.get(1).map(|s| s.as_str()).unwrap_or("help");
             match action {
                 "export" => {
-                    let bits = args.opt_parse_or("bits", 8u32);
+                    let bits = args.opt_parse_or("bits", 8u32)?;
                     let dir = args.opt_or("dir", &default_calib_dir());
                     let t0 = std::time::Instant::now();
                     let entries = calib::default_export_entries(bits)?;
@@ -226,9 +239,9 @@ fn main() -> Result<()> {
             }
         }
         "lut-gen" => {
-            let bits = args.opt_parse_or("bits", 8u32);
-            let h = args.opt_parse_or("h", 3u32);
-            let m = args.opt_parse_or("m", 4u32);
+            let bits = args.opt_parse_or("bits", 8u32)?;
+            let h = args.opt_parse_or("h", 3u32)?;
+            let m = args.opt_parse_or("m", 4u32)?;
             let p = lut::calibrate(bits, h, m);
             println!(
                 "scaleTRIM({h},{m}) @ {bits}-bit: alpha = {:.4}, ΔEE = {}",
@@ -239,7 +252,7 @@ fn main() -> Result<()> {
             }
         }
         "pareto" => {
-            let bits = args.opt_parse_or("bits", 8u32);
+            let bits = args.opt_parse_or("bits", 8u32)?;
             let zoo = match bits {
                 8 => paper_configs_8bit(),
                 16 => paper_configs_16bit(),
@@ -261,7 +274,7 @@ fn main() -> Result<()> {
             t.print();
         }
         "app" => {
-            let bits = args.opt_parse_or("bits", 8u32);
+            let bits = args.opt_parse_or("bits", 8u32)?;
             let wname = args.opt_or("workload", "blur");
             let cname = args.opt_or("config", "scaleTRIM(3,4)");
             let w = workloads::by_name(&wname).ok_or_else(|| {
@@ -295,7 +308,7 @@ fn main() -> Result<()> {
         "infer" => {
             let model = args.opt_or("model", "lenet");
             let config = args.opt_or("config", "scaleTRIM(4,8)");
-            let limit = args.opt_parse_or("limit", 320usize);
+            let limit = args.opt_parse_or("limit", 320usize)?;
             let dir = find_artifacts_dir()?;
             let set = ArtifactSet::resolve(&dir, &model)?;
             let data = Dataset::load(&set.dataset)?;
@@ -384,7 +397,7 @@ fn main() -> Result<()> {
         }
         "serve" => {
             let model = args.opt_or("model", "lenet");
-            let n_requests = args.opt_parse_or("requests", 1000usize);
+            let n_requests = args.opt_parse_or("requests", 1000usize)?;
             let dir = find_artifacts_dir()?;
             let set = ArtifactSet::resolve(&dir, &model)?;
             let data = Dataset::load(&set.dataset)?;
@@ -425,10 +438,29 @@ fn main() -> Result<()> {
             );
             println!("{}", coord.metrics().summary());
         }
+        "lint" => {
+            // The linted tree defaults to wherever the crate sources are
+            // relative to the invocation directory: the repo root sees
+            // `rust/src`, a shell inside `rust/` sees `src`.
+            let default_root = if std::path::Path::new("rust/src").is_dir() {
+                "rust/src"
+            } else {
+                "src"
+            };
+            let root = args.opt_or("root", default_root);
+            let findings = scaletrim::analysis::lint_tree(std::path::Path::new(&root))?;
+            for f in &findings {
+                println!("{}", f.render());
+            }
+            if !findings.is_empty() {
+                anyhow::bail!("{} lint finding(s) under {root}", findings.len());
+            }
+            eprintln!("lint clean: 0 findings under {root}");
+        }
         _ => {
             println!(
                 "scaletrim — scaleTRIM approximate-multiplier system reproduction\n\n\
-                 usage: scaletrim <repro|list|mul|sweep|lut-gen|calib|pareto|bench|app|infer|serve|obs> [options]\n\
+                 usage: scaletrim <repro|list|mul|sweep|lut-gen|calib|pareto|bench|app|infer|serve|obs|lint> [options]\n\
                  examples:\n  \
                  scaletrim repro --exp table4\n  \
                  scaletrim obs --json --out obs-snapshot.json\n  \
@@ -441,7 +473,8 @@ fn main() -> Result<()> {
                  scaletrim app --workload blur --config 'scaleTRIM(3,4)'\n  \
                  scaletrim repro --exp workloads --fast\n  \
                  scaletrim infer --model lenet --config 'scaleTRIM(4,8)'\n  \
-                 scaletrim serve --model lenet --requests 2000"
+                 scaletrim serve --model lenet --requests 2000\n  \
+                 scaletrim lint --root rust/src"
             );
         }
     }

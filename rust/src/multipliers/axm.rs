@@ -24,7 +24,7 @@ impl Axm {
     /// low×low sub-product at the top level).
     pub fn new(bits: u32, k: u32) -> Self {
         assert!(k == 3 || k == 4);
-        assert!(bits.is_power_of_two() && bits >= 4);
+        assert!(bits.is_power_of_two() && (4..=32).contains(&bits));
         Self { bits, k }
     }
 
@@ -44,6 +44,10 @@ impl Axm {
             return Self::mul2(a, b);
         }
         let half = width / 2;
+        debug_assert!(
+            half < width && width <= u64::BITS / 2,
+            "recursion width exceeds the u64 half-datapath"
+        );
         let mask = (1u64 << half) - 1;
         let (ah, al) = (a >> half, a & mask);
         let (bh, bl) = (b >> half, b & mask);
@@ -75,6 +79,10 @@ impl ApproxMultiplier for Axm {
             // elsewhere; compensate with the expected value of the dropped
             // sub-product's MSB behaviour by OR-ing (cheap hardware).
             let half = w / 2;
+            debug_assert!(
+                half < w && w <= u64::BITS / 2,
+                "datapath width exceeds the u64 half-range"
+            );
             let mask = (1u64 << half) - 1;
             let (ah, al) = (a >> half, a & mask);
             let (bh, bl) = (b >> half, b & mask);

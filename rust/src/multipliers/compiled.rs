@@ -102,6 +102,7 @@ impl ApproxMultiplier for CompiledMul {
 
     #[inline]
     fn mul(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(self.bits <= Self::MAX_BITS, "table width exceeds the tabulation ceiling");
         self.table[((a as usize) << self.bits) | b as usize] as u64
     }
 
@@ -109,6 +110,7 @@ impl ApproxMultiplier for CompiledMul {
         assert_eq!(a.len(), b.len(), "mul_batch: operand slices differ");
         assert_eq!(a.len(), out.len(), "mul_batch: output slice differs");
         let bits = self.bits;
+        debug_assert!(bits <= Self::MAX_BITS, "table width exceeds the tabulation ceiling");
         let table = &self.table[..];
         for ((&x, &y), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
             *o = table[((x as usize) << bits) | y as usize] as u64;

@@ -34,6 +34,7 @@ impl Drum {
             v
         } else {
             let shift = width - self.m;
+            debug_assert!(shift < self.bits, "window shift exceeds the declared width");
             ((v >> shift) | 1) << shift
         }
     }

@@ -53,11 +53,14 @@ impl Dsm {
         }
         let n_lead = leading_one(v);
         let need = n_lead.saturating_sub(self.m - 1); // minimal start
+        #[allow(clippy::expect_used)]
         let pos = *self
             .positions
             .iter()
             .find(|&&p| p >= need)
+            // lint:allow(no-panic): new() builds positions to cover every leading-one index
             .expect("position set covers all leading-one positions");
+        debug_assert!(pos + self.m <= self.bits, "segment window exceeds the operand width");
         ((v >> pos) & ((1u64 << self.m) - 1), pos)
     }
 }
@@ -73,6 +76,10 @@ impl ApproxMultiplier for Dsm {
     fn mul(&self, a: u64, b: u64) -> u64 {
         let (sa, sha) = self.segment(a);
         let (sb, shb) = self.segment(b);
+        debug_assert!(
+            sha + shb <= 2 * (self.bits - self.m),
+            "restore shift exceeds the double-width datapath"
+        );
         (sa * sb) << (sha + shb)
     }
 
@@ -85,6 +92,10 @@ impl ApproxMultiplier for Dsm {
         for ((&x, &y), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
             let (sa, sha) = self.segment(x);
             let (sb, shb) = self.segment(y);
+            debug_assert!(
+                sha + shb <= 2 * (self.bits - self.m),
+                "restore shift exceeds the double-width datapath"
+            );
             *o = (sa * sb) << (sha + shb);
         }
     }

@@ -63,6 +63,10 @@ impl ApproxMultiplier for EvoLibSurrogate {
                 if jj >= self.bits {
                     continue;
                 }
+                debug_assert!(
+                    i < self.bits && jj < self.bits && col < u64::BITS,
+                    "partial-product index exceeds the operand width"
+                );
                 dropped += (((a >> i) & 1) & ((b >> jj) & 1)) << col;
             }
         }

@@ -36,6 +36,7 @@ impl Ilm {
     #[inline]
     fn decompose(&self, v: u64) -> (u32, i64) {
         let n = leading_one(v);
+        debug_assert!(n < self.bits, "leading-one position exceeds the declared width");
         let base = 1u64 << n;
         // Nearest power of two: round up when v ≥ 1.5·2^n (integer compare).
         let (k_char, x) = if 2 * v >= 3 * base && n + 1 < 64 {
@@ -48,6 +49,7 @@ impl Ilm {
         let x = if self.k > 0 {
             // Truncate mantissa magnitude to k fraction bits.
             let q = F - self.k;
+            debug_assert!(q < F, "truncated mantissa width exceeds the F-bit datapath");
             let mag = x.unsigned_abs() >> q << q;
             if x < 0 {
                 -(mag as i64)
@@ -75,6 +77,10 @@ impl ApproxMultiplier for Ilm {
         }
         let (ka, x) = self.decompose(a);
         let (kb, y) = self.decompose(b);
+        debug_assert!(
+            ka <= self.bits && kb <= self.bits,
+            "nearest-one characteristic exceeds the declared width"
+        );
         let term = (1i64 << F) + x + y;
         if term <= 0 {
             return 0;

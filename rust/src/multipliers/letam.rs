@@ -32,6 +32,7 @@ impl Letam {
             v
         } else {
             let shift = width - self.t;
+            debug_assert!(shift < self.bits, "truncation shift exceeds the declared width");
             (v >> shift) << shift
         }
     }

@@ -32,6 +32,7 @@ impl MitchellLodII {
     #[inline]
     fn lod(&self, v: u64) -> u32 {
         let n = leading_one(v);
+        debug_assert!(n < self.bits, "leading-one position exceeds the declared width");
         if self.j == 0 {
             return n;
         }
@@ -62,9 +63,14 @@ impl ApproxMultiplier for MitchellLodII {
         // Mantissa relative to the (possibly wrong) detected position;
         // clamp to < 2 as the datapath width would.
         let mant = |v: u64, n: u32| -> u128 {
+            debug_assert!(n < u64::BITS, "detected position exceeds the u64 range");
             let x = (v as u128) << F >> n; // v / 2^n in 2^-F units, in [1,4)
             (x - (1 << F)).min((2u128 << F) - 1) // x-1 clamped to [0,2)
         };
+        debug_assert!(
+            na < self.bits && nb < self.bits,
+            "detected position exceeds the declared width"
+        );
         let x = mant(a, na);
         let y = mant(b, nb);
         let s = x + y;

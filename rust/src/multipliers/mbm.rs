@@ -38,6 +38,7 @@ impl Mbm {
     #[inline]
     fn raw(&self, a: u64, b: u64) -> Option<(u128, u32)> {
         let d = self.k - 1;
+        debug_assert!(d < self.bits, "truncation distance exceeds the operand width");
         let at = (a >> d) << d;
         let bt = (b >> d) << d;
         if at == 0 || bt == 0 {
@@ -45,6 +46,7 @@ impl Mbm {
         }
         let na = leading_one(at);
         let nb = leading_one(bt);
+        debug_assert!(na < F && nb < F, "leading-one position exceeds the F-bit datapath");
         let x = ((at - (1 << na)) as u128) << (F - na);
         let y = ((bt - (1 << nb)) as u128) << (F - nb);
         let s = x + y;
@@ -66,6 +68,7 @@ impl ApproxMultiplier for Mbm {
         match self.raw(a, b) {
             None => 0,
             Some((term, shift)) => {
+                debug_assert!(shift <= 2 * (self.bits - 1), "output shift exceeds double width");
                 let biased = (term as i128 + self.bias_fixed as i128).max(0) as u128;
                 ((biased << shift) >> F) as u64
             }
@@ -78,6 +81,7 @@ impl ApproxMultiplier for Mbm {
         assert_eq!(a.len(), b.len(), "mul_batch: operand slices differ");
         assert_eq!(a.len(), out.len(), "mul_batch: output slice differs");
         let d = self.k - 1;
+        debug_assert!(d < self.bits, "truncation distance exceeds the operand width");
         let bias = self.bias_fixed as i128;
         let one = 1u128 << F;
         for ((&av, &bv), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
@@ -88,6 +92,7 @@ impl ApproxMultiplier for Mbm {
             } else {
                 let na = leading_one(at);
                 let nb = leading_one(bt);
+                debug_assert!(na < F && nb < F, "leading-one exceeds the F-bit datapath");
                 let x = ((at - (1 << na)) as u128) << (F - na);
                 let y = ((bt - (1 << nb)) as u128) << (F - nb);
                 let s = x + y;
@@ -103,7 +108,10 @@ impl ApproxMultiplier for Mbm {
 /// zeroes the mean error over the full operand space — "minimally biased".
 fn cached_bias(bits: u32, k: u32) -> i64 {
     static CACHE: Mutex<Option<HashMap<(u32, u32), i64>>> = Mutex::new(None);
-    let mut guard = CACHE.lock().unwrap();
+    debug_assert!(bits < u64::BITS, "operand width exceeds the u64 sweep datapath");
+    // Entry-API insertion is all-or-nothing, so a panicking calibration
+    // leaves the map consistent — poison recovery is sound.
+    let mut guard = crate::util::sync::lock_unpoisoned(&CACHE);
     let map = guard.get_or_insert_with(HashMap::new);
     *map.entry((bits, k)).or_insert_with(|| {
         let probe = Mbm {
@@ -118,6 +126,7 @@ fn cached_bias(bits: u32, k: u32) -> i64 {
         let mut n = 0u64;
         let mut visit = |a: u64, b: u64| {
             if let Some((term, shift)) = probe.raw(a, b) {
+                debug_assert!(shift < u64::BITS, "output shift exceeds the u64 range");
                 let exact_term = (a * b) as f64 / (1u64 << shift) as f64;
                 sum += exact_term - term as f64 / (1u64 << F) as f64;
                 n += 1;

@@ -42,6 +42,7 @@ impl ApproxMultiplier for Mitchell {
         let f = self.bits; // fraction bits of the datapath
         let na = leading_one(a);
         let nb = leading_one(b);
+        debug_assert!(na < f && nb < f, "operand exceeds the declared {f}-bit width");
         // X, Y in units of 2^-f.
         let x = ((a - (1 << na)) as u128) << (f - na);
         let y = ((b - (1 << nb)) as u128) << (f - nb);
@@ -61,6 +62,7 @@ impl ApproxMultiplier for Mitchell {
         assert_eq!(a.len(), b.len(), "mul_batch: operand slices differ");
         assert_eq!(a.len(), out.len(), "mul_batch: output slice differs");
         let f = self.bits;
+        debug_assert!(f < u128::BITS, "datapath width exceeds the u128 fixed point");
         let one = 1u128 << f;
         for ((&av, &bv), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
             *o = if av == 0 || bv == 0 {
@@ -68,6 +70,7 @@ impl ApproxMultiplier for Mitchell {
             } else {
                 let na = leading_one(av);
                 let nb = leading_one(bv);
+                debug_assert!(na < f && nb < f, "operand exceeds the declared {f}-bit width");
                 let x = ((av - (1 << na)) as u128) << (f - na);
                 let y = ((bv - (1 << nb)) as u128) << (f - nb);
                 let s = x + y;
@@ -90,6 +93,7 @@ impl ApproxMultiplier for Mitchell {
     fn mul_batch_simd(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
         use crate::simd;
         let f = self.bits;
+        debug_assert!(f < u128::BITS, "datapath width exceeds the u128 fixed point");
         let one = 1u128 << f;
         simd::drive_lanes(
             a,
@@ -103,6 +107,7 @@ impl ApproxMultiplier for Mitchell {
                 let nb = simd::leading_one_lanes(&ym);
                 let mut r = [0u64; simd::LANES];
                 for (i, r_i) in r.iter_mut().enumerate() {
+                    debug_assert!(na[i] < f && nb[i] < f, "operand exceeds the {f}-bit width");
                     let x = ((xm[i] - (1 << na[i])) as u128) << (f - na[i]);
                     let y = ((ym[i] - (1 << nb[i])) as u128) << (f - nb[i]);
                     let s = x + y;

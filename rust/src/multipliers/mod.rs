@@ -196,6 +196,7 @@ pub fn signed_mul(m: &dyn ApproxMultiplier, a: i64, b: i64) -> i64 {
 /// integer in units of `2^-h`.
 #[inline]
 pub fn truncate_fraction(v: u64, n: u32, h: u32) -> u64 {
+    debug_assert!(n < u64::BITS && h < u64::BITS, "fraction widths exceed the u64 range");
     let frac = v & ((1u64 << n) - 1); // bits below the leading one
     if n >= h {
         frac >> (n - h)
@@ -218,12 +219,15 @@ pub fn paper_configs_16bit() -> Vec<Box<dyn ApproxMultiplier>> {
     build_zoo(16)
 }
 
+#[allow(clippy::expect_used)]
 fn build_zoo(bits: u32) -> Vec<Box<dyn ApproxMultiplier>> {
     DesignSpec::enumerate(bits)
+        // lint:allow(no-panic): callers pass registry widths only; the zoo tests pin this
         .expect("registry widths are always enumerable")
         .iter()
         .map(|s| {
             s.build(bits)
+                // lint:allow(no-panic): a rejected registry spec is a registration bug
                 .unwrap_or_else(|e| panic!("registry spec {s} invalid at {bits} bits: {e}"))
         })
         .collect()

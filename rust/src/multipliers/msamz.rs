@@ -36,6 +36,7 @@ impl Msamz {
             return (v, 0, 0);
         }
         let shift = width - self.m;
+        debug_assert!(shift < u64::BITS, "window shift exceeds the u64 range");
         (v >> shift, v & ((1u64 << shift) - 1), shift)
     }
 }
@@ -53,6 +54,10 @@ impl ApproxMultiplier for Msamz {
         }
         let (ah, al, sa) = self.windows(a);
         let (bh, bl, sb) = self.windows(b);
+        debug_assert!(
+            sa < self.bits && sb < self.bits,
+            "window shift exceeds the declared width"
+        );
         // Exact product of the high windows (an m×m multiplier).
         let hh = (ah * bh) << (sa + sb);
         // One-dominating approximation of the cross terms: the tails are
@@ -63,6 +68,7 @@ impl ApproxMultiplier for Msamz {
                 return 0;
             }
             let keep = self.k.min(shift);
+            debug_assert!(keep <= shift && shift < u64::BITS, "tail shift exceeds the u64 range");
             tail >> (shift - keep) << (shift - keep)
         };
         let al_c = compress(al, sa);

@@ -32,6 +32,7 @@ impl PiecewiseLinear {
     /// `segments = 4`. Panics on invalid parameters —
     /// [`PiecewiseLinear::try_new`] is the typed form.
     pub fn new(bits: u32, h: u32, segments: u32) -> Self {
+        // lint:allow(no-panic): documented panicking constructor; try_new is the typed form
         Self::try_new(bits, h, segments).unwrap_or_else(|e| panic!("{e}"))
     }
 
@@ -81,6 +82,10 @@ impl ApproxMultiplier for PiecewiseLinear {
         }
         let na = leading_one(a);
         let nb = leading_one(b);
+        debug_assert!(
+            na < self.bits && nb < self.bits,
+            "leading-one position exceeds the declared width"
+        );
         let s_int = truncate_fraction(a, na, self.h) + truncate_fraction(b, nb, self.h);
         let (alpha, beta) = self.coef[self.segment(s_int)];
         // term = 1 + α·s + β in 2^-F fixed point.

@@ -31,6 +31,7 @@ impl Roba {
             return 0;
         }
         let n = leading_one(v);
+        debug_assert!(n < u64::BITS, "leading-one position exceeds the u64 range");
         let base = 1u64 << n;
         // threshold 1.5·2^n, compared as 2v ≥ 3·2^n to stay in integers
         if 2 * v >= 3 * base {

@@ -39,6 +39,7 @@ impl ScaleTrim {
     /// `m == 0` disables compensation (paper ST(h,0)). Panics on invalid
     /// parameters — [`ScaleTrim::try_new`] is the typed form.
     pub fn new(bits: u32, h: u32, m: u32) -> Self {
+        // lint:allow(no-panic): documented panicking constructor; try_new is the typed form
         Self::try_new(bits, h, m).unwrap_or_else(|e| panic!("{e}"))
     }
 
@@ -142,6 +143,10 @@ impl ScaleTrim {
 #[inline(always)]
 fn lin_term(s: u64, h: u32, lin_shift: u32) -> i64 {
     const F: u32 = COMP_FRAC_BITS;
+    debug_assert!(
+        h <= F && lin_shift < i64::BITS,
+        "linearization shift exceeds the i64 datapath"
+    );
     (1i64 << F) + ((s as i64) << (F - h)) + ((s as i64) << lin_shift)
 }
 
@@ -194,6 +199,10 @@ impl ApproxMultiplier for ScaleTrim {
         // (2) LOD.
         let na = leading_one(a);
         let nb = leading_one(b);
+        debug_assert!(
+            na < self.bits && nb < self.bits,
+            "leading-one position exceeds the declared width"
+        );
 
         // (3) truncation to X_h, Y_h (units of 2^-h).
         let xh = truncate_fraction(a, na, h);
@@ -236,6 +245,10 @@ impl ApproxMultiplier for ScaleTrim {
             } else {
                 let na = leading_one(x);
                 let nb = leading_one(y);
+                debug_assert!(
+                    na < self.bits && nb < self.bits,
+                    "leading-one position exceeds the declared width"
+                );
                 let s = truncate_fraction(x, na, h) + truncate_fraction(y, nb, h);
                 let mut term = lin_term(s, h, lin_shift);
                 if m > 0 {
@@ -273,6 +286,10 @@ impl ApproxMultiplier for ScaleTrim {
                 let nb = simd::leading_one_lanes(&ym);
                 let mut r = [0u64; simd::LANES];
                 for (i, r_i) in r.iter_mut().enumerate() {
+                    debug_assert!(
+                        na[i] < self.bits && nb[i] < self.bits,
+                        "lane leading-one exceeds the declared width"
+                    );
                     let s = truncate_fraction(xm[i], na[i], h)
                         + truncate_fraction(ym[i], nb[i], h);
                     let mut term = lin_term(s, h, lin_shift);

@@ -43,8 +43,10 @@ impl ApproxMultiplier for Scdm {
             let mut count = carry;
             let lo = col.saturating_sub(n - 1);
             let hi = col.min(n - 1);
+            debug_assert!(col < u64::BITS, "result column exceeds the u64 range");
             for i in lo..=hi {
                 let j = col - i;
+                debug_assert!(i < n && j < n, "partial-product index exceeds the operand width");
                 count += ((a >> i) & 1) & ((b >> j) & 1);
             }
             result |= (count & 1) << col;

@@ -48,6 +48,10 @@ impl ApproxMultiplier for Tosam {
         let (t, h) = (self.t, self.h);
         let na = leading_one(a);
         let nb = leading_one(b);
+        debug_assert!(
+            na < self.bits && nb < self.bits,
+            "leading-one position exceeds the declared width"
+        );
         // Adder part: h-bit truncated fractions (units 2^-h).
         let xh = truncate_fraction(a, na, h);
         let yh = truncate_fraction(b, nb, h);
@@ -75,12 +79,20 @@ impl ApproxMultiplier for Tosam {
         let one = 1u128 << F;
         let sum_shift = F - h;
         let prod_shift = F - 2 * (t + 1);
+        debug_assert!(
+            sum_shift < F && prod_shift < F,
+            "hoisted shifts exceed the F-bit datapath"
+        );
         for ((&av, &bv), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
             *o = if av == 0 || bv == 0 {
                 0
             } else {
                 let na = leading_one(av);
                 let nb = leading_one(bv);
+                debug_assert!(
+                    na < self.bits && nb < self.bits,
+                    "leading-one position exceeds the declared width"
+                );
                 let xh = truncate_fraction(av, na, h);
                 let yh = truncate_fraction(bv, nb, h);
                 let xt1 = (truncate_fraction(av, na, t) << 1) | 1;
@@ -103,6 +115,10 @@ impl ApproxMultiplier for Tosam {
         let one = 1u128 << F;
         let sum_shift = F - h;
         let prod_shift = F - 2 * (t + 1);
+        debug_assert!(
+            sum_shift < F && prod_shift < F,
+            "hoisted shifts exceed the F-bit datapath"
+        );
         simd::drive_lanes(
             a,
             b,
@@ -115,6 +131,10 @@ impl ApproxMultiplier for Tosam {
                 let nb = simd::leading_one_lanes(&ym);
                 let mut r = [0u64; simd::LANES];
                 for (i, r_i) in r.iter_mut().enumerate() {
+                    debug_assert!(
+                        na[i] < self.bits && nb[i] < self.bits,
+                        "lane leading-one exceeds the declared width"
+                    );
                     let xh = truncate_fraction(xm[i], na[i], h);
                     let yh = truncate_fraction(ym[i], nb[i], h);
                     let xt1 = (truncate_fraction(xm[i], na[i], t) << 1) | 1;

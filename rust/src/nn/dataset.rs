@@ -38,7 +38,9 @@ impl Dataset {
         if raw.len() < 24 || &raw[0..4] != b"STDS" {
             bail!("not an STDS file");
         }
+        #[allow(clippy::unwrap_used)]
         let rd = |i: usize| -> usize {
+            // lint:allow(no-panic): the slice is exactly 4 bytes, try_into cannot fail
             u32::from_le_bytes(raw[4 + 4 * i..8 + 4 * i].try_into().unwrap()) as usize
         };
         let (n, c, h, w, n_classes) = (rd(0), rd(1), rd(2), rd(3), rd(4));

@@ -25,10 +25,10 @@ pub fn evaluate_accuracy(
     limit: Option<usize>,
 ) -> AccuracyReport {
     static SPAN: std::sync::OnceLock<crate::obs::SpanHandle> = std::sync::OnceLock::new();
-    let _span = SPAN.get_or_init(|| crate::obs::span("nn.evaluate")).start();
+    let _span = SPAN.get_or_init(|| crate::obs::span(crate::obs::names::span::NN_EVALUATE)).start();
     let n = limit.unwrap_or(data.n).min(data.n);
     crate::obs::registry()
-        .counter("nn_images_total", &[])
+        .counter(crate::obs::names::metric::NN_IMAGES_TOTAL, &[])
         .add(n as u64);
     let nthreads = crate::util::parallel::workers().min(n.max(1));
     let chunk = n.div_ceil(nthreads);
@@ -58,7 +58,7 @@ pub fn evaluate_accuracy(
             }));
         }
         for h in handles {
-            let (h1, h5) = h.join().expect("eval worker panicked");
+            let (h1, h5) = h.join().unwrap_or_else(|e| std::panic::resume_unwind(e));
             hits1 += h1;
             hits5 += h5;
         }

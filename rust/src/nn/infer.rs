@@ -39,7 +39,7 @@ impl QuantizedCnn {
         static SPANS: std::sync::OnceLock<(crate::obs::SpanHandle, crate::obs::SpanHandle)> =
             std::sync::OnceLock::new();
         let (conv_span, fc_span) =
-            SPANS.get_or_init(|| (crate::obs::span("nn.layer.conv"), crate::obs::span("nn.layer.fc")));
+            SPANS.get_or_init(|| (crate::obs::span(crate::obs::names::span::NN_LAYER_CONV), crate::obs::span(crate::obs::names::span::NN_LAYER_FC)));
         // Activations carried as u8 planes [c][h][w].
         let mut act: Vec<u8> = image.to_vec();
         let (mut c, mut h, mut w) = (c0, h0, w0);

@@ -20,7 +20,7 @@ use std::sync::Arc;
 /// Build the signed product LUT for a multiplier model (one batched pass).
 pub fn build_lut(m: &dyn ApproxMultiplier) -> Vec<i32> {
     static SPAN: std::sync::OnceLock<crate::obs::SpanHandle> = std::sync::OnceLock::new();
-    let _span = SPAN.get_or_init(|| crate::obs::span("nn.build_lut")).start();
+    let _span = SPAN.get_or_init(|| crate::obs::span(crate::obs::names::span::NN_BUILD_LUT)).start();
     const N: usize = 256 * 256;
     // Operand planes in LUT index order (idx = a·256 + w + 128): first
     // operand the weight magnitude, second the activation — the same

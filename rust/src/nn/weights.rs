@@ -79,6 +79,8 @@ impl QuantizedWeights {
             if *pos + 4 > raw.len() {
                 bail!("STWT truncated at {pos}");
             }
+            #[allow(clippy::unwrap_used)]
+            // lint:allow(no-panic): the slice is exactly 4 bytes, try_into cannot fail
             let v = u32::from_le_bytes(raw[*pos..*pos + 4].try_into().unwrap());
             *pos += 4;
             Ok(v)
@@ -108,9 +110,12 @@ impl QuantizedWeights {
             if pos + n_w + 4 * n_b > raw.len() {
                 bail!("STWT truncated in layer payload");
             }
+            // lint:allow(narrow-cast): intentional two's-complement reinterpret of stored weight bytes
             let w: Vec<i8> = raw[pos..pos + n_w].iter().map(|&b| b as i8).collect();
             pos += n_w;
+            #[allow(clippy::unwrap_used)]
             let bias: Vec<i32> = (0..n_b)
+                // lint:allow(no-panic): the slice is exactly 4 bytes, try_into cannot fail
                 .map(|i| i32::from_le_bytes(raw[pos + 4 * i..pos + 4 * i + 4].try_into().unwrap()))
                 .collect();
             pos += 4 * n_b;

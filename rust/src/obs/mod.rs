@@ -35,6 +35,7 @@
 //! [`Metrics`]: crate::coordinator::Metrics
 
 mod export;
+pub mod names;
 mod recorder;
 mod registry;
 mod span;
@@ -96,7 +97,7 @@ pub fn recorder() -> &'static FlightRecorder {
 /// `scaletrim_span_seconds{span=name}`. Create once per site (cache in a
 /// `OnceLock` static or a pre-loop local), then `start()` per occurrence.
 pub fn span(name: &'static str) -> SpanHandle {
-    let hist = registry().histogram("scaletrim_span_seconds", &[("span", name)]);
+    let hist = registry().histogram(names::metric::SPAN_SECONDS, &[("span", name)]);
     SpanHandle::new(name, recorder().intern(name), hist)
 }
 
@@ -107,7 +108,7 @@ pub fn span_with(name: &'static str, extra: &[(&'static str, &str)]) -> SpanHand
     let mut labels: Vec<(&'static str, &str)> = Vec::with_capacity(extra.len() + 1);
     labels.push(("span", name));
     labels.extend_from_slice(extra);
-    let hist = registry().histogram("scaletrim_span_seconds", &labels);
+    let hist = registry().histogram(names::metric::SPAN_SECONDS, &labels);
     SpanHandle::new(name, recorder().intern(name), hist)
 }
 
@@ -115,7 +116,7 @@ pub fn span_with(name: &'static str, extra: &[(&'static str, &str)]) -> SpanHand
 /// `scaletrim_errors_total{source=name}` counter.
 pub fn record_error(name: &'static str) {
     recorder().record_error(name);
-    registry().counter("scaletrim_errors_total", &[("source", name)]).inc();
+    registry().counter(names::metric::ERRORS_TOTAL, &[("source", name)]).inc();
 }
 
 /// Install a panic hook that prints the flight recorder's newest events
@@ -150,22 +151,22 @@ pub fn install_panic_hook() {
 /// (shut down or drained) — in-flight requests legitimately unbalance a
 /// live snapshot.
 pub fn check_invariants(s: &Snapshot) -> Result<(), String> {
-    let req = s.counter_sum("coordinator_requests_total");
-    let ok = s.counter_sum("coordinator_responses_ok_total");
-    let err = s.counter_sum("coordinator_responses_error_total");
+    let req = s.counter_sum(names::metric::COORD_REQUESTS_TOTAL);
+    let ok = s.counter_sum(names::metric::COORD_RESPONSES_OK_TOTAL);
+    let err = s.counter_sum(names::metric::COORD_RESPONSES_ERROR_TOTAL);
     if req != ok + err {
         return Err(format!(
             "request conservation broken: {req} submitted != {ok} ok + {err} errored"
         ));
     }
     for id in s.gauges.keys() {
-        if id.name != "coordinator_queue_depth" {
+        if id.name != names::metric::COORD_QUEUE_DEPTH {
             continue;
         }
         let has_hist = s
             .hists
             .keys()
-            .any(|h| h.name == "coordinator_latency_seconds" && h.labels == id.labels);
+            .any(|h| h.name == names::metric::COORD_LATENCY_SECONDS && h.labels == id.labels);
         if !has_hist {
             return Err(format!(
                 "lane {} declares a queue-depth gauge but no latency sketch",

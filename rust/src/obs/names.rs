@@ -1,0 +1,168 @@
+//! Central name tables for the observability plane: every metric, span,
+//! and error-source label the crate registers lives here as a named
+//! constant.
+//!
+//! Inline name literals at registration sites drift — a dashboard queries
+//! `coordinator_latency_seconds` while a refactored call site registers
+//! `coord_latency_seconds` and the series silently forks. The `obs-names`
+//! lint rule ([`crate::analysis`]) rejects string literals at `span(..)`,
+//! `counter(..)`, `gauge(..)`, `histogram(..)` and `record_error(..)`
+//! call sites outside this module, so the full vocabulary is enumerable
+//! in one place (and is what `check_invariants` and the CI smoke step
+//! key on). Tests may still use ad-hoc literal names — they name
+//! throwaway series, not the shipped vocabulary.
+
+/// Metric (counter / gauge / histogram) names, Prometheus-style.
+pub mod metric {
+    /// Span-duration histogram; labelled `span=<name>` (plus extras).
+    pub const SPAN_SECONDS: &str = "scaletrim_span_seconds";
+    /// Error events by `source=<name>`.
+    pub const ERRORS_TOTAL: &str = "scaletrim_errors_total";
+
+    /// Requests submitted to a coordinator.
+    pub const COORD_REQUESTS_TOTAL: &str = "coordinator_requests_total";
+    /// Requests answered successfully.
+    pub const COORD_RESPONSES_OK_TOTAL: &str = "coordinator_responses_ok_total";
+    /// Requests answered with an error.
+    pub const COORD_RESPONSES_ERROR_TOTAL: &str = "coordinator_responses_error_total";
+    /// Batches executed.
+    pub const COORD_BATCHES_TOTAL: &str = "coordinator_batches_total";
+    /// Sum of batch occupancies (÷ batches = mean occupancy).
+    pub const COORD_BATCH_OCCUPANCY_TOTAL: &str = "coordinator_batch_occupancy_total";
+    /// Backend inference failures.
+    pub const COORD_BACKEND_ERRORS_TOTAL: &str = "coordinator_backend_errors_total";
+    /// Malformed-request parse failures.
+    pub const COORD_PARSE_ERRORS_TOTAL: &str = "coordinator_parse_errors_total";
+    /// End-to-end request latency sketch; per-lane with `lane=<name>`.
+    pub const COORD_LATENCY_SECONDS: &str = "coordinator_latency_seconds";
+    /// Instantaneous queue depth per lane.
+    pub const COORD_QUEUE_DEPTH: &str = "coordinator_queue_depth";
+
+    /// Images pushed through NN evaluation.
+    pub const NN_IMAGES_TOTAL: &str = "nn_images_total";
+    /// Operand pairs swept, by `family=<design family>`.
+    pub const SWEEP_PAIRS_TOTAL: &str = "sweep_pairs_total";
+    /// Sweep throughput sketch, by family.
+    pub const SWEEP_PAIRS_PER_S: &str = "sweep_pairs_per_s";
+    /// Approximate MACs executed, by `workload=<name>`.
+    pub const WORKLOAD_MACS_TOTAL: &str = "workload_macs_total";
+
+    /// Calibration-cache entries resident.
+    pub const CALIB_CACHE_ENTRIES: &str = "calib_cache_entries";
+    /// Calibration-cache hits.
+    pub const CALIB_CACHE_HITS: &str = "calib_cache_hits";
+    /// Calibration-cache misses (computed entries).
+    pub const CALIB_CACHE_MISSES: &str = "calib_cache_misses";
+    /// Entries warm-started from the artifact store.
+    pub const CALIB_CACHE_WARM_LOADED: &str = "calib_cache_warm_loaded";
+    /// Panicking-init retries recovered by the cache.
+    pub const CALIB_CACHE_INIT_RETRIES: &str = "calib_cache_init_retries";
+    /// Bytes resident under sharing.
+    pub const CALIB_CACHE_RESIDENT_BYTES: &str = "calib_cache_resident_bytes";
+    /// Bytes a dedicated-constants design would hold.
+    pub const CALIB_CACHE_DEDICATED_BYTES: &str = "calib_cache_dedicated_bytes";
+    /// Artifact-store exports.
+    pub const CALIB_STORE_EXPORTS_TOTAL: &str = "calib_store_exports_total";
+    /// Artifact-store successful loads.
+    pub const CALIB_STORE_LOADS_TOTAL: &str = "calib_store_loads_total";
+    /// Artifact-store loads rejected by verification.
+    pub const CALIB_STORE_VERIFY_FAILURES_TOTAL: &str = "calib_store_verify_failures_total";
+}
+
+/// Span names (the `span=` label vocabulary of
+/// [`metric::SPAN_SECONDS`]).
+pub mod span {
+    /// One batch through a coordinator lane (pop → infer → reply).
+    pub const COORD_LANE_BATCH: &str = "coordinator.lane.batch";
+    /// Product-LUT construction for NN inference.
+    pub const NN_BUILD_LUT: &str = "nn.build_lut";
+    /// Whole-set NN evaluation.
+    pub const NN_EVALUATE: &str = "nn.evaluate";
+    /// One convolution layer.
+    pub const NN_LAYER_CONV: &str = "nn.layer.conv";
+    /// One fully-connected layer.
+    pub const NN_LAYER_FC: &str = "nn.layer.fc";
+    /// One workload run, labelled `workload=<name>`.
+    pub const WORKLOAD_RUN: &str = "workload.run";
+    /// One exhaustive operand-space sweep, labelled `family=<name>`.
+    pub const SWEEP_EXHAUSTIVE: &str = "sweep.exhaustive";
+    /// One sampled operand-space sweep, labelled `family=<name>`.
+    pub const SWEEP_SAMPLED: &str = "sweep.sampled";
+}
+
+/// Error-source names (the `source=` label vocabulary of
+/// [`metric::ERRORS_TOTAL`]).
+pub mod error_source {
+    /// Coordinator backend inference failure.
+    pub const COORD_BACKEND: &str = "coordinator.backend";
+    /// Calibration artifact failed load-time verification.
+    pub const CALIB_STORE_VERIFY: &str = "calib.store.verify";
+}
+
+#[cfg(test)]
+mod tests {
+    /// The name tables are the enumerable vocabulary — no duplicates, and
+    /// every entry follows the naming grammar (snake_case metrics,
+    /// dot.case spans/sources).
+    #[test]
+    fn vocabulary_is_unique_and_well_formed() {
+        let metrics = [
+            super::metric::SPAN_SECONDS,
+            super::metric::ERRORS_TOTAL,
+            super::metric::COORD_REQUESTS_TOTAL,
+            super::metric::COORD_RESPONSES_OK_TOTAL,
+            super::metric::COORD_RESPONSES_ERROR_TOTAL,
+            super::metric::COORD_BATCHES_TOTAL,
+            super::metric::COORD_BATCH_OCCUPANCY_TOTAL,
+            super::metric::COORD_BACKEND_ERRORS_TOTAL,
+            super::metric::COORD_PARSE_ERRORS_TOTAL,
+            super::metric::COORD_LATENCY_SECONDS,
+            super::metric::COORD_QUEUE_DEPTH,
+            super::metric::NN_IMAGES_TOTAL,
+            super::metric::SWEEP_PAIRS_TOTAL,
+            super::metric::SWEEP_PAIRS_PER_S,
+            super::metric::WORKLOAD_MACS_TOTAL,
+            super::metric::CALIB_CACHE_ENTRIES,
+            super::metric::CALIB_CACHE_HITS,
+            super::metric::CALIB_CACHE_MISSES,
+            super::metric::CALIB_CACHE_WARM_LOADED,
+            super::metric::CALIB_CACHE_INIT_RETRIES,
+            super::metric::CALIB_CACHE_RESIDENT_BYTES,
+            super::metric::CALIB_CACHE_DEDICATED_BYTES,
+            super::metric::CALIB_STORE_EXPORTS_TOTAL,
+            super::metric::CALIB_STORE_LOADS_TOTAL,
+            super::metric::CALIB_STORE_VERIFY_FAILURES_TOTAL,
+        ];
+        let spans = [
+            super::span::COORD_LANE_BATCH,
+            super::span::NN_BUILD_LUT,
+            super::span::NN_EVALUATE,
+            super::span::NN_LAYER_CONV,
+            super::span::NN_LAYER_FC,
+            super::span::WORKLOAD_RUN,
+            super::span::SWEEP_EXHAUSTIVE,
+            super::span::SWEEP_SAMPLED,
+        ];
+        let sources = [
+            super::error_source::COORD_BACKEND,
+            super::error_source::CALIB_STORE_VERIFY,
+        ];
+        let mut all: Vec<&str> = metrics.iter().chain(&spans).chain(&sources).copied().collect();
+        let before = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(before, all.len(), "duplicate name in the obs vocabulary");
+        for m in metrics {
+            assert!(
+                m.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'),
+                "metric {m:?} not snake_case"
+            );
+        }
+        for s in spans.iter().chain(&sources) {
+            assert!(
+                s.chars().all(|c| c.is_ascii_lowercase() || c == '.' || c == '_'),
+                "span/source {s:?} not dot.case"
+            );
+        }
+    }
+}

@@ -121,7 +121,7 @@ fn time_kernel(method: &BenchMethod, elems: usize, mut pass: impl FnMut()) -> f6
         let secs = t0.elapsed().as_secs_f64();
         samples.push((passes * elems as u64) as f64 / secs / 1e6);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(f64::total_cmp);
     samples[samples.len() / 2]
 }
 
@@ -222,9 +222,11 @@ pub fn measure_config(
 /// worked example, scaleTRIM(5,8) the accuracy flagship, TOSAM(1,5) and
 /// TOSAM(3,7) the Table 4 anchors.
 fn targets() -> Vec<(Box<dyn ApproxMultiplier>, u32, Operands)> {
+    #[allow(clippy::expect_used)]
     let stq = |bits: u32, h: u32, m: u32| -> Box<dyn ApproxMultiplier> {
         Box::new(
             ScaleTrim::with_strategy(bits, h, m, CalibStrategy::Quantile)
+                // lint:allow(no-panic): the bench targets are registry rows with pinned params
                 .expect("registry scaleTRIM-Q params are valid"),
         )
     };

@@ -102,7 +102,9 @@ pub fn ablation_constants() -> Result<()> {
     ];
     for ((h, m), rep) in reported {
         let ours = ScaleTrim::new(8, h, m);
-        let paper = ScaleTrim::with_params(8, paper_table7_params(h, m).unwrap());
+        let constants = paper_table7_params(h, m)
+            .ok_or_else(|| anyhow::anyhow!("no Table-7 constants for ({h},{m})"))?;
+        let paper = ScaleTrim::with_params(8, constants);
         t.row(vec![
             format!("scaleTRIM({h},{m})"),
             f2(exhaustive_sweep(&ours).mred_pct),

@@ -93,7 +93,9 @@ pub fn fig6() -> Result<()> {
 /// and our calibration.
 pub fn fig7() -> Result<()> {
     let (a, b) = (48u64, 81u64);
-    let paper = ScaleTrim::with_params(8, paper_table7_params(3, 4).unwrap());
+    let constants = paper_table7_params(3, 4)
+        .ok_or_else(|| anyhow::anyhow!("no Table-7 constants for (3,4)"))?;
+    let paper = ScaleTrim::with_params(8, constants);
     let ours = ScaleTrim::new(8, 3, 4);
     println!("Fig. 7 — worked example: A={a} (0b{a:08b}), B={b} (0b{b:08b})");
     println!("  n_A=5, n_B=6; X=0.5, Y=0.265625; X_3=0.100₂=0.5, Y_3=0.010₂=0.25");
@@ -130,7 +132,12 @@ pub fn table7() -> Result<()> {
             &["segment", "h=3", "h=4", "h=5", "h=6"],
         );
         let params: Vec<_> = (3..=6).map(|h| calibrate(8, h, m)).collect();
-        let paper: Vec<_> = (3..=6).map(|h| paper_table7_params(h, m).unwrap()).collect();
+        let paper: Vec<_> = (3..=6)
+            .map(|h| {
+                paper_table7_params(h, m)
+                    .ok_or_else(|| anyhow::anyhow!("no Table-7 constants for ({h},{m})"))
+            })
+            .collect::<Result<_>>()?;
         for seg in 0..m as usize {
             let lo = 2.0 * seg as f64 / m as f64;
             let hi = 2.0 * (seg + 1) as f64 / m as f64;

@@ -258,7 +258,7 @@ pub fn headline_pairs(iso_tolerance_pct: f64) -> Result<Vec<HeadlinePair>> {
         let Some(tosam) = tosam_points.iter().min_by(|a, b| {
             let da = (a.hw.pdp_fj - st.hw.pdp_fj).abs();
             let db = (b.hw.pdp_fj - st.hw.pdp_fj).abs();
-            da.partial_cmp(&db).unwrap()
+            da.total_cmp(&db)
         }) else {
             continue;
         };
@@ -285,7 +285,7 @@ pub fn headline_best(pairs: &[HeadlinePair]) -> Option<&HeadlinePair> {
     pairs.iter().max_by(|a, b| {
         let ka = a.mared_impr_pct.min(a.stdared_impr_pct);
         let kb = b.mared_impr_pct.min(b.stdared_impr_pct);
-        ka.partial_cmp(&kb).unwrap()
+        ka.total_cmp(&kb)
     })
 }
 

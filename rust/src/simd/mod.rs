@@ -130,7 +130,11 @@ pub fn drive_lanes(
         .zip(b_main.chunks_exact(LANES))
         .zip(out_main.chunks_exact_mut(LANES))
     {
+        #[allow(clippy::expect_used)]
+        // lint:allow(no-panic): chunks_exact(LANES) guarantees the width
         let xa: &Lane = ca.try_into().expect("chunk is LANES wide");
+        #[allow(clippy::expect_used)]
+        // lint:allow(no-panic): chunks_exact(LANES) guarantees the width
         let xb: &Lane = cb.try_into().expect("chunk is LANES wide");
         co.copy_from_slice(&kernel(xa, xb));
     }

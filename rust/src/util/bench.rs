@@ -146,7 +146,7 @@ impl Bencher {
             samples.push(dt.as_secs_f64() / batch as f64);
             iters += batch;
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(|a, b| a.total_cmp(b));
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
         let median = samples[samples.len() / 2];
         let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];

@@ -5,6 +5,25 @@
 
 use std::collections::HashMap;
 
+/// A typed option-parse failure: which `--key`, which raw value. `main`
+/// renders it as a one-line usage message and exits nonzero — no panic,
+/// no backtrace spray at the user.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    /// The option (without `--`) whose value was rejected.
+    pub key: String,
+    /// The raw value that failed to parse.
+    pub value: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "--{}: cannot parse {:?}", self.key, self.value)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
 /// Parsed command-line arguments.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -25,12 +44,9 @@ impl Args {
             if let Some(rest) = arg.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
-                } else if iter
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
+                } else if let Some(v) =
+                    iter.next_if(|n| !n.starts_with("--"))
                 {
-                    let v = iter.next().unwrap();
                     out.options.insert(rest.to_string(), v);
                 } else {
                     out.flags.push(rest.to_string());
@@ -57,14 +73,20 @@ impl Args {
         self.opt(key).unwrap_or(default).to_string()
     }
 
-    /// Typed option with default; panics with a friendly message on a parse
-    /// failure (CLI surface, not library surface).
-    pub fn opt_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+    /// Typed option with default. A present-but-malformed value is a
+    /// typed [`ParseError`], not a panic — the binary turns it into a
+    /// clean usage message and a nonzero exit.
+    pub fn opt_parse_or<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+    ) -> Result<T, ParseError> {
         match self.opt(key) {
-            None => default,
-            Some(s) => s
-                .parse()
-                .unwrap_or_else(|_| panic!("--{key}: cannot parse {s:?}")),
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| ParseError {
+                key: key.to_string(),
+                value: s.to_string(),
+            }),
         }
     }
 
@@ -94,8 +116,17 @@ mod tests {
     #[test]
     fn typed_defaults() {
         let a = parse(&["--h", "4"]);
-        assert_eq!(a.opt_parse_or("h", 3u32), 4);
-        assert_eq!(a.opt_parse_or("m", 8u32), 8);
+        assert_eq!(a.opt_parse_or("h", 3u32), Ok(4));
+        assert_eq!(a.opt_parse_or("m", 8u32), Ok(8));
+    }
+
+    #[test]
+    fn malformed_value_is_typed_error_not_panic() {
+        let a = parse(&["--bits", "eight"]);
+        let err = a.opt_parse_or("bits", 8u32).unwrap_err();
+        assert_eq!(err.key, "bits");
+        assert_eq!(err.value, "eight");
+        assert_eq!(err.to_string(), "--bits: cannot parse \"eight\"");
     }
 
     #[test]

@@ -3,8 +3,8 @@
 //! from crates.io live here instead: a PRNG ([`rng`]), summary statistics
 //! ([`stats`]), a tiny CLI parser ([`cli`]), a JSON writer ([`json`]), a
 //! criterion-style micro-benchmark harness ([`bench`]), a property-testing
-//! rig with shrinking ([`prop`]) and the shared worker-thread policy
-//! ([`parallel`]).
+//! rig with shrinking ([`prop`]), the shared worker-thread policy
+//! ([`parallel`]) and the poison-safe locking helpers ([`sync`]).
 pub mod bench;
 pub mod cli;
 pub mod json;
@@ -12,4 +12,5 @@ pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod table;

@@ -127,6 +127,7 @@ impl Runner {
             if let Err(msg) = prop(&mut g) {
                 let choices = g.choices.clone();
                 let (shrunk, final_msg) = self.shrink(&mut prop, choices, msg);
+                // lint:allow(no-panic): a property failure must abort the test with its counterexample
                 panic!(
                     "property {:?} failed (seed={}, case={}):\n  {}\n  shrunk choices: {:?}",
                     self.name, self.seed, case, final_msg, shrunk

@@ -1,0 +1,72 @@
+//! Poison-safe locking helpers — the one sanctioned way to take a
+//! `std::sync::Mutex` in this crate.
+//!
+//! `Mutex::lock().unwrap()` turns one panicking holder into a permanent
+//! denial of service for every later acquirer: the mutex stays poisoned
+//! and each subsequent `unwrap()` panics in turn (the coordinator's
+//! batch queue wedging every submitter was the shipped instance of this
+//! class). Every lock in this crate protects state that is never left
+//! half-written across a panic — map bookkeeping, queue push/pop,
+//! intern tables — so recovering the guard is always sound, and the
+//! calibration cache and the obs plane already relied on exactly this
+//! contract. These helpers centralise it; the `raw-lock` lint rule
+//! ([`crate::analysis`]) keeps new code on them.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard from a poisoned state. Sound
+/// whenever the protected invariant is re-established before any panic
+/// can unwind through the critical section (the crate-wide contract —
+/// see the module docs).
+pub fn lock_unpoisoned<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait`], recovering the guard from a poisoned state.
+pub fn wait_unpoisoned<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait_timeout`], recovering the guard from a poisoned state.
+pub fn wait_timeout_unpoisoned<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(g, dur).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::{Arc, Mutex};
+
+    /// The satellite regression: a panicking holder must not wedge later
+    /// acquirers — `lock_unpoisoned` recovers where `lock().unwrap()`
+    /// would propagate the poison forever.
+    #[test]
+    fn poisoned_mutex_recovers() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let r = catch_unwind(AssertUnwindSafe(move || {
+            let _g = m2.lock().unwrap();
+            panic!("holder dies with the lock held");
+        }));
+        assert!(r.is_err());
+        assert!(m.is_poisoned(), "the panic must actually poison the lock");
+        let g = lock_unpoisoned(&m);
+        assert_eq!(*g, 7, "state is intact — the invariant held across the panic");
+    }
+
+    #[test]
+    fn wait_timeout_returns_guard_and_result() {
+        let m = Mutex::new(0u32);
+        let cv = Condvar::new();
+        let g = lock_unpoisoned(&m);
+        let (g, res) = wait_timeout_unpoisoned(&cv, g, Duration::from_millis(1));
+        assert!(res.timed_out());
+        assert_eq!(*g, 0);
+    }
+}

@@ -219,13 +219,13 @@ pub fn evaluate_with_reference(
     m: &dyn ApproxMultiplier,
     reference: &Signal,
 ) -> crate::Result<WorkloadReport> {
-    let span = crate::obs::span_with("workload.run", &[("workload", w.name())]);
+    let span = crate::obs::span_with(crate::obs::names::span::WORKLOAD_RUN, &[("workload", w.name())]);
     let run = {
         let _guard = span.start();
         w.run(m)
     };
     crate::obs::registry()
-        .counter("workload_macs_total", &[("workload", w.name())])
+        .counter(crate::obs::names::metric::WORKLOAD_MACS_TOTAL, &[("workload", w.name())])
         .add(run.macs);
     let quality = quality::compare(reference, &run.output, 255.0);
     let hw = try_estimate(m)?;

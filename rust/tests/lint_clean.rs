@@ -1,0 +1,43 @@
+//! The repo-wide lint gate: the committed source tree must be clean
+//! under the project lint engine. This is the same check `scaletrim
+//! lint` runs in CI, but as a plain `cargo test` so a violation shows up
+//! in the tightest local loop, with every finding printed
+//! compiler-style before the assertion fires.
+
+use scaletrim::analysis::lint_tree;
+use std::path::Path;
+
+#[test]
+fn source_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let findings = lint_tree(&root).expect("linting the source tree");
+    for f in &findings {
+        eprintln!("{}", f.render());
+    }
+    assert!(
+        findings.is_empty(),
+        "{} lint finding(s) in the committed tree — run `scaletrim lint` \
+         (or see the lines above); suppress only with a reasoned pragma",
+        findings.len()
+    );
+}
+
+#[test]
+fn tree_walk_sees_the_whole_crate() {
+    // Guard against the walker silently missing directories: the tree
+    // has well over this many .rs files, spread across every layer.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut count = 0usize;
+    let mut stack = vec![root.clone()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir).expect("read_dir") {
+            let p = entry.expect("entry").path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                count += 1;
+            }
+        }
+    }
+    assert!(count > 40, "only {count} .rs files found under {}", root.display());
+}

@@ -1,0 +1,353 @@
+//! Per-rule fixtures for the project lint engine: every rule gets a
+//! positive (fires) and a negative (stays quiet) case, plus the pragma
+//! round-trip — suppression on the same line and the line above, and
+//! the three stale-pragma failure modes. These run `check_sources` on
+//! in-memory sources, so they pin the engine's behaviour independent of
+//! the repo tree (`tests/lint_clean.rs` covers the tree itself).
+
+use scaletrim::analysis::{check_sources, Finding, Rule};
+
+fn lint_one(path: &str, src: &str) -> Vec<Finding> {
+    check_sources(&[(path, src)])
+}
+
+fn rule_names(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule.name()).collect()
+}
+
+// -------------------------------------------------------------- R1
+
+#[test]
+fn shift_unguarded_fires_on_computed_amount() {
+    let src = "fn f(x: u64, k: u32) -> u64 {\n    x << k\n}\n";
+    let f = lint_one("multipliers/fix.rs", src);
+    assert_eq!(rule_names(&f), vec!["shift-unguarded"], "{f:?}");
+    assert_eq!(f[0].line, 2);
+    assert!(f[0].message.contains("`k`"), "{}", f[0].message);
+}
+
+#[test]
+fn shift_guarded_by_debug_assert_is_quiet() {
+    let src = "fn f(x: u64, k: u32) -> u64 {\n    debug_assert!(k < 64);\n    x << k\n}\n";
+    assert!(lint_one("multipliers/fix.rs", src).is_empty());
+}
+
+#[test]
+fn shift_guard_spanning_lines_counts() {
+    // rustfmt loves to put the guarded identifier on a continuation line.
+    let src = concat!(
+        "fn f(x: u64, k: u32) -> u64 {\n",
+        "    debug_assert!(\n",
+        "        k < 64,\n",
+        "    );\n",
+        "    x << k\n",
+        "}\n",
+    );
+    assert!(lint_one("simd/fix.rs", src).is_empty());
+}
+
+#[test]
+fn shift_by_const_or_literal_is_quiet() {
+    let src = "fn f(x: u64) -> u64 {\n    (x << SHIFT) + (x << 3)\n}\n";
+    assert!(lint_one("lut/fix.rs", src).is_empty());
+}
+
+#[test]
+fn shift_guard_in_previous_fn_does_not_carry_over() {
+    let src = concat!(
+        "fn g(k: u32) {\n",
+        "    debug_assert!(k < 64);\n",
+        "}\n",
+        "fn f(x: u64, k: u32) -> u64 {\n",
+        "    x << k\n",
+        "}\n",
+    );
+    let f = lint_one("nn/fix.rs", src);
+    assert_eq!(rule_names(&f), vec!["shift-unguarded"], "{f:?}");
+}
+
+#[test]
+fn shift_outside_kernel_dirs_is_quiet() {
+    let src = "fn f(x: u64, k: u32) -> u64 {\n    x << k\n}\n";
+    assert!(lint_one("report/fix.rs", src).is_empty());
+}
+
+// -------------------------------------------------------------- R2
+
+#[test]
+fn no_panic_fires_on_unwrap_expect_and_panics() {
+    let src = concat!(
+        "fn f(x: Option<u32>) -> u32 {\n",
+        "    let a = x.unwrap();\n",
+        "    let b = x.expect(\"b\");\n",
+        "    if a > b { panic!(\"no\") }\n",
+        "    todo!()\n",
+        "}\n",
+    );
+    let f = lint_one("obs/fix.rs", src);
+    assert_eq!(
+        rule_names(&f),
+        vec!["no-panic", "no-panic", "no-panic", "no-panic"],
+        "{f:?}"
+    );
+}
+
+#[test]
+fn no_panic_exempts_main_and_tests_and_strings() {
+    let main = "fn main() {\n    run().unwrap();\n}\n";
+    assert!(lint_one("main.rs", main).is_empty());
+    let test = concat!(
+        "#[cfg(test)]\n",
+        "mod tests {\n",
+        "    #[test]\n",
+        "    fn t() {\n",
+        "        x().unwrap();\n",
+        "    }\n",
+        "}\n",
+    );
+    assert!(lint_one("obs/fix.rs", test).is_empty());
+    let s = "fn f() -> &'static str {\n    \"call .unwrap() at your peril\"\n}\n";
+    assert!(lint_one("obs/fix.rs", s).is_empty());
+}
+
+// -------------------------------------------------------------- R3
+
+#[test]
+fn raw_lock_fires_anywhere() {
+    let src = "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock().unwrap()\n}\n";
+    let f = lint_one("report/fix.rs", src);
+    // The unwrap also trips no-panic; the raw-lock finding is the
+    // specific one that names the helper to use instead.
+    assert!(rule_names(&f).contains(&"raw-lock"), "{f:?}");
+}
+
+#[test]
+fn poison_safe_helper_is_quiet() {
+    let src = concat!(
+        "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n",
+        "    *crate::util::sync::lock_unpoisoned(m)\n",
+        "}\n",
+    );
+    assert!(lint_one("report/fix.rs", src).is_empty());
+}
+
+// -------------------------------------------------------------- R4
+
+#[test]
+fn narrow_cast_fires_without_mask_or_guard() {
+    let src = "fn f(x: u32) -> u8 {\n    x as u8\n}\n";
+    let f = lint_one("simd/fix.rs", src);
+    assert_eq!(rule_names(&f), vec!["narrow-cast"], "{f:?}");
+    assert!(f[0].message.contains("as u8"), "{}", f[0].message);
+}
+
+#[test]
+fn narrow_cast_with_mask_clamp_shift_or_assert_is_quiet() {
+    for src in [
+        "fn f(x: u32) -> u8 {\n    (x & 0xff) as u8\n}\n",
+        "fn f(x: u32) -> u8 {\n    x.min(255) as u8\n}\n",
+        "fn f(x: u32) -> u8 {\n    x.clamp(0, 255) as u8\n}\n",
+        "fn f(x: u32) -> u8 {\n    (x >> 24) as u8\n}\n",
+        "fn f(x: u32) -> u8 {\n    debug_assert!(x < 256);\n    x as u8\n}\n",
+    ] {
+        assert!(lint_one("nn/fix.rs", src).is_empty(), "{src}");
+    }
+}
+
+#[test]
+fn narrow_cast_outside_arith_dirs_is_quiet() {
+    let src = "fn f(x: u32) -> u8 {\n    x as u8\n}\n";
+    assert!(lint_one("coordinator/fix.rs", src).is_empty());
+}
+
+// -------------------------------------------------------------- R5
+
+#[test]
+fn obs_names_fires_on_inline_literals() {
+    let src = concat!(
+        "fn f(r: &Registry) {\n",
+        "    r.counter(\"my_total\", &[]).inc();\n",
+        "    let _s = span(\"ad.hoc\");\n",
+        "}\n",
+    );
+    let f = lint_one("coordinator/fix.rs", src);
+    assert_eq!(rule_names(&f), vec!["obs-names", "obs-names"], "{f:?}");
+}
+
+#[test]
+fn obs_names_exempts_the_names_table_and_constants() {
+    let table = concat!(
+        "pub const X: &str = \"my_total\";\n",
+        "fn f(r: &Registry) {\n",
+        "    r.counter(\"my_total\", &[]).inc();\n",
+        "}\n",
+    );
+    assert!(lint_one("obs/names.rs", table).is_empty());
+    let via_const = "fn f(r: &Registry) {\n    r.counter(metric::X, &[]).inc();\n}\n";
+    assert!(lint_one("coordinator/fix.rs", via_const).is_empty());
+}
+
+// -------------------------------------------------------------- R6
+
+#[test]
+fn kernel_loop_io_fires_inside_loops() {
+    let src = concat!(
+        "fn f(n: usize) {\n",
+        "    for i in 0..n {\n",
+        "        println!(\"{i}\");\n",
+        "    }\n",
+        "    while n > 0 {\n",
+        "        let _t = Instant::now();\n",
+        "    }\n",
+        "}\n",
+    );
+    let f = lint_one("workloads/fix.rs", src);
+    assert_eq!(rule_names(&f), vec!["kernel-loop-io", "kernel-loop-io"], "{f:?}");
+}
+
+#[test]
+fn io_outside_the_loop_body_is_quiet() {
+    let src = concat!(
+        "fn f(n: usize) {\n",
+        "    let t0 = Instant::now();\n",
+        "    for i in 0..n {\n",
+        "        work(i);\n",
+        "    }\n",
+        "    println!(\"{:?}\", t0.elapsed());\n",
+        "}\n",
+    );
+    assert!(lint_one("workloads/fix.rs", src).is_empty());
+}
+
+#[test]
+fn loop_body_opening_on_a_later_line_is_tracked() {
+    let src = "fn f(n: usize) {\n    for i in\n        0..n\n    {\n        dbg!(i);\n    }\n}\n";
+    let f = lint_one("multipliers/fix.rs", src);
+    assert_eq!(rule_names(&f), vec!["kernel-loop-io"], "{f:?}");
+}
+
+// -------------------------------------------------------------- R7
+
+#[test]
+fn unsafe_token_fires_everywhere() {
+    let src = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let f = lint_one("report/fix.rs", src);
+    assert_eq!(rule_names(&f), vec!["forbid-unsafe"], "{f:?}");
+}
+
+#[test]
+fn lib_rs_must_carry_the_forbid_attribute() {
+    let bare = "pub mod util;\n";
+    let f = lint_one("lib.rs", bare);
+    assert_eq!(rule_names(&f), vec!["forbid-unsafe"], "{f:?}");
+    assert!(f[0].message.contains("crate root"), "{}", f[0].message);
+    let good = "#![forbid(unsafe_code)]\npub mod util;\n";
+    assert!(lint_one("lib.rs", good).is_empty());
+    // The attribute requirement binds to lib.rs only — other files in a
+    // set without lib.rs don't inherit it.
+    assert!(lint_one("util/fix.rs", "pub fn f() {}\n").is_empty());
+}
+
+// ------------------------------------------------------ pragmas
+
+#[test]
+fn trailing_pragma_suppresses_its_own_line() {
+    let src = concat!(
+        "fn f(m: &M) -> u32 {\n",
+        "    *m.lock().unwrap() // lint:allow(raw-lock, no-panic): ",
+        "startup-only, poisoning impossible here\n",
+        "}\n",
+    );
+    assert!(lint_one("report/fix.rs", src).is_empty());
+}
+
+#[test]
+fn standalone_pragma_suppresses_the_next_line() {
+    let src = concat!(
+        "fn f(x: Option<u32>) -> u32 {\n",
+        "    // lint:allow(no-panic): checked non-empty by the caller's contract\n",
+        "    x.unwrap()\n",
+        "}\n",
+    );
+    assert!(lint_one("obs/fix.rs", src).is_empty());
+}
+
+#[test]
+fn pragma_on_the_wrong_line_suppresses_nothing() {
+    let src = concat!(
+        "fn f(x: Option<u32>) -> u32 {\n",
+        "    // lint:allow(no-panic): two lines above the site, too far\n",
+        "\n",
+        "    x.unwrap()\n",
+        "}\n",
+    );
+    let f = lint_one("obs/fix.rs", src);
+    let names = rule_names(&f);
+    assert!(names.contains(&"no-panic"), "{f:?}");
+    assert!(names.contains(&"stale-pragma"), "{f:?}");
+}
+
+#[test]
+fn pragma_without_reason_is_stale() {
+    let src = "fn f(x: Option<u32>) -> u32 {\n    // lint:allow(no-panic)\n    x.unwrap()\n}\n";
+    let f = lint_one("obs/fix.rs", src);
+    // The finding is still suppressed, but the reasonless pragma is
+    // itself reported — suppressions must say why.
+    assert_eq!(rule_names(&f), vec!["stale-pragma"], "{f:?}");
+    assert!(f[0].message.contains("reason"), "{}", f[0].message);
+}
+
+#[test]
+fn pragma_with_unknown_rule_is_stale() {
+    let src = "fn f() {\n    // lint:allow(bogus-rule): not a rule we have\n    work();\n}\n";
+    let f = lint_one("obs/fix.rs", src);
+    assert_eq!(rule_names(&f), vec!["stale-pragma"], "{f:?}");
+    assert!(f[0].message.contains("bogus-rule"), "{}", f[0].message);
+}
+
+#[test]
+fn pragma_suppressing_nothing_is_stale() {
+    let src = concat!(
+        "fn f() {\n",
+        "    // lint:allow(no-panic): there is nothing here any more\n",
+        "    work();\n",
+        "}\n",
+    );
+    let f = lint_one("obs/fix.rs", src);
+    assert_eq!(rule_names(&f), vec!["stale-pragma"], "{f:?}");
+    assert!(f[0].message.contains("suppresses nothing"), "{}", f[0].message);
+}
+
+// ------------------------------------------------------ plumbing
+
+#[test]
+fn rule_names_round_trip() {
+    for r in Rule::ALL {
+        assert_eq!(Rule::from_name(r.name()), Some(r), "{r:?}");
+    }
+    assert_eq!(Rule::from_name("not-a-rule"), None);
+}
+
+#[test]
+fn findings_render_compiler_style_and_sort_stably() {
+    let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    let f = lint_one("obs/fix.rs", src);
+    assert_eq!(f.len(), 1);
+    assert_eq!(f[0].render(), "obs/fix.rs:2: [no-panic] unwrap() in library code");
+    // Multi-file: results come back sorted by path then line.
+    let a = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    let b = concat!(
+        "fn g(x: Option<u32>) -> u32 {\n",
+        "    x.unwrap()\n",
+        "}\n",
+        "fn h(x: Option<u32>) -> u32 {\n",
+        "    x.unwrap()\n",
+        "}\n",
+    );
+    let all = check_sources(&[("zeta/b.rs", b), ("alpha/a.rs", a)]);
+    let keys: Vec<(String, usize)> = all.iter().map(|f| (f.path.clone(), f.line)).collect();
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted);
+    assert_eq!(keys[0].0, "alpha/a.rs");
+}
