@@ -1,0 +1,3728 @@
+//! Bitwidth interval abstract interpretation over kernel function bodies.
+//!
+//! This is the proof engine behind `scaletrim analyze`: for every kernel
+//! function (anything under [`KERNEL_DIRS`]) and every design width in
+//! [`WIDTHS`], it walks the token-level statement structure from
+//! [`crate::analysis::graph::build_model`] and tracks an interval
+//! `[lo, hi]` for every integer-valued expression. Three obligation
+//! kinds are discharged along the way:
+//!
+//! - `shift-range`  — every `<<`/`>>` amount is `< operand width`;
+//! - `cast-range`   — every narrowing `as` cast's source value fits the
+//!   target type's range;
+//! - `index-range`  — every index into a fixed-length array computed
+//!   through a non-atom receiver is `< len`.
+//!
+//! Each obligation is either `proved` (with the interval that proves
+//! it), `violated` (with a concrete witness: the reachable operand
+//! value and the offending expression), `allowed` (violated but
+//! suppressed by a reasoned `analyze:allow` pragma on the line), or
+//! `unknown` (the analysis lost the bound; counted, surfaced, never
+//! silently dropped).
+//!
+//! The abstract domain is deliberately simple — intervals plus a fact
+//! table keyed by canonical expression strings — but the transfer
+//! functions understand the idioms the kernels actually use: branch
+//! guards (`if s < 64`), assert macros, `min`/`max`/`clamp`,
+//! saturating/wrapping arithmetic, `leading_zeros`, range loops,
+//! iterator `zip`/`enumerate` chains, and interprocedural summaries for
+//! project-local calls (depth-capped, memoized per argument intervals).
+//!
+//! Arithmetic that Python models with bignums is saturated into `i128`
+//! here. Saturation is applied identically on both sides of every
+//! verdict comparison, so it can only widen intervals — a `proved`
+//! verdict can never silently flip to `violated` because of it, and the
+//! kernel widths under proof (8..=32 bits) stay far inside the exact
+//! region.
+
+#![allow(clippy::collapsible_if, clippy::collapsible_else_if)]
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::analyze::{Diag, Pragmas};
+use super::graph::{is_keyword, Item, Model};
+use super::tokens::{Kind, Tok};
+
+/// Interprocedural summary depth cap.
+const CALL_DEPTH_CAP: usize = 4;
+/// Recursion guard for the evaluator (runs on a large dedicated stack).
+const REC_CAP: usize = 20_000;
+
+/// Kernel directories whose functions carry proof obligations.
+pub const KERNEL_DIRS: [&str; 4] = ["multipliers/", "simd/", "lut/", "workloads/"];
+/// Design widths every kernel function is analyzed at.
+pub const WIDTHS: [u32; 4] = [8, 16, 24, 32];
+
+/// Primitive integer type: `(bit width, signed)`.
+type Ty = (u32, bool);
+/// A concrete closed interval.
+type Ival = (i128, i128);
+
+fn parse_prim_ty(name: &str) -> Option<Ty> {
+    match name {
+        "u8" => Some((8, false)),
+        "u16" => Some((16, false)),
+        "u32" => Some((32, false)),
+        "u64" => Some((64, false)),
+        "u128" => Some((128, false)),
+        "usize" => Some((64, false)),
+        "i8" => Some((8, true)),
+        "i16" => Some((16, true)),
+        "i32" => Some((32, true)),
+        "i64" => Some((64, true)),
+        "i128" => Some((128, true)),
+        "isize" => Some((64, true)),
+        _ => None,
+    }
+}
+
+/// Value range of a primitive type, saturated into `i128`.
+fn ty_range(ty: Ty) -> Ival {
+    let (w, s) = ty;
+    if s {
+        if w >= 128 {
+            (i128::MIN, i128::MAX)
+        } else {
+            (-(1i128 << (w - 1)), (1i128 << (w - 1)) - 1)
+        }
+    } else if w >= 127 {
+        (0, i128::MAX)
+    } else {
+        (0, (1i128 << w) - 1)
+    }
+}
+
+// ---------------- intervals ----------------
+
+/// Abstract value: unknown, unreachable, or a closed interval.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Iv {
+    /// No information (Python `None`).
+    Top,
+    /// Unreachable / absent value (Python `"bottom"`).
+    Bot,
+    /// Closed interval `[lo, hi]`.
+    Rng(i128, i128),
+}
+
+fn rng(iv: Iv) -> Option<Ival> {
+    match iv {
+        Iv::Rng(lo, hi) => Some((lo, hi)),
+        _ => None,
+    }
+}
+
+fn of_opt(o: Option<Ival>) -> Iv {
+    match o {
+        Some((lo, hi)) => Iv::Rng(lo, hi),
+        None => Iv::Top,
+    }
+}
+
+fn inter(a: Iv, b: Iv) -> Iv {
+    match (a, b) {
+        (Iv::Top, x) | (x, Iv::Top) => x,
+        (Iv::Bot, _) | (_, Iv::Bot) => Iv::Bot,
+        (Iv::Rng(al, ah), Iv::Rng(bl, bh)) => {
+            let lo = al.max(bl);
+            let hi = ah.min(bh);
+            if lo > hi {
+                Iv::Bot
+            } else {
+                Iv::Rng(lo, hi)
+            }
+        }
+    }
+}
+
+fn join(a: Iv, b: Iv) -> Iv {
+    match (a, b) {
+        (Iv::Top, _) | (_, Iv::Top) => Iv::Top,
+        (Iv::Bot, x) | (x, Iv::Bot) => x,
+        (Iv::Rng(al, ah), Iv::Rng(bl, bh)) => Iv::Rng(al.min(bl), ah.max(bh)),
+    }
+}
+
+fn bits_needed(x: i128) -> u32 {
+    if x <= 0 {
+        0
+    } else {
+        128 - x.leading_zeros()
+    }
+}
+
+/// Saturating left shift of a signed value.
+fn sat_shl(a: i128, s: u32) -> i128 {
+    if a == 0 {
+        return 0;
+    }
+    if s >= 127 {
+        return if a > 0 { i128::MAX } else { i128::MIN };
+    }
+    if a > (i128::MAX >> s) {
+        return i128::MAX;
+    }
+    if a < (i128::MIN >> s) {
+        return i128::MIN;
+    }
+    a << s
+}
+
+/// Arithmetic right shift with a saturated amount.
+fn sat_shr(a: i128, s: u32) -> i128 {
+    if s >= 127 {
+        if a < 0 {
+            -1
+        } else {
+            0
+        }
+    } else {
+        a >> s
+    }
+}
+
+fn iv_add(a: Option<Ival>, b: Option<Ival>) -> Option<Ival> {
+    let (a, b) = (a?, b?);
+    Some((a.0.saturating_add(b.0), a.1.saturating_add(b.1)))
+}
+
+fn iv_sub(a: Option<Ival>, b: Option<Ival>) -> Option<Ival> {
+    let (a, b) = (a?, b?);
+    Some((a.0.saturating_sub(b.1), a.1.saturating_sub(b.0)))
+}
+
+fn iv_mul(a: Option<Ival>, b: Option<Ival>) -> Option<Ival> {
+    let (a, b) = (a?, b?);
+    let cs = [
+        a.0.saturating_mul(b.0),
+        a.0.saturating_mul(b.1),
+        a.1.saturating_mul(b.0),
+        a.1.saturating_mul(b.1),
+    ];
+    let lo = cs.iter().copied().min().unwrap_or(i128::MIN);
+    let hi = cs.iter().copied().max().unwrap_or(i128::MAX);
+    Some((lo, hi))
+}
+
+fn iv_div(a: Option<Ival>, b: Option<Ival>) -> Option<Ival> {
+    let (a, b) = (a?, b?);
+    if b.0 <= 0 {
+        return None; // only positive divisors
+    }
+    let lo = a.0.div_euclid(b.0).min(a.0.div_euclid(b.1));
+    let hi = a.1.div_euclid(b.0).max(a.1.div_euclid(b.1));
+    Some((lo, hi))
+}
+
+fn iv_rem(a: Option<Ival>, b: Option<Ival>) -> Option<Ival> {
+    let (a, b) = (a?, b?);
+    if b.0 <= 0 || a.0 < 0 {
+        return None;
+    }
+    Some((0, a.1.min(b.1 - 1)))
+}
+
+fn iv_shl(a: Option<Ival>, b: Option<Ival>, ty: Option<Ty>) -> Option<Ival> {
+    let full = ty.map(ty_range);
+    let (a, b) = match (a, b) {
+        (Some(a), Some(b)) if b.0 >= 0 => (a, b),
+        // value overflow wraps silently -> clamp to type range when it might
+        _ => return full,
+    };
+    let s0 = b.0.min(256) as u32;
+    let s1 = b.1.min(256) as u32;
+    let lo = sat_shl(a.0, s0);
+    let hi = sat_shl(a.1, s1);
+    if let Some((tlo, thi)) = full {
+        if lo < tlo || hi > thi {
+            return Some((tlo, thi));
+        }
+    }
+    Some((lo, hi))
+}
+
+fn iv_shr(a: Option<Ival>, b: Option<Ival>) -> Option<Ival> {
+    let (a, b) = (a?, b?);
+    if b.0 < 0 {
+        return None;
+    }
+    // arithmetic shift right: monotone in the value for fixed shift; for an
+    // interval of shifts the extremes land at one of the two endpoint shifts
+    let s0 = b.0.min(256) as u32;
+    let s1 = b.1.min(256) as u32;
+    let lo = sat_shr(a.0, s0).min(sat_shr(a.0, s1));
+    let hi = sat_shr(a.1, s0).max(sat_shr(a.1, s1));
+    Some((lo, hi))
+}
+
+fn iv_and(a: Option<Ival>, b: Option<Ival>) -> Option<Ival> {
+    if let (Some(a), Some(b)) = (a, b) {
+        if a.0 >= 0 && b.0 >= 0 {
+            return Some((0, a.1.min(b.1)));
+        }
+    }
+    if let Some(b) = b {
+        if b.0 >= 0 {
+            return Some((0, b.1)); // x & mask with non-negative mask
+        }
+    }
+    if let Some(a) = a {
+        if a.0 >= 0 {
+            return Some((0, a.1));
+        }
+    }
+    None
+}
+
+fn bit_top(a: Ival, b: Ival) -> i128 {
+    let mb = bits_needed(a.1).max(bits_needed(b.1));
+    if mb >= 127 {
+        i128::MAX
+    } else {
+        (1i128 << mb) - 1
+    }
+}
+
+fn iv_or(a: Option<Ival>, b: Option<Ival>) -> Option<Ival> {
+    let (a, b) = (a?, b?);
+    if a.0 < 0 || b.0 < 0 {
+        return None;
+    }
+    Some((a.0.max(b.0), bit_top(a, b).max(0)))
+}
+
+fn iv_xor(a: Option<Ival>, b: Option<Ival>) -> Option<Ival> {
+    let (a, b) = (a?, b?);
+    if a.0 < 0 || b.0 < 0 {
+        return None;
+    }
+    Some((0, bit_top(a, b)))
+}
+
+fn iv_neg(a: Option<Ival>) -> Option<Ival> {
+    a.map(|a| (a.1.saturating_neg(), a.0.saturating_neg()))
+}
+
+/// `leading_zeros` of value interval `a` on a `width`-bit receiver.
+fn clz_iv(a: Option<Ival>, width: u32) -> Ival {
+    let w = i128::from(width);
+    match a {
+        Some((lo, hi)) if lo >= 0 => {
+            let clz = |v: i128| {
+                if v <= 0 {
+                    w
+                } else {
+                    w - i128::from(bits_needed(v))
+                }
+            };
+            (clz(hi), clz(lo))
+        }
+        _ => (0, w),
+    }
+}
+
+fn spow(base: i128, exp: i128) -> i128 {
+    base.checked_pow(exp.clamp(0, u32::MAX as i128) as u32)
+        .unwrap_or(i128::MAX)
+}
+
+// ---------------- expressions ----------------
+
+/// One step of an atom path: the root name, a field, or an index.
+#[derive(Debug, Clone)]
+enum Part {
+    Root(String),
+    F(String),
+    Ix(Box<Ex>),
+}
+
+/// Parsed expression. Block-like forms carry token ranges into the
+/// current item's token stream and are walked lazily at eval time.
+#[derive(Debug, Clone)]
+enum Ex {
+    Num(i128, Option<String>),
+    Float,
+    Str,
+    Atom(String, Vec<Part>),
+    Bin(String, Box<Ex>, Box<Ex>),
+    Un(String, Box<Ex>),
+    Cast(Box<Ex>, Vec<String>),
+    Call(String, Vec<Ex>),
+    Method(Box<Ex>, String, Vec<Ex>),
+    Index(Box<Ex>, Box<Ex>),
+    Tuple(Vec<Ex>),
+    ArrRepeat(Box<Ex>, Box<Ex>),
+    ArrLit(Vec<Ex>),
+    Closure(Vec<String>, (usize, usize)),
+    IfExpr(Box<Ex>, (usize, usize), Option<(usize, usize)>),
+    IfLet((usize, usize), Option<(usize, usize)>),
+    MatchExpr(Box<Ex>, Vec<((usize, usize), (usize, usize))>),
+    BlockExpr((usize, usize)),
+    Range(Box<Ex>, Option<Box<Ex>>, bool),
+    Exit,
+    Unknown,
+}
+
+/// Pratt parser over a token slice. `end` is clamped so ranges parsed
+/// from synthetic const token streams can never index out of bounds.
+struct P<'t> {
+    t: &'t [Tok],
+    i: usize,
+    end: usize,
+}
+
+impl<'t> P<'t> {
+    fn new(t: &'t [Tok], i: usize, end: usize) -> P<'t> {
+        P {
+            t,
+            i,
+            end: end.min(t.len()),
+        }
+    }
+
+    fn peek(&self, k: usize) -> Option<&'t str> {
+        let j = self.i + k;
+        if j < self.end {
+            Some(self.t[j].text.as_str())
+        } else {
+            None
+        }
+    }
+
+    fn at_end(&self) -> bool {
+        self.i >= self.end
+    }
+
+    fn bump(&mut self) {
+        self.i += 1;
+    }
+
+    fn bump_text(&mut self) -> &'t str {
+        let s = self.t.get(self.i).map_or("", |t| t.text.as_str());
+        self.i += 1;
+        s
+    }
+
+    fn eat(&mut self, x: &str) {
+        if self.peek(0) == Some(x) {
+            self.bump();
+        }
+    }
+}
+
+fn bin_prec(op: &str) -> Option<u32> {
+    Some(match op {
+        "*" | "/" | "%" => 80,
+        "+" | "-" => 70,
+        "<<" | ">>" => 60,
+        "&" => 50,
+        "^" => 45,
+        "|" => 40,
+        "==" | "!=" | "<" | ">" | "<=" | ">=" => 30,
+        "&&" => 20,
+        "||" => 10,
+        _ => return None,
+    })
+}
+
+fn is_stop(x: Option<&str>) -> bool {
+    matches!(x, None | Some(")" | "]" | "}" | "," | ";" | "=>"))
+}
+
+fn ident_start(x: &str) -> bool {
+    x.starts_with(|c: char| c.is_alphabetic() || c == '_')
+}
+
+fn parse_expr(p: &mut P, min_prec: u32, no_struct: bool) -> Ex {
+    let mut lhs = parse_prefix(p, no_struct);
+    loop {
+        let op = p.peek(0);
+        if op == Some("as") {
+            p.bump();
+            let ty = parse_type_tokens(p);
+            lhs = Ex::Cast(Box::new(lhs), ty);
+            continue;
+        }
+        if matches!(op, Some(".." | "..=")) {
+            if 30 < min_prec {
+                break;
+            }
+            let incl = op == Some("..=");
+            p.bump();
+            let mut hi = None;
+            if !is_stop(p.peek(0)) && p.peek(0) != Some("{") {
+                hi = Some(Box::new(parse_expr(p, 35, no_struct)));
+            }
+            return Ex::Range(Box::new(lhs), hi, incl);
+        }
+        let Some(ops) = op else { break };
+        let Some(prec) = bin_prec(ops) else { break };
+        if prec < min_prec {
+            break;
+        }
+        p.bump();
+        let rhs = parse_expr(p, prec + 1, no_struct);
+        lhs = Ex::Bin(ops.to_string(), Box::new(lhs), Box::new(rhs));
+    }
+    lhs
+}
+
+/// Consume a type after `as` (primitive or path, maybe with generics).
+fn parse_type_tokens(p: &mut P) -> Vec<String> {
+    let mut out = Vec::new();
+    while let Some(x) = p.peek(0) {
+        if !matches!(x, "&" | "*" | "mut" | "dyn") {
+            break;
+        }
+        out.push(p.bump_text().to_string());
+    }
+    while let Some(x) = p.peek(0) {
+        if !ident_start(x) {
+            break;
+        }
+        out.push(p.bump_text().to_string());
+        if p.peek(0) == Some("::") {
+            out.push(p.bump_text().to_string());
+            continue;
+        }
+        if p.peek(0) == Some("<") {
+            let mut d = 0i64;
+            while !p.at_end() {
+                let y = p.bump_text();
+                out.push(y.to_string());
+                match y {
+                    "<" => d += 1,
+                    "<<" => d += 2,
+                    ">" => d -= 1,
+                    ">>" => d -= 2,
+                    _ => {}
+                }
+                if d <= 0 {
+                    break;
+                }
+            }
+        }
+        break;
+    }
+    out
+}
+
+/// `p` sits at `open_t`; return the token range strictly inside the
+/// balanced group and advance past the close delimiter.
+fn collect_balanced(p: &mut P, open_t: &str, close_t: &str) -> (usize, usize) {
+    let start = p.i;
+    let mut d = 0i64;
+    while !p.at_end() {
+        let x = p.bump_text();
+        if x == open_t {
+            d += 1;
+        } else if x == close_t {
+            d -= 1;
+            if d == 0 {
+                return (start + 1, p.i - 1);
+            }
+        }
+    }
+    (start + 1, p.i)
+}
+
+/// Split `toks[lo..hi]` on top-level commas (closure bars skipped).
+fn split_args(toks: &[Tok], lo: usize, hi: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut d = 0i64;
+    let mut start = lo;
+    let mut j = lo;
+    while j < hi {
+        let x = toks[j].text.as_str();
+        match x {
+            "(" | "[" | "{" => d += 1,
+            ")" | "]" | "}" => d -= 1,
+            "|" if d == 0 => {
+                // closure bars: skip to matching bar
+                let mut k = j + 1;
+                while k < hi && toks[k].text != "|" {
+                    k += 1;
+                }
+                j = k;
+            }
+            "," if d == 0 => {
+                out.push((start, j));
+                start = j + 1;
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    if start < hi {
+        out.push((start, hi));
+    }
+    out
+}
+
+fn parse_args(toks: &[Tok], lo: usize, hi: usize) -> Vec<Ex> {
+    split_args(toks, lo, hi)
+        .into_iter()
+        .map(|(a, b)| {
+            let mut sub = P::new(toks, a, b);
+            parse_expr(&mut sub, 0, false)
+        })
+        .collect()
+}
+
+/// Index of the first top-level `;` in `toks[lo..hi]`, if any.
+fn top_semi(toks: &[Tok], lo: usize, hi: usize) -> Option<usize> {
+    let mut d = 0i64;
+    let mut j = lo;
+    while j < hi {
+        match toks[j].text.as_str() {
+            "(" | "[" | "{" => d += 1,
+            ")" | "]" | "}" => d -= 1,
+            ";" if d == 0 => return Some(j),
+            _ => {}
+        }
+        j += 1;
+    }
+    None
+}
+
+fn parse_prefix(p: &mut P, no_struct: bool) -> Ex {
+    let Some(x) = p.peek(0) else {
+        return Ex::Unknown;
+    };
+    if x == "&" {
+        p.bump();
+        if p.peek(0) == Some("mut") {
+            p.bump();
+        }
+        let inner = parse_prefix(p, no_struct);
+        return parse_postfix(p, inner);
+    }
+    if x == "*" {
+        p.bump();
+        let inner = parse_prefix(p, no_struct);
+        return parse_postfix(p, inner);
+    }
+    if x == "-" {
+        p.bump();
+        return Ex::Un("-".to_string(), Box::new(parse_expr(p, 85, no_struct)));
+    }
+    if x == "!" {
+        p.bump();
+        return Ex::Un("!".to_string(), Box::new(parse_expr(p, 85, no_struct)));
+    }
+    if x == "|" || x == "||" {
+        // closure literal
+        let mut params = Vec::new();
+        if x == "|" {
+            p.bump();
+            while !p.at_end() && p.peek(0) != Some("|") {
+                let t = p.bump_text();
+                if !matches!(t, "," | "&" | "mut") && ident_start(t) {
+                    params.push(t.to_string());
+                }
+                if p.peek(0) == Some(":") {
+                    // skip type annotation
+                    p.bump();
+                    let mut d = 0i64;
+                    while !p.at_end() && !(d == 0 && matches!(p.peek(0), Some("," | "|"))) {
+                        let y = p.bump_text();
+                        match y {
+                            "(" | "[" | "<" => d += 1,
+                            ")" | "]" | ">" => d -= 1,
+                            _ => {}
+                        }
+                    }
+                }
+            }
+            p.eat("|");
+        } else {
+            p.bump();
+        }
+        if p.peek(0) == Some("->") {
+            p.bump();
+            parse_type_tokens(p);
+        }
+        if p.peek(0) == Some("{") {
+            let body = collect_balanced(p, "{", "}");
+            return Ex::Closure(params, body);
+        }
+        let start = p.i;
+        parse_expr(p, 15, no_struct);
+        return Ex::Closure(params, (start, p.i));
+    }
+    if x == "(" {
+        let (lo, hi) = collect_balanced(p, "(", ")");
+        let parts = split_args(p.t, lo, hi);
+        if parts.len() == 1 {
+            let mut sub = P::new(p.t, parts[0].0, parts[0].1);
+            let inner = parse_expr(&mut sub, 0, false);
+            return parse_postfix(p, inner);
+        }
+        let elems: Vec<Ex> = parts
+            .into_iter()
+            .map(|(a, b)| {
+                let mut sub = P::new(p.t, a, b);
+                parse_expr(&mut sub, 0, false)
+            })
+            .collect();
+        return parse_postfix(p, Ex::Tuple(elems));
+    }
+    if x == "[" {
+        let (lo, hi) = collect_balanced(p, "[", "]");
+        if let Some(semi) = top_semi(p.t, lo, hi) {
+            let mut ep = P::new(p.t, lo, semi);
+            let elem = parse_expr(&mut ep, 0, false);
+            let mut cp = P::new(p.t, semi + 1, hi);
+            let count = parse_expr(&mut cp, 0, false);
+            return parse_postfix(p, Ex::ArrRepeat(Box::new(elem), Box::new(count)));
+        }
+        let elems = parse_args(p.t, lo, hi);
+        return parse_postfix(p, Ex::ArrLit(elems));
+    }
+    if x == "{" {
+        let body = collect_balanced(p, "{", "}");
+        return Ex::BlockExpr(body);
+    }
+    if x == "if" {
+        p.bump();
+        if p.peek(0) == Some("let") {
+            // if-let: scan to block
+            while !p.at_end() && p.peek(0) != Some("{") {
+                p.bump();
+            }
+            let then = collect_balanced(p, "{", "}");
+            let mut els = None;
+            if p.peek(0) == Some("else") {
+                p.bump();
+                if p.peek(0) == Some("{") {
+                    els = Some(collect_balanced(p, "{", "}"));
+                } else if p.peek(0) == Some("if") {
+                    let start = p.i;
+                    parse_prefix(p, false); // recursive consume
+                    els = Some((start, p.i));
+                }
+            }
+            return Ex::IfLet(then, els);
+        }
+        let cond = parse_expr(p, 0, true);
+        while !p.at_end() && p.peek(0) != Some("{") {
+            p.bump();
+        }
+        let then = collect_balanced(p, "{", "}");
+        let mut els = None;
+        if p.peek(0) == Some("else") {
+            p.bump();
+            if p.peek(0) == Some("{") {
+                els = Some(collect_balanced(p, "{", "}"));
+            } else if p.peek(0) == Some("if") {
+                let start = p.i;
+                parse_prefix(p, no_struct);
+                els = Some((start, p.i));
+            }
+        }
+        return Ex::IfExpr(Box::new(cond), then, els);
+    }
+    if x == "match" {
+        p.bump();
+        let scrut = parse_expr(p, 0, true);
+        while !p.at_end() && p.peek(0) != Some("{") {
+            p.bump();
+        }
+        let (lo, hi) = collect_balanced(p, "{", "}");
+        let arms = parse_match_arms(p.t, lo, hi);
+        return Ex::MatchExpr(Box::new(scrut), arms);
+    }
+    if matches!(x, "return" | "break" | "continue") {
+        let is_ret = x == "return";
+        p.bump();
+        if is_ret && !is_stop(p.peek(0)) {
+            parse_expr(p, 0, false);
+        }
+        return Ex::Exit;
+    }
+    let ts = p.t;
+    let Some(t) = ts.get(p.i) else {
+        return Ex::Unknown;
+    };
+    match t.kind {
+        Kind::Num => {
+            p.bump();
+            let e = num_expr(&t.text);
+            parse_postfix(p, e)
+        }
+        Kind::Str => {
+            p.bump();
+            parse_postfix(p, Ex::Str)
+        }
+        Kind::Life => {
+            p.bump();
+            parse_prefix(p, no_struct)
+        }
+        Kind::Ident => {
+            let e = parse_path(p, no_struct);
+            parse_postfix(p, e)
+        }
+        Kind::Punct => {
+            p.bump();
+            Ex::Unknown
+        }
+    }
+}
+
+fn num_expr(text: &str) -> Ex {
+    let cleaned = text.replace('_', "");
+    let mut t = cleaned.as_str();
+    let mut suffix: Option<&str> = None;
+    const SUFFIXES: [&str; 12] = [
+        "u128", "usize", "isize", "i128", "u64", "i64", "u32", "i32", "u16", "i16", "u8", "i8",
+    ];
+    for sfx in SUFFIXES {
+        if let Some(stripped) = t.strip_suffix(sfx) {
+            suffix = Some(sfx);
+            t = stripped;
+            break;
+        }
+    }
+    if t.ends_with("f32")
+        || t.ends_with("f64")
+        || t.contains('.')
+        || (t.contains('e') && !t.starts_with("0x"))
+    {
+        return Ex::Float;
+    }
+    let parsed = if let Some(h) = t.strip_prefix("0x") {
+        u128::from_str_radix(h, 16)
+    } else if let Some(b) = t.strip_prefix("0b") {
+        u128::from_str_radix(b, 2)
+    } else if let Some(o) = t.strip_prefix("0o") {
+        u128::from_str_radix(o, 8)
+    } else {
+        t.parse::<u128>()
+    };
+    match parsed {
+        Ok(v) => Ex::Num(v.min(i128::MAX as u128) as i128, suffix.map(str::to_string)),
+        Err(_) => Ex::Float,
+    }
+}
+
+/// Ident path `a::b::c`, possibly a call / struct literal / atom.
+fn parse_path(p: &mut P, no_struct: bool) -> Ex {
+    let mut segs: Vec<String> = vec![p.bump_text().to_string()];
+    while p.peek(0) == Some("::") {
+        p.bump();
+        if p.peek(0) == Some("<") {
+            // turbofish: skip
+            let mut d = 0i64;
+            while !p.at_end() {
+                let y = p.bump_text();
+                match y {
+                    "<" => d += 1,
+                    "<<" => d += 2,
+                    ">" => d -= 1,
+                    ">>" => d -= 2,
+                    _ => {}
+                }
+                if d <= 0 {
+                    break;
+                }
+            }
+            continue;
+        }
+        match p.peek(0) {
+            Some(nxt) if ident_start(nxt) => {
+                segs.push(p.bump_text().to_string());
+            }
+            _ => break,
+        }
+    }
+    let path = segs.join("::");
+    if p.peek(0) == Some("!") {
+        // macro invocation as expression; vec![e; n] keeps its array shape,
+        // everything else -> unknown; consume the delimiters either way
+        p.bump();
+        if let Some(o) = p.peek(0) {
+            if matches!(o, "(" | "[" | "{") {
+                let c = match o {
+                    "(" => ")",
+                    "[" => "]",
+                    _ => "}",
+                };
+                let (lo, hi) = collect_balanced(p, o, c);
+                if path == "vec" {
+                    if let Some(semi) = top_semi(p.t, lo, hi) {
+                        let mut ep = P::new(p.t, lo, semi);
+                        let elem = parse_expr(&mut ep, 0, false);
+                        let mut cp = P::new(p.t, semi + 1, hi);
+                        let count = parse_expr(&mut cp, 0, false);
+                        return parse_postfix(p, Ex::ArrRepeat(Box::new(elem), Box::new(count)));
+                    }
+                    if lo < hi {
+                        let elems = parse_args(p.t, lo, hi);
+                        return parse_postfix(p, Ex::ArrLit(elems));
+                    }
+                }
+            }
+        }
+        return Ex::Unknown;
+    }
+    if p.peek(0) == Some("(") {
+        let (lo, hi) = collect_balanced(p, "(", ")");
+        let args = parse_args(p.t, lo, hi);
+        return Ex::Call(path, args);
+    }
+    let upper = segs
+        .last()
+        .is_some_and(|s| s.starts_with(|c: char| c.is_uppercase()));
+    if p.peek(0) == Some("{") && !no_struct && !is_keyword(&path) && upper {
+        // struct literal
+        collect_balanced(p, "{", "}");
+        return Ex::Unknown;
+    }
+    Ex::Atom(path.clone(), vec![Part::Root(path)])
+}
+
+fn parse_postfix(p: &mut P, e: Ex) -> Ex {
+    let mut e = e;
+    loop {
+        let x = p.peek(0);
+        if x == Some(".") {
+            let Some(nxt) = p.peek(1) else {
+                p.bump();
+                return e;
+            };
+            if nxt == "await" {
+                p.bump();
+                p.bump();
+                continue;
+            }
+            p.bump();
+            let name = p.bump_text().to_string();
+            if p.peek(0) == Some("::") {
+                // turbofish on method: skip
+                p.bump();
+                let mut d = 0i64;
+                while !p.at_end() {
+                    let y = p.bump_text();
+                    match y {
+                        "<" => d += 1,
+                        ">" => d -= 1,
+                        ">>" => d -= 2,
+                        _ => {}
+                    }
+                    if d <= 0 {
+                        break;
+                    }
+                }
+            }
+            if p.peek(0) == Some("(") {
+                let (lo, hi) = collect_balanced(p, "(", ")");
+                let args = parse_args(p.t, lo, hi);
+                e = Ex::Method(Box::new(e), name, args);
+            } else {
+                e = match e {
+                    Ex::Atom(s, mut parts) => {
+                        parts.push(Part::F(name.clone()));
+                        Ex::Atom(format!("{s}.{name}"), parts)
+                    }
+                    // field of non-atom
+                    other => Ex::Method(Box::new(other), format!(".{name}"), Vec::new()),
+                };
+            }
+            continue;
+        }
+        if x == Some("[") {
+            let (lo, hi) = collect_balanced(p, "[", "]");
+            let mut ip = P::new(p.t, lo, hi);
+            let idx = parse_expr(&mut ip, 0, false);
+            e = match e {
+                Ex::Atom(s, mut parts) => {
+                    let c = canon(&idx);
+                    parts.push(Part::Ix(Box::new(idx)));
+                    Ex::Atom(format!("{s}[{c}]"), parts)
+                }
+                other => Ex::Index(Box::new(other), Box::new(idx)),
+            };
+            continue;
+        }
+        if x == Some("?") {
+            p.bump();
+            continue;
+        }
+        break;
+    }
+    e
+}
+
+fn parse_match_arms(toks: &[Tok], lo: usize, hi: usize) -> Vec<((usize, usize), (usize, usize))> {
+    let mut arms = Vec::new();
+    let mut j = lo;
+    while j < hi {
+        // pattern until top-level '=>'
+        let mut d = 0i64;
+        let pstart = j;
+        while j < hi && !(d == 0 && toks[j].text == "=>") {
+            match toks[j].text.as_str() {
+                "(" | "[" | "{" => d += 1,
+                ")" | "]" | "}" => d -= 1,
+                _ => {}
+            }
+            j += 1;
+        }
+        if j >= hi {
+            break;
+        }
+        let pat = (pstart, j);
+        j += 1; // past =>
+        let body;
+        if j < hi && toks[j].text == "{" {
+            let mut p2 = P::new(toks, j, hi);
+            body = collect_balanced(&mut p2, "{", "}");
+            j = p2.i;
+            if j < hi && toks[j].text == "," {
+                j += 1;
+            }
+        } else {
+            let mut d2 = 0i64;
+            let bstart = j;
+            while j < hi && !(d2 == 0 && toks[j].text == ",") {
+                match toks[j].text.as_str() {
+                    "(" | "[" | "{" => d2 += 1,
+                    ")" | "]" | "}" => d2 -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+            body = (bstart, j);
+            j += 1;
+        }
+        arms.push((pat, body));
+    }
+    arms
+}
+
+// ---------------- canonicalization ----------------
+
+fn canon_list(xs: &[Ex]) -> String {
+    xs.iter().map(canon).collect::<Vec<_>>().join(", ")
+}
+
+fn canon(e: &Ex) -> String {
+    match e {
+        Ex::Num(v, _) => v.to_string(),
+        Ex::Float => "<float>".to_string(),
+        Ex::Atom(s, _) => s.clone(),
+        Ex::Bin(op, l, r) => format!("{} {} {}", canon(l), op, canon(r)),
+        Ex::Un(op, x) => format!("{}{}", op, canon(x)),
+        Ex::Cast(x, ty) => format!("{} as {}", canon(x), ty.join(" ")),
+        Ex::Call(path, args) => format!("{}({})", path, canon_list(args)),
+        Ex::Method(r, name, args) => format!("{}.{}({})", canon(r), name, canon_list(args)),
+        Ex::Index(r, i) => format!("{}[{}]", canon(r), canon(i)),
+        Ex::Tuple(xs) => format!("({})", canon_list(xs)),
+        Ex::Str => "<str>".to_string(),
+        Ex::Range(..) => "<range>".to_string(),
+        Ex::Closure(..) => "<closure>".to_string(),
+        Ex::IfExpr(..) => "<ifexpr>".to_string(),
+        Ex::IfLet(..) => "<iflet>".to_string(),
+        Ex::MatchExpr(..) => "<matchexpr>".to_string(),
+        Ex::BlockExpr(..) => "<blockexpr>".to_string(),
+        Ex::ArrRepeat(..) => "<arr_repeat>".to_string(),
+        Ex::ArrLit(..) => "<arr_lit>".to_string(),
+        Ex::Exit => "<exit>".to_string(),
+        Ex::Unknown => "<unknown>".to_string(),
+    }
+}
+
+// ---------------- values / env ----------------
+
+/// Element type of an array value: a primitive or a nested array.
+#[derive(Debug, Clone)]
+enum ETy {
+    Prim(Ty),
+    Nested(Box<Arr>),
+}
+
+/// Abstract array value: length interval, joined element interval,
+/// element type.
+#[derive(Debug, Clone)]
+struct Arr {
+    len: Option<Ival>,
+    elem: Iv,
+    ety: Option<ETy>,
+}
+
+fn ety_prim(ety: &Option<ETy>) -> Option<Ty> {
+    match ety {
+        Some(ETy::Prim(t)) => Some(*t),
+        _ => None,
+    }
+}
+
+/// Abstract value: interval + declared type + array/tuple/closure parts.
+#[derive(Debug, Clone)]
+struct Val {
+    iv: Iv,
+    ty: Option<Ty>,
+    arr: Option<Arr>,
+    tup: Option<Vec<Val>>,
+    clo: Option<(Vec<String>, (usize, usize))>,
+}
+
+impl Val {
+    fn top() -> Val {
+        Val::of3(Iv::Top, None, None)
+    }
+
+    fn of(iv: Iv, ty: Option<Ty>) -> Val {
+        Val::of3(iv, ty, None)
+    }
+
+    fn of3(iv: Iv, ty: Option<Ty>, arr: Option<Arr>) -> Val {
+        Val {
+            iv,
+            ty,
+            arr,
+            tup: None,
+            clo: None,
+        }
+    }
+}
+
+/// Per-scope abstract state: variable values plus a fact table keyed by
+/// canonical expression strings.
+#[derive(Default)]
+struct Env {
+    vars: BTreeMap<String, Val>,
+    facts: BTreeMap<String, Ival>,
+    terminated: bool,
+}
+
+fn atom_root(name: &str) -> &str {
+    let cut = name.find(['.', '[']).unwrap_or(name.len());
+    &name[..cut]
+}
+
+fn is_word_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Word-boundary occurrence of `word` inside `s`.
+fn mentions_word(s: &str, word: &str) -> bool {
+    let sb = s.as_bytes();
+    let wb = word.as_bytes();
+    if wb.is_empty() || sb.len() < wb.len() {
+        return false;
+    }
+    for (at, w) in sb.windows(wb.len()).enumerate() {
+        if w != wb {
+            continue;
+        }
+        let pre_ok = at == 0 || !is_word_byte(sb[at - 1]);
+        let end = at + wb.len();
+        let post_ok = end >= sb.len() || !is_word_byte(sb[end]);
+        if pre_ok && post_ok {
+            return true;
+        }
+    }
+    false
+}
+
+impl Env {
+    /// Branch-local copy: keeps iv/ty/arr, drops tuple and closure parts.
+    fn snap(&self) -> Env {
+        Env {
+            vars: self
+                .vars
+                .iter()
+                .map(|(k, v)| (k.clone(), Val::of3(v.iv, v.ty, v.arr.clone())))
+                .collect(),
+            facts: self.facts.clone(),
+            terminated: self.terminated,
+        }
+    }
+
+    /// Forget everything known about `name`'s root: the variable chain
+    /// itself and every fact mentioning the root.
+    fn havoc_name(&mut self, name: &str) {
+        let root = atom_root(name).to_string();
+        let keys: Vec<String> = self.vars.keys().cloned().collect();
+        for k in keys {
+            if k == name || atom_root(&k) == root {
+                if let Some(v) = self.vars.get(&k) {
+                    let arr = v.arr.as_ref().map(|a| Arr {
+                        len: a.len,
+                        elem: Iv::Top,
+                        ety: a.ety.clone(),
+                    });
+                    let nv = Val::of3(Iv::Top, v.ty, arr);
+                    self.vars.insert(k, nv);
+                }
+            }
+        }
+        self.facts.retain(|k, _| !mentions_word(k, &root));
+    }
+}
+
+/// Join two branch envs; a terminated branch contributes nothing.
+fn join_env(a: Env, b: Env) -> Env {
+    if a.terminated {
+        return b;
+    }
+    if b.terminated {
+        return a;
+    }
+    let mut out = Env::default();
+    let keys: BTreeSet<&String> = a.vars.keys().chain(b.vars.keys()).collect();
+    for k in keys {
+        let v = match (a.vars.get(k), b.vars.get(k)) {
+            (Some(va), Some(vb)) => Val::of3(
+                join(va.iv, vb.iv),
+                va.ty.or(vb.ty),
+                va.arr.clone().or_else(|| vb.arr.clone()),
+            ),
+            (Some(v), None) | (None, Some(v)) => Val::of3(Iv::Top, v.ty, v.arr.clone()),
+            (None, None) => continue,
+        };
+        out.vars.insert(k.clone(), v);
+    }
+    for (k, fa) in &a.facts {
+        if let Some(fb) = b.facts.get(k) {
+            if let Iv::Rng(lo, hi) = join(Iv::Rng(fa.0, fa.1), Iv::Rng(fb.0, fb.1)) {
+                out.facts.insert(k.clone(), (lo, hi));
+            }
+        }
+    }
+    out
+}
+
+// ---------------- obligations / context ----------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Status {
+    Proved,
+    Violated,
+    Allowed,
+    Unknown,
+}
+
+impl Status {
+    fn as_str(self) -> &'static str {
+        match self {
+            Status::Proved => "proved",
+            Status::Violated => "violated",
+            Status::Allowed => "allowed",
+            Status::Unknown => "unknown",
+        }
+    }
+}
+
+/// One discharged (or failed) proof obligation.
+#[derive(Debug, Clone)]
+struct Obl {
+    file: String,
+    line: usize,
+    kind: &'static str,
+    detail: String,
+    status: Status,
+    witness: Option<String>,
+}
+
+/// Memo key for interprocedural summaries: qualified name, width, and
+/// the argument intervals (`Bot` folded into `Top`).
+type MemoKey = (String, u32, Vec<Option<Ival>>);
+
+struct Ctx<'m> {
+    model: &'m Model,
+    pragmas: &'m Pragmas,
+    width: u32,
+    file: &'m str,
+    item: &'m Item,
+    toks: &'m [Tok],
+    obls: Vec<Obl>,
+    depth: usize,
+    emit_on: bool,
+    call_chain: Vec<String>,
+    cur_line: usize,
+    rec: usize,
+    rec_hit: bool,
+    smemo: BTreeMap<MemoKey, Val>,
+    cmemo: BTreeMap<String, Option<i128>>,
+}
+
+impl<'m> Ctx<'m> {
+    fn new(model: &'m Model, pragmas: &'m Pragmas, width: u32, item: &'m Item) -> Option<Ctx<'m>> {
+        let toks = model.file_toks(&item.file)?;
+        Some(Ctx {
+            model,
+            pragmas,
+            width,
+            file: &item.file,
+            item,
+            toks,
+            obls: Vec::new(),
+            depth: 0,
+            emit_on: true,
+            call_chain: Vec::new(),
+            cur_line: item.line,
+            rec: 0,
+            rec_hit: false,
+            smemo: BTreeMap::new(),
+            cmemo: BTreeMap::new(),
+        })
+    }
+
+    /// Module const by (last-segment) name -> singleton value, memoized.
+    fn const_value(&mut self, name: &str) -> Option<i128> {
+        let last = name.rsplit("::").next().unwrap_or(name).to_string();
+        if let Some(v) = self.cmemo.get(&last) {
+            return *v;
+        }
+        self.cmemo.insert(last.clone(), None);
+        let model = self.model;
+        for c in &model.consts {
+            if c.name == last && !c.value_toks.is_empty() {
+                let toks: Vec<Tok> = c.value_toks.iter().map(|t| fake_tok(t)).collect();
+                let mut p = P::new(&toks, 0, toks.len());
+                let e = parse_expr(&mut p, 0, false);
+                let mut env = Env::default();
+                let v = eval_expr(&e, &mut env, self, false);
+                if let Iv::Rng(lo, hi) = v.iv {
+                    if lo == hi {
+                        self.cmemo.insert(last.clone(), Some(lo));
+                        break;
+                    }
+                }
+            }
+        }
+        self.cmemo.get(&last).copied().flatten()
+    }
+}
+
+/// Synthetic token for parsing a const initializer's recorded text.
+fn fake_tok(text: &str) -> Tok {
+    let kind = if text.starts_with(|c: char| c.is_ascii_digit()) {
+        Kind::Num
+    } else if ident_start(text) {
+        Kind::Ident
+    } else if text == "\"\"" {
+        Kind::Str
+    } else {
+        Kind::Punct
+    };
+    Tok {
+        line: 0,
+        text: text.to_string(),
+        kind,
+        skipped: false,
+    }
+}
+
+/// `u32::MAX`-style builtin constants.
+fn type_const(name: &str) -> Option<Ival> {
+    let (prim, suffix) = name.split_once("::")?;
+    let ty = parse_prim_ty(prim)?;
+    match suffix {
+        "BITS" => {
+            let w = i128::from(ty.0);
+            Some((w, w))
+        }
+        "MAX" => {
+            let hi = ty_range(ty).1;
+            Some((hi, hi))
+        }
+        "MIN" => {
+            let lo = ty_range(ty).0;
+            Some((lo, lo))
+        }
+        _ => None,
+    }
+}
+
+/// Walk a struct field chain -> type tokens of the leaf field.
+fn resolve_field_ty(model: &Model, root_ty_name: &str, fields: &[String]) -> Option<Vec<String>> {
+    let mut cur: Option<String> = Some(root_ty_name.to_string());
+    let mut toks: Option<Vec<String>> = None;
+    for f in fields {
+        let cur_name = cur.clone()?;
+        let st = model.structs.iter().find(|s| s.name == cur_name)?;
+        let ft = st.fields.iter().find(|(n, _)| n == f)?;
+        toks = Some(ft.1.clone());
+        let ts: Vec<&str> = ft
+            .1
+            .iter()
+            .map(String::as_str)
+            .filter(|t| !matches!(*t, "&" | "mut"))
+            .collect();
+        let ts = if ts.len() > 2 && matches!(ts[0], "Arc" | "Box" | "Rc") {
+            ts[2..ts.len() - 1].to_vec()
+        } else {
+            ts
+        };
+        cur = ts.first().map(|s| s.to_string());
+    }
+    toks
+}
+
+/// Primitive / array / known-alias resolution of a type token list.
+fn ty_of_tokens(tytoks: &[String], ctx: &mut Ctx) -> (Option<Ty>, Option<Arr>) {
+    let ts: Vec<&str> = tytoks
+        .iter()
+        .map(String::as_str)
+        .filter(|t| !matches!(*t, "&" | "mut" | "'" | ")" | "("))
+        .collect();
+    let Some(&first) = ts.first() else {
+        return (None, None);
+    };
+    if first == "[" {
+        // [T; N] (nested allowed) or slice [T]
+        let mut semi = None;
+        let mut d = 0i64;
+        for (k2, t) in ts.iter().enumerate() {
+            match *t {
+                "[" | "(" | "<" => d += 1,
+                "]" | ")" | ">" => d -= 1,
+                ";" if d == 1 => {
+                    semi = Some(k2);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let Some(semi) = semi else {
+            let inner: Vec<&str> = ts
+                .iter()
+                .copied()
+                .filter(|t| !matches!(*t, "[" | "]" | "&" | "mut"))
+                .collect();
+            let elem = inner.first().and_then(|t| parse_prim_ty(t));
+            if let Some(elem) = elem {
+                return (
+                    None,
+                    Some(Arr {
+                        len: None,
+                        elem: Iv::Top,
+                        ety: Some(ETy::Prim(elem)),
+                    }),
+                );
+            }
+            return (None, None);
+        };
+        let Some(close) = ts.iter().rposition(|t| *t == "]") else {
+            return (None, None);
+        };
+        let elem_toks: Vec<String> = ts[1..semi].iter().map(|s| s.to_string()).collect();
+        let (ety, earr) = ty_of_tokens(&elem_toks, ctx);
+        let cnt: Vec<&str> = if semi + 1 <= close {
+            ts[semi + 1..close].to_vec()
+        } else {
+            Vec::new()
+        };
+        let mut ln: Option<i128> = None;
+        if !cnt.is_empty() {
+            let name = cnt
+                .iter()
+                .copied()
+                .filter(|t| *t != "::")
+                .collect::<Vec<_>>()
+                .join("::");
+            ln = ctx.const_value(&name);
+        }
+        if ln.is_none() && cnt.len() == 1 {
+            ln = cnt[0].parse::<i128>().ok();
+        }
+        let lniv = ln.map(|l| (l, l));
+        if let Some(earr) = earr {
+            return (
+                None,
+                Some(Arr {
+                    len: lniv,
+                    elem: Iv::Top,
+                    ety: Some(ETy::Nested(Box::new(earr))),
+                }),
+            );
+        }
+        return (
+            None,
+            Some(Arr {
+                len: lniv,
+                elem: of_opt(ety.map(ty_range)),
+                ety: ety.map(ETy::Prim),
+            }),
+        );
+    }
+    // strip wrappers Arc< >, Box< >, Rc< >
+    if ts.len() > 2 && matches!(first, "Arc" | "Box" | "Rc") && ts[1] == "<" {
+        let inner: Vec<String> = ts[2..ts.len() - 1].iter().map(|s| s.to_string()).collect();
+        return ty_of_tokens(&inner, ctx);
+    }
+    if first == "Vec" && ts.len() > 2 && ts[1] == "<" {
+        if let Some(elem) = parse_prim_ty(ts[2]) {
+            return (
+                None,
+                Some(Arr {
+                    len: None,
+                    elem: Iv::Top,
+                    ety: Some(ETy::Prim(elem)),
+                }),
+            );
+        }
+        return (None, None);
+    }
+    if let Some(prim) = parse_prim_ty(first) {
+        return (Some(prim), None);
+    }
+    // type alias Lane = [u64; LANES]
+    if first == "Lane" || (ts.len() >= 3 && ts.last() == Some(&"Lane")) {
+        let ln = ctx.const_value("LANES").filter(|v| *v != 0).unwrap_or(8);
+        return (
+            None,
+            Some(Arr {
+                len: Some((ln, ln)),
+                elem: of_opt(Some(ty_range((64, false)))),
+                ety: Some(ETy::Prim((64, false))),
+            }),
+        );
+    }
+    (None, None)
+}
+
+/// Declared type of an atom path, via params / lets / struct fields.
+fn atom_ty(name: &str, parts: &[Part], env: &Env, ctx: &mut Ctx) -> (Option<Ty>, Option<Arr>) {
+    if let Some(v) = env.vars.get(name) {
+        if v.ty.is_some() {
+            return (v.ty, v.arr.clone());
+        }
+    }
+    let root = match parts.first() {
+        Some(Part::Root(r)) => r.clone(),
+        _ => return (None, None),
+    };
+    let rest = parts.get(1..).unwrap_or(&[]);
+    let fields: Vec<String> = rest
+        .iter()
+        .filter_map(|p| match p {
+            Part::F(f) => Some(f.clone()),
+            _ => None,
+        })
+        .collect();
+    let has_ix = rest.iter().any(|p| matches!(p, Part::Ix(_)));
+    let rng_ix = rest
+        .iter()
+        .any(|p| matches!(p, Part::Ix(e) if matches!(**e, Ex::Range(..))));
+
+    let indexed = |arr: &Arr| -> (Option<Ty>, Option<Arr>) {
+        if rng_ix {
+            return (
+                None,
+                Some(Arr {
+                    len: None,
+                    elem: arr.elem,
+                    ety: arr.ety.clone(),
+                }),
+            );
+        }
+        match &arr.ety {
+            Some(ETy::Nested(a)) => (None, Some((**a).clone())),
+            other => (ety_prim(other), None),
+        }
+    };
+
+    if root == "self" && !fields.is_empty() {
+        if let Some(owner) = ctx.item.owner.clone() {
+            if let Some(toks) = resolve_field_ty(ctx.model, &owner, &fields) {
+                let (ty, arr) = ty_of_tokens(&toks, ctx);
+                if has_ix {
+                    if let Some(arr) = &arr {
+                        return indexed(arr);
+                    }
+                }
+                return (ty, arr);
+            }
+        }
+    }
+    // root var with declared arr type, indexed
+    if fields.is_empty() && has_ix {
+        if let Some(rv) = env.vars.get(&root) {
+            if let Some(arr) = &rv.arr {
+                return indexed(arr);
+            }
+        }
+    }
+    (None, None)
+}
+
+// ---------------- evaluation ----------------
+
+/// Evaluate an expression to an abstract value, then refine it through
+/// the fact table (keyed by canonical expression strings). A recursion
+/// budget bounds pathological nesting; exceeding it poisons the item.
+fn eval_expr(e: &Ex, env: &mut Env, ctx: &mut Ctx, emit: bool) -> Val {
+    if ctx.rec >= REC_CAP {
+        ctx.rec_hit = true;
+        return Val::top();
+    }
+    ctx.rec += 1;
+    let mut v = eval_inner(e, env, ctx, emit);
+    ctx.rec -= 1;
+    let c = canon(e);
+    if let Some(f) = env.facts.get(&c).copied() {
+        let iv = inter(v.iv, Iv::Rng(f.0, f.1));
+        v = Val::of3(iv, v.ty, v.arr);
+    }
+    v
+}
+
+fn eval_inner(e: &Ex, env: &mut Env, ctx: &mut Ctx, emit: bool) -> Val {
+    match e {
+        Ex::Num(v, suf) => {
+            let ty = suf.as_deref().and_then(parse_prim_ty);
+            Val::of(Iv::Rng(*v, *v), ty)
+        }
+        Ex::Float | Ex::Str => Val::top(),
+        Ex::Atom(..) => eval_atom(e, env, ctx),
+        Ex::Un(op, inner) => {
+            let v = eval_expr(inner, env, ctx, emit);
+            if op == "-" {
+                Val::of(of_opt(iv_neg(rng(v.iv))), v.ty)
+            } else {
+                Val::top()
+            }
+        }
+        Ex::Cast(src_e, ty_toks) => {
+            let src = eval_expr(src_e, env, ctx, emit);
+            let (tgt, _) = ty_of_tokens(ty_toks, ctx);
+            let Some(tgt) = tgt else {
+                // as f64 / unknown target
+                return Val::top();
+            };
+            if emit && ctx.emit_on {
+                check_cast(e, &src, tgt, env, ctx);
+            }
+            let (lo, hi) = ty_range(tgt);
+            if let Some((s0, s1)) = rng(src.iv) {
+                if s0 >= lo && s1 <= hi {
+                    return Val::of(src.iv, Some(tgt));
+                }
+            }
+            // float source or wrapping: full target range
+            Val::of(Iv::Rng(lo, hi), Some(tgt))
+        }
+        Ex::Bin(..) => eval_bin(e, env, ctx, emit),
+        Ex::Tuple(xs) => {
+            let vals: Vec<Val> = xs.iter().map(|x| eval_expr(x, env, ctx, emit)).collect();
+            let mut v = Val::top();
+            v.tup = Some(vals);
+            v
+        }
+        Ex::ArrRepeat(el, cnt) => {
+            let ev = eval_expr(el, env, ctx, emit);
+            let cv = eval_expr(cnt, env, ctx, emit);
+            let ln = rng(cv.iv).filter(|(l, _)| *l >= 0);
+            Val::of3(
+                Iv::Top,
+                None,
+                Some(Arr {
+                    len: ln,
+                    elem: ev.iv,
+                    ety: ev.ty.map(ETy::Prim),
+                }),
+            )
+        }
+        Ex::ArrLit(xs) => {
+            let vals: Vec<Val> = xs.iter().map(|x| eval_expr(x, env, ctx, emit)).collect();
+            let mut elem: Option<Iv> = None;
+            let mut ety: Option<Ty> = None;
+            for v in &vals {
+                elem = Some(match elem {
+                    None => v.iv,
+                    Some(p) => join(p, v.iv),
+                });
+                ety = ety.or(v.ty);
+            }
+            let n = xs.len() as i128;
+            Val::of3(
+                Iv::Top,
+                None,
+                Some(Arr {
+                    len: Some((n, n)),
+                    elem: elem.unwrap_or(Iv::Top),
+                    ety: ety.map(ETy::Prim),
+                }),
+            )
+        }
+        Ex::Index(recv_e, idx_e) => {
+            let recv = eval_expr(recv_e, env, ctx, emit);
+            let idx = eval_expr(idx_e, env, ctx, emit);
+            if let Some(arr) = &recv.arr {
+                if emit && ctx.emit_on {
+                    if let Some((l0, l1)) = arr.len {
+                        if l0 == l1 {
+                            check_index(e, &idx, l0, env, ctx);
+                        }
+                    }
+                }
+                return match &arr.ety {
+                    Some(ETy::Nested(a)) => Val::of3(Iv::Top, None, Some((**a).clone())),
+                    other => Val::of(arr.elem, ety_prim(other)),
+                };
+            }
+            Val::top()
+        }
+        Ex::Call(..) => eval_call(e, env, ctx, emit),
+        Ex::Method(..) => eval_method(e, env, ctx, emit),
+        Ex::IfExpr(..) => eval_ifexpr(e, env, ctx, emit),
+        Ex::MatchExpr(..) => eval_matchexpr(e, env, ctx, emit),
+        Ex::BlockExpr((lo, hi)) => {
+            let mut sub = env.snap();
+            let rv = walk_block(*lo, *hi, &mut sub, ctx);
+            for (k, v) in sub.vars {
+                if env.vars.contains_key(&k) {
+                    env.vars.insert(k, v);
+                }
+            }
+            rv.unwrap_or_else(Val::top)
+        }
+        _ => Val::top(),
+    }
+}
+
+fn eval_atom(e: &Ex, env: &mut Env, ctx: &mut Ctx) -> Val {
+    let Ex::Atom(name, parts) = e else {
+        return Val::top();
+    };
+    if name == "true" {
+        return Val::of(Iv::Rng(1, 1), None);
+    }
+    if name == "false" {
+        return Val::of(Iv::Rng(0, 0), None);
+    }
+    if name == "None" {
+        return Val::of(Iv::Bot, None);
+    }
+    if let Some(tc) = type_const(name) {
+        return Val::of(Iv::Rng(tc.0, tc.1), None);
+    }
+    let w = i128::from(ctx.width);
+    if name == "bits" || name.ends_with(".bits") || name.ends_with("::bits") {
+        // the symbolic datapath width parameter of the current run
+        let (ty, arr) = atom_ty(name, parts, env, ctx);
+        if let Some(base) = env.vars.get(name).cloned() {
+            let iv = if base.iv == Iv::Top {
+                Iv::Rng(w, w)
+            } else {
+                base.iv
+            };
+            return Val::of3(iv, base.ty.or(ty), base.arr.or(arr));
+        }
+        return Val::of3(Iv::Rng(w, w), ty, arr);
+    }
+    if let Some(v) = env.vars.get(name) {
+        if v.iv != Iv::Top || v.ty.is_some() || v.arr.is_some() {
+            let mut iv = v.iv;
+            if iv == Iv::Top {
+                if let Some(t) = v.ty {
+                    iv = of_opt(Some(ty_range(t)));
+                }
+            }
+            return Val::of3(iv, v.ty, v.arr.clone());
+        }
+    }
+    let cv = ctx.const_value(name);
+    let last = name.rsplit("::").next().unwrap_or(name);
+    let model = ctx.model;
+    let cd = model.consts.iter().find(|c| c.name == last);
+    if let Some(cv) = cv {
+        let (cty, carr) = match cd {
+            Some(c) if !c.ty.is_empty() => ty_of_tokens(&c.ty, ctx),
+            _ => (None, None),
+        };
+        return Val::of3(Iv::Rng(cv, cv), cty, carr);
+    }
+    if let Some(c) = cd {
+        if !c.ty.is_empty() {
+            let (cty, carr) = ty_of_tokens(&c.ty, ctx);
+            if cty.is_some() || carr.is_some() {
+                return Val::of3(of_opt(cty.map(ty_range)), cty, carr);
+            }
+        }
+    }
+    let (ty, arr) = atom_ty(name, parts, env, ctx);
+    if ty.is_some() || arr.is_some() {
+        return Val::of3(of_opt(ty.map(ty_range)), ty, arr);
+    }
+    Val::top()
+}
+
+fn eval_bin(e: &Ex, env: &mut Env, ctx: &mut Ctx, emit: bool) -> Val {
+    let Ex::Bin(op, lhs, rhs) = e else {
+        return Val::top();
+    };
+    if op == "&&" || op == "||" {
+        eval_expr(lhs, env, ctx, emit);
+        let mut sub = env.snap();
+        refine(lhs, &mut sub, ctx, op == "||");
+        if !sub.terminated {
+            eval_expr(rhs, &mut sub, ctx, emit);
+        }
+        return Val::of(Iv::Rng(0, 1), None);
+    }
+    let l = eval_expr(lhs, env, ctx, emit);
+    let r = eval_expr(rhs, env, ctx, emit);
+    let ty = l.ty.or(r.ty);
+    let (a, b) = (l.iv, r.iv);
+    if a == Iv::Bot || b == Iv::Bot {
+        return Val::of(Iv::Bot, ty);
+    }
+    if op == "<<" || op == ">>" {
+        let mut lty = l.ty;
+        if lty.is_none() {
+            if let Ex::Num(v, _) = &**lhs {
+                // untyped integer literal: infer the 64-bit datapath width
+                lty = Some((64, *v < 0));
+            }
+        }
+        if emit && ctx.emit_on {
+            check_shift(e, lty, &r, env, ctx);
+        }
+        let mut iv = if op == "<<" {
+            of_opt(iv_shl(rng(a), rng(b), lty))
+        } else {
+            of_opt(iv_shr(rng(a), rng(b)))
+        };
+        // low-bit clearing round trip: (x >> s) << s stays within
+        // [0, x.hi] for non-negative x regardless of how wide s is
+        if op == "<<" {
+            if let Ex::Bin(op2, x, s2) = &**lhs {
+                if op2 == ">>" && canon(s2) == canon(rhs) {
+                    let xv = eval_expr(x, env, ctx, false);
+                    if let Some((x0, x1)) = rng(xv.iv) {
+                        if x0 >= 0 {
+                            iv = inter(iv, Iv::Rng(0, x1));
+                        }
+                    }
+                }
+            }
+        }
+        return Val::of(iv, lty);
+    }
+    if matches!(op.as_str(), "==" | "!=" | "<" | ">" | "<=" | ">=") {
+        return Val::of(Iv::Rng(0, 1), None);
+    }
+    let raw = match op.as_str() {
+        "+" => iv_add(rng(a), rng(b)),
+        "-" => iv_sub(rng(a), rng(b)),
+        "*" => iv_mul(rng(a), rng(b)),
+        "/" => iv_div(rng(a), rng(b)),
+        "%" => iv_rem(rng(a), rng(b)),
+        "&" => iv_and(rng(a), rng(b)),
+        "|" => iv_or(rng(a), rng(b)),
+        "^" => iv_xor(rng(a), rng(b)),
+        _ => None,
+    };
+    let mut iv = of_opt(raw);
+    // arithmetic that leaves the type range wraps (release) -> type range
+    if let (Some((lo2, hi2)), Some(t)) = (rng(iv), ty) {
+        let (lo, hi) = ty_range(t);
+        if lo2 < lo || hi2 > hi {
+            iv = Iv::Rng(lo, hi);
+        }
+    }
+    Val::of(iv, ty)
+}
+
+fn eval_method(e: &Ex, env: &mut Env, ctx: &mut Ctx, emit: bool) -> Val {
+    let Ex::Method(recv_e, name, margs) = e else {
+        return Val::top();
+    };
+    let recv = eval_expr(recv_e, env, ctx, emit);
+    let args: Vec<Val> = margs.iter().map(|a| eval_expr(a, env, ctx, emit)).collect();
+    let rw = recv.ty.map_or(64, |t| t.0);
+    match name.as_str() {
+        "len" => {
+            if let Some(arr) = &recv.arr {
+                if let Some((l0, l1)) = arr.len {
+                    return Val::of(Iv::Rng(l0, l1), Some((64, false)));
+                }
+            }
+            Val::of(Iv::Rng(0, (1i128 << 64) - 1), Some((64, false)))
+        }
+        "leading_zeros" => Val::of(of_opt(Some(clz_iv(rng(recv.iv), rw))), Some((32, false))),
+        "trailing_zeros" | "count_ones" => {
+            Val::of(Iv::Rng(0, i128::from(rw)), Some((32, false)))
+        }
+        "min" if !args.is_empty() => match (rng(recv.iv), rng(args[0].iv)) {
+            (Some(a), Some(b)) => Val::of(
+                Iv::Rng(a.0.min(b.0), a.1.min(b.1)),
+                recv.ty.or(args[0].ty),
+            ),
+            // min still bounds from above
+            (Some(x), None) | (None, Some(x)) => {
+                Val::of(Iv::Rng(i128::MIN, x.1), recv.ty.or(args[0].ty))
+            }
+            (None, None) => Val::of(Iv::Top, recv.ty),
+        },
+        "max" if !args.is_empty() => match (rng(recv.iv), rng(args[0].iv)) {
+            (Some(a), Some(b)) => Val::of(
+                Iv::Rng(a.0.max(b.0), a.1.max(b.1)),
+                recv.ty.or(args[0].ty),
+            ),
+            (Some(x), None) | (None, Some(x)) => {
+                Val::of(Iv::Rng(x.0, i128::MAX), recv.ty.or(args[0].ty))
+            }
+            (None, None) => Val::of(Iv::Top, recv.ty),
+        },
+        "clamp" if args.len() == 2 => {
+            if let (Some(lo_v), Some(hi_v)) = (rng(args[0].iv), rng(args[1].iv)) {
+                let r0 = rng(recv.iv).map_or(lo_v.0, |a| a.0);
+                let r1 = rng(recv.iv).map_or(hi_v.1, |a| a.1);
+                let cl = |v: i128, l: i128, h: i128| v.max(l).min(h);
+                return Val::of(
+                    Iv::Rng(cl(r0, lo_v.0, hi_v.0), cl(r1, lo_v.1, hi_v.1)),
+                    recv.ty.or(args[0].ty),
+                );
+            }
+            Val::of(Iv::Top, recv.ty)
+        }
+        "saturating_sub" if !args.is_empty() => {
+            if let Some(t) = recv.ty {
+                if !t.1 {
+                    if let (Some(a), Some(b)) = (rng(recv.iv), rng(args[0].iv)) {
+                        return Val::of(
+                            Iv::Rng(
+                                a.0.saturating_sub(b.1).max(0),
+                                a.1.saturating_sub(b.0).max(0),
+                            ),
+                            recv.ty,
+                        );
+                    }
+                    return Val::of(Iv::Rng(0, ty_range(t).1), recv.ty);
+                }
+            }
+            Val::of(Iv::Top, recv.ty)
+        }
+        "saturating_add" if !args.is_empty() => {
+            if let (Some(a), Some(b), Some(t)) = (rng(recv.iv), rng(args[0].iv), recv.ty) {
+                let (lo, hi) = ty_range(t);
+                return Val::of(
+                    Iv::Rng(
+                        a.0.saturating_add(b.0).clamp(lo, hi),
+                        a.1.saturating_add(b.1).clamp(lo, hi),
+                    ),
+                    recv.ty,
+                );
+            }
+            Val::of(recv.iv, recv.ty)
+        }
+        "unsigned_abs" => {
+            if let Some(a) = rng(recv.iv) {
+                let (a0, a1) = (a.0.saturating_abs(), a.1.saturating_abs());
+                let lo = if a.0 <= 0 && 0 <= a.1 { 0 } else { a0.min(a1) };
+                return Val::of(Iv::Rng(lo, a0.max(a1)), Some((rw, false)));
+            }
+            Val::of(Iv::Rng(0, sat_shl(1, rw.saturating_sub(1))), Some((rw, false)))
+        }
+        "abs" => {
+            if let Some(a) = rng(recv.iv) {
+                let (a0, a1) = (a.0.saturating_abs(), a.1.saturating_abs());
+                let lo = if a.0 <= 0 && 0 <= a.1 { 0 } else { a0.min(a1) };
+                return Val::of(Iv::Rng(lo, a0.max(a1)), recv.ty);
+            }
+            Val::of(Iv::Top, recv.ty)
+        }
+        "pow" if !args.is_empty() => {
+            if let (Some(a), Some(b)) = (rng(recv.iv), rng(args[0].iv)) {
+                if a.0 >= 0 && b.0 >= 0 && b.1 <= 128 {
+                    return Val::of(Iv::Rng(spow(a.0, b.0), spow(a.1, b.1)), recv.ty);
+                }
+            }
+            Val::of(Iv::Top, recv.ty)
+        }
+        "wrapping_add" | "wrapping_sub" | "wrapping_mul" | "wrapping_shl" | "wrapping_shr" => {
+            Val::of(
+                recv.ty.map_or(Iv::Top, |t| of_opt(Some(ty_range(t)))),
+                recv.ty,
+            )
+        }
+        "find" | "get" | "first" | "last" | "position" => {
+            if let Some(arr) = &recv.arr {
+                return Val::of(arr.elem, ety_prim(&arr.ety));
+            }
+            Val::top()
+        }
+        "expect" | "unwrap" | "unwrap_or" | "unwrap_or_default" | "unwrap_or_else" => {
+            Val::of3(recv.iv, recv.ty, recv.arr)
+        }
+        "rem_euclid" if !args.is_empty() => {
+            if let Some(b) = rng(args[0].iv) {
+                if b.0 >= 1 {
+                    return Val::of(Iv::Rng(0, b.1 - 1), recv.ty.or(args[0].ty));
+                }
+            }
+            Val::of(Iv::Top, recv.ty)
+        }
+        "is_empty" => Val::of(Iv::Rng(0, 1), None),
+        // iterator plumbing: keep receiver's array info when meaningful
+        "iter" | "iter_mut" | "into_iter" | "chunks_exact" | "chunks_exact_mut" | "zip"
+        | "enumerate" | "copied" | "cloned" | "rev" | "take" | "skip" | "map" | "filter"
+        | "sum" | "product" | "collect" | "split_at" | "split_at_mut" => {
+            Val::of3(Iv::Top, None, recv.arr)
+        }
+        "to_string" | "to_owned" | "clone" | "as_slice" | "as_ref" | "as_mut" => {
+            Val::of3(recv.iv, recv.ty, recv.arr)
+        }
+        "get_or_init" | "lock" | "read" | "write" => Val::top(),
+        // resolve a project method by name for its declared return type
+        _ => match resolve_item(Some(recv_e), name, ctx) {
+            Some(it) => summary_call(it, &args, ctx),
+            None => Val::top(),
+        },
+    }
+}
+
+fn resolve_item<'m>(recv_expr: Option<&Ex>, name: &str, ctx: &Ctx<'m>) -> Option<&'m Item> {
+    let model = ctx.model;
+    let cands = model.item_named(name);
+    if cands.is_empty() {
+        return None;
+    }
+    // prefer same impl-type (self.xxx()) then same file, then unique
+    if let Some(Ex::Atom(n, _)) = recv_expr {
+        if n == "self" {
+            if let Some(owner) = &ctx.item.owner {
+                for c in &cands {
+                    if c.owner.as_deref() == Some(owner.as_str()) {
+                        return Some(c);
+                    }
+                }
+            }
+        }
+    }
+    let same_file: Vec<&'m Item> = cands
+        .iter()
+        .copied()
+        .filter(|c| c.file == ctx.file)
+        .collect();
+    if same_file.len() == 1 {
+        return Some(same_file[0]);
+    }
+    if cands.len() == 1 {
+        return Some(cands[0]);
+    }
+    // same-owner preference even without a self receiver
+    if let Some(owner) = &ctx.item.owner {
+        let own: Vec<&'m Item> = cands
+            .iter()
+            .copied()
+            .filter(|c| c.owner.as_deref() == Some(owner.as_str()))
+            .collect();
+        if own.len() == 1 {
+            return Some(own[0]);
+        }
+    }
+    None
+}
+
+fn eval_call(e: &Ex, env: &mut Env, ctx: &mut Ctx, emit: bool) -> Val {
+    let Ex::Call(path, args_e) = e else {
+        return Val::top();
+    };
+    let segs: Vec<&str> = path.split("::").collect();
+    let name = segs.last().copied().unwrap_or("");
+    let args: Vec<Val> = args_e
+        .iter()
+        .map(|a| {
+            if matches!(a, Ex::Closure(..)) {
+                Val::top()
+            } else {
+                eval_expr(a, env, ctx, emit)
+            }
+        })
+        .collect();
+    // Option/Result constructors are transparent for value purposes
+    if (name == "Some" || name == "Ok") && args.len() == 1 {
+        return args.into_iter().next().unwrap_or_else(Val::top);
+    }
+    if name == "Err" {
+        return Val::of(Iv::Bot, None);
+    }
+    // let-bound closure invoked by name
+    if let Some(cv) = env.vars.get(name) {
+        if let Some((params, (blo, bhi))) = cv.clo.clone() {
+            let mut sub = env.snap();
+            for (k2, pname) in params.iter().enumerate() {
+                let v = args.get(k2).cloned().unwrap_or_else(Val::top);
+                sub.vars.insert(pname.clone(), v);
+            }
+            return walk_block(blo, bhi, &mut sub, ctx).unwrap_or_else(Val::top);
+        }
+    }
+    // closures passed to known drivers: analyze bodies in current env
+    for (pos, a) in args_e.iter().enumerate() {
+        if let Ex::Closure(params, body) = a {
+            analyze_closure(params, *body, name, pos, env, ctx);
+        }
+    }
+    let model = ctx.model;
+    let mut it: Option<&Item> = None;
+    if segs.len() >= 2 {
+        // Type::method(x) / Self::method(x)
+        let owner_tok = segs[segs.len() - 2];
+        let owner: Option<String> = if owner_tok == "Self" {
+            ctx.item.owner.clone()
+        } else {
+            Some(owner_tok.to_string())
+        };
+        for c in model.item_named(name) {
+            if c.owner.as_deref() == owner.as_deref() {
+                it = Some(c);
+                break;
+            }
+        }
+        if it.is_none() {
+            if let Some(ow) = &owner {
+                for c in model.item_named(name) {
+                    if c.file == format!("{ow}.rs")
+                        || c.file.starts_with(&format!("{ow}/"))
+                        || c.file.ends_with(&format!("/{ow}.rs"))
+                        || c.file.contains(&format!("/{ow}/"))
+                    {
+                        it = Some(c);
+                        break;
+                    }
+                }
+            }
+        }
+    } else {
+        it = resolve_item(None, name, ctx);
+    }
+    match it {
+        Some(it) if it.body.is_some() => summary_call(it, &args, ctx),
+        // signature-only: declared return type range
+        Some(it) => declared_ret(it, ctx),
+        None => Val::top(),
+    }
+}
+
+/// Param type token groups of the `impl Fn*(T1, T2)` parameter at `pos`.
+fn closure_param_tys(callee_name: &str, pos: usize, ctx: &Ctx) -> Option<Vec<Vec<String>>> {
+    let model = ctx.model;
+    for it in model.item_named(callee_name) {
+        if pos >= it.params.len() {
+            continue;
+        }
+        let ty = &it.params[pos].1;
+        if !ty
+            .iter()
+            .any(|t| matches!(t.as_str(), "Fn" | "FnMut" | "FnOnce"))
+        {
+            continue;
+        }
+        let o = ty.iter().position(|t| t == "(")?;
+        let mut d = 0i64;
+        let mut cpar = None;
+        for (j, t) in ty.iter().enumerate().skip(o) {
+            if t == "(" {
+                d += 1;
+            } else if t == ")" {
+                d -= 1;
+                if d == 0 {
+                    cpar = Some(j);
+                    break;
+                }
+            }
+        }
+        let cpar = cpar?;
+        let inner = &ty[o + 1..cpar];
+        let mut parts: Vec<Vec<String>> = Vec::new();
+        let mut d = 0i64;
+        let mut start = 0usize;
+        for (j, t) in inner.iter().enumerate() {
+            match t.as_str() {
+                "(" | "[" | "<" => d += 1,
+                ")" | "]" | ">" => d -= 1,
+                "," if d == 0 => {
+                    parts.push(inner[start..j].to_vec());
+                    start = j + 1;
+                }
+                _ => {}
+            }
+        }
+        if start < inner.len() {
+            parts.push(inner[start..].to_vec());
+        }
+        return Some(parts);
+    }
+    None
+}
+
+fn analyze_closure(
+    params: &[String],
+    body: (usize, usize),
+    callee_name: &str,
+    pos: usize,
+    env: &Env,
+    ctx: &mut Ctx,
+) {
+    let mut sub = env.snap();
+    let ptys = closure_param_tys(callee_name, pos, ctx);
+    for (k2, pname) in params.iter().enumerate() {
+        let (ty, arr) = match &ptys {
+            Some(p) if k2 < p.len() => ty_of_tokens(&p[k2], ctx),
+            _ => (None, None),
+        };
+        sub.vars
+            .insert(pname.clone(), Val::of3(of_opt(ty.map(ty_range)), ty, arr));
+    }
+    walk_block(body.0, body.1, &mut sub, ctx);
+}
+
+fn declared_ret(it: &Item, ctx: &mut Ctx) -> Val {
+    let (rt, arr) = ty_of_tokens(&it.ret, ctx);
+    Val::of3(of_opt(rt.map(ty_range)), rt, arr)
+}
+
+/// Interprocedural summary: bind args, walk the callee body with
+/// obligation emission off, memoize on (qname, width, arg intervals).
+fn summary_call<'m>(it: &'m Item, args: &[Val], ctx: &mut Ctx<'m>) -> Val {
+    let qname = it.qname();
+    if ctx.depth >= CALL_DEPTH_CAP || ctx.call_chain.contains(&qname) {
+        return declared_ret(it, ctx);
+    }
+    let Some((blo, bhi)) = it.body else {
+        return declared_ret(it, ctx);
+    };
+    let key: MemoKey = (
+        qname.clone(),
+        ctx.width,
+        args.iter().map(|a| rng(a.iv)).collect(),
+    );
+    if let Some(v) = ctx.smemo.get(&key) {
+        return v.clone();
+    }
+    let Some(toks) = ctx.model.file_toks(&it.file) else {
+        return declared_ret(it, ctx);
+    };
+    let mut sub = Env::default();
+    let mut ai = 0usize;
+    for (pat, ty) in &it.params {
+        let names: Vec<&String> = pat
+            .iter()
+            .filter(|t| !matches!(t.as_str(), "&" | "mut" | "(" | ")" | ","))
+            .collect();
+        if names.len() == 1 && names[0] == "self" {
+            continue;
+        }
+        let (pty, parr) = ty_of_tokens(ty, ctx);
+        let v = args.get(ai).cloned().unwrap_or_else(Val::top);
+        let mut iv = v.iv;
+        if iv == Iv::Top {
+            if let Some(t) = pty {
+                iv = of_opt(Some(ty_range(t)));
+            }
+        }
+        if iv != Iv::Top {
+            if let Some(t) = pty {
+                iv = inter(iv, of_opt(Some(ty_range(t))));
+            }
+        }
+        if names.len() == 1 {
+            sub.vars
+                .insert(names[0].clone(), Val::of3(iv, pty.or(v.ty), parr.or(v.arr)));
+        }
+        ai += 1;
+    }
+    let saved_item = ctx.item;
+    let saved_file = ctx.file;
+    let saved_toks = ctx.toks;
+    let saved_emit = ctx.emit_on;
+    let saved_line = ctx.cur_line;
+    ctx.call_chain.push(qname);
+    ctx.depth += 1;
+    ctx.item = it;
+    ctx.file = &it.file;
+    ctx.toks = toks;
+    // obligations inside callees are checked when the callee itself is
+    // analyzed top-level
+    ctx.emit_on = false;
+    let rv = walk_block(blo, bhi, &mut sub, ctx);
+    ctx.depth -= 1;
+    ctx.call_chain.pop();
+    ctx.item = saved_item;
+    ctx.file = saved_file;
+    ctx.toks = saved_toks;
+    ctx.emit_on = saved_emit;
+    ctx.cur_line = saved_line;
+    let rv = match rv {
+        None => declared_ret(it, ctx),
+        Some(v) if v.tup.is_none() => {
+            let (rt, arr) = ty_of_tokens(&it.ret, ctx);
+            if v.iv == Iv::Top && rt.is_some() {
+                Val::of3(of_opt(rt.map(ty_range)), rt, v.arr.or(arr))
+            } else if v.ty.is_none() {
+                Val::of3(v.iv, rt, v.arr.or(arr))
+            } else {
+                v
+            }
+        }
+        Some(v) => v,
+    };
+    ctx.smemo.insert(key, rv.clone());
+    rv
+}
+
+// ---------------- obligations ----------------
+
+fn emit_obl(
+    ctx: &mut Ctx,
+    kind: &'static str,
+    detail: String,
+    status: Status,
+    witness: Option<String>,
+) {
+    let mut status = status;
+    if status == Status::Violated {
+        let allowed = ctx
+            .pragmas
+            .get(ctx.file)
+            .and_then(|m| m.get(&ctx.cur_line))
+            .is_some_and(|rules| rules.contains(kind));
+        if allowed {
+            status = Status::Allowed;
+        }
+    }
+    ctx.obls.push(Obl {
+        file: ctx.file.to_string(),
+        line: ctx.cur_line,
+        kind,
+        detail,
+        status,
+        witness,
+    });
+}
+
+fn check_shift(e: &Ex, lty: Option<Ty>, amt: &Val, _env: &mut Env, ctx: &mut Ctx) {
+    let Some(width) = lty.map(|t| i128::from(t.0)) else {
+        emit_obl(
+            ctx,
+            "shift-range",
+            format!("`{}`: unknown operand width", canon(e)),
+            Status::Unknown,
+            None,
+        );
+        return;
+    };
+    let Ex::Bin(_, _, rhs) = e else {
+        return;
+    };
+    match amt.iv {
+        Iv::Bot => {}
+        Iv::Top => {
+            emit_obl(
+                ctx,
+                "shift-range",
+                format!(
+                    "`{}`: amount `{}` unbounded (width {width})",
+                    canon(e),
+                    canon(rhs)
+                ),
+                Status::Unknown,
+                None,
+            );
+        }
+        Iv::Rng(a0, a1) => {
+            if 0 <= a0 && a1 < width {
+                emit_obl(
+                    ctx,
+                    "shift-range",
+                    format!("`{}` amount in [{a0},{a1}] < {width}", canon(e)),
+                    Status::Proved,
+                    None,
+                );
+            } else {
+                let bad = if a1 >= width { a1 } else { a0 };
+                emit_obl(
+                    ctx,
+                    "shift-range",
+                    format!(
+                        "`{}`: amount `{}` in [{a0},{a1}] can reach {bad} \
+                         but operand width is {width}",
+                        canon(e),
+                        canon(rhs)
+                    ),
+                    Status::Violated,
+                    Some(format!("{{'amount': {bad}, 'expr': '{}'}}", canon(e))),
+                );
+            }
+        }
+    }
+}
+
+fn check_cast(e: &Ex, src: &Val, tgt: Ty, _env: &mut Env, ctx: &mut Ctx) {
+    if src.ty.is_none() && src.iv == Iv::Top {
+        // float/unknown source: not a checkable int narrowing
+        return;
+    }
+    let (lo, hi) = ty_range(tgt);
+    let s = match rng(src.iv) {
+        Some(s) => s,
+        None => match src.ty {
+            Some(t) => ty_range(t),
+            None => return,
+        },
+    };
+    if let Some(t) = src.ty {
+        // widening or same-range: no obligation
+        let (slo, shi) = ty_range(t);
+        if slo >= lo && shi <= hi {
+            return;
+        }
+    }
+    let Ex::Cast(src_e, _) = e else {
+        return;
+    };
+    if s.0 >= lo && s.1 <= hi {
+        emit_obl(
+            ctx,
+            "cast-range",
+            format!("`{}` value in [{},{}] fits", canon(e), s.0, s.1),
+            Status::Proved,
+            None,
+        );
+    } else {
+        let bad = if s.0 < lo { s.0 } else { s.1 };
+        emit_obl(
+            ctx,
+            "cast-range",
+            format!(
+                "`{}`: value `{}` in [{},{}] can be {bad}, outside target [{lo},{hi}]",
+                canon(e),
+                canon(src_e),
+                s.0,
+                s.1
+            ),
+            Status::Violated,
+            Some(format!("{{'value': {bad}, 'expr': '{}'}}", canon(e))),
+        );
+    }
+}
+
+fn check_index(e: &Ex, idx: &Val, length: i128, _env: &mut Env, ctx: &mut Ctx) {
+    let Ex::Index(_, idx_e) = e else {
+        return;
+    };
+    match idx.iv {
+        Iv::Bot => {}
+        Iv::Top => emit_obl(
+            ctx,
+            "index-range",
+            format!(
+                "`{}`: index `{}` unbounded (len {length})",
+                canon(e),
+                canon(idx_e)
+            ),
+            Status::Unknown,
+            None,
+        ),
+        Iv::Rng(a0, a1) => {
+            if 0 <= a0 && a1 < length {
+                emit_obl(
+                    ctx,
+                    "index-range",
+                    format!("`{}` index in [{a0},{a1}] < {length}", canon(e)),
+                    Status::Proved,
+                    None,
+                );
+            } else {
+                let bad = if a1 >= length { a1 } else { a0 };
+                emit_obl(
+                    ctx,
+                    "index-range",
+                    format!(
+                        "`{}`: index `{}` in [{a0},{a1}] can be {bad} but len is {length}",
+                        canon(e),
+                        canon(idx_e)
+                    ),
+                    Status::Violated,
+                    Some(format!("{{'index': {bad}, 'expr': '{}'}}", canon(e))),
+                );
+            }
+        }
+    }
+}
+
+// ---------------- refinement ----------------
+
+/// Intersect a fact about the canonical form of `e` into the env.
+fn set_fact(env: &mut Env, e: &Ex, iv: Ival) {
+    let c = canon(e);
+    if c.starts_with('<') {
+        return;
+    }
+    let new = match env.facts.get(&c) {
+        Some(cur) => inter(Iv::Rng(iv.0, iv.1), Iv::Rng(cur.0, cur.1)),
+        None => Iv::Rng(iv.0, iv.1),
+    };
+    let (nlo, nhi) = match new {
+        Iv::Rng(l, h) => (l, h),
+        Iv::Bot => {
+            env.terminated = true;
+            return;
+        }
+        Iv::Top => return,
+    };
+    env.facts.insert(c.clone(), (nlo, nhi));
+    if let Ex::Atom(..) = e {
+        if let Some(v) = env.vars.get(&c) {
+            let vi = if v.iv == Iv::Top {
+                Iv::Rng(nlo, nhi)
+            } else {
+                inter(v.iv, Iv::Rng(nlo, nhi))
+            };
+            if vi == Iv::Bot {
+                env.terminated = true;
+                return;
+            }
+            let nv = Val::of3(vi, v.ty, v.arr.clone());
+            env.vars.insert(c, nv);
+        }
+    }
+}
+
+fn neg_op(op: &str) -> &'static str {
+    match op {
+        "==" => "!=",
+        "!=" => "==",
+        "<" => ">=",
+        ">" => "<=",
+        "<=" => ">",
+        _ => "<", // ">="
+    }
+}
+
+fn inv_op(op: &str) -> &'static str {
+    match op {
+        "<" => ">",
+        ">" => "<",
+        "<=" => ">=",
+        ">=" => "<=",
+        _ => "==", // "=="
+    }
+}
+
+/// Narrow env by assuming cond (or its negation) holds. Two passes so
+/// `a < b && b <= K` also bounds `a` through the first clause.
+fn refine(cond: &Ex, env: &mut Env, ctx: &mut Ctx, negate: bool) {
+    refine_once(cond, env, ctx, negate);
+    refine_once(cond, env, ctx, negate);
+}
+
+/// Assume `side rel other`; clamp to the side's type range.
+fn bound_side(side_e: &Ex, side_v: &Val, other_v: &Val, rel: &str, env: &mut Env) {
+    let Some((olo, ohi)) = rng(other_v.iv) else {
+        return;
+    };
+    let mut iv = match rel {
+        "==" => (olo, ohi),
+        "<" => (i128::MIN, ohi.saturating_sub(1)),
+        "<=" => (i128::MIN, ohi),
+        ">" => (olo.saturating_add(1), i128::MAX),
+        ">=" => (olo, i128::MAX),
+        _ => return,
+    };
+    // unsigned floor
+    if let Some(t) = side_v.ty {
+        let (tlo, thi) = ty_range(t);
+        iv = (iv.0.max(tlo), iv.1.min(thi));
+    }
+    if iv.0 > iv.1 {
+        env.terminated = true;
+        return;
+    }
+    set_fact(env, side_e, iv);
+}
+
+fn refine_once(cond: &Ex, env: &mut Env, ctx: &mut Ctx, negate: bool) {
+    if let Ex::Un(op, inner) = cond {
+        if op == "!" {
+            refine_once(inner, env, ctx, !negate);
+        }
+        return;
+    }
+    let Ex::Bin(op, l, r) = cond else {
+        return;
+    };
+    match op.as_str() {
+        "&&" => {
+            if !negate {
+                refine_once(l, env, ctx, false);
+                refine_once(r, env, ctx, false);
+            }
+            return;
+        }
+        "||" => {
+            if negate {
+                refine_once(l, env, ctx, true);
+                refine_once(r, env, ctx, true);
+            }
+            return;
+        }
+        "==" | "!=" | "<" | ">" | "<=" | ">=" => {}
+        _ => return,
+    }
+    let op = if negate { neg_op(op) } else { op.as_str() };
+    let lv = eval_expr(l, env, ctx, false);
+    let rv = eval_expr(r, env, ctx, false);
+    if op == "!=" {
+        // only edge refinement: x != c where c sits at a domain edge
+        if let (Some((c0a, c0b)), Some((lo, hi))) = (rng(rv.iv), rng(lv.iv)) {
+            if c0a == c0b {
+                if c0a == lo {
+                    if lo.saturating_add(1) <= hi {
+                        set_fact(env, l, (lo.saturating_add(1), hi));
+                    } else {
+                        env.terminated = true;
+                    }
+                } else if c0a == hi {
+                    if lo <= hi.saturating_sub(1) {
+                        set_fact(env, l, (lo, hi.saturating_sub(1)));
+                    } else {
+                        env.terminated = true;
+                    }
+                }
+            }
+        }
+        return;
+    }
+    bound_side(l, &lv, &rv, op, env);
+    bound_side(r, &rv, &lv, inv_op(op), env);
+    // relational difference facts: `a >= b` bounds `a - b` / `b - a`,
+    // which is what branch-guarded shift amounts (`frac >> (n - h)`)
+    // evaluate to.
+    if let (Some((allo, alhi)), Some((blo2, bhi2))) = (rng(lv.iv), rng(rv.iv)) {
+        if matches!(op, ">=" | ">" | "==") {
+            let d0 = i128::from(op == ">");
+            let dl = Ex::Bin(
+                "-".to_string(),
+                Box::new((**l).clone()),
+                Box::new((**r).clone()),
+            );
+            let top2 = if op == "==" {
+                allo.saturating_sub(blo2)
+            } else {
+                alhi.saturating_sub(blo2)
+            };
+            set_fact(env, &dl, (d0, d0.max(top2)));
+        }
+        if matches!(op, "<=" | "<" | "==") {
+            let d0 = i128::from(op == "<");
+            let dr = Ex::Bin(
+                "-".to_string(),
+                Box::new((**r).clone()),
+                Box::new((**l).clone()),
+            );
+            let top2 = bhi2.saturating_sub(allo);
+            set_fact(env, &dr, (d0, d0.max(top2)));
+        }
+    }
+}
+
+// ---------------- statement walker ----------------
+
+fn pat_names(toks: &[Tok], lo: usize, hi: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    for t in toks.iter().take(hi.min(toks.len())).skip(lo) {
+        if t.kind == Kind::Ident
+            && !is_keyword(&t.text)
+            && !matches!(t.text.as_str(), "Some" | "Ok" | "Err" | "None")
+        {
+            out.push(t.text.clone());
+        }
+    }
+    out
+}
+
+/// Index of `;` at depth 0 from `i`, or `hi`.
+fn stmt_end(toks: &[Tok], i: usize, hi: usize) -> usize {
+    let hi = hi.min(toks.len());
+    let mut d = 0i64;
+    let mut j = i;
+    while j < hi {
+        match toks[j].text.as_str() {
+            "(" | "[" | "{" => d += 1,
+            ")" | "]" | "}" => d -= 1,
+            ";" if d == 0 => return j,
+            _ => {}
+        }
+        j += 1;
+    }
+    hi
+}
+
+/// Names assigned (`x =` / `x op=` / `&mut x`) anywhere in the range.
+fn scan_assigned(toks: &[Tok], lo: usize, hi: usize) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let hi = hi.min(toks.len());
+    let mut j = lo;
+    while j < hi {
+        let t = &toks[j];
+        if t.kind == Kind::Ident {
+            // walk an `a.b[c]` chain
+            let root = t.text.clone();
+            let mut k = j + 1;
+            loop {
+                if k < hi && toks[k].text == "." && k + 1 < hi && toks[k + 1].kind == Kind::Ident {
+                    k += 2;
+                } else if k < hi && toks[k].text == "[" {
+                    let mut dd = 0i64;
+                    while k < hi {
+                        match toks[k].text.as_str() {
+                            "[" => dd += 1,
+                            "]" => {
+                                dd -= 1;
+                                if dd == 0 {
+                                    k += 1;
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                } else {
+                    break;
+                }
+            }
+            if k < hi
+                && matches!(
+                    toks[k].text.as_str(),
+                    "=" | "+=" | "-=" | "*=" | "/=" | "%=" | "&=" | "|=" | "^=" | "<<=" | ">>="
+                )
+            {
+                out.insert(root);
+            }
+            j = if k > j { k } else { j + 1 };
+            continue;
+        }
+        if t.text == "&" && j + 2 < hi && toks[j + 1].text == "mut" && toks[j + 2].kind == Kind::Ident
+        {
+            out.insert(toks[j + 2].text.clone());
+            j += 3;
+            continue;
+        }
+        j += 1;
+    }
+    out
+}
+
+/// Inside `assert!(..)` parens: the condition runs to the first
+/// top-level `,` (the rest is the format message).
+fn parse_assert_cond(toks: &[Tok], lo: usize, hi: usize) -> Ex {
+    let hi = hi.min(toks.len());
+    let mut d = 0i64;
+    let mut j = lo;
+    while j < hi {
+        match toks[j].text.as_str() {
+            "(" | "[" | "{" => d += 1,
+            ")" | "]" | "}" => d -= 1,
+            "," if d == 0 => {
+                let mut p = P::new(toks, lo, j);
+                return parse_expr(&mut p, 0, false);
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    let mut p = P::new(toks, lo, hi);
+    parse_expr(&mut p, 0, false)
+}
+
+/// Join two optional return values (tuple-wise when both are tuples).
+fn join_ret(tv: Option<Val>, ev: Option<Val>) -> Option<Val> {
+    match (tv, ev) {
+        (None, x) | (x, None) => x,
+        (Some(a), Some(b)) => {
+            let mut out = Val::of3(
+                join(a.iv, b.iv),
+                a.ty.or(b.ty),
+                a.arr.clone().or_else(|| b.arr.clone()),
+            );
+            if let (Some(x), Some(y)) = (&a.tup, &b.tup) {
+                if x.len() == y.len() {
+                    out.tup = Some(
+                        x.iter()
+                            .zip(y.iter())
+                            .map(|(p2, q2)| {
+                                Val::of3(
+                                    join(p2.iv, q2.iv),
+                                    p2.ty.or(q2.ty),
+                                    p2.arr.clone().or_else(|| q2.arr.clone()),
+                                )
+                            })
+                            .collect(),
+                    );
+                }
+            }
+            Some(out)
+        }
+    }
+}
+
+/// Walk statements in `toks[lo..hi]`; returns the joined return value
+/// (tail expressions count) or None.
+fn walk_block(lo: usize, hi: usize, env: &mut Env, ctx: &mut Ctx) -> Option<Val> {
+    if ctx.rec >= REC_CAP {
+        ctx.rec_hit = true;
+        return None;
+    }
+    ctx.rec += 1;
+    let out = walk_block_inner(lo, hi, env, ctx);
+    ctx.rec -= 1;
+    out
+}
+
+fn walk_block_inner(lo: usize, hi: usize, env: &mut Env, ctx: &mut Ctx) -> Option<Val> {
+    let toks = ctx.toks;
+    let hi = hi.min(toks.len());
+    let mut rets: Vec<Val> = Vec::new();
+    let mut i = lo;
+    while i < hi && !env.terminated {
+        let t = &toks[i];
+        let x = t.text.as_str();
+        ctx.cur_line = t.line;
+        if x == ";" {
+            i += 1;
+            continue;
+        }
+        if x == "#" {
+            // attribute: skip the [...] group
+            if i + 1 < hi && toks[i + 1].text == "[" {
+                let mut p = P::new(toks, i + 1, hi);
+                collect_balanced(&mut p, "[", "]");
+                i = p.i;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        if x == "let" {
+            let se = stmt_end(toks, i, hi);
+            // pattern runs until a top-level `=` or `:`
+            let mut d = 0i64;
+            let mut j = i + 1;
+            let mut eq: Option<usize> = None;
+            let mut col: Option<usize> = None;
+            while j < se {
+                match toks[j].text.as_str() {
+                    "(" | "[" | "{" | "<" => d += 1,
+                    ")" | "]" | "}" | ">" => d -= 1,
+                    "=" if d == 0 && (j + 1 >= se || toks[j + 1].text != "=") => {
+                        eq = Some(j);
+                        break;
+                    }
+                    ":" if d == 0 && col.is_none() && (j + 1 >= se || toks[j + 1].text != ":") => {
+                        col = Some(j);
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            let pat_hi = col.or(eq).unwrap_or(se);
+            let names = pat_names(toks, i + 1, pat_hi);
+            let ty_toks: Vec<String> = match col {
+                Some(c) => toks[c + 1..eq.unwrap_or(se)]
+                    .iter()
+                    .map(|t2| t2.text.clone())
+                    .collect(),
+                None => Vec::new(),
+            };
+            let (dty, darr) = if ty_toks.is_empty() {
+                (None, None)
+            } else {
+                ty_of_tokens(&ty_toks, ctx)
+            };
+            if let Some(eq) = eq {
+                let mut p = P::new(toks, eq + 1, se);
+                let e = parse_expr(&mut p, 0, false);
+                let v = eval_expr(&e, env, ctx, true);
+                let simple = pat_hi.saturating_sub(i + 1) <= 2
+                    && names.len() == 1
+                    && toks[i + 1..pat_hi]
+                        .iter()
+                        .all(|t2| t2.text == "mut" || t2.kind == Kind::Ident);
+                if simple {
+                    let mut iv = v.iv;
+                    if let Some(t2) = dty {
+                        if iv == Iv::Top {
+                            iv = of_opt(Some(ty_range(t2)));
+                        } else {
+                            iv = inter(iv, of_opt(Some(ty_range(t2))));
+                        }
+                    }
+                    let mut nv = Val::of3(iv, v.ty.or(dty), v.arr.clone().or(darr));
+                    nv.tup = v.tup.clone();
+                    if let Ex::Closure(params, body) = &e {
+                        nv.clo = Some((params.clone(), *body));
+                    }
+                    env.havoc_name(&names[0]);
+                    env.vars.insert(names[0].clone(), nv);
+                } else if v.tup.as_ref().is_some_and(|t2| t2.len() == names.len()) {
+                    if let Some(tup) = &v.tup {
+                        for (nm, tv) in names.iter().zip(tup.iter()) {
+                            env.havoc_name(nm);
+                            env.vars.insert(nm.clone(), tv.clone());
+                        }
+                    }
+                } else {
+                    for nm in &names {
+                        env.havoc_name(nm);
+                        env.vars
+                            .insert(nm.clone(), Val::of3(Iv::Top, dty, darr.clone()));
+                    }
+                }
+            } else {
+                for nm in &names {
+                    env.havoc_name(nm);
+                    env.vars
+                        .insert(nm.clone(), Val::of3(Iv::Top, dty, darr.clone()));
+                }
+            }
+            i = se + 1;
+            continue;
+        }
+        if x == "const" && i + 2 < hi && toks[i + 1].kind == Kind::Ident {
+            // fn-local `const NAME: ty = expr;`
+            let se = stmt_end(toks, i, hi);
+            let nm = toks[i + 1].text.clone();
+            let col = i + 2 < se && toks[i + 2].text == ":";
+            let mut eq: Option<usize> = None;
+            let mut d = 0i64;
+            let mut j = i + 2;
+            while j < se {
+                match toks[j].text.as_str() {
+                    "(" | "[" | "{" | "<" => d += 1,
+                    ")" | "]" | "}" | ">" => d -= 1,
+                    "=" if d == 0 => {
+                        eq = Some(j);
+                        break;
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            if let Some(eq) = eq {
+                let ty_toks: Vec<String> = if col {
+                    toks[i + 3..eq].iter().map(|t2| t2.text.clone()).collect()
+                } else {
+                    Vec::new()
+                };
+                let (dty, darr) = if ty_toks.is_empty() {
+                    (None, None)
+                } else {
+                    ty_of_tokens(&ty_toks, ctx)
+                };
+                let mut p = P::new(toks, eq + 1, se);
+                let e = parse_expr(&mut p, 0, false);
+                let v = eval_expr(&e, env, ctx, false);
+                env.vars
+                    .insert(nm, Val::of3(v.iv, v.ty.or(dty), v.arr.or(darr)));
+            }
+            i = se + 1;
+            continue;
+        }
+        let is_assert = matches!(x, "assert" | "debug_assert" | "ensure");
+        let is_assert_eq = matches!(x, "assert_eq" | "debug_assert_eq");
+        let is_exit = matches!(x, "panic" | "unreachable" | "todo" | "unimplemented" | "bail");
+        if t.kind == Kind::Ident
+            && (is_assert || is_assert_eq || is_exit)
+            && i + 1 < hi
+            && toks[i + 1].text == "!"
+        {
+            let mut p = P::new(toks, i + 2, hi);
+            let open = p.peek(0).filter(|o| *o == "(" || *o == "[");
+            if let Some(o) = open {
+                let (o2, c) = if o == "(" { ("(", ")") } else { ("[", "]") };
+                let (alo, ahi) = collect_balanced(&mut p, o2, c);
+                if is_exit {
+                    env.terminated = true;
+                } else if is_assert {
+                    let cond = parse_assert_cond(toks, alo, ahi);
+                    refine(&cond, env, ctx, false);
+                } else {
+                    // assert_eq!(a, b)
+                    let parts = split_args(toks, alo, ahi);
+                    if parts.len() >= 2 {
+                        let mut pa = P::new(toks, parts[0].0, parts[0].1);
+                        let ea = parse_expr(&mut pa, 0, false);
+                        let mut pb = P::new(toks, parts[1].0, parts[1].1);
+                        let eb = parse_expr(&mut pb, 0, false);
+                        let ee = Ex::Bin("==".to_string(), Box::new(ea), Box::new(eb));
+                        refine(&ee, env, ctx, false);
+                    }
+                }
+                i = p.i;
+                if i < hi && toks[i].text == ";" {
+                    i += 1;
+                }
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+        if x == "if" {
+            let mut p = P::new(toks, i, hi);
+            let e = parse_prefix(&mut p, false);
+            let i2 = p.i;
+            let v = match &e {
+                Ex::IfExpr(..) => eval_if_stmt(&e, env, ctx),
+                Ex::IfLet(..) => eval_iflet_stmt(&e, env, ctx),
+                _ => None,
+            };
+            // statement position: at the tail with no ';', treat as ret
+            if i2 >= hi {
+                if let Some(v) = v {
+                    if v.iv != Iv::Top || v.ty.is_some() {
+                        rets.push(v);
+                    }
+                }
+            }
+            i = i2;
+            continue;
+        }
+        if x == "match" {
+            let mut p = P::new(toks, i, hi);
+            let e = parse_prefix(&mut p, false);
+            let i2 = p.i;
+            if matches!(e, Ex::MatchExpr(..)) {
+                let v = eval_matchexpr(&e, env, ctx, true);
+                if i2 >= hi && (v.iv != Iv::Top || v.ty.is_some()) {
+                    rets.push(v);
+                }
+            }
+            i = i2;
+            continue;
+        }
+        if x == "for" {
+            // for pat in iter { body }
+            let mut j = i + 1;
+            let mut d = 0i64;
+            while j < hi && !(d == 0 && toks[j].text == "in") {
+                match toks[j].text.as_str() {
+                    "(" | "[" | "{" => d += 1,
+                    ")" | "]" | "}" => d -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+            let names = pat_names(toks, i + 1, j);
+            let mut p = P::new(toks, j + 1, hi);
+            let iter_e = parse_expr(&mut p, 0, true);
+            while p.peek(0).is_some() && p.peek(0) != Some("{") {
+                p.bump();
+            }
+            let (blo, bhi) = collect_balanced(&mut p, "{", "}");
+            // havoc anything the body assigns
+            for nm in scan_assigned(toks, blo, bhi) {
+                env.havoc_name(&nm);
+            }
+            let mut body_env = env.snap();
+            bind_loop_pattern(&names, &iter_e, &mut body_env, env, ctx);
+            walk_block(blo, bhi, &mut body_env, ctx);
+            // merge fact-free: keep outer env (already havocked)
+            i = p.i;
+            continue;
+        }
+        if x == "while" || x == "loop" {
+            let mut p = P::new(toks, i + 1, hi);
+            let mut cond: Option<Ex> = None;
+            if x == "while" {
+                if p.peek(0) == Some("let") {
+                    while p.peek(0).is_some() && p.peek(0) != Some("{") {
+                        p.bump();
+                    }
+                } else {
+                    cond = Some(parse_expr(&mut p, 0, true));
+                    while p.peek(0).is_some() && p.peek(0) != Some("{") {
+                        p.bump();
+                    }
+                }
+            }
+            let (blo, bhi) = collect_balanced(&mut p, "{", "}");
+            for nm in scan_assigned(toks, blo, bhi) {
+                env.havoc_name(&nm);
+            }
+            let mut body_env = env.snap();
+            if let Some(c) = &cond {
+                refine(c, &mut body_env, ctx, false);
+            }
+            walk_block(blo, bhi, &mut body_env, ctx);
+            i = p.i;
+            continue;
+        }
+        if x == "return" {
+            let se = stmt_end(toks, i, hi);
+            if se > i + 1 {
+                let mut p = P::new(toks, i + 1, se);
+                let e = parse_expr(&mut p, 0, false);
+                let v = eval_expr(&e, env, ctx, true);
+                rets.push(v);
+            }
+            env.terminated = true;
+            i = se + 1;
+            continue;
+        }
+        if x == "break" || x == "continue" {
+            let se = stmt_end(toks, i, hi);
+            env.terminated = true;
+            i = se + 1;
+            continue;
+        }
+        if x == "{" {
+            let mut p = P::new(toks, i, hi);
+            let (blo, bhi) = collect_balanced(&mut p, "{", "}");
+            let mut sub = env.snap();
+            let rv = walk_block(blo, bhi, &mut sub, ctx);
+            let keys: Vec<String> = env.vars.keys().cloned().collect();
+            for k2 in keys {
+                if let Some(v) = sub.vars.get(&k2) {
+                    env.vars.insert(k2, v.clone());
+                }
+            }
+            env.terminated = sub.terminated;
+            if p.i >= hi {
+                if let Some(rv) = rv {
+                    rets.push(rv);
+                }
+            }
+            i = p.i;
+            continue;
+        }
+        if x == "unsafe" {
+            i += 1;
+            continue;
+        }
+        // expression / assignment statement
+        let mut p = P::new(toks, i, hi);
+        let e = parse_expr(&mut p, 0, false);
+        let nxt: Option<String> = p.peek(0).map(|s| s.to_string());
+        let assign_op = nxt.filter(|s| {
+            matches!(
+                s.as_str(),
+                "=" | "+=" | "-=" | "*=" | "/=" | "%=" | "&=" | "|=" | "^=" | "<<=" | ">>="
+            )
+        });
+        if let Some(op) = assign_op {
+            p.bump();
+            let se = stmt_end(toks, p.i, hi);
+            let mut pr = P::new(toks, p.i, se);
+            let mut rhs = parse_expr(&mut pr, 0, false);
+            if op != "=" {
+                // compound assignment desugars to the plain binary op
+                let base = op[..op.len() - 1].to_string();
+                rhs = Ex::Bin(base, Box::new(e.clone()), Box::new(rhs));
+            }
+            let rv = eval_expr(&rhs, env, ctx, true);
+            if let Ex::Atom(nm, _) = &e {
+                let old = env.vars.get(nm).cloned();
+                env.havoc_name(nm);
+                let oty = old.as_ref().and_then(|o| o.ty);
+                let oarr = old.and_then(|o| o.arr);
+                env.vars
+                    .insert(nm.clone(), Val::of3(rv.iv, rv.ty.or(oty), rv.arr.or(oarr)));
+            }
+            // index / method lhs: conservatively no-op (already havocked
+            // where it matters via loop scans)
+            i = se + 1;
+            continue;
+        }
+        let v = eval_expr(&e, env, ctx, true);
+        if p.i >= hi {
+            // tail expression
+            rets.push(v);
+            break;
+        }
+        i = p.i + 1;
+    }
+    let mut out: Option<Val> = None;
+    for r in rets {
+        out = join_ret(out, Some(r));
+    }
+    out
+}
+
+fn elem_of(v: &Val) -> Val {
+    let Some(arr) = &v.arr else {
+        return Val::top();
+    };
+    match &arr.ety {
+        Some(ETy::Nested(a)) => Val::of3(Iv::Top, None, Some((**a).clone())),
+        other => Val::of(arr.elem, ety_prim(other)),
+    }
+}
+
+/// Bind for-loop pattern vars from the iterated expression.
+fn bind_loop_pattern(
+    names: &[String],
+    iter_e: &Ex,
+    body_env: &mut Env,
+    env: &mut Env,
+    ctx: &mut Ctx,
+) {
+    if let Ex::Range(lo_e, hi_e, incl) = iter_e {
+        let lo_v = eval_expr(lo_e, env, ctx, false);
+        let hi_v = match hi_e {
+            Some(h) => eval_expr(h, env, ctx, false),
+            None => Val::top(),
+        };
+        if names.len() == 1 {
+            if let (Some(l), Some(h)) = (rng(lo_v.iv), rng(hi_v.iv)) {
+                let hi_adj = if *incl { h.1 } else { h.1.saturating_sub(1) };
+                if l.0 <= hi_adj {
+                    body_env.vars.insert(
+                        names[0].clone(),
+                        Val::of(Iv::Rng(l.0, hi_adj), lo_v.ty.or(hi_v.ty)),
+                    );
+                } else {
+                    body_env.terminated = true;
+                }
+            } else {
+                body_env
+                    .vars
+                    .insert(names[0].clone(), Val::of(Iv::Top, lo_v.ty.or(hi_v.ty)));
+            }
+        }
+        return;
+    }
+    // iterator chains: walk down the method chain collecting zip sides
+    // and the enumerate marker, so `a.iter().zip(b.iter())` binds each
+    // destructured name to its own slice's element value.
+    let mut base = iter_e;
+    let mut has_enum = false;
+    let mut zip_args: Vec<&Ex> = Vec::new();
+    while let Ex::Method(recv, mname, margs) = base {
+        if mname == "enumerate" {
+            has_enum = true;
+        } else if mname == "zip" && !margs.is_empty() {
+            zip_args.insert(0, &margs[0]);
+        }
+        base = recv;
+    }
+    let bv = eval_expr(base, env, ctx, false);
+    let mut sides: Vec<Val> = vec![elem_of(&bv)];
+    let mut lens: Vec<Option<Ival>> = vec![bv.arr.as_ref().and_then(|a| a.len)];
+    for za in zip_args {
+        let mut zv = eval_expr(za, env, ctx, false);
+        // the zip arg is itself usually `x.iter()`-style: unwrap plumbing
+        let mut zb = za;
+        while let Ex::Method(r2, m2, _) = zb {
+            if matches!(
+                m2.as_str(),
+                "iter" | "iter_mut" | "into_iter" | "copied" | "cloned"
+            ) {
+                zb = r2;
+            } else {
+                break;
+            }
+        }
+        if zv.arr.is_none() {
+            zv = eval_expr(zb, env, ctx, false);
+        }
+        sides.push(elem_of(&zv));
+        lens.push(zv.arr.as_ref().and_then(|a| a.len));
+    }
+    if has_enum {
+        let ln = lens.iter().flatten().next().copied();
+        let idx_v = match ln {
+            Some(l) if l.1 > 0 => Val::of(Iv::Rng(0, l.1 - 1), Some((64, false))),
+            _ => Val::of(Iv::Top, Some((64, false))),
+        };
+        sides.insert(0, idx_v);
+    }
+    if names.len() == sides.len() {
+        for (nm, v) in names.iter().zip(sides.iter()) {
+            body_env.vars.insert(nm.clone(), v.clone());
+        }
+    } else if has_enum && names.len() >= 2 {
+        body_env.vars.insert(names[0].clone(), sides[0].clone());
+        for nm in &names[1..] {
+            let v = if sides.len() == 2 {
+                sides[1].clone()
+            } else {
+                Val::top()
+            };
+            body_env.vars.insert(nm.clone(), v);
+        }
+    } else {
+        let elem = if sides.len() == 1 {
+            sides[sides.len() - 1].clone()
+        } else {
+            Val::top()
+        };
+        for nm in names {
+            body_env.vars.insert(nm.clone(), elem.clone());
+        }
+    }
+}
+
+fn eval_if_stmt(e: &Ex, env: &mut Env, ctx: &mut Ctx) -> Option<Val> {
+    let Ex::IfExpr(cond, then, els) = e else {
+        return None;
+    };
+    eval_expr(cond, env, ctx, true); // side-effect obligations in the condition
+    let mut tenv = env.snap();
+    refine(cond, &mut tenv, ctx, false);
+    let mut tv = None;
+    if !tenv.terminated {
+        tv = walk_block(then.0, then.1, &mut tenv, ctx);
+    }
+    let mut eenv = env.snap();
+    refine(cond, &mut eenv, ctx, true);
+    let mut ev = None;
+    if let Some(els) = els {
+        if !eenv.terminated {
+            // else block or else-if chain
+            let first = ctx.toks.get(els.0).map(|t| t.text.as_str());
+            if first == Some("if") {
+                let toks = ctx.toks;
+                let mut p = P::new(toks, els.0, els.1);
+                let e2 = parse_prefix(&mut p, false);
+                ev = match &e2 {
+                    Ex::IfExpr(..) => eval_if_stmt(&e2, &mut eenv, ctx),
+                    Ex::IfLet(..) => eval_iflet_stmt(&e2, &mut eenv, ctx),
+                    _ => None,
+                };
+            } else {
+                ev = walk_block(els.0, els.1, &mut eenv, ctx);
+            }
+        }
+    }
+    let merged = join_env(tenv, eenv);
+    env.vars = merged.vars;
+    env.facts = merged.facts;
+    env.terminated = merged.terminated;
+    join_ret(tv, ev)
+}
+
+fn eval_iflet_stmt(e: &Ex, env: &mut Env, ctx: &mut Ctx) -> Option<Val> {
+    let Ex::IfLet(then, els) = e else {
+        return None;
+    };
+    // bindings unknown inside; walk for obligations
+    let mut tenv = env.snap();
+    let tv = walk_block(then.0, then.1, &mut tenv, ctx);
+    let mut eenv = env.snap();
+    let mut ev = None;
+    if let Some(els) = els {
+        let first = ctx.toks.get(els.0).map(|t| t.text.as_str());
+        if first == Some("if") {
+            let toks = ctx.toks;
+            let mut p = P::new(toks, els.0, els.1);
+            let e2 = parse_prefix(&mut p, false);
+            ev = match &e2 {
+                Ex::IfExpr(..) => eval_if_stmt(&e2, &mut eenv, ctx),
+                Ex::IfLet(..) => eval_iflet_stmt(&e2, &mut eenv, ctx),
+                _ => None,
+            };
+        } else {
+            ev = walk_block(els.0, els.1, &mut eenv, ctx);
+        }
+    }
+    let merged = join_env(tenv, eenv);
+    env.vars = merged.vars;
+    env.facts = merged.facts;
+    env.terminated = merged.terminated;
+    join_ret(tv, ev)
+}
+
+fn eval_ifexpr(e: &Ex, env: &mut Env, ctx: &mut Ctx, _emit: bool) -> Val {
+    eval_if_stmt(e, env, ctx).unwrap_or_else(Val::top)
+}
+
+fn eval_matchexpr(e: &Ex, env: &mut Env, ctx: &mut Ctx, emit: bool) -> Val {
+    let Ex::MatchExpr(scrut, arms) = e else {
+        return Val::top();
+    };
+    let sv = eval_expr(scrut, env, ctx, emit);
+    let mut outs: Vec<Val> = Vec::new();
+    let mut envs: Vec<Env> = Vec::new();
+    let toks = ctx.toks;
+    for ((plo, phi), (blo, bhi)) in arms {
+        let (plo, phi, blo, bhi) = (*plo, (*phi).min(toks.len()), *blo, *bhi);
+        let mut aenv = env.snap();
+        let ptexts: Vec<&str> = toks[plo..phi].iter().map(|t| t.text.as_str()).collect();
+        // literal patterns refine the scrutinee
+        if ptexts.len() == 1 && ptexts[0] != "_" && toks[plo].kind == Kind::Num {
+            if let Ex::Num(pv, _) = num_expr(ptexts[0]) {
+                if matches!(&**scrut, Ex::Atom(..)) {
+                    set_fact(&mut aenv, scrut, (pv, pv));
+                }
+            }
+        }
+        // binder patterns: distribute the scrutinee through Some/Ok
+        let guard_at = ptexts
+            .iter()
+            .position(|t| *t == "if")
+            .unwrap_or(ptexts.len());
+        let binders = pat_names(toks, plo, plo + guard_at);
+        if !binders.is_empty() {
+            if binders.len() > 1 && sv.tup.as_ref().is_some_and(|t| t.len() == binders.len()) {
+                if let Some(tup) = &sv.tup {
+                    for (nm, tv) in binders.iter().zip(tup.iter()) {
+                        aenv.vars.insert(nm.clone(), tv.clone());
+                    }
+                }
+            } else if binders.len() == 1 {
+                aenv.vars
+                    .insert(binders[0].clone(), Val::of3(sv.iv, sv.ty, sv.arr.clone()));
+            } else {
+                for nm in &binders {
+                    aenv.vars.insert(nm.clone(), Val::top());
+                }
+            }
+        }
+        // guard `pat if cond`
+        if guard_at < ptexts.len() {
+            let gi = plo + guard_at;
+            let mut p = P::new(toks, gi + 1, phi);
+            let gcond = parse_expr(&mut p, 0, false);
+            refine(&gcond, &mut aenv, ctx, false);
+        }
+        if aenv.terminated {
+            continue;
+        }
+        let rv = walk_block(blo, bhi, &mut aenv, ctx);
+        if !aenv.terminated {
+            envs.push(aenv);
+        }
+        if let Some(rv) = rv {
+            outs.push(rv);
+        }
+    }
+    let had_envs = !envs.is_empty();
+    let mut merged: Option<Env> = None;
+    for a in envs {
+        merged = Some(match merged {
+            None => a,
+            Some(m) => join_env(m, a),
+        });
+    }
+    if let Some(m) = merged {
+        env.vars = m.vars;
+        env.facts = m.facts;
+    } else if !had_envs {
+        env.terminated = true;
+    }
+    let mut out: Option<Val> = None;
+    for r in outs {
+        out = Some(match out {
+            None => r,
+            Some(o) => Val::of3(join(o.iv, r.iv), o.ty.or(r.ty), o.arr.or(r.arr)),
+        });
+    }
+    out.unwrap_or_else(Val::top)
+}
+
+// ---------------- driver ----------------
+
+/// Findings report of a whole-tree bitwidth interval run.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Violated / unknown / recursion findings, deduplicated across
+    /// widths (width-independent key).
+    pub findings: Vec<Diag>,
+    /// Obligations proved in range, summed over all widths.
+    pub proved: usize,
+    /// Obligations with a concrete out-of-range witness.
+    pub violated: usize,
+    /// Obligations the analysis could not bound either way.
+    pub unknown: usize,
+}
+
+/// Analyze one kernel fn at one width: bind params (the `bits` param is
+/// pinned to the width under analysis), walk the body, return the
+/// collected obligations plus the recursion-budget flag.
+fn analyze_item(
+    model: &Model,
+    pragmas: &Pragmas,
+    item: &Item,
+    width: u32,
+) -> Option<(Vec<Obl>, bool)> {
+    let mut ctx = Ctx::new(model, pragmas, width, item)?;
+    let (blo, bhi) = item.body?;
+    let mut env = Env::default();
+    for (pat, ty) in &item.params {
+        let names: Vec<&String> = pat
+            .iter()
+            .filter(|t| !matches!(t.as_str(), "&" | "mut" | "(" | ")" | ","))
+            .collect();
+        if names.len() == 1 && names[0] == "self" {
+            continue;
+        }
+        let (pty, parr) = ty_of_tokens(ty, &mut ctx);
+        if names.len() == 1 {
+            let nm = names[0];
+            let mut iv = pty.map_or(Iv::Top, |t| of_opt(Some(ty_range(t))));
+            if nm == "bits" && pty.is_some() {
+                let w = i128::from(width);
+                iv = Iv::Rng(w, w);
+            }
+            env.vars.insert(nm.clone(), Val::of3(iv, pty, parr));
+        } else {
+            for nm in names {
+                env.vars.insert(nm.clone(), Val::top());
+            }
+        }
+    }
+    walk_block(blo, bhi, &mut env, &mut ctx);
+    Some((ctx.obls, ctx.rec_hit))
+}
+
+/// Run the bitwidth interval analysis over every non-test fn with a
+/// body under `dirs`, once per width in `widths`.
+pub fn analyze_absint(model: &Model, pragmas: &Pragmas, dirs: &[&str], widths: &[u32]) -> Report {
+    let mut report = Report::default();
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    for it in &model.items {
+        if it.body.is_none() || it.is_test {
+            continue;
+        }
+        if !dirs.iter().any(|d| it.file.starts_with(d)) {
+            continue;
+        }
+        let qname = it.qname();
+        for &w in widths {
+            let Some((obls, rec_hit)) = analyze_item(model, pragmas, it, w) else {
+                continue;
+            };
+            if rec_hit {
+                let msg = format!("RECURSION {qname} w={w}");
+                let key = format!("{}:{}:recursion:{msg}", it.file, it.line);
+                if seen.insert(key) {
+                    report.findings.push(Diag {
+                        rule: "recursion",
+                        file: it.file.clone(),
+                        line: it.line,
+                        message: msg,
+                    });
+                }
+                continue;
+            }
+            for o in &obls {
+                match o.status {
+                    Status::Proved => report.proved += 1,
+                    Status::Violated => report.violated += 1,
+                    Status::Allowed => {}
+                    Status::Unknown => report.unknown += 1,
+                }
+                if matches!(o.status, Status::Violated | Status::Unknown) {
+                    let mut msg = format!("w={w} fn={qname} {}: {}", o.status.as_str(), o.detail);
+                    if let Some(wit) = &o.witness {
+                        msg.push(' ');
+                        msg.push_str(wit);
+                    }
+                    // width-independent dedup: drop the leading `w=..`
+                    let tail = msg.split_once(' ').map_or(msg.as_str(), |(_, t)| t);
+                    let key = format!("{}:{}:{}:{}", o.file, o.line, o.kind, tail);
+                    if seen.insert(key) {
+                        report.findings.push(Diag {
+                            rule: o.kind,
+                            file: o.file.clone(),
+                            line: o.line,
+                            message: msg,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::graph::build_model;
+    use crate::analysis::lex;
+    use crate::analysis::tokens::tokenize;
+
+    fn report_with(src: &str, pragmas: &Pragmas) -> Report {
+        let model = build_model(vec![("simd/mod.rs".to_string(), tokenize(&lex(src)))]);
+        analyze_absint(&model, pragmas, &KERNEL_DIRS, &WIDTHS)
+    }
+
+    fn report(src: &str) -> Report {
+        report_with(src, &Pragmas::default())
+    }
+
+    #[test]
+    fn interval_helpers() {
+        assert_eq!(join(Iv::Rng(0, 3), Iv::Rng(5, 9)), Iv::Rng(0, 9));
+        assert_eq!(inter(Iv::Rng(0, 10), Iv::Rng(5, 20)), Iv::Rng(5, 10));
+        assert_eq!(inter(Iv::Bot, Iv::Rng(0, 1)), Iv::Bot);
+        assert_eq!(inter(Iv::Rng(0, 1), Iv::Rng(5, 9)), Iv::Bot);
+        assert_eq!(join(Iv::Bot, Iv::Rng(2, 3)), Iv::Rng(2, 3));
+        assert_eq!(sat_shl(1, 200), i128::MAX);
+        assert_eq!(sat_shl(-1, 200), i128::MIN);
+        assert_eq!(sat_shl(3, 2), 12);
+        assert_eq!(bits_needed(255), 8);
+        assert_eq!(bits_needed(256), 9);
+        assert_eq!(ty_range((8, false)), (0, 255));
+        assert_eq!(ty_range((8, true)), (-128, 127));
+        assert_eq!(parse_prim_ty("u24"), Some((24, false)));
+        assert_eq!(parse_prim_ty("i64"), Some((64, true)));
+        assert_eq!(parse_prim_ty("f64"), None);
+    }
+
+    const BROKEN_SHIFT: &str = "
+pub fn broken(a: [u64; 8], s: u32) -> u64 {
+    let mut acc = 0u64;
+    for i in 0..8 {
+        acc ^= a[i] << s;
+    }
+    acc
+}
+";
+
+    #[test]
+    fn unguarded_shift_violated_with_operand_witness() {
+        let r = report(BROKEN_SHIFT);
+        assert_eq!(r.findings.len(), 1, "deduped across widths");
+        assert_eq!(r.violated, 4, "one violation per analysed width");
+        let f = &r.findings[0];
+        assert_eq!(f.rule, "shift-range");
+        assert_eq!(f.file, "simd/mod.rs");
+        assert_eq!(f.line, 5);
+        assert!(
+            f.message.starts_with("w=8 fn=simd/mod.rs::broken violated: "),
+            "{}",
+            f.message
+        );
+        assert!(
+            f.message.contains(
+                "`a[i] << s`: amount `s` in [0,4294967295] can reach 4294967295 \
+                 but operand width is 64"
+            ),
+            "{}",
+            f.message
+        );
+        assert!(
+            f.message.ends_with("{'amount': 4294967295, 'expr': 'a[i] << s'}"),
+            "witness must carry concrete operand values: {}",
+            f.message
+        );
+    }
+
+    #[test]
+    fn guard_refines_shift_amount_to_proved() {
+        let r = report("pub fn guarded(a: u64, s: u32) -> u64 { if s < 64 { a << s } else { 0 } }");
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.violated, 0);
+        assert_eq!(r.proved, 4);
+    }
+
+    #[test]
+    fn narrowing_cast_violated_with_value_witness() {
+        let r = report("pub fn cast_bad(x: u32) -> u8 { (x & 0x3ff) as u8 }");
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        let f = &r.findings[0];
+        assert_eq!(f.rule, "cast-range");
+        assert!(
+            f.message.contains(
+                "`x & 1023 as u8`: value `x & 1023` in [0,1023] can be 1023, \
+                 outside target [0,255]"
+            ),
+            "{}",
+            f.message
+        );
+        assert!(f.message.ends_with("{'value': 1023, 'expr': 'x & 1023 as u8'}"));
+    }
+
+    #[test]
+    fn masked_cast_in_range_is_proved() {
+        let r = report("pub fn cast_ok(x: u32) -> u8 { (x & 0xff) as u8 }");
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.proved, 4);
+    }
+
+    #[test]
+    fn index_on_non_atom_receiver_is_checked() {
+        let bad = report("pub fn idx(t: [u32; 8], i: usize) -> u32 { t.as_slice()[i & 15] }");
+        assert_eq!(bad.findings.len(), 1, "{:?}", bad.findings);
+        let f = &bad.findings[0];
+        assert_eq!(f.rule, "index-range");
+        assert!(
+            f.message
+                .contains("`t.as_slice()[i & 15]`: index `i & 15` in [0,15] can be 15 but len is 8"),
+            "{}",
+            f.message
+        );
+        assert!(f.message.ends_with("{'index': 15, 'expr': 't.as_slice()[i & 15]'}"));
+        let ok = report("pub fn idx(t: [u32; 8], i: usize) -> u32 { t.as_slice()[i & 7] }");
+        assert!(ok.findings.is_empty(), "{:?}", ok.findings);
+        assert_eq!(ok.proved, 4);
+    }
+
+    #[test]
+    fn unresolved_call_yields_unknown_not_violated() {
+        let r = report("pub fn unk(x: u32) -> u64 { helper(x) << 1 }");
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert_eq!(r.violated, 0);
+        assert_eq!(r.unknown, 4);
+        let f = &r.findings[0];
+        assert_eq!(f.rule, "shift-range");
+        assert!(
+            f.message.contains("unknown: `helper(x) << 1`: unknown operand width"),
+            "{}",
+            f.message
+        );
+    }
+
+    #[test]
+    fn loop_bound_refines_shift_amount() {
+        let src = "
+pub fn fold(x: u32) -> u32 {
+    let mut acc = 0u32;
+    for k in 0..4 {
+        acc = acc.wrapping_add(x >> (k * 4));
+    }
+    acc
+}
+";
+        let r = report(src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.proved, 4);
+    }
+
+    #[test]
+    fn lane_alias_resolves_element_width() {
+        let src = "
+pub const LANES: usize = 8;
+pub type Lane = [u64; LANES];
+pub fn lane_shift(v: Lane, s: u32) -> u64 {
+    if s < 64 { v[0] << s } else { 0 }
+}
+";
+        let r = report(src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.proved, 4);
+    }
+
+    #[test]
+    fn bits_parameter_is_pinned_to_analysed_width() {
+        let r = report("pub fn kern(x: u32, bits: u32) -> u32 { x >> (32 - bits) }");
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.proved, 4);
+    }
+
+    #[test]
+    fn pragma_downgrades_violation_to_allowed() {
+        let mut pragmas = Pragmas::default();
+        pragmas
+            .entry("simd/mod.rs".to_string())
+            .or_default()
+            .entry(5)
+            .or_default()
+            .insert("shift-range".to_string());
+        let r = report_with(BROKEN_SHIFT, &pragmas);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.violated, 0);
+    }
+}

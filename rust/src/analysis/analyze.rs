@@ -1,0 +1,347 @@
+//! Whole-program analysis driver: `scaletrim analyze`.
+//!
+//! Orchestrates the three analyses built on the [`crate::analysis::graph`]
+//! item model —
+//!
+//! - **lock-order** ([`crate::analysis::lockorder`]): transitive lock
+//!   nesting over the call graph; cycles and non-allowlisted
+//!   second-lock-while-holding pairs are findings,
+//! - **bitwidth intervals** ([`crate::analysis::absint`]): abstract
+//!   interpretation over the kernel directories proving every shift
+//!   amount, narrowing cast and lut index in range at operand widths
+//!   8/16/24/32 — or reporting a concrete counterexample witness,
+//! - **drift** ([`crate::analysis::drift`]): unreachable `pub` items,
+//!   never-emitted `obs::names` constants, `DesignSpec` variants missing
+//!   from exhaustive-by-convention match arms,
+//!
+//! and renders findings compiler-style: `file:line: [rule] message`.
+//!
+//! ## Suppression
+//!
+//! A finding is silenced by the pragma marker `analyze:allow` followed
+//! immediately by the rule name in parentheses, then a colon and a
+//! non-empty reason, placed in a line comment on the flagged line or on
+//! a comment-only line directly above it. (The marker is spelled here
+//! without its parenthesised rule so this doc line does not itself
+//! register as a pragma site.) Suppressed interval obligations are
+//! counted as `allowed`, not `proved`.
+//!
+//! ## Stack
+//!
+//! The interval interpreter is recursive over expression trees and
+//! block structure; the driver runs all analyses on a dedicated thread
+//! with a large fixed stack so deeply nested kernels cannot overflow
+//! the main thread, and joins it with an explicit error instead of a
+//! propagated panic.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+use super::absint::{analyze_absint, KERNEL_DIRS, WIDTHS};
+use super::drift::analyze_drift;
+use super::graph::build_model;
+use super::lex;
+use super::lexer::Line;
+use super::lockorder::analyze_locks;
+use super::tokens::{tokenize, Tok};
+
+/// One analysis diagnostic.
+#[derive(Debug, Clone)]
+pub struct Diag {
+    /// Rule identifier (`lock-cycle`, `shift-range`, `dead-pub`, ...).
+    pub rule: &'static str,
+    /// Slash-separated path relative to the analysis root (`-` for
+    /// findings that span files, e.g. a lock cycle).
+    pub file: String,
+    /// 1-based source line (0 when the finding has no single site).
+    pub line: usize,
+    /// Human-readable message; interval findings carry the concrete
+    /// counterexample witness (`{'amount': ..., 'expr': ...}`) inline.
+    pub message: String,
+}
+
+impl Diag {
+    /// Compiler-style rendering: `file:line: [rule] message`.
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Per-file pragma map: `file -> line -> suppressed rules`, where the
+/// line is the code line the pragma covers.
+pub type Pragmas = BTreeMap<String, BTreeMap<usize, BTreeSet<String>>>;
+
+/// Aggregate result of an analysis run.
+#[derive(Debug, Default)]
+pub struct TreeReport {
+    /// All findings, lock-order first, then intervals, then drift.
+    pub findings: Vec<Diag>,
+    /// Interval obligations proved in range (summed over widths).
+    pub proved: usize,
+    /// Interval obligations with a concrete out-of-range witness.
+    pub violated: usize,
+    /// Interval obligations the analysis could not bound either way.
+    pub unknown: usize,
+    /// Distinct allowlisted lock-nesting pairs observed.
+    pub lock_pairs: usize,
+    /// `.rs` files in the model.
+    pub files: usize,
+    /// Items (functions / methods) extracted from them.
+    pub items: usize,
+}
+
+/// Collect pragmas from one file's lexed lines.
+///
+/// A pragma on a code line covers that line; a pragma on a comment-only
+/// line covers the next line carrying code (comment blocks stack onto
+/// the same target line).
+pub fn collect_pragmas(lines: &[Line]) -> BTreeMap<usize, BTreeSet<String>> {
+    let mut out: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+    let marker = "analyze:allow(";
+    for (idx, ln) in lines.iter().enumerate() {
+        let Some(pos) = ln.comment.find(marker) else {
+            continue;
+        };
+        let frag = &ln.comment[pos + marker.len()..];
+        let Some(close) = frag.find(')') else {
+            continue;
+        };
+        let rule = frag[..close].trim();
+        let rest = frag[close + 1..].trim_start();
+        let Some(reason) = rest.strip_prefix(':') else {
+            continue;
+        };
+        if reason.trim().len() <= 2 {
+            continue;
+        }
+        let mut j = idx;
+        while j < lines.len() && lines[j].code.trim().is_empty() {
+            j += 1;
+        }
+        if let Some(target) = lines.get(j) {
+            out.entry(target.number)
+                .or_default()
+                .insert(rule.to_string());
+        }
+    }
+    out
+}
+
+/// Should a directory be descended into? Skips VCS/hidden dirs, build
+/// output and generated artifact trees.
+fn walkable(name: &str) -> bool {
+    !name.starts_with('.') && name != "target" && name != "artifacts"
+}
+
+/// Preorder walk collecting `.rs` files: each directory lists its files
+/// (sorted) before its subdirectories (sorted), so load order — and
+/// therefore model and finding order — is deterministic across
+/// filesystems.
+fn walk_rs(root: &Path, dir: &Path, out: &mut Vec<(String, PathBuf)>) -> crate::Result<()> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    let mut dirs: Vec<PathBuf> = Vec::new();
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| anyhow::anyhow!("listing {}: {e}", dir.display()))?;
+    for entry in entries {
+        let path = entry
+            .map_err(|e| anyhow::anyhow!("listing {}: {e}", dir.display()))?
+            .path();
+        let name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        if path.is_dir() {
+            if walkable(&name) {
+                dirs.push(path);
+            }
+        } else if name.ends_with(".rs") {
+            files.push(path);
+        }
+    }
+    files.sort();
+    dirs.sort();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        out.push((rel, path));
+    }
+    for d in dirs {
+        walk_rs(root, &d, out)?;
+    }
+    Ok(())
+}
+
+/// Run all analyses over in-memory `(relpath, source)` pairs. `extra`
+/// holds sources outside the model root (integration tests, benches,
+/// examples) that count as uses for the drift analysis but are not
+/// themselves analysed.
+pub fn analyze_sources(
+    files: &[(&str, &str)],
+    extra: &[(&str, &str)],
+) -> crate::Result<TreeReport> {
+    let mut lexed: Vec<(String, Vec<Line>)> = Vec::with_capacity(files.len());
+    for (rel, src) in files {
+        lexed.push((rel.to_string(), lex(src)));
+    }
+    let mut pragmas = Pragmas::new();
+    for (rel, lines) in &lexed {
+        let per_file = collect_pragmas(lines);
+        if !per_file.is_empty() {
+            pragmas.insert(rel.clone(), per_file);
+        }
+    }
+    let model = build_model(
+        lexed
+            .iter()
+            .map(|(rel, lines)| (rel.clone(), tokenize(lines)))
+            .collect(),
+    );
+    let extra_toks: Vec<(String, Vec<Tok>)> = extra
+        .iter()
+        .map(|(rel, src)| (rel.to_string(), tokenize(&lex(src))))
+        .collect();
+
+    // The interval interpreter recurses over expression trees; run the
+    // analyses on a thread with a large fixed stack and join explicitly.
+    let handle = std::thread::Builder::new()
+        .name("analyze".to_string())
+        .stack_size(64 * 1024 * 1024)
+        .spawn(move || {
+            let mut report = TreeReport {
+                files: model.files.len(),
+                items: model.items.len(),
+                ..TreeReport::default()
+            };
+            let (lock_findings, pairs) = analyze_locks(&model);
+            report.lock_pairs = pairs.len();
+            report.findings.extend(lock_findings);
+            let iv = analyze_absint(&model, &pragmas, &KERNEL_DIRS, &WIDTHS);
+            report.proved = iv.proved;
+            report.violated = iv.violated;
+            report.unknown = iv.unknown;
+            report.findings.extend(iv.findings);
+            report
+                .findings
+                .extend(analyze_drift(&model, &extra_toks, &pragmas));
+            report
+        })
+        .map_err(|e| anyhow::anyhow!("spawning analysis thread: {e}"))?;
+    match handle.join() {
+        Ok(report) => Ok(report),
+        Err(_) => Err(anyhow::anyhow!("analysis thread terminated abnormally")),
+    }
+}
+
+/// Analyze every `.rs` file under `src_root`; sibling `tests/`,
+/// `benches/` and `examples/` directories (when present) are folded in
+/// as drift-use evidence.
+pub fn analyze_tree(src_root: &Path) -> crate::Result<TreeReport> {
+    let mut paths: Vec<(String, PathBuf)> = Vec::new();
+    walk_rs(src_root, src_root, &mut paths)?;
+    let mut owned: Vec<(String, String)> = Vec::with_capacity(paths.len());
+    for (rel, abs) in paths {
+        let text = std::fs::read_to_string(&abs)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", abs.display()))?;
+        owned.push((rel, text));
+    }
+    let mut extra_owned: Vec<(String, String)> = Vec::new();
+    if let Some(parent) = src_root.parent() {
+        for sib in ["tests", "benches", "examples"] {
+            let d = parent.join(sib);
+            if !d.is_dir() {
+                continue;
+            }
+            let mut sib_paths: Vec<(String, PathBuf)> = Vec::new();
+            walk_rs(&d, &d, &mut sib_paths)?;
+            for (rel, abs) in sib_paths {
+                let text = std::fs::read_to_string(&abs)
+                    .map_err(|e| anyhow::anyhow!("reading {}: {e}", abs.display()))?;
+                extra_owned.push((format!("{sib}/{rel}"), text));
+            }
+        }
+    }
+    let files: Vec<(&str, &str)> = owned.iter().map(|(p, t)| (p.as_str(), t.as_str())).collect();
+    let extra: Vec<(&str, &str)> = extra_owned
+        .iter()
+        .map(|(p, t)| (p.as_str(), t.as_str()))
+        .collect();
+    analyze_sources(&files, &extra)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_is_compiler_style() {
+        let d = Diag {
+            rule: "shift-range",
+            file: "simd/mod.rs".to_string(),
+            line: 7,
+            message: "msg".to_string(),
+        };
+        assert_eq!(d.render(), "simd/mod.rs:7: [shift-range] msg");
+    }
+
+    #[test]
+    fn pragma_on_code_line_covers_that_line() {
+        let lines = lex("let x = 1; // analyze:allow(shift-range): amount bounded by caller\n");
+        let p = collect_pragmas(&lines);
+        assert_eq!(p.len(), 1);
+        assert!(p[&1].contains("shift-range"));
+    }
+
+    #[test]
+    fn pragma_on_comment_line_covers_next_code_line() {
+        let src = "\n// analyze:allow(cast-range): masked upstream\n// more prose\nlet y = 2;\n";
+        let p = collect_pragmas(&lex(src));
+        assert_eq!(p.len(), 1);
+        assert!(p[&4].contains("cast-range"));
+    }
+
+    #[test]
+    fn pragma_without_reason_is_ignored() {
+        let p = collect_pragmas(&lex("let x = 1; // analyze:allow(shift-range)\n"));
+        assert!(p.is_empty());
+        let p = collect_pragmas(&lex("let x = 1; // analyze:allow(shift-range): no\n"));
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn model_items_resolve_by_qualified_name() {
+        let r = analyze_sources(&[("util/mod.rs", "pub fn helper(x: u32) -> u32 { x }")], &[]);
+        let report = match r {
+            Ok(rep) => rep,
+            Err(e) => unreachable!("analyze_sources failed: {e}"),
+        };
+        assert_eq!(report.files, 1);
+        assert_eq!(report.items, 1);
+        // the graph-level lookup the driver and tests key findings by
+        let model = build_model(vec![(
+            "util/mod.rs".to_string(),
+            tokenize(&lex("pub fn helper(x: u32) -> u32 { x }")),
+        )]);
+        let hit = model.item_q("util/mod.rs::helper");
+        assert!(hit.is_some_and(|it| it.is_pub));
+    }
+
+    #[test]
+    fn clean_fixture_reports_no_findings() {
+        // helper is pub but referenced from the extra stream, shift is
+        // guarded: nothing to report.
+        let files = [(
+            "simd/mod.rs",
+            "pub fn shl4(a: u64) -> u64 { a << 4 }\n",
+        )];
+        let extra = [("tests/t.rs", "fn t() { let _ = shl4(1); }")];
+        let report = match analyze_sources(&files, &extra) {
+            Ok(rep) => rep,
+            Err(e) => unreachable!("analyze_sources failed: {e}"),
+        };
+        assert!(report.findings.is_empty(), "{:?}", report.findings);
+        assert_eq!(report.proved, 4);
+    }
+}

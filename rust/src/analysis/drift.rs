@@ -1,0 +1,365 @@
+//! Drift analysis: dead `pub` surface, orphaned `obs::names` constants,
+//! and `DesignSpec` variants missing from the coverage fns.
+//!
+//! - **dead-pub** — a `pub fn` / `pub const` in `rust/src` whose name is
+//!   mentioned nowhere else (word-boundary token scan over src + tests +
+//!   benches + examples, definition sites excluded). Trait-impl methods
+//!   are exempt (reachable through the trait object), approximated by
+//!   exempting items whose impl header contains `for`; names that double
+//!   as std/trait idioms (`new`, `fmt`, …) are skipped outright.
+//! - **dead-name** — a const in `obs/names.rs` never mentioned outside
+//!   that file: vocabulary that nothing emits.
+//! - **spec-drift** — a `DesignSpec` variant absent from the token range
+//!   of a coverage fn (`enumerate`/`build`/`family` in
+//!   `multipliers/spec.rs`, `structural` in `hardware/designs.rs`).
+//!   `enumerate` carries a documented exemption list: families outside
+//!   the paper's measured zoo.
+
+use super::analyze::{Diag, Pragmas};
+use super::graph::{impl_target, Model};
+use super::tokens::{Kind, Tok};
+use std::collections::BTreeSet;
+
+/// `DesignSpec` families deliberately outside `enumerate`'s paper zoo.
+const ENUMERATE_EXEMPT: [&str; 5] = ["ScaleTrimQ", "Piecewise", "Letam", "Roba", "Exact"];
+
+/// Names that double as std/trait idioms: too common to mention-scan.
+const DEAD_PUB_EXEMPT_NAMES: [&str; 11] = [
+    "new", "default", "fmt", "clone", "drop", "len", "is_empty", "next", "from_str", "eq", "hash",
+];
+
+/// Coverage fns every `DesignSpec` variant must appear in:
+/// `(fn_name, file, exemptions)`.
+const COVERAGE: [(&str, &str, &[&str]); 4] = [
+    ("enumerate", "multipliers/spec.rs", &ENUMERATE_EXEMPT),
+    ("build", "multipliers/spec.rs", &[]),
+    ("family", "multipliers/spec.rs", &[]),
+    ("structural", "hardware/designs.rs", &[]),
+];
+
+/// Count word-boundary token mentions of `name`, excluding `(file, idx)`
+/// definition sites; `extra` carries tests/benches/examples streams.
+fn mentions(
+    model: &Model,
+    extra: &[(String, Vec<Tok>)],
+    name: &str,
+    skip: &BTreeSet<(String, usize)>,
+) -> usize {
+    let mut n = 0usize;
+    for (rel, toks) in &model.files {
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind == Kind::Ident && t.text == name && !skip.contains(&(rel.clone(), i)) {
+                n += 1;
+            }
+        }
+    }
+    for (_rel, toks) in extra {
+        for t in toks {
+            if t.kind == Kind::Ident && t.text == name {
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+/// `(file, tok_index)` of tokens that *are* the definition of `name`.
+fn def_sites(model: &Model, name: &str) -> BTreeSet<(String, usize)> {
+    let mut out = BTreeSet::new();
+    for (rel, toks) in &model.files {
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind == Kind::Ident
+                && t.text == name
+                && i > 0
+                && matches!(
+                    toks[i - 1].text.as_str(),
+                    "fn" | "const" | "static" | "struct" | "enum" | "trait" | "mod" | "type"
+                )
+            {
+                out.insert((rel.clone(), i));
+            }
+        }
+    }
+    out
+}
+
+/// `(file, owner)` pairs whose impl header contains `for` (trait impls).
+fn trait_impl_owners(model: &Model) -> BTreeSet<(String, String)> {
+    let mut out = BTreeSet::new();
+    for (rel, toks) in &model.files {
+        let n = toks.len();
+        let mut i = 0usize;
+        while i < n {
+            if toks[i].text == "impl" {
+                let mut j = i + 1;
+                let mut d = 0i64;
+                let mut has_for = false;
+                while j < n && !(d == 0 && (toks[j].text == "{" || toks[j].text == ";")) {
+                    match toks[j].text.as_str() {
+                        "(" | "[" => d += 1,
+                        ")" | "]" => d -= 1,
+                        "for" if d == 0 => has_for = true,
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                if has_for {
+                    out.insert((rel.clone(), impl_target(&toks[i + 1..j])));
+                }
+                i = j;
+                continue;
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Run the drift analysis. `extra` holds token streams for files outside
+/// the model root (tests/benches/examples) that count as uses.
+pub fn analyze_drift(
+    model: &Model,
+    extra: &[(String, Vec<Tok>)],
+    pragmas: &Pragmas,
+) -> Vec<Diag> {
+    let mut findings: Vec<Diag> = Vec::new();
+    let suppressed = |rule: &str, f: &str, ln: usize| -> bool {
+        pragmas
+            .get(f)
+            .and_then(|m| m.get(&ln))
+            .is_some_and(|rules| rules.contains(rule))
+    };
+    let emit = |findings: &mut Vec<Diag>, rule: &'static str, f: &str, ln: usize, msg: String| {
+        if suppressed(rule, f, ln) {
+            return;
+        }
+        findings.push(Diag {
+            rule,
+            file: f.to_string(),
+            line: ln,
+            message: msg,
+        });
+    };
+    let titem = trait_impl_owners(model);
+    // --- dead-pub -------------------------------------------------------
+    for it in &model.items {
+        if !it.is_pub || it.is_test || DEAD_PUB_EXEMPT_NAMES.contains(&it.name.as_str()) {
+            continue;
+        }
+        if let Some(o) = &it.owner {
+            if titem.contains(&(it.file.clone(), o.clone())) {
+                continue;
+            }
+        }
+        let skip = def_sites(model, &it.name);
+        if mentions(model, extra, &it.name, &skip) == 0 {
+            emit(
+                &mut findings,
+                "dead-pub",
+                &it.file,
+                it.line,
+                format!("`{}` is pub but mentioned nowhere else", it.qname()),
+            );
+        }
+    }
+    for c in &model.consts {
+        if !c.is_pub || DEAD_PUB_EXEMPT_NAMES.contains(&c.name.as_str()) {
+            continue;
+        }
+        let skip = def_sites(model, &c.name);
+        if mentions(model, extra, &c.name, &skip) == 0 {
+            emit(
+                &mut findings,
+                "dead-pub",
+                &c.file,
+                c.line,
+                format!("`{}` is pub but mentioned nowhere else", c.name),
+            );
+        }
+    }
+    // --- dead-name ------------------------------------------------------
+    for c in &model.consts {
+        if !c.file.starts_with("obs/names") {
+            continue;
+        }
+        let mut found = 0usize;
+        for (rel, toks) in &model.files {
+            if *rel == c.file {
+                continue;
+            }
+            found += toks
+                .iter()
+                .filter(|t| t.kind == Kind::Ident && t.text == c.name)
+                .count();
+        }
+        for (_rel, toks) in extra {
+            found += toks
+                .iter()
+                .filter(|t| t.kind == Kind::Ident && t.text == c.name)
+                .count();
+        }
+        if found == 0 {
+            emit(
+                &mut findings,
+                "dead-name",
+                &c.file,
+                c.line,
+                format!("obs name `{}` is never emitted", c.name),
+            );
+        }
+    }
+    // --- spec-drift -----------------------------------------------------
+    let mut spec = None;
+    for e in &model.enums {
+        if e.name == "DesignSpec" {
+            spec = Some(e);
+        }
+    }
+    if let Some(spec) = spec {
+        for (fn_name, fn_file, exempt) in COVERAGE {
+            let mut target = None;
+            for it in &model.items {
+                if it.name == fn_name && it.file == fn_file && it.body.is_some() {
+                    target = Some(it);
+                }
+            }
+            let target = match target {
+                Some(t) => t,
+                None => {
+                    emit(
+                        &mut findings,
+                        "spec-drift",
+                        fn_file,
+                        0,
+                        format!("coverage fn `{fn_name}` not found"),
+                    );
+                    continue;
+                }
+            };
+            let toks = model.file_toks(fn_file).unwrap_or(&[]);
+            let (lo, hi) = match target.body {
+                Some(b) => b,
+                None => continue,
+            };
+            let present: BTreeSet<&str> = toks[lo..hi.min(toks.len())]
+                .iter()
+                .filter(|t| t.kind == Kind::Ident)
+                .map(|t| t.text.as_str())
+                .collect();
+            for (v, vline) in &spec.variants {
+                if exempt.contains(&v.as_str()) {
+                    continue;
+                }
+                if !present.contains(v.as_str()) {
+                    emit(
+                        &mut findings,
+                        "spec-drift",
+                        &spec.file,
+                        *vline,
+                        format!("`DesignSpec::{v}` has no arm in `{fn_name}` ({fn_file})"),
+                    );
+                }
+            }
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::graph::build_model;
+    use crate::analysis::lex;
+    use crate::analysis::tokens::tokenize;
+
+    fn run(files: Vec<(&str, &str)>, extra: Vec<(&str, &str)>) -> Vec<Diag> {
+        let model = build_model(
+            files
+                .into_iter()
+                .map(|(r, s)| (r.to_string(), tokenize(&lex(s))))
+                .collect(),
+        );
+        let extra: Vec<(String, Vec<Tok>)> = extra
+            .into_iter()
+            .map(|(r, s)| (r.to_string(), tokenize(&lex(s))))
+            .collect();
+        analyze_drift(&model, &extra, &Pragmas::new())
+    }
+
+    #[test]
+    fn unreferenced_pub_fn_is_dead() {
+        let f = run(vec![("a.rs", "pub fn orphan() {}\npub fn used() {}\nfn go() { used(); }")], vec![]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "dead-pub");
+        assert!(f[0].message.contains("orphan"));
+    }
+
+    #[test]
+    fn test_mentions_count_as_uses() {
+        let f = run(
+            vec![("a.rs", "pub fn covered() {}")],
+            vec![("tests/t.rs", "fn t() { covered(); }")],
+        );
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn trait_impl_methods_are_exempt() {
+        let f = run(
+            vec![("a.rs", "impl fmt::Display for T { pub fn helper(&self) {} }")],
+            vec![],
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn orphaned_obs_name_is_dead() {
+        let f = run(
+            vec![
+                ("obs/names.rs", "pub const USED: &str = \"u\";\npub const ORPHAN: &str = \"o\";"),
+                ("m.rs", "fn go() { emit(USED); }"),
+            ],
+            vec![],
+        );
+        // ORPHAN: dead-name (and dead-pub, since nothing mentions it).
+        assert!(f.iter().any(|d| d.rule == "dead-name" && d.message.contains("ORPHAN")));
+        assert!(!f.iter().any(|d| d.rule == "dead-name" && d.message.contains("USED")));
+    }
+
+    #[test]
+    fn missing_match_arm_is_spec_drift() {
+        let spec_src = "pub enum DesignSpec { ScaleTrim, Tosam }\n\
+             pub fn enumerate() { arm(ScaleTrim); arm(Tosam); }\n\
+             pub fn build() { arm(ScaleTrim); }\n\
+             pub fn family() { arm(ScaleTrim); arm(Tosam); }";
+        let f = run(
+            vec![
+                ("multipliers/spec.rs", spec_src),
+                ("hardware/designs.rs", "pub fn structural() { arm(ScaleTrim); arm(Tosam); }"),
+                ("u.rs", "fn u() { enumerate(); build(); family(); structural(); DesignSpec; }"),
+            ],
+            vec![],
+        );
+        let drift: Vec<&Diag> = f.iter().filter(|d| d.rule == "spec-drift").collect();
+        assert_eq!(drift.len(), 1, "{f:?}");
+        assert!(drift[0].message.contains("Tosam"));
+        assert!(drift[0].message.contains("`build`"));
+    }
+
+    #[test]
+    fn exempt_families_skip_enumerate_only() {
+        let spec_src = "pub enum DesignSpec { ScaleTrim, Exact }\n\
+             pub fn enumerate() { arm(ScaleTrim); }\n\
+             pub fn build() { arm(ScaleTrim); arm(Exact); }\n\
+             pub fn family() { arm(ScaleTrim); arm(Exact); }";
+        let f = run(
+            vec![
+                ("multipliers/spec.rs", spec_src),
+                ("hardware/designs.rs", "pub fn structural() { arm(ScaleTrim); arm(Exact); }"),
+                ("u.rs", "fn u() { enumerate(); build(); family(); structural(); DesignSpec; }"),
+            ],
+            vec![],
+        );
+        assert!(!f.iter().any(|d| d.rule == "spec-drift"), "{f:?}");
+    }
+}

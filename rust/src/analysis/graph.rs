@@ -1,0 +1,690 @@
+//! Cross-file item graph over token streams — the shared program model
+//! for the whole-program analyses (`lockorder`, `absint`, `drift`).
+//!
+//! The model is deliberately syntactic: a brace/paren-matching scan over
+//! the [`crate::analysis::tokens`] stream recovers every `fn` item (with
+//! owner `impl` type, params, return type and body token range), every
+//! module/impl-level `const`/`static`, every `enum` with its variants and
+//! every `struct` with its fields. No name resolution beyond what those
+//! analyses need — each performs its own conservative lookup over the
+//! model (see [`Model::item_named`]).
+//!
+//! File order is load order (the sorted directory walk in
+//! `analysis::analyze`), and items keep that order, so every downstream
+//! witness and candidate-resolution choice is deterministic.
+
+use super::tokens::{Kind, Tok};
+
+/// Rust keywords — used to tell enum variants and pattern binders apart
+/// from syntax.
+pub const KEYWORDS: [&str; 38] = [
+    "fn", "let", "mut", "pub", "use", "mod", "impl", "for", "while", "loop", "if", "else",
+    "match", "return", "struct", "enum", "trait", "const", "static", "ref", "in", "as", "where",
+    "type", "dyn", "move", "break", "continue", "crate", "super", "self", "Self", "unsafe",
+    "async", "await", "true", "false",
+];
+
+/// True when `s` is a Rust keyword.
+pub fn is_keyword(s: &str) -> bool {
+    KEYWORDS.contains(&s)
+}
+
+/// One `fn` item (free function or impl method).
+#[derive(Debug, Clone)]
+pub struct Item {
+    /// File the item lives in (slash-separated path relative to the root).
+    pub file: String,
+    /// Bare function name.
+    pub name: String,
+    /// Enclosing `impl` type name, if any.
+    pub owner: Option<String>,
+    /// 1-based line of the `fn` keyword.
+    pub line: usize,
+    /// Declared `pub`.
+    pub is_pub: bool,
+    /// Inside a `#[cfg(test)]` region.
+    pub is_test: bool,
+    /// Parameters as `(pattern_tokens, type_tokens)` pairs.
+    pub params: Vec<(Vec<String>, Vec<String>)>,
+    /// Return type tokens (empty = unit).
+    pub ret: Vec<String>,
+    /// Body token range `[start, end)` including both braces, if present.
+    pub body: Option<(usize, usize)>,
+    /// Generic parameter tokens.
+    pub generics: Vec<String>,
+}
+
+impl Item {
+    /// Qualified name: `Owner::name` for methods, `file::name` for free fns.
+    pub fn qname(&self) -> String {
+        match &self.owner {
+            Some(o) => format!("{o}::{}", self.name),
+            None => format!("{}::{}", self.file, self.name),
+        }
+    }
+}
+
+/// A module- or impl-level `const` / `static`.
+#[derive(Debug, Clone)]
+pub struct ConstItem {
+    /// File the const lives in.
+    pub file: String,
+    /// Const name.
+    pub name: String,
+    /// Enclosing `impl` type name, if any.
+    pub owner: Option<String>,
+    /// 1-based line of the name token.
+    pub line: usize,
+    /// Declared `pub`.
+    pub is_pub: bool,
+    /// Declared type tokens.
+    pub ty: Vec<String>,
+    /// Initializer token texts (up to the terminating `;`).
+    pub value_toks: Vec<String>,
+    /// `static` rather than `const`.
+    pub is_static: bool,
+}
+
+/// An `enum` definition with its variants.
+#[derive(Debug, Clone)]
+pub struct EnumItem {
+    /// File the enum lives in.
+    pub file: String,
+    /// Enum name.
+    pub name: String,
+    /// 1-based line of the `enum` keyword.
+    pub line: usize,
+    /// Declared `pub`.
+    pub is_pub: bool,
+    /// Variants as `(name, line)` pairs, declaration order.
+    pub variants: Vec<(String, usize)>,
+}
+
+/// A `struct` definition with its named fields.
+#[derive(Debug, Clone)]
+pub struct StructItem {
+    /// File the struct lives in.
+    pub file: String,
+    /// Struct name.
+    pub name: String,
+    /// 1-based line of the `struct` keyword.
+    pub line: usize,
+    /// Declared `pub`.
+    pub is_pub: bool,
+    /// Field name → type tokens, declaration order.
+    pub fields: Vec<(String, Vec<String>)>,
+}
+
+/// The whole-program model: token streams plus extracted items.
+#[derive(Debug, Default)]
+pub struct Model {
+    /// `(relpath, tokens)` in load order.
+    pub files: Vec<(String, Vec<Tok>)>,
+    /// All `fn` items, load order.
+    pub items: Vec<Item>,
+    /// All module/impl-level consts and statics.
+    pub consts: Vec<ConstItem>,
+    /// All enums.
+    pub enums: Vec<EnumItem>,
+    /// All structs.
+    pub structs: Vec<StructItem>,
+}
+
+impl Model {
+    /// Token stream of a file, by rel path.
+    pub fn file_toks(&self, rel: &str) -> Option<&[Tok]> {
+        self.files
+            .iter()
+            .find(|(r, _)| r == rel)
+            .map(|(_, t)| t.as_slice())
+    }
+
+    /// All items with the given bare name, load order.
+    pub fn item_named(&self, name: &str) -> Vec<&Item> {
+        self.items.iter().filter(|it| it.name == name).collect()
+    }
+
+    /// First item with the given qualified name.
+    pub fn item_q(&self, qname: &str) -> Option<&Item> {
+        self.items.iter().find(|it| it.qname() == qname)
+    }
+}
+
+/// Index just past the matching `close` for the `open` delimiter at `i`.
+/// Falls off the end (returning `toks.len()`) on unbalanced input.
+pub fn match_delim(toks: &[Tok], i: usize, open: &str, close: &str) -> usize {
+    let mut d = 0i64;
+    let mut j = i;
+    while j < toks.len() {
+        let t = toks[j].text.as_str();
+        if t == open {
+            d += 1;
+        } else if t == close {
+            d -= 1;
+            if d == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+/// If `toks[i]` is `<`, return the index just past the matching `>`
+/// (counting `<<`/`>>` as two); bails back to `i` when the angle run
+/// hits `(`, `{` or `;` (comparison, not generics).
+pub fn skip_generics(toks: &[Tok], i: usize) -> usize {
+    if i >= toks.len() || toks[i].text != "<" {
+        return i;
+    }
+    let mut d = 0i64;
+    let mut j = i;
+    while j < toks.len() {
+        let t = toks[j].text.as_str();
+        if t == "<" || t == "<<" {
+            d += if t == "<<" { 2 } else { 1 };
+        } else if t == ">" || t == ">>" {
+            d -= if t == ">>" { 2 } else { 1 };
+            if d <= 0 {
+                return j + 1;
+            }
+        } else if t == "(" || t == "{" || t == ";" {
+            return i;
+        }
+        j += 1;
+    }
+    i
+}
+
+/// True when `word` appears in the up-to-`window` tokens before `i`,
+/// stopping at statement/block boundaries.
+pub fn prev_has(toks: &[Tok], i: usize, word: &str) -> bool {
+    let window = 6usize;
+    let mut seen = 0usize;
+    let mut j = i;
+    while j > 0 && seen < window {
+        j -= 1;
+        let t = toks[j].text.as_str();
+        if t == word {
+            return true;
+        }
+        if t == "}" || t == "{" || t == ";" {
+            return false;
+        }
+        seen += 1;
+    }
+    false
+}
+
+/// Split `toks[lo..hi]` (the inside of a param list) on top-level commas,
+/// then each segment on its top-level `:` (not `::`) into
+/// `(pattern_tokens, type_tokens)`.
+pub fn parse_params(toks: &[Tok], lo: usize, hi: usize) -> Vec<(Vec<String>, Vec<String>)> {
+    let mut out = Vec::new();
+    let mut parts: Vec<(usize, usize)> = Vec::new();
+    let mut d = 0i64;
+    let mut start = lo;
+    let mut j = lo;
+    while j < hi {
+        let t = toks[j].text.as_str();
+        match t {
+            "(" | "[" | "{" => d += 1,
+            ")" | "]" | "}" => d -= 1,
+            "<" => d += 1,
+            ">" => d -= 1,
+            "<<" => d += 2,
+            ">>" => d -= 2,
+            "," if d == 0 => {
+                parts.push((start, j));
+                start = j + 1;
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    if start < hi {
+        parts.push((start, hi));
+    }
+    for (a, b) in parts {
+        let seg = &toks[a..b];
+        let mut dd = 0i64;
+        let mut ci: Option<usize> = None;
+        for (k, t) in seg.iter().enumerate() {
+            match t.text.as_str() {
+                "(" | "[" | "{" | "<" => dd += 1,
+                ")" | "]" | "}" | ">" => dd -= 1,
+                "<<" => dd += 2,
+                ">>" => dd -= 2,
+                ":" if dd == 0 => {
+                    ci = Some(k);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        match ci {
+            None => out.push((seg.iter().map(|t| t.text.clone()).collect(), Vec::new())),
+            Some(c) => out.push((
+                seg[..c].iter().map(|t| t.text.clone()).collect(),
+                seg[c + 1..].iter().map(|t| t.text.clone()).collect(),
+            )),
+        }
+    }
+    out
+}
+
+/// Build the model from `(relpath, tokens)` streams in load order.
+pub fn build_model(files: Vec<(String, Vec<Tok>)>) -> Model {
+    let mut m = Model::default();
+    for (rel, toks) in files {
+        extract_items(&mut m, &rel, &toks);
+        m.files.push((rel, toks));
+    }
+    m
+}
+
+fn extract_items(m: &mut Model, rel: &str, toks: &[Tok]) {
+    let n = toks.len();
+    // (type_name, depth at which the impl body opens)
+    let mut impl_stack: Vec<(String, i64)> = Vec::new();
+    let mut depth = 0i64;
+    let mut i = 0usize;
+    while i < n {
+        let t = &toks[i];
+        let x = t.text.as_str();
+        if x == "{" {
+            depth += 1;
+            i += 1;
+            continue;
+        }
+        if x == "}" {
+            depth -= 1;
+            while impl_stack.last().is_some_and(|top| depth < top.1) {
+                impl_stack.pop();
+            }
+            i += 1;
+            continue;
+        }
+        if x == "impl" {
+            let mut j = i + 1;
+            let mut d = 0i64;
+            while j < n && !(d == 0 && (toks[j].text == "{" || toks[j].text == ";")) {
+                match toks[j].text.as_str() {
+                    "(" | "[" => d += 1,
+                    ")" | "]" => d -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+            let name = impl_target(&toks[i + 1..j]);
+            if j < n && toks[j].text == "{" {
+                impl_stack.push((name, depth + 1));
+            }
+            i = j;
+            continue;
+        }
+        if x == "fn" && i + 1 < n && toks[i + 1].kind == Kind::Ident {
+            let mut it = Item {
+                file: rel.to_string(),
+                name: toks[i + 1].text.clone(),
+                owner: impl_stack.last().map(|top| top.0.clone()),
+                line: t.line,
+                is_pub: prev_has(toks, i, "pub"),
+                is_test: t.skipped,
+                params: Vec::new(),
+                ret: Vec::new(),
+                body: None,
+                generics: Vec::new(),
+            };
+            let mut j = skip_generics(toks, i + 2);
+            it.generics = toks[i + 2..j].iter().map(|tt| tt.text.clone()).collect();
+            if j < n && toks[j].text == "(" {
+                let pend = match_delim(toks, j, "(", ")");
+                it.params = parse_params(toks, j + 1, pend.saturating_sub(1));
+                j = pend;
+            }
+            if j < n && toks[j].text == "->" {
+                let mut k = j + 1;
+                let mut d = 0i64;
+                while k < n
+                    && !(d == 0
+                        && (toks[k].text == "{" || toks[k].text == ";" || toks[k].text == "where"))
+                {
+                    match toks[k].text.as_str() {
+                        "(" | "[" | "<" => d += 1,
+                        ")" | "]" | ">" => d -= 1,
+                        "<<" => d += 2,
+                        ">>" => d -= 2,
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                it.ret = toks[j + 1..k].iter().map(|tt| tt.text.clone()).collect();
+                j = k;
+            }
+            while j < n && toks[j].text != "{" && toks[j].text != ";" {
+                j += 1;
+            }
+            if j < n && toks[j].text == "{" {
+                let bend = match_delim(toks, j, "{", "}");
+                it.body = Some((j, bend));
+                m.items.push(it);
+                // descend into the body; the '{' keeps depth bookkeeping honest
+                i = j;
+                continue;
+            }
+            m.items.push(it);
+            i = j.max(i + 1);
+            continue;
+        }
+        if (x == "const" || x == "static") && i + 1 < n && toks[i + 1].kind == Kind::Ident {
+            // module/impl level consts; fn-local ones are re-walked by absint.
+            let name_t = &toks[i + 1];
+            if name_t.text == "_" {
+                i += 1;
+                continue;
+            }
+            let mut j = i + 2;
+            let mut ty = Vec::new();
+            if j < n && toks[j].text == ":" {
+                let mut k = j + 1;
+                let mut d = 0i64;
+                while k < n && !(d == 0 && (toks[k].text == "=" || toks[k].text == ";")) {
+                    match toks[k].text.as_str() {
+                        "(" | "[" | "<" => d += 1,
+                        ")" | "]" | ">" => d -= 1,
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                ty = toks[j + 1..k].iter().map(|tt| tt.text.clone()).collect();
+                j = k;
+            }
+            let mut val = Vec::new();
+            if j < n && toks[j].text == "=" {
+                let mut k = j + 1;
+                let mut d = 0i64;
+                while k < n && !(d == 0 && toks[k].text == ";") {
+                    match toks[k].text.as_str() {
+                        "(" | "[" | "{" => d += 1,
+                        ")" | "]" | "}" => d -= 1,
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                val = toks[j + 1..k].iter().map(|tt| tt.text.clone()).collect();
+                j = k;
+            }
+            m.consts.push(ConstItem {
+                file: rel.to_string(),
+                name: name_t.text.clone(),
+                owner: impl_stack.last().map(|top| top.0.clone()),
+                line: name_t.line,
+                is_pub: prev_has(toks, i, "pub"),
+                ty,
+                value_toks: val,
+                is_static: x == "static",
+            });
+            i = j;
+            continue;
+        }
+        if x == "enum" && i + 1 < n && toks[i + 1].kind == Kind::Ident {
+            let mut e = EnumItem {
+                file: rel.to_string(),
+                name: toks[i + 1].text.clone(),
+                line: t.line,
+                is_pub: prev_has(toks, i, "pub"),
+                variants: Vec::new(),
+            };
+            let j = skip_generics(toks, i + 2);
+            if j < n && toks[j].text == "{" {
+                let end = match_delim(toks, j, "{", "}");
+                let mut k = j + 1;
+                let mut d = 1i64;
+                let mut expecting = true;
+                while k + 1 < end {
+                    let tt = toks[k].text.as_str();
+                    match tt {
+                        "{" | "(" | "[" => d += 1,
+                        "}" | ")" | "]" => d -= 1,
+                        _ if d == 1 => {
+                            if expecting && toks[k].kind == Kind::Ident && !is_keyword(tt) {
+                                e.variants.push((tt.to_string(), toks[k].line));
+                                expecting = false;
+                            } else if tt == "," {
+                                expecting = true;
+                            }
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                i = end;
+            } else {
+                i = j.max(i + 1);
+            }
+            m.enums.push(e);
+            continue;
+        }
+        if x == "struct" && i + 1 < n && toks[i + 1].kind == Kind::Ident {
+            let mut s = StructItem {
+                file: rel.to_string(),
+                name: toks[i + 1].text.clone(),
+                line: t.line,
+                is_pub: prev_has(toks, i, "pub"),
+                fields: Vec::new(),
+            };
+            let j = skip_generics(toks, i + 2);
+            if j < n && toks[j].text == "{" {
+                let end = match_delim(toks, j, "{", "}");
+                let mut k = j + 1;
+                let mut d = 1i64;
+                while k + 1 < end {
+                    let tt = toks[k].text.as_str();
+                    match tt {
+                        "{" | "(" | "[" => {
+                            d += 1;
+                            k += 1;
+                            continue;
+                        }
+                        "}" | ")" | "]" => {
+                            d -= 1;
+                            k += 1;
+                            continue;
+                        }
+                        _ => {}
+                    }
+                    if d == 1 && toks[k].kind == Kind::Ident && k + 1 < end && toks[k + 1].text == ":"
+                    {
+                        // collect the field type until a top-level ',' or close
+                        let mut v = k + 2;
+                        let mut dd = 0i64;
+                        while v + 1 < end && !(dd == 0 && toks[v].text == ",") {
+                            match toks[v].text.as_str() {
+                                "(" | "[" | "<" | "{" => dd += 1,
+                                ")" | "]" | ">" | "}" => dd -= 1,
+                                "<<" => dd += 2,
+                                ">>" => dd -= 2,
+                                _ => {}
+                            }
+                            v += 1;
+                        }
+                        s.fields.push((
+                            tt.to_string(),
+                            toks[k + 2..v].iter().map(|q| q.text.clone()).collect(),
+                        ));
+                        k = v;
+                        continue;
+                    }
+                    k += 1;
+                }
+                i = end;
+            } else {
+                i = j.max(i + 1);
+            }
+            m.structs.push(s);
+            continue;
+        }
+        i += 1;
+    }
+}
+
+/// Resolve the target type name of an `impl` header token run (the
+/// tokens between `impl` and its `{`): strips leading generics, honors
+/// `impl Trait for Target`, drops the `where` clause, and names the last
+/// path segment before any generic arguments.
+pub fn impl_target(header: &[Tok]) -> String {
+    let mut texts: Vec<&str> = header.iter().map(|t| t.text.as_str()).collect();
+    // strip leading generic parameter list
+    if texts.first() == Some(&"<") {
+        let mut d = 0i64;
+        let mut start = 0usize;
+        for (k, x) in texts.iter().enumerate() {
+            match *x {
+                "<" => d += 1,
+                "<<" => d += 2,
+                ">" => {
+                    d -= 1;
+                    if d == 0 {
+                        start = k + 1;
+                        break;
+                    }
+                }
+                ">>" => {
+                    d -= 2;
+                    if d <= 0 {
+                        start = k + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        texts = texts.split_off(start);
+    }
+    // `for` at angle/paren depth 0 → the target follows it
+    let mut d = 0i64;
+    let mut fi: Option<usize> = None;
+    for (k, x) in texts.iter().enumerate() {
+        match *x {
+            "<" | "(" => d += 1,
+            ">" | ")" => d -= 1,
+            "<<" => d += 2,
+            ">>" => d -= 2,
+            "for" if d == 0 => fi = Some(k),
+            _ => {}
+        }
+    }
+    if let Some(k) = fi {
+        texts = texts.split_off(k + 1);
+    }
+    if let Some(w) = texts.iter().position(|x| *x == "where") {
+        texts.truncate(w);
+    }
+    // path: last ident before generic arguments
+    let mut name: Option<&str> = None;
+    for x in &texts {
+        if *x == "<" {
+            break;
+        }
+        let first_alpha = x.chars().next().is_some_and(|c| c.is_alphabetic() || c == '_');
+        if !matches!(*x, "::" | "&" | "dyn" | "mut") && first_alpha {
+            name = Some(x);
+        }
+    }
+    name.unwrap_or("?").to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lex;
+    use crate::analysis::tokens::tokenize;
+
+    fn model(src: &str) -> Model {
+        build_model(vec![("t.rs".to_string(), tokenize(&lex(src)))])
+    }
+
+    #[test]
+    fn free_fn_and_method_qnames() {
+        let m = model("pub fn free(a: u32) -> u32 { a }\nimpl Foo { fn m(&self) {} }");
+        assert_eq!(m.items.len(), 2);
+        assert_eq!(m.items[0].qname(), "t.rs::free");
+        assert!(m.items[0].is_pub);
+        assert_eq!(m.items[1].qname(), "Foo::m");
+        assert!(!m.items[1].is_pub);
+    }
+
+    #[test]
+    fn params_split_on_top_level_commas() {
+        let m = model("fn f(a: u32, (b, c): (u8, u8), d: Vec<(u8, u8)>) {}");
+        let p = &m.items[0].params;
+        assert_eq!(p.len(), 3);
+        assert_eq!(p[0].0, ["a"]);
+        assert_eq!(p[0].1, ["u32"]);
+        assert_eq!(p[1].0, ["(", "b", ",", "c", ")"]);
+        assert_eq!(p[2].0, ["d"]);
+    }
+
+    #[test]
+    fn return_type_and_body_range() {
+        let m = model("fn f() -> Result<u32, Error> { Ok(1) }");
+        let it = &m.items[0];
+        assert_eq!(it.ret, ["Result", "<", "u32", ",", "Error", ">"]);
+        let (lo, hi) = it.body.unwrap();
+        let toks = m.file_toks("t.rs").unwrap();
+        assert_eq!(toks[lo].text, "{");
+        assert_eq!(toks[hi - 1].text, "}");
+    }
+
+    #[test]
+    fn trait_impl_owner_is_the_target_type() {
+        let m = model("impl fmt::Display for DesignSpec { fn go(&self) {} }");
+        assert_eq!(m.items[0].owner.as_deref(), Some("DesignSpec"));
+    }
+
+    #[test]
+    fn generic_impl_header() {
+        let m = model("impl<T: Clone> Holder<T> { fn get(&self) {} }");
+        assert_eq!(m.items[0].owner.as_deref(), Some("Holder"));
+    }
+
+    #[test]
+    fn nested_fns_keep_owners_straight() {
+        let m = model("impl A { fn outer(&self) { fn inner() {} } }\nfn after() {}");
+        let names: Vec<(String, Option<String>)> = m
+            .items
+            .iter()
+            .map(|i| (i.name.clone(), i.owner.clone()))
+            .collect();
+        assert_eq!(names[0], ("outer".to_string(), Some("A".to_string())));
+        // inner is discovered while walking outer's body tokens
+        assert_eq!(names[1], ("inner".to_string(), Some("A".to_string())));
+        assert_eq!(names[2], ("after".to_string(), None));
+    }
+
+    #[test]
+    fn consts_enums_structs() {
+        let m = model(
+            "pub const W: u32 = 8;\nstatic S: [u8; 4] = [0; 4];\n\
+             pub enum E { A, B(u8), C { x: u8 } }\n\
+             pub struct P { pub a: u32, b: Vec<(u8, u8)> }",
+        );
+        assert_eq!(m.consts.len(), 2);
+        assert_eq!(m.consts[0].name, "W");
+        assert!(m.consts[0].is_pub);
+        assert_eq!(m.consts[0].ty, ["u32"]);
+        assert!(m.consts[1].is_static);
+        let vars: Vec<&str> = m.enums[0].variants.iter().map(|v| v.0.as_str()).collect();
+        assert_eq!(vars, ["A", "B", "C"]);
+        assert_eq!(m.structs[0].fields.len(), 2);
+        assert_eq!(m.structs[0].fields[0].0, "a");
+    }
+
+    #[test]
+    fn cfg_test_items_are_marked() {
+        let m = model("fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}");
+        assert!(!m.items[0].is_test);
+        assert!(m.items[1].is_test);
+    }
+}

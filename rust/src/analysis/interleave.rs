@@ -69,6 +69,15 @@ pub struct Stats {
     pub truncated: u64,
 }
 
+impl Stats {
+    /// True when the exploration covered the whole schedule tree — no
+    /// branch was cut by the depth bound — so "no violation" is a
+    /// proof over the model, not a sample of it.
+    pub fn complete(&self) -> bool {
+        self.truncated == 0
+    }
+}
+
 /// Explore every interleaving of `model` up to `max_depth` steps.
 /// Returns the first violation found (if any) and the exploration
 /// counters.
@@ -266,6 +275,7 @@ mod tests {
         assert!(violation.is_none());
         assert_eq!(stats.schedules, 0);
         assert_eq!(stats.truncated, 1);
+        assert!(!stats.complete());
         assert_eq!(stats.states, 6); // initial + 5 steps
     }
 }

@@ -5,21 +5,25 @@
 //! more:
 //!
 //! - comments split off (`//` text is kept — pragmas live there; `/* */`
-//!   bodies are dropped, including across lines);
-//! - string literal *contents* blanked to `""` (plain, `b"`, `r"`, and
-//!   one-hash `r#"` forms), so a rule pattern can never match inside a
-//!   message string;
+//!   bodies are dropped, including across lines, **with nesting**: Rust
+//!   block comments nest, so the lexer keeps a depth counter instead of a
+//!   boolean);
+//! - string literal *contents* blanked to `""` (plain, `b"`, and the raw
+//!   forms `r"`, `br"`, `r#"` … with any number of hashes), so a rule
+//!   pattern can never match inside a message string. String literals may
+//!   span physical lines — plain strings via a literal newline or a
+//!   trailing backslash, raw strings freely — and the lexer carries that
+//!   state across lines, so blanking can never desynchronize the line
+//!   numbering or the brace bookkeeping below it;
 //! - char literals blanked to `' '` while lifetimes (`'a`) pass through —
 //!   disambiguated by shape, not by parsing generics;
 //! - `#[cfg(test)]` items (and `#[cfg(all(test, ...))]`) marked as
 //!   *skipped*: the rules keep brace bookkeeping over them but report
 //!   nothing, because test code is exempt from the production rules.
 //!
-//! The trade-off is explicit: a line lexer cannot see a string literal
-//! that spans physical lines (only possible in raw strings here), so
-//! fixtures in tests either live in escaped one-line strings or stay
-//! brace-balanced. In exchange the whole analyzer is dependency-free and
-//! fast enough to run on every `cargo test`.
+//! The remaining trade-off is explicit: the lexer never expands macros
+//! and sees exactly the token text. In exchange the whole analyzer is
+//! dependency-free and fast enough to run on every `cargo test`.
 
 /// One lexed source line.
 #[derive(Debug, Clone)]
@@ -35,10 +39,23 @@ pub struct Line {
     pub skipped: bool,
 }
 
+/// Lexer state that survives a line break.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    /// Ordinary code.
+    Code,
+    /// Inside a block comment, at the given nesting depth (≥ 1).
+    BlockComment(u32),
+    /// Inside a plain or byte string literal (backslash escapes apply).
+    Str,
+    /// Inside a raw string literal closed by `"` plus this many hashes.
+    RawStr(u32),
+}
+
 /// Lex a whole file into [`Line`]s.
 pub fn lex(text: &str) -> Vec<Line> {
     let mut out = Vec::new();
-    let mut in_block_comment = false;
+    let mut mode = Mode::Code;
     // cfg(test) skip state: attribute seen, waiting for the item's `{`.
     let mut skip_pending = false;
     // Brace depth *inside* the skipped item, once entered.
@@ -52,54 +69,69 @@ pub fn lex(text: &str) -> Vec<Line> {
         let mut comment = String::new();
         let mut i = 0;
         while i < n {
-            let c = raw[i];
-            if in_block_comment {
-                if raw[i..].starts_with(b"*/") {
-                    in_block_comment = false;
-                    i += 2;
-                } else {
-                    i += 1;
+            match mode {
+                Mode::BlockComment(d) => {
+                    if raw[i..].starts_with(b"/*") {
+                        mode = Mode::BlockComment(d + 1);
+                        i += 2;
+                    } else if raw[i..].starts_with(b"*/") {
+                        mode = if d > 1 { Mode::BlockComment(d - 1) } else { Mode::Code };
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                    continue;
                 }
-                continue;
+                Mode::Str => {
+                    if raw[i] == b'\\' {
+                        i += 2; // escape (a trailing `\` continues the line)
+                    } else if raw[i] == b'"' {
+                        mode = Mode::Code;
+                        i += 1;
+                    } else {
+                        i += 1;
+                    }
+                    continue;
+                }
+                Mode::RawStr(hashes) => {
+                    if raw[i] == b'"' && trailing_hashes(raw, i + 1) >= hashes {
+                        mode = Mode::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        i += 1;
+                    }
+                    continue;
+                }
+                Mode::Code => {}
             }
+            let c = raw[i];
             if raw[i..].starts_with(b"//") {
                 comment = String::from_utf8_lossy(&raw[i + 2..]).into_owned();
                 break;
             }
             if raw[i..].starts_with(b"/*") {
-                in_block_comment = true;
+                mode = Mode::BlockComment(1);
                 i += 2;
                 continue;
             }
-            if c == b'"'
-                || raw[i..].starts_with(b"b\"")
-                || raw[i..].starts_with(b"r\"")
-                || raw[i..].starts_with(b"r#\"")
-            {
-                if raw[i..].starts_with(b"r#\"") {
+            // String-literal prefixes only open a literal when they are
+            // not the tail of an identifier (`writer"` is not `r"`).
+            let glued = code.last().is_some_and(|b| b.is_ascii_alphanumeric() || *b == b'_');
+            if !glued {
+                if let Some((open_len, hashes)) = raw_string_open(raw, i) {
                     code.extend_from_slice(b"\"\"");
-                    i = match find_from(raw, b"\"#", i + 3) {
-                        Some(j) => j + 2,
-                        None => n,
-                    };
+                    mode = Mode::RawStr(hashes);
+                    i += open_len;
                     continue;
                 }
+            }
+            if c == b'"' || (!glued && raw[i..].starts_with(b"b\"")) {
                 if c != b'"' {
-                    i += 1; // skip the b/r prefix byte
+                    i += 1; // skip the b prefix byte
                 }
                 code.extend_from_slice(b"\"\"");
+                mode = Mode::Str;
                 i += 1;
-                while i < n {
-                    if raw[i] == b'\\' {
-                        i += 2;
-                        continue;
-                    }
-                    if raw[i] == b'"' {
-                        i += 1;
-                        break;
-                    }
-                    i += 1;
-                }
                 continue;
             }
             if c == b'\'' {
@@ -154,15 +186,37 @@ pub fn lex(text: &str) -> Vec<Line> {
     out
 }
 
-/// Naive substring search from a byte offset.
-fn find_from(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
-    if from > hay.len() {
+/// When `raw[i..]` opens a raw string literal (`r"`, `br"`, `r#"`, … with
+/// any number of hashes), return the byte length of the opening delimiter
+/// and the hash count.
+fn raw_string_open(raw: &[u8], i: usize) -> Option<(usize, u32)> {
+    let mut j = i;
+    if raw.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if raw.get(j) != Some(&b'r') {
         return None;
     }
-    hay[from..]
-        .windows(needle.len())
-        .position(|w| w == needle)
-        .map(|p| p + from)
+    j += 1;
+    let mut hashes = 0u32;
+    while raw.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if raw.get(j) == Some(&b'"') {
+        Some((j + 1 - i, hashes))
+    } else {
+        None // `r#ident` (a raw identifier) or a bare `r`/`br`
+    }
+}
+
+/// Number of consecutive `#` bytes starting at `raw[from]`.
+fn trailing_hashes(raw: &[u8], from: usize) -> u32 {
+    let mut k = 0u32;
+    while raw.get(from + k as usize) == Some(&b'#') {
+        k += 1;
+    }
+    k
 }
 
 /// Length in bytes of a char literal starting at `raw[i] == '\''`, or
@@ -223,6 +277,22 @@ mod tests {
         assert_eq!(one("let b = b\"ab\\\"c\";").code, "let b = \"\";");
         assert_eq!(one("let r = r\"a\\b\";").code, "let r = \"\";");
         assert_eq!(one("let h = r#\"say \"hi\"\"#;").code, "let h = \"\";");
+        assert_eq!(one("let h = r##\"one \"# two\"##;").code, "let h = \"\";");
+        assert_eq!(one("let h = br#\"bytes \" here\"#;").code, "let h = \"\";");
+    }
+
+    #[test]
+    fn raw_identifiers_are_not_string_openers() {
+        let l = one("let r#type = r#match + 1;");
+        assert_eq!(l.code, "let r#type = r#match + 1;");
+    }
+
+    #[test]
+    fn identifier_tails_do_not_open_literals() {
+        // `writer` ends in `r` and `grab` ends in `b`: neither may start
+        // a raw/byte string when followed by a quote-bearing expression.
+        let l = one("writer(\"x\"); grab(\"y\");");
+        assert_eq!(l.code, "writer(\"\"); grab(\"\");");
     }
 
     #[test]
@@ -238,6 +308,50 @@ mod tests {
         assert_eq!(v[0].code, "a(); ");
         assert_eq!(v[1].code, "");
         assert_eq!(v[2].code, " b();");
+    }
+
+    #[test]
+    fn nested_block_comments_close_at_outer_depth() {
+        let v = lex("a(); /* outer /* inner */ still comment */ b();");
+        assert_eq!(v[0].code, "a();  b();");
+        let v = lex("/* l1 /* l2\n l2 body */\n still l1 */ code();");
+        assert_eq!(v[0].code, "");
+        assert_eq!(v[1].code, "");
+        assert_eq!(v[2].code, " code();");
+    }
+
+    #[test]
+    fn raw_string_spans_lines_without_desync() {
+        // The `{` and `.unwrap()` inside the raw string are literal text:
+        // they must not leak into code, and the lines after the literal
+        // must keep their own numbers and content.
+        let src = "let s = r#\"line one {\n .unwrap() }} \"\n\"#;\nlet t = 2;";
+        let v = lex(src);
+        assert_eq!(v.len(), 4);
+        assert_eq!(v[0].code, "let s = \"\"");
+        assert_eq!(v[1].code, "");
+        assert_eq!(v[2].code, ";");
+        assert_eq!(v[3].code, "let t = 2;");
+        assert_eq!(v[3].number, 4);
+    }
+
+    #[test]
+    fn plain_string_spans_lines_without_desync() {
+        let src = "let s = \"first {\nsecond } .unwrap()\";\nf();";
+        let v = lex(src);
+        assert_eq!(v[0].code, "let s = \"\"");
+        assert_eq!(v[1].code, ";");
+        assert_eq!(v[2].code, "f();");
+    }
+
+    #[test]
+    fn multiline_string_does_not_break_cfg_test_tracking() {
+        // The brace inside the raw string must not close the test module
+        // early: `after()` is still inside `mod tests`.
+        let src = "#[cfg(test)]\nmod tests {\n    const S: &str = r#\"}\n}\"#;\n    fn after() {}\n}\nfn prod() {}";
+        let v = lex(src);
+        let skipped: Vec<bool> = v.iter().map(|l| l.skipped).collect();
+        assert_eq!(skipped, vec![true, true, true, true, true, true, false]);
     }
 
     #[test]

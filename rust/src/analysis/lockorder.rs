@@ -1,0 +1,752 @@
+//! Lock-order analysis over the item graph: every guard span is scanned
+//! for further acquisitions — directly or transitively through calls —
+//! and the resulting nesting digraph is checked for re-entry, pairs
+//! outside the allowlist, and cycles.
+//!
+//! ## Model
+//!
+//! Primitive acquisition sites are `lock_unpoisoned(..)` calls, `.lock()`
+//! method calls, `.get_or_init(` on an ALL_CAPS receiver (a `static
+//! OnceLock`), and `Type::lock(..)` path calls. The `wait_unpoisoned` /
+//! `wait_timeout_unpoisoned` helpers are guard *passthroughs*, not
+//! acquisitions. Lock tokens are named structurally: `self.X` becomes
+//! `Owner.X`, an ALL_CAPS static becomes `file::NAME`, a call receiver
+//! becomes `ret:<callee>`, and a bare parameter marks the enclosing fn
+//! as a *parametric forwarder* whose token each caller resolves from its
+//! own argument.
+//!
+//! Guard spans follow the binding: a `let g = ACQ` statement whose
+//! trailing chain is only poison adapters holds to the end of the
+//! enclosing block (shortened by `drop(g)`); any other acquisition is a
+//! temporary that dies at its statement's `;`.
+//!
+//! Call resolution is deliberately conservative — `self.m()`, `Type::m()`
+//! and crate-unique free fns resolve; method calls through arbitrary
+//! receivers do not (a documented under-approximation: such a call could
+//! hide an acquisition; the repo's lock surface is fully covered by the
+//! resolvable forms, which `tests/analyze_clean.rs` pins).
+
+use super::analyze::Diag;
+use super::graph::{match_delim, Item, Model};
+use super::tokens::Kind;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Method names that merely adapt a poisoned guard result.
+const POISON_ADAPTERS: [&str; 3] = ["unwrap", "unwrap_or_else", "expect"];
+
+/// Ordered nesting the tree is allowed to exhibit. `once:` guards are
+/// OnceLock initialisers: std guarantees single execution and the cycle
+/// check still covers inverted orders. `LutRegistry.tables` is the
+/// registry's documented outer lock.
+const ALLOWED: [(&str, &str); 2] = [("once:*", "*"), ("LutRegistry.tables", "*")];
+
+fn pat_match(p: &str, s: &str) -> bool {
+    p == s || (p.ends_with('*') && s.starts_with(&p[..p.len() - 1]))
+}
+
+/// True when the ordered pair `(held, inner)` is allowlisted.
+pub fn allowed(a: &str, b: &str) -> bool {
+    ALLOWED
+        .iter()
+        .any(|(pa, pb)| pat_match(pa, a) && pat_match(pb, b))
+}
+
+fn is_all_caps(s: &str) -> bool {
+    let first_alpha = s.chars().next().is_some_and(|c| c.is_alphabetic());
+    first_alpha && s == s.to_uppercase() && s.chars().any(|c| c.is_alphabetic())
+}
+
+/// One primitive acquisition site.
+struct Acq {
+    tok_i: usize,
+    end_i: usize,
+    line: usize,
+    /// Lock token, or `None` when the receiver is a fn parameter.
+    token: Option<String>,
+    /// Parameter name when the enclosing fn is a parametric forwarder.
+    param: Option<String>,
+}
+
+/// Receiver/argument naming outcome.
+enum Recv {
+    Token(String),
+    Param(String),
+    Unresolved,
+}
+
+/// Name a lock token from receiver/argument expression token texts.
+fn recv_token(texts: &[String], it: &Item, model: &Model) -> Recv {
+    let ts: Vec<&str> = texts
+        .iter()
+        .map(|t| t.as_str())
+        .filter(|t| *t != "&" && *t != "mut")
+        .collect();
+    if ts.is_empty() {
+        return Recv::Unresolved;
+    }
+    let mut param_names: BTreeSet<&str> = BTreeSet::new();
+    for (pat, _ty) in &it.params {
+        for p in pat {
+            if !matches!(p.as_str(), "&" | "mut" | "(" | ")" | ",") {
+                param_names.insert(p);
+            }
+        }
+    }
+    if ts.len() >= 3 && ts[0] == "self" && ts[1] == "." {
+        let base = it.owner.as_deref().unwrap_or(&it.file);
+        return Recv::Token(format!("{base}.{}", ts[2]));
+    }
+    if ts.len() == 1 && param_names.contains(ts[0]) {
+        return Recv::Param(ts[0].to_string());
+    }
+    if ts.len() == 1 && is_all_caps(ts[0]) {
+        return Recv::Token(format!("{}::{}", it.file, ts[0]));
+    }
+    if ts.len() >= 3 && ts[1] == "(" && ts[0].chars().next().is_some_and(|c| c.is_lowercase()) {
+        let cands: Vec<&Item> = model.items.iter().filter(|c| c.name == ts[0]).collect();
+        if cands.len() == 1 {
+            return Recv::Token(format!("ret:{}", cands[0].qname()));
+        }
+    }
+    if ts.last().is_some_and(|l| is_all_caps(l)) && ts.contains(&"::") {
+        let last = ts[ts.len() - 1];
+        return Recv::Token(format!("{}::{last}", it.file));
+    }
+    Recv::Unresolved
+}
+
+fn acq_from_recv(r: Recv, it: &Item, line: usize, tok_i: usize, end_i: usize) -> Acq {
+    let (token, param) = match r {
+        Recv::Token(t) => (Some(t), None),
+        Recv::Param(p) => (None, Some(p)),
+        Recv::Unresolved => (Some(format!("expr:{}:{line}", it.file)), None),
+    };
+    Acq {
+        tok_i,
+        end_i,
+        line,
+        token,
+        param,
+    }
+}
+
+/// Primitive acquisition sites inside `it`'s body.
+fn direct_acquisitions(model: &Model, it: &Item) -> Vec<Acq> {
+    let mut out = Vec::new();
+    let (toks, (lo, hi)) = match (model.file_toks(&it.file), it.body) {
+        (Some(t), Some(b)) => (t, b),
+        _ => return out,
+    };
+    let texts_of = |a: usize, b: usize| -> Vec<String> {
+        toks[a..b.max(a)].iter().map(|t| t.text.clone()).collect()
+    };
+    let mut i = lo;
+    while i < hi {
+        let t = &toks[i];
+        if t.text == "lock_unpoisoned" && i + 1 < hi && toks[i + 1].text == "(" {
+            let end = match_delim(toks, i + 1, "(", ")");
+            let r = recv_token(&texts_of(i + 2, end - 1), it, model);
+            out.push(acq_from_recv(r, it, t.line, i, end));
+            i = end;
+            continue;
+        }
+        if t.text == "." && i + 2 < hi && toks[i + 1].text == "lock" && toks[i + 2].text == "(" {
+            // receiver: walk back over the postfix chain
+            let rlo = receiver_start(toks, i, lo);
+            let end = match_delim(toks, i + 2, "(", ")");
+            let r = recv_token(&texts_of(rlo, i), it, model);
+            out.push(acq_from_recv(r, it, t.line, rlo, end));
+            i = end;
+            continue;
+        }
+        if t.text == "."
+            && i + 2 < hi
+            && toks[i + 1].text == "get_or_init"
+            && toks[i + 2].text == "("
+            && i > lo
+            && toks[i - 1].kind == Kind::Ident
+            && is_all_caps(&toks[i - 1].text)
+        {
+            let end = match_delim(toks, i + 2, "(", ")");
+            out.push(Acq {
+                tok_i: i - 1,
+                end_i: end,
+                line: t.line,
+                token: Some(format!("once:{}::{}", it.file, toks[i - 1].text)),
+                param: None,
+            });
+            i = end;
+            continue;
+        }
+        // Self::lock(&X) / Registry::lock(&X): forwarder call via path
+        if t.text == "lock"
+            && i + 1 < hi
+            && toks[i + 1].text == "("
+            && i > lo
+            && toks[i - 1].text == "::"
+        {
+            let end = match_delim(toks, i + 1, "(", ")");
+            let r = recv_token(&texts_of(i + 2, end - 1), it, model);
+            out.push(acq_from_recv(r, it, t.line, i, end));
+            i = end;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Start of the postfix chain ending at the `.` at `dot_i`.
+fn receiver_start(toks: &[super::tokens::Tok], dot_i: usize, lo: usize) -> usize {
+    let mut j = dot_i;
+    while j > lo {
+        let p = toks[j - 1].text.as_str();
+        if p == ")" || p == "]" {
+            // hop to the matching open
+            let mut d = 0i64;
+            let mut k = j - 1;
+            loop {
+                let x = toks[k].text.as_str();
+                if x == ")" || x == "]" {
+                    d += 1;
+                } else if x == "(" || x == "[" {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                if k == lo {
+                    break;
+                }
+                k -= 1;
+            }
+            j = k;
+            continue;
+        }
+        if toks[j - 1].kind == Kind::Ident || matches!(p, "." | "::" | "self" | "&") {
+            j -= 1;
+            continue;
+        }
+        break;
+    }
+    j
+}
+
+/// Token range `(start, end)` during which the guard of `acq` is held.
+fn span_of(model: &Model, it: &Item, acq: &Acq) -> (usize, usize) {
+    let (toks, (lo, hi)) = match (model.file_toks(&it.file), it.body) {
+        (Some(t), Some(b)) => (t, b),
+        _ => return (acq.end_i, acq.end_i),
+    };
+    // statement start: scan back to the previous ';' '{' '}'
+    let mut s = acq.tok_i;
+    while s > lo && !matches!(toks[s - 1].text.as_str(), ";" | "{" | "}") {
+        s -= 1;
+    }
+    // statement end: next ';' at depth 0 past the acquisition, else close
+    let mut d = 0i64;
+    let mut e = acq.end_i;
+    while e < hi {
+        let x = toks[e].text.as_str();
+        match x {
+            "(" | "[" | "{" => d += 1,
+            ")" | "]" | "}" => {
+                if d == 0 {
+                    break;
+                }
+                d -= 1;
+            }
+            ";" if d == 0 => break,
+            _ => {}
+        }
+        e += 1;
+    }
+    let is_let = s < toks.len() && toks[s].text == "let";
+    let mut chain_ok = true;
+    let mut k = acq.end_i;
+    while k < e {
+        if toks[k].text == "." {
+            if k + 1 < e && POISON_ADAPTERS.contains(&toks[k + 1].text.as_str()) {
+                k = if k + 2 < e && toks[k + 2].text == "(" {
+                    match_delim(toks, k + 2, "(", ")")
+                } else {
+                    k + 2
+                };
+                continue;
+            }
+            chain_ok = false;
+            break;
+        } else if toks[k].text == "?" {
+            k += 1;
+        } else {
+            chain_ok = false;
+            break;
+        }
+    }
+    if is_let && chain_ok {
+        // guard bound to a name: span to the enclosing block end or drop(name)
+        let mut j = s + 1;
+        while j < acq.tok_i && toks[j].text == "mut" {
+            j += 1;
+        }
+        let name: Option<&str> = (j < acq.tok_i && toks[j].kind == Kind::Ident)
+            .then(|| toks[j].text.as_str());
+        let mut d = 0i64;
+        let mut k = e + 1;
+        let mut end = hi - 1;
+        while k < hi {
+            let x = toks[k].text.as_str();
+            match x {
+                "{" | "(" | "[" => d += 1,
+                "}" | ")" | "]" => {
+                    if d == 0 {
+                        end = k;
+                        break;
+                    }
+                    d -= 1;
+                }
+                "drop"
+                    if name.is_some()
+                        && k + 2 < hi
+                        && toks[k + 1].text == "("
+                        && Some(toks[k + 2].text.as_str()) == name
+                        && d == 0 =>
+                {
+                    end = k;
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        return (e + 1, end);
+    }
+    (acq.end_i, e)
+}
+
+/// Call tokens whose callees never acquire locks (macros, control
+/// keywords ahead of `(`, and the guard helpers themselves).
+const SKIP_CALLS: [&str; 20] = [
+    "lock_unpoisoned",
+    "wait_unpoisoned",
+    "wait_timeout_unpoisoned",
+    "drop",
+    "matches",
+    "vec",
+    "if",
+    "while",
+    "match",
+    "for",
+    "return",
+    "assert",
+    "debug_assert",
+    "assert_eq",
+    "debug_assert_eq",
+    "panic",
+    "format",
+    "println",
+    "eprintln",
+    "writeln",
+];
+
+/// One resolved call site: `(line, callee candidates, argument texts)`.
+struct CallSite<'m> {
+    line: usize,
+    cands: Vec<&'m Item>,
+    arg: Vec<String>,
+}
+
+/// Resolved callee items for call tokens in `toks[lo..hi]`.
+///
+/// Resolution is deliberately conservative: `self.m(..)` resolves against
+/// the enclosing impl owner, `Type::m(..)` against that owner (module
+/// paths fall back to crate-unique free fns), and bare `f(..)` against
+/// free fns when the name is crate-unique. Method calls through arbitrary
+/// receivers do not resolve — an under-approximation the module docs own.
+fn call_sites<'m>(model: &'m Model, it: &Item, lo: usize, hi: usize) -> Vec<CallSite<'m>> {
+    let toks = match model.file_toks(&it.file) {
+        Some(t) => t,
+        None => return Vec::new(),
+    };
+    let mut out = Vec::new();
+    let mut i = lo;
+    while i < hi {
+        let t = &toks[i];
+        if t.kind == Kind::Ident && i + 1 < hi && toks[i + 1].text == "(" {
+            let nm = t.text.as_str();
+            if SKIP_CALLS.contains(&nm) || nm == "write" || nm == "get_or_init" {
+                i += 2;
+                continue;
+            }
+            let prev = if i > 0 { toks[i - 1].text.as_str() } else { "" };
+            let mut cands: Vec<&Item> = Vec::new();
+            if prev == "::" {
+                let seg = if i >= 2 { toks[i - 2].text.as_str() } else { "" };
+                let owner: Option<&str> = if seg == "Self" {
+                    it.owner.as_deref()
+                } else {
+                    Some(seg)
+                };
+                cands = model
+                    .items
+                    .iter()
+                    .filter(|c| c.name == nm && c.owner.as_deref() == owner && !c.is_test)
+                    .collect();
+                if cands.is_empty() && seg.chars().next().is_some_and(|c| c.is_lowercase()) {
+                    // module path (crate::obs::span): free fn, crate-unique
+                    let free: Vec<&Item> = model
+                        .items
+                        .iter()
+                        .filter(|c| c.name == nm && c.owner.is_none() && !c.is_test)
+                        .collect();
+                    if free.len() == 1 {
+                        cands = free;
+                    }
+                }
+            } else if prev == "." {
+                let recv = if i >= 2 { toks[i - 2].text.as_str() } else { "" };
+                if recv == "self" {
+                    cands = model
+                        .items
+                        .iter()
+                        .filter(|c| {
+                            c.name == nm && c.owner == it.owner && !c.is_test
+                        })
+                        .collect();
+                }
+                // non-self receivers stay unresolved (no type information)
+            } else {
+                let free: Vec<&Item> = model
+                    .items
+                    .iter()
+                    .filter(|c| c.name == nm && c.owner.is_none() && !c.is_test)
+                    .collect();
+                if free.len() == 1 {
+                    cands = free;
+                }
+            }
+            let end = match_delim(toks, i + 1, "(", ")");
+            let arg: Vec<String> = toks[i + 2..(end - 1).max(i + 2)]
+                .iter()
+                .map(|k| k.text.clone())
+                .collect();
+            if !cands.is_empty() {
+                out.push(CallSite {
+                    line: t.line,
+                    cands,
+                    arg,
+                });
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Fixpoint: qname → set of lock tokens transitively acquired, plus the
+/// parametric-forwarder map (qname → forwarded parameter name).
+fn build_acquires(model: &Model) -> (BTreeMap<String, BTreeSet<String>>, BTreeMap<String, String>) {
+    let mut acq: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    let mut forward: BTreeMap<String, String> = BTreeMap::new();
+    for it in &model.items {
+        if it.body.is_none() {
+            continue;
+        }
+        let mut toks: BTreeSet<String> = BTreeSet::new();
+        for a in direct_acquisitions(model, it) {
+            if let Some(p) = a.param {
+                forward.insert(it.qname(), p);
+            } else if let Some(t) = a.token {
+                toks.insert(t);
+            }
+        }
+        acq.insert(it.qname(), toks);
+    }
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for it in &model.items {
+            let (lo, hi) = match it.body {
+                Some(b) if !it.is_test => b,
+                _ => continue,
+            };
+            let q = it.qname();
+            let mut add: Vec<String> = Vec::new();
+            {
+                let cur = acq.get(&q).cloned().unwrap_or_default();
+                for cs in call_sites(model, it, lo, hi) {
+                    for c in &cs.cands {
+                        if forward.contains_key(&c.qname()) {
+                            let token = match recv_token(&cs.arg, it, model) {
+                                Recv::Token(t) => t,
+                                _ => format!("expr:{}:?", it.file),
+                            };
+                            if !cur.contains(&token) {
+                                add.push(token);
+                            }
+                            continue;
+                        }
+                        if let Some(set) = acq.get(&c.qname()) {
+                            for tkn in set {
+                                if !cur.contains(tkn) {
+                                    add.push(tkn.clone());
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if !add.is_empty() {
+                let cur = acq.entry(q).or_default();
+                for t in add {
+                    if cur.insert(t) {
+                        changed = true;
+                    }
+                }
+            }
+        }
+    }
+    (acq, forward)
+}
+
+/// The nesting digraph: ordered `(held, inner)` pairs with their first
+/// witness `(file, line, qname, held_since_line)`.
+pub type Pairs = BTreeMap<(String, String), (String, usize, String, usize)>;
+
+/// Run the lock-order analysis over the model. Returns findings
+/// (lock-reentry / lock-nesting / lock-cycle) plus the full pair set for
+/// reporting.
+pub fn analyze_locks(model: &Model) -> (Vec<Diag>, Pairs) {
+    let (acq_star, forward) = build_acquires(model);
+    let mut pairs: Pairs = BTreeMap::new();
+    let mut findings: Vec<Diag> = Vec::new();
+    for it in &model.items {
+        if it.body.is_none() || it.is_test {
+            continue;
+        }
+        let acqs = direct_acquisitions(model, it);
+        for a in &acqs {
+            let held = match &a.token {
+                Some(h) => h.clone(),
+                // parametric forwarder's own body: token unknown; skip
+                None => continue,
+            };
+            let (slo, shi) = span_of(model, it, a);
+            // further primitive acquisitions inside the span
+            for b in &acqs {
+                if std::ptr::eq(a, b) || !(slo <= b.tok_i && b.tok_i < shi) {
+                    continue;
+                }
+                let inner = match &b.token {
+                    Some(t) => t.clone(),
+                    None => continue,
+                };
+                pairs
+                    .entry((held.clone(), inner))
+                    .or_insert_with(|| (it.file.clone(), b.line, it.qname(), a.line));
+            }
+            // calls inside the span
+            for cs in call_sites(model, it, slo, shi) {
+                for c in &cs.cands {
+                    if forward.contains_key(&c.qname()) {
+                        let inner = match recv_token(&cs.arg, it, model) {
+                            Recv::Token(t) => t,
+                            _ => format!("expr:{}:{}", it.file, cs.line),
+                        };
+                        pairs
+                            .entry((held.clone(), inner))
+                            .or_insert_with(|| (it.file.clone(), cs.line, it.qname(), a.line));
+                        continue;
+                    }
+                    if let Some(set) = acq_star.get(&c.qname()) {
+                        for tkn in set {
+                            pairs
+                                .entry((held.clone(), tkn.clone()))
+                                .or_insert_with(|| (it.file.clone(), cs.line, it.qname(), a.line));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for ((a, b), (f, ln, q, held_ln)) in &pairs {
+        if a == b {
+            findings.push(Diag {
+                rule: "lock-reentry",
+                file: f.clone(),
+                line: *ln,
+                message: format!("`{q}` reacquires `{a}` (held since line {held_ln})"),
+            });
+        } else if !allowed(a, b) {
+            findings.push(Diag {
+                rule: "lock-nesting",
+                file: f.clone(),
+                line: *ln,
+                message: format!(
+                    "`{q}` acquires `{b}` while holding `{a}` (held since line {held_ln}); \
+                     pair not in the allowlist"
+                ),
+            });
+        }
+    }
+    // cycle detection over the full digraph (allowed pairs included)
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for (a, b) in pairs.keys() {
+        if a != b {
+            adj.entry(a).or_default().insert(b);
+        }
+    }
+    let mut state: BTreeMap<&str, u8> = BTreeMap::new();
+    let mut cyc: Vec<Vec<String>> = Vec::new();
+    let roots: Vec<&str> = adj.keys().copied().collect();
+    for u in roots {
+        if state.get(u).copied().unwrap_or(0) == 0 {
+            let mut stack: Vec<&str> = Vec::new();
+            dfs_cycles(u, &adj, &mut state, &mut stack, &mut cyc);
+        }
+    }
+    for c in cyc {
+        findings.push(Diag {
+            rule: "lock-cycle",
+            file: "-".to_string(),
+            line: 0,
+            message: format!("lock order cycle: {}", c.join(" -> ")),
+        });
+    }
+    (findings, pairs)
+}
+
+fn dfs_cycles<'a>(
+    u: &'a str,
+    adj: &BTreeMap<&'a str, BTreeSet<&'a str>>,
+    state: &mut BTreeMap<&'a str, u8>,
+    stack: &mut Vec<&'a str>,
+    cyc: &mut Vec<Vec<String>>,
+) {
+    state.insert(u, 1);
+    stack.push(u);
+    if let Some(vs) = adj.get(u) {
+        for v in vs {
+            match state.get(v).copied().unwrap_or(0) {
+                1 => {
+                    if let Some(pos) = stack.iter().position(|x| x == v) {
+                        let mut c: Vec<String> =
+                            stack[pos..].iter().map(|s| s.to_string()).collect();
+                        c.push(v.to_string());
+                        cyc.push(c);
+                    }
+                }
+                0 => dfs_cycles(v, adj, state, stack, cyc),
+                _ => {}
+            }
+        }
+    }
+    stack.pop();
+    state.insert(u, 2);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lex;
+    use crate::analysis::tokens::tokenize;
+    use crate::analysis::graph::build_model;
+
+    fn run(src: &str) -> (Vec<Diag>, Pairs) {
+        let model = build_model(vec![("t.rs".to_string(), tokenize(&lex(src)))]);
+        analyze_locks(&model)
+    }
+
+    #[test]
+    fn let_bound_guard_spans_the_block() {
+        let (f, pairs) = run(
+            "impl S {\n fn a(&self) {\n  let g = lock_unpoisoned(&self.a);\n  \
+             let h = lock_unpoisoned(&self.b);\n }\n}",
+        );
+        assert!(pairs.contains_key(&("S.a".to_string(), "S.b".to_string())));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "lock-nesting");
+    }
+
+    #[test]
+    fn temporary_guard_dies_at_the_statement() {
+        let (f, pairs) = run(
+            "impl S {\n fn a(&self) {\n  let n = lock_unpoisoned(&self.a).len();\n  \
+             let h = lock_unpoisoned(&self.b);\n }\n}",
+        );
+        assert!(pairs.is_empty(), "{pairs:?}");
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn drop_releases_early() {
+        let (f, _) = run(
+            "impl S {\n fn a(&self) {\n  let g = lock_unpoisoned(&self.a);\n  drop(g);\n  \
+             let h = lock_unpoisoned(&self.b);\n }\n}",
+        );
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn reentry_is_reported() {
+        let (f, _) = run(
+            "impl S {\n fn a(&self) {\n  let g = lock_unpoisoned(&self.m);\n  \
+             let h = lock_unpoisoned(&self.m);\n }\n}",
+        );
+        assert!(f.iter().any(|d| d.rule == "lock-reentry"));
+    }
+
+    #[test]
+    fn nesting_through_a_call_is_transitive() {
+        let (f, pairs) = run(
+            "impl S {\n fn inner(&self) { let g = lock_unpoisoned(&self.b); }\n \
+             fn outer(&self) {\n  let g = lock_unpoisoned(&self.a);\n  self.inner();\n }\n}",
+        );
+        assert!(pairs.contains_key(&("S.a".to_string(), "S.b".to_string())));
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn opposite_orders_make_a_cycle() {
+        let (f, _) = run(
+            "impl S {\n fn ab(&self) {\n  let g = lock_unpoisoned(&self.a);\n  \
+             let h = lock_unpoisoned(&self.b);\n }\n \
+             fn ba(&self) {\n  let g = lock_unpoisoned(&self.b);\n  \
+             let h = lock_unpoisoned(&self.a);\n }\n}",
+        );
+        let cycles: Vec<&Diag> = f.iter().filter(|d| d.rule == "lock-cycle").collect();
+        assert_eq!(cycles.len(), 1);
+        assert!(cycles[0].message.contains("S.a -> S.b -> S.a"));
+    }
+
+    #[test]
+    fn allowlisted_outer_lock_passes() {
+        let (f, pairs) = run(
+            "impl LutRegistry {\n fn a(&self) {\n  let g = lock_unpoisoned(&self.tables);\n  \
+             let h = lock_unpoisoned(&self.handles);\n }\n}",
+        );
+        assert!(!pairs.is_empty());
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn parametric_forwarder_resolves_at_the_caller() {
+        let (f, pairs) = run(
+            "fn helper(m: &Mutex<u32>) -> Guard { let g = lock_unpoisoned(m); g }\n\
+             impl S {\n fn outer(&self) {\n  let g = lock_unpoisoned(&self.a);\n  \
+             let h = helper(&self.b);\n }\n}",
+        );
+        assert!(pairs.contains_key(&("S.a".to_string(), "S.b".to_string())), "{pairs:?}");
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn once_lock_init_pair_via_call_is_allowlisted() {
+        let (f, pairs) = run(
+            "impl LutRegistry {\n fn init(&self) { let v = GLOBAL.get_or_init(|| 1); }\n \
+             fn outer(&self) {\n  let g = lock_unpoisoned(&self.tables);\n  self.init();\n }\n}",
+        );
+        assert!(pairs.keys().any(|(_, b)| b.starts_with("once:")), "{pairs:?}");
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

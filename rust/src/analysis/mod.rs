@@ -40,11 +40,31 @@
 //!
 //! Test code (`#[cfg(test)]` items) is exempt from all rules — the lexer
 //! marks those regions and the checks skip them.
+//!
+//! ## The whole-program plane
+//!
+//! The line-oriented lint above is deliberately local. Cross-file
+//! properties — lock-acquisition ordering over the call graph, shift /
+//! cast / index ranges under the declared operand widths, and drift
+//! between declared and used surface — are handled by the
+//! whole-program analyses: [`tokens`] re-tokenizes the lexed lines,
+//! [`graph`] extracts an item model (functions, methods, consts, enums,
+//! structs) across every file, and [`lockorder`], [`absint`] and
+//! [`drift`] interrogate that model. [`analyze`] drives all three as
+//! `scaletrim analyze` (gated in tier-1 CI, pinned clean by
+//! `tests/analyze_clean.rs`).
 
+pub mod absint;
+pub mod analyze;
+pub mod drift;
+pub mod graph;
 pub mod interleave;
 mod lexer;
+pub mod lockorder;
 mod rules;
+pub mod tokens;
 
+pub use analyze::{analyze_sources, analyze_tree, Diag, Pragmas, TreeReport};
 pub use lexer::{lex, Line};
 
 use std::collections::HashSet;
@@ -282,11 +302,26 @@ fn collect_rs(
 ) -> crate::Result<()> {
     let entries = std::fs::read_dir(dir)
         .map_err(|e| anyhow::anyhow!("listing {}: {e}", dir.display()))?;
+    let mut paths: Vec<std::path::PathBuf> = Vec::new();
     for entry in entries {
-        let path = entry
-            .map_err(|e| anyhow::anyhow!("listing {}: {e}", dir.display()))?
-            .path();
+        paths.push(
+            entry
+                .map_err(|e| anyhow::anyhow!("listing {}: {e}", dir.display()))?
+                .path(),
+        );
+    }
+    // deterministic walk order regardless of filesystem enumeration
+    paths.sort();
+    for path in paths {
         if path.is_dir() {
+            // build output and generated artifact trees are not sources
+            let name = path
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            if name.starts_with('.') || name == "target" || name == "artifacts" {
+                continue;
+            }
             collect_rs(root, &path, out)?;
         } else if path.extension().is_some_and(|ext| ext == "rs") {
             let rel = path

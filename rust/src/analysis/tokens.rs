@@ -1,0 +1,260 @@
+//! Token stream over lexed lines — the lexical substrate of the
+//! whole-program analyses (`analysis::graph` and friends).
+//!
+//! The [`crate::analysis::lex`] pass has already blanked string contents,
+//! stripped comments and marked `#[cfg(test)]` regions, so tokenization
+//! here is deliberately simple: identifiers (including `r#raw` forms),
+//! numeric literals (hex/bin/octal/float), the blanked `""` string
+//! marker, lifetimes, and punctuation with maximal-munch multi-char
+//! operators. Every token carries its source line and the test-region
+//! flag so downstream analyses can attribute findings and skip test
+//! code without re-lexing.
+
+use super::lexer::Line;
+
+/// Token kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword (including raw `r#ident` forms).
+    Ident,
+    /// Numeric literal (integer or float, any radix).
+    Num,
+    /// Punctuation / operator (maximal munch, up to 3 chars).
+    Punct,
+    /// String or char literal (blanked by the lexer: `""` / `' '`).
+    Str,
+    /// Lifetime (`'a`) or an empty tick left by a blanked char literal.
+    Life,
+}
+
+/// One token with its source position and test-region flag.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// 1-based source line number.
+    pub line: usize,
+    /// Token text (strings are the lexer's blanked form).
+    pub text: String,
+    /// Token kind.
+    pub kind: Kind,
+    /// True when the token sits inside a `#[cfg(test)]` region.
+    pub skipped: bool,
+}
+
+/// Three-char operators, tried before the two-char set (maximal munch).
+const MULTI3: [&str; 4] = ["<<=", ">>=", "..=", "..."];
+/// Two-char operators.
+const MULTI2: [&str; 19] = [
+    "::", "->", "=>", "<<", ">>", "<=", ">=", "==", "!=", "&&", "||", "+=", "-=", "*=", "/=",
+    "%=", "&=", "|=", "^=", "..",
+];
+
+fn is_id_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_id(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn starts_with_at(s: &[char], i: usize, pat: &str) -> bool {
+    let mut j = i;
+    for p in pat.chars() {
+        if j >= s.len() || s[j] != p {
+            return false;
+        }
+        j += 1;
+    }
+    true
+}
+
+/// Tokenize lexed lines into a flat token stream.
+pub fn tokenize(lines: &[Line]) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    for ln in lines {
+        let s: Vec<char> = ln.code.chars().collect();
+        let n = s.len();
+        let mut i = 0usize;
+        let push = |toks: &mut Vec<Tok>, text: String, kind: Kind| {
+            toks.push(Tok {
+                line: ln.number,
+                text,
+                kind,
+                skipped: ln.skipped,
+            });
+        };
+        while i < n {
+            let c = s[i];
+            if c == ' ' || c == '\t' || c == '\r' {
+                i += 1;
+                continue;
+            }
+            if starts_with_at(&s, i, "' '") {
+                push(&mut toks, "' '".to_string(), Kind::Str);
+                i += 3;
+                continue;
+            }
+            if c == '\'' {
+                // lifetime tick: consume tick + ident
+                let mut j = i + 1;
+                while j < n && is_id(s[j]) {
+                    j += 1;
+                }
+                push(&mut toks, s[i..j].iter().collect(), Kind::Life);
+                i = j;
+                continue;
+            }
+            if c == '"' {
+                // the lexer blanked every string to ""
+                push(&mut toks, "\"\"".to_string(), Kind::Str);
+                i += if starts_with_at(&s, i, "\"\"") { 2 } else { 1 };
+                continue;
+            }
+            if c.is_ascii_digit() {
+                let mut j = i + 1;
+                if starts_with_at(&s, i, "0x") || starts_with_at(&s, i, "0b") || starts_with_at(&s, i, "0o")
+                {
+                    j = i + 2;
+                    while j < n && is_id(s[j]) {
+                        j += 1;
+                    }
+                } else {
+                    while j < n && is_id(s[j]) {
+                        j += 1;
+                    }
+                    // float part: '.' followed by a digit (not `..`)
+                    if j < n && s[j] == '.' && j + 1 < n && s[j + 1].is_ascii_digit() {
+                        j += 1;
+                        while j < n && is_id(s[j]) {
+                            j += 1;
+                        }
+                    }
+                }
+                push(&mut toks, s[i..j].iter().collect(), Kind::Num);
+                i = j;
+                continue;
+            }
+            if is_id_start(c) {
+                let mut j = i + 1;
+                while j < n && is_id(s[j]) {
+                    j += 1;
+                }
+                let mut word: String = s[i..j].iter().collect();
+                // raw identifier: r#type
+                if (word == "r" || word == "b" || word == "br")
+                    && j < n
+                    && s[j] == '#'
+                    && j + 1 < n
+                    && is_id_start(s[j + 1])
+                {
+                    j += 1;
+                    while j < n && is_id(s[j]) {
+                        j += 1;
+                    }
+                    word = s[i..j].iter().collect();
+                }
+                push(&mut toks, word, Kind::Ident);
+                i = j;
+                continue;
+            }
+            let mut hit: Option<&str> = None;
+            for m in MULTI3 {
+                if starts_with_at(&s, i, m) {
+                    hit = Some(m);
+                    break;
+                }
+            }
+            if hit.is_none() {
+                for m in MULTI2 {
+                    if starts_with_at(&s, i, m) {
+                        hit = Some(m);
+                        break;
+                    }
+                }
+            }
+            if let Some(m) = hit {
+                push(&mut toks, m.to_string(), Kind::Punct);
+                i += m.len();
+                continue;
+            }
+            push(&mut toks, c.to_string(), Kind::Punct);
+            i += 1;
+        }
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lex;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        tokenize(&lex(src))
+    }
+
+    fn texts(src: &str) -> Vec<String> {
+        toks(src).into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn idents_nums_puncts() {
+        assert_eq!(
+            texts("let x = a + 42;"),
+            ["let", "x", "=", "a", "+", "42", ";"]
+        );
+    }
+
+    #[test]
+    fn maximal_munch_shifts() {
+        assert_eq!(texts("a <<= b >> c .. d"), ["a", "<<=", "b", ">>", "c", "..", "d"]);
+        assert_eq!(texts("x..=y"), ["x", "..=", "y"]);
+    }
+
+    #[test]
+    fn hex_bin_and_float_literals() {
+        assert_eq!(texts("0xFF_u32 0b1010 1.5e3 7usize"), ["0xFF_u32", "0b1010", "1.5e3", "7usize"]);
+        let k: Vec<Kind> = toks("0xFF 1.5").into_iter().map(|t| t.kind).collect();
+        assert_eq!(k, [Kind::Num, Kind::Num]);
+    }
+
+    #[test]
+    fn range_after_number_is_not_a_float() {
+        assert_eq!(texts("0..n"), ["0", "..", "n"]);
+    }
+
+    #[test]
+    fn blanked_strings_and_chars() {
+        let t = toks("let s = \"hello\"; let c = 'x';");
+        let strs: Vec<&Tok> = t.iter().filter(|t| t.kind == Kind::Str).collect();
+        assert_eq!(strs.len(), 2);
+        assert_eq!(strs[0].text, "\"\"");
+        assert_eq!(strs[1].text, "' '");
+    }
+
+    #[test]
+    fn lifetimes_are_life_tokens() {
+        let t = toks("fn f<'a>(x: &'a str) {}");
+        assert!(t.iter().any(|t| t.kind == Kind::Life && t.text == "'a"));
+    }
+
+    #[test]
+    fn raw_identifiers_glue() {
+        assert_eq!(texts("let r#type = 1;"), ["let", "r#type", "=", "1", ";"]);
+    }
+
+    #[test]
+    fn line_numbers_and_skip_flags_survive() {
+        let t = toks("fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}");
+        let a = t.iter().find(|t| t.text == "a");
+        let b = t.iter().find(|t| t.text == "b");
+        match (a, b) {
+            (Some(a), Some(b)) => {
+                assert_eq!(a.line, 1);
+                assert!(!a.skipped);
+                assert_eq!(b.line, 4);
+                assert!(b.skipped);
+            }
+            _ => unreachable!("both fns must tokenize"),
+        }
+    }
+}

@@ -311,4 +311,18 @@ mod tests {
             ctl.switches()
         );
     }
+
+    #[test]
+    fn config_names_track_the_selected_design() {
+        let mut ctl = controller();
+        let names = ctl.config_names();
+        assert!(!names.is_empty());
+        assert!(names.contains(&ctl.current_name()));
+        let mut mon = OperandMonitor::new(256);
+        for v in 0..256u64 {
+            mon.push(v);
+        }
+        ctl.step(&mon);
+        assert_eq!(ctl.current_name(), ctl.current().name());
+    }
 }

@@ -421,6 +421,22 @@ mod tests {
     }
 
     #[test]
+    fn two_input_gate_truth_tables() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a");
+        let b = nl.input("b");
+        let x = nl.xor2(a, b);
+        let n = nl.nor2(a, b);
+        nl.output("x", x);
+        nl.output("n", n);
+        for (va, vb) in [(false, false), (false, true), (true, false), (true, true)] {
+            let out = nl.eval(&[va, vb]);
+            assert_eq!(out[0], va ^ vb, "xor {va} {vb}");
+            assert_eq!(out[1], !(va | vb), "nor {va} {vb}");
+        }
+    }
+
+    #[test]
     fn lod_matches_behavioural() {
         let mut nl = Netlist::new();
         let v = bus(&mut nl, "v", 8);

@@ -81,7 +81,9 @@ impl ScaleTrimParams {
     /// wrapped shift in the datapath.
     pub fn try_validate(&self) -> Result<(), String> {
         let f = COMP_FRAC_BITS as i32;
-        if !(self.h >= 1 && self.h as i32 <= f) {
+        // Compare h in the u32 domain: an `h as i32` here would wrap for
+        // h ≥ 2^31 and wave a hostile artifact through this very gate.
+        if !(self.h >= 1 && self.h <= COMP_FRAC_BITS) {
             return Err(format!(
                 "scaleTRIM(h={}, M={}): h must be in 1..={f} (datapath carries {f} fraction bits)",
                 self.h, self.m

@@ -20,6 +20,11 @@
 //! - `lint [--root DIR]`           run the in-repo project lint engine over
 //!   the source tree; prints `path:line: [rule] message` findings and exits
 //!   nonzero if any remain
+//! - `analyze [--root DIR] [--json]`  run the whole-program analyses
+//!   (lock order over the call graph, bitwidth interval abstract
+//!   interpretation of the kernel fns at widths 8/16/24/32, declared/used
+//!   drift); findings print compiler-style with concrete counterexample
+//!   witnesses, and the exit is nonzero if any remain
 //!
 //! Every subcommand also accepts `--metrics-out <path>`: on exit, the
 //! process-wide [`scaletrim::obs`] snapshot is written there as JSON.
@@ -40,6 +45,7 @@ use scaletrim::nn::{cached_lut, exact_lut, Dataset};
 use scaletrim::obs;
 use scaletrim::runtime::{find_artifacts_dir, ArtifactSet};
 use scaletrim::util::cli::Args;
+use scaletrim::util::json::Json;
 use scaletrim::util::table::{f2, Table};
 use scaletrim::{lut, nn, report, runtime, workloads, Result};
 use std::sync::Arc;
@@ -457,10 +463,62 @@ fn run() -> Result<()> {
             }
             eprintln!("lint clean: 0 findings under {root}");
         }
+        "analyze" => {
+            // Same root resolution as `lint`: the crate sources relative
+            // to the invocation directory.
+            let default_root = if std::path::Path::new("rust/src").is_dir() {
+                "rust/src"
+            } else {
+                "src"
+            };
+            let root = args.opt_or("root", default_root);
+            let report = scaletrim::analysis::analyze_tree(std::path::Path::new(&root))?;
+            if args.has_flag("json") {
+                let findings: Vec<Json> = report
+                    .findings
+                    .iter()
+                    .map(|f| {
+                        Json::obj()
+                            .set("rule", f.rule)
+                            .set("file", f.file.as_str())
+                            .set("line", f.line)
+                            .set("message", f.message.as_str())
+                    })
+                    .collect();
+                let doc = Json::obj()
+                    .set("root", root.as_str())
+                    .set("files", report.files)
+                    .set("items", report.items)
+                    .set("proved", report.proved)
+                    .set("violated", report.violated)
+                    .set("unknown", report.unknown)
+                    .set("lock_pairs", report.lock_pairs)
+                    .set("findings", Json::Arr(findings));
+                println!("{}", doc.to_string());
+            } else {
+                for f in &report.findings {
+                    println!("{}", f.render());
+                }
+                eprintln!(
+                    "analyze: {} files, {} items; intervals proved={} violated={} unknown={}; \
+                     lock pairs={}",
+                    report.files,
+                    report.items,
+                    report.proved,
+                    report.violated,
+                    report.unknown,
+                    report.lock_pairs
+                );
+            }
+            if !report.findings.is_empty() {
+                anyhow::bail!("{} analysis finding(s) under {root}", report.findings.len());
+            }
+            eprintln!("analyze clean: 0 findings under {root}");
+        }
         _ => {
             println!(
                 "scaletrim — scaleTRIM approximate-multiplier system reproduction\n\n\
-                 usage: scaletrim <repro|list|mul|sweep|lut-gen|calib|pareto|bench|app|infer|serve|obs|lint> [options]\n\
+                 usage: scaletrim <repro|list|mul|sweep|lut-gen|calib|pareto|bench|app|infer|serve|obs|lint|analyze> [options]\n\
                  examples:\n  \
                  scaletrim repro --exp table4\n  \
                  scaletrim obs --json --out obs-snapshot.json\n  \
@@ -474,7 +532,8 @@ fn run() -> Result<()> {
                  scaletrim repro --exp workloads --fast\n  \
                  scaletrim infer --model lenet --config 'scaleTRIM(4,8)'\n  \
                  scaletrim serve --model lenet --requests 2000\n  \
-                 scaletrim lint --root rust/src"
+                 scaletrim lint --root rust/src\n  \
+                 scaletrim analyze --json"
             );
         }
     }

@@ -60,7 +60,10 @@ impl Dsm {
             .find(|&&p| p >= need)
             // lint:allow(no-panic): new() builds positions to cover every leading-one index
             .expect("position set covers all leading-one positions");
-        debug_assert!(pos + self.m <= self.bits, "segment window exceeds the operand width");
+        debug_assert!(
+            self.m >= 1 && self.m <= self.bits && pos < self.bits && pos + self.m <= self.bits,
+            "segment window exceeds the operand width"
+        );
         ((v >> pos) & ((1u64 << self.m) - 1), pos)
     }
 }

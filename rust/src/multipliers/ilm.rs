@@ -13,7 +13,7 @@
 //! `ILM-k` additionally truncates each mantissa magnitude to `k` fraction
 //! bits (`k = 0` means no truncation, the paper's ILM0).
 
-use super::{leading_one, ApproxMultiplier, DesignSpec};
+use super::{leading_one, narrow_result, ApproxMultiplier, DesignSpec};
 
 /// ILM-k behavioural model.
 #[derive(Debug, Clone)]
@@ -35,6 +35,10 @@ impl Ilm {
     /// Nearest-one characteristic and signed mantissa in 2^-F units.
     #[inline]
     fn decompose(&self, v: u64) -> (u32, i64) {
+        debug_assert!(
+            v < (1u64 << self.bits),
+            "operand exceeds the declared width"
+        );
         let n = leading_one(v);
         debug_assert!(n < self.bits, "leading-one position exceeds the declared width");
         let base = 1u64 << n;
@@ -85,7 +89,7 @@ impl ApproxMultiplier for Ilm {
         if term <= 0 {
             return 0;
         }
-        ((term as u128) << (ka + kb) >> F) as u64
+        narrow_result((term as u128) << (ka + kb), F)
     }
 }
 

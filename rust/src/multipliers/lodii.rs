@@ -11,7 +11,7 @@
 //! the true position is odd and the bit below the leading one is clear
 //! (the dominant error case of their group-based detectors).
 
-use super::{leading_one, ApproxMultiplier, DesignSpec};
+use super::{leading_one, narrow_result, ApproxMultiplier, DesignSpec};
 
 /// Mitchell_LODII-j behavioural model.
 #[derive(Debug, Clone)]
@@ -75,12 +75,12 @@ impl ApproxMultiplier for MitchellLodII {
         let y = mant(b, nb);
         let s = x + y;
         let one = 1u128 << F;
-        let res = if s < one {
-            ((one + s) << (na + nb)) >> F
+        let (mantissa, shift) = if s < one {
+            (one + s, na + nb)
         } else {
-            (s << (na + nb + 1)) >> F
+            (s, na + nb + 1)
         };
-        res as u64
+        narrow_result(mantissa << shift, F)
     }
 }
 

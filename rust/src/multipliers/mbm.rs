@@ -7,7 +7,7 @@
 //! fixed position before the logarithmic approximation; the bias constant
 //! is calibrated offline over the full operand space (cached per config).
 
-use super::{leading_one, ApproxMultiplier, DesignSpec};
+use super::{leading_one, narrow_result, ApproxMultiplier, DesignSpec};
 use std::collections::HashMap;
 use std::sync::Mutex;
 
@@ -70,7 +70,7 @@ impl ApproxMultiplier for Mbm {
             Some((term, shift)) => {
                 debug_assert!(shift <= 2 * (self.bits - 1), "output shift exceeds double width");
                 let biased = (term as i128 + self.bias_fixed as i128).max(0) as u128;
-                ((biased << shift) >> F) as u64
+                narrow_result(biased << shift, F)
             }
         }
     }
@@ -98,7 +98,7 @@ impl ApproxMultiplier for Mbm {
                 let s = x + y;
                 let term = if s < one { one + s } else { s << 1 };
                 let biased = (term as i128 + bias).max(0) as u128;
-                ((biased << (na + nb)) >> F) as u64
+                narrow_result(biased << (na + nb), F)
             };
         }
     }

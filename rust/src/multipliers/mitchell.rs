@@ -12,7 +12,7 @@
 //! (`bits-1` fraction bits per operand), matching a hardware implementation
 //! with no mantissa truncation.
 
-use super::{leading_one, ApproxMultiplier, DesignSpec};
+use super::{leading_one, narrow_result, ApproxMultiplier, DesignSpec};
 
 /// Mitchell behavioural model.
 #[derive(Debug, Clone)]
@@ -48,12 +48,12 @@ impl ApproxMultiplier for Mitchell {
         let y = ((b - (1 << nb)) as u128) << (f - nb);
         let s = x + y;
         let one = 1u128 << f;
-        let res = if s < one {
-            ((one + s) << (na + nb)) >> f
+        let (mant, shift) = if s < one {
+            (one + s, na + nb)
         } else {
-            (s << (na + nb + 1)) >> f
+            (s, na + nb + 1)
         };
-        res as u64
+        narrow_result(mant << shift, f)
     }
 
     /// Monomorphized batch kernel: the datapath width `f` and the fixed
@@ -74,12 +74,12 @@ impl ApproxMultiplier for Mitchell {
                 let x = ((av - (1 << na)) as u128) << (f - na);
                 let y = ((bv - (1 << nb)) as u128) << (f - nb);
                 let s = x + y;
-                let res = if s < one {
-                    ((one + s) << (na + nb)) >> f
+                let (mant, shift) = if s < one {
+                    (one + s, na + nb)
                 } else {
-                    (s << (na + nb + 1)) >> f
+                    (s, na + nb + 1)
                 };
-                res as u64
+                narrow_result(mant << shift, f)
             };
         }
     }
@@ -113,7 +113,7 @@ impl ApproxMultiplier for Mitchell {
                     let s = x + y;
                     let wrap = (s >= one) as u32;
                     let mant = s + (1 - wrap as u128) * one;
-                    *r_i = (((mant << (na[i] + nb[i] + wrap)) >> f) as u64) * keep[i];
+                    *r_i = narrow_result(mant << (na[i] + nb[i] + wrap), f) * keep[i];
                 }
                 r
             },

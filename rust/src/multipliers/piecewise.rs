@@ -7,7 +7,7 @@
 //! scaleTRIM (two constants per segment, full-precision multiply by α_s),
 //! traded for local fit quality — exactly the comparison Table 3 makes.
 
-use super::{leading_one, truncate_fraction, ApproxMultiplier, DesignSpec};
+use super::{leading_one, narrow_result, truncate_fraction, ApproxMultiplier, DesignSpec};
 use std::sync::Arc;
 
 /// Fraction bits of the per-segment (α_s, β_s) fixed-point coefficients.
@@ -87,14 +87,23 @@ impl ApproxMultiplier for PiecewiseLinear {
             "leading-one position exceeds the declared width"
         );
         let s_int = truncate_fraction(a, na, self.h) + truncate_fraction(b, nb, self.h);
+        debug_assert!(
+            self.h <= F && s_int < (1u64 << (self.h + 1)),
+            "truncated sum exceeds the F-bit fixed point"
+        );
         let (alpha, beta) = self.coef[self.segment(s_int)];
         // term = 1 + α·s + β in 2^-F fixed point.
         let s_f = (s_int as i64) << (F - self.h);
-        let term = (1i64 << F) + ((alpha as i128 * s_f as i128) >> F) as i64 + beta;
+        let scaled = (alpha as i128 * s_f as i128) >> F;
+        debug_assert!(
+            scaled >= i64::MIN as i128 && scaled <= i64::MAX as i128,
+            "α·s term exceeds the i64 datapath"
+        );
+        let term = (1i64 << F) + scaled as i64 + beta;
         if term <= 0 {
             return 0;
         }
-        ((term as u128) << (na + nb) >> F) as u64
+        narrow_result((term as u128) << (na + nb), F)
     }
 }
 

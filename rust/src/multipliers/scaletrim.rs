@@ -20,7 +20,7 @@
 //! from the on-disk artifact store), so N instances of one configuration
 //! share a single calibration — and a single constants allocation.
 
-use super::{leading_one, truncate_fraction, ApproxMultiplier, DesignSpec};
+use super::{leading_one, narrow_result, truncate_fraction, ApproxMultiplier, DesignSpec};
 use crate::calib::{calibrator, CalibStrategy};
 use crate::lut::{ScaleTrimParams, COMP_FRAC_BITS};
 use std::sync::Arc;
@@ -127,7 +127,7 @@ impl ScaleTrim {
     fn lin_shift(&self) -> u32 {
         const F: u32 = COMP_FRAC_BITS;
         debug_assert!(
-            F as i32 - self.params.h as i32 + self.params.delta_ee >= 0,
+            self.params.h <= F && F as i32 - self.params.h as i32 + self.params.delta_ee >= 0,
             "linearization shift underflow: ΔEE {} < h − F (validated at construction)",
             self.params.delta_ee
         );
@@ -144,8 +144,8 @@ impl ScaleTrim {
 fn lin_term(s: u64, h: u32, lin_shift: u32) -> i64 {
     const F: u32 = COMP_FRAC_BITS;
     debug_assert!(
-        h <= F && lin_shift < i64::BITS,
-        "linearization shift exceeds the i64 datapath"
+        h <= F && lin_shift < i64::BITS && s < (1u64 << (h + 1)),
+        "linearization inputs exceed the i64 datapath"
     );
     (1i64 << F) + ((s as i64) << (F - h)) + ((s as i64) << lin_shift)
 }
@@ -222,8 +222,8 @@ impl ApproxMultiplier for ScaleTrim {
         // (§Perf note: a u64 fast path for the final shift measured neutral
         // to slightly negative — reverted; the u128 shift is not the
         // bottleneck. See EXPERIMENTS.md §Perf iteration log.)
-        let total = (term as u128) << (na + nb);
-        (total >> F) as u64
+        debug_assert!(term >= 0, "compensated term left the nonnegative mantissa range");
+        narrow_result((term as u128) << (na + nb), F)
     }
 
     /// Monomorphized batch kernel: the calibrated constants (`h`, the
@@ -254,7 +254,8 @@ impl ApproxMultiplier for ScaleTrim {
                 if m > 0 {
                     term += c_fixed[self.params.segment(s)];
                 }
-                (((term as u128) << (na + nb)) >> F) as u64
+                debug_assert!(term >= 0, "compensated term left the nonnegative mantissa range");
+                narrow_result((term as u128) << (na + nb), F)
             };
         }
     }
@@ -296,7 +297,8 @@ impl ApproxMultiplier for ScaleTrim {
                     if m > 0 {
                         term += params.c_fixed[params.segment(s)];
                     }
-                    *r_i = ((((term as u128) << (na[i] + nb[i])) >> F) as u64) * keep[i];
+                    debug_assert!(term >= 0, "compensated term left the nonnegative mantissa range");
+                    *r_i = narrow_result((term as u128) << (na[i] + nb[i]), F) * keep[i];
                 }
                 r
             },

@@ -15,7 +15,7 @@
 //! is the one that reproduces the published MRED of every TOSAM(t,h) config
 //! in Table 4 to within ~0.2 pp (e.g. TOSAM(1,5): ours 4.09 vs paper 4.09).
 
-use super::{leading_one, truncate_fraction, ApproxMultiplier, DesignSpec};
+use super::{leading_one, narrow_result, truncate_fraction, ApproxMultiplier, DesignSpec};
 
 /// TOSAM(t, h) behavioural model.
 #[derive(Debug, Clone)]
@@ -63,10 +63,16 @@ impl ApproxMultiplier for Tosam {
         // Fixed point with F fraction bits.
         const F: u32 = 24;
         let one = 1u128 << F;
-        let sum = ((xh + yh) as u128) << (F - h);
-        let prod = ((xt1 * yt1) as u128) << (F - 2 * (t + 1));
+        let sum_shift = F - h;
+        let prod_shift = F - 2 * (t + 1);
+        debug_assert!(
+            sum_shift < F && prod_shift < F,
+            "derived shifts exceed the F-bit datapath"
+        );
+        let sum = ((xh + yh) as u128) << sum_shift;
+        let prod = ((xt1 * yt1) as u128) << prod_shift;
         let term = one + sum + prod;
-        ((term << (na + nb)) >> F) as u64
+        narrow_result(term << (na + nb), F)
     }
 
     /// Monomorphized batch kernel: `t`, `h` and the derived fixed-point
@@ -99,7 +105,7 @@ impl ApproxMultiplier for Tosam {
                 let yt1 = (truncate_fraction(bv, nb, t) << 1) | 1;
                 let term = one + (((xh + yh) as u128) << sum_shift)
                     + (((xt1 * yt1) as u128) << prod_shift);
-                ((term << (na + nb)) >> F) as u64
+                narrow_result(term << (na + nb), F)
             };
         }
     }
@@ -142,7 +148,7 @@ impl ApproxMultiplier for Tosam {
                     let term = one
                         + (((xh + yh) as u128) << sum_shift)
                         + (((xt1 * yt1) as u128) << prod_shift);
-                    *r_i = (((term << (na[i] + nb[i])) >> F) as u64) * keep[i];
+                    *r_i = narrow_result(term << (na[i] + nb[i]), F) * keep[i];
                 }
                 r
             },

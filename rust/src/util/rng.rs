@@ -86,7 +86,9 @@ impl Xoshiro256 {
                 l = m as u64;
             }
         }
-        (m >> 64) as u64
+        let r = (m >> 64) as u64;
+        debug_assert!(r < n, "multiply-shift range reduction stays below the bound");
+        r
     }
 
     /// Uniform f64 in `[0, 1)`.
@@ -121,6 +123,15 @@ mod tests {
         let mut b = Xoshiro256::seed_from_u64(42);
         for _ in 0..1000 {
             assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn next_u32_tracks_the_upper_word() {
+        let mut a = Xoshiro256::seed_from_u64(21);
+        let mut b = Xoshiro256::seed_from_u64(21);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u32(), (b.next_u64() >> 32) as u32);
         }
     }
 

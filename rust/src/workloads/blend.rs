@@ -31,6 +31,7 @@ impl Blend {
     /// Radial alpha mask: opaque at the centre, transparent at the corners
     /// (integer arithmetic only).
     fn alpha(&self, x: usize, y: usize) -> i64 {
+        debug_assert!(x < IMG && y < IMG, "pixel outside the IMG×IMG plane");
         let (cx, cy) = (IMG as i64 / 2, IMG as i64 / 2);
         let (dx, dy) = (x as i64 - cx, y as i64 - cy);
         let r2 = 2 * cx * cx; // corner distance², the fully-transparent radius

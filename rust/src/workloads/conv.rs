@@ -48,6 +48,7 @@ impl Conv2d {
 
     #[inline]
     fn renorm(&self, acc: i64) -> i64 {
+        debug_assert!(self.shift < i64::BITS, "rounding shift exceeds the i64 datapath");
         let half = (1i64 << self.shift) >> 1;
         clamp_u8((acc + half) >> self.shift)
     }

@@ -41,6 +41,7 @@ fn cos_table() -> [[i64; 8]; 8] {
 /// trip.
 #[inline]
 fn quant_shift(u: usize, v: usize) -> u32 {
+    debug_assert!(u < 8 && v < 8, "coefficient index outside the 8×8 block");
     (((u + v + 1) / 2) as u32).min(3)
 }
 
@@ -75,6 +76,7 @@ fn stage(
 
 /// Apply the post-stage rounding shift (`(v + 2^(s-1)) >> s`).
 fn renorm(acc: Vec<i64>, shift: u32) -> Vec<i64> {
+    debug_assert!(shift < i64::BITS, "rounding shift exceeds the i64 datapath");
     let half = (1i64 << shift) >> 1;
     acc.into_iter().map(|v| (v + half) >> shift).collect()
 }

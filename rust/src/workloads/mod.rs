@@ -88,6 +88,8 @@ pub fn sat_operand(v: i64, bits: u32) -> u64 {
 /// [`MacPlane::mac`] — the building block of every `reference` path.
 #[inline]
 pub fn exact_mac(x: i64, w: i64, bits: u32) -> i64 {
+    // analyze:allow(cast-range): 32-bit magnitude products occupy up to 64
+    // bits; reinterpreting the top bit matches MacPlane's wrapping contract.
     let p = (sat_operand(x, bits) * sat_operand(w, bits)) as i64;
     if (x < 0) ^ (w < 0) {
         -p
@@ -152,6 +154,8 @@ impl<'m> MacPlane<'m> {
             .zip(self.sgn.iter())
             .zip(self.batch.out[..len].iter())
         {
+            // analyze:allow(cast-range): kernel outputs occupy up to 64 bits
+            // at 32-bit widths; accumulation wraps by the documented contract.
             self.acc[tgt] += sgn * p as i64;
         }
         self.macs += len as u64;

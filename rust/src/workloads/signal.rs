@@ -46,6 +46,13 @@ impl Signal {
     /// Sample with clamp-to-edge addressing (convolution boundary policy).
     #[inline]
     pub fn at_clamped(&self, x: isize, y: isize) -> i64 {
+        debug_assert!(
+            self.w >= 1
+                && self.h >= 1
+                && self.w <= isize::MAX as usize
+                && self.h <= isize::MAX as usize,
+            "signal dimensions outside the isize addressing range"
+        );
         let xc = x.clamp(0, self.w as isize - 1) as usize;
         let yc = y.clamp(0, self.h as isize - 1) as usize;
         self.at(xc, yc)
@@ -72,7 +79,10 @@ pub fn clamp_u8(v: i64) -> i64 {
 /// centre + a handful of random rectangles + ±8 uniform noise, clamped to
 /// `[0, 255]`. Integer arithmetic only; identical for a given `(w, h, seed)`.
 pub fn synthetic_image(w: usize, h: usize, seed: u64) -> Signal {
-    assert!(w >= 2 && h >= 2, "synthetic_image needs at least 2×2");
+    assert!(
+        w >= 2 && h >= 2 && w <= 1 << 16 && h <= 1 << 16,
+        "synthetic_image needs 2..=65536 samples per axis"
+    );
     let mut rng = Xoshiro256::seed_from_u64(seed);
     let mut data = vec![0i64; w * h];
     for y in 0..h {
@@ -119,7 +129,10 @@ pub fn synthetic_image(w: usize, h: usize, seed: u64) -> Signal {
 /// Synthetic 1-D signal (`n × 1`): a sum of three triangle waves of random
 /// period and phase plus ±6 noise, clamped to `[0, 255]`.
 pub fn synthetic_signal(n: usize, seed: u64) -> Signal {
-    assert!(n >= 2, "synthetic_signal needs at least 2 samples");
+    assert!(
+        n >= 2 && n <= 1 << 24,
+        "synthetic_signal needs 2..=2^24 samples"
+    );
     let mut rng = Xoshiro256::seed_from_u64(seed);
     let mut waves = Vec::new();
     for _ in 0..3 {

@@ -1,0 +1,206 @@
+//! Fixtures that pin the whole-program analyses' ability to *find*
+//! things — each class of defect the `analyze` plane exists for is
+//! reproduced in a small source fixture and must be caught, with the
+//! diagnostic carrying enough context (call path, concrete operand
+//! values) to act on. The committed tree being clean
+//! (`analyze_clean.rs`) is only meaningful alongside these.
+
+use scaletrim::analysis::{analyze_sources, TreeReport};
+
+fn run(files: &[(&str, &str)]) -> TreeReport {
+    run_with(files, &[])
+}
+
+fn run_with(files: &[(&str, &str)], extra: &[(&str, &str)]) -> TreeReport {
+    analyze_sources(files, extra).expect("analysis must run")
+}
+
+// ---------------------------------------------------------------------
+// Lock order
+// ---------------------------------------------------------------------
+
+#[test]
+fn inverted_lock_order_is_a_cycle() {
+    let src = "
+pub struct Pair { a: std::sync::Mutex<u32>, b: std::sync::Mutex<u32> }
+impl Pair {
+    fn ab(&self) {
+        let g = self.a.lock().unwrap();
+        let h = self.b.lock().unwrap();
+        drop(h);
+        drop(g);
+    }
+    fn ba(&self) {
+        let g = self.b.lock().unwrap();
+        let h = self.a.lock().unwrap();
+        drop(h);
+        drop(g);
+    }
+}
+";
+    let report = run(&[("util/pair.rs", src)]);
+    let nesting: Vec<_> = report
+        .findings
+        .iter()
+        .filter(|f| f.rule == "lock-nesting")
+        .collect();
+    assert_eq!(nesting.len(), 2, "{:?}", report.findings);
+    assert!(
+        nesting[0]
+            .message
+            .contains("`Pair::ab` acquires `Pair.b` while holding `Pair.a` (held since line 5)"),
+        "{}",
+        nesting[0].message
+    );
+    let cycle: Vec<_> = report
+        .findings
+        .iter()
+        .filter(|f| f.rule == "lock-cycle")
+        .collect();
+    assert_eq!(cycle.len(), 1);
+    assert_eq!(cycle[0].file, "-");
+    assert_eq!(cycle[0].line, 0);
+    assert!(
+        cycle[0]
+            .message
+            .contains("lock order cycle: Pair.a -> Pair.b -> Pair.a"),
+        "{}",
+        cycle[0].message
+    );
+}
+
+// ---------------------------------------------------------------------
+// Bitwidth intervals
+// ---------------------------------------------------------------------
+
+const BROKEN_SHIFT: &str = "
+pub fn broken(a: [u64; 8], s: u32) -> u64 {
+    let mut acc = 0u64;
+    for i in 0..8 {
+        acc ^= a[i] << s;
+    }
+    acc
+}
+";
+
+#[test]
+fn unguarded_shift_prints_an_operand_witness() {
+    let extra = [("tests/t.rs", "fn t() { let _ = broken([0; 8], 1); }")];
+    let report = run_with(&[("simd/mod.rs", BROKEN_SHIFT)], &extra);
+    assert_eq!(report.violated, 4, "one violation per analysed width");
+    let shifts: Vec<_> = report
+        .findings
+        .iter()
+        .filter(|f| f.rule == "shift-range")
+        .collect();
+    assert_eq!(shifts.len(), 1, "width-deduplicated: {:?}", report.findings);
+    let f = shifts[0];
+    assert_eq!((f.file.as_str(), f.line), ("simd/mod.rs", 5));
+    // The rendered diagnostic names the expression, the reachable bad
+    // amount, the operand width, and a concrete witness assignment.
+    let rendered = f.render();
+    assert!(
+        rendered.contains(
+            "`a[i] << s`: amount `s` in [0,4294967295] can reach 4294967295 \
+             but operand width is 64"
+        ),
+        "{rendered}"
+    );
+    assert!(
+        rendered.ends_with("{'amount': 4294967295, 'expr': 'a[i] << s'}"),
+        "witness must close the diagnostic: {rendered}"
+    );
+}
+
+#[test]
+fn guarded_shift_produces_no_finding() {
+    let src = "pub fn shl(a: u64, s: u32) -> u64 { if s < 64 { a << s } else { 0 } }";
+    let extra = [("tests/t.rs", "fn t() { let _ = shl(1, 2); }")];
+    let report = run_with(&[("simd/mod.rs", src)], &extra);
+    assert!(report.findings.is_empty(), "{:?}", report.findings);
+    assert_eq!(report.proved, 4);
+}
+
+#[test]
+fn pragma_round_trip_suppresses_with_a_reason() {
+    let suppressed = "
+pub fn broken(a: [u64; 8], s: u32) -> u64 {
+    let mut acc = 0u64;
+    for i in 0..8 {
+        // analyze:allow(shift-range): amount clamped by caller contract
+        acc ^= a[i] << s;
+    }
+    acc
+}
+";
+    let extra = [("tests/t.rs", "fn t() { let _ = broken([0; 8], 1); }")];
+    let report = run_with(&[("simd/mod.rs", suppressed)], &extra);
+    assert!(report.findings.is_empty(), "{:?}", report.findings);
+    assert_eq!(report.violated, 0, "suppressed obligations are allowed, not violated");
+    // The same pragma without a reason must not suppress.
+    let unreasoned = suppressed.replace(": amount clamped by caller contract", "");
+    let report = run_with(&[("simd/mod.rs", unreasoned.as_str())], &extra);
+    assert_eq!(report.violated, 4, "a bare pragma must not suppress");
+}
+
+// ---------------------------------------------------------------------
+// Drift
+// ---------------------------------------------------------------------
+
+#[test]
+fn orphaned_design_spec_variant_is_reported() {
+    let files = [
+        (
+            "multipliers/spec.rs",
+            "
+pub enum DesignSpec { Exact, Trim }
+fn enumerate() -> u32 { let _ = DesignSpec::Exact; 0 }
+fn build() -> u32 { let _ = DesignSpec::Exact; 1 }
+fn family() -> u32 { let _ = DesignSpec::Exact; 2 }
+",
+        ),
+        ("hardware/designs.rs", "fn structural() -> u32 { let _ = DesignSpec::Exact; 3 }"),
+    ];
+    let report = run(&files);
+    let drift: Vec<_> = report
+        .findings
+        .iter()
+        .filter(|f| f.rule == "spec-drift")
+        .collect();
+    // `Trim` is missing from all four coverage fns; `Exact` is present
+    // in each.
+    assert_eq!(drift.len(), 4, "{:?}", report.findings);
+    assert!(drift
+        .iter()
+        .all(|f| f.message.contains("`DesignSpec::Trim` has no arm in")));
+    assert!(drift
+        .iter()
+        .any(|f| f.message.contains("`enumerate` (multipliers/spec.rs)")));
+    // Findings anchor at the enum declaration so the fix site is the
+    // variant list, not the match arms.
+    assert!(drift.iter().all(|f| f.file == "multipliers/spec.rs"));
+}
+
+#[test]
+fn unreferenced_pub_surface_and_obs_names_are_drift() {
+    let files = [
+        ("obs/names.rs", "pub const FOO_METRIC: &str = \"\";\n"),
+        ("util/helpers.rs", "pub fn orphan(x: u32) -> u32 { x + 1 }\n"),
+    ];
+    let report = run(&files);
+    let rules: Vec<&str> = report.findings.iter().map(|f| f.rule).collect();
+    assert!(rules.contains(&"dead-pub"), "{rules:?}");
+    assert!(rules.contains(&"dead-name"), "{rules:?}");
+    assert!(report
+        .findings
+        .iter()
+        .any(|f| f.message.contains("`util/helpers.rs::orphan` is pub but mentioned nowhere else")));
+    assert!(report
+        .findings
+        .iter()
+        .any(|f| f.message.contains("obs name `FOO_METRIC` is never emitted")));
+    // A use from the integration-test stream clears both.
+    let extra = [("tests/t.rs", "fn t() { let _ = orphan(1); emit(FOO_METRIC); }")];
+    let report = run_with(&files, &extra);
+    assert!(report.findings.is_empty(), "{:?}", report.findings);
+}

@@ -351,3 +351,67 @@ fn findings_render_compiler_style_and_sort_stably() {
     assert_eq!(keys, sorted);
     assert_eq!(keys[0].0, "alpha/a.rs");
 }
+
+// -------------------------------------------------------------- lexer line sync
+//
+// Regressions for the two historical line-desync bugs: a raw string or
+// a nested block comment spanning lines must neither leak its contents
+// into the code stream nor shift the line attribution of real findings
+// after it.
+
+#[test]
+fn multiline_raw_string_keeps_line_numbers_in_sync() {
+    // Lines 3–4 live inside the raw string: the shift and the raw lock
+    // in there are prose, not code. The real violation is on line 6 and
+    // must be reported there, not at an offset.
+    let src = concat!(
+        "fn f(x: u64, k: u32) -> u64 {\n",
+        "    let doc = r#\"\n",
+        "        x << k and lock().unwrap() are not code\n",
+        "    \"#;\n",
+        "    let _ = doc;\n",
+        "    x << k\n",
+        "}\n",
+    );
+    let f = lint_one("multipliers/fix.rs", src);
+    assert_eq!(rule_names(&f), vec!["shift-unguarded"], "{f:?}");
+    assert_eq!(f[0].line, 6, "finding shifted — raw string desynced the lexer");
+}
+
+#[test]
+fn raw_string_closes_only_on_matching_hash_count() {
+    // The `"#` on line 3 is NOT a terminator for an `r##` string; if the
+    // lexer bit on it, the rest of the literal would lex as code.
+    let src = concat!(
+        "fn f(x: u64, k: u32) -> u64 {\n",
+        "    let s = r##\"\n",
+        "        \"# not a terminator: lock().unwrap()\n",
+        "    \"##;\n",
+        "    let _ = s;\n",
+        "    x << k\n",
+        "}\n",
+    );
+    let f = lint_one("lut/fix.rs", src);
+    assert_eq!(rule_names(&f), vec!["shift-unguarded"], "{f:?}");
+    assert_eq!(f[0].line, 6);
+}
+
+#[test]
+fn nested_block_comment_keeps_line_numbers_in_sync() {
+    // Rust block comments nest: the `*/` on line 3 closes only the inner
+    // comment, so line 4 is still commented out. A flat-depth lexer
+    // would lex line 4 as code (raw-lock + no-panic findings) and could
+    // misattribute the real shift on line 6.
+    let src = concat!(
+        "fn f(x: u64, k: u32) -> u64 {\n",
+        "    /* outer /* inner\n",
+        "       x << k stays commented */\n",
+        "       still outer: lock().unwrap()\n",
+        "    */\n",
+        "    x << k\n",
+        "}\n",
+    );
+    let f = lint_one("simd/fix.rs", src);
+    assert_eq!(rule_names(&f), vec!["shift-unguarded"], "{f:?}");
+    assert_eq!(f[0].line, 6);
+}

@@ -137,7 +137,7 @@ fn recorder_slot_protocol_admits_no_torn_read() {
     let (violation, stats) = explore(&RecorderSlot::new(true), 32);
     assert!(violation.is_none(), "unexpected: {violation:?}");
     assert!(stats.schedules > 0, "exploration must complete schedules");
-    assert_eq!(stats.truncated, 0, "depth bound must not bite");
+    assert!(stats.complete(), "depth bound must not bite");
 }
 
 #[test]
@@ -269,4 +269,65 @@ fn cache_that_keeps_a_panicked_claim_wedges() {
     let (violation, _) = explore(&RetryInit::new(false), 32);
     let v = violation.expect("the wedged slot must surface as a deadlock");
     assert!(v.message.contains("deadlock"), "{}", v.message);
+}
+
+// ---------------------------------------------------------------------
+// Depth-bound semantics
+// ---------------------------------------------------------------------
+
+/// A single-thread countdown whose invariant breaks after exactly
+/// `total` steps: the shortest (and only) counterexample has length
+/// `total`, putting it exactly on the edge of the depth bound.
+#[derive(Clone)]
+struct Countdown {
+    left: u8,
+}
+
+impl Model for Countdown {
+    fn thread_count(&self) -> usize {
+        1
+    }
+    fn step(&mut self, _tid: usize) -> Step {
+        if self.left > 0 {
+            self.left -= 1;
+        }
+        if self.left == 0 {
+            Step::Done
+        } else {
+            Step::Progressed
+        }
+    }
+    fn invariant(&self) -> Result<(), String> {
+        if self.left == 0 {
+            Err("countdown reached the corrupt state".to_string())
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// A counterexample exactly at the bound is found with nothing
+/// truncated; a bound one short of it misses the violation but *says
+/// so* — `truncated` is counted, never silent, and `Stats::complete`
+/// flips, so a clean result under a too-small bound cannot be read as
+/// a proof.
+#[test]
+fn counterexample_exactly_at_the_depth_bound() {
+    const D: usize = 6;
+    let model = Countdown { left: D as u8 };
+
+    let (violation, stats) = explore(&model, D);
+    let v = violation.expect("bound == counterexample length must find it");
+    assert_eq!(v.schedule.len(), D, "shortest counterexample is exactly D");
+    assert!(v.message.contains("corrupt state"), "{}", v.message);
+    assert!(
+        stats.complete(),
+        "the violating branch ends the search before any truncation"
+    );
+
+    let (violation, stats) = explore(&model, D - 1);
+    assert!(violation.is_none(), "one step short must miss it");
+    assert_eq!(stats.truncated, 1, "the cut branch is counted, not silent");
+    assert!(!stats.complete(), "a truncated run must not read as a proof");
+    assert_eq!(stats.schedules, 0);
 }
