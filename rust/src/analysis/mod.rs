@@ -26,6 +26,13 @@
 //! | `forbid-unsafe` | everywhere + crate root | no `unsafe` token anywhere; `lib.rs` carries the forbid attribute |
 //! | `stale-pragma` | pragma sites | every suppression names a known rule, gives a reason, and still suppresses something |
 //!
+//! New library directories are covered automatically: the tree walker
+//! picks up everything under `src/`, so the network serving plane
+//! (`net/`) is subject to the library-wide rules (`no-panic`,
+//! `raw-lock`, `obs-names`, `forbid-unsafe`) and to the whole-program
+//! analyses (lock order over the connection queue, drift over the wire
+//! API) while staying outside the kernel-scoped arithmetic rules.
+//!
 //! ## Suppression
 //!
 //! A finding is silenced by a comment pragma on the flagged line or on

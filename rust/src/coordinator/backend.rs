@@ -173,7 +173,8 @@ impl Backend for PureRustBackend {
 }
 
 /// Test backend: logit`[k]` = sum of pixels if `k == pixels[0] % classes`
-/// else 0 — deterministic, order-sensitive, and can inject failures.
+/// else 0 — deterministic, order-sensitive, and can inject failures,
+/// panics, synthetic per-image work, and PJRT-style serialization.
 pub struct MockBackend {
     /// Batch size.
     pub batch_size: usize,
@@ -183,7 +184,13 @@ pub struct MockBackend {
     pub shape: (usize, usize, usize),
     /// Fail every Nth call (0 = never) — failure-injection for tests.
     pub fail_every: usize,
+    /// Panic every Nth call (0 = never) — lane-failure injection.
+    pub panic_every: usize,
+    /// Synthetic integer work per image (0 = none) — models a compute-bound
+    /// backend so serving benchmarks exercise real shard scaling.
+    pub work_per_image: u32,
     calls: std::sync::atomic::AtomicUsize,
+    serial: Option<Mutex<()>>,
 }
 
 impl MockBackend {
@@ -194,13 +201,38 @@ impl MockBackend {
             classes,
             shape: (1, 2, 2),
             fail_every: 0,
+            panic_every: 0,
+            work_per_image: 0,
             calls: std::sync::atomic::AtomicUsize::new(0),
+            serial: None,
         }
     }
 
     /// Builder: inject a failure every `n` calls.
     pub fn with_failures(mut self, n: usize) -> Self {
         self.fail_every = n;
+        self
+    }
+
+    /// Builder: panic every `n` calls — exercises the lane worker's
+    /// panic containment (`LaneFailed` replies).
+    pub fn with_panics(mut self, n: usize) -> Self {
+        self.panic_every = n;
+        self
+    }
+
+    /// Builder: burn `macs` synthetic integer operations per image, with a
+    /// data dependence into the logits so the work can't be elided.
+    pub fn with_work(mut self, macs: u32) -> Self {
+        self.work_per_image = macs;
+        self
+    }
+
+    /// Builder: serialize `infer` calls behind an internal mutex — models
+    /// the PJRT actor, whose single thread executes one batch at a time.
+    /// With this set, throughput scales only by adding backends (shards).
+    pub fn serialized(mut self) -> Self {
+        self.serial = Some(Mutex::new(()));
         self
     }
 }
@@ -216,6 +248,10 @@ impl Backend for MockBackend {
         self.shape
     }
     fn infer(&self, pixels: &[u8], _lut: &Arc<Vec<i32>>) -> Result<Vec<i32>> {
+        let _serial = self
+            .serial
+            .as_ref()
+            .map(crate::util::sync::lock_unpoisoned);
         let n = self
             .calls
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
@@ -223,13 +259,28 @@ impl Backend for MockBackend {
         if self.fail_every != 0 && n % self.fail_every == 0 {
             bail!("injected backend failure (call {n})");
         }
+        if self.panic_every != 0 && n % self.panic_every == 0 {
+            // lint:allow(no-panic): injected panic for the lane-failure regression tests
+            panic!("injected lane panic (call {n})");
+        }
         let (c, h, w) = self.shape;
         let img = c * h * w;
         let mut out = vec![0i32; self.batch_size * self.classes];
         for i in 0..self.batch_size {
             let px = &pixels[i * img..(i + 1) * img];
             let cls = px[0] as usize % self.classes;
-            out[i * self.classes + cls] = px.iter().map(|&p| p as i32).sum();
+            let mut acc: i32 = px.iter().map(|&p| p as i32).sum();
+            // Data-dependent busy work: folds into the logit so the
+            // optimizer can't remove it.
+            for k in 0..self.work_per_image {
+                acc = acc.wrapping_mul(0x9e37).wrapping_add(k as i32);
+            }
+            if self.work_per_image > 0 {
+                // Keep the routing semantics: mix the burn into the
+                // magnitude but preserve which class is hot.
+                acc = (acc & 0xff) + px.iter().map(|&p| p as i32).sum::<i32>();
+            }
+            out[i * self.classes + cls] = acc;
         }
         Ok(out)
     }

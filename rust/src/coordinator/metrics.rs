@@ -38,6 +38,7 @@ pub struct Metrics {
     occupancy_sum: Arc<Counter>,
     backend_errors: Arc<Counter>,
     parse_errors: Arc<Counter>,
+    lane_failures: Arc<Counter>,
     latency: Arc<Histogram>,
 }
 
@@ -60,6 +61,7 @@ impl Metrics {
             occupancy_sum: registry.counter(metric::COORD_BATCH_OCCUPANCY_TOTAL, &[]),
             backend_errors: registry.counter(metric::COORD_BACKEND_ERRORS_TOTAL, &[]),
             parse_errors: registry.counter(metric::COORD_PARSE_ERRORS_TOTAL, &[]),
+            lane_failures: registry.counter(metric::COORD_LANE_FAILURES_TOTAL, &[]),
             latency: registry.histogram(metric::COORD_LATENCY_SECONDS, &[]),
             registry,
         }
@@ -113,6 +115,12 @@ impl Metrics {
         self.parse_errors.inc();
     }
 
+    /// Count one lane-worker panic survived (whole batch answered
+    /// `LaneFailed`).
+    pub fn inc_lane_failure(&self) {
+        self.lane_failures.inc();
+    }
+
     /// Requests accepted.
     pub fn requests(&self) -> u64 {
         self.requests.get()
@@ -151,6 +159,11 @@ impl Metrics {
     /// Unparseable config labels seen by the string submit shim.
     pub fn parse_errors(&self) -> u64 {
         self.parse_errors.get()
+    }
+
+    /// Lane-worker panics survived.
+    pub fn lane_failures(&self) -> u64 {
+        self.lane_failures.get()
     }
 
     /// Record one request's end-to-end latency into the aggregate sketch.

@@ -18,4 +18,4 @@ pub use adaptive::{standard_controller, AdaptiveController, ConfigEntry, Operand
 pub use backend::{Backend, MockBackend, PjrtBackend, PureRustBackend};
 pub use batcher::{BatchPolicy, BatchQueue, Request};
 pub use metrics::{LaneMetrics, Metrics};
-pub use server::{Coordinator, Prediction};
+pub use server::{Coordinator, Prediction, PredictionError};

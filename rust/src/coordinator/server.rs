@@ -10,10 +10,46 @@ use super::metrics::{LaneMetrics, Metrics};
 use crate::multipliers::{ApproxMultiplier, DesignSpec};
 use crate::nn::cached_lut;
 use crate::obs;
+use crate::util::sync::lock_unpoisoned;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
+
+/// Typed failure cause attached to an errored [`Prediction`]. The wire
+/// layer maps each variant onto a distinct wire error kind, so remote
+/// clients can tell a backend fault from a crashed lane.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PredictionError {
+    /// The backend returned an error for this request's batch.
+    Backend(String),
+    /// The lane worker panicked while processing this request's batch;
+    /// the lane caught it, answered the batch, and kept serving.
+    LaneFailed(String),
+}
+
+impl PredictionError {
+    /// True for the lane-panic variant.
+    pub fn is_lane_failure(&self) -> bool {
+        matches!(self, Self::LaneFailed(_))
+    }
+
+    /// The underlying failure message, without the variant prefix.
+    pub fn message(&self) -> &str {
+        match self {
+            Self::Backend(m) | Self::LaneFailed(m) => m,
+        }
+    }
+}
+
+impl std::fmt::Display for PredictionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Backend(m) => write!(f, "backend error: {m}"),
+            Self::LaneFailed(m) => write!(f, "lane failed: {m}"),
+        }
+    }
+}
 
 /// A delivered prediction.
 #[derive(Debug, Clone)]
@@ -24,14 +60,16 @@ pub struct Prediction {
     pub logits: Vec<i32>,
     /// Argmax class.
     pub class: usize,
-    /// Error string when the backend failed for this request's batch.
-    pub error: Option<String>,
+    /// Typed cause when this request's batch failed.
+    pub error: Option<PredictionError>,
 }
 
 struct ConfigLane {
     queue: Arc<BatchQueue>,
     instruments: LaneMetrics,
-    worker: Option<std::thread::JoinHandle<()>>,
+    // Behind a mutex so `shutdown` can join through `&self` — the network
+    // front-end shares the coordinator across worker threads.
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 /// Multi-config inference coordinator. Lanes are keyed by the typed
@@ -90,7 +128,7 @@ impl Coordinator {
                 ConfigLane {
                     queue,
                     instruments,
-                    worker: Some(worker),
+                    worker: Mutex::new(Some(worker)),
                 },
             );
         }
@@ -181,13 +219,17 @@ impl Coordinator {
         Ok(rx.recv()?)
     }
 
-    /// Graceful shutdown: close queues, join workers.
-    pub fn shutdown(&mut self) {
+    /// Graceful shutdown: close queues, join workers. Takes `&self` (the
+    /// worker handles live behind a mutex) so shared holders — the network
+    /// shards — can quiesce a coordinator without exclusive ownership;
+    /// calling it twice is a no-op.
+    pub fn shutdown(&self) {
         for lane in self.lanes.values() {
             lane.queue.close();
         }
-        for lane in self.lanes.values_mut() {
-            if let Some(h) = lane.worker.take() {
+        for lane in self.lanes.values() {
+            let handle = lock_unpoisoned(&lane.worker).take();
+            if let Some(h) = handle {
                 let _ = h.join();
             }
         }
@@ -229,8 +271,17 @@ fn spawn_worker(
                 }
                 metrics.inc_batch(batch.len());
                 latencies.clear();
-                match backend.infer(&pixels, &lut) {
-                    Ok(logits) => {
+                // The infer call is the only part of the loop that runs
+                // third-party code (PJRT, custom backends): a panic there
+                // used to kill the lane silently, orphaning the queued
+                // requests. Catch it, answer the batch `LaneFailed`, keep
+                // serving. The instruments the closure touches are
+                // poison-safe atomics/sketches, so unwind safety holds.
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    backend.infer(&pixels, &lut)
+                }));
+                match outcome {
+                    Ok(Ok(logits)) => {
                         for (i, req) in batch.into_iter().enumerate() {
                             let row = logits[i * classes..(i + 1) * classes].to_vec();
                             let class = crate::nn::argmax(&row);
@@ -244,7 +295,7 @@ fn spawn_worker(
                             });
                         }
                     }
-                    Err(e) => {
+                    Ok(Err(e)) => {
                         // Failure isolation: the batch errors, the lane
                         // keeps serving subsequent batches.
                         metrics.inc_backend_error();
@@ -257,7 +308,22 @@ fn spawn_worker(
                                 id: req.id,
                                 logits: Vec::new(),
                                 class: usize::MAX,
-                                error: Some(msg.clone()),
+                                error: Some(PredictionError::Backend(msg.clone())),
+                            });
+                        }
+                    }
+                    Err(payload) => {
+                        metrics.inc_lane_failure();
+                        obs::record_error(obs::names::error_source::COORD_LANE_PANIC);
+                        let msg = panic_message(payload.as_ref());
+                        for req in batch {
+                            latencies.push(req.enqueued.elapsed().as_secs_f64());
+                            metrics.inc_response_error();
+                            let _ = req.reply.send(Prediction {
+                                id: req.id,
+                                logits: Vec::new(),
+                                class: usize::MAX,
+                                error: Some(PredictionError::LaneFailed(msg.clone())),
                             });
                         }
                     }
@@ -270,6 +336,18 @@ fn spawn_worker(
         })
         // lint:allow(no-panic): thread spawn fails only on resource exhaustion at startup
         .expect("spawning lane worker")
+}
+
+/// Best-effort text of a caught panic payload (`&str` and `String` cover
+/// `panic!` in practice; anything else gets a fixed marker).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "lane worker panicked".to_string()
+    }
 }
 
 #[cfg(test)]
@@ -407,9 +485,46 @@ mod tests {
         let backend = Arc::new(MockBackend::new(2, 2));
         let exact = Exact::new(8);
         let configs: Vec<&dyn crate::multipliers::ApproxMultiplier> = vec![&exact];
-        let mut coord = Coordinator::new(backend, &configs, policy());
+        let coord = Coordinator::new(backend, &configs, policy());
         let _ = coord.infer_blocking("Exact8", vec![1, 0, 0, 0]).unwrap();
         coord.shutdown();
         assert!(coord.submit("Exact8", vec![0; 4]).is_err());
+        // Idempotent: a second shutdown through the shared reference is a
+        // no-op, not a deadlock or double-join.
+        coord.shutdown();
+    }
+
+    /// Regression: a panicking lane worker used to die silently — its
+    /// queued requests never got a reply, so every waiter hung and the
+    /// conservation invariant broke. The worker now catches the panic,
+    /// answers the whole batch with a typed `LaneFailed`, counts the
+    /// failure, and keeps serving subsequent batches.
+    #[test]
+    fn lane_panic_answers_lane_failed_and_survives() {
+        let backend = Arc::new(MockBackend::new(1, 2).with_panics(2));
+        let exact = Exact::new(8);
+        let configs: Vec<&dyn crate::multipliers::ApproxMultiplier> = vec![&exact];
+        let coord = Coordinator::new(backend, &configs, policy());
+        let mut failures = 0u64;
+        let mut oks = 0u64;
+        for i in 0..6 {
+            let (_, rx) = coord.submit("Exact8", vec![1, 0, 0, 0]).unwrap();
+            let p = rx
+                .recv_timeout(Duration::from_secs(5))
+                .unwrap_or_else(|_| panic!("request {i} never answered — lane worker died"));
+            match p.error {
+                Some(ref e) if e.is_lane_failure() => {
+                    assert!(e.message().contains("injected lane panic"), "{e}");
+                    failures += 1;
+                }
+                Some(ref e) => panic!("unexpected non-lane error: {e}"),
+                None => oks += 1,
+            }
+        }
+        assert!(failures > 0 && oks > 0, "failures={failures} oks={oks}");
+        let m = coord.metrics();
+        assert_eq!(m.responses(), 6, "every request answered exactly once");
+        assert!(m.lane_failures() > 0);
+        assert_eq!(m.responses_error(), failures);
     }
 }

@@ -65,6 +65,15 @@
 //!   executes them on the CPU client.
 //! - [`coordinator`] — the serving layer: request router, dynamic batcher,
 //!   per-config queues, worker threads, metrics.
+//! - [`net`] — the **network serving plane** over the coordinator:
+//!   the `scaletrim-wire/v1` length-prefixed JSON protocol, a threaded
+//!   acceptor + worker-pool server with horizontal sharding by
+//!   `DesignSpec` label hash, explicit admission control (bounded
+//!   per-shard in-flight windows, per-connection token buckets,
+//!   `Overloaded` wire errors, graceful drain), a blocking client with
+//!   connect retry/backoff and I/O deadlines, an open-loop load
+//!   generator, and merged p50/p99/p999 service SLOs on `GET /healthz`
+//!   (`scaletrim serve` / `scaletrim loadgen`).
 //! - [`obs`] — the **observability plane**: one process-wide metrics
 //!   registry (counters, gauges, sketch-backed latency histograms whose
 //!   p50/p99/p999 merge bit-for-bit across shards), RAII tracing spans
@@ -129,6 +138,7 @@ pub mod error;
 pub mod hardware;
 pub mod lut;
 pub mod multipliers;
+pub mod net;
 pub mod nn;
 pub mod obs;
 pub mod perf;

@@ -14,6 +14,13 @@
 //! - `app --workload <name>`       run one application workload under a config
 //! - `infer --model <name>`        batch inference via PJRT on an artifact
 //! - `serve --model <name>`        run the batching coordinator demo
+//! - `serve --addr H:P [--shards N] [--queue-depth D] [--backend mock|pjrt]`
+//!   run the sharded network serving plane (`scaletrim-wire/v1` + a
+//!   `GET /healthz` text endpoint); drains gracefully on a wire
+//!   `shutdown` frame or after `--secs`
+//! - `loadgen [--addr H:P] [--conns N] [--rps R] [--secs S] [--shutdown]`
+//!   drive open-loop load against a serving address and report
+//!   client-observed p50/p99/p999
 //! - `obs [--json] [--out F]`      drive demo traffic and print the process
 //!   metrics snapshot (Prometheus-style text, or the schema-versioned JSON)
 //! - `list [--bits 8|16]`          list the registered configurations
@@ -32,7 +39,7 @@
 //! stays machine-parseable.
 
 use scaletrim::calib::{self, CalibStore, CalibValue};
-use scaletrim::coordinator::{BatchPolicy, Coordinator, PjrtBackend};
+use scaletrim::coordinator::{Backend, BatchPolicy, Coordinator, MockBackend, PjrtBackend};
 use scaletrim::dse::{evaluate_all, pareto_front};
 use scaletrim::error::{sweep_full, SweepSpec};
 use scaletrim::hardware::try_estimate;
@@ -71,6 +78,105 @@ fn default_calib_dir() -> String {
         Ok(d) => format!("{d}/calib"),
         Err(_) => "artifacts/calib".to_string(),
     }
+}
+
+/// `scaletrim serve --addr …`: the sharded network serving plane.
+/// Blocks until a wire `shutdown` frame begins the drain (or `--secs`
+/// elapses), then drains, prints the merged service SLOs, and verifies
+/// the wire-conservation invariants over the final snapshot.
+fn serve_network(args: &Args) -> Result<()> {
+    use scaletrim::net::{slo_line, AdmissionPolicy, ServeConfig, Server};
+    use scaletrim::obs::names::metric;
+
+    let addr = args.opt_or("addr", "127.0.0.1:4077");
+    let shards = args.opt_parse_or("shards", 2usize)?;
+    let workers = args.opt_parse_or("workers", 8usize)?;
+    let queue_depth = args.opt_parse_or("queue-depth", 256usize)?;
+    let rate = args.opt_parse_or("rate", 0.0f64)?;
+    let burst = args.opt_parse_or("burst", 32.0f64)?;
+    let secs = args.opt_parse_or("secs", 0.0f64)?;
+    let backend_kind = args.opt_or("backend", "mock");
+    let labels = args.opt_or("configs", "Exact8,scaleTRIM(3,4),scaleTRIM(4,8),TOSAM(1,5)");
+    let mults: Vec<Box<dyn ApproxMultiplier>> = labels
+        .split(',')
+        .map(|l| resolve_config(l.trim(), 8))
+        .collect::<Result<_>>()?;
+    let refs: Vec<&dyn ApproxMultiplier> = mults.iter().map(|b| b.as_ref()).collect();
+    let cfg = ServeConfig {
+        addr: addr.clone(),
+        shards,
+        workers,
+        admission: AdmissionPolicy {
+            queue_depth,
+            rate_per_s: rate,
+            burst,
+        },
+        ..ServeConfig::default()
+    };
+    let server = match backend_kind.as_str() {
+        "mock" => {
+            let work = args.opt_parse_or("mock-work", 50_000u32)?;
+            Server::start(cfg, &refs, |_shard| {
+                Ok(Arc::new(MockBackend::new(8, 10).with_work(work).serialized())
+                    as Arc<dyn Backend>)
+            })?
+        }
+        "pjrt" => {
+            let model = args.opt_or("model", "lenet");
+            let dir = find_artifacts_dir()?;
+            let set = ArtifactSet::resolve(&dir, &model)?;
+            let data = Dataset::load(&set.dataset)?;
+            let hlo = set
+                .hlo
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?
+                .to_string();
+            let (c, h, w) = (data.c, data.h, data.w);
+            let n_classes = data.n_classes;
+            // One PJRT actor per shard: each owns its single-threaded
+            // executor, which is exactly why shards scale throughput.
+            Server::start(cfg, &refs, move |_shard| {
+                Ok(Arc::new(PjrtBackend::spawn(hlo.clone(), 32, n_classes, (c, h, w))?)
+                    as Arc<dyn Backend>)
+            })?
+        }
+        other => anyhow::bail!("unknown --backend {other:?} (expected mock or pjrt)"),
+    };
+    eprintln!(
+        "serving {} lane(s) over {shards} shard(s) on {} (backend {backend_kind}); \
+         drain with `scaletrim loadgen --addr {} --shutdown` or wait --secs",
+        refs.len(),
+        server.local_addr(),
+        server.local_addr(),
+    );
+    let t0 = std::time::Instant::now();
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        if server.is_draining() {
+            eprintln!("drain requested over the wire");
+            break;
+        }
+        if secs > 0.0 && t0.elapsed().as_secs_f64() >= secs {
+            eprintln!("--secs {secs} elapsed, draining");
+            break;
+        }
+    }
+    let snap = server.shutdown();
+    println!("{}", slo_line(&snap));
+    println!(
+        "requests={} ok={} errors={} overloaded={} rate_limited={} proto_errors={} connections={}",
+        snap.counter_sum(metric::NET_REQUESTS_TOTAL),
+        snap.counter_sum(metric::NET_RESPONSES_OK_TOTAL),
+        snap.counter_sum(metric::NET_RESPONSES_ERROR_TOTAL),
+        snap.counter_sum(metric::NET_OVERLOADED_TOTAL),
+        snap.counter_sum(metric::NET_RATE_LIMITED_TOTAL),
+        snap.counter_sum(metric::NET_PROTO_ERRORS_TOTAL),
+        snap.counter_sum(metric::NET_CONNECTIONS_TOTAL),
+    );
+    obs::check_invariants(&snap)
+        .map_err(|e| anyhow::anyhow!("obs invariant violated after drain: {e}"))?;
+    println!("invariants ok");
+    Ok(())
 }
 
 fn main() {
@@ -401,6 +507,37 @@ fn run() -> Result<()> {
                 print!("{text}");
             }
         }
+        "serve" if args.opt("addr").is_some() => {
+            // Network mode: the sharded wire-protocol front-end. The
+            // in-process coordinator demo below keeps the old `--model`
+            // path untouched.
+            serve_network(&args)?;
+        }
+        "loadgen" => {
+            let fast = args.has_flag("fast");
+            let cfg = scaletrim::net::LoadgenConfig {
+                addr: args.opt_or("addr", "127.0.0.1:4077"),
+                conns: args.opt_parse_or("conns", if fast { 2usize } else { 4 })?,
+                rps: args.opt_parse_or("rps", if fast { 200.0f64 } else { 500.0 })?,
+                secs: args.opt_parse_or("secs", if fast { 2.0f64 } else { 5.0 })?,
+                seed: args.opt_parse_or("seed", 42u64)?,
+                client: scaletrim::net::ClientConfig::default(),
+            };
+            eprintln!(
+                "loadgen: {} conns at {} req/s aggregate for {}s against {}",
+                cfg.conns, cfg.rps, cfg.secs, cfg.addr
+            );
+            let report = scaletrim::net::loadgen::run(&cfg)?;
+            println!("{}", report.summary());
+            if args.has_flag("shutdown") {
+                // Stats first — after the drain begins, new connections
+                // are shed with `Overloaded`.
+                let mut c = scaletrim::net::Client::connect(&cfg.addr, &cfg.client)?;
+                eprintln!("server stats: {}", c.stats()?.to_string());
+                c.shutdown_server()?;
+                eprintln!("server drain requested");
+            }
+        }
         "serve" => {
             let model = args.opt_or("model", "lenet");
             let n_requests = args.opt_parse_or("requests", 1000usize)?;
@@ -518,7 +655,7 @@ fn run() -> Result<()> {
         _ => {
             println!(
                 "scaletrim — scaleTRIM approximate-multiplier system reproduction\n\n\
-                 usage: scaletrim <repro|list|mul|sweep|lut-gen|calib|pareto|bench|app|infer|serve|obs|lint|analyze> [options]\n\
+                 usage: scaletrim <repro|list|mul|sweep|lut-gen|calib|pareto|bench|app|infer|serve|loadgen|obs|lint|analyze> [options]\n\
                  examples:\n  \
                  scaletrim repro --exp table4\n  \
                  scaletrim obs --json --out obs-snapshot.json\n  \
@@ -532,6 +669,8 @@ fn run() -> Result<()> {
                  scaletrim repro --exp workloads --fast\n  \
                  scaletrim infer --model lenet --config 'scaleTRIM(4,8)'\n  \
                  scaletrim serve --model lenet --requests 2000\n  \
+                 scaletrim serve --addr 127.0.0.1:4077 --shards 4 --queue-depth 256 --backend mock\n  \
+                 scaletrim loadgen --addr 127.0.0.1:4077 --conns 8 --rps 2000 --secs 5 --shutdown\n  \
                  scaletrim lint --root rust/src\n  \
                  scaletrim analyze --json"
             );

@@ -1,0 +1,170 @@
+//! Admission control and load shedding for the serving plane.
+//!
+//! Two mechanisms, both constant-time on the hot path:
+//!
+//! - [`ShardGate`] — a bounded in-flight window per shard. A submit must
+//!   win a slot before it enters the coordinator queue; when the window is
+//!   full the request is answered with an explicit `Overloaded` wire error
+//!   instead of buffering without bound. Slots are released by the reply
+//!   writer, so the bound covers the whole queue + inference pipeline.
+//! - [`TokenBucket`] — a per-connection rate limit. Owned by the
+//!   connection's reader thread (no locks); refilled from the wall-clock
+//!   gap between submits.
+
+use std::sync::atomic::{AtomicI64, Ordering};
+
+/// Admission knobs for one server.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionPolicy {
+    /// Per-shard in-flight window (requests admitted but not yet
+    /// answered). The explicit bound that replaces unbounded buffering.
+    pub queue_depth: usize,
+    /// Per-connection sustained submit rate (req/s); `<= 0` disables the
+    /// rate limit.
+    pub rate_per_s: f64,
+    /// Per-connection burst allowance (token bucket capacity).
+    pub burst: f64,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        Self {
+            queue_depth: 256,
+            rate_per_s: 0.0,
+            burst: 32.0,
+        }
+    }
+}
+
+/// Bounded in-flight window: an atomic counter with optimistic acquire.
+#[derive(Debug)]
+pub struct ShardGate {
+    inflight: AtomicI64,
+    capacity: i64,
+}
+
+impl ShardGate {
+    /// Gate with the given capacity (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inflight: AtomicI64::new(0),
+            capacity: capacity.clamp(1, i64::MAX as usize) as i64,
+        }
+    }
+
+    /// Try to win an in-flight slot. On `false` the caller must shed the
+    /// request (no slot is held).
+    pub fn try_acquire(&self) -> bool {
+        let prev = self.inflight.fetch_add(1, Ordering::AcqRel);
+        if prev >= self.capacity {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            return false;
+        }
+        true
+    }
+
+    /// Release a previously acquired slot.
+    pub fn release(&self) {
+        self.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Current in-flight count (clamped non-negative; transient
+    /// over-counts from optimistic acquires may be visible).
+    pub fn inflight(&self) -> i64 {
+        self.inflight.load(Ordering::Acquire).max(0)
+    }
+}
+
+/// Classic token bucket, single-owner (no interior mutability needed —
+/// each connection's reader thread owns its bucket).
+#[derive(Debug)]
+pub struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+}
+
+impl TokenBucket {
+    /// Bucket allowing `rate_per_s` sustained with `burst` headroom.
+    /// `rate_per_s <= 0` builds an unlimited bucket.
+    pub fn new(rate_per_s: f64, burst: f64) -> Self {
+        let burst = burst.max(1.0);
+        Self {
+            rate: rate_per_s.max(0.0),
+            burst,
+            tokens: burst,
+        }
+    }
+
+    /// Credit `dt_secs` of elapsed time, capped at the burst size.
+    pub fn refill(&mut self, dt_secs: f64) {
+        if self.rate <= 0.0 {
+            return;
+        }
+        self.tokens = (self.tokens + self.rate * dt_secs.max(0.0)).min(self.burst);
+    }
+
+    /// Spend one token; `false` means shed (rate limit exceeded).
+    pub fn try_take(&mut self) -> bool {
+        if self.rate <= 0.0 {
+            return true;
+        }
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            return true;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_bounds_inflight_and_releases() {
+        let g = ShardGate::new(2);
+        assert!(g.try_acquire());
+        assert!(g.try_acquire());
+        assert!(!g.try_acquire(), "third acquire must shed");
+        assert_eq!(g.inflight(), 2);
+        g.release();
+        assert!(g.try_acquire());
+        g.release();
+        g.release();
+        assert_eq!(g.inflight(), 0);
+    }
+
+    #[test]
+    fn gate_zero_capacity_clamps_to_one() {
+        let g = ShardGate::new(0);
+        assert!(g.try_acquire());
+        assert!(!g.try_acquire());
+    }
+
+    #[test]
+    fn bucket_sheds_past_burst_and_refills() {
+        let mut b = TokenBucket::new(10.0, 2.0);
+        assert!(b.try_take());
+        assert!(b.try_take());
+        assert!(!b.try_take(), "burst exhausted");
+        b.refill(0.1); // 10/s * 0.1s = 1 token
+        assert!(b.try_take());
+        assert!(!b.try_take());
+        // Refill never exceeds the burst.
+        b.refill(100.0);
+        assert!(b.try_take());
+        assert!(b.try_take());
+        assert!(!b.try_take());
+    }
+
+    #[test]
+    fn bucket_disabled_when_rate_nonpositive() {
+        let mut b = TokenBucket::new(0.0, 1.0);
+        for _ in 0..1000 {
+            assert!(b.try_take());
+        }
+        b.refill(-5.0); // negative dt is ignored, not a panic
+        assert!(b.try_take());
+    }
+}

@@ -1,0 +1,282 @@
+//! Open-loop load generator for the serving plane.
+//!
+//! Drives N connections at a fixed aggregate request rate against a
+//! running server and reports client-observed latency percentiles. Each
+//! connection is a pipelined pair: a paced sender (split write half) and
+//! a receiver that matches FIFO replies to send timestamps — the classic
+//! open-loop shape, so queueing delay under overload is *measured*, not
+//! hidden by the closed-loop coordination bug.
+//!
+//! Shed responses (`overloaded`, `rate_limited`) are counted separately
+//! from errors: during an overload experiment they are the correct
+//! behavior under test, not a failure.
+
+use super::client::{Client, ClientConfig};
+use super::proto::{Response, WireErrorKind};
+use crate::multipliers::DesignSpec;
+use crate::obs::{self, names};
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::LogQuantileSketch;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Load shape for one run.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address.
+    pub addr: String,
+    /// Concurrent connections.
+    pub conns: usize,
+    /// Aggregate target rate across all connections (req/s).
+    pub rps: f64,
+    /// Run duration in seconds (per-connection request count is
+    /// `ceil(rps / conns * secs)`).
+    pub secs: f64,
+    /// Base RNG seed (each connection derives its own).
+    pub seed: u64,
+    /// Client connect/IO policy.
+    pub client: ClientConfig,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:4077".to_string(),
+            conns: 4,
+            rps: 500.0,
+            secs: 5.0,
+            seed: 42,
+            client: ClientConfig::default(),
+        }
+    }
+}
+
+/// Aggregate result of a load run.
+#[derive(Debug)]
+pub struct LoadgenReport {
+    /// Submits written to the wire.
+    pub sent: u64,
+    /// Successful replies.
+    pub ok: u64,
+    /// Hard errors (lane failures, backend errors, transport faults).
+    pub errors: u64,
+    /// Admission sheds (`overloaded` / `rate_limited` answers).
+    pub shed: u64,
+    /// Wall-clock time of the whole run.
+    pub elapsed: Duration,
+    /// Client-observed submit→reply latency (seconds).
+    pub sketch: LogQuantileSketch,
+}
+
+impl LoadgenReport {
+    /// Completed responses per second of wall clock.
+    pub fn achieved_rps(&self) -> f64 {
+        let secs = self.elapsed.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        (self.ok + self.shed + self.errors) as f64 / secs
+    }
+
+    /// Latency percentile in milliseconds (`q` in [0, 100]).
+    pub fn p_ms(&self, q: f64) -> f64 {
+        self.sketch.quantile(q) * 1e3
+    }
+
+    /// One-line human summary (grep-stable `p50=`/`p99=`/`p999=` keys).
+    pub fn summary(&self) -> String {
+        format!(
+            "loadgen: sent={} ok={} shed={} errors={} elapsed={:.2}s rps={:.0} \
+             p50={:.3}ms p99={:.3}ms p999={:.3}ms",
+            self.sent,
+            self.ok,
+            self.shed,
+            self.errors,
+            self.elapsed.as_secs_f64(),
+            self.achieved_rps(),
+            self.p_ms(50.0),
+            self.p_ms(99.0),
+            self.p_ms(99.9),
+        )
+    }
+}
+
+#[derive(Default)]
+struct ConnStats {
+    sent: u64,
+    ok: u64,
+    errors: u64,
+    shed: u64,
+    sketch: LogQuantileSketch,
+}
+
+/// Run the load shape to completion and aggregate per-connection stats
+/// (latency sketches merge bit-for-bit, same as the server side).
+pub fn run(cfg: &LoadgenConfig) -> crate::Result<LoadgenReport> {
+    let span = obs::span(names::span::NET_LOADGEN);
+    let _g = span.start();
+
+    // Probe: learn the image size and served configs from the handshake.
+    let mut probe = Client::connect(&cfg.addr, &cfg.client)?;
+    let (_shards, img, labels) = probe.hello()?;
+    drop(probe);
+    let specs: Vec<DesignSpec> = labels.iter().filter_map(|l| l.parse().ok()).collect();
+    anyhow::ensure!(
+        !specs.is_empty(),
+        "server advertises no parseable configs: {labels:?}"
+    );
+
+    let conns = cfg.conns.max(1);
+    let per_conn_rps = (cfg.rps / conns as f64).max(1.0);
+    let total = (per_conn_rps * cfg.secs.max(0.0)).ceil() as u64;
+    let t_start = Instant::now();
+    let mut results: Vec<crate::Result<ConnStats>> = Vec::with_capacity(conns);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(conns);
+        for c in 0..conns {
+            let seed = cfg.seed.wrapping_add(c as u64);
+            let specs = &specs;
+            handles.push(scope.spawn(move || {
+                run_conn(cfg, seed, total, per_conn_rps, specs, img)
+            }));
+        }
+        for h in handles {
+            results.push(
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow::anyhow!("loadgen connection panicked"))),
+            );
+        }
+    });
+    let elapsed = t_start.elapsed();
+
+    let mut report = LoadgenReport {
+        sent: 0,
+        ok: 0,
+        errors: 0,
+        shed: 0,
+        elapsed,
+        sketch: LogQuantileSketch::new(),
+    };
+    for r in results {
+        let s = r?;
+        report.sent += s.sent;
+        report.ok += s.ok;
+        report.errors += s.errors;
+        report.shed += s.shed;
+        report.sketch.merge(&s.sketch);
+    }
+    Ok(report)
+}
+
+/// One pipelined connection: paced open-loop sender, FIFO receiver.
+fn run_conn(
+    cfg: &LoadgenConfig,
+    seed: u64,
+    total: u64,
+    per_conn_rps: f64,
+    specs: &[DesignSpec],
+    img: usize,
+) -> crate::Result<ConnStats> {
+    let client = Client::connect(&cfg.addr, &cfg.client)?;
+    let (mut tx_half, mut rx_half) = client.into_split()?;
+    let (t_send, t_recv) = mpsc::channel::<Instant>();
+    let interval = Duration::from_secs_f64(1.0 / per_conn_rps);
+
+    let mut stats = ConnStats::default();
+    std::thread::scope(|scope| {
+        let sender = scope.spawn(move || -> u64 {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let start = Instant::now();
+            let mut sent = 0u64;
+            for i in 0..total {
+                let target = start + interval.mul_f64(i as f64);
+                let now = Instant::now();
+                if target > now {
+                    std::thread::sleep(target - now);
+                }
+                let spec = specs[rng.gen_range(specs.len() as u64) as usize];
+                let mut pixels = vec![0u8; img];
+                for p in &mut pixels {
+                    // 1..=255: nonzero pixels exercise every LUT row.
+                    *p = (rng.gen_range(255) + 1) as u8;
+                }
+                let t0 = Instant::now();
+                if tx_half.send_submit(&spec, &pixels).is_err() {
+                    break;
+                }
+                sent += 1;
+                if t_send.send(t0).is_err() {
+                    break; // receiver gave up; stop producing
+                }
+            }
+            sent
+        });
+
+        // FIFO receiver: one response per timestamped send, in order.
+        for t0 in t_recv {
+            match rx_half.recv_response() {
+                Ok(Response::Reply { .. }) => {
+                    stats.ok += 1;
+                    stats.sketch.push(t0.elapsed().as_secs_f64());
+                }
+                Ok(Response::Error { kind, .. })
+                    if matches!(
+                        kind,
+                        WireErrorKind::Overloaded | WireErrorKind::RateLimited
+                    ) =>
+                {
+                    stats.shed += 1;
+                }
+                Ok(_) => stats.errors += 1,
+                Err(_) => {
+                    stats.errors += 1;
+                    break; // drops t_recv, which unblocks the sender
+                }
+            }
+        }
+        stats.sent = sender.join().unwrap_or(0);
+    });
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_math_is_sane() {
+        let mut sketch = LogQuantileSketch::new();
+        for i in 1..=100 {
+            sketch.push(i as f64 * 1e-3);
+        }
+        let r = LoadgenReport {
+            sent: 100,
+            ok: 90,
+            errors: 4,
+            shed: 6,
+            elapsed: Duration::from_secs(2),
+            sketch,
+        };
+        assert_eq!(r.achieved_rps(), 50.0);
+        assert!(r.p_ms(50.0) > 40.0 && r.p_ms(50.0) < 60.0, "{}", r.p_ms(50.0));
+        let s = r.summary();
+        assert!(s.contains("p50="), "{s}");
+        assert!(s.contains("p99="), "{s}");
+        assert!(s.contains("p999="), "{s}");
+    }
+
+    #[test]
+    fn empty_report_does_not_divide_by_zero() {
+        let r = LoadgenReport {
+            sent: 0,
+            ok: 0,
+            errors: 0,
+            shed: 0,
+            elapsed: Duration::from_secs(0),
+            sketch: LogQuantileSketch::new(),
+        };
+        assert_eq!(r.achieved_rps(), 0.0);
+        assert_eq!(r.p_ms(99.0), 0.0);
+        assert!(r.summary().contains("ok=0"));
+    }
+}

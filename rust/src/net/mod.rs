@@ -1,0 +1,31 @@
+//! L4: the network serving plane.
+//!
+//! Everything here is dependency-free (`std::net` + `std::thread`):
+//!
+//! - [`proto`] — the `scaletrim-wire/v1` length-prefixed newline-framed
+//!   JSON protocol, shared by both sides.
+//! - [`server`] — acceptor + worker-pool front-end over horizontally
+//!   sharded [`crate::coordinator::Coordinator`]s, with merged
+//!   p50/p99/p999 service SLOs and a `GET /healthz` text endpoint.
+//! - [`admission`] — bounded per-shard in-flight windows and
+//!   per-connection token buckets; overload is an explicit wire error,
+//!   never an unbounded queue.
+//! - [`client`] — the blocking client (connect retry + backoff, I/O
+//!   deadlines), replacing the old `runtime/client.rs` stub.
+//! - [`loadgen`] — an open-loop, pipelined load generator used by the
+//!   CLI, the CI smoke test, and the serving benchmarks.
+
+pub mod admission;
+pub mod client;
+pub mod loadgen;
+pub mod proto;
+pub mod server;
+
+pub use admission::{AdmissionPolicy, ShardGate, TokenBucket};
+pub use client::{healthz, Client, ClientConfig, ClientReceiver, ClientSender};
+pub use loadgen::{LoadgenConfig, LoadgenReport};
+pub use proto::{
+    write_frame, Frame, FrameReader, Request, Response, WireErrorKind, MAX_FRAME_BYTES,
+    WIRE_SCHEMA,
+};
+pub use server::{shard_of, slo_line, ServeConfig, Server};

@@ -1,0 +1,600 @@
+//! The `scaletrim-wire/v1` protocol: length-prefixed, newline-framed JSON
+//! documents over a byte stream.
+//!
+//! A frame is `{decimal payload length}\n{json payload}\n`. The length
+//! prefix lets the reader allocate exactly once and reject oversized
+//! frames before buffering them; the trailing newline keeps captures
+//! greppable and catches truncation. Requests and responses are tagged
+//! objects (`"type": "submit"`, ...) carrying the existing wire-safe
+//! [`DesignSpec`] JSON for config routing — the same document
+//! `DesignSpec::to_json`/`from_json` round-trip everywhere else.
+//!
+//! [`FrameReader`] is deliberately timeout-friendly: a read that hits the
+//! socket's read timeout surfaces as [`Frame::Idle`] with any partial
+//! frame preserved, so the server can poll for drain between frames
+//! without losing bytes, and a leading `GET ` line is recognised as
+//! [`Frame::HttpGet`] so one port serves both the wire protocol and the
+//! `/healthz` text endpoint.
+
+use crate::multipliers::DesignSpec;
+use crate::util::json::Json;
+use anyhow::Context;
+use std::io::{self, Read, Write};
+
+/// Wire schema identifier, checked in the `hello` handshake.
+pub const WIRE_SCHEMA: &str = "scaletrim-wire/v1";
+
+/// Hard ceiling on a single frame's payload (defends the server against
+/// a hostile or corrupt length prefix).
+pub const MAX_FRAME_BYTES: usize = 8 << 20;
+
+/// Longest acceptable header line (decimal length or an HTTP request
+/// line) before a newline must appear.
+const MAX_HEADER_BYTES: usize = 256;
+
+/// One unit read off the stream.
+#[derive(Debug)]
+pub enum Frame {
+    /// A complete JSON document frame.
+    Doc(Json),
+    /// An HTTP `GET` request line (the `/healthz` path).
+    HttpGet,
+    /// Clean end of stream (no partial frame buffered).
+    Eof,
+    /// No complete frame yet: the read timed out between or inside a
+    /// frame. Buffered bytes are preserved for the next call.
+    Idle,
+}
+
+/// Incremental frame decoder over any [`Read`]. Tolerates arbitrary read
+/// fragmentation (byte-at-a-time included) and read timeouts.
+pub struct FrameReader<R: Read> {
+    r: R,
+    buf: Vec<u8>,
+}
+
+impl<R: Read> FrameReader<R> {
+    /// Wrap a byte stream.
+    pub fn new(r: R) -> Self {
+        Self { r, buf: Vec::new() }
+    }
+
+    /// Pull the next frame. Errors are protocol-fatal (truncated frame,
+    /// bad header, oversize, malformed JSON, I/O failure) — the
+    /// connection should be dropped after one.
+    pub fn read_frame(&mut self) -> crate::Result<Frame> {
+        loop {
+            if let Some(f) = self.try_decode()? {
+                return Ok(f);
+            }
+            let mut chunk = [0u8; 4096];
+            match self.r.read(&mut chunk) {
+                Ok(0) => {
+                    if self.buf.is_empty() {
+                        return Ok(Frame::Eof);
+                    }
+                    anyhow::bail!(
+                        "connection closed mid-frame ({} bytes buffered)",
+                        self.buf.len()
+                    );
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) if is_timeout(&e) => return Ok(Frame::Idle),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// Decode one frame from the buffer if a complete one is present.
+    fn try_decode(&mut self) -> crate::Result<Option<Frame>> {
+        let Some(nl) = self.buf.iter().position(|&b| b == b'\n') else {
+            anyhow::ensure!(
+                self.buf.len() <= MAX_HEADER_BYTES,
+                "frame header exceeds {MAX_HEADER_BYTES} bytes without a newline"
+            );
+            return Ok(None);
+        };
+        let header = &self.buf[..nl];
+        if header.starts_with(b"GET ") {
+            self.buf.clear();
+            return Ok(Some(Frame::HttpGet));
+        }
+        let text = std::str::from_utf8(header).context("non-utf8 frame header")?;
+        let len: usize = text
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad frame length prefix {text:?}"))?;
+        anyhow::ensure!(
+            len <= MAX_FRAME_BYTES,
+            "frame of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte limit"
+        );
+        let total = nl + 1 + len + 1; // header + '\n' + payload + '\n'
+        if self.buf.len() < total {
+            return Ok(None);
+        }
+        anyhow::ensure!(
+            self.buf[total - 1] == b'\n',
+            "frame payload not terminated by a newline"
+        );
+        let payload =
+            std::str::from_utf8(&self.buf[nl + 1..total - 1]).context("non-utf8 frame payload")?;
+        let doc = Json::parse(payload).map_err(|e| anyhow::anyhow!("bad frame payload: {e}"))?;
+        self.buf.drain(..total);
+        Ok(Some(Frame::Doc(doc)))
+    }
+}
+
+/// True for the two error kinds a socket read timeout surfaces as.
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+    )
+}
+
+/// Write one frame (`{len}\n{json}\n`) and flush.
+pub fn write_frame(w: &mut impl Write, doc: &Json) -> io::Result<()> {
+    let payload = doc.to_string();
+    let mut out = Vec::with_capacity(payload.len() + 16);
+    out.extend_from_slice(payload.len().to_string().as_bytes());
+    out.push(b'\n');
+    out.extend_from_slice(payload.as_bytes());
+    out.push(b'\n');
+    w.write_all(&out)?;
+    w.flush()
+}
+
+/// Machine-readable wire error categories.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireErrorKind {
+    /// Admission shed the request: shard queue full or server draining.
+    Overloaded,
+    /// The per-connection token bucket shed the request.
+    RateLimited,
+    /// A coordinator lane worker panicked (or timed out) on this batch.
+    LaneFailed,
+    /// The backend returned an inference error for this batch.
+    Backend,
+    /// The request was well-framed but semantically invalid.
+    BadRequest,
+    /// The frame itself was malformed.
+    Proto,
+}
+
+impl WireErrorKind {
+    /// Stable wire tag.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Overloaded => "overloaded",
+            Self::RateLimited => "rate_limited",
+            Self::LaneFailed => "lane_failed",
+            Self::Backend => "backend",
+            Self::BadRequest => "bad_request",
+            Self::Proto => "proto",
+        }
+    }
+
+    /// Parse a wire tag.
+    pub fn from_tag(s: &str) -> Option<Self> {
+        Some(match s {
+            "overloaded" => Self::Overloaded,
+            "rate_limited" => Self::RateLimited,
+            "lane_failed" => Self::LaneFailed,
+            "backend" => Self::Backend,
+            "bad_request" => Self::BadRequest,
+            "proto" => Self::Proto,
+            _ => return None,
+        })
+    }
+}
+
+/// Client → server frames.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Handshake: carries the wire schema, answered with serving facts.
+    Hello,
+    /// Liveness probe.
+    Ping,
+    /// Serving statistics document.
+    Stats,
+    /// Begin graceful drain (if the server allows remote shutdown).
+    Shutdown,
+    /// One inference request against a config lane.
+    Submit {
+        /// Client-chosen id, echoed in the reply (FIFO per connection).
+        id: u64,
+        /// Target multiplier configuration.
+        spec: DesignSpec,
+        /// Quantized image, exactly the server's advertised size.
+        pixels: Vec<u8>,
+    },
+}
+
+impl Request {
+    /// Wire document for this request.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Self::Hello => Json::obj().set("type", "hello").set("v", WIRE_SCHEMA),
+            Self::Ping => Json::obj().set("type", "ping"),
+            Self::Stats => Json::obj().set("type", "stats"),
+            Self::Shutdown => Json::obj().set("type", "shutdown"),
+            Self::Submit { id, spec, pixels } => Json::obj()
+                .set("type", "submit")
+                .set("id", *id)
+                .set("spec", spec.to_json())
+                .set(
+                    "pixels",
+                    Json::Arr(pixels.iter().map(|&p| Json::Num(p as f64)).collect()),
+                ),
+        }
+    }
+
+    /// Parse a wire document into a request.
+    pub fn from_json(doc: &Json) -> crate::Result<Request> {
+        match field_str(doc, "type")? {
+            "hello" => {
+                let v = field_str(doc, "v")?;
+                anyhow::ensure!(
+                    v == WIRE_SCHEMA,
+                    "wire schema mismatch: client speaks {v:?}, server speaks {WIRE_SCHEMA:?}"
+                );
+                Ok(Self::Hello)
+            }
+            "ping" => Ok(Self::Ping),
+            "stats" => Ok(Self::Stats),
+            "shutdown" => Ok(Self::Shutdown),
+            "submit" => {
+                let id = field_u64(doc, "id")?;
+                let spec = DesignSpec::from_json(
+                    doc.get("spec").ok_or_else(|| anyhow::anyhow!("missing field \"spec\""))?,
+                )?;
+                let raw = doc
+                    .get("pixels")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("missing array field \"pixels\""))?;
+                let mut pixels = Vec::with_capacity(raw.len());
+                for v in raw {
+                    let x = v.as_f64().ok_or_else(|| anyhow::anyhow!("non-numeric pixel"))?;
+                    anyhow::ensure!(
+                        (0.0..=255.0).contains(&x) && x.fract() == 0.0,
+                        "pixel {x} outside u8"
+                    );
+                    pixels.push(x as u8);
+                }
+                Ok(Self::Submit { id, spec, pixels })
+            }
+            other => anyhow::bail!("unknown request type {other:?}"),
+        }
+    }
+}
+
+/// Server → client frames.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Handshake answer: serving facts the client needs to drive traffic.
+    Hello {
+        /// In-process shard count.
+        shards: usize,
+        /// Expected pixel payload size per submit.
+        img: usize,
+        /// Served config labels (parseable `DesignSpec` display forms).
+        configs: Vec<String>,
+    },
+    /// Liveness answer.
+    Pong,
+    /// Serving statistics document.
+    Stats(Json),
+    /// Drain has begun.
+    ShutdownAck,
+    /// Successful inference.
+    Reply {
+        /// Echo of the submit id.
+        id: u64,
+        /// Argmax class.
+        class: usize,
+        /// Raw logits.
+        logits: Vec<i32>,
+    },
+    /// Typed failure. `id` is present when the error answers a submit.
+    Error {
+        /// Echo of the submit id, when applicable.
+        id: Option<u64>,
+        /// Machine-readable category.
+        kind: WireErrorKind,
+        /// Human-readable detail.
+        message: String,
+    },
+}
+
+impl Response {
+    /// Wire document for this response.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Self::Hello { shards, img, configs } => Json::obj()
+                .set("type", "hello")
+                .set("v", WIRE_SCHEMA)
+                .set("shards", *shards)
+                .set("img", *img)
+                .set(
+                    "configs",
+                    Json::Arr(configs.iter().map(|c| Json::Str(c.clone())).collect()),
+                ),
+            Self::Pong => Json::obj().set("type", "pong"),
+            Self::Stats(doc) => Json::obj().set("type", "stats").set("stats", doc.clone()),
+            Self::ShutdownAck => Json::obj().set("type", "shutdown_ack"),
+            Self::Reply { id, class, logits } => Json::obj()
+                .set("type", "reply")
+                .set("id", *id)
+                .set("class", *class)
+                .set(
+                    "logits",
+                    Json::Arr(logits.iter().map(|&l| Json::Num(l as f64)).collect()),
+                ),
+            Self::Error { id, kind, message } => {
+                let mut doc = Json::obj()
+                    .set("type", "error")
+                    .set("kind", kind.as_str())
+                    .set("message", message.as_str());
+                if let Some(id) = id {
+                    doc = doc.set("id", *id);
+                }
+                doc
+            }
+        }
+    }
+
+    /// Parse a wire document into a response.
+    pub fn from_json(doc: &Json) -> crate::Result<Response> {
+        match field_str(doc, "type")? {
+            "hello" => {
+                let v = field_str(doc, "v")?;
+                anyhow::ensure!(
+                    v == WIRE_SCHEMA,
+                    "wire schema mismatch: server speaks {v:?}, client speaks {WIRE_SCHEMA:?}"
+                );
+                let configs = doc
+                    .get("configs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("missing array field \"configs\""))?
+                    .iter()
+                    .map(|c| {
+                        c.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| anyhow::anyhow!("non-string config label"))
+                    })
+                    .collect::<crate::Result<Vec<String>>>()?;
+                Ok(Self::Hello {
+                    shards: field_u64(doc, "shards")? as usize,
+                    img: field_u64(doc, "img")? as usize,
+                    configs,
+                })
+            }
+            "pong" => Ok(Self::Pong),
+            "stats" => Ok(Self::Stats(
+                doc.get("stats").cloned().unwrap_or(Json::Null),
+            )),
+            "shutdown_ack" => Ok(Self::ShutdownAck),
+            "reply" => {
+                let logits = doc
+                    .get("logits")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("missing array field \"logits\""))?
+                    .iter()
+                    .map(|v| {
+                        v.as_f64()
+                            .map(|x| x as i32)
+                            .ok_or_else(|| anyhow::anyhow!("non-numeric logit"))
+                    })
+                    .collect::<crate::Result<Vec<i32>>>()?;
+                Ok(Self::Reply {
+                    id: field_u64(doc, "id")?,
+                    class: field_u64(doc, "class")? as usize,
+                    logits,
+                })
+            }
+            "error" => {
+                let tag = field_str(doc, "kind")?;
+                let kind = WireErrorKind::from_tag(tag)
+                    .ok_or_else(|| anyhow::anyhow!("unknown error kind {tag:?}"))?;
+                let id = match doc.get("id") {
+                    Some(_) => Some(field_u64(doc, "id")?),
+                    None => None,
+                };
+                Ok(Self::Error {
+                    id,
+                    kind,
+                    message: field_str(doc, "message")?.to_string(),
+                })
+            }
+            other => anyhow::bail!("unknown response type {other:?}"),
+        }
+    }
+}
+
+fn field_str<'a>(doc: &'a Json, key: &str) -> crate::Result<&'a str> {
+    doc.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("missing string field {key:?}"))
+}
+
+fn field_u64(doc: &Json, key: &str) -> crate::Result<u64> {
+    let x = doc
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("missing numeric field {key:?}"))?;
+    anyhow::ensure!(
+        x >= 0.0 && x.fract() == 0.0 && x <= u64::MAX as f64,
+        "field {key:?} is not an unsigned integer: {x}"
+    );
+    Ok(x as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip_request(req: Request) {
+        let doc = req.to_json();
+        let parsed = Request::from_json(&Json::parse(&doc.to_string()).unwrap()).unwrap();
+        assert_eq!(parsed, req);
+    }
+
+    fn round_trip_response(resp: Response) {
+        let doc = resp.to_json();
+        let parsed = Response::from_json(&Json::parse(&doc.to_string()).unwrap()).unwrap();
+        assert_eq!(parsed, resp);
+    }
+
+    #[test]
+    fn requests_round_trip() {
+        round_trip_request(Request::Hello);
+        round_trip_request(Request::Ping);
+        round_trip_request(Request::Stats);
+        round_trip_request(Request::Shutdown);
+        round_trip_request(Request::Submit {
+            id: 7,
+            spec: DesignSpec::ScaleTrim { h: 3, m: 4 },
+            pixels: vec![0, 1, 128, 255],
+        });
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        round_trip_response(Response::Hello {
+            shards: 4,
+            img: 4,
+            configs: vec!["Exact8".into(), "scaleTRIM(3,4)".into()],
+        });
+        round_trip_response(Response::Pong);
+        round_trip_response(Response::ShutdownAck);
+        round_trip_response(Response::Reply {
+            id: 7,
+            class: 2,
+            logits: vec![-3, 0, 9],
+        });
+        round_trip_response(Response::Error {
+            id: Some(9),
+            kind: WireErrorKind::Overloaded,
+            message: "shard queue full".into(),
+        });
+        round_trip_response(Response::Error {
+            id: None,
+            kind: WireErrorKind::Proto,
+            message: "bad frame".into(),
+        });
+    }
+
+    #[test]
+    fn error_kinds_round_trip_tags() {
+        for k in [
+            WireErrorKind::Overloaded,
+            WireErrorKind::RateLimited,
+            WireErrorKind::LaneFailed,
+            WireErrorKind::Backend,
+            WireErrorKind::BadRequest,
+            WireErrorKind::Proto,
+        ] {
+            assert_eq!(WireErrorKind::from_tag(k.as_str()), Some(k));
+        }
+        assert_eq!(WireErrorKind::from_tag("nope"), None);
+    }
+
+    /// A reader that yields one byte at a time, interleaving WouldBlock
+    /// timeouts — the worst legal fragmentation.
+    struct Trickle {
+        data: Vec<u8>,
+        pos: usize,
+        tick: usize,
+    }
+
+    impl std::io::Read for Trickle {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            self.tick += 1;
+            if self.tick % 2 == 0 {
+                return Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "tick"));
+            }
+            if self.pos >= self.data.len() {
+                return Ok(0);
+            }
+            buf[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn frame_reader_survives_byte_at_a_time_reads() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Request::Ping.to_json()).unwrap();
+        write_frame(
+            &mut wire,
+            &Request::Submit {
+                id: 1,
+                spec: DesignSpec::Exact { bits: 8 },
+                pixels: vec![9, 8, 7, 6],
+            }
+            .to_json(),
+        )
+        .unwrap();
+        let mut reader = FrameReader::new(Trickle { data: wire, pos: 0, tick: 0 });
+        let mut docs = Vec::new();
+        loop {
+            match reader.read_frame().unwrap() {
+                Frame::Doc(d) => docs.push(d),
+                Frame::Idle => continue,
+                Frame::Eof => break,
+                Frame::HttpGet => panic!("not http"),
+            }
+        }
+        assert_eq!(docs.len(), 2);
+        assert!(matches!(Request::from_json(&docs[0]).unwrap(), Request::Ping));
+        assert!(matches!(
+            Request::from_json(&docs[1]).unwrap(),
+            Request::Submit { id: 1, .. }
+        ));
+    }
+
+    #[test]
+    fn frame_reader_rejects_garbage_and_oversize() {
+        let mut r = FrameReader::new(std::io::Cursor::new(b"lots\n{}\n".to_vec()));
+        assert!(r.read_frame().is_err(), "non-numeric length prefix");
+        let huge = format!("{}\n", MAX_FRAME_BYTES + 1);
+        let mut r = FrameReader::new(std::io::Cursor::new(huge.into_bytes()));
+        assert!(r.read_frame().is_err(), "oversize length prefix");
+        let mut r = FrameReader::new(std::io::Cursor::new(b"2\n{}X".to_vec()));
+        assert!(r.read_frame().is_err(), "missing frame terminator");
+        let mut r = FrameReader::new(std::io::Cursor::new(b"10\n{}\n".to_vec()));
+        assert!(r.read_frame().is_err(), "truncated payload at eof");
+    }
+
+    #[test]
+    fn frame_reader_detects_http_get() {
+        let mut r =
+            FrameReader::new(std::io::Cursor::new(b"GET /healthz HTTP/1.0\r\n\r\n".to_vec()));
+        assert!(matches!(r.read_frame().unwrap(), Frame::HttpGet));
+    }
+
+    #[test]
+    fn submit_rejects_out_of_range_pixels() {
+        let doc = Json::obj()
+            .set("type", "submit")
+            .set("id", 1u64)
+            .set("spec", DesignSpec::Exact { bits: 8 }.to_json())
+            .set("pixels", Json::Arr(vec![Json::Num(256.0)]));
+        assert!(Request::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn hello_schema_mismatch_is_rejected() {
+        let doc = Json::obj().set("type", "hello").set("v", "scaletrim-wire/v0");
+        assert!(Request::from_json(&doc).is_err());
+        let doc = Json::obj()
+            .set("type", "hello")
+            .set("v", "scaletrim-wire/v0")
+            .set("shards", 1u64)
+            .set("img", 4u64)
+            .set("configs", Json::Arr(vec![]));
+        assert!(Response::from_json(&doc).is_err());
+    }
+}

@@ -1,0 +1,745 @@
+//! The threaded network front-end: acceptor + fixed worker pool over
+//! sharded in-process [`Coordinator`]s.
+//!
+//! ## Shape
+//!
+//! - One **acceptor** thread owns the (non-blocking) listener and pushes
+//!   accepted connections into a bounded [`ConnQueue`]; when the queue is
+//!   full or the server is draining, the connection is answered with one
+//!   `Overloaded` error frame and closed — the front door never buffers
+//!   without bound.
+//! - A fixed pool of **workers** pops connections and serves each to
+//!   completion: a reader loop on the borrowed stream (`&TcpStream` is
+//!   `Read`) and a writer thread on a clone, joined by an mpsc channel
+//!   that preserves per-connection FIFO reply order (immediate error
+//!   frames and pending coordinator replies stay in request order).
+//! - **Sharding**: config lanes are partitioned across N in-process
+//!   shards by FNV-1a of the config label ([`shard_of`]) — stable across
+//!   processes, so a future multi-node deployment routes identically.
+//!   Each shard owns its own backend and [`Coordinator`], which is what
+//!   makes shard count a genuine throughput axis (the PJRT backend is an
+//!   actor that executes one batch at a time).
+//! - **SLOs**: per-shard `net_request_latency_seconds{shard=i}` sketches
+//!   merge bit-for-bit into the service-level p50/p99/p999 ([`slo_line`]),
+//!   served with the full Prometheus exposition on `GET /healthz`.
+//!
+//! Conservation contract: `net_requests_total` counts submits that were
+//! *admitted* (entered a coordinator queue); every admitted submit is
+//! answered exactly once — ok, typed error, or reply-timeout error — even
+//! if the client socket dies first. Shed submits (overload, rate limit)
+//! and malformed frames are answered too but counted in their own
+//! counters, so `obs::check_invariants` balances exactly after drain.
+
+use super::admission::{AdmissionPolicy, ShardGate, TokenBucket};
+use super::proto::{self, Frame, FrameReader, Request, Response, WireErrorKind};
+use crate::coordinator::{Backend, BatchPolicy, Coordinator, Prediction, PredictionError};
+use crate::multipliers::ApproxMultiplier;
+use crate::obs::{self, names, Counter, Gauge, Histogram, Registry, Snapshot};
+use crate::util::json::Json;
+use crate::util::sync::{lock_unpoisoned, wait_unpoisoned};
+use anyhow::Context;
+use std::collections::VecDeque;
+use std::io::{self, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Stable shard routing: FNV-1a of the config label, mod the shard
+/// count. Process-independent by construction.
+pub fn shard_of(label: &str, shards: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in label.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    (h % shards.max(1) as u64) as usize
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address (`127.0.0.1:0` picks an ephemeral port).
+    pub addr: String,
+    /// In-process shard count (each shard: one backend + coordinator).
+    pub shards: usize,
+    /// Connection worker pool size.
+    pub workers: usize,
+    /// Admission control knobs.
+    pub admission: AdmissionPolicy,
+    /// Batching policy handed to each shard's coordinator.
+    pub policy: BatchPolicy,
+    /// Socket read timeout — the poll quantum at which idle readers
+    /// notice a drain.
+    pub read_timeout: Duration,
+    /// Deadline for a coordinator reply before the writer answers
+    /// `lane_failed` on its behalf.
+    pub reply_timeout: Duration,
+    /// Whether a wire `shutdown` frame may begin the drain.
+    pub allow_remote_shutdown: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            shards: 2,
+            workers: 8,
+            admission: AdmissionPolicy::default(),
+            policy: BatchPolicy::default(),
+            read_timeout: Duration::from_millis(100),
+            reply_timeout: Duration::from_secs(30),
+            allow_remote_shutdown: true,
+        }
+    }
+}
+
+/// Bounded handoff of accepted connections to the worker pool — the
+/// lock + condvar idiom of the coordinator's `BatchQueue`.
+struct ConnQueue {
+    state: Mutex<ConnState>,
+    cv: Condvar,
+    cap: usize,
+}
+
+struct ConnState {
+    queue: VecDeque<TcpStream>,
+    closed: bool,
+}
+
+impl ConnQueue {
+    fn new(cap: usize) -> Self {
+        Self {
+            state: Mutex::new(ConnState {
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Hand a connection to the pool; gives the stream back when the
+    /// queue is full or closed (the caller sheds it).
+    fn push(&self, s: TcpStream) -> Result<(), TcpStream> {
+        let mut g = lock_unpoisoned(&self.state);
+        if g.closed || g.queue.len() >= self.cap {
+            return Err(s);
+        }
+        g.queue.push_back(s);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once closed and drained.
+    fn pop(&self) -> Option<TcpStream> {
+        let mut g = lock_unpoisoned(&self.state);
+        loop {
+            if let Some(s) = g.queue.pop_front() {
+                return Some(s);
+            }
+            if g.closed {
+                return None;
+            }
+            g = wait_unpoisoned(&self.cv, g);
+        }
+    }
+
+    fn close(&self) {
+        let mut g = lock_unpoisoned(&self.state);
+        g.closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Wire-level counters on the server's obs registry shard.
+struct NetMetrics {
+    requests: Arc<Counter>,
+    responses_ok: Arc<Counter>,
+    responses_error: Arc<Counter>,
+    overloaded: Arc<Counter>,
+    rate_limited: Arc<Counter>,
+    proto_errors: Arc<Counter>,
+    connections: Arc<Counter>,
+    active: Arc<Gauge>,
+}
+
+impl NetMetrics {
+    fn new(reg: &Registry) -> Self {
+        Self {
+            requests: reg.counter(names::metric::NET_REQUESTS_TOTAL, &[]),
+            responses_ok: reg.counter(names::metric::NET_RESPONSES_OK_TOTAL, &[]),
+            responses_error: reg.counter(names::metric::NET_RESPONSES_ERROR_TOTAL, &[]),
+            overloaded: reg.counter(names::metric::NET_OVERLOADED_TOTAL, &[]),
+            rate_limited: reg.counter(names::metric::NET_RATE_LIMITED_TOTAL, &[]),
+            proto_errors: reg.counter(names::metric::NET_PROTO_ERRORS_TOTAL, &[]),
+            connections: reg.counter(names::metric::NET_CONNECTIONS_TOTAL, &[]),
+            active: reg.gauge(names::metric::NET_ACTIVE_CONNECTIONS, &[]),
+        }
+    }
+}
+
+/// One shard: its coordinator, admission gate and SLO instruments.
+struct NetShard {
+    coord: Coordinator,
+    gate: ShardGate,
+    inflight: Arc<Gauge>,
+    latency: Arc<Histogram>,
+}
+
+struct ServerState {
+    cfg: ServeConfig,
+    shards: Vec<NetShard>,
+    conns: ConnQueue,
+    metrics: NetMetrics,
+    registry: Arc<Registry>,
+    draining: AtomicBool,
+    accepting_done: AtomicBool,
+    img_size: usize,
+    config_labels: Vec<String>,
+}
+
+/// A running serving instance. Threads run until [`Server::shutdown`];
+/// dropping without shutdown leaks the acceptor, so callers (CLI, tests,
+/// benches) always shut down explicitly.
+pub struct Server {
+    state: Arc<ServerState>,
+    local: SocketAddr,
+    acceptor: std::thread::JoinHandle<()>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, build one backend + coordinator per shard (configs
+    /// partitioned by [`shard_of`]), and start the acceptor + worker
+    /// pool. `backend_for(shard)` builds each shard's backend.
+    pub fn start<F>(
+        cfg: ServeConfig,
+        configs: &[&dyn ApproxMultiplier],
+        mut backend_for: F,
+    ) -> crate::Result<Server>
+    where
+        F: FnMut(usize) -> crate::Result<Arc<dyn Backend>>,
+    {
+        anyhow::ensure!(!configs.is_empty(), "serving needs at least one config");
+        let listener =
+            TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+        let local = listener.local_addr().context("reading bound address")?;
+        listener
+            .set_nonblocking(true)
+            .context("making the listener non-blocking")?;
+        let nshards = cfg.shards.max(1);
+        let nworkers = cfg.workers.max(1);
+
+        let mut per_shard: Vec<Vec<&dyn ApproxMultiplier>> = vec![Vec::new(); nshards];
+        let mut config_labels: Vec<String> = Vec::with_capacity(configs.len());
+        for m in configs {
+            per_shard[shard_of(&m.name(), nshards)].push(*m);
+            config_labels.push(m.name());
+        }
+        config_labels.sort();
+
+        let registry = obs::new_shard();
+        let metrics = NetMetrics::new(&registry);
+        let mut shards = Vec::with_capacity(nshards);
+        let mut img_size = 0usize;
+        for (i, lanes) in per_shard.iter().enumerate() {
+            let backend = backend_for(i)?;
+            let (c, h, w) = backend.input_shape();
+            img_size = c * h * w;
+            let coord = Coordinator::new(backend, lanes, cfg.policy);
+            let label = i.to_string();
+            shards.push(NetShard {
+                coord,
+                gate: ShardGate::new(cfg.admission.queue_depth),
+                inflight: registry.gauge(names::metric::NET_SHARD_INFLIGHT, &[("shard", &label)]),
+                latency: registry
+                    .histogram(names::metric::NET_REQUEST_LATENCY_SECONDS, &[("shard", &label)]),
+            });
+        }
+
+        let state = Arc::new(ServerState {
+            conns: ConnQueue::new(nworkers * 4),
+            cfg,
+            shards,
+            metrics,
+            registry,
+            draining: AtomicBool::new(false),
+            accepting_done: AtomicBool::new(false),
+            img_size,
+            config_labels,
+        });
+
+        let mut workers = Vec::with_capacity(nworkers);
+        for w in 0..nworkers {
+            let st = state.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("net-worker-{w}"))
+                    .spawn(move || worker_loop(&st))
+                    .context("spawning a net worker")?,
+            );
+        }
+        let st = state.clone();
+        let acceptor = std::thread::Builder::new()
+            .name("net-acceptor".to_string())
+            .spawn(move || accept_loop(&listener, &st))
+            .context("spawning the net acceptor")?;
+
+        Ok(Server {
+            state,
+            local,
+            acceptor,
+            workers,
+        })
+    }
+
+    /// The bound address (resolves `:0` binds for tests and benches).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Begin graceful drain: new connections and new submits are answered
+    /// `Overloaded`; admitted requests keep completing.
+    pub fn begin_drain(&self) {
+        self.state.draining.store(true, Ordering::Release);
+    }
+
+    /// Whether drain has begun (locally or via a wire `shutdown` frame).
+    pub fn is_draining(&self) -> bool {
+        self.state.draining.load(Ordering::Acquire)
+    }
+
+    /// Merged snapshot of this server alone: its wire counters plus every
+    /// shard coordinator — independent of unrelated coordinators living
+    /// in the same process (parallel tests).
+    pub fn snapshot(&self) -> Snapshot {
+        local_snapshot(&self.state)
+    }
+
+    /// Drain and stop: reject new work, serve queued connections to
+    /// completion, join every thread, quiesce the shard coordinators,
+    /// and return the final (conservation-balanced) snapshot.
+    pub fn shutdown(self) -> Snapshot {
+        self.begin_drain();
+        self.state.conns.close();
+        for w in self.workers {
+            let _ = w.join();
+        }
+        self.state.accepting_done.store(true, Ordering::Release);
+        let _ = self.acceptor.join();
+        for sh in &self.state.shards {
+            sh.coord.shutdown();
+        }
+        local_snapshot(&self.state)
+    }
+}
+
+/// This server's own snapshot: wire registry + every shard coordinator.
+fn local_snapshot(st: &ServerState) -> Snapshot {
+    let mut snap = st.registry.snapshot();
+    for sh in &st.shards {
+        snap.merge(&sh.coord.metrics().registry().snapshot());
+    }
+    snap
+}
+
+/// Service-level SLO line from the merged per-shard latency sketches
+/// (bit-for-bit equal to a single-sketch service, by the merge property).
+pub fn slo_line(snap: &Snapshot) -> String {
+    match snap.hist_merged(names::metric::NET_REQUEST_LATENCY_SECONDS) {
+        Some(h) => format!(
+            "service latency: n={} p50={:.3}ms p99={:.3}ms p999={:.3}ms max={:.3}ms",
+            h.count(),
+            h.quantile(50.0) * 1e3,
+            h.quantile(99.0) * 1e3,
+            h.quantile(99.9) * 1e3,
+            h.max() * 1e3,
+        ),
+        None => "service latency: no samples".to_string(),
+    }
+}
+
+fn accept_loop(listener: &TcpListener, st: &ServerState) {
+    while !st.accepting_done.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                st.metrics.connections.inc();
+                if st.draining.load(Ordering::Acquire) {
+                    shed_connection(stream, st, "server draining");
+                    continue;
+                }
+                if let Err(stream) = st.conns.push(stream) {
+                    shed_connection(stream, st, "connection queue full");
+                }
+            }
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Overload at the front door: answer one `Overloaded` frame, close.
+/// (Connection-level shed — no request was admitted, so the conservation
+/// counters are untouched; the shed has its own counter.)
+fn shed_connection(mut stream: TcpStream, st: &ServerState, why: &str) {
+    st.metrics.overloaded.inc();
+    let resp = Response::Error {
+        id: None,
+        kind: WireErrorKind::Overloaded,
+        message: why.to_string(),
+    };
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let _ = proto::write_frame(&mut stream, &resp.to_json());
+}
+
+fn worker_loop(st: &ServerState) {
+    let conn_span = obs::span(names::span::NET_CONN);
+    while let Some(stream) = st.conns.pop() {
+        let _g = conn_span.start();
+        st.metrics.active.add(1);
+        serve_conn(st, stream);
+        st.metrics.active.sub(1);
+    }
+}
+
+/// Reply-channel items, in request order (FIFO per connection).
+enum Outgoing {
+    /// An already-rendered frame (handshakes, immediate errors).
+    Doc(Json),
+    /// Raw HTTP bytes (the `/healthz` answer) — connection closes after.
+    Http(String),
+    /// An admitted submit whose coordinator reply is pending.
+    Pending {
+        wire_id: u64,
+        shard: usize,
+        rx: mpsc::Receiver<Prediction>,
+        t0: Instant,
+    },
+}
+
+fn serve_conn(st: &ServerState, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(st.cfg.read_timeout));
+    let Ok(write_half) = stream.try_clone() else {
+        return;
+    };
+    let _ = write_half.set_write_timeout(Some(Duration::from_secs(5)));
+    let (tx_out, rx_out) = mpsc::channel::<Outgoing>();
+    std::thread::scope(|scope| {
+        scope.spawn(move || writer_loop(st, write_half, rx_out));
+        reader_loop(st, &stream, &tx_out);
+        drop(tx_out);
+    });
+}
+
+fn reader_loop(st: &ServerState, stream: &TcpStream, out: &mpsc::Sender<Outgoing>) {
+    let mut reader = FrameReader::new(stream);
+    let mut bucket = TokenBucket::new(st.cfg.admission.rate_per_s, st.cfg.admission.burst);
+    let mut last_refill = Instant::now();
+    loop {
+        let frame = match reader.read_frame() {
+            Ok(f) => f,
+            Err(e) => {
+                st.metrics.proto_errors.inc();
+                obs::record_error(names::error_source::NET_PROTO);
+                let _ = out.send(Outgoing::Doc(error_doc(
+                    None,
+                    WireErrorKind::Proto,
+                    &format!("{e:#}"),
+                )));
+                return;
+            }
+        };
+        let doc = match frame {
+            Frame::Idle => {
+                if st.draining.load(Ordering::Acquire) {
+                    return;
+                }
+                continue;
+            }
+            Frame::Eof => return,
+            Frame::HttpGet => {
+                let _ = out.send(Outgoing::Http(healthz_body(st)));
+                return;
+            }
+            Frame::Doc(doc) => doc,
+        };
+        let req = match Request::from_json(&doc) {
+            Ok(r) => r,
+            Err(e) => {
+                st.metrics.proto_errors.inc();
+                obs::record_error(names::error_source::NET_PROTO);
+                let _ = out.send(Outgoing::Doc(error_doc(
+                    None,
+                    WireErrorKind::Proto,
+                    &format!("{e:#}"),
+                )));
+                continue;
+            }
+        };
+        match req {
+            Request::Hello => {
+                let resp = Response::Hello {
+                    shards: st.shards.len(),
+                    img: st.img_size,
+                    configs: st.config_labels.clone(),
+                };
+                let _ = out.send(Outgoing::Doc(resp.to_json()));
+            }
+            Request::Ping => {
+                let _ = out.send(Outgoing::Doc(Response::Pong.to_json()));
+            }
+            Request::Stats => {
+                let _ = out.send(Outgoing::Doc(Response::Stats(stats_doc(st)).to_json()));
+            }
+            Request::Shutdown => {
+                if st.cfg.allow_remote_shutdown {
+                    st.draining.store(true, Ordering::Release);
+                    let _ = out.send(Outgoing::Doc(Response::ShutdownAck.to_json()));
+                } else {
+                    let _ = out.send(Outgoing::Doc(error_doc(
+                        None,
+                        WireErrorKind::BadRequest,
+                        "remote shutdown disabled",
+                    )));
+                }
+            }
+            Request::Submit { id, spec, pixels } => {
+                let now = Instant::now();
+                bucket.refill(now.duration_since(last_refill).as_secs_f64());
+                last_refill = now;
+                if st.draining.load(Ordering::Acquire) {
+                    st.metrics.overloaded.inc();
+                    let _ = out.send(Outgoing::Doc(error_doc(
+                        Some(id),
+                        WireErrorKind::Overloaded,
+                        "server draining",
+                    )));
+                    continue;
+                }
+                if !bucket.try_take() {
+                    st.metrics.rate_limited.inc();
+                    let _ = out.send(Outgoing::Doc(error_doc(
+                        Some(id),
+                        WireErrorKind::RateLimited,
+                        "connection rate limit exceeded",
+                    )));
+                    continue;
+                }
+                let shard_ix = shard_of(&spec.to_string(), st.shards.len());
+                let shard = &st.shards[shard_ix];
+                if !shard.gate.try_acquire() {
+                    st.metrics.overloaded.inc();
+                    let _ = out.send(Outgoing::Doc(error_doc(
+                        Some(id),
+                        WireErrorKind::Overloaded,
+                        "shard in-flight window full",
+                    )));
+                    continue;
+                }
+                match shard.coord.submit_spec(spec, pixels) {
+                    Ok((_cid, rx)) => {
+                        st.metrics.requests.inc();
+                        shard.inflight.add(1);
+                        let _ = out.send(Outgoing::Pending {
+                            wire_id: id,
+                            shard: shard_ix,
+                            rx,
+                            t0: now,
+                        });
+                    }
+                    Err(e) => {
+                        shard.gate.release();
+                        let _ = out.send(Outgoing::Doc(error_doc(
+                            Some(id),
+                            WireErrorKind::BadRequest,
+                            &format!("{e:#}"),
+                        )));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Drains the reply channel to completion even when the socket dies:
+/// every admitted request must be accounted (counters, latency sketch,
+/// gate release) for conservation to balance.
+fn writer_loop(st: &ServerState, mut stream: TcpStream, rx: mpsc::Receiver<Outgoing>) {
+    let mut dead = false;
+    for item in rx {
+        match item {
+            Outgoing::Doc(doc) => {
+                if !dead && proto::write_frame(&mut stream, &doc).is_err() {
+                    dead = true;
+                }
+            }
+            Outgoing::Http(body) => {
+                if !dead {
+                    let _ = stream.write_all(body.as_bytes());
+                    let _ = stream.flush();
+                    dead = true; // healthz is one-shot
+                }
+            }
+            Outgoing::Pending {
+                wire_id,
+                shard,
+                rx: reply,
+                t0,
+            } => {
+                let sh = &st.shards[shard];
+                let resp = match reply.recv_timeout(st.cfg.reply_timeout) {
+                    Ok(p) => match p.error {
+                        None => {
+                            st.metrics.responses_ok.inc();
+                            Response::Reply {
+                                id: wire_id,
+                                class: p.class,
+                                logits: p.logits,
+                            }
+                        }
+                        Some(PredictionError::Backend(m)) => {
+                            st.metrics.responses_error.inc();
+                            Response::Error {
+                                id: Some(wire_id),
+                                kind: WireErrorKind::Backend,
+                                message: m,
+                            }
+                        }
+                        Some(PredictionError::LaneFailed(m)) => {
+                            st.metrics.responses_error.inc();
+                            Response::Error {
+                                id: Some(wire_id),
+                                kind: WireErrorKind::LaneFailed,
+                                message: m,
+                            }
+                        }
+                    },
+                    Err(_) => {
+                        st.metrics.responses_error.inc();
+                        obs::record_error(names::error_source::NET_REPLY_TIMEOUT);
+                        Response::Error {
+                            id: Some(wire_id),
+                            kind: WireErrorKind::LaneFailed,
+                            message: "reply timeout".to_string(),
+                        }
+                    }
+                };
+                sh.latency.record_duration(t0.elapsed());
+                sh.gate.release();
+                sh.inflight.sub(1);
+                if !dead && proto::write_frame(&mut stream, &resp.to_json()).is_err() {
+                    dead = true;
+                }
+            }
+        }
+    }
+}
+
+fn error_doc(id: Option<u64>, kind: WireErrorKind, message: &str) -> Json {
+    Response::Error {
+        id,
+        kind,
+        message: message.to_string(),
+    }
+    .to_json()
+}
+
+fn stats_doc(st: &ServerState) -> Json {
+    let snap = local_snapshot(st);
+    let mut shards = Vec::with_capacity(st.shards.len());
+    for (i, sh) in st.shards.iter().enumerate() {
+        shards.push(
+            Json::obj()
+                .set("shard", i)
+                .set("inflight", sh.gate.inflight())
+                .set(
+                    "lanes",
+                    Json::Arr(sh.coord.lane_labels().into_iter().map(Json::Str).collect()),
+                ),
+        );
+    }
+    Json::obj()
+        .set("schema", proto::WIRE_SCHEMA)
+        .set("requests", snap.counter_sum(names::metric::NET_REQUESTS_TOTAL))
+        .set("responses_ok", snap.counter_sum(names::metric::NET_RESPONSES_OK_TOTAL))
+        .set(
+            "responses_error",
+            snap.counter_sum(names::metric::NET_RESPONSES_ERROR_TOTAL),
+        )
+        .set("overloaded", snap.counter_sum(names::metric::NET_OVERLOADED_TOTAL))
+        .set("rate_limited", snap.counter_sum(names::metric::NET_RATE_LIMITED_TOTAL))
+        .set("slo", slo_line(&snap))
+        .set("shards", Json::Arr(shards))
+}
+
+/// The `GET /healthz` answer: status line, the merged-SLO comment, and
+/// the full Prometheus exposition of this server's snapshot.
+fn healthz_body(st: &ServerState) -> String {
+    let snap = local_snapshot(st);
+    format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nConnection: close\r\n\r\n# {}\n{}",
+        slo_line(&snap),
+        obs::to_text(&snap)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_routing_is_stable_and_in_range() {
+        for n in 1..=8usize {
+            for label in ["Exact8", "scaleTRIM(3,4)", "scaleTRIM(8,8)", "TOSAM(1,5)"] {
+                let s = shard_of(label, n);
+                assert!(s < n);
+                assert_eq!(s, shard_of(label, n), "stable");
+            }
+        }
+        // The default 4-shard layout actually spreads the standard zoo.
+        let spread: std::collections::BTreeSet<usize> = [
+            "Exact8",
+            "scaleTRIM(3,4)",
+            "scaleTRIM(4,8)",
+            "scaleTRIM(5,8)",
+            "scaleTRIM(6,4)",
+            "scaleTRIM(7,8)",
+            "scaleTRIM(8,8)",
+            "TOSAM(1,5)",
+        ]
+        .iter()
+        .map(|l| shard_of(l, 4))
+        .collect();
+        assert!(spread.len() >= 2, "fnv1a layout degenerate: {spread:?}");
+    }
+
+    #[test]
+    fn conn_queue_bounds_and_closes() {
+        let q = ConnQueue::new(1);
+        // No real sockets needed for close semantics.
+        q.close();
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn slo_line_reports_merged_percentiles() {
+        let reg = Registry::new();
+        let h0 = reg.histogram(names::metric::NET_REQUEST_LATENCY_SECONDS, &[("shard", "0")]);
+        let h1 = reg.histogram(names::metric::NET_REQUEST_LATENCY_SECONDS, &[("shard", "1")]);
+        for i in 0..500 {
+            h0.record(0.001 + (i % 7) as f64 * 1e-4);
+            h1.record(0.002 + (i % 5) as f64 * 1e-4);
+        }
+        let line = slo_line(&reg.snapshot());
+        assert!(line.contains("p50="), "{line}");
+        assert!(line.contains("p99="), "{line}");
+        assert!(line.contains("p999="), "{line}");
+        assert!(line.contains("n=1000"), "{line}");
+        assert_eq!(slo_line(&Registry::new().snapshot()), "service latency: no samples");
+    }
+}

@@ -144,6 +144,10 @@ pub fn install_panic_hook() {
 /// - submitted requests balance answered responses
 ///   (`coordinator_requests_total == coordinator_responses_ok_total +
 ///   coordinator_responses_error_total`, summed over lanes and shards);
+/// - admitted wire requests balance wire responses
+///   (`net_requests_total == net_responses_ok_total +
+///   net_responses_error_total` — no request is silently lost between
+///   admission and the reply writer, even under overload or drain);
 /// - every declared lane (a `coordinator_queue_depth{lane=...}` gauge)
 ///   has a latency sketch (`coordinator_latency_seconds{lane=...}`).
 ///
@@ -157,6 +161,14 @@ pub fn check_invariants(s: &Snapshot) -> Result<(), String> {
     if req != ok + err {
         return Err(format!(
             "request conservation broken: {req} submitted != {ok} ok + {err} errored"
+        ));
+    }
+    let nreq = s.counter_sum(names::metric::NET_REQUESTS_TOTAL);
+    let nok = s.counter_sum(names::metric::NET_RESPONSES_OK_TOTAL);
+    let nerr = s.counter_sum(names::metric::NET_RESPONSES_ERROR_TOTAL);
+    if nreq != nok + nerr {
+        return Err(format!(
+            "wire conservation broken: {nreq} admitted != {nok} ok + {nerr} errored"
         ));
     }
     for id in s.gauges.keys() {
@@ -223,6 +235,12 @@ mod tests {
         assert!(check_invariants(&r.snapshot()).is_err());
         // ...until the sketch exists.
         let _ = r.histogram("coordinator_latency_seconds", &[("lane", "X")]);
+        assert!(check_invariants(&r.snapshot()).is_ok());
+        // Wire conservation is checked with the same shape.
+        r.counter("net_requests_total", &[]).add(2);
+        assert!(check_invariants(&r.snapshot()).is_err(), "wire 2 != 0 must fail");
+        r.counter("net_responses_ok_total", &[]).inc();
+        r.counter("net_responses_error_total", &[]).inc();
         assert!(check_invariants(&r.snapshot()).is_ok());
     }
 

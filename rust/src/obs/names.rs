@@ -37,6 +37,29 @@ pub mod metric {
     pub const COORD_LATENCY_SECONDS: &str = "coordinator_latency_seconds";
     /// Instantaneous queue depth per lane.
     pub const COORD_QUEUE_DEPTH: &str = "coordinator_queue_depth";
+    /// Lane-worker panics survived (requests answered `LaneFailed`).
+    pub const COORD_LANE_FAILURES_TOTAL: &str = "coordinator_lane_failures_total";
+
+    /// Wire requests admitted to a shard queue.
+    pub const NET_REQUESTS_TOTAL: &str = "net_requests_total";
+    /// Wire requests answered with a `reply` frame.
+    pub const NET_RESPONSES_OK_TOTAL: &str = "net_responses_ok_total";
+    /// Wire requests answered with an `error` frame.
+    pub const NET_RESPONSES_ERROR_TOTAL: &str = "net_responses_error_total";
+    /// Submits shed with an `overloaded` wire error (shard gate full or draining).
+    pub const NET_OVERLOADED_TOTAL: &str = "net_overloaded_total";
+    /// Submits shed by the per-connection token bucket.
+    pub const NET_RATE_LIMITED_TOTAL: &str = "net_rate_limited_total";
+    /// Frames rejected as malformed before admission.
+    pub const NET_PROTO_ERRORS_TOTAL: &str = "net_proto_errors_total";
+    /// Connections accepted over the server's lifetime.
+    pub const NET_CONNECTIONS_TOTAL: &str = "net_connections_total";
+    /// Connections currently being served.
+    pub const NET_ACTIVE_CONNECTIONS: &str = "net_active_connections";
+    /// Wire request latency sketch, per shard with `shard=<n>`.
+    pub const NET_REQUEST_LATENCY_SECONDS: &str = "net_request_latency_seconds";
+    /// Requests in flight per shard, with `shard=<n>`.
+    pub const NET_SHARD_INFLIGHT: &str = "net_shard_inflight";
 
     /// Images pushed through NN evaluation.
     pub const NN_IMAGES_TOTAL: &str = "nn_images_total";
@@ -88,6 +111,10 @@ pub mod span {
     pub const SWEEP_EXHAUSTIVE: &str = "sweep.exhaustive";
     /// One sampled operand-space sweep, labelled `family=<name>`.
     pub const SWEEP_SAMPLED: &str = "sweep.sampled";
+    /// One served network connection (accept → close).
+    pub const NET_CONN: &str = "net.conn";
+    /// One load-generator run against a serving endpoint.
+    pub const NET_LOADGEN: &str = "net.loadgen";
 }
 
 /// Error-source names (the `source=` label vocabulary of
@@ -97,6 +124,12 @@ pub mod error_source {
     pub const COORD_BACKEND: &str = "coordinator.backend";
     /// Calibration artifact failed load-time verification.
     pub const CALIB_STORE_VERIFY: &str = "calib.store.verify";
+    /// Malformed wire frame (framing, schema, or JSON shape).
+    pub const NET_PROTO: &str = "net.proto";
+    /// A shard failed to deliver a reply before the server's deadline.
+    pub const NET_REPLY_TIMEOUT: &str = "net.reply_timeout";
+    /// A coordinator lane worker panicked mid-batch.
+    pub const COORD_LANE_PANIC: &str = "coordinator.lane.panic";
 }
 
 #[cfg(test)]
@@ -132,6 +165,17 @@ mod tests {
             super::metric::CALIB_STORE_EXPORTS_TOTAL,
             super::metric::CALIB_STORE_LOADS_TOTAL,
             super::metric::CALIB_STORE_VERIFY_FAILURES_TOTAL,
+            super::metric::COORD_LANE_FAILURES_TOTAL,
+            super::metric::NET_REQUESTS_TOTAL,
+            super::metric::NET_RESPONSES_OK_TOTAL,
+            super::metric::NET_RESPONSES_ERROR_TOTAL,
+            super::metric::NET_OVERLOADED_TOTAL,
+            super::metric::NET_RATE_LIMITED_TOTAL,
+            super::metric::NET_PROTO_ERRORS_TOTAL,
+            super::metric::NET_CONNECTIONS_TOTAL,
+            super::metric::NET_ACTIVE_CONNECTIONS,
+            super::metric::NET_REQUEST_LATENCY_SECONDS,
+            super::metric::NET_SHARD_INFLIGHT,
         ];
         let spans = [
             super::span::COORD_LANE_BATCH,
@@ -142,10 +186,15 @@ mod tests {
             super::span::WORKLOAD_RUN,
             super::span::SWEEP_EXHAUSTIVE,
             super::span::SWEEP_SAMPLED,
+            super::span::NET_CONN,
+            super::span::NET_LOADGEN,
         ];
         let sources = [
             super::error_source::COORD_BACKEND,
             super::error_source::CALIB_STORE_VERIFY,
+            super::error_source::NET_PROTO,
+            super::error_source::NET_REPLY_TIMEOUT,
+            super::error_source::COORD_LANE_PANIC,
         ];
         let mut all: Vec<&str> = metrics.iter().chain(&spans).chain(&sources).copied().collect();
         let before = all.len();

@@ -428,6 +428,24 @@ impl Snapshot {
             .map(|(_, v)| v)
             .sum()
     }
+
+    /// Merge one histogram over every label set — the service-level view
+    /// of a per-shard series (integer bins, so merged quantiles equal the
+    /// single-sketch quantiles bit-for-bit). `None` when no label set of
+    /// `name` exists.
+    pub fn hist_merged(&self, name: &str) -> Option<HistSnapshot> {
+        let mut acc: Option<HistSnapshot> = None;
+        for (k, v) in &self.hists {
+            if k.name != name {
+                continue;
+            }
+            match &mut acc {
+                Some(m) => m.merge(v),
+                None => acc = Some(v.clone()),
+            }
+        }
+        acc
+    }
 }
 
 #[cfg(test)]
@@ -494,6 +512,34 @@ mod tests {
         for q in [50.0, 99.0, 99.9] {
             assert_eq!(m.quantile(q).to_bits(), r.quantile(q).to_bits(), "q={q}");
         }
+    }
+
+    #[test]
+    fn hist_merged_reproduces_single_sketch_quantiles() {
+        let whole = Registry::new();
+        let sharded = Registry::new();
+        let hw = whole.histogram("lat", &[]);
+        let shards = [
+            sharded.histogram("lat", &[("shard", "0")]),
+            sharded.histogram("lat", &[("shard", "1")]),
+            sharded.histogram("lat", &[("shard", "2")]),
+        ];
+        for i in 0..3000u64 {
+            let v = ((i as f64).cos().abs() + 0.02) / 7.0;
+            hw.record(v);
+            shards[(i % 3) as usize].record(v);
+        }
+        let merged = sharded.snapshot().hist_merged("lat").unwrap();
+        let reference = whole.snapshot().hist_merged("lat").unwrap();
+        assert_eq!(merged.count(), reference.count());
+        for q in [50.0, 99.0, 99.9] {
+            assert_eq!(
+                merged.quantile(q).to_bits(),
+                reference.quantile(q).to_bits(),
+                "q={q}"
+            );
+        }
+        assert!(sharded.snapshot().hist_merged("absent").is_none());
     }
 
     #[test]

@@ -28,6 +28,17 @@
 //! one pinned runner class and records `host.simd_backend` so numbers are
 //! only ever compared within one ISA class; see EXPERIMENTS.md §Perf
 //! trajectory.
+//!
+//! ## Serving rows
+//!
+//! [`serving_rows`] measures the network serving plane end to end over
+//! loopback: a sharded [`crate::net::Server`] on an ephemeral port, a
+//! serialized compute-burning mock backend per shard (the PJRT actor
+//! model, where shard count is the only throughput axis), and closed-loop
+//! windowed clients. One row per shard count (1/2/4) carrying `req_per_s`
+//! and client-observed `p99_ms`; `req_per_s` sits under the same
+//! [`compare`] gate as the kernel cells (`p99_ms` is informational — a
+//! latency sketch on a shared CI runner is too noisy to gate on).
 
 use crate::calib::CalibStrategy;
 use crate::multipliers::{ApproxMultiplier, CompiledMul, Exact, ScaleTrim, Tosam};
@@ -332,6 +343,149 @@ pub fn run_bench(fast: bool) -> Json {
                 .set("config", st.name().as_str())
                 .set("m_macs_per_s", round1(gemm_rate))]),
         )
+        .set(
+            "serving",
+            match serving_rows(fast) {
+                Ok(srows) => Json::Arr(srows),
+                Err(e) => {
+                    eprintln!("bench serving: SKIPPED: {e:#}");
+                    Json::Arr(Vec::new())
+                }
+            },
+        )
+}
+
+/// End-to-end serving throughput over loopback, one row per shard count.
+/// Each shard owns a serialized mock backend burning 50k synthetic MACs
+/// per image (the PJRT actor model: one batch executes at a time, so only
+/// more shards buy more throughput). Closed-loop clients keep a fixed
+/// window of submits in flight per connection — the measured number is
+/// sustained completion rate, not an open-loop target.
+pub fn serving_rows(fast: bool) -> crate::Result<Vec<Json>> {
+    use crate::coordinator::{Backend, BatchPolicy, MockBackend};
+    use crate::net::{AdmissionPolicy, ServeConfig, Server};
+    use crate::util::stats::LogQuantileSketch;
+    use std::sync::Arc;
+
+    let conns: usize = if fast { 4 } else { 8 };
+    let per_conn: usize = if fast { 200 } else { 2000 };
+    let window: usize = 16;
+    let mut rows = Vec::new();
+    for &shards in &[1usize, 2, 4] {
+        // 12 scaleTRIM configs (h ∈ 2..=7 × M ∈ {4, 8}) spread across the
+        // shards by label hash — same calibration cache, so construction
+        // is cheap after the first round.
+        let mults: Vec<ScaleTrim> = (2..=7)
+            .flat_map(|h| [4u32, 8].into_iter().map(move |m| ScaleTrim::new(8, h, m)))
+            .collect();
+        let refs: Vec<&dyn ApproxMultiplier> =
+            mults.iter().map(|m| m as &dyn ApproxMultiplier).collect();
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            shards,
+            workers: conns + 2,
+            admission: AdmissionPolicy {
+                queue_depth: 4096,
+                ..AdmissionPolicy::default()
+            },
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            ..ServeConfig::default()
+        };
+        let server = Server::start(cfg, &refs, |_shard| {
+            Ok(Arc::new(MockBackend::new(8, 10).with_work(50_000).serialized()) as Arc<dyn Backend>)
+        })?;
+        let addr = server.local_addr().to_string();
+        let t0 = Instant::now();
+        let mut results: Vec<crate::Result<(u64, LogQuantileSketch)>> = Vec::with_capacity(conns);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(conns);
+            for c in 0..conns {
+                let addr = addr.clone();
+                handles.push(scope.spawn(move || {
+                    closed_loop_conn(&addr, per_conn, window, 0xBE6C ^ c as u64)
+                }));
+            }
+            for h in handles {
+                results.push(
+                    h.join()
+                        .unwrap_or_else(|_| Err(anyhow::anyhow!("serving bench conn panicked"))),
+                );
+            }
+        });
+        let elapsed = t0.elapsed().as_secs_f64();
+        let mut done_total = 0u64;
+        let mut sketch = LogQuantileSketch::new();
+        for r in results {
+            let (done, s) = r?;
+            done_total += done;
+            sketch.merge(&s);
+        }
+        let _final_snapshot = server.shutdown();
+        let req_per_s = done_total as f64 / elapsed.max(1e-9);
+        let p99_ms = sketch.quantile(99.0) * 1e3;
+        eprintln!(
+            "bench serving shards={shards} conns={conns} {req_per_s:>8.0} req/s  p99 {p99_ms:>7.2} ms"
+        );
+        rows.push(
+            Json::obj()
+                .set("shards", shards)
+                .set("conns", conns)
+                .set("requests", done_total)
+                .set("req_per_s", round1(req_per_s))
+                .set("p99_ms", round1(p99_ms))
+                .set("backend", "mock-serialized-50k"),
+        );
+    }
+    Ok(rows)
+}
+
+/// One closed-loop bench connection: keep `window` submits in flight,
+/// complete `per_conn` requests, return the count and latency sketch.
+/// Any shed or error response fails the bench — admission is sized so a
+/// correct run never sheds, and a silent error would corrupt the number.
+fn closed_loop_conn(
+    addr: &str,
+    per_conn: usize,
+    window: usize,
+    seed: u64,
+) -> crate::Result<(u64, crate::util::stats::LogQuantileSketch)> {
+    use crate::net::{Client, ClientConfig, Response};
+
+    let mut client = Client::connect(addr, &ClientConfig::default())?;
+    let (_shards, img, labels) = client.hello()?;
+    let specs: Vec<crate::multipliers::DesignSpec> =
+        labels.iter().filter_map(|l| l.parse().ok()).collect();
+    anyhow::ensure!(!specs.is_empty(), "no parseable configs: {labels:?}");
+    let (mut tx, mut rx) = client.into_split()?;
+    let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(seed);
+    let pixels: Vec<u8> = (0..img).map(|_| (rng.gen_range(255) + 1) as u8).collect();
+    let mut sketch = crate::util::stats::LogQuantileSketch::new();
+    let mut inflight: std::collections::VecDeque<Instant> = std::collections::VecDeque::new();
+    let mut sent = 0usize;
+    let mut done = 0u64;
+    while done < per_conn as u64 {
+        while sent < per_conn && inflight.len() < window {
+            let spec = specs[rng.gen_range(specs.len() as u64) as usize];
+            tx.send_submit(&spec, &pixels)?;
+            inflight.push_back(Instant::now());
+            sent += 1;
+        }
+        let t0 = inflight
+            .pop_front()
+            .ok_or_else(|| anyhow::anyhow!("reply with no in-flight request"))?;
+        match rx.recv_response()? {
+            Response::Reply { .. } => sketch.push(t0.elapsed().as_secs_f64()),
+            Response::Error { kind, message, .. } => {
+                anyhow::bail!("serving bench got {} answer: {message}", kind.as_str())
+            }
+            other => anyhow::bail!("unexpected response in bench: {other:?}"),
+        }
+        done += 1;
+    }
+    Ok((done, sketch))
 }
 
 fn round1(x: f64) -> f64 {
@@ -347,13 +501,19 @@ fn row_key(row: &Json) -> Option<String> {
     ))
 }
 
+fn serving_key(row: &Json) -> Option<String> {
+    Some(format!("serving/shards={}", row.get("shards")?.as_f64()? as u64))
+}
+
 /// Diff a fresh bench document against a committed baseline: every
 /// `(config, bits, operands, kernel)` cell present in both must not have
-/// lost more than `tolerance` of its throughput. Returns the human-readable
-/// comparison lines; errors list every regressed cell (the CI gate prints
-/// and exits non-zero). Cells present in only one document are reported,
-/// not failed — the trajectory is allowed to grow. Schema mismatch is an
-/// error: cross-schema numbers are not comparable.
+/// lost more than `tolerance` of its throughput, and every serving row
+/// (`serving/shards=N`) must not have lost more than `tolerance` of its
+/// `req_per_s`. Returns the human-readable comparison lines; errors list
+/// every regressed cell (the CI gate prints and exits non-zero). Cells
+/// present in only one document are reported, not failed — the trajectory
+/// is allowed to grow. Schema mismatch is an error: cross-schema numbers
+/// are not comparable.
 pub fn compare(new: &Json, baseline: &Json, tolerance: f64) -> crate::Result<Vec<String>> {
     let (ns, bs) = (
         new.get("schema").and_then(Json::as_str),
@@ -396,6 +556,47 @@ pub fn compare(new: &Json, baseline: &Json, tolerance: f64) -> crate::Result<Vec
     for brow in base_rows {
         if let Some(key) = row_key(brow) {
             if !new_rows.iter().any(|r| row_key(r).as_deref() == Some(&key)) {
+                lines.push(format!("{key}: baseline row missing from new run"));
+            }
+        }
+    }
+    // Serving rows: gate on req_per_s under the same tolerance; p99_ms is
+    // reported but informational (latency on a shared runner is too noisy
+    // to fail on). New and missing rows are reported, not failed.
+    let new_srv = new.get("serving").and_then(Json::as_arr).unwrap_or(&empty);
+    let base_srv = baseline.get("serving").and_then(Json::as_arr).unwrap_or(&empty);
+    for nrow in new_srv {
+        let Some(key) = serving_key(nrow) else { continue };
+        let Some(brow) = base_srv.iter().find(|r| serving_key(r).as_deref() == Some(&key)) else {
+            lines.push(format!("{key}: new row (no baseline)"));
+            continue;
+        };
+        let nv = nrow.get("req_per_s").and_then(Json::as_f64);
+        let bv = brow.get("req_per_s").and_then(Json::as_f64);
+        match (nv, bv) {
+            (Some(nv), Some(bv)) if bv > 0.0 => {
+                let ratio = nv / bv;
+                let line = format!(
+                    "{key}/req_per_s: {bv:.0} -> {nv:.0} req/s ({:+.1}%)",
+                    (ratio - 1.0) * 100.0
+                );
+                if ratio < 1.0 - tolerance {
+                    regressions.push(line.clone());
+                }
+                lines.push(line);
+            }
+            _ => lines.push(format!("{key}/req_per_s: not comparable")),
+        }
+        if let (Some(np), Some(bp)) = (
+            nrow.get("p99_ms").and_then(Json::as_f64),
+            brow.get("p99_ms").and_then(Json::as_f64),
+        ) {
+            lines.push(format!("{key}/p99_ms: {bp:.1} -> {np:.1} ms (informational)"));
+        }
+    }
+    for brow in base_srv {
+        if let Some(key) = serving_key(brow) {
+            if !new_srv.iter().any(|r| serving_key(r).as_deref() == Some(&key)) {
                 lines.push(format!("{key}: baseline row missing from new run"));
             }
         }
@@ -453,6 +654,47 @@ mod tests {
         assert!(lines.iter().any(|l| l.contains("missing")));
     }
 
+    fn srow(shards: u64, rps: f64, p99: f64) -> Json {
+        Json::obj()
+            .set("shards", shards)
+            .set("conns", 8u32)
+            .set("req_per_s", rps)
+            .set("p99_ms", p99)
+    }
+
+    #[test]
+    fn compare_gates_serving_throughput() {
+        let base = doc(vec![]).set("serving", Json::Arr(vec![srow(4, 5000.0, 10.0)]));
+        let fresh = doc(vec![]).set("serving", Json::Arr(vec![srow(4, 3000.0, 10.0)]));
+        let err = compare(&fresh, &base, DEFAULT_TOLERANCE).unwrap_err();
+        assert!(err.to_string().contains("serving/shards=4"), "{err}");
+    }
+
+    #[test]
+    fn compare_serving_p99_is_informational_only() {
+        // Throughput holds, p99 explodes tenfold: reported, never failed.
+        let base = doc(vec![]).set("serving", Json::Arr(vec![srow(2, 4000.0, 10.0)]));
+        let fresh = doc(vec![]).set("serving", Json::Arr(vec![srow(2, 4100.0, 100.0)]));
+        let lines = compare(&fresh, &base, DEFAULT_TOLERANCE).unwrap();
+        assert!(
+            lines.iter().any(|l| l.contains("p99_ms") && l.contains("informational")),
+            "{lines:?}"
+        );
+    }
+
+    #[test]
+    fn compare_tolerates_serving_row_growth() {
+        let base = doc(vec![]);
+        let fresh = doc(vec![]).set("serving", Json::Arr(vec![srow(1, 2000.0, 20.0)]));
+        let lines = compare(&fresh, &base, DEFAULT_TOLERANCE).unwrap();
+        assert!(
+            lines
+                .iter()
+                .any(|l| l.contains("serving/shards=1") && l.contains("new row")),
+            "{lines:?}"
+        );
+    }
+
     #[test]
     fn compare_rejects_schema_mismatch() {
         let base = Json::obj().set("schema", "other/v9");
@@ -495,6 +737,12 @@ mod tests {
             if r.get("bits").and_then(Json::as_f64) == Some(16.0) {
                 assert_eq!(r.get("compiled"), Some(&Json::Null));
             }
+        }
+        // Serving rows: one per shard count, each with a gated req_per_s.
+        let serving = parsed.get("serving").and_then(Json::as_arr).unwrap();
+        assert_eq!(serving.len(), 3, "expected shard counts 1/2/4");
+        for s in serving {
+            assert!(s.get("req_per_s").and_then(Json::as_f64).unwrap() > 0.0);
         }
         assert!(compare(&parsed, &parsed, DEFAULT_TOLERANCE).is_ok());
     }

@@ -32,7 +32,7 @@ pub fn obs_demo_traffic(fast: bool) -> Result<Coordinator> {
     let backend = Arc::new(MockBackend::new(4, 4));
     let exact = Exact::new(8);
     let configs: Vec<&dyn ApproxMultiplier> = vec![&exact, &st];
-    let mut coord = Coordinator::new(
+    let coord = Coordinator::new(
         backend,
         &configs,
         BatchPolicy {

@@ -1,9 +1,14 @@
 //! PJRT runtime: loads AOT-compiled HLO-text artifacts (produced once by
 //! `python/compile/aot.py`) and executes them on the CPU client. This is
 //! the only place the `xla` crate is touched; Python is never on this path.
+//!
+//! The old `runtime/client.rs` network-client stub (no timeouts, no
+//! retries) is gone: remote access goes through [`crate::net::client`].
+//! `Engine`/`LoadedModel` keep their paths here as the compatibility
+//! re-export.
 
 mod artifacts;
-mod client;
+mod pjrt;
 
 pub use artifacts::{find_artifacts_dir, ArtifactSet};
-pub use client::{Engine, LoadedModel};
+pub use pjrt::{Engine, LoadedModel};

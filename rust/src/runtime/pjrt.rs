@@ -1,4 +1,10 @@
 //! PJRT CPU client wrapper (pattern from /opt/xla-example/load_hlo).
+//!
+//! Historically this file was `runtime/client.rs` and also sketched a
+//! "remote client" stub with no timeout or retry semantics. The real
+//! network client lives in [`crate::net::client`] now (connect timeouts,
+//! retry with backoff, blocking I/O deadlines); what remains here is
+//! purely the local PJRT execution engine.
 
 use crate::Result;
 use anyhow::{bail, Context};
@@ -14,13 +20,6 @@ impl Engine {
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Self { client })
-    }
-
-    /// Platform name (diagnostics).
-    // analyze:allow(dead-pub): diagnostics surface for real PJRT builds;
-    // the in-repo xla stub cannot construct an `Engine` under test.
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
     }
 
     /// Load an HLO-text artifact and compile it for this client.

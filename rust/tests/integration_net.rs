@@ -1,0 +1,287 @@
+//! End-to-end tests of the network serving plane over loopback: wire
+//! round trips, explicit overload, per-connection rate limiting, lane
+//! panic containment across the wire, graceful drain, and the
+//! wire-conservation invariant on the final snapshot (no request is ever
+//! silently dropped).
+
+use scaletrim::coordinator::{Backend, MockBackend};
+use scaletrim::multipliers::{ApproxMultiplier, Exact, ScaleTrim};
+use scaletrim::net::{
+    healthz, AdmissionPolicy, Client, ClientConfig, Response, ServeConfig, Server, WireErrorKind,
+};
+use scaletrim::obs::{self, names};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn test_client_cfg() -> ClientConfig {
+    ClientConfig {
+        connect_timeout: Duration::from_secs(1),
+        io_timeout: Duration::from_secs(10),
+        retries: 5,
+        backoff: Duration::from_millis(50),
+    }
+}
+
+#[test]
+fn wire_round_trip_hello_ping_submit_stats_healthz() {
+    let exact = Exact::new(8);
+    let st = ScaleTrim::new(8, 3, 4);
+    let configs: Vec<&dyn ApproxMultiplier> = vec![&exact, &st];
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: 2,
+        ..ServeConfig::default()
+    };
+    let server = Server::start(cfg, &configs, |_s| {
+        Ok(Arc::new(MockBackend::new(4, 4)) as Arc<dyn Backend>)
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut c = Client::connect(&addr, &test_client_cfg()).unwrap();
+    let (shards, img, labels) = c.hello().unwrap();
+    assert_eq!(shards, 2);
+    assert_eq!(img, 4, "mock shape is 1x2x2");
+    assert_eq!(labels, vec!["Exact8".to_string(), "scaleTRIM(3,4)".to_string()]);
+    c.ping().unwrap();
+
+    // Routing semantics survive the wire: logit[k] is hot iff
+    // k == pixels[0] % classes.
+    for label in &labels {
+        let spec = label.parse().unwrap();
+        match c.submit(&spec, &[7, 1, 2, 3]).unwrap() {
+            Response::Reply { class, logits, .. } => {
+                assert_eq!(class, 7 % 4, "lane {label}");
+                assert_eq!(logits.len(), 4);
+            }
+            other => panic!("expected a reply on lane {label}, got {other:?}"),
+        }
+    }
+
+    let stats = c.stats().unwrap();
+    assert_eq!(
+        stats.get("schema").and_then(scaletrim::util::json::Json::as_str),
+        Some("scaletrim-wire/v1")
+    );
+    assert_eq!(
+        stats.get("requests").and_then(scaletrim::util::json::Json::as_f64),
+        Some(2.0)
+    );
+
+    // The healthz endpoint serves the merged SLO line plus the full
+    // Prometheus exposition on the same port.
+    let body = healthz(&addr, &test_client_cfg()).unwrap();
+    assert!(body.starts_with("HTTP/1.0 200 OK"), "{body}");
+    assert!(body.contains("service latency:"), "{body}");
+    assert!(body.contains("net_request_latency_seconds"), "{body}");
+
+    let snap = server.shutdown();
+    obs::check_invariants(&snap).unwrap();
+    assert_eq!(snap.counter_sum(names::metric::NET_REQUESTS_TOTAL), 2);
+    assert_eq!(snap.counter_sum(names::metric::NET_RESPONSES_OK_TOTAL), 2);
+}
+
+#[test]
+fn overload_answers_explicit_wire_error_and_conserves() {
+    // One admission slot, a slow serialized backend: a pipelined burst
+    // must shed most submits with an explicit `overloaded` answer — and
+    // every single one of the 50 must still be answered.
+    let exact = Exact::new(8);
+    let configs: Vec<&dyn ApproxMultiplier> = vec![&exact];
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: 1,
+        admission: AdmissionPolicy {
+            queue_depth: 1,
+            ..AdmissionPolicy::default()
+        },
+        ..ServeConfig::default()
+    };
+    let server = Server::start(cfg, &configs, |_s| {
+        Ok(Arc::new(MockBackend::new(1, 2).with_work(2_000_000).serialized()) as Arc<dyn Backend>)
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let client = Client::connect(&addr, &test_client_cfg()).unwrap();
+    let (mut tx, mut rx) = client.into_split().unwrap();
+    let spec = exact.spec();
+    const N: usize = 50;
+    for _ in 0..N {
+        tx.send_submit(&spec, &[9, 9, 9, 9]).unwrap();
+    }
+    let (mut ok, mut overloaded) = (0u64, 0u64);
+    for _ in 0..N {
+        match rx.recv_response().unwrap() {
+            Response::Reply { .. } => ok += 1,
+            Response::Error {
+                kind: WireErrorKind::Overloaded,
+                ..
+            } => overloaded += 1,
+            other => panic!("unexpected answer under overload: {other:?}"),
+        }
+    }
+    assert!(ok >= 1, "at least the first submit must be admitted");
+    assert!(overloaded >= 1, "a 50-deep burst into 1 slot must shed");
+    assert_eq!(ok + overloaded, N as u64, "all 50 answered — no silent drop");
+
+    let snap = server.shutdown();
+    obs::check_invariants(&snap).unwrap();
+    assert_eq!(snap.counter_sum(names::metric::NET_REQUESTS_TOTAL), ok);
+    assert_eq!(snap.counter_sum(names::metric::NET_RESPONSES_OK_TOTAL), ok);
+    assert_eq!(snap.counter_sum(names::metric::NET_OVERLOADED_TOTAL), overloaded);
+}
+
+#[test]
+fn rate_limit_sheds_past_burst() {
+    let exact = Exact::new(8);
+    let configs: Vec<&dyn ApproxMultiplier> = vec![&exact];
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: 1,
+        admission: AdmissionPolicy {
+            queue_depth: 64,
+            rate_per_s: 1.0,
+            burst: 1.0,
+        },
+        ..ServeConfig::default()
+    };
+    let server = Server::start(cfg, &configs, |_s| {
+        Ok(Arc::new(MockBackend::new(1, 2)) as Arc<dyn Backend>)
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut c = Client::connect(&addr, &test_client_cfg()).unwrap();
+    let spec = exact.spec();
+    let (mut ok, mut limited) = (0u64, 0u64);
+    for _ in 0..5 {
+        match c.submit(&spec, &[1, 1, 1, 1]).unwrap() {
+            Response::Reply { .. } => ok += 1,
+            Response::Error {
+                kind: WireErrorKind::RateLimited,
+                ..
+            } => limited += 1,
+            other => panic!("unexpected answer: {other:?}"),
+        }
+    }
+    assert_eq!(ok, 1, "burst of 1 admits exactly the first submit");
+    assert_eq!(limited, 4, "the rest shed with an explicit rate_limited");
+
+    let snap = server.shutdown();
+    obs::check_invariants(&snap).unwrap();
+    assert_eq!(snap.counter_sum(names::metric::NET_RATE_LIMITED_TOTAL), 4);
+}
+
+#[test]
+fn lane_panic_becomes_typed_lane_failed_over_the_wire() {
+    let exact = Exact::new(8);
+    let configs: Vec<&dyn ApproxMultiplier> = vec![&exact];
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: 1,
+        ..ServeConfig::default()
+    };
+    let server = Server::start(cfg, &configs, |_s| {
+        // Every second infer call panics; the lane must answer the batch
+        // with `lane_failed` and keep serving.
+        Ok(Arc::new(MockBackend::new(1, 2).with_panics(2)) as Arc<dyn Backend>)
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut c = Client::connect(&addr, &test_client_cfg()).unwrap();
+    let spec = exact.spec();
+    let (mut ok, mut failed) = (0u64, 0u64);
+    for _ in 0..4 {
+        match c.submit(&spec, &[3, 0, 0, 0]).unwrap() {
+            Response::Reply { .. } => ok += 1,
+            Response::Error {
+                kind: WireErrorKind::LaneFailed,
+                message,
+                ..
+            } => {
+                assert!(message.contains("injected lane panic"), "{message}");
+                failed += 1;
+            }
+            other => panic!("unexpected answer: {other:?}"),
+        }
+    }
+    assert_eq!(ok, 2, "odd calls succeed");
+    assert_eq!(failed, 2, "even calls fail typed, lane survives");
+
+    let snap = server.shutdown();
+    obs::check_invariants(&snap).unwrap();
+    assert_eq!(snap.counter_sum(names::metric::NET_RESPONSES_ERROR_TOTAL), 2);
+    assert!(snap.counter_sum(names::metric::COORD_LANE_FAILURES_TOTAL) >= 2);
+}
+
+#[test]
+fn graceful_drain_completes_inflight_and_sheds_new_connections() {
+    let exact = Exact::new(8);
+    let configs: Vec<&dyn ApproxMultiplier> = vec![&exact];
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: 1,
+        ..ServeConfig::default()
+    };
+    let server = Server::start(cfg, &configs, |_s| {
+        Ok(Arc::new(MockBackend::new(1, 2).with_work(500_000).serialized()) as Arc<dyn Backend>)
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    // Admit one slow request, then begin the drain while it is in flight.
+    let client = Client::connect(&addr, &test_client_cfg()).unwrap();
+    let (mut tx, mut rx) = client.into_split().unwrap();
+    tx.send_submit(&exact.spec(), &[5, 5, 5, 5]).unwrap();
+    std::thread::sleep(Duration::from_millis(200)); // let the admit land
+    server.begin_drain();
+
+    // New connections are shed at the front door with one explicit
+    // Overloaded frame — read it without sending anything.
+    let mut late = Client::connect(&addr, &test_client_cfg()).unwrap();
+    match late.recv_response().unwrap() {
+        Response::Error {
+            kind: WireErrorKind::Overloaded,
+            message,
+            ..
+        } => assert!(message.contains("draining"), "{message}"),
+        other => panic!("draining server must shed new connections, got {other:?}"),
+    }
+
+    // The in-flight request still completes — drain is graceful.
+    match rx.recv_response().unwrap() {
+        Response::Reply { class, .. } => assert_eq!(class, 5 % 2),
+        other => panic!("in-flight request must complete, got {other:?}"),
+    }
+
+    let snap = server.shutdown();
+    obs::check_invariants(&snap).unwrap();
+    assert_eq!(snap.counter_sum(names::metric::NET_REQUESTS_TOTAL), 1);
+    assert_eq!(snap.counter_sum(names::metric::NET_RESPONSES_OK_TOTAL), 1);
+    assert!(snap.counter_sum(names::metric::NET_OVERLOADED_TOTAL) >= 1);
+}
+
+#[test]
+fn remote_shutdown_frame_begins_the_drain() {
+    let exact = Exact::new(8);
+    let configs: Vec<&dyn ApproxMultiplier> = vec![&exact];
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: 1,
+        ..ServeConfig::default()
+    };
+    let server = Server::start(cfg, &configs, |_s| {
+        Ok(Arc::new(MockBackend::new(1, 2)) as Arc<dyn Backend>)
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut c = Client::connect(&addr, &test_client_cfg()).unwrap();
+    assert!(!server.is_draining());
+    c.shutdown_server().unwrap();
+    assert!(server.is_draining(), "a wire shutdown frame must begin drain");
+    let snap = server.shutdown();
+    obs::check_invariants(&snap).unwrap();
+}

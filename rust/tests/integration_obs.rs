@@ -19,7 +19,7 @@ fn demo_coordinator(n: usize) -> Coordinator {
     let exact = Exact::new(8);
     let st = ScaleTrim::new(8, 3, 4);
     let configs: Vec<&dyn ApproxMultiplier> = vec![&exact, &st];
-    let mut coord = Coordinator::new(
+    let coord = Coordinator::new(
         backend,
         &configs,
         BatchPolicy {
